@@ -1,0 +1,9 @@
+//! Design-space exploration for GPT3 1T training on 1024 accelerators
+//! (Figs 10/11): 4 chips × 5 topologies × 4 memory/interconnect combos.
+//!
+//!     cargo run --release --example dse_llm
+
+fn main() {
+    println!("{}", dfmodel::figures::dse_figs::dse_figure(dfmodel::dse::Workload::Llm));
+    println!("CSV written to results/fig10.csv");
+}

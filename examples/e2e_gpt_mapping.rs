@@ -1,0 +1,128 @@
+//! End-to-end driver: the full three-layer stack on a real workload.
+//!
+//! 1. DFModel (L3) optimizes the intra-chip mapping of a small GPT layer
+//!    and *predicts* the ranking of four mapping variants (non-dataflow
+//!    kernel-by-kernel, vendor 4-partition, DFModel-optimized, fused).
+//! 2. The same four mappings are then *executed for real*: the AOT
+//!    artifacts (L2 JAX model + L1 Pallas kernels, lowered to HLO text by
+//!    `make artifacts`) run on the PJRT CPU client.
+//! 3. Numerics are verified against the Python oracle and the measured
+//!    intermediate-traffic ordering is compared with the model's
+//!    prediction — proving all layers compose.
+//!
+//!     make artifacts && cargo run --release --example e2e_gpt_mapping
+
+use dfmodel::graph::gpt::{gpt_layer_graph, GptConfig};
+use dfmodel::intrachip::{self, IntraChipOptions};
+use dfmodel::runtime::Runtime;
+use dfmodel::system::{chip, memory};
+use dfmodel::util::table::Table;
+use std::path::Path;
+
+fn main() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let rt = Runtime::load(dir, &[]).expect("load artifacts");
+    println!("PJRT platform: {}\n", rt.platform());
+    let m = &rt.manifest;
+
+    // ---- model the same tiny layer the artifacts implement ----
+    let cfg = GptConfig {
+        layers: 1,
+        d_model: m.d_model as f64,
+        n_heads: m.n_heads as f64,
+        seq: m.seq as f64,
+        d_ff: m.d_ff as f64,
+        vocab: 1.0,
+        dtype_bytes: 4.0, // artifacts are f32
+    };
+    let graph = gpt_layer_graph(&cfg, 1.0);
+    // a small dataflow chip so the tiny layer still has interesting
+    // SRAM pressure; DDR-class memory
+    let mut small_chip = chip::sn10();
+    small_chip.sram_bytes = 2e6;
+    let mem = memory::ddr4();
+
+    // model each variant with the SAME partitioning the artifacts execute
+    let model = |force_kbk: bool, part_of: Option<fn(&str) -> usize>| {
+        let mut opts = IntraChipOptions { force_kernel_by_kernel: force_kbk, ..Default::default() };
+        if let Some(f) = part_of {
+            opts.force_assignment =
+                Some(graph.kernels.iter().map(|k| f(&k.name)).collect());
+        }
+        intrachip::optimize_intra(&graph, &small_chip, &mem, &opts).expect("feasible")
+    };
+    let kbk_model = model(true, None);
+    let vendor_model = model(false, Some(dfmodel::figures::casestudy::vendor_partition_of));
+    let dfm_model = model(false, Some(dfmodel::figures::casestudy::dfmodel_partition_of));
+
+    // ---- execute the real pipelines ----
+    let x = rt.reference_input().expect("input");
+    let mut t = Table::new(
+        "modeled (analytical) vs executed (PJRT) — tiny GPT layer",
+        &[
+            "mapping",
+            "modeled partitions",
+            "modeled DRAM bytes",
+            "executed steps",
+            "measured intermediates",
+            "max |err| vs oracle",
+            "wall",
+        ],
+    );
+    let mut measured = Vec::new();
+    for (name, modeled) in [
+        ("kernel_by_kernel", Some(&kbk_model)),
+        ("vendor", Some(&vendor_model)),
+        ("dfmodel", Some(&dfm_model)),
+        ("fused", None),
+    ] {
+        let (_, stats) = rt.run_pipeline(name, &x).expect(name);
+        let err = rt.verify_pipeline(name).expect(name);
+        measured.push((name, stats.intermediate_bytes));
+        t.row(&[
+            name.to_string(),
+            modeled.map_or("-".into(), |mm| format!("{}", mm.assignment.n_used())),
+            modeled.map_or("-".into(), |mm| format!("{:.0}", mm.total_dram_traffic())),
+            format!("{}", stats.steps),
+            format!("{:.0}", stats.intermediate_bytes),
+            format!("{err:.2e}"),
+            format!("{:?}", stats.wall),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // ---- the headline check: model predicts the measured traffic order ----
+    let modeled_order = [
+        ("kernel_by_kernel", kbk_model.total_dram_traffic()),
+        ("vendor", vendor_model.total_dram_traffic()),
+        ("dfmodel", dfm_model.total_dram_traffic()),
+    ];
+    println!("modeled DRAM-traffic ranking (worst to best):");
+    let mut mo = modeled_order.to_vec();
+    mo.sort_by(|a, b| b.1.total_cmp(&a.1));
+    for (n, v) in &mo {
+        println!("  {n:<18} {v:.0} B");
+    }
+    println!("measured intermediate-traffic ranking (worst to best):");
+    let mut me: Vec<_> =
+        measured.iter().filter(|(n, _)| *n != "fused").cloned().collect();
+    me.sort_by(|a, b| b.1.total_cmp(&a.1));
+    for (n, v) in &me {
+        println!("  {n:<18} {v:.0} B");
+    }
+    let agree = mo.iter().map(|(n, _)| *n).eq(me.iter().map(|(n, _)| *n));
+    println!(
+        "\nmodel/measurement ranking agreement: {}",
+        if agree { "YES — all layers compose" } else { "NO (see table)" }
+    );
+    let fused = measured.iter().find(|(n, _)| *n == "fused").unwrap().1;
+    let kbk = measured.iter().find(|(n, _)| *n == "kernel_by_kernel").unwrap().1;
+    println!("fused vs kernel-by-kernel measured traffic: {:.1}x less", kbk / fused);
+    if !agree {
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,9 @@
+//! 3-D memory case study (§VIII-C, Fig. 22): training a projected 100T GPT
+//! on 1024 SN40L-class chips whose die area is split between compute tiles
+//! and SRAM, under 2-D DDR / 2.5-D HBM / 3-D-stacked memory.
+//!
+//!     cargo run --release --example memory_3d
+
+fn main() {
+    println!("{}", dfmodel::figures::serving_figs::fig22());
+}

@@ -1,0 +1,61 @@
+//! Quickstart: build a workload dataflow graph, describe a system, run both
+//! DFModel optimization passes, and print the resulting mapping.
+//!
+//!     cargo run --release --example quickstart
+
+use dfmodel::graph::gpt::{gpt3_175b, gpt_layer_graph};
+use dfmodel::interchip::{self, InterChipOptions};
+use dfmodel::intrachip::{self, IntraChipOptions};
+use dfmodel::system::{chip, interconnect, memory, topology, SystemSpec};
+use dfmodel::util::units::fmt_time;
+
+fn main() {
+    // 1. the workload: one GPT3-175B transformer layer (Fig. 2A, 14 kernels)
+    let cfg = gpt3_175b();
+    let graph = gpt_layer_graph(&cfg, 1.0);
+    println!("workload: {}", graph.summary());
+
+    // 2. the system: 8 SambaNova SN10 RDUs on a PCIe ring (§VII)
+    let link = interconnect::pcie4();
+    let sys = SystemSpec::new(
+        chip::sn10(),
+        memory::ddr4(),
+        link.clone(),
+        topology::ring(8, &link),
+    );
+    println!("system:   {}", sys.describe());
+
+    // 3. inter-chip pass (§IV): TP/PP/DP + sharding + stages
+    let inter = interchip::optimize(&graph, &sys, &InterChipOptions::default())
+        .expect("feasible inter-chip mapping");
+    println!(
+        "\ninter-chip: {} | critical time {} | explored O(10^{:.0}) mappings",
+        inter.plan.describe(),
+        fmt_time(inter.t_cri),
+        inter.space_log10
+    );
+
+    // 4. intra-chip pass (§V): fuse kernels into on-chip partitions
+    let (sharded, net_time) =
+        interchip::shard_graph(&graph, &sys, &inter.plan, &inter.scheme_idx);
+    let intra = intrachip::optimize_intra(
+        &sharded,
+        &sys.chip,
+        &sys.memory,
+        &IntraChipOptions { net_time, ..Default::default() },
+    )
+    .expect("feasible intra-chip mapping");
+
+    println!("intra-chip: {} fused partitions, per-input time {}", intra.assignment.n_used(),
+        fmt_time(intra.total_time));
+    for (i, names) in intra.partition_names(&sharded).iter().enumerate() {
+        println!("  partition {i}: {}", names.join(", "));
+    }
+    let (c, m, n) = intra.breakdown();
+    println!(
+        "breakdown: compute {} | memory {} | network {}",
+        fmt_time(c),
+        fmt_time(m),
+        fmt_time(n)
+    );
+}

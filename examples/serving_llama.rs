@@ -1,0 +1,9 @@
+//! LLM serving case study (§VIII-A, Fig. 20): Llama3 8B on 16 SN40L RDUs —
+//! TTFT / TPOT / throughput across TP×PP splits, validated against the
+//! measured 1100 tok/s decode at TP=16.
+//!
+//!     cargo run --release --example serving_llama
+
+fn main() {
+    println!("{}", dfmodel::figures::serving_figs::fig20());
+}

@@ -1,0 +1,9 @@
+//! Speculative-decoding case study (§VIII-B, Fig. 21): sequence- and
+//! tree-based schemes, drafts {68M, 8B, 70B} → target Llama3 405B on
+//! 16 SN40L, sweeping window size and acceptance rate.
+//!
+//!     cargo run --release --example spec_decode
+
+fn main() {
+    println!("{}", dfmodel::figures::serving_figs::fig21());
+}

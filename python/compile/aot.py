@@ -1,0 +1,209 @@
+"""AOT bridge: lower every GPT-layer mapping variant to HLO *text* and emit a
+manifest the Rust runtime uses to load, wire, and execute the artifacts.
+
+HLO text (not `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids that xla_extension 0.5.1 rejects;
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Run as `python -m compile.aot --outdir ../artifacts` (via `make artifacts`).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile.kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange).
+
+    print_large_constants=True is essential: the default HLO printer elides
+    big literals as `constant({...})`, silently dropping the baked model
+    weights when the text is re-parsed by the Rust loader.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _spec(shape, dtype="f32"):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def _shape_struct(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+class ArtifactWriter:
+    def __init__(self, outdir: str):
+        self.outdir = outdir
+        self.artifacts = []
+
+    def add(self, name: str, fn, in_shapes, out_shapes):
+        """Lower `fn` at the given input shapes and record the artifact."""
+        args = [_shape_struct(s) for s in in_shapes]
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.outdir, fname), "w") as f:
+            f.write(text)
+        self.artifacts.append({
+            "name": name,
+            "file": fname,
+            "inputs": [_spec(s) for s in in_shapes],
+            "outputs": [_spec(s) for s in out_shapes],
+        })
+        return name
+
+
+def build_manifest(cfg: M.GptConfig, outdir: str) -> dict:
+    params = M.init_params(cfg)
+    d, s, f = cfg.d_model, cfg.seq, cfg.d_ff
+    h, hd = cfg.n_heads, cfg.head_dim
+
+    X = [s, d]            # activations [seq, d_model]
+    QKV = [h, s, hd]      # per-head tensors
+    SC = [h, s, s]        # attention scores/probs
+    FF = [s, f]           # FFN hidden
+
+    w = ArtifactWriter(outdir)
+
+    # ---- fused (whole layer, Pallas kernels inside) ----
+    w.add("fused_layer", lambda x: (M.gpt_layer_fused(params, x, cfg),),
+          [X], [X])
+
+    # ---- kernel-by-kernel (one artifact per graph vertex) ----
+    ks = M.make_kernel_by_kernel(params, cfg)
+    w.add("kbk_ln1", lambda x: (ks["ln1"](x),), [X], [X])
+    w.add("kbk_q", lambda x: (ks["q"](x),), [X], [QKV])
+    w.add("kbk_k", lambda x: (ks["k"](x),), [X], [QKV])
+    w.add("kbk_v", lambda x: (ks["v"](x),), [X], [QKV])
+    w.add("kbk_mha1", lambda q, k: (ks["mha1"](q, k),), [QKV, QKV], [SC])
+    w.add("kbk_softmax", lambda x: (ks["softmax"](x),), [SC], [SC])
+    w.add("kbk_mha2", lambda p, v: (ks["mha2"](p, v),), [SC, QKV], [X])
+    w.add("kbk_proj", lambda a: (ks["proj"](a),), [X], [X])
+    w.add("kbk_add1", lambda x, y: (ks["add1"](x, y),), [X, X], [X])
+    w.add("kbk_ln2", lambda x: (ks["ln2"](x),), [X], [X])
+    w.add("kbk_ffn0", lambda x: (ks["ffn0"](x),), [X], [FF])
+    w.add("kbk_gelu", lambda x: (ks["gelu"](x),), [FF], [FF])
+    w.add("kbk_ffn1", lambda x: (ks["ffn1"](x),), [FF], [X])
+    w.add("kbk_add2", lambda x, y: (ks["add2"](x, y),), [X, X], [X])
+
+    # ---- vendor 4-partition mapping (§VII-B) ----
+    vp = M.make_vendor_partitions(params, cfg)
+    w.add("vendor_p1_qkv", lambda x: vp["p1_qkv"](x), [X], [QKV] * 3)
+    w.add("vendor_p2_attn", lambda x, q, k, v: (vp["p2_attn"](x, q, k, v),),
+          [X, QKV, QKV, QKV], [X])
+    w.add("vendor_p3_ffn0", lambda y: (vp["p3_ffn0"](y),), [X], [FF])
+    w.add("vendor_p4_ffn1", lambda y, hh: (vp["p4_ffn1"](y, hh),), [X, FF], [X])
+
+    # ---- DFModel-optimized mapping (§VII-C) ----
+    dp = M.make_dfmodel_partitions(params, cfg)
+    w.add("dfm_p1_qkv", lambda x: dp["p1_qkv"](x), [X], [QKV] * 3)
+    w.add("dfm_p2_attn", lambda q, k, v: (dp["p2_attn"](q, k, v),),
+          [QKV] * 3, [X])
+    w.add("dfm_p3_proj_ffn0", lambda x, a: dp["p3_proj_ffn0"](x, a),
+          [X, X], [X, FF])
+    w.add("dfm_p4_ffn1", lambda y, hh: (dp["p4_ffn1"](y, hh),), [X, FF], [X])
+
+    # Pipelines tell the Rust executor how to wire the artifacts: named
+    # buffers, steps in order, final output buffer. "x" is the external input.
+    pipelines = {
+        "fused": {
+            "steps": [{"artifact": "fused_layer", "in": ["x"], "out": ["out"]}],
+            "output": "out",
+        },
+        "kernel_by_kernel": {
+            "steps": [
+                {"artifact": "kbk_ln1", "in": ["x"], "out": ["h"]},
+                {"artifact": "kbk_q", "in": ["h"], "out": ["q"]},
+                {"artifact": "kbk_k", "in": ["h"], "out": ["k"]},
+                {"artifact": "kbk_v", "in": ["h"], "out": ["v"]},
+                {"artifact": "kbk_mha1", "in": ["q", "k"], "out": ["s"]},
+                {"artifact": "kbk_softmax", "in": ["s"], "out": ["p"]},
+                {"artifact": "kbk_mha2", "in": ["p", "v"], "out": ["a"]},
+                {"artifact": "kbk_proj", "in": ["a"], "out": ["pj"]},
+                {"artifact": "kbk_add1", "in": ["x", "pj"], "out": ["y"]},
+                {"artifact": "kbk_ln2", "in": ["y"], "out": ["h2"]},
+                {"artifact": "kbk_ffn0", "in": ["h2"], "out": ["f0"]},
+                {"artifact": "kbk_gelu", "in": ["f0"], "out": ["g"]},
+                {"artifact": "kbk_ffn1", "in": ["g"], "out": ["f1"]},
+                {"artifact": "kbk_add2", "in": ["y", "f1"], "out": ["out"]},
+            ],
+            "output": "out",
+        },
+        "vendor": {
+            "steps": [
+                {"artifact": "vendor_p1_qkv", "in": ["x"], "out": ["q", "k", "v"]},
+                {"artifact": "vendor_p2_attn", "in": ["x", "q", "k", "v"],
+                 "out": ["y"]},
+                {"artifact": "vendor_p3_ffn0", "in": ["y"], "out": ["h"]},
+                {"artifact": "vendor_p4_ffn1", "in": ["y", "h"], "out": ["out"]},
+            ],
+            "output": "out",
+        },
+        "dfmodel": {
+            "steps": [
+                {"artifact": "dfm_p1_qkv", "in": ["x"], "out": ["q", "k", "v"]},
+                {"artifact": "dfm_p2_attn", "in": ["q", "k", "v"], "out": ["a"]},
+                {"artifact": "dfm_p3_proj_ffn0", "in": ["x", "a"],
+                 "out": ["y", "h"]},
+                {"artifact": "dfm_p4_ffn1", "in": ["y", "h"], "out": ["out"]},
+            ],
+            "output": "out",
+        },
+    }
+
+    # Reference input/output for end-to-end numerics checking in Rust.
+    x = jax.random.normal(jax.random.PRNGKey(7), (s, d), jnp.float32)
+    expected = ref.gpt_layer(params, x, cfg.n_heads)
+    np.asarray(x, dtype="<f4").tofile(os.path.join(outdir, "input_x.bin"))
+    np.asarray(expected, dtype="<f4").tofile(
+        os.path.join(outdir, "expected_out.bin"))
+
+    return {
+        "config": {
+            "d_model": d, "n_heads": h, "seq": s, "d_ff": f,
+            "head_dim": hd, "dtype": "f32",
+        },
+        "input_file": "input_x.bin",
+        "expected_file": "expected_out.bin",
+        "tolerance": 2e-4,
+        "artifacts": w.artifacts,
+        "pipelines": pipelines,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--d-model", type=int, default=M.DEFAULT_CONFIG.d_model)
+    ap.add_argument("--n-heads", type=int, default=M.DEFAULT_CONFIG.n_heads)
+    ap.add_argument("--seq", type=int, default=M.DEFAULT_CONFIG.seq)
+    ap.add_argument("--d-ff", type=int, default=M.DEFAULT_CONFIG.d_ff)
+    args = ap.parse_args()
+
+    cfg = M.GptConfig(d_model=args.d_model, n_heads=args.n_heads,
+                      seq=args.seq, d_ff=args.d_ff)
+    os.makedirs(args.outdir, exist_ok=True)
+    manifest = build_manifest(cfg, args.outdir)
+    with open(os.path.join(args.outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    n = len(manifest["artifacts"])
+    print(f"wrote {n} HLO artifacts + manifest.json to {args.outdir}")
+
+
+if __name__ == "__main__":
+    main()

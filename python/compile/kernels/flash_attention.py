@@ -1,0 +1,135 @@
+"""L1 Pallas kernel: FlashAttention-style fused attention.
+
+This is the paper's canonical intra-chip dataflow mapping (§II-B, Fig. 2C):
+instead of materializing the [seq, seq] score matrix in DRAM the way a
+kernel-by-kernel mapping does (Fig. 2D), the MHA1 -> Softmax -> MHA2 chain is
+fused on-chip and K/V are *streamed* through the fused pipeline tile by tile
+with an online softmax, so the working set is O(block) and lives entirely in
+VMEM.
+
+Hardware adaptation (GPU paper -> TPU model, DESIGN.md §Hardware-Adaptation):
+  * the CUDA threadblock schedule becomes the Pallas grid
+    (head, q_block, k_block) with the k dimension innermost ("arbitrary"
+    semantics — it carries the online-softmax state in VMEM scratch);
+  * shared-memory tiles become BlockSpec-described VMEM blocks;
+  * the matmuls (q @ k^T, p @ v) are shaped for the 128x128 MXU and
+    accumulate in f32.
+
+interpret=True is mandatory on this image: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute. The structure (BlockSpecs,
+scratch, grid) is exactly what a real TPU build would use.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 64
+DEFAULT_BLOCK_K = 64
+
+NEG_INF = float("-inf")
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, n_k_blocks: int):
+    """One (head, q_block, k_block) grid step of the online-softmax fusion.
+
+    VMEM scratch carries the running row-max `m`, row-sum `l`, and the
+    un-normalized output accumulator `acc` across the innermost k dimension.
+    """
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]  # [block_q, head_dim]
+    k = k_ref[0]  # [block_k, head_dim]
+    v = v_ref[0]  # [block_k, head_dim]
+
+    # MHA1: scores tile, f32 accumulation for the MXU.
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # [block_q, block_k]
+
+    # Online softmax update (FlashAttention-2 recurrence).
+    m_prev = m_ref[...]            # [block_q, 1]
+    l_prev = l_ref[...]            # [block_q, 1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)         # [block_q, block_k]
+    l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+
+    # MHA2: accumulate the un-normalized context.
+    pv = jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha + pv
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(k_idx == n_k_blocks - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K) -> jax.Array:
+    """Fused scaled-dot-product attention over [heads, seq, head_dim].
+
+    Matches `ref.attention` to f32 tolerance. seq must be divisible by the
+    block sizes (pad upstream if not — the AOT model uses compliant shapes).
+    """
+    heads, seq, head_dim = q.shape
+    if k.shape != (heads, seq, head_dim) or v.shape != (heads, seq, head_dim):
+        raise ValueError(f"q/k/v shape mismatch: {q.shape} {k.shape} {v.shape}")
+    block_q = min(block_q, seq)
+    block_k = min(block_k, seq)
+    if seq % block_q or seq % block_k:
+        raise ValueError(f"seq={seq} not divisible by blocks ({block_q},{block_k})")
+
+    n_q = seq // block_q
+    n_k = seq // block_k
+    scale = 1.0 / (head_dim ** 0.5)
+
+    kernel = functools.partial(_flash_kernel, scale=scale, n_k_blocks=n_k)
+    grid = (heads, n_q, n_k)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, head_dim), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, block_k, head_dim), lambda h, i, j: (h, j, 0)),
+            pl.BlockSpec((1, block_k, head_dim), lambda h, i, j: (h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, head_dim), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((heads, seq, head_dim), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),        # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),        # running sum l
+            pltpu.VMEM((block_q, head_dim), jnp.float32),  # output accumulator
+        ],
+        interpret=True,
+    )(q, k, v)
+
+
+def vmem_footprint_bytes(block_q: int, block_k: int, head_dim: int,
+                         dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set of one grid step (DESIGN.md §Perf).
+
+    q + k + v blocks + scores tile + scratch (m, l, acc in f32).
+    """
+    blocks = (block_q + 2 * block_k) * head_dim * dtype_bytes
+    scores = block_q * block_k * 4
+    scratch = (block_q * 1 * 2 + block_q * head_dim) * 4
+    return blocks + scores + scratch

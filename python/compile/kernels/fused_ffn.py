@@ -1,0 +1,113 @@
+"""L1 Pallas kernel: fused position-wise FFN (FFN0 -> GeLU -> FFN1).
+
+The kernel-by-kernel mapping (Fig. 2D) materializes the [seq, d_ff]
+activation in DRAM between FFN0 and FFN1; d_ff = 4 * d_model makes that the
+largest intermediate in the layer. The fused dataflow mapping (Fig. 2C)
+streams the hidden dimension through the GeLU in d_ff-tiles so only a
+[block_seq, block_ff] tile is ever live, accumulating the second GEMM's
+partial sums in VMEM scratch.
+
+Grid: (seq_block, ff_block) with ff innermost carrying the accumulator —
+the same HBM<->VMEM schedule a real TPU build would use; interpret=True for
+CPU-PJRT execution (see flash_attention.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_SEQ = 64
+DEFAULT_BLOCK_FF = 256
+
+
+def _gelu(x):
+    c = jnp.sqrt(jnp.float32(2.0 / jnp.pi))
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def _ffn_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref, acc_ref, *,
+                n_ff_blocks: int):
+    """One (seq_block, ff_block) grid step.
+
+    h_j = GeLU(x @ W1[:, j] + b1[j]);  acc += h_j @ W2[j, :]
+    The [block_seq, d_ff] hidden activation never exists in full.
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]     # [block_seq, d_model]
+    w1 = w1_ref[...]   # [d_model, block_ff]
+    w2 = w2_ref[...]   # [block_ff, d_model]
+
+    h = jax.lax.dot_general(
+        x, w1, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) + b1_ref[...]
+    h = _gelu(h)
+    acc_ref[...] += jax.lax.dot_general(
+        h.astype(w2.dtype), w2, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(j == n_ff_blocks - 1)
+    def _finalize():
+        o_ref[...] = (acc_ref[...] + b2_ref[...]).astype(o_ref.dtype)
+
+
+def fused_ffn(x: jax.Array, w1: jax.Array, b1: jax.Array, w2: jax.Array,
+              b2: jax.Array, *, block_seq: int = DEFAULT_BLOCK_SEQ,
+              block_ff: int = DEFAULT_BLOCK_FF) -> jax.Array:
+    """Fused GeLU(x W1 + b1) W2 + b2 over x: [seq, d_model].
+
+    Matches `ref.ffn` to f32 tolerance. seq and d_ff must be divisible by
+    the block sizes.
+    """
+    seq, d_model = x.shape
+    d_ff = w1.shape[1]
+    if w1.shape != (d_model, d_ff) or w2.shape != (d_ff, d_model):
+        raise ValueError(f"weight shapes mismatch: {w1.shape} {w2.shape}")
+    if b1.shape != (d_ff,) or b2.shape != (d_model,):
+        raise ValueError(f"bias shapes mismatch: {b1.shape} {b2.shape}")
+    block_seq = min(block_seq, seq)
+    block_ff = min(block_ff, d_ff)
+    if seq % block_seq or d_ff % block_ff:
+        raise ValueError(
+            f"seq={seq}/d_ff={d_ff} not divisible by blocks ({block_seq},{block_ff})")
+
+    n_seq = seq // block_seq
+    n_ff = d_ff // block_ff
+    kernel = functools.partial(_ffn_kernel, n_ff_blocks=n_ff)
+
+    # b1 is blocked along d_ff; b2 is broadcast to every grid step. Biases are
+    # passed as [1, dim] so the VMEM blocks stay 2-D (TPU-friendly layout).
+    return pl.pallas_call(
+        kernel,
+        grid=(n_seq, n_ff),
+        in_specs=[
+            pl.BlockSpec((block_seq, d_model), lambda i, j: (i, 0)),
+            pl.BlockSpec((d_model, block_ff), lambda i, j: (0, j)),
+            pl.BlockSpec((1, block_ff), lambda i, j: (0, j)),
+            pl.BlockSpec((block_ff, d_model), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, d_model), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_seq, d_model), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((seq, d_model), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_seq, d_model), jnp.float32)],
+        interpret=True,
+    )(x, w1, b1.reshape(1, d_ff), w2, b2.reshape(1, d_model))
+
+
+def vmem_footprint_bytes(block_seq: int, block_ff: int, d_model: int,
+                         dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set of one grid step (DESIGN.md §Perf)."""
+    x_blk = block_seq * d_model * dtype_bytes
+    w_blks = 2 * block_ff * d_model * dtype_bytes
+    h_tile = block_seq * block_ff * 4
+    acc = block_seq * d_model * 4
+    return x_blk + w_blks + h_tile + acc

@@ -1,0 +1,58 @@
+"""L1 Pallas kernel: row-blocked LayerNorm.
+
+The LN kernels bracket both fused regions of the GPT layer (Fig. 2A); in
+the fused dataflow mapping they run on the vector path of the same spatial
+pipeline as the GEMMs, consuming activations a row-tile at a time so the
+working set stays in VMEM. Grid: (seq_block,) — each step normalizes a
+[block_seq, d_model] tile independently (LayerNorm reduces only across
+features, so row tiles are embarrassingly parallel).
+
+interpret=True as everywhere (see flash_attention.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_SEQ = 64
+
+
+def _ln_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)  # [block_seq, d]
+    mu = jnp.mean(x, axis=1, keepdims=True)
+    var = jnp.mean((x - mu) * (x - mu), axis=1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * g_ref[...] + b_ref[...]).astype(o_ref.dtype)
+
+
+def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array, *,
+              eps: float = 1e-5,
+              block_seq: int = DEFAULT_BLOCK_SEQ) -> jax.Array:
+    """LayerNorm over the last axis of x: [seq, d_model].
+
+    Matches `ref.layernorm` to f32 tolerance; seq must be divisible by
+    block_seq (pad upstream otherwise).
+    """
+    seq, d = x.shape
+    if gamma.shape != (d,) or beta.shape != (d,):
+        raise ValueError(f"param shapes {gamma.shape}/{beta.shape} != ({d},)")
+    block_seq = min(block_seq, seq)
+    if seq % block_seq:
+        raise ValueError(f"seq={seq} not divisible by block_seq={block_seq}")
+
+    import functools
+    kernel = functools.partial(_ln_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(seq // block_seq,),
+        in_specs=[
+            pl.BlockSpec((block_seq, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_seq, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((seq, d), x.dtype),
+        interpret=True,
+    )(x, gamma.reshape(1, d), beta.reshape(1, d))

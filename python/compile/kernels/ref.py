@@ -1,0 +1,77 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1) and the GPT layer
+model (L2).
+
+Everything in this file is straight-line jax.numpy with no Pallas, no custom
+control flow — it is the ground truth that `flash_attention.py`,
+`fused_ffn.py`, and `model.py` are validated against in pytest/hypothesis.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Numerically-stable softmax (matches the online-softmax kernel)."""
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Scaled dot-product attention over [heads, seq, head_dim] tensors.
+
+    attention(Q, K, V) = softmax(Q K^T / sqrt(d)) V  — the §II-A kernel.
+    """
+    d = q.shape[-1]
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) / jnp.sqrt(jnp.float32(d))
+    probs = softmax(scores, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", probs, v)
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    """tanh-approximated GeLU, as used by GPT-2/3."""
+    c = jnp.sqrt(jnp.float32(2.0 / jnp.pi))
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def ffn(x: jax.Array, w1: jax.Array, b1: jax.Array, w2: jax.Array,
+        b2: jax.Array) -> jax.Array:
+    """Position-wise feed-forward: GeLU(x W1 + b1) W2 + b2."""
+    return gelu(x @ w1 + b1) @ w2 + b2
+
+
+def layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def split_heads(x: jax.Array, n_heads: int) -> jax.Array:
+    """[seq, d_model] -> [heads, seq, head_dim]."""
+    seq, d_model = x.shape
+    return x.reshape(seq, n_heads, d_model // n_heads).transpose(1, 0, 2)
+
+
+def merge_heads(x: jax.Array) -> jax.Array:
+    """[heads, seq, head_dim] -> [seq, d_model]."""
+    h, seq, hd = x.shape
+    return x.transpose(1, 0, 2).reshape(seq, h * hd)
+
+
+def gpt_layer(params: dict, x: jax.Array, n_heads: int) -> jax.Array:
+    """One pre-norm GPT transformer layer over x: [seq, d_model].
+
+    Mirrors the Fig. 2A dataflow graph: LN -> {Q,K,V} -> MHA1 -> Softmax ->
+    MHA2 -> Proj -> Add -> LN -> FFN0 -> GeLU -> FFN1 -> Add.
+    """
+    h = layernorm(x, params["ln1_g"], params["ln1_b"])
+    q = split_heads(h @ params["wq"] + params["bq"], n_heads)
+    k = split_heads(h @ params["wk"] + params["bk"], n_heads)
+    v = split_heads(h @ params["wv"] + params["bv"], n_heads)
+    attn = merge_heads(attention(q, k, v))
+    x = x + attn @ params["wo"] + params["bo"]
+    h = layernorm(x, params["ln2_g"], params["ln2_b"])
+    return x + ffn(h, params["w1"], params["b1"], params["w2"], params["b2"])

@@ -1,0 +1,214 @@
+"""L2: the GPT transformer layer in JAX, in every mapping variant DFModel
+reasons about (§VII), calling the L1 Pallas kernels.
+
+Build-time only — `aot.py` lowers each variant to HLO text once and the Rust
+coordinator executes the artifacts via PJRT; Python is never on the request
+path.
+
+Variants (one HLO artifact each; weights are baked in as constants so the
+Rust executor only feeds activations):
+
+  * kernel-by-kernel — one artifact per dataflow-graph vertex (Fig. 2D): the
+    non-dataflow mapping of Calculon-style models; every intermediate tensor
+    crosses DRAM/host between artifacts.
+  * vendor 4-partition mapping (§VII-B): P1={LN1,Q,K,V},
+    P2={MHA1,Softmax,MHA2,Proj,Add}, P3={LN2,FFN0,GeLU}, P4={FFN1,Add}.
+  * DFModel-optimized mapping (§VII-C): Proj co-located with FFN0 —
+    P1={LN1,Q,K,V}, P2={MHA1,Softmax,MHA2}, P3={Proj,Add,LN2,FFN0,GeLU},
+    P4={FFN1,Add}.
+  * fused — the whole layer as one on-chip pipeline (Fig. 2C) built on the
+    Pallas flash-attention and fused-FFN kernels.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.flash_attention import flash_attention
+from compile.kernels.fused_ffn import fused_ffn
+from compile.kernels.layernorm import layernorm as pallas_layernorm
+
+
+@dataclasses.dataclass(frozen=True)
+class GptConfig:
+    """Shape of the (deliberately small) validation GPT layer."""
+    d_model: int = 256
+    n_heads: int = 4
+    seq: int = 128
+    d_ff: int = 1024
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+# The tiny default used by `make artifacts` and the Rust e2e example.
+DEFAULT_CONFIG = GptConfig()
+
+
+def init_params(cfg: GptConfig, seed: int = 0) -> dict:
+    """Deterministic layer weights; scaled for stable f32 numerics."""
+    key = jax.random.PRNGKey(seed)
+    keys = iter(jax.random.split(key, 16))
+    d, f = cfg.d_model, cfg.d_ff
+
+    def w(shape, scale):
+        return (jax.random.normal(next(keys), shape, jnp.float32) * scale)
+
+    s_attn = 1.0 / (d ** 0.5)
+    s_ffn = 1.0 / (f ** 0.5)
+    return {
+        "ln1_g": jnp.ones((d,), jnp.float32),
+        "ln1_b": jnp.zeros((d,), jnp.float32),
+        "wq": w((d, d), s_attn), "bq": w((d,), 0.02),
+        "wk": w((d, d), s_attn), "bk": w((d,), 0.02),
+        "wv": w((d, d), s_attn), "bv": w((d,), 0.02),
+        "wo": w((d, d), s_attn), "bo": w((d,), 0.02),
+        "ln2_g": jnp.ones((d,), jnp.float32),
+        "ln2_b": jnp.zeros((d,), jnp.float32),
+        "w1": w((d, f), s_attn), "b1": w((f,), 0.02),
+        "w2": w((f, d), s_ffn), "b2": w((d,), 0.02),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Fused (full dataflow) layer — L1 kernels inside.
+# ---------------------------------------------------------------------------
+
+def gpt_layer_fused(params: dict, x: jax.Array, cfg: GptConfig) -> jax.Array:
+    """Whole layer as one on-chip pipeline, using the Pallas kernels
+    (flash attention, fused FFN, and row-blocked LayerNorm)."""
+    h = pallas_layernorm(x, params["ln1_g"], params["ln1_b"])
+    q = ref.split_heads(h @ params["wq"] + params["bq"], cfg.n_heads)
+    k = ref.split_heads(h @ params["wk"] + params["bk"], cfg.n_heads)
+    v = ref.split_heads(h @ params["wv"] + params["bv"], cfg.n_heads)
+    attn = ref.merge_heads(flash_attention(q, k, v))
+    x = x + attn @ params["wo"] + params["bo"]
+    h = pallas_layernorm(x, params["ln2_g"], params["ln2_b"])
+    return x + fused_ffn(h, params["w1"], params["b1"],
+                         params["w2"], params["b2"])
+
+
+# ---------------------------------------------------------------------------
+# Kernel-by-kernel variant: one function per dataflow-graph vertex.
+# Each returns/accepts plain arrays; intermediates round-trip through the
+# caller (DRAM in the model's terms).
+# ---------------------------------------------------------------------------
+
+def make_kernel_by_kernel(params: dict, cfg: GptConfig) -> dict[str, Callable]:
+    """Name -> single-kernel function, in dataflow-graph order (Fig. 2A)."""
+    n_heads = cfg.n_heads
+    scale = 1.0 / (cfg.head_dim ** 0.5)
+    p = params
+
+    return {
+        # x -> h
+        "ln1": lambda x: ref.layernorm(x, p["ln1_g"], p["ln1_b"]),
+        # h -> q/k/v  [heads, seq, head_dim]
+        "q": lambda h: ref.split_heads(h @ p["wq"] + p["bq"], n_heads),
+        "k": lambda h: ref.split_heads(h @ p["wk"] + p["bk"], n_heads),
+        "v": lambda h: ref.split_heads(h @ p["wv"] + p["bv"], n_heads),
+        # scores = q k^T / sqrt(d)
+        "mha1": lambda q, k: jnp.einsum("hqd,hkd->hqk", q, k) * scale,
+        "softmax": lambda s: ref.softmax(s, axis=-1),
+        # context = probs @ v, merged back to [seq, d_model]
+        "mha2": lambda pr, v: ref.merge_heads(
+            jnp.einsum("hqk,hkd->hqd", pr, v)),
+        "proj": lambda a: a @ p["wo"] + p["bo"],
+        "add1": lambda x, y: x + y,
+        "ln2": lambda x: ref.layernorm(x, p["ln2_g"], p["ln2_b"]),
+        "ffn0": lambda h: h @ p["w1"] + p["b1"],
+        "gelu": ref.gelu,
+        "ffn1": lambda h: h @ p["w2"] + p["b2"],
+        "add2": lambda x, y: x + y,
+    }
+
+
+def run_kernel_by_kernel(params: dict, x: jax.Array, cfg: GptConfig) -> jax.Array:
+    """Drive the per-vertex functions in graph order (test oracle for the
+    Rust kernel-by-kernel executor)."""
+    ks = make_kernel_by_kernel(params, cfg)
+    h = ks["ln1"](x)
+    q, k, v = ks["q"](h), ks["k"](h), ks["v"](h)
+    s = ks["mha1"](q, k)
+    pr = ks["softmax"](s)
+    a = ks["mha2"](pr, v)
+    y = ks["add1"](x, ks["proj"](a))
+    h2 = ks["ln2"](y)
+    return ks["add2"](y, ks["ffn1"](ks["gelu"](ks["ffn0"](h2))))
+
+
+# ---------------------------------------------------------------------------
+# Partitioned variants (§VII-B vendor mapping, §VII-C DFModel mapping).
+# Each partition is one HLO artifact; the on-chip interior of a partition is
+# fused (flash attention / fused FFN where the partition contains the chain).
+# ---------------------------------------------------------------------------
+
+def make_vendor_partitions(params: dict, cfg: GptConfig) -> dict[str, Callable]:
+    """Vendor 4-partition mapping from §VII-B."""
+    p, n_heads = params, cfg.n_heads
+
+    def p1(x):  # {LN1, Q, K, V}
+        h = ref.layernorm(x, p["ln1_g"], p["ln1_b"])
+        return (ref.split_heads(h @ p["wq"] + p["bq"], n_heads),
+                ref.split_heads(h @ p["wk"] + p["bk"], n_heads),
+                ref.split_heads(h @ p["wv"] + p["bv"], n_heads))
+
+    def p2(x, q, k, v):  # {MHA1, Softmax, MHA2, Proj, Add} — fused attention
+        attn = ref.merge_heads(flash_attention(q, k, v))
+        return x + attn @ p["wo"] + p["bo"]
+
+    def p3(y):  # {LN2, FFN0, GeLU}
+        h = ref.layernorm(y, p["ln2_g"], p["ln2_b"])
+        return ref.gelu(h @ p["w1"] + p["b1"])
+
+    def p4(y, h):  # {FFN1, Add}
+        return y + h @ p["w2"] + p["b2"]
+
+    return {"p1_qkv": p1, "p2_attn": p2, "p3_ffn0": p3, "p4_ffn1": p4}
+
+
+def make_dfmodel_partitions(params: dict, cfg: GptConfig) -> dict[str, Callable]:
+    """DFModel-optimized mapping (§VII-C): Proj co-located with FFN0 so the
+    Proj all-reduce overlaps the FFN0 GEMM."""
+    p, n_heads = params, cfg.n_heads
+
+    def p1(x):  # {LN1, Q, K, V}
+        h = ref.layernorm(x, p["ln1_g"], p["ln1_b"])
+        return (ref.split_heads(h @ p["wq"] + p["bq"], n_heads),
+                ref.split_heads(h @ p["wk"] + p["bk"], n_heads),
+                ref.split_heads(h @ p["wv"] + p["bv"], n_heads))
+
+    def p2(q, k, v):  # {MHA1, Softmax, MHA2} — fused attention
+        return ref.merge_heads(flash_attention(q, k, v))
+
+    def p3(x, attn):  # {Proj, Add, LN2, FFN0, GeLU}
+        y = x + attn @ p["wo"] + p["bo"]
+        h = ref.layernorm(y, p["ln2_g"], p["ln2_b"])
+        return y, ref.gelu(h @ p["w1"] + p["b1"])
+
+    def p4(y, h):  # {FFN1, Add}
+        return y + h @ p["w2"] + p["b2"]
+
+    return {"p1_qkv": p1, "p2_attn": p2, "p3_proj_ffn0": p3, "p4_ffn1": p4}
+
+
+def run_vendor(params: dict, x: jax.Array, cfg: GptConfig) -> jax.Array:
+    ps = make_vendor_partitions(params, cfg)
+    q, k, v = ps["p1_qkv"](x)
+    y = ps["p2_attn"](x, q, k, v)
+    return ps["p4_ffn1"](y, ps["p3_ffn0"](y))
+
+
+def run_dfmodel(params: dict, x: jax.Array, cfg: GptConfig) -> jax.Array:
+    ps = make_dfmodel_partitions(params, cfg)
+    q, k, v = ps["p1_qkv"](x)
+    attn = ps["p2_attn"](q, k, v)
+    y, h = ps["p3_proj_ffn0"](x, attn)
+    return ps["p4_ffn1"](y, h)

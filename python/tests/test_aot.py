@@ -1,0 +1,82 @@
+"""AOT path: lowering produces loadable HLO text and a coherent manifest."""
+
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot
+from compile import model as M
+
+SMALL = M.GptConfig(d_model=64, n_heads=2, seq=64, d_ff=256)
+
+
+def build_small(tmpdir):
+    manifest = aot.build_manifest(SMALL, tmpdir)
+    return manifest
+
+
+class TestAot:
+    def test_manifest_coherent(self):
+        with tempfile.TemporaryDirectory() as td:
+            m = build_small(td)
+            names = {a["name"] for a in m["artifacts"]}
+            # every pipeline step references an existing artifact
+            for pname, pipe in m["pipelines"].items():
+                for step in pipe["steps"]:
+                    assert step["artifact"] in names, (pname, step)
+            # every artifact file exists and is HLO text
+            for a in m["artifacts"]:
+                path = os.path.join(td, a["file"])
+                assert os.path.exists(path)
+                text = open(path).read()
+                assert text.startswith("HloModule"), a["name"]
+                assert "ENTRY" in text
+
+    def test_pipeline_wiring_is_executable(self):
+        # simulate the Rust executor: walk each pipeline, check every input
+        # buffer is defined before use and shapes line up.
+        with tempfile.TemporaryDirectory() as td:
+            m = build_small(td)
+            arts = {a["name"]: a for a in m["artifacts"]}
+            for pname, pipe in m["pipelines"].items():
+                defined = {"x": [SMALL.seq, SMALL.d_model]}
+                for step in pipe["steps"]:
+                    art = arts[step["artifact"]]
+                    assert len(step["in"]) == len(art["inputs"]), (pname, step)
+                    assert len(step["out"]) == len(art["outputs"])
+                    for buf, spec in zip(step["in"], art["inputs"]):
+                        assert buf in defined, (pname, step, buf)
+                        assert defined[buf] == spec["shape"], (pname, buf)
+                    for buf, spec in zip(step["out"], art["outputs"]):
+                        defined[buf] = spec["shape"]
+                assert pipe["output"] in defined
+
+    def test_reference_binaries_roundtrip(self):
+        with tempfile.TemporaryDirectory() as td:
+            m = build_small(td)
+            x = np.fromfile(os.path.join(td, m["input_file"]), dtype="<f4")
+            out = np.fromfile(os.path.join(td, m["expected_file"]), dtype="<f4")
+            assert x.size == SMALL.seq * SMALL.d_model
+            assert out.size == SMALL.seq * SMALL.d_model
+            assert np.all(np.isfinite(x)) and np.all(np.isfinite(out))
+
+    def test_hlo_text_mentions_expected_structure(self):
+        # The Rust integration test (rust/tests/runtime_e2e.rs) covers the
+        # text -> PJRT compile -> execute path; here we sanity-check the text
+        # itself: entry computation, parameter shapes, and a tuple root (the
+        # lowering uses return_tuple=True which the Rust side unwraps).
+        with tempfile.TemporaryDirectory() as td:
+            m = build_small(td)
+            text = open(os.path.join(td, "kbk_ln1.hlo.txt")).read()
+            assert "ENTRY" in text
+            assert f"f32[{SMALL.seq},{SMALL.d_model}]" in text
+            assert "tuple" in text.lower()
+            # input binary round-trips against the lowered shapes
+            x = np.fromfile(os.path.join(td, m["input_file"]), dtype="<f4")
+            spec = next(a for a in m["artifacts"] if a["name"] == "kbk_ln1")
+            assert x.size == np.prod(spec["inputs"][0]["shape"])
+            _ = jax  # jitted lowering exercised in build_small

@@ -1,0 +1,142 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes/blocks; fixed cases pin the AOT shapes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.flash_attention import flash_attention, vmem_footprint_bytes
+from compile.kernels import fused_ffn as ffn_mod
+from compile.kernels.fused_ffn import fused_ffn
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+class TestFlashAttention:
+    def test_matches_ref_default_shape(self):
+        q, k, v = (rand(i, (4, 128, 64)) for i in range(3))
+        np.testing.assert_allclose(
+            flash_attention(q, k, v), ref.attention(q, k, v),
+            rtol=2e-5, atol=2e-5)
+
+    def test_single_head(self):
+        q, k, v = (rand(i, (1, 64, 32)) for i in range(3))
+        np.testing.assert_allclose(
+            flash_attention(q, k, v), ref.attention(q, k, v),
+            rtol=2e-5, atol=2e-5)
+
+    def test_seq_equals_block(self):
+        # degenerate: one q block, one k block — init and finalize same step
+        q, k, v = (rand(i, (2, 64, 16)) for i in range(3))
+        out = flash_attention(q, k, v, block_q=64, block_k=64)
+        np.testing.assert_allclose(out, ref.attention(q, k, v),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_block_smaller_than_seq(self):
+        q, k, v = (rand(i, (2, 256, 32)) for i in range(3))
+        out = flash_attention(q, k, v, block_q=32, block_k=64)
+        np.testing.assert_allclose(out, ref.attention(q, k, v),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_large_magnitude_logits_stable(self):
+        # online softmax must not overflow with large score magnitudes
+        q, k, v = (rand(i, (2, 128, 32), scale=8.0) for i in range(3))
+        out = flash_attention(q, k, v)
+        assert np.all(np.isfinite(out))
+        np.testing.assert_allclose(out, ref.attention(q, k, v),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_rejects_mismatched_shapes(self):
+        q = rand(0, (2, 128, 32))
+        k = rand(1, (2, 64, 32))
+        with pytest.raises(ValueError):
+            flash_attention(q, k, q)
+        _ = k  # silence lint
+
+    def test_rejects_indivisible_seq(self):
+        q, k, v = (rand(i, (1, 96, 16)) for i in range(3))
+        with pytest.raises(ValueError):
+            flash_attention(q, k, v, block_q=64, block_k=64)
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        heads=st.sampled_from([1, 2, 4]),
+        seq_blocks=st.sampled_from([1, 2, 4]),
+        head_dim=st.sampled_from([16, 32, 64]),
+        block=st.sampled_from([32, 64]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref_hypothesis(self, heads, seq_blocks, head_dim, block,
+                                    seed):
+        seq = block * seq_blocks
+        q, k, v = (rand(seed + i, (heads, seq, head_dim)) for i in range(3))
+        out = flash_attention(q, k, v, block_q=block, block_k=block)
+        np.testing.assert_allclose(out, ref.attention(q, k, v),
+                                   rtol=3e-5, atol=3e-5)
+
+    def test_vmem_footprint_estimate_fits_tpu_vmem(self):
+        # The documented block choice must fit a 16 MiB TPU VMEM with
+        # double-buffering headroom (DESIGN.md §Perf).
+        assert vmem_footprint_bytes(64, 64, 64) < 16 * 2**20 / 4
+
+
+# ---------------------------------------------------------------------------
+# fused ffn
+# ---------------------------------------------------------------------------
+
+class TestFusedFfn:
+    def _args(self, seed, seq=128, d=256, f=1024):
+        return (rand(seed, (seq, d)), rand(seed + 1, (d, f), 0.05),
+                rand(seed + 2, (f,), 0.05), rand(seed + 3, (f, d), 0.05),
+                rand(seed + 4, (d,), 0.05))
+
+    def test_matches_ref_default_shape(self):
+        x, w1, b1, w2, b2 = self._args(0)
+        np.testing.assert_allclose(
+            fused_ffn(x, w1, b1, w2, b2), ref.ffn(x, w1, b1, w2, b2),
+            rtol=2e-4, atol=2e-4)
+
+    def test_single_ff_block(self):
+        x, w1, b1, w2, b2 = self._args(5, seq=64, d=32, f=128)
+        out = fused_ffn(x, w1, b1, w2, b2, block_seq=64, block_ff=128)
+        np.testing.assert_allclose(out, ref.ffn(x, w1, b1, w2, b2),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_rejects_indivisible_dff(self):
+        x, w1, b1, w2, b2 = self._args(6, f=96 * 4)
+        with pytest.raises(ValueError):
+            fused_ffn(x, w1, b1, w2, b2, block_ff=256)
+
+    def test_rejects_bad_weight_shape(self):
+        x, w1, b1, w2, b2 = self._args(7)
+        with pytest.raises(ValueError):
+            fused_ffn(x, w1.T, b1, w2, b2)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        seq=st.sampled_from([32, 64, 128]),
+        d=st.sampled_from([32, 64, 128]),
+        ff_blocks=st.sampled_from([1, 2, 4]),
+        block_ff=st.sampled_from([64, 128]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref_hypothesis(self, seq, d, ff_blocks, block_ff, seed):
+        f = block_ff * ff_blocks
+        x, w1, b1, w2, b2 = self._args(seed, seq=seq, d=d, f=f)
+        out = fused_ffn(x, w1, b1, w2, b2, block_seq=32, block_ff=block_ff)
+        np.testing.assert_allclose(out, ref.ffn(x, w1, b1, w2, b2),
+                                   rtol=3e-4, atol=3e-4)
+
+    def test_vmem_footprint_estimate(self):
+        assert ffn_mod.vmem_footprint_bytes(64, 256, 256) < 16 * 2**20 / 4

@@ -1,0 +1,57 @@
+"""L1 layernorm kernel vs the pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.layernorm import layernorm
+
+
+def rand(seed, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32) * scale
+
+
+class TestLayerNorm:
+    def test_matches_ref_default(self):
+        x = rand(0, (128, 256))
+        g = rand(1, (256,), 0.5) + 1.0
+        b = rand(2, (256,), 0.1)
+        np.testing.assert_allclose(layernorm(x, g, b), ref.layernorm(x, g, b),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_single_block(self):
+        x = rand(3, (32, 64))
+        g = jnp.ones((64,))
+        b = jnp.zeros((64,))
+        out = layernorm(x, g, b, block_seq=32)
+        np.testing.assert_allclose(out, ref.layernorm(x, g, b), rtol=2e-5, atol=2e-5)
+        # normalized rows: zero mean, unit variance
+        np.testing.assert_allclose(np.mean(out, axis=1), 0.0, atol=1e-5)
+        np.testing.assert_allclose(np.var(out, axis=1), 1.0, atol=1e-3)
+
+    def test_rejects_bad_shapes(self):
+        x = rand(4, (64, 64))
+        with pytest.raises(ValueError):
+            layernorm(x, jnp.ones((32,)), jnp.zeros((64,)))
+        with pytest.raises(ValueError):
+            layernorm(rand(5, (96, 64)), jnp.ones((64,)), jnp.zeros((64,)),
+                      block_seq=64)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        blocks=st.sampled_from([1, 2, 4]),
+        d=st.sampled_from([32, 64, 256]),
+        block_seq=st.sampled_from([16, 32]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref_hypothesis(self, blocks, d, block_seq, seed):
+        seq = blocks * block_seq
+        x = rand(seed, (seq, d), 3.0)
+        g = rand(seed + 1, (d,), 0.5) + 1.0
+        b = rand(seed + 2, (d,), 0.1)
+        out = layernorm(x, g, b, block_seq=block_seq)
+        np.testing.assert_allclose(out, ref.layernorm(x, g, b),
+                                   rtol=3e-5, atol=3e-5)

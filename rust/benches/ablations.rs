@@ -1,0 +1,169 @@
+//! `cargo bench --bench ablations`
+//!
+//! Ablation studies for the design choices DESIGN.md calls out:
+//!   A1  hierarchical (BlueConnect) vs flat collectives
+//!   A2  exhaustive vs coordinate-descent sharding selection (quality gap)
+//!   A3  exact min-max stage DP vs greedy equal-FLOP partitioning
+//!   A4  tile water-filling vs even split (critical-time gap)
+//!   A5  kernel-by-kernel efficiency derate sensitivity (Table VI chain)
+
+use dfmodel::collective::{time, time_hier, Collective};
+use dfmodel::graph::gpt::{gpt3_175b, gpt3_1t, gpt_coarse_graph, gpt_layer_graph};
+use dfmodel::interchip::{self, InterChipOptions};
+use dfmodel::intrachip::tiles::allocate_tiles;
+use dfmodel::system::topology::{Dim, DimKind};
+use dfmodel::system::{chip, interconnect, memory, topology, SystemSpec};
+use dfmodel::util::prng::Rng;
+use dfmodel::util::table::{write_result, Table};
+
+fn main() {
+    let mut out = String::new();
+    out.push_str(&a1_hier_vs_flat());
+    out.push_str(&a2_sharding_quality());
+    out.push_str(&a3_stage_dp_vs_greedy());
+    out.push_str(&a4_waterfill_vs_even());
+    out.push_str(&a5_derate_sensitivity());
+    println!("{out}");
+    let _ = write_result("ablations.txt", &out);
+}
+
+/// A1: hierarchical all-reduce over composed dims vs one flat ring.
+fn a1_hier_vs_flat() -> String {
+    let nv = interconnect::nvlink4();
+    let mut t = Table::new(
+        "A1 — hierarchical vs flat all-reduce (1 GB payload)",
+        &["chips", "flat ring (ms)", "hier 2-D (ms)", "speedup"],
+    );
+    for n in [64usize, 256, 1024] {
+        let side = (n as f64).sqrt() as usize;
+        let flat = Dim::new(DimKind::Ring, n, &nv);
+        let d1 = Dim::new(DimKind::Ring, side, &nv);
+        let d2 = Dim::new(DimKind::Ring, side, &nv);
+        let tf = time(Collective::AllReduce, 1e9, &flat);
+        let th = time_hier(Collective::AllReduce, 1e9, &[&d1, &d2]);
+        t.row(&[
+            format!("{n}"),
+            format!("{:.3}", tf * 1e3),
+            format!("{:.3}", th * 1e3),
+            format!("{:.2}x", tf / th),
+        ]);
+    }
+    t.render() + "\n"
+}
+
+/// A2: the CD heuristic must match exhaustive sharding on graphs small
+/// enough to enumerate.
+fn a2_sharding_quality() -> String {
+    let link = interconnect::pcie4();
+    let sys = SystemSpec::new(
+        chip::sn10(),
+        memory::ddr4(),
+        link.clone(),
+        topology::ring(8, &link),
+    );
+    let g = gpt_layer_graph(&gpt3_175b(), 1.0);
+    let plans = interchip::enumerate_plans(&sys.topology);
+    let plan = plans.iter().find(|p| p.tp == 8).unwrap();
+    // exhaustive (space below threshold)
+    let exact = interchip::optimizer::select_sharding(
+        &g,
+        &sys,
+        plan,
+        &InterChipOptions { exhaustive_below: 1e12, ..Default::default() },
+    );
+    // coordinate descent only
+    let cd = interchip::optimizer::select_sharding(
+        &g,
+        &sys,
+        plan,
+        &InterChipOptions { exhaustive_below: 0.0, ..Default::default() },
+    );
+    let cost = |labels: &[usize]| {
+        let v = interchip::latency_vectors(&g, &sys, plan, labels);
+        v.h_n.iter().sum::<f64>() + v.h_m.iter().sum::<f64>() + v.h_c.iter().sum::<f64>()
+    };
+    let (ce, cc) = (cost(&exact.0), cost(&cd.0));
+    format!(
+        "A2 — sharding selection quality (GPT layer, tp=8):\n  exhaustive {:.6e}s  coordinate-descent {:.6e}s  gap {:.3}%\n\n",
+        ce,
+        cc,
+        (cc / ce - 1.0) * 100.0
+    )
+}
+
+/// A3: exact stage DP vs greedy equal-count stage split on the coarse 1T
+/// graph with heterogeneous per-layer times.
+fn a3_stage_dp_vs_greedy() -> String {
+    let nv = interconnect::nvlink4();
+    let sys = SystemSpec::new(
+        chip::a100(),
+        memory::hbm3(),
+        nv.clone(),
+        topology::Topology::new(
+            "dp-test",
+            vec![
+                Dim::new(DimKind::Switch, 16, &nv),
+                Dim::new(DimKind::Switch, 16, &nv),
+                Dim::new(DimKind::Switch, 4, &nv),
+            ],
+        ),
+    );
+    let g = gpt_coarse_graph(&gpt3_1t(), 1.0);
+    let opts = InterChipOptions { force_degrees: Some((16, 16, 4)), ..Default::default() };
+    let m = interchip::optimize(&g, &sys, &opts).expect("feasible");
+    // greedy: equal layer counts
+    let per = g.n_kernels() / 16;
+    let greedy_worst = m
+        .vectors
+        .h_c
+        .chunks(per)
+        .map(|c| c.iter().sum::<f64>())
+        .fold(0.0f64, f64::max);
+    format!(
+        "A3 — stage partitioning (GPT3-1T, tp=16 pp=16): DP max-stage {:.4e}s vs equal-split compute {:.4e}s (DP <= greedy: {})\n\n",
+        m.t_cri,
+        greedy_worst,
+        m.t_cri <= greedy_worst * 1.0001
+    )
+}
+
+/// A4: water-filling tile allocation vs even split across random kernels.
+fn a4_waterfill_vs_even() -> String {
+    let mut rng = Rng::new(99);
+    let mut worst_gain: f64 = 1.0;
+    let mut mean_gain = 0.0;
+    let trials = 200;
+    for _ in 0..trials {
+        let n = 2 + rng.below(10);
+        let total = n + rng.below(600);
+        let f: Vec<f64> = (0..n).map(|_| rng.uniform(1.0, 1e9)).collect();
+        let (_, crit) = allocate_tiles(&f, total).unwrap();
+        let mut even = vec![total / n; n];
+        for t in even.iter_mut().take(total % n) {
+            *t += 1;
+        }
+        let crit_even = (0..n).map(|i| f[i] / even[i] as f64).fold(0.0f64, f64::max);
+        let gain = crit_even / crit.max(1e-30);
+        worst_gain = worst_gain.max(gain);
+        mean_gain += gain / trials as f64;
+    }
+    format!(
+        "A4 — tile water-filling vs even split ({trials} random partitions): mean {mean_gain:.2}x, max {worst_gain:.2}x faster critical kernel\n\n"
+    )
+}
+
+/// A5: sensitivity of the Table VI speedup chain to the kernel-by-kernel
+/// efficiency derate (documents the §Perf modeling choice).
+fn a5_derate_sensitivity() -> String {
+    // run the four-mapping §VII study and report the accumulated speedup
+    let maps = dfmodel::figures::casestudy::four_mappings();
+    let base = maps[0].throughput();
+    let accum = maps.last().unwrap().throughput() / base;
+    let vendor = maps[1].throughput() / base;
+    let mut s = String::from("A5 — Table VI chain under the 0.62 kbk derate:\n");
+    s.push_str(&format!(
+        "  vendor/non-dataflow {vendor:.2}x, total {accum:.2}x (paper 4.05x / 6.13x)\n"
+    ));
+    s.push_str("  (the derate scales the non-dataflow baseline; the DP mappings are unaffected)\n\n");
+    s
+}

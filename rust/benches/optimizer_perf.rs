@@ -1,0 +1,80 @@
+//! `cargo bench --bench optimizer_perf`
+//!
+//! Micro/meso benchmarks of the optimizer hot paths (the §Perf targets in
+//! EXPERIMENTS.md): sharding selection, stage-partition DP, intra-chip
+//! fusion DP, a single DSE design-point evaluation, and the end-to-end
+//! 80-point sweep. The paper's scale reference: a trillion-parameter LLM
+//! onto 1024 accelerators, full joint space, in 20 min on 64 CPUs.
+
+use dfmodel::graph::gpt::{gpt3_175b, gpt3_1t, gpt_coarse_graph, gpt_layer_graph};
+use dfmodel::interchip::{self, InterChipOptions};
+use dfmodel::intrachip::{self, IntraChipOptions};
+use dfmodel::system::{chip, interconnect, memory, topology, SystemSpec};
+use dfmodel::util::bench::Runner;
+
+fn main() {
+    let mut r = Runner::new();
+
+    // ---- inter-chip: sharding selection on the fine layer graph ----
+    let link = interconnect::pcie4();
+    let sys8 = SystemSpec::new(
+        chip::sn10(),
+        memory::ddr4(),
+        link.clone(),
+        topology::ring(8, &link),
+    );
+    let fine = gpt_layer_graph(&gpt3_175b(), 1.0);
+    let plans = interchip::enumerate_plans(&sys8.topology);
+    let plan8 = plans.iter().find(|p| p.tp == 8).unwrap().clone();
+    r.run("sharding_selection(fine layer, tp=8)", 2, 10, || {
+        let _ = interchip::optimizer::select_sharding(
+            &fine,
+            &sys8,
+            &plan8,
+            &InterChipOptions::default(),
+        );
+    });
+
+    // ---- inter-chip: full optimize on the coarse 1T graph, 1024 chips ----
+    let nv = interconnect::nvlink4();
+    let sys1024 = SystemSpec::new(
+        chip::h100(),
+        memory::hbm3(),
+        nv.clone(),
+        topology::torus2d(32, 32, &nv),
+    );
+    let coarse = gpt_coarse_graph(&gpt3_1t(), 1.0);
+    r.run("interchip_optimize(GPT3-1T coarse, 1024 chips)", 1, 3, || {
+        let _ = interchip::optimize(&coarse, &sys1024, &InterChipOptions::default());
+    });
+
+    // ---- intra-chip fusion DP on the sharded layer ----
+    let (sharded, net_time) =
+        interchip::shard_graph(&fine, &sys8, &plan8, &vec![1; fine.n_kernels()]);
+    r.run("intrachip_optimize(sharded layer, SN10)", 2, 10, || {
+        let _ = intrachip::optimize_intra(
+            &sharded,
+            &sys8.chip,
+            &sys8.memory,
+            &IntraChipOptions { net_time: net_time.clone(), ..Default::default() },
+        );
+    });
+
+    // ---- one LLM design point end to end ----
+    r.run("llm_design_point(GPT3-1T, 1024 H100)", 1, 3, || {
+        let _ = dfmodel::pipeline::llm_training(&gpt3_1t(), &sys1024, 2048.0);
+    });
+
+    // ---- the full 80-point LLM DSE sweep (the paper's headline run) ----
+    r.run("dse_sweep(GPT3-1T, 80 systems)", 0, 1, || {
+        let _ = dfmodel::dse::sweep(dfmodel::dse::Workload::Llm);
+    });
+
+    // ---- serving + spec-decode models (cheap, but tracked) ----
+    r.run("serving_grid(fig20)", 1, 5, || {
+        let _ = dfmodel::figures::serving_figs::fig20();
+    });
+
+    let _ = dfmodel::util::table::write_result("optimizer_perf.txt", &r.summary());
+    println!("\n{}", r.summary());
+}

@@ -1,0 +1,39 @@
+//! `cargo bench --bench paper_figures [-- <figure-id ...>|--all]`
+//!
+//! Regenerates every table and figure of the paper's evaluation (the full
+//! DESIGN.md per-experiment index), printing each and timing its
+//! generation. Output is also written to results/*.csv and the combined
+//! text to results/paper_figures.txt.
+
+use dfmodel::figures;
+use dfmodel::util::bench::Runner;
+use dfmodel::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    // cargo passes "--bench"; ignore it
+    let mut ids: Vec<String> = args
+        .positional
+        .iter()
+        .chain(args.subcommand.iter())
+        .filter(|s| *s != "--bench" && !s.starts_with("--"))
+        .cloned()
+        .collect();
+    if ids.is_empty() || args.has_flag("all") {
+        ids = figures::ALL.iter().map(|s| s.to_string()).collect();
+    }
+
+    let mut runner = Runner::new();
+    let mut combined = String::new();
+    for id in &ids {
+        let out = runner.run_once(&format!("figure::{id}"), || {
+            figures::generate(id).unwrap_or_else(|| format!("unknown figure '{id}'"))
+        });
+        println!("{out}");
+        combined.push_str(&format!("===== {id} =====\n{out}\n"));
+    }
+    combined.push_str("\n===== generation times =====\n");
+    combined.push_str(&runner.summary());
+    let _ = dfmodel::util::table::write_result("paper_figures.txt", &combined);
+    println!("\n{}", runner.summary());
+}

@@ -1,0 +1,301 @@
+//! Assignment matrices **A, B, D, L, H** (§III-B, Fig. 3, Eqs. 1–4).
+//!
+//! `A` assigns each kernel to exactly one partition (A·1 = 1). The derived
+//! matrices are computed with the paper's exact boolean formulations:
+//!
+//! * Eq. 1  B[j,:] = A[src,:] ∧ A[dst,:]          (intra-partition tensors)
+//! * Eq. 2  D[j,:] = A[src,:] ⊕ A[dst,:]          (cross-partition tensors)
+//! * Eq. 3  L[j,:] = (A[src]·U_src ⊕ A[dst]·U_dst) ⊕ (A[src] ∧ A[dst])
+//! * Eq. 4  H[j,:] = A[src,:]                     (source placement)
+//!
+//! The optimizers work on the compact form (`part[kernel] = partition`);
+//! the boolean matrices exist for model fidelity and are property-tested
+//! against the compact accessors.
+
+use crate::graph::DataflowGraph;
+
+/// A kernel→partition assignment (compact matrix A).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Assignment {
+    /// part[i] = partition of kernel i; every entry < p_max.
+    pub part: Vec<usize>,
+    pub p_max: usize,
+}
+
+pub type BoolMat = Vec<Vec<bool>>;
+
+impl Assignment {
+    pub fn new(part: Vec<usize>, p_max: usize) -> Self {
+        assert!(p_max >= 1);
+        assert!(part.iter().all(|&p| p < p_max), "partition index out of range");
+        Assignment { part, p_max }
+    }
+
+    /// All kernels in one partition.
+    pub fn single_partition(n: usize) -> Self {
+        Assignment { part: vec![0; n], p_max: 1 }
+    }
+
+    /// Each kernel in its own partition (the kernel-by-kernel mapping).
+    pub fn one_per_kernel(n: usize) -> Self {
+        Assignment { part: (0..n).collect(), p_max: n.max(1) }
+    }
+
+    /// Matrix A: [n × p_max] one-hot rows.
+    pub fn matrix_a(&self) -> BoolMat {
+        self.part
+            .iter()
+            .map(|&p| (0..self.p_max).map(|j| j == p).collect())
+            .collect()
+    }
+
+    /// Eq. 1 — matrix B: tensor j lives in partition p iff both endpoints do.
+    pub fn matrix_b(&self, g: &DataflowGraph) -> BoolMat {
+        g.tensors
+            .iter()
+            .map(|t| {
+                let (s, d) = (self.part[t.src.0], self.part[t.dst.0]);
+                (0..self.p_max).map(|p| s == p && d == p).collect()
+            })
+            .collect()
+    }
+
+    /// Eq. 2 — matrix D: XOR of the endpoint one-hots.
+    pub fn matrix_d(&self, g: &DataflowGraph) -> BoolMat {
+        g.tensors
+            .iter()
+            .map(|t| {
+                let (s, d) = (self.part[t.src.0], self.part[t.dst.0]);
+                (0..self.p_max).map(|p| (s == p) != (d == p)).collect()
+            })
+            .collect()
+    }
+
+    /// Eq. 3 — matrix L: lifetime of cross-partition tensors.
+    /// Computed with the paper's upper-triangular trick:
+    /// U_src[i,j] = i ≤ j, U_dst[i,j] = i < j.
+    pub fn matrix_l(&self, g: &DataflowGraph) -> BoolMat {
+        g.tensors
+            .iter()
+            .map(|t| {
+                let (s, d) = (self.part[t.src.0], self.part[t.dst.0]);
+                (0..self.p_max)
+                    .map(|p| {
+                        let src_prefix = s <= p; // (A[src] · U_src)[p]
+                        let dst_prefix = d < p; // (A[dst] · U_dst)[p]
+                        let within = s == p && d == p; // A[src] ∧ A[dst]
+                        (src_prefix != dst_prefix) != within
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Eq. 4 — matrix H: tensor placed with its producer.
+    pub fn matrix_h(&self, g: &DataflowGraph) -> BoolMat {
+        g.tensors
+            .iter()
+            .map(|t| {
+                let s = self.part[t.src.0];
+                (0..self.p_max).map(|p| s == p).collect()
+            })
+            .collect()
+    }
+
+    // ---- compact accessors used by the optimizers (must agree with the
+    // boolean matrices; see the property tests) ----
+
+    /// Tensor stays within a partition? Returns it.
+    pub fn intra_partition(&self, src: usize, dst: usize) -> Option<usize> {
+        let (s, d) = (self.part[src], self.part[dst]);
+        (s == d).then_some(s)
+    }
+
+    /// Partitions a cross-partition tensor occupies (Eq. 3 semantics):
+    /// inclusive [src, dst] when src ≤ dst; empty when within one partition.
+    pub fn lifetime(&self, src: usize, dst: usize) -> std::ops::Range<usize> {
+        let (s, d) = (self.part[src], self.part[dst]);
+        if s == d {
+            0..0
+        } else if s < d {
+            s..d + 1
+        } else {
+            // backward edge (does not occur under precedence-feasible
+            // assignments): Eq. 3's boolean algebra yields (dst, src) —
+            // exclusive of both endpoints' own partitions on the src side
+            d + 1..s
+        }
+    }
+
+    /// Kernels per partition.
+    pub fn members(&self) -> Vec<Vec<usize>> {
+        let mut m = vec![Vec::new(); self.p_max];
+        for (k, &p) in self.part.iter().enumerate() {
+            m[p].push(k);
+        }
+        m
+    }
+
+    /// Number of non-empty partitions.
+    pub fn n_used(&self) -> usize {
+        self.members().iter().filter(|m| !m.is_empty()).count()
+    }
+
+    /// Row-sum-1 invariant of matrix A (trivially true by construction for
+    /// the compact form; kept for the fidelity test).
+    pub fn check_one_hot(&self) -> bool {
+        self.matrix_a().iter().all(|row| row.iter().filter(|&&b| b).count() == 1)
+    }
+
+    /// Precedence feasibility: producers in earlier-or-equal partitions.
+    pub fn respects_precedence(&self, g: &DataflowGraph) -> bool {
+        g.tensors.iter().all(|t| self.part[t.src.0] <= self.part[t.dst.0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{GraphBuilder, KernelKind};
+    use crate::util::check::check;
+    use crate::util::prng::Rng;
+
+    fn diamond() -> DataflowGraph {
+        // a -> b, a -> c, b -> d, c -> d  (Fig. 3-like shape)
+        let mut b = GraphBuilder::new("diamond");
+        let ids: Vec<_> = (0..4)
+            .map(|i| {
+                b.kernel(
+                    &format!("k{i}"),
+                    KernelKind::Elementwise { elems: 1.0, flop_per_elem: 1.0 },
+                    0.0,
+                )
+            })
+            .collect();
+        b.tensor("ab", ids[0], ids[1], 8.0);
+        b.tensor("ac", ids[0], ids[2], 8.0);
+        b.tensor("bd", ids[1], ids[3], 8.0);
+        b.tensor("cd", ids[2], ids[3], 8.0);
+        b.build()
+    }
+
+    #[test]
+    fn matrix_a_one_hot() {
+        let a = Assignment::new(vec![0, 1, 1, 2], 4);
+        assert!(a.check_one_hot());
+        let m = a.matrix_a();
+        assert!(m[0][0] && m[1][1] && m[2][1] && m[3][2]);
+    }
+
+    #[test]
+    fn matrix_b_intra_partition() {
+        let g = diamond();
+        let a = Assignment::new(vec![0, 0, 1, 1], 2);
+        let b = a.matrix_b(&g);
+        // ab intra in partition 0; cd intra in partition 1; ac, bd cross
+        assert!(b[0][0] && !b[0][1]);
+        assert!(!b[1].iter().any(|&x| x));
+        assert!(!b[2].iter().any(|&x| x));
+        assert!(b[3][1]);
+    }
+
+    #[test]
+    fn matrix_d_cross_partition_xor() {
+        let g = diamond();
+        let a = Assignment::new(vec![0, 0, 1, 1], 2);
+        let d = a.matrix_d(&g);
+        // ac crosses 0 -> 1: D row = [1, 1]
+        assert_eq!(d[1], vec![true, true]);
+        // ab intra: all false
+        assert_eq!(d[0], vec![false, false]);
+    }
+
+    #[test]
+    fn matrix_l_lifetime_spans_inclusive() {
+        let g = diamond();
+        // a in p0, b in p1, c in p2, d in p3
+        let a = Assignment::new(vec![0, 1, 2, 3], 4);
+        let l = a.matrix_l(&g);
+        // tensor ac: 0 -> 2 must occupy partitions 0, 1, 2
+        assert_eq!(l[1], vec![true, true, true, false]);
+        // tensor bd: 1 -> 3 occupies 1, 2, 3
+        assert_eq!(l[2], vec![false, true, true, true]);
+    }
+
+    #[test]
+    fn matrix_l_empty_for_intra() {
+        let g = diamond();
+        let a = Assignment::new(vec![0, 0, 0, 0], 2);
+        let l = a.matrix_l(&g);
+        assert!(l.iter().all(|row| row.iter().all(|&x| !x)));
+    }
+
+    #[test]
+    fn matrix_h_source_placement() {
+        let g = diamond();
+        let a = Assignment::new(vec![0, 1, 1, 2], 3);
+        let h = a.matrix_h(&g);
+        assert!(h[0][0]); // ab placed with a
+        assert!(h[2][1]); // bd placed with b
+    }
+
+    #[test]
+    fn precedence_check() {
+        let g = diamond();
+        assert!(Assignment::new(vec![0, 1, 1, 2], 3).respects_precedence(&g));
+        assert!(!Assignment::new(vec![2, 1, 1, 0], 3).respects_precedence(&g));
+    }
+
+    #[test]
+    fn compact_lifetime_agrees_with_matrix_l() {
+        let g = diamond();
+        check("lifetime-agrees", 200, |rng: &mut Rng| {
+            let p_max = 1 + rng.below(6);
+            let part: Vec<usize> = (0..4).map(|_| rng.below(p_max)).collect();
+            let a = Assignment::new(part, p_max);
+            let l = a.matrix_l(&g);
+            for (j, t) in g.tensors.iter().enumerate() {
+                let range = a.lifetime(t.src.0, t.dst.0);
+                for p in 0..p_max {
+                    assert_eq!(
+                        l[j][p],
+                        range.contains(&p),
+                        "tensor {j} partition {p} assignment {:?}",
+                        a.part
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn b_and_d_are_disjoint_and_cover() {
+        let g = diamond();
+        check("b-d-disjoint", 200, |rng: &mut Rng| {
+            let p_max = 1 + rng.below(5);
+            let part: Vec<usize> = (0..4).map(|_| rng.below(p_max)).collect();
+            let a = Assignment::new(part, p_max);
+            let (b, d) = (a.matrix_b(&g), a.matrix_d(&g));
+            for j in 0..g.n_tensors() {
+                let b_any = b[j].iter().any(|&x| x);
+                let d_any = d[j].iter().any(|&x| x);
+                assert!(b_any != d_any, "tensor must be intra xor cross");
+                // D rows have exactly 0 or 2 set bits; B rows 0 or 1
+                let d_count = d[j].iter().filter(|&&x| x).count();
+                assert!(d_count == 0 || d_count == 2);
+                let b_count = b[j].iter().filter(|&&x| x).count();
+                assert!(b_count <= 1);
+            }
+        });
+    }
+
+    #[test]
+    fn members_partition_the_kernels() {
+        let a = Assignment::new(vec![1, 0, 1, 2], 3);
+        let m = a.members();
+        assert_eq!(m[0], vec![1]);
+        assert_eq!(m[1], vec![0, 2]);
+        assert_eq!(m[2], vec![3]);
+        assert_eq!(a.n_used(), 3);
+    }
+}

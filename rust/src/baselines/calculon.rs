@@ -1,0 +1,182 @@
+//! Calculon-like analytical model of LLM training (Isaev et al. [39]).
+//!
+//! Kernel-by-kernel (non-dataflow) execution: every kernel round-trips its
+//! operands through DRAM (Fig. 2D), per-kernel time is the roofline max of
+//! compute and memory, TP emits Megatron's two all-reduces per layer per
+//! pass, PP adds the pipeline bubble, DP adds the gradient all-reduce.
+
+use crate::graph::gpt::GptConfig;
+use crate::system::SystemSpec;
+
+/// Degrees + batch for one Calculon evaluation point.
+#[derive(Debug, Clone, Copy)]
+pub struct CalculonPoint {
+    pub tp: usize,
+    pub pp: usize,
+    pub dp: usize,
+    /// Global batch in sequences.
+    pub global_batch: f64,
+    /// Microbatch in sequences.
+    pub microbatch: f64,
+}
+
+/// Per-iteration latency breakdown (the Fig. 8 stacked bars).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CalculonBreakdown {
+    pub fwd: f64,
+    pub bwd: f64,
+    pub bubble: f64,
+    pub tp_comm: f64,
+    pub pp_comm: f64,
+    pub dp_comm: f64,
+}
+
+impl CalculonBreakdown {
+    pub fn total(&self) -> f64 {
+        self.fwd + self.bwd + self.bubble + self.tp_comm + self.pp_comm + self.dp_comm
+    }
+}
+
+/// Kernel-by-kernel achievable efficiency on a GEMM-heavy layer (matches
+/// Calculon's default achievable-MFU-style derate).
+pub const KBK_COMPUTE_EFF: f64 = 0.62;
+
+/// One training iteration under the Calculon model. Returns None when the
+/// per-chip training state exceeds DRAM capacity.
+pub fn iteration(
+    cfg: &GptConfig,
+    sys: &SystemSpec,
+    pt: &CalculonPoint,
+) -> Option<CalculonBreakdown> {
+    let (tp, pp, dp) = (pt.tp as f64, pt.pp as f64, pt.dp as f64);
+    assert_eq!(pt.tp * pt.pp * pt.dp, sys.n_chips(), "degrees must use all chips");
+
+    // memory capacity: weights + grads + optimizer state, sharded TP×PP
+    let state_bytes = cfg.params() * cfg.dtype_bytes * 8.0 / (tp * pp);
+    if state_bytes > sys.memory.capacity {
+        return None;
+    }
+
+    let layers_per_stage = (cfg.layers as f64 / pp).ceil();
+    let tokens_micro = pt.microbatch * cfg.seq;
+    let h = cfg.d_model;
+
+    // ---- per-layer forward: compute (roofline vs memory) ----
+    let flops_layer = (24.0 * h * h + 4.0 * cfg.seq * h) * tokens_micro / tp;
+    let t_comp = flops_layer / (sys.chip.compute_flops() * KBK_COMPUTE_EFF);
+    // kernel-by-kernel DRAM traffic: weights once + ~14 intermediate
+    // tensors read+written (2x), scores tensor pair dominates at long seq
+    let act = tokens_micro * h * cfg.dtype_bytes / tp;
+    let scores = pt.microbatch * cfg.n_heads * cfg.seq * cfg.seq * cfg.dtype_bytes / tp;
+    let weights_layer = 12.0 * h * h * cfg.dtype_bytes / tp;
+    let dram_layer = weights_layer + 2.0 * (12.0 * act + 2.0 * scores + 2.0 * act * 4.0);
+    let t_mem = dram_layer / sys.memory.bandwidth;
+    let t_layer_fwd = t_comp.max(t_mem);
+
+    // ---- TP communication: 2 all-reduces per layer per pass ----
+    // ring all-reduce over the TP group on the system's link tech
+    let ar_bytes = tokens_micro * h * cfg.dtype_bytes;
+    let t_ar = if pt.tp > 1 {
+        2.0 * (tp - 1.0) / tp * ar_bytes / sys.link.bandwidth
+    } else {
+        0.0
+    };
+    let tp_comm_layer = 2.0 * t_ar;
+
+    // ---- pipeline composition ----
+    let micro_count = (pt.global_batch / (dp * pt.microbatch)).max(1.0);
+    let stage_fwd = layers_per_stage * t_layer_fwd;
+    let stage_tp = layers_per_stage * tp_comm_layer;
+    let fwd = micro_count * stage_fwd;
+    let bwd = 2.0 * fwd;
+    let bubble = (pp - 1.0) * 3.0 * (stage_fwd + stage_tp);
+    let tp_comm = micro_count * stage_tp * 3.0;
+
+    // p2p activations between stages, fwd + bwd
+    let pp_comm = if pt.pp > 1 {
+        2.0 * micro_count * (act * tp) / sys.link.bandwidth / tp
+    } else {
+        0.0
+    };
+
+    // DP gradient all-reduce (exposed; Calculon reports it separately)
+    let dp_comm = if pt.dp > 1 {
+        let grad = cfg.params() * cfg.dtype_bytes / (tp * pp);
+        2.0 * (dp - 1.0) / dp * grad / sys.link.bandwidth
+    } else {
+        0.0
+    };
+
+    Some(CalculonBreakdown { fwd, bwd, bubble, tp_comm, pp_comm, dp_comm })
+}
+
+/// Achieved system FLOP/s utilization for a Calculon point.
+pub fn utilization(cfg: &GptConfig, sys: &SystemSpec, pt: &CalculonPoint) -> Option<f64> {
+    let b = iteration(cfg, sys, pt)?;
+    let tokens = pt.global_batch * cfg.seq;
+    let useful = cfg.train_flops_per_token() * tokens;
+    Some(useful / b.total() / sys.peak_flops())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gpt::gpt3_1t;
+    use crate::system::{chip, interconnect, memory, topology, SystemSpec};
+
+    fn a100_cluster(n: usize) -> SystemSpec {
+        let link = interconnect::nvlink4();
+        SystemSpec::new(
+            chip::a100(),
+            memory::hbm3(),
+            link.clone(),
+            topology::dgx1(n / 8, &link),
+        )
+    }
+
+    fn pt(tp: usize, pp: usize, dp: usize) -> CalculonPoint {
+        CalculonPoint { tp, pp, dp, global_batch: 2048.0, microbatch: 1.0 }
+    }
+
+    #[test]
+    fn more_pp_means_more_bubble() {
+        let cfg = gpt3_1t();
+        let sys = a100_cluster(1024);
+        let b1 = iteration(&cfg, &sys, &pt(8, 32, 4)).unwrap();
+        let b2 = iteration(&cfg, &sys, &pt(8, 64, 2)).unwrap();
+        assert!(b2.bubble > b1.bubble);
+    }
+
+    #[test]
+    fn tp_comm_grows_with_tp() {
+        let cfg = gpt3_1t();
+        let sys = a100_cluster(1024);
+        let b1 = iteration(&cfg, &sys, &pt(8, 32, 4)).unwrap();
+        let b2 = iteration(&cfg, &sys, &pt(32, 32, 1)).unwrap();
+        assert!(b2.tp_comm > b1.tp_comm);
+    }
+
+    #[test]
+    fn capacity_gate() {
+        let cfg = gpt3_1t();
+        let mut sys = a100_cluster(1024);
+        sys.memory.capacity = 1e9;
+        assert!(iteration(&cfg, &sys, &pt(8, 32, 4)).is_none());
+    }
+
+    #[test]
+    fn utilization_in_plausible_mfu_band() {
+        let cfg = gpt3_1t();
+        let sys = a100_cluster(1024);
+        let u = utilization(&cfg, &sys, &pt(8, 32, 4)).unwrap();
+        assert!(u > 0.1 && u < 0.62, "utilization {u}");
+    }
+
+    #[test]
+    fn bwd_is_twice_fwd() {
+        let cfg = gpt3_1t();
+        let sys = a100_cluster(1024);
+        let b = iteration(&cfg, &sys, &pt(8, 32, 4)).unwrap();
+        assert!((b.bwd / b.fwd - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,9 @@
+//! Reimplementations of the performance models DFModel is validated
+//! against (§VI-A, Figs 6–8): Calculon [39] (kernel-by-kernel LLM training
+//! co-design model) and Rail-Only [79] (reduced-connectivity network
+//! model). Both are *independent* analytical models — they share only the
+//! workload configs with the DFModel path, so the Fig. 7/8 error-margin
+//! comparisons are meaningful.
+
+pub mod calculon;
+pub mod railonly;

@@ -1,0 +1,241 @@
+//! Analytical collective-communication cost models (§IV-B.2), adapted from
+//! Thakur et al. [77] and BlueConnect [19], parameterized by the 1-D
+//! topology kind of each network dimension and composed hierarchically the
+//! ASTRA-sim way [71]: a collective over several dims runs phase-by-phase
+//! with per-phase shrinking payloads (reduce-scatter down, all-gather up).
+//!
+//! Conventions: `bytes` is the per-chip buffer size S; returned times are
+//! seconds = bandwidth term + latency (α) term.
+
+use crate::system::topology::{Dim, DimKind};
+
+/// Collective operations DFModel's sharding strategies emit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Collective {
+    AllReduce,
+    AllGather,
+    ReduceScatter,
+    Broadcast,
+    AllToAll,
+    /// Point-to-point between adjacent pipeline stages.
+    P2P,
+}
+
+/// Time for `coll` over one network dimension.
+pub fn time(coll: Collective, bytes: f64, dim: &Dim) -> f64 {
+    let k = dim.size as f64;
+    if dim.size <= 1 || bytes <= 0.0 {
+        return 0.0;
+    }
+    let b = dim.link_bw;
+    let a = dim.latency;
+    let frac = (k - 1.0) / k;
+    match (coll, dim.kind) {
+        // ---- ring (pipelined chunked algorithms) ----
+        (Collective::AllReduce, DimKind::Ring) => 2.0 * frac * bytes / b + 2.0 * (k - 1.0) * a,
+        (Collective::AllGather, DimKind::Ring)
+        | (Collective::ReduceScatter, DimKind::Ring)
+        | (Collective::Broadcast, DimKind::Ring) => frac * bytes / b + (k - 1.0) * a,
+        // bidirectional ring bisection limits all-to-all: average hop k/4
+        (Collective::AllToAll, DimKind::Ring) => bytes * k / (4.0 * b) + (k - 1.0) * a,
+        (Collective::P2P, DimKind::Ring) => bytes / b + a,
+
+        // ---- fully connected (direct algorithms use all k−1 links) ----
+        (Collective::AllReduce, DimKind::FullyConnected) => 2.0 * bytes / (k * b) + 2.0 * a,
+        (Collective::AllGather, DimKind::FullyConnected)
+        | (Collective::ReduceScatter, DimKind::FullyConnected) => bytes / (k * b) + a,
+        (Collective::Broadcast, DimKind::FullyConnected) => 2.0 * bytes / (k * b) + 2.0 * a,
+        (Collective::AllToAll, DimKind::FullyConnected) => bytes / (k * b) + a,
+        (Collective::P2P, DimKind::FullyConnected) => bytes / b + a,
+
+        // ---- switch (non-blocking crossbar, node-port limited) ----
+        (Collective::AllReduce, DimKind::Switch) => 2.0 * frac * bytes / b + 2.0 * a,
+        (Collective::AllGather, DimKind::Switch)
+        | (Collective::ReduceScatter, DimKind::Switch) => frac * bytes / b + a,
+        (Collective::Broadcast, DimKind::Switch) => bytes / b + a,
+        (Collective::AllToAll, DimKind::Switch) => frac * bytes / b + a,
+        (Collective::P2P, DimKind::Switch) => bytes / b + 2.0 * a,
+    }
+}
+
+/// Hierarchical collective over several dims (BlueConnect decomposition).
+///
+/// * AllReduce: reduce-scatter down the dims with payload shrinking by each
+///   dim's size, then all-gather back up — the payload seen by dim i is
+///   S / Π_{j<i} k_j.
+/// * AllGather / ReduceScatter / Broadcast: phase per dim with shrinking
+///   (resp. growing) payloads.
+/// * AllToAll: payload stays S per phase (every chip still exchanges its
+///   full buffer within each dim).
+pub fn time_hier(coll: Collective, bytes: f64, dims: &[&Dim]) -> f64 {
+    let active: Vec<&Dim> = dims.iter().copied().filter(|d| d.size > 1).collect();
+    if active.is_empty() || bytes <= 0.0 {
+        return 0.0;
+    }
+    match coll {
+        Collective::AllReduce => {
+            let mut t = 0.0;
+            let mut payload = bytes;
+            // reduce-scatter down
+            for d in &active {
+                t += time(Collective::ReduceScatter, payload, d);
+                payload /= d.size as f64;
+            }
+            // all-gather up
+            for d in active.iter().rev() {
+                payload *= d.size as f64;
+                t += time(Collective::AllGather, payload, d);
+            }
+            t
+        }
+        Collective::ReduceScatter => {
+            let mut t = 0.0;
+            let mut payload = bytes;
+            for d in &active {
+                t += time(Collective::ReduceScatter, payload, d);
+                payload /= d.size as f64;
+            }
+            t
+        }
+        Collective::AllGather => {
+            let total: f64 = active.iter().map(|d| d.size as f64).product();
+            let mut payload = bytes / total;
+            let mut t = 0.0;
+            for d in active.iter().rev() {
+                payload *= d.size as f64;
+                t += time(Collective::AllGather, payload, d);
+            }
+            t
+        }
+        Collective::Broadcast => {
+            active.iter().map(|d| time(Collective::Broadcast, bytes, d)).sum()
+        }
+        Collective::AllToAll => {
+            active.iter().map(|d| time(Collective::AllToAll, bytes, d)).sum()
+        }
+        Collective::P2P => {
+            // one hop through the slowest dim on the path
+            active
+                .iter()
+                .map(|d| time(Collective::P2P, bytes, d))
+                .fold(0.0f64, f64::max)
+        }
+    }
+}
+
+/// Effective chips participating across dims.
+pub fn group_size(dims: &[&Dim]) -> usize {
+    dims.iter().map(|d| d.size).product()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::system::interconnect::{nvlink4, pcie4};
+    use crate::system::topology::{Dim, DimKind};
+
+    fn ring(k: usize) -> Dim {
+        Dim::new(DimKind::Ring, k, &nvlink4())
+    }
+    fn fc(k: usize) -> Dim {
+        Dim::new(DimKind::FullyConnected, k, &nvlink4())
+    }
+    fn sw(k: usize) -> Dim {
+        Dim::new(DimKind::Switch, k, &nvlink4())
+    }
+
+    #[test]
+    fn single_chip_is_free() {
+        for coll in [
+            Collective::AllReduce,
+            Collective::AllGather,
+            Collective::AllToAll,
+            Collective::Broadcast,
+        ] {
+            assert_eq!(time(coll, 1e9, &ring(1)), 0.0);
+        }
+    }
+
+    #[test]
+    fn ring_allreduce_matches_2x_bandwidth_rule() {
+        let d = ring(8);
+        let s = 1e9;
+        let t = time(Collective::AllReduce, s, &d);
+        let bw_term = 2.0 * (7.0 / 8.0) * s / d.link_bw;
+        assert!((t - bw_term) < 16.0 * d.latency + 1e-12);
+        assert!(t >= bw_term);
+    }
+
+    #[test]
+    fn allreduce_is_twice_allgather_bandwidth() {
+        let d = ring(16);
+        let s = 1e8;
+        let ar = time(Collective::AllReduce, s, &d);
+        let ag = time(Collective::AllGather, s, &d);
+        assert!((ar / ag - 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn fc_alltoall_beats_ring_alltoall() {
+        let s = 1e9;
+        let t_ring = time(Collective::AllToAll, s, &ring(32));
+        let t_fc = time(Collective::AllToAll, s, &fc(32));
+        // direct links give ~k²/4 advantage over the ring bisection
+        assert!(t_ring / t_fc > 50.0, "ring {t_ring} fc {t_fc}");
+    }
+
+    #[test]
+    fn switch_alltoall_between_ring_and_fc() {
+        let s = 1e9;
+        let t_ring = time(Collective::AllToAll, s, &ring(32));
+        let t_sw = time(Collective::AllToAll, s, &sw(32));
+        let t_fc = time(Collective::AllToAll, s, &fc(32));
+        assert!(t_fc < t_sw && t_sw < t_ring);
+    }
+
+    #[test]
+    fn hierarchical_allreduce_less_than_flat_ring() {
+        // 1024 chips: 32×32 hierarchical vs one 1024-ring — the hierarchy
+        // cuts the latency term and the second-phase payload
+        let d1 = ring(32);
+        let d2 = ring(32);
+        let flat = ring(1024);
+        let s = 1e9;
+        let hier = time_hier(Collective::AllReduce, s, &[&d1, &d2]);
+        let one = time(Collective::AllReduce, s, &flat);
+        assert!(hier < one, "hier {hier} flat {one}");
+    }
+
+    #[test]
+    fn hier_allreduce_on_single_dim_equals_flat() {
+        let d = ring(8);
+        let s = 1e9;
+        let a = time_hier(Collective::AllReduce, s, &[&d]);
+        let b = time(Collective::ReduceScatter, s, &d) + time(Collective::AllGather, s, &d);
+        assert!((a - b).abs() < 1e-15);
+    }
+
+    #[test]
+    fn slower_links_cost_more() {
+        let fast = Dim::new(DimKind::Ring, 8, &nvlink4());
+        let slow = Dim::new(DimKind::Ring, 8, &pcie4());
+        let s = 1e9;
+        let r = time(Collective::AllReduce, s, &slow) / time(Collective::AllReduce, s, &fast);
+        // 900/25 = 36× bandwidth ratio dominates
+        assert!(r > 30.0, "ratio {r}");
+    }
+
+    #[test]
+    fn p2p_picks_slowest_hop() {
+        let d1 = Dim::new(DimKind::Ring, 8, &nvlink4());
+        let d2 = Dim::new(DimKind::Ring, 8, &pcie4());
+        let t = time_hier(Collective::P2P, 1e6, &[&d1, &d2]);
+        assert!((t - time(Collective::P2P, 1e6, &d2)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn group_size_products() {
+        let (a, b) = (ring(4), sw(8));
+        assert_eq!(group_size(&[&a, &b]), 32);
+    }
+}

@@ -1,0 +1,292 @@
+//! JSON experiment configuration: declarative (workload, system, options)
+//! specs so sweeps and one-off studies are launchable without recompiling —
+//! `dfmodel run --config exp.json`.
+//!
+//! Schema (all sections optional where a default exists):
+//! ```json
+//! {
+//!   "workload": {"kind": "gpt", "model": "gpt3-175b", "batch": 64},
+//!   "system": {
+//!     "chip": "sn10", "memory": "ddr4", "link": "pcie4",
+//!     "topology": {"kind": "ring", "dims": [8]}
+//!   },
+//!   "options": {"force_tp": 8, "force_pp": 1, "force_dp": 1,
+//!                "state_bytes_per_weight_byte": 8.0}
+//! }
+//! ```
+
+use crate::graph::{dlrm, fft, gpt, hpl, DataflowGraph};
+use crate::interchip::InterChipOptions;
+use crate::system::{chip, interconnect, memory, topology, ChipSpec, SystemSpec};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+
+/// A parsed experiment specification.
+#[derive(Debug, Clone)]
+pub struct Experiment {
+    pub workload: WorkloadSpec,
+    pub system: SystemSpec,
+    pub options: InterChipOptions,
+}
+
+#[derive(Debug, Clone)]
+pub enum WorkloadSpec {
+    /// LLM training: model config + global batch.
+    Gpt { cfg: gpt::GptConfig, batch: f64 },
+    /// Single/multi-pass graphs.
+    Graph { graph: DataflowGraph, passes: f64, max_dp: usize },
+}
+
+impl Experiment {
+    pub fn parse(text: &str) -> Result<Experiment> {
+        let j = Json::parse(text).map_err(|e| anyhow!("config: {e}"))?;
+        let workload = parse_workload(j.get("workload").unwrap_or(&Json::Null))?;
+        let system = parse_system(j.get("system").unwrap_or(&Json::Null))?;
+        let options = parse_options(j.get("options").unwrap_or(&Json::Null))?;
+        Ok(Experiment { workload, system, options })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Experiment> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("read {}: {e}", path.display()))?;
+        Experiment::parse(&text)
+    }
+
+    /// Run the experiment and return a machine-readable result object.
+    pub fn run(&self) -> Result<Json> {
+        let result = match &self.workload {
+            WorkloadSpec::Gpt { cfg, batch } => {
+                crate::pipeline::llm_training_opts(cfg, &self.system, *batch, &self.options)
+            }
+            WorkloadSpec::Graph { graph, passes, max_dp } => {
+                crate::pipeline::workload_pass(graph, &self.system, *passes, *max_dp)
+            }
+        };
+        let Some(r) = result else {
+            return Ok(Json::obj(vec![("feasible", Json::Bool(false))]));
+        };
+        let (c, m, n) = r.breakdown_frac();
+        Ok(Json::obj(vec![
+            ("feasible", Json::Bool(true)),
+            ("system", Json::from(self.system.describe())),
+            ("tp", Json::from(r.tp)),
+            ("pp", Json::from(r.pp)),
+            ("dp", Json::from(r.dp)),
+            ("step_time_s", Json::from(r.step_time)),
+            ("utilization", Json::from(r.utilization)),
+            ("achieved_flops", Json::from(r.achieved_flops)),
+            (
+                "breakdown",
+                Json::obj(vec![
+                    ("compute", Json::from(c)),
+                    ("memory", Json::from(m)),
+                    ("network", Json::from(n)),
+                ]),
+            ),
+            ("price_usd", Json::from(self.system.price_usd())),
+            ("power_w", Json::from(self.system.power_w())),
+        ]))
+    }
+}
+
+fn parse_workload(j: &Json) -> Result<WorkloadSpec> {
+    let kind = j.get("kind").and_then(|v| v.as_str()).unwrap_or("gpt");
+    match kind {
+        "gpt" => {
+            let model = j.get("model").and_then(|v| v.as_str()).unwrap_or("gpt3-175b");
+            let cfg = match model {
+                "gpt3-175b" => gpt::gpt3_175b(),
+                "gpt3-1t" => gpt::gpt3_1t(),
+                "gpt-100t" => gpt::gpt_100t(),
+                "custom" => gpt::GptConfig {
+                    layers: j.get("layers").and_then(|v| v.as_usize()).unwrap_or(96),
+                    d_model: j.get("d_model").and_then(|v| v.as_f64()).unwrap_or(12288.0),
+                    n_heads: j.get("n_heads").and_then(|v| v.as_f64()).unwrap_or(96.0),
+                    seq: j.get("seq").and_then(|v| v.as_f64()).unwrap_or(2048.0),
+                    d_ff: j.get("d_ff").and_then(|v| v.as_f64()).unwrap_or(4.0 * 12288.0),
+                    vocab: j.get("vocab").and_then(|v| v.as_f64()).unwrap_or(50257.0),
+                    dtype_bytes: j.get("dtype_bytes").and_then(|v| v.as_f64()).unwrap_or(2.0),
+                },
+                other => bail!("unknown gpt model '{other}'"),
+            };
+            let batch = j.get("batch").and_then(|v| v.as_f64()).unwrap_or(64.0);
+            Ok(WorkloadSpec::Gpt { cfg, batch })
+        }
+        "dlrm" => {
+            let batch = j.get("batch").and_then(|v| v.as_f64()).unwrap_or(65_536.0);
+            Ok(WorkloadSpec::Graph {
+                graph: dlrm::dlrm_graph(&dlrm::dlrm_793b(), batch),
+                passes: 3.0,
+                max_dp: j.get("max_dp").and_then(|v| v.as_usize()).unwrap_or(64),
+            })
+        }
+        "hpl" => Ok(WorkloadSpec::Graph {
+            graph: hpl::hpl_graph(&hpl::hpl_5m()),
+            passes: 1.0,
+            max_dp: 1,
+        }),
+        "fft" => Ok(WorkloadSpec::Graph {
+            graph: fft::fft_graph(&fft::fft_1t()),
+            passes: 1.0,
+            max_dp: 1,
+        }),
+        "moe" => {
+            let cfg = crate::graph::moe::moe_gpt_1t();
+            let batch = j.get("batch").and_then(|v| v.as_f64()).unwrap_or(1.0);
+            Ok(WorkloadSpec::Graph {
+                graph: crate::graph::moe::moe_layer_graph(&cfg, batch),
+                passes: 3.0,
+                max_dp: j.get("max_dp").and_then(|v| v.as_usize()).unwrap_or(64),
+            })
+        }
+        other => bail!("unknown workload kind '{other}'"),
+    }
+}
+
+fn parse_chip(name: &str) -> Result<ChipSpec> {
+    Ok(match name {
+        "h100" => chip::h100(),
+        "a100" => chip::a100(),
+        "tpuv4" => chip::tpu_v4(),
+        "sn10" => chip::sn10(),
+        "sn30" => chip::sn30(),
+        "sn40l" => chip::sn40l(),
+        "wse2" => chip::wse2(),
+        other => bail!("unknown chip '{other}'"),
+    })
+}
+
+fn parse_system(j: &Json) -> Result<SystemSpec> {
+    let c = parse_chip(j.get("chip").and_then(|v| v.as_str()).unwrap_or("sn10"))?;
+    let mem = match j.get("memory").and_then(|v| v.as_str()).unwrap_or("ddr4") {
+        "ddr4" => memory::ddr4(),
+        "hbm3" => memory::hbm3(),
+        "2d-ddr" => memory::mem2d_ddr(),
+        "2.5d-hbm" => memory::mem25d_hbm(),
+        "3d-stacked" => memory::mem3d_stacked(),
+        other => bail!("unknown memory '{other}'"),
+    };
+    let link = match j.get("link").and_then(|v| v.as_str()).unwrap_or("pcie4") {
+        "pcie4" => interconnect::pcie4(),
+        "nvlink4" => interconnect::nvlink4(),
+        "rdu" => interconnect::rdu_fabric(),
+        other => bail!("unknown link '{other}'"),
+    };
+    let t = j.get("topology").unwrap_or(&Json::Null);
+    let kind = t.get("kind").and_then(|v| v.as_str()).unwrap_or("ring");
+    let dims: Vec<usize> = t
+        .get("dims")
+        .and_then(|v| v.as_array())
+        .map(|a| a.iter().filter_map(|d| d.as_usize()).collect())
+        .unwrap_or_else(|| vec![8]);
+    let topo = match (kind, dims.as_slice()) {
+        ("ring", [n]) => topology::ring(*n, &link),
+        ("torus2d", [x, y]) => topology::torus2d(*x, *y, &link),
+        ("torus3d", [x, y, z]) => topology::torus3d(*x, *y, *z, &link),
+        ("dragonfly", [g, n]) => topology::dragonfly(*g, *n, &link),
+        ("dgx1", [n]) => topology::dgx1(*n, &link),
+        ("dgx2", [n]) => topology::dgx2(*n, &link),
+        (k, d) => bail!("bad topology {k} with dims {d:?}"),
+    };
+    Ok(SystemSpec::new(c, mem, link, topo))
+}
+
+fn parse_options(j: &Json) -> Result<InterChipOptions> {
+    let mut o = InterChipOptions::default();
+    if let Some(v) = j.get("state_bytes_per_weight_byte").and_then(|v| v.as_f64()) {
+        o.state_bytes_per_weight_byte = v;
+    }
+    let tp = j.get("force_tp").and_then(|v| v.as_usize());
+    let pp = j.get("force_pp").and_then(|v| v.as_usize());
+    let dp = j.get("force_dp").and_then(|v| v.as_usize());
+    if let (Some(tp), Some(pp), Some(dp)) = (tp, pp, dp) {
+        o.force_degrees = Some((tp, pp, dp));
+    } else if tp.is_some() || pp.is_some() || dp.is_some() {
+        bail!("force_tp/force_pp/force_dp must be given together");
+    }
+    if let Some(v) = j.get("max_pp").and_then(|v| v.as_usize()) {
+        o.max_pp = v;
+    }
+    if let Some(v) = j.get("max_dp").and_then(|v| v.as_usize()) {
+        o.max_dp = v;
+    }
+    Ok(o)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "workload": {"kind": "gpt", "model": "gpt3-175b", "batch": 64},
+      "system": {"chip": "sn10", "memory": "ddr4", "link": "pcie4",
+                 "topology": {"kind": "ring", "dims": [8]}},
+      "options": {"force_tp": 8, "force_pp": 1, "force_dp": 1}
+    }"#;
+
+    #[test]
+    fn parses_and_runs_sample() {
+        let e = Experiment::parse(SAMPLE).unwrap();
+        assert_eq!(e.system.n_chips(), 8);
+        assert_eq!(e.options.force_degrees, Some((8, 1, 1)));
+        let r = e.run().unwrap();
+        assert_eq!(r.get("feasible"), Some(&Json::Bool(true)));
+        assert_eq!(r.get("tp").unwrap().as_usize(), Some(8));
+        assert!(r.get("utilization").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        let e = Experiment::parse("{}").unwrap();
+        assert_eq!(e.system.n_chips(), 8);
+        matches!(e.workload, WorkloadSpec::Gpt { .. });
+    }
+
+    #[test]
+    fn topology_variants_parse() {
+        for (k, d, n) in [
+            ("torus2d", "[4, 2]", 8),
+            ("torus3d", "[2, 2, 2]", 8),
+            ("dragonfly", "[4, 4]", 16),
+            ("dgx1", "[4]", 32),
+            ("dgx2", "[2]", 32),
+        ] {
+            let cfg = format!(
+                r#"{{"system": {{"topology": {{"kind": "{k}", "dims": {d}}}}}}}"#
+            );
+            let e = Experiment::parse(&cfg).unwrap();
+            assert_eq!(e.system.n_chips(), n, "{k}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        assert!(Experiment::parse(r#"{"system": {"chip": "zz80"}}"#).is_err());
+        assert!(Experiment::parse(r#"{"workload": {"kind": "prolog"}}"#).is_err());
+        assert!(
+            Experiment::parse(r#"{"options": {"force_tp": 8}}"#).is_err(),
+            "partial force degrees must be rejected"
+        );
+        assert!(Experiment::parse("not json").is_err());
+    }
+
+    #[test]
+    fn non_gpt_workloads_parse() {
+        for kind in ["dlrm", "hpl", "fft", "moe"] {
+            let cfg = format!(r#"{{"workload": {{"kind": "{kind}"}}}}"#);
+            let e = Experiment::parse(&cfg).unwrap();
+            matches!(e.workload, WorkloadSpec::Graph { .. });
+        }
+    }
+
+    #[test]
+    fn infeasible_run_reports_cleanly() {
+        let cfg = r#"{
+          "workload": {"kind": "gpt", "model": "gpt-100t"},
+          "system": {"chip": "sn10", "topology": {"kind": "ring", "dims": [2]}}
+        }"#;
+        let e = Experiment::parse(cfg).unwrap();
+        let r = e.run().unwrap();
+        assert_eq!(r.get("feasible"), Some(&Json::Bool(false)));
+    }
+}

@@ -1,0 +1,338 @@
+//! Design-space exploration (§VI-C): the cartesian sweep over accelerators
+//! (Table V) × interconnection topologies × memory/interconnect
+//! technologies, evaluated for the four workloads — the data behind the
+//! Figs 10–17 heat maps and latency breakdowns — plus the Fig. 19
+//! SRAM×DRAM-bandwidth sweep and the Fig. 22 3-D-memory sweep.
+
+use crate::graph::{dlrm, fft, gpt, hpl};
+use crate::pipeline;
+use crate::system::{chip, interconnect, memory, topology, ChipSpec, SystemSpec};
+use crate::util::threadpool::parallel_map;
+
+/// The four evaluated workloads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Workload {
+    /// GPT3 1T training.
+    Llm,
+    /// 793B DLRM training iteration.
+    Dlrm,
+    /// 5M² HPL solve.
+    Hpl,
+    /// 1T-point FFT.
+    Fft,
+}
+
+impl Workload {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Workload::Llm => "GPT3-1T",
+            Workload::Dlrm => "DLRM-793B",
+            Workload::Hpl => "HPL-5M",
+            Workload::Fft => "FFT-1T",
+        }
+    }
+
+    pub fn all() -> [Workload; 4] {
+        [Workload::Llm, Workload::Dlrm, Workload::Hpl, Workload::Fft]
+    }
+}
+
+/// One evaluated design point.
+#[derive(Debug, Clone)]
+pub struct DesignPoint {
+    pub chip: String,
+    pub topo: String,
+    pub mem: String,
+    pub link: String,
+    /// Throughput utilization (achieved / peak).
+    pub utilization: f64,
+    /// Achieved GFLOP/s per dollar.
+    pub cost_eff: f64,
+    /// Achieved GFLOP/s per watt.
+    pub power_eff: f64,
+    /// (compute, memory, network) fractional latency breakdown.
+    pub breakdown: (f64, f64, f64),
+}
+
+/// Evaluate one workload on one system; None when infeasible.
+pub fn evaluate_point(w: Workload, sys: &SystemSpec) -> Option<DesignPoint> {
+    let r = match w {
+        Workload::Llm => pipeline::llm_training(&gpt::gpt3_1t(), sys, 2048.0)?,
+        Workload::Dlrm => {
+            let g = dlrm::dlrm_graph(&dlrm::dlrm_793b(), 65_536.0);
+            pipeline::workload_pass(&g, sys, 3.0, 64)?
+        }
+        Workload::Hpl => {
+            let g = hpl::hpl_graph(&hpl::hpl_5m());
+            pipeline::workload_pass(&g, sys, 1.0, 1)?
+        }
+        Workload::Fft => {
+            let g = fft::fft_graph(&fft::fft_1t());
+            pipeline::workload_pass(&g, sys, 1.0, 1)?
+        }
+    };
+    Some(DesignPoint {
+        chip: sys.chip.name.clone(),
+        topo: sys.topology.name.clone(),
+        mem: sys.memory.name.clone(),
+        link: sys.link.name.clone(),
+        utilization: r.utilization,
+        cost_eff: r.achieved_flops / 1e9 / sys.price_usd(),
+        power_eff: r.achieved_flops / 1e9 / sys.power_w(),
+        breakdown: r.breakdown_frac(),
+    })
+}
+
+/// The 4 memory × interconnect combinations of §VI-C.
+pub fn mem_link_combos() -> Vec<(memory::MemoryTech, interconnect::LinkTech)> {
+    vec![
+        (memory::ddr4(), interconnect::pcie4()),
+        (memory::ddr4(), interconnect::nvlink4()),
+        (memory::hbm3(), interconnect::pcie4()),
+        (memory::hbm3(), interconnect::nvlink4()),
+    ]
+}
+
+/// All 80 system specs of the §VI-C design space (4 chips × 5 topologies ×
+/// 4 mem/link combos) at 1024 accelerators.
+pub fn dse_systems_1024() -> Vec<SystemSpec> {
+    let mut out = Vec::new();
+    for c in chip::table_v() {
+        for (mem, link) in mem_link_combos() {
+            for topo in topology::dse_topologies_1024(&link) {
+                out.push(SystemSpec::new(c.clone(), mem.clone(), link.clone(), topo));
+            }
+        }
+    }
+    out
+}
+
+/// Run the full sweep for one workload (parallel across design points).
+/// Infeasible points are reported with NaN utilization so heat maps show
+/// the gap.
+pub fn sweep(w: Workload) -> Vec<DesignPoint> {
+    let systems = dse_systems_1024();
+    parallel_map(&systems, |sys| {
+        evaluate_point(w, sys).unwrap_or(DesignPoint {
+            chip: sys.chip.name.clone(),
+            topo: sys.topology.name.clone(),
+            mem: sys.memory.name.clone(),
+            link: sys.link.name.clone(),
+            utilization: f64::NAN,
+            cost_eff: f64::NAN,
+            power_eff: f64::NAN,
+            breakdown: (f64::NAN, f64::NAN, f64::NAN),
+        })
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 19: dataflow vs non-dataflow across SRAM capacity × DRAM bandwidth.
+// ---------------------------------------------------------------------------
+
+/// One Fig. 19 cell: utilizations of the dataflow and non-dataflow mapping.
+#[derive(Debug, Clone)]
+pub struct Fig19Cell {
+    pub sram_mb: f64,
+    pub dram_gbs: f64,
+    pub dataflow_util: f64,
+    pub non_dataflow_util: f64,
+}
+
+/// The Fig. 19 experiment: GPT3 175B on 8 accelerators (4×2 torus),
+/// 300 TFLOPS chips; sweep SRAM {150, 300, 500} MB × DRAM bw
+/// {100, 300, 600} GB/s.
+pub fn fig19_sweep() -> Vec<Fig19Cell> {
+    use crate::util::units::{GB, MB, TFLOPS};
+    let cfg = gpt::gpt3_175b();
+    let link = interconnect::pcie4();
+    let mut cells = Vec::new();
+    for &sram in &[150.0, 300.0, 500.0] {
+        for &bw in &[100.0, 300.0, 600.0] {
+            let run = |exec| {
+                let c = chip::custom("sweep", 300.0 * TFLOPS, sram * MB, exec);
+                let mut mem = memory::ddr4();
+                mem.bandwidth = bw * GB;
+                let sys = SystemSpec::new(c, mem, link.clone(), topology::torus2d(4, 2, &link));
+                pipeline::llm_training(&cfg, &sys, 64.0).map(|r| r.utilization)
+            };
+            let df = run(crate::system::ExecutionModel::Dataflow).unwrap_or(f64::NAN);
+            let kbk = run(crate::system::ExecutionModel::KernelByKernel).unwrap_or(f64::NAN);
+            cells.push(Fig19Cell {
+                sram_mb: sram,
+                dram_gbs: bw,
+                dataflow_util: df,
+                non_dataflow_util: kbk,
+            });
+        }
+    }
+    cells
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 22: 3-D memory — compute-tile percentage sweep on a 100T GPT model.
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Fig22Cell {
+    pub mem_name: String,
+    pub compute_pct: f64,
+    /// Achieved training throughput (FLOP/s) across the system.
+    pub achieved: f64,
+}
+
+/// SN40L-like chip with 2080 iso-area units split between compute tiles and
+/// SRAM units (§VIII-C).
+fn unit_chip(compute_pct: f64) -> ChipSpec {
+    use crate::util::units::{MB, TFLOPS};
+    let units = 2080.0;
+    let compute_units = (units * compute_pct).round();
+    let mem_units = units - compute_units;
+    // calibration: 1040 compute units = 640 TFLOPS; 1040 mem units = 520 MB
+    let flops = 640.0 * TFLOPS * compute_units / 1040.0;
+    let sram = 520.0 * MB * mem_units / 1040.0;
+    ChipSpec {
+        name: format!("SN40L-{:.0}%", compute_pct * 100.0),
+        tiles: compute_units.max(1.0) as usize,
+        tflop_per_tile: flops / compute_units.max(1.0),
+        sram_bytes: sram.max(1.0),
+        execution: crate::system::ExecutionModel::Dataflow,
+        power_w: 500.0,
+        price_usd: 28_000.0,
+    }
+}
+
+/// Sweep compute percentage {20..80%} × three memory generations on 1024
+/// chips training the 100T model.
+pub fn fig22_sweep() -> Vec<Fig22Cell> {
+    let cfg = gpt::gpt_100t();
+    let mems =
+        [memory::mem2d_ddr(), memory::mem25d_hbm(), memory::mem3d_stacked()];
+    let link = interconnect::rdu_fabric();
+    let mut out = Vec::new();
+    for mem in &mems {
+        for pct in [0.2, 0.35, 0.5, 0.65, 0.8] {
+            let c = unit_chip(pct);
+            // §VIII-C studies memory *bandwidth*: capacity is provisioned
+            // (SN40L pairs the fast tier with large DDR) and only bf16
+            // weights stay resident (state factor 2).
+            let mut mem = mem.clone();
+            mem.capacity = 1e12;
+            let sys = SystemSpec::new(
+                c,
+                mem.clone(),
+                link.clone(),
+                topology::torus2d(32, 32, &link),
+            );
+            let opts = crate::interchip::InterChipOptions {
+                state_bytes_per_weight_byte: 2.0,
+                ..Default::default()
+            };
+            let achieved = pipeline::llm_training_opts(&cfg, &sys, 4096.0, &opts)
+                .map(|r| r.achieved_flops)
+                .unwrap_or(f64::NAN);
+            out.push(Fig22Cell { mem_name: mem.name.clone(), compute_pct: pct, achieved });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn design_space_has_80_points() {
+        assert_eq!(dse_systems_1024().len(), 80);
+        for s in dse_systems_1024() {
+            assert_eq!(s.n_chips(), 1024);
+        }
+    }
+
+    #[test]
+    fn llm_point_evaluates_on_good_system() {
+        let link = interconnect::nvlink4();
+        let sys = SystemSpec::new(
+            chip::h100(),
+            memory::hbm3(),
+            link.clone(),
+            topology::torus2d(32, 32, &link),
+        );
+        let p = evaluate_point(Workload::Llm, &sys).expect("feasible");
+        assert!(p.utilization > 0.0 && p.utilization <= 1.0);
+        assert!(p.cost_eff > 0.0 && p.power_eff > 0.0);
+    }
+
+    #[test]
+    fn fft_needs_fast_network() {
+        // §VI-C.4: NVLink systems beat PCIe systems by a large factor
+        let mk = |link: interconnect::LinkTech| {
+            SystemSpec::new(
+                chip::tpu_v4(),
+                memory::hbm3(),
+                link.clone(),
+                topology::torus2d(32, 32, &link),
+            )
+        };
+        let fast = evaluate_point(Workload::Fft, &mk(interconnect::nvlink4())).unwrap();
+        let slow = evaluate_point(Workload::Fft, &mk(interconnect::pcie4())).unwrap();
+        assert!(
+            fast.utilization / slow.utilization > 3.0,
+            "nvlink {} vs pcie {}",
+            fast.utilization,
+            slow.utilization
+        );
+    }
+
+    #[test]
+    fn hpl_high_utilization_everywhere() {
+        // §VI-C.3: HPL is dense — even PCIe+DDR systems do well
+        let link = interconnect::pcie4();
+        let sys = SystemSpec::new(
+            chip::tpu_v4(),
+            memory::ddr4(),
+            link.clone(),
+            topology::torus2d(32, 32, &link),
+        );
+        let p = evaluate_point(Workload::Hpl, &sys).unwrap();
+        assert!(p.utilization > 0.5, "HPL util = {}", p.utilization);
+    }
+
+    #[test]
+    fn fig19_grid_shape_and_trends() {
+        let cells = fig19_sweep();
+        assert_eq!(cells.len(), 9);
+        // dataflow is an upper bound of non-dataflow everywhere (§VII-E)
+        for c in &cells {
+            if c.dataflow_util.is_finite() && c.non_dataflow_util.is_finite() {
+                assert!(
+                    c.dataflow_util >= c.non_dataflow_util * 0.999,
+                    "{c:?}"
+                );
+            }
+        }
+        // non-dataflow gains from DRAM bandwidth at fixed SRAM
+        let small_bw = cells.iter().find(|c| c.sram_mb == 300.0 && c.dram_gbs == 100.0).unwrap();
+        let big_bw = cells.iter().find(|c| c.sram_mb == 300.0 && c.dram_gbs == 600.0).unwrap();
+        assert!(big_bw.non_dataflow_util > small_bw.non_dataflow_util);
+    }
+
+    #[test]
+    fn fig22_3d_memory_prefers_more_compute() {
+        let cells = fig22_sweep();
+        let best_for = |mem: &str| {
+            cells
+                .iter()
+                .filter(|c| c.mem_name == mem && c.achieved.is_finite())
+                .max_by(|a, b| a.achieved.total_cmp(&b.achieved))
+                .map(|c| c.compute_pct)
+                .unwrap_or(f64::NAN)
+        };
+        let b2d = best_for("2D-DDR");
+        let b3d = best_for("3D-stacked");
+        assert!(
+            b3d >= b2d,
+            "3D memory should prefer >= compute fraction: 2D {b2d} 3D {b3d}"
+        );
+    }
+}

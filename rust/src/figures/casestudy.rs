@@ -1,0 +1,276 @@
+//! §VII case study: GPT3 175B on eight SN10 RDUs — Fig. 18 (hierarchical
+//! roofline of four mappings), Table VI (speedup chain), Fig. 19
+//! (dataflow vs non-dataflow over the SRAM × DRAM-bandwidth space).
+
+use crate::graph::gpt::{self, GptConfig};
+use crate::interchip::{self, InterChipOptions};
+use crate::intrachip::{self, IntraChipOptions};
+use crate::roofline::Roofline;
+use crate::system::{chip, interconnect, memory, topology, SystemSpec};
+use crate::util::table::{write_result, Heatmap, Table};
+
+/// One evaluated §VII mapping.
+#[derive(Debug, Clone)]
+pub struct MappingResult {
+    pub name: String,
+    /// Per-layer pipeline-input time on one chip (s).
+    pub time: f64,
+    /// Per-chip useful FLOP per input.
+    pub flops: f64,
+    /// Per-chip DRAM traffic per input (bytes).
+    pub dram_bytes: f64,
+    /// Per-chip network traffic time-equivalent denominator (bytes).
+    pub net_bytes: f64,
+    pub n_partitions: usize,
+}
+
+impl MappingResult {
+    pub fn throughput(&self) -> f64 {
+        self.flops / self.time
+    }
+}
+
+/// The §VII system: 8 SN10, DDR 200 GB/s, PCIe 25 GB/s.
+pub fn sn10_system(topo_name: &str) -> SystemSpec {
+    let link = interconnect::pcie4();
+    let topo = match topo_name {
+        "ring8" => topology::ring(8, &link),
+        "torus4x2" => topology::torus2d(4, 2, &link),
+        other => panic!("unknown §VII topology {other}"),
+    };
+    let mut mem = memory::ddr4();
+    mem.capacity = 3e12; // SN10 pairs with large DDR (§VII: "large-capacity")
+    SystemSpec::new(chip::sn10(), mem, link, topo)
+}
+
+/// The vendor 4-partition assignment of §VII-B, by kernel name.
+pub fn vendor_partition_of(name: &str) -> usize {
+    match name.rsplit('.').next().unwrap_or(name) {
+        "LN1" | "Q" | "K" | "V" => 0,
+        "MHA1" | "Softmax" | "MHA2" | "Proj" | "Add1" => 1,
+        "LN2" | "FFN0" | "GeLU" => 2,
+        _ => 3, // FFN1, Add2
+    }
+}
+
+/// The DFModel-optimized 4-partition assignment of §VII-C: Proj co-located
+/// with FFN0 so the Proj all-reduce overlaps the FFN0 GEMM.
+pub fn dfmodel_partition_of(name: &str) -> usize {
+    match name.rsplit('.').next().unwrap_or(name) {
+        "LN1" | "Q" | "K" | "V" => 0,
+        "MHA1" | "Softmax" | "MHA2" => 1,
+        "Proj" | "Add1" | "LN2" | "FFN0" | "GeLU" => 2,
+        _ => 3, // FFN1, Add2
+    }
+}
+
+/// Evaluate one mapping variant on the §VII system.
+fn eval_mapping(
+    name: &str,
+    cfg: &GptConfig,
+    sys: &SystemSpec,
+    degrees: (usize, usize, usize),
+    force_kbk: bool,
+    force_vendor: bool,
+) -> Option<MappingResult> {
+    let fine = gpt::gpt_layer_graph(cfg, 1.0);
+    let plans = interchip::enumerate_plans(&sys.topology);
+    let plan = plans
+        .iter()
+        .find(|p| (p.tp, p.pp, p.dp) == degrees)
+        .unwrap_or_else(|| panic!("no plan {degrees:?} in {}", sys.topology.name));
+    let (schemes, _) = interchip::optimizer::select_sharding(
+        &fine,
+        sys,
+        plan,
+        &InterChipOptions::default(),
+    );
+    let (sharded, net_time) = interchip::shard_graph(&fine, sys, plan, &schemes);
+
+    let mut opts = IntraChipOptions { net_time, ..Default::default() };
+    if force_kbk {
+        opts.force_kernel_by_kernel = true;
+    }
+    if force_vendor {
+        let part: Vec<usize> =
+            sharded.kernels.iter().map(|k| vendor_partition_of(&k.name)).collect();
+        opts.force_assignment = Some(part);
+    }
+    let intra = intrachip::optimize_intra(&sharded, &sys.chip, &sys.memory, &opts)?;
+
+    let flops = sharded.total_flops();
+    let net_total: f64 = opts_net_total(&intra, &sharded, sys);
+    Some(MappingResult {
+        name: name.into(),
+        time: intra.total_time,
+        flops,
+        dram_bytes: intra.total_dram_traffic().max(1.0),
+        net_bytes: net_total.max(1.0),
+        n_partitions: intra.assignment.n_used(),
+    })
+}
+
+fn opts_net_total(
+    intra: &intrachip::IntraChipMapping,
+    _g: &crate::graph::DataflowGraph,
+    sys: &SystemSpec,
+) -> f64 {
+    // network bytes equivalent: t_net × link bandwidth
+    intra.partitions.iter().map(|p| p.t_net).sum::<f64>() * sys.link.bandwidth
+}
+
+/// All four §VII mappings in Table VI order.
+pub fn four_mappings() -> Vec<MappingResult> {
+    let cfg = gpt::gpt3_175b();
+    let ring = sn10_system("ring8");
+    let torus = sn10_system("torus4x2");
+    let mut out = Vec::new();
+    if let Some(m) =
+        eval_mapping("non-dataflow (Calculon-style), 8x1 ring", &cfg, &ring, (8, 1, 1), true, false)
+    {
+        out.push(m);
+    }
+    if let Some(m) =
+        eval_mapping("vendor dataflow mapping, 8x1 ring", &cfg, &ring, (8, 1, 1), false, true)
+    {
+        out.push(m);
+    }
+    if let Some(m) =
+        eval_mapping("DFModel dataflow mapping, 8x1 ring", &cfg, &ring, (8, 1, 1), false, false)
+    {
+        out.push(m);
+    }
+    if let Some(m) =
+        eval_mapping("DFModel dataflow mapping, 4x2 torus", &cfg, &torus, (4, 1, 2), false, false)
+    {
+        out.push(m);
+    }
+    out
+}
+
+/// Fig. 18 + Table VI.
+pub fn fig18_table6() -> String {
+    let maps = four_mappings();
+    let sys = sn10_system("ring8");
+    let rl = Roofline::of_system(&sys);
+
+    let mut t18 = Table::new(
+        "Fig. 18 — hierarchical roofline (per SN10 chip, DDR+PCIe)",
+        &["Mapping", "OI_mem (FLOP/B)", "OI_net (FLOP/B)", "achieved", "attainable", "bound"],
+    );
+    for m in &maps {
+        let p = rl.point(&m.name, m.flops, m.dram_bytes, m.net_bytes, m.time);
+        let att = rl.attainable(p.oi_mem, p.oi_net);
+        t18.row(&[
+            m.name.clone(),
+            format!("{:.1}", p.oi_mem),
+            format!("{:.1}", p.oi_net),
+            crate::util::units::fmt_flops(p.achieved),
+            crate::util::units::fmt_flops(att),
+            format!("{:?}", rl.bound(p.oi_mem, p.oi_net)),
+        ]);
+    }
+
+    let mut t6 = Table::new(
+        "Table VI — mapping speedup chain",
+        &["Mapping", "partitions", "stepwise speedup", "accum. speedup", "paper accum."],
+    );
+    let paper = [1.0, 4.05, 4.8, 6.13];
+    let base = maps[0].throughput();
+    let mut prev = base;
+    for (i, m) in maps.iter().enumerate() {
+        let thr = m.throughput();
+        t6.row(&[
+            m.name.clone(),
+            format!("{}", m.n_partitions),
+            format!("{:.2}x", thr / prev),
+            format!("{:.2}x", thr / base),
+            format!("{:.2}x", paper.get(i).copied().unwrap_or(f64::NAN)),
+        ]);
+        prev = thr;
+    }
+    let mut out = t18.render();
+    out.push('\n');
+    out.push_str(&t6.render());
+    let _ = write_result("fig18_table6.csv", &t6.to_csv());
+    out
+}
+
+/// Fig. 19: dataflow vs non-dataflow utilization over SRAM × DRAM bw.
+pub fn fig19() -> String {
+    let cells = crate::dse::fig19_sweep();
+    let srams = ["150MB", "300MB", "500MB"];
+    let bws = ["100GB/s", "300GB/s", "600GB/s"];
+    let mut df = Heatmap::new("Fig. 19 — dataflow mapping utilization", &srams, &bws);
+    let mut kbk = Heatmap::new("Fig. 19 — non-dataflow mapping utilization", &srams, &bws);
+    let mut max_ratio = 0.0f64;
+    for c in &cells {
+        let r = match c.sram_mb as usize {
+            150 => 0,
+            300 => 1,
+            _ => 2,
+        };
+        let col = match c.dram_gbs as usize {
+            100 => 0,
+            300 => 1,
+            _ => 2,
+        };
+        df.set(r, col, c.dataflow_util);
+        kbk.set(r, col, c.non_dataflow_util);
+        if c.dataflow_util.is_finite() && c.non_dataflow_util.is_finite() {
+            max_ratio = max_ratio.max(c.dataflow_util / c.non_dataflow_util);
+        }
+    }
+    let mut out = df.render();
+    out.push('\n');
+    out.push_str(&kbk.render());
+    out.push_str(&format!(
+        "\ndataflow is an upper bound of non-dataflow; max advantage {max_ratio:.2}x (paper 1.63x)\n"
+    ));
+    let _ = write_result("fig19.csv", &df.to_csv());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vendor_partition_matches_section_vii_b() {
+        assert_eq!(vendor_partition_of("L0.Q"), 0);
+        assert_eq!(vendor_partition_of("L0.Proj"), 1);
+        assert_eq!(vendor_partition_of("L0.FFN0"), 2);
+        assert_eq!(vendor_partition_of("L0.Add2"), 3);
+    }
+
+    #[test]
+    fn speedup_chain_is_monotone() {
+        // non-dataflow < vendor < DFModel ring <= DFModel torus (§VII)
+        let maps = four_mappings();
+        assert_eq!(maps.len(), 4, "all four mappings must be feasible");
+        let thr: Vec<f64> = maps.iter().map(|m| m.throughput()).collect();
+        assert!(thr[1] > thr[0], "vendor must beat non-dataflow: {thr:?}");
+        assert!(thr[2] >= thr[1] * 0.999, "DFModel must match/beat vendor: {thr:?}");
+        assert!(thr[3] >= thr[2] * 0.999, "torus must match/beat ring: {thr:?}");
+        // headline: DFModel total speedup over non-dataflow is large
+        let total = thr[3] / thr[0];
+        assert!(total > 2.0, "accumulated speedup too small: {total:.2}x (paper 6.13x)");
+    }
+
+    #[test]
+    fn non_dataflow_mapping_is_memory_bound() {
+        let maps = four_mappings();
+        let sys = sn10_system("ring8");
+        let rl = crate::roofline::Roofline::of_system(&sys);
+        let m = &maps[0];
+        let p = rl.point(&m.name, m.flops, m.dram_bytes, m.net_bytes, m.time);
+        assert_eq!(rl.bound(p.oi_mem, p.oi_net), crate::roofline::Bound::Memory);
+    }
+
+    #[test]
+    fn dataflow_raises_memory_oi() {
+        let maps = four_mappings();
+        let oi = |m: &MappingResult| m.flops / m.dram_bytes;
+        assert!(oi(&maps[1]) > 2.0 * oi(&maps[0]), "fusion must raise OI_mem substantially");
+    }
+}

@@ -1,0 +1,112 @@
+//! Fluent construction of dataflow graphs with single-producer /
+//! single-consumer tensors (§IV-C). Multi-consumer fan-out is expressed by
+//! `replicate`, which emits one edge per consumer — exactly the paper's
+//! "tensors used by multiple consumers are replicated" rule.
+
+use super::{DataflowGraph, Kernel, KernelId, KernelKind, Tensor};
+
+#[derive(Debug, Clone)]
+pub struct GraphBuilder {
+    graph: DataflowGraph,
+}
+
+impl GraphBuilder {
+    pub fn new(name: &str) -> Self {
+        GraphBuilder {
+            graph: DataflowGraph { name: name.to_string(), ..Default::default() },
+        }
+    }
+
+    /// Add a kernel; FLOP derived from the kind.
+    pub fn kernel(&mut self, name: &str, kind: KernelKind, weight_bytes: f64) -> KernelId {
+        let flops = kind.flops();
+        self.kernel_with_flops(name, kind, flops, weight_bytes)
+    }
+
+    /// Add a kernel with an explicit FLOP override (aggregated kernels).
+    pub fn kernel_with_flops(
+        &mut self,
+        name: &str,
+        kind: KernelKind,
+        flops: f64,
+        weight_bytes: f64,
+    ) -> KernelId {
+        assert!(flops >= 0.0 && weight_bytes >= 0.0, "negative kernel cost");
+        let id = KernelId(self.graph.kernels.len());
+        self.graph.kernels.push(Kernel { name: name.to_string(), kind, flops, weight_bytes });
+        id
+    }
+
+    /// Connect `src -> dst` with a tensor of `bytes`.
+    pub fn tensor(&mut self, name: &str, src: KernelId, dst: KernelId, bytes: f64) {
+        assert!(bytes >= 0.0, "negative tensor size");
+        self.graph.tensors.push(Tensor { name: name.to_string(), src, dst, bytes });
+    }
+
+    /// Fan a producer's output to several consumers (replication rule).
+    pub fn replicate(&mut self, name: &str, src: KernelId, dsts: &[KernelId], bytes: f64) {
+        for (i, &dst) in dsts.iter().enumerate() {
+            self.tensor(&format!("{name}.rep{i}"), src, dst, bytes);
+        }
+    }
+
+    /// Current number of kernels (for builders that compose subgraphs).
+    pub fn len(&self) -> usize {
+        self.graph.kernels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.graph.kernels.is_empty()
+    }
+
+    /// Finish; panics if the graph fails validation (builders are internal,
+    /// a malformed build is a bug, not an input error).
+    pub fn build(self) -> DataflowGraph {
+        if let Err(e) = self.graph.validate() {
+            panic!("builder produced invalid graph '{}': {e}", self.graph.name);
+        }
+        self.graph
+    }
+
+    /// Finish without validation (for deliberately-broken test graphs).
+    pub fn build_unchecked(self) -> DataflowGraph {
+        self.graph
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn replicate_emits_one_edge_per_consumer() {
+        let mut b = GraphBuilder::new("g");
+        let s = b.kernel("src", KernelKind::Elementwise { elems: 1.0, flop_per_elem: 1.0 }, 0.0);
+        let c1 = b.kernel("c1", KernelKind::Elementwise { elems: 1.0, flop_per_elem: 1.0 }, 0.0);
+        let c2 = b.kernel("c2", KernelKind::Elementwise { elems: 1.0, flop_per_elem: 1.0 }, 0.0);
+        b.replicate("t", s, &[c1, c2], 10.0);
+        let g = b.build();
+        assert_eq!(g.n_tensors(), 2);
+        assert!(g.tensors.iter().all(|t| t.bytes == 10.0 && t.src == s));
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid graph")]
+    fn build_panics_on_cycle() {
+        let mut b = GraphBuilder::new("g");
+        let a = b.kernel("a", KernelKind::Elementwise { elems: 1.0, flop_per_elem: 1.0 }, 0.0);
+        let c = b.kernel("b", KernelKind::Elementwise { elems: 1.0, flop_per_elem: 1.0 }, 0.0);
+        b.tensor("f", a, c, 1.0);
+        b.tensor("r", c, a, 1.0);
+        b.build();
+    }
+
+    #[test]
+    fn flops_derived_from_kind() {
+        let mut b = GraphBuilder::new("g");
+        let k = b.kernel("gemm", KernelKind::Gemm { b: 1.0, m: 8.0, k: 8.0, n: 8.0 }, 42.0);
+        let g = b.build_unchecked();
+        assert_eq!(g.kernel(k).flops, 1024.0);
+        assert_eq!(g.kernel(k).weight_bytes, 42.0);
+    }
+}

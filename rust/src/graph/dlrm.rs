@@ -1,0 +1,180 @@
+//! DLRM workload builder (the paper's 793B deep-learning recommendation
+//! model [34], [61]): embedding-bag lookups (sharded tables → all-to-all
+//! exchange), bottom MLP over dense features, pairwise feature interaction,
+//! and the top MLP.
+
+use super::{DataflowGraph, GraphBuilder, KernelKind};
+
+#[derive(Debug, Clone, Copy)]
+pub struct DlrmConfig {
+    /// Number of sparse embedding tables.
+    pub tables: f64,
+    /// Embedding vector width.
+    pub emb_dim: f64,
+    /// Rows per table (sized so tables dominate the 793B parameter count).
+    pub rows_per_table: f64,
+    /// Lookups (pooled indices) per table per sample.
+    pub pooling: f64,
+    /// Dense-feature width into the bottom MLP.
+    pub dense_features: f64,
+    /// Bottom MLP layer widths.
+    pub bottom_mlp: [f64; 3],
+    /// Top MLP layer widths.
+    pub top_mlp: [f64; 4],
+    pub dtype_bytes: f64,
+}
+
+/// The 793B configuration from Mudigere et al. [61]: parameters are almost
+/// entirely embeddings (tables × rows × dim ≈ 793e9).
+pub fn dlrm_793b() -> DlrmConfig {
+    DlrmConfig {
+        tables: 856.0,
+        emb_dim: 128.0,
+        rows_per_table: 7.236e6, // 856 * 7.236e6 * 128 ≈ 793e9
+        pooling: 20.0,
+        dense_features: 13.0,
+        bottom_mlp: [512.0, 256.0, 128.0],
+        top_mlp: [1024.0, 1024.0, 512.0, 1.0],
+        dtype_bytes: 2.0,
+    }
+}
+
+impl DlrmConfig {
+    pub fn embedding_params(&self) -> f64 {
+        self.tables * self.rows_per_table * self.emb_dim
+    }
+
+    pub fn mlp_params(&self) -> f64 {
+        let mut p = 0.0;
+        let mut prev = self.dense_features;
+        for w in self.bottom_mlp {
+            p += prev * w;
+            prev = w;
+        }
+        // top MLP input: interaction features + bottom output
+        let inter_in = self.interaction_width() + self.bottom_mlp[2];
+        let mut prev = inter_in;
+        for w in self.top_mlp {
+            p += prev * w;
+            prev = w;
+        }
+        p
+    }
+
+    /// Pairwise-interaction output width: C(tables+1, 2).
+    pub fn interaction_width(&self) -> f64 {
+        let f = self.tables + 1.0;
+        f * (f - 1.0) / 2.0
+    }
+
+    pub fn params(&self) -> f64 {
+        self.embedding_params() + self.mlp_params()
+    }
+}
+
+/// Build the per-batch DLRM dataflow graph.
+///
+/// The Embedding kernel's output tensor is the one that needs the
+/// all-to-all at the inter-chip level (tables are sharded across chips, each
+/// chip needs every sample's pooled vectors) — its sharding schemes carry
+/// that cost (see `sharding::schemes_for`).
+pub fn dlrm_graph(cfg: &DlrmConfig, batch: f64) -> DataflowGraph {
+    let mut b = GraphBuilder::new(&format!("dlrm[{}tables]", cfg.tables));
+    let dt = cfg.dtype_bytes;
+
+    // Sparse side: pooled embedding-bag lookups over all tables.
+    let emb = b.kernel(
+        "EmbLookup",
+        KernelKind::Embedding { lookups: batch * cfg.tables * cfg.pooling, dim: cfg.emb_dim },
+        cfg.embedding_params() * dt,
+    );
+
+    // Dense side: bottom MLP (3 GEMMs + ReLU folded into flop/elem).
+    let mut prev_w = cfg.dense_features;
+    let mut prev_k = b.kernel(
+        "BotMLP0",
+        KernelKind::Gemm { b: 1.0, m: batch, k: prev_w, n: cfg.bottom_mlp[0] },
+        prev_w * cfg.bottom_mlp[0] * dt,
+    );
+    prev_w = cfg.bottom_mlp[0];
+    for (i, &w) in cfg.bottom_mlp.iter().enumerate().skip(1) {
+        let k = b.kernel(
+            &format!("BotMLP{i}"),
+            KernelKind::Gemm { b: 1.0, m: batch, k: prev_w, n: w },
+            prev_w * w * dt,
+        );
+        b.tensor(&format!("bot{i}"), prev_k, k, batch * prev_w * dt);
+        prev_k = k;
+        prev_w = w;
+    }
+
+    // Feature interaction: per-sample [F, D] x [D, F] pairwise dots where
+    // F = tables + 1 (pooled embeddings + bottom-MLP output).
+    let f = cfg.tables + 1.0;
+    let inter = b.kernel(
+        "Interact",
+        KernelKind::Gemm { b: batch, m: f, k: cfg.emb_dim, n: f },
+        0.0,
+    );
+    b.tensor("emb_out", emb, inter, batch * cfg.tables * cfg.emb_dim * dt);
+    b.tensor("bot_out", prev_k, inter, batch * cfg.emb_dim * dt);
+
+    // Top MLP over [interaction features ++ bottom output].
+    let mut prev_w = cfg.interaction_width() + cfg.bottom_mlp[2];
+    let mut prev_k = inter;
+    let mut prev_bytes = batch * prev_w * dt;
+    for (i, &w) in cfg.top_mlp.iter().enumerate() {
+        let k = b.kernel(
+            &format!("TopMLP{i}"),
+            KernelKind::Gemm { b: 1.0, m: batch, k: prev_w, n: w },
+            prev_w * w * dt,
+        );
+        b.tensor(&format!("top{i}"), prev_k, k, prev_bytes);
+        prev_k = k;
+        prev_w = w;
+        prev_bytes = batch * w * dt;
+    }
+
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_hit_793b() {
+        let cfg = dlrm_793b();
+        let p = cfg.params();
+        assert!((p / 793e9 - 1.0).abs() < 0.01, "params = {p:.4e}");
+        // embeddings dominate
+        assert!(cfg.embedding_params() / p > 0.99);
+    }
+
+    #[test]
+    fn graph_structure() {
+        let cfg = dlrm_793b();
+        let g = dlrm_graph(&cfg, 1024.0);
+        g.validate().unwrap();
+        // EmbLookup + 3 bottom + interact + 4 top = 9 kernels
+        assert_eq!(g.n_kernels(), 9);
+        assert!(g.kernels.iter().any(|k| k.name == "EmbLookup"));
+        assert!(g.kernels.iter().any(|k| k.name == "Interact"));
+    }
+
+    #[test]
+    fn flops_scale_with_batch() {
+        let cfg = dlrm_793b();
+        let f1 = dlrm_graph(&cfg, 1024.0).total_flops();
+        let f2 = dlrm_graph(&cfg, 2048.0).total_flops();
+        assert!((f2 / f1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn embedding_weights_dominate_graph_weights() {
+        let cfg = dlrm_793b();
+        let g = dlrm_graph(&cfg, 512.0);
+        let w = g.total_weight_bytes();
+        assert!((w / (cfg.params() * 2.0) - 1.0).abs() < 0.01);
+    }
+}

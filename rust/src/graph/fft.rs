@@ -1,0 +1,85 @@
+//! Distributed FFT workload builder (the paper's 1T-point FFT [44], [76]):
+//! 3-D volumetric (pencil) decomposition — three 1-D FFT stages along x/y/z
+//! with two global transposes between them. The transposes are the
+//! all-to-all exchanges that make FFT network-bound on slow interconnects
+//! (Figs 16/17).
+
+use super::{DataflowGraph, GraphBuilder, KernelKind};
+
+#[derive(Debug, Clone, Copy)]
+pub struct FftConfig {
+    /// Total points (the paper's headline: 1e12).
+    pub points: f64,
+    pub dtype_bytes: f64, // complex64 = 8 bytes
+}
+
+pub fn fft_1t() -> FftConfig {
+    FftConfig { points: 1e12, dtype_bytes: 8.0 }
+}
+
+impl FftConfig {
+    /// Points along one axis of the cubic volume.
+    pub fn axis(&self) -> f64 {
+        self.points.cbrt().round()
+    }
+
+    /// Total FLOP: 5·N·log2(N) for a complex transform.
+    pub fn total_flops(&self) -> f64 {
+        5.0 * self.points * self.points.log2()
+    }
+
+    /// Bytes moved by each global transpose (the whole volume).
+    pub fn transpose_bytes(&self) -> f64 {
+        self.points * self.dtype_bytes
+    }
+}
+
+/// Pencil-decomposed 3-D FFT graph: FFTx → T1 → FFTy → T2 → FFTz.
+pub fn fft_graph(cfg: &FftConfig) -> DataflowGraph {
+    let mut b = GraphBuilder::new(&format!("fft[{:.0e}pt]", cfg.points));
+    let n1 = cfg.axis();
+    let batch = cfg.points / n1; // pencils per stage
+    let vol = cfg.transpose_bytes();
+
+    let fx = b.kernel("FFTx", KernelKind::Fft { points: n1, batch }, 0.0);
+    let t1 = b.kernel("Transpose1", KernelKind::Transpose { elems: cfg.points }, 0.0);
+    let fy = b.kernel("FFTy", KernelKind::Fft { points: n1, batch }, 0.0);
+    let t2 = b.kernel("Transpose2", KernelKind::Transpose { elems: cfg.points }, 0.0);
+    let fz = b.kernel("FFTz", KernelKind::Fft { points: n1, batch }, 0.0);
+
+    b.tensor("x_out", fx, t1, vol);
+    b.tensor("t1_out", t1, fy, vol);
+    b.tensor("y_out", fy, t2, vol);
+    b.tensor("t2_out", t2, fz, vol);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_flops_sum_to_5nlogn() {
+        let cfg = fft_1t();
+        let g = fft_graph(&cfg);
+        let got = g.total_flops();
+        let want = cfg.total_flops();
+        // 3 stages of 5·N·log2(N^(1/3)) = 5·N·log2(N)
+        assert!((got / want - 1.0).abs() < 0.01, "got {got:.4e} want {want:.4e}");
+    }
+
+    #[test]
+    fn graph_structure() {
+        let g = fft_graph(&fft_1t());
+        g.validate().unwrap();
+        assert_eq!(g.n_kernels(), 5);
+        assert_eq!(g.n_tensors(), 4);
+        let transposes = g.kernels.iter().filter(|k| k.flops == 0.0).count();
+        assert_eq!(transposes, 2);
+    }
+
+    #[test]
+    fn axis_is_cube_root() {
+        assert_eq!(fft_1t().axis(), 1e4);
+    }
+}

@@ -1,0 +1,136 @@
+//! High-Performance LINPACK workload builder (the paper's 5M² HPL [4]):
+//! right-looking blocked LU factorization. Per block-step k of panel width
+//! nb over trailing matrix size m = N - k·nb:
+//!   Panel (getrf)   — m·nb² FLOP class, modeled as a thin GEMM
+//!   TRSM            — nb²·m triangular solves, GEMM-like
+//!   Update (gemm)   — 2·m²·nb FLOP, the dominant term
+//!
+//! Steps are folded into `groups` aggregated step-groups so the graph stays
+//! optimizer-sized while preserving the exact 2/3·N³ total FLOP; a test
+//! asserts the invariant.
+
+use super::{DataflowGraph, GraphBuilder, KernelKind};
+
+#[derive(Debug, Clone, Copy)]
+pub struct HplConfig {
+    /// Matrix dimension N (the paper's headline run: 5e6).
+    pub n: f64,
+    /// Panel/block width.
+    pub nb: f64,
+    /// Number of aggregated step-groups in the graph.
+    pub groups: usize,
+    pub dtype_bytes: f64, // HPL is fp64
+}
+
+pub fn hpl_5m() -> HplConfig {
+    HplConfig { n: 5e6, nb: 512.0, groups: 32, dtype_bytes: 8.0 }
+}
+
+impl HplConfig {
+    /// Total LU FLOP: 2/3·N³ (+ lower-order N² terms we ignore).
+    pub fn total_flops(&self) -> f64 {
+        2.0 / 3.0 * self.n * self.n * self.n
+    }
+
+    /// Matrix storage bytes.
+    pub fn matrix_bytes(&self) -> f64 {
+        self.n * self.n * self.dtype_bytes
+    }
+}
+
+/// Build the blocked-LU dataflow graph: `groups` sequential step-groups of
+/// {Panel → TRSM → Update}, with the trailing-matrix tensor flowing between
+/// groups.
+pub fn hpl_graph(cfg: &HplConfig) -> DataflowGraph {
+    let mut b = GraphBuilder::new(&format!("hpl[N={:.0}]", cfg.n));
+    let steps_total = (cfg.n / cfg.nb).floor();
+    let steps_per_group = steps_total / cfg.groups as f64;
+
+    let mut prev = None;
+    for g in 0..cfg.groups {
+        // Average trailing size over this group's steps (exact integral of
+        // the per-step m = N - k·nb over the group, so totals are preserved).
+        let k_lo = g as f64 * steps_per_group;
+        let k_hi = (g + 1) as f64 * steps_per_group;
+        // ∫ (N - k·nb)² dk over [k_lo, k_hi) — gives exact Σ 2·m²·nb FLOP.
+        let integral_m2 = {
+            let f = |k: f64| {
+                let m = cfg.n - k * cfg.nb;
+                -m * m * m / (3.0 * cfg.nb)
+            };
+            f(k_hi) - f(k_lo)
+        };
+        let update_flops = 2.0 * cfg.nb * integral_m2;
+        let m_avg = cfg.n - (k_lo + k_hi) / 2.0 * cfg.nb;
+
+        let panel = b.kernel_with_flops(
+            &format!("G{g}.Panel"),
+            KernelKind::Gemm { b: 1.0, m: m_avg, k: cfg.nb, n: cfg.nb },
+            steps_per_group * m_avg * cfg.nb * cfg.nb,
+            0.0,
+        );
+        let trsm = b.kernel_with_flops(
+            &format!("G{g}.TRSM"),
+            KernelKind::Gemm { b: 1.0, m: cfg.nb, k: cfg.nb, n: m_avg },
+            steps_per_group * cfg.nb * cfg.nb * m_avg,
+            0.0,
+        );
+        let update = b.kernel_with_flops(
+            &format!("G{g}.Update"),
+            KernelKind::Gemm { b: 1.0, m: m_avg, k: cfg.nb, n: m_avg },
+            update_flops,
+            0.0,
+        );
+
+        // Panel columns broadcast to TRSM; L/U panels feed the update.
+        let panel_bytes = m_avg * cfg.nb * cfg.dtype_bytes;
+        b.tensor(&format!("G{g}.panel_out"), panel, trsm, panel_bytes);
+        b.tensor(&format!("G{g}.u_panel"), trsm, update, panel_bytes);
+        if let Some(p) = prev {
+            // trailing matrix carried between groups
+            b.tensor(&format!("G{g}.trailing"), p, panel, m_avg * m_avg * cfg.dtype_bytes);
+        }
+        prev = Some(update);
+    }
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn update_flops_sum_to_two_thirds_n_cubed() {
+        let cfg = hpl_5m();
+        let g = hpl_graph(&cfg);
+        let update: f64 = g
+            .kernels
+            .iter()
+            .filter(|k| k.name.ends_with("Update"))
+            .map(|k| k.flops)
+            .sum();
+        let want = cfg.total_flops();
+        assert!((update / want - 1.0).abs() < 0.01, "update = {update:.4e}, want {want:.4e}");
+    }
+
+    #[test]
+    fn graph_validates_and_chains() {
+        let cfg = HplConfig { n: 1e5, nb: 256.0, groups: 8, dtype_bytes: 8.0 };
+        let g = hpl_graph(&cfg);
+        g.validate().unwrap();
+        assert_eq!(g.n_kernels(), 3 * 8);
+        // later groups have smaller trailing updates
+        let flops: Vec<f64> = g
+            .kernels
+            .iter()
+            .filter(|k| k.name.ends_with("Update"))
+            .map(|k| k.flops)
+            .collect();
+        assert!(flops.windows(2).all(|w| w[0] > w[1]));
+    }
+
+    #[test]
+    fn matrix_bytes() {
+        assert_eq!(hpl_5m().matrix_bytes(), 5e6 * 5e6 * 8.0);
+    }
+}

@@ -1,0 +1,228 @@
+//! Llama-3 family configurations (serving case studies, §VIII-A/B) and
+//! prefill/decode graph builders.
+//!
+//! Llama differs from GPT-3 in three ways that matter to the model:
+//! grouped-query attention (fewer K/V heads), SwiGLU FFN (three weight
+//! matrices), and no biases. Decode processes one token per sequence with
+//! the KV cache streamed from memory — the memory-bound regime of Fig. 20.
+
+use super::{DataflowGraph, GraphBuilder, KernelKind};
+
+#[derive(Debug, Clone, Copy)]
+pub struct LlamaConfig {
+    pub layers: usize,
+    pub d_model: f64,
+    pub n_heads: f64,
+    pub n_kv_heads: f64,
+    pub d_ff: f64,
+    pub vocab: f64,
+    pub dtype_bytes: f64,
+}
+
+pub fn llama3_8b() -> LlamaConfig {
+    LlamaConfig {
+        layers: 32,
+        d_model: 4096.0,
+        n_heads: 32.0,
+        n_kv_heads: 8.0,
+        d_ff: 14336.0,
+        vocab: 128256.0,
+        dtype_bytes: 2.0,
+    }
+}
+
+pub fn llama3_70b() -> LlamaConfig {
+    LlamaConfig {
+        layers: 80,
+        d_model: 8192.0,
+        n_heads: 64.0,
+        n_kv_heads: 8.0,
+        d_ff: 28672.0,
+        vocab: 128256.0,
+        dtype_bytes: 2.0,
+    }
+}
+
+pub fn llama3_405b() -> LlamaConfig {
+    LlamaConfig {
+        layers: 126,
+        d_model: 16384.0,
+        n_heads: 128.0,
+        n_kv_heads: 8.0,
+        d_ff: 53248.0,
+        vocab: 128256.0,
+        dtype_bytes: 2.0,
+    }
+}
+
+/// The 68M draft model used by SpecInfer-style tree decoding (§VIII-B).
+pub fn llama_68m() -> LlamaConfig {
+    LlamaConfig {
+        layers: 2,
+        d_model: 768.0,
+        n_heads: 12.0,
+        n_kv_heads: 12.0,
+        d_ff: 3072.0,
+        vocab: 32000.0,
+        dtype_bytes: 2.0,
+    }
+}
+
+impl LlamaConfig {
+    pub fn head_dim(&self) -> f64 {
+        self.d_model / self.n_heads
+    }
+
+    /// Per-layer params: Q (h²), O (h²), K/V (2·h·kv_dim), SwiGLU (3·h·d_ff).
+    pub fn params_per_layer(&self) -> f64 {
+        let kv_dim = self.n_kv_heads * self.head_dim();
+        2.0 * self.d_model * self.d_model
+            + 2.0 * self.d_model * kv_dim
+            + 3.0 * self.d_model * self.d_ff
+    }
+
+    pub fn params(&self) -> f64 {
+        self.layers as f64 * self.params_per_layer()
+            + 2.0 * self.vocab * self.d_model // embed + lm head
+    }
+
+    /// FLOP to process one token through the whole stack (fwd).
+    pub fn fwd_flops_per_token(&self, context: f64) -> f64 {
+        // 2 FLOP per param-MAC + attention over `context` tokens
+        2.0 * self.params()
+            + self.layers as f64 * 4.0 * context * self.d_model
+    }
+
+    /// KV-cache bytes per token of context.
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        2.0 * self.layers as f64 * self.n_kv_heads * self.head_dim() * self.dtype_bytes
+    }
+
+    pub fn weight_bytes(&self) -> f64 {
+        self.params() * self.dtype_bytes
+    }
+}
+
+/// Prefill graph: a whole prompt of `prompt_len` tokens through one layer
+/// (the serving model multiplies per-layer times by `layers`). Structure
+/// mirrors `gpt::add_layer` with GQA-sized K/V and SwiGLU.
+pub fn prefill_layer_graph(cfg: &LlamaConfig, batch: f64, prompt_len: f64) -> DataflowGraph {
+    let mut b = GraphBuilder::new("llama-prefill-layer");
+    let (h, f) = (cfg.d_model, cfg.d_ff);
+    let kv_dim = cfg.n_kv_heads * cfg.head_dim();
+    let t = batch * prompt_len;
+    let dt = cfg.dtype_bytes;
+    let act = t * h * dt;
+
+    let ln = b.kernel("RMSNorm", KernelKind::LayerNorm { rows: t, cols: h }, h * dt);
+    let q = b.kernel("Q", KernelKind::Gemm { b: 1.0, m: t, k: h, n: h }, h * h * dt);
+    let k = b.kernel("K", KernelKind::Gemm { b: 1.0, m: t, k: h, n: kv_dim }, h * kv_dim * dt);
+    let v = b.kernel("V", KernelKind::Gemm { b: 1.0, m: t, k: h, n: kv_dim }, h * kv_dim * dt);
+    b.replicate("ln_out", ln, &[q, k, v], act);
+
+    let attn = b.kernel(
+        "Attn",
+        KernelKind::Gemm { b: batch * cfg.n_heads, m: prompt_len, k: cfg.head_dim(), n: 2.0 * prompt_len },
+        0.0,
+    );
+    b.tensor("q_out", q, attn, act);
+    b.tensor("k_out", k, attn, t * kv_dim * dt);
+    b.tensor("v_out", v, attn, t * kv_dim * dt);
+
+    let o = b.kernel("O", KernelKind::Gemm { b: 1.0, m: t, k: h, n: h }, h * h * dt);
+    b.tensor("attn_out", attn, o, act);
+
+    let gate = b.kernel("Gate", KernelKind::Gemm { b: 1.0, m: t, k: h, n: f }, h * f * dt);
+    let up = b.kernel("Up", KernelKind::Gemm { b: 1.0, m: t, k: h, n: f }, h * f * dt);
+    b.replicate("o_out", o, &[gate, up], act);
+    let silu = b.kernel("SiLUMul", KernelKind::Elementwise { elems: t * f, flop_per_elem: 6.0 }, 0.0);
+    b.tensor("gate_out", gate, silu, t * f * dt);
+    b.tensor("up_out", up, silu, t * f * dt);
+    let down = b.kernel("Down", KernelKind::Gemm { b: 1.0, m: t, k: f, n: h }, f * h * dt);
+    b.tensor("silu_out", silu, down, t * f * dt);
+    b.build()
+}
+
+/// Decode step graph for one layer: batch sequences × one new token each,
+/// attending over `context` cached tokens. GEMV-shaped — memory-bound.
+pub fn decode_layer_graph(cfg: &LlamaConfig, batch: f64, context: f64) -> DataflowGraph {
+    prefill_layer_graph_inner_decode(cfg, batch, context)
+}
+
+fn prefill_layer_graph_inner_decode(cfg: &LlamaConfig, batch: f64, context: f64) -> DataflowGraph {
+    let mut b = GraphBuilder::new("llama-decode-layer");
+    let (h, f) = (cfg.d_model, cfg.d_ff);
+    let kv_dim = cfg.n_kv_heads * cfg.head_dim();
+    let dt = cfg.dtype_bytes;
+    let act = batch * h * dt;
+
+    let ln = b.kernel("RMSNorm", KernelKind::LayerNorm { rows: batch, cols: h }, h * dt);
+    let q = b.kernel("Q", KernelKind::Gemm { b: 1.0, m: batch, k: h, n: h }, h * h * dt);
+    let k = b.kernel("K", KernelKind::Gemm { b: 1.0, m: batch, k: h, n: kv_dim }, h * kv_dim * dt);
+    let v = b.kernel("V", KernelKind::Gemm { b: 1.0, m: batch, k: h, n: kv_dim }, h * kv_dim * dt);
+    b.replicate("ln_out", ln, &[q, k, v], act);
+
+    // score + context GEMVs against the KV cache: weight_bytes models the
+    // cache bytes that must stream from memory every step.
+    let kv_cache_bytes = batch * context * cfg.kv_bytes_per_token() / cfg.layers as f64;
+    let attn = b.kernel(
+        "Attn",
+        KernelKind::Gemm { b: batch * cfg.n_heads, m: 1.0, k: cfg.head_dim(), n: 2.0 * context },
+        kv_cache_bytes,
+    );
+    b.tensor("q_out", q, attn, act);
+    b.tensor("k_out", k, attn, batch * kv_dim * dt);
+    b.tensor("v_out", v, attn, batch * kv_dim * dt);
+
+    let o = b.kernel("O", KernelKind::Gemm { b: 1.0, m: batch, k: h, n: h }, h * h * dt);
+    b.tensor("attn_out", attn, o, act);
+    let gate = b.kernel("Gate", KernelKind::Gemm { b: 1.0, m: batch, k: h, n: f }, h * f * dt);
+    let up = b.kernel("Up", KernelKind::Gemm { b: 1.0, m: batch, k: h, n: f }, h * f * dt);
+    b.replicate("o_out", o, &[gate, up], act);
+    let silu = b.kernel("SiLUMul", KernelKind::Elementwise { elems: batch * f, flop_per_elem: 6.0 }, 0.0);
+    b.tensor("gate_out", gate, silu, batch * f * dt);
+    b.tensor("up_out", up, silu, batch * f * dt);
+    let down = b.kernel("Down", KernelKind::Gemm { b: 1.0, m: batch, k: f, n: h }, f * h * dt);
+    b.tensor("silu_out", silu, down, batch * f * dt);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_near_published() {
+        assert!((llama3_8b().params() / 8.0e9 - 1.0).abs() < 0.1);
+        assert!((llama3_70b().params() / 70.6e9 - 1.0).abs() < 0.1);
+        assert!((llama3_405b().params() / 405e9 - 1.0).abs() < 0.1);
+        let m = llama_68m().params();
+        assert!((m / 68e6 - 1.0).abs() < 0.6, "68M params = {m:.3e}");
+    }
+
+    #[test]
+    fn prefill_graph_validates() {
+        let g = prefill_layer_graph(&llama3_8b(), 1.0, 1024.0);
+        g.validate().unwrap();
+        assert_eq!(g.n_kernels(), 10);
+    }
+
+    #[test]
+    fn decode_is_memory_heavy() {
+        let cfg = llama3_8b();
+        let g = decode_layer_graph(&cfg, 16.0, 2048.0);
+        g.validate().unwrap();
+        // bytes (weights + kv) per FLOP far above prefill's
+        let decode_oi = g.total_flops() / g.total_weight_bytes();
+        let p = prefill_layer_graph(&cfg, 1.0, 1024.0);
+        let prefill_oi = p.total_flops() / p.total_weight_bytes();
+        assert!(prefill_oi > 20.0 * decode_oi, "prefill {prefill_oi} decode {decode_oi}");
+    }
+
+    #[test]
+    fn kv_cache_bytes() {
+        let cfg = llama3_8b();
+        // 2 * 32 layers * 8 kv heads * 128 head_dim * 2 bytes
+        assert_eq!(cfg.kv_bytes_per_token(), 2.0 * 32.0 * 8.0 * 128.0 * 2.0);
+    }
+}

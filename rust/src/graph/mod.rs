@@ -1,0 +1,357 @@
+//! Dataflow-graph IR (§III-B): vertices are compute kernels, edges are
+//! tensors. A workload is a DAG; DFModel partitions it across chips
+//! (inter-chip, §IV) and within a chip (intra-chip, §V).
+//!
+//! Conventions: FLOP and bytes are `f64` in base units; every tensor has a
+//! single producer and single consumer (§IV-C — multi-consumer tensors are
+//! replicated by the builders).
+
+pub mod builder;
+pub mod dlrm;
+pub mod fft;
+pub mod gpt;
+pub mod hpl;
+pub mod llama;
+pub mod moe;
+
+pub use builder::GraphBuilder;
+
+/// Index of a kernel (vertex) in its graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct KernelId(pub usize);
+
+/// Index of a tensor (edge) in its graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TensorId(pub usize);
+
+/// What a kernel computes — drives FLOP counting, sharding-scheme
+/// enumeration (§IV-B), and the compute-utilization model (§V-B).
+#[derive(Debug, Clone, PartialEq)]
+pub enum KernelKind {
+    /// C[b×m,n] = A[b×m,k] · B[k,n]; `batch` multiplies the m dimension.
+    Gemm { b: f64, m: f64, k: f64, n: f64 },
+    /// Row softmax over `rows` rows of `cols` elements.
+    Softmax { rows: f64, cols: f64 },
+    /// Pointwise op over `elems` elements (`flop_per_elem` each).
+    Elementwise { elems: f64, flop_per_elem: f64 },
+    /// LayerNorm over `rows` rows of `cols` (≈8 flop/elem).
+    LayerNorm { rows: f64, cols: f64 },
+    /// Sparse embedding-bag lookup: `lookups` gathers of `dim`-wide rows.
+    Embedding { lookups: f64, dim: f64 },
+    /// 1-D FFT stage: `batch` transforms of `points` points (5·N·log2 N).
+    Fft { points: f64, batch: f64 },
+    /// Data movement only (transposes / layout shuffles): zero FLOP.
+    Transpose { elems: f64 },
+    /// An aggregated transformer layer (coarse inter-chip granularity):
+    /// internally Megatron-sharded, so its TP scheme carries the layer's
+    /// two forward all-reduces as inherent communication.
+    FusedLayer { tokens: f64, width: f64 },
+}
+
+impl KernelKind {
+    /// Floating-point operations implied by the kind.
+    pub fn flops(&self) -> f64 {
+        match *self {
+            KernelKind::Gemm { b, m, k, n } => 2.0 * b * m * k * n,
+            KernelKind::Softmax { rows, cols } => 5.0 * rows * cols,
+            KernelKind::Elementwise { elems, flop_per_elem } => elems * flop_per_elem,
+            KernelKind::LayerNorm { rows, cols } => 8.0 * rows * cols,
+            KernelKind::Embedding { lookups, dim } => lookups * dim, // adds
+            KernelKind::Fft { points, batch } => 5.0 * points * batch * points.log2().max(1.0),
+            KernelKind::Transpose { .. } => 0.0,
+            // 12·h² MACs per token (QKV+Proj+FFN) = 24·h² FLOP
+            KernelKind::FusedLayer { tokens, width } => 24.0 * tokens * width * width,
+        }
+    }
+
+    /// True for kernels whose inner loop maps onto the MXU/systolic array
+    /// (used by the utilization model).
+    pub fn is_matmul_like(&self) -> bool {
+        matches!(self, KernelKind::Gemm { .. } | KernelKind::FusedLayer { .. })
+    }
+}
+
+/// A compute kernel (graph vertex).
+#[derive(Debug, Clone)]
+pub struct Kernel {
+    pub name: String,
+    pub kind: KernelKind,
+    /// FLOP for one pipeline input (pre-sharding); derived from `kind` but
+    /// overridable by builders that aggregate (e.g. HPL step folding).
+    pub flops: f64,
+    /// Resident parameter bytes (weights stay on-chip/in DRAM for the
+    /// kernel's lifetime; counted against SRAM when the kernel is fused).
+    pub weight_bytes: f64,
+}
+
+/// A tensor (graph edge): single producer, single consumer.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub src: KernelId,
+    pub dst: KernelId,
+    /// Size in bytes for one pipeline input (pre-sharding).
+    pub bytes: f64,
+}
+
+/// Validation failures for hand-built graphs.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum GraphError {
+    #[error("kernel id {0} out of range")]
+    BadKernelId(usize),
+    #[error("graph has a cycle involving kernel '{0}'")]
+    Cycle(String),
+    #[error("tensor '{0}' is a self-loop")]
+    SelfLoop(String),
+    #[error("graph is empty")]
+    Empty,
+}
+
+/// The workload dataflow graph.
+#[derive(Debug, Clone, Default)]
+pub struct DataflowGraph {
+    pub name: String,
+    pub kernels: Vec<Kernel>,
+    pub tensors: Vec<Tensor>,
+}
+
+impl DataflowGraph {
+    pub fn n_kernels(&self) -> usize {
+        self.kernels.len()
+    }
+
+    pub fn n_tensors(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn kernel(&self, id: KernelId) -> &Kernel {
+        &self.kernels[id.0]
+    }
+
+    pub fn tensor(&self, id: TensorId) -> &Tensor {
+        &self.tensors[id.0]
+    }
+
+    /// Total FLOP over all kernels (one pipeline input).
+    pub fn total_flops(&self) -> f64 {
+        self.kernels.iter().map(|k| k.flops).sum()
+    }
+
+    /// Total tensor traffic in bytes (one pipeline input).
+    pub fn total_tensor_bytes(&self) -> f64 {
+        self.tensors.iter().map(|t| t.bytes).sum()
+    }
+
+    /// Total resident weight bytes.
+    pub fn total_weight_bytes(&self) -> f64 {
+        self.kernels.iter().map(|k| k.weight_bytes).sum()
+    }
+
+    /// Outgoing tensors per kernel.
+    pub fn out_edges(&self, k: KernelId) -> impl Iterator<Item = (TensorId, &Tensor)> {
+        self.tensors
+            .iter()
+            .enumerate()
+            .filter(move |(_, t)| t.src == k)
+            .map(|(i, t)| (TensorId(i), t))
+    }
+
+    /// Incoming tensors per kernel.
+    pub fn in_edges(&self, k: KernelId) -> impl Iterator<Item = (TensorId, &Tensor)> {
+        self.tensors
+            .iter()
+            .enumerate()
+            .filter(move |(_, t)| t.dst == k)
+            .map(|(i, t)| (TensorId(i), t))
+    }
+
+    /// Structural validation: ids in range, no self-loops, acyclic.
+    pub fn validate(&self) -> Result<(), GraphError> {
+        if self.kernels.is_empty() {
+            return Err(GraphError::Empty);
+        }
+        for t in &self.tensors {
+            if t.src.0 >= self.kernels.len() {
+                return Err(GraphError::BadKernelId(t.src.0));
+            }
+            if t.dst.0 >= self.kernels.len() {
+                return Err(GraphError::BadKernelId(t.dst.0));
+            }
+            if t.src == t.dst {
+                return Err(GraphError::SelfLoop(t.name.clone()));
+            }
+        }
+        self.topo_order().map(|_| ())
+    }
+
+    /// Kahn topological order; error (naming a cycle member) if cyclic.
+    pub fn topo_order(&self) -> Result<Vec<KernelId>, GraphError> {
+        let n = self.kernels.len();
+        let mut indeg = vec![0usize; n];
+        let mut adj: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for t in &self.tensors {
+            indeg[t.dst.0] += 1;
+            adj[t.src.0].push(t.dst.0);
+        }
+        // Stable queue: lowest id first, so builder insertion order is the
+        // canonical topo order (the optimizers rely on this determinism).
+        let mut heap: std::collections::BinaryHeap<std::cmp::Reverse<usize>> = indeg
+            .iter()
+            .enumerate()
+            .filter(|(_, &d)| d == 0)
+            .map(|(i, _)| std::cmp::Reverse(i))
+            .collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(std::cmp::Reverse(u)) = heap.pop() {
+            order.push(KernelId(u));
+            for &v in &adj[u] {
+                indeg[v] -= 1;
+                if indeg[v] == 0 {
+                    heap.push(std::cmp::Reverse(v));
+                }
+            }
+        }
+        if order.len() != n {
+            let stuck = indeg.iter().position(|&d| d > 0).unwrap();
+            return Err(GraphError::Cycle(self.kernels[stuck].name.clone()));
+        }
+        Ok(order)
+    }
+
+    /// True if kernel `a` reaches kernel `b` through tensor edges.
+    pub fn reaches(&self, a: KernelId, b: KernelId) -> bool {
+        let n = self.kernels.len();
+        let mut adj: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for t in &self.tensors {
+            adj[t.src.0].push(t.dst.0);
+        }
+        let mut seen = vec![false; n];
+        let mut stack = vec![a.0];
+        while let Some(u) = stack.pop() {
+            if u == b.0 {
+                return true;
+            }
+            if std::mem::replace(&mut seen[u], true) {
+                continue;
+            }
+            stack.extend(adj[u].iter().copied());
+        }
+        false
+    }
+
+    /// Human-readable one-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: {} kernels, {} tensors, {:.3e} FLOP, {:.3e} B activations, {:.3e} B weights",
+            self.name,
+            self.n_kernels(),
+            self.n_tensors(),
+            self.total_flops(),
+            self.total_tensor_bytes(),
+            self.total_weight_bytes()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain(n: usize) -> DataflowGraph {
+        let mut b = GraphBuilder::new("chain");
+        let mut prev = None;
+        for i in 0..n {
+            let k = b.kernel(
+                &format!("k{i}"),
+                KernelKind::Elementwise { elems: 100.0, flop_per_elem: 1.0 },
+                0.0,
+            );
+            if let Some(p) = prev {
+                b.tensor("t", p, k, 64.0);
+            }
+            prev = Some(k);
+        }
+        b.build()
+    }
+
+    #[test]
+    fn topo_order_of_chain_is_insertion_order() {
+        let g = chain(5);
+        assert!(g.validate().is_ok());
+        let order = g.topo_order().unwrap();
+        assert_eq!(order, (0..5).map(KernelId).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut g = chain(3);
+        g.tensors.push(Tensor {
+            name: "back".into(),
+            src: KernelId(2),
+            dst: KernelId(0),
+            bytes: 1.0,
+        });
+        assert!(matches!(g.validate(), Err(GraphError::Cycle(_))));
+    }
+
+    #[test]
+    fn self_loop_detected() {
+        let mut g = chain(2);
+        g.tensors.push(Tensor {
+            name: "loop".into(),
+            src: KernelId(1),
+            dst: KernelId(1),
+            bytes: 1.0,
+        });
+        assert_eq!(g.validate(), Err(GraphError::SelfLoop("loop".into())));
+    }
+
+    #[test]
+    fn bad_id_detected() {
+        let mut g = chain(2);
+        g.tensors.push(Tensor {
+            name: "bad".into(),
+            src: KernelId(0),
+            dst: KernelId(9),
+            bytes: 1.0,
+        });
+        assert_eq!(g.validate(), Err(GraphError::BadKernelId(9)));
+    }
+
+    #[test]
+    fn empty_graph_invalid() {
+        let g = DataflowGraph::default();
+        assert_eq!(g.validate(), Err(GraphError::Empty));
+    }
+
+    #[test]
+    fn kind_flops() {
+        assert_eq!(KernelKind::Gemm { b: 1.0, m: 2.0, k: 3.0, n: 4.0 }.flops(), 48.0);
+        assert_eq!(KernelKind::Softmax { rows: 2.0, cols: 10.0 }.flops(), 100.0);
+        assert_eq!(KernelKind::Transpose { elems: 50.0 }.flops(), 0.0);
+        let fft = KernelKind::Fft { points: 1024.0, batch: 2.0 };
+        assert!((fft.flops() - 5.0 * 1024.0 * 2.0 * 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn reachability() {
+        let g = chain(4);
+        assert!(g.reaches(KernelId(0), KernelId(3)));
+        assert!(!g.reaches(KernelId(3), KernelId(0)));
+    }
+
+    #[test]
+    fn totals_accumulate() {
+        let g = chain(3);
+        assert_eq!(g.total_flops(), 300.0);
+        assert_eq!(g.total_tensor_bytes(), 128.0);
+    }
+
+    #[test]
+    fn edges_iterators() {
+        let g = chain(3);
+        assert_eq!(g.out_edges(KernelId(0)).count(), 1);
+        assert_eq!(g.in_edges(KernelId(0)).count(), 0);
+        assert_eq!(g.in_edges(KernelId(1)).count(), 1);
+    }
+}

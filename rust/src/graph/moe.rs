@@ -1,0 +1,198 @@
+//! Mixture-of-Experts workload extension (the paper's future-work
+//! direction: "designing large-scale systems for future workloads").
+//!
+//! An MoE transformer layer replaces the dense FFN with `n_experts` expert
+//! FFNs of which each token visits `top_k`; the router's token shuffle is
+//! an all-to-all at the inter-chip level — modeled here as Embedding-style
+//! kernels whose table sharding carries the dispatch/combine all-to-alls.
+//! This exercises the same machinery the DLRM workload does, with the
+//! attention block of a GPT layer in front.
+
+use super::{DataflowGraph, GraphBuilder, KernelKind};
+
+#[derive(Debug, Clone, Copy)]
+pub struct MoeConfig {
+    pub layers: usize,
+    pub d_model: f64,
+    pub n_heads: f64,
+    pub seq: f64,
+    pub d_ff: f64,
+    pub n_experts: f64,
+    pub top_k: f64,
+    pub vocab: f64,
+    pub dtype_bytes: f64,
+}
+
+/// A ~1T-total-parameter MoE with GPT3-medium dense dims (Switch-style:
+/// most parameters in experts, ~13B active per token).
+pub fn moe_gpt_1t() -> MoeConfig {
+    MoeConfig {
+        layers: 24,
+        d_model: 4096.0,
+        n_heads: 32.0,
+        seq: 2048.0,
+        d_ff: 16384.0,
+        n_experts: 256.0,
+        top_k: 2.0,
+        vocab: 50257.0,
+        dtype_bytes: 2.0,
+    }
+}
+
+impl MoeConfig {
+    pub fn head_dim(&self) -> f64 {
+        self.d_model / self.n_heads
+    }
+
+    /// Total parameters: attention (4h²) + experts (2·h·d_ff each).
+    pub fn params(&self) -> f64 {
+        let per_layer = 4.0 * self.d_model * self.d_model
+            + self.n_experts * 2.0 * self.d_model * self.d_ff;
+        self.layers as f64 * per_layer
+    }
+
+    /// Parameters touched per token (top_k experts + attention).
+    pub fn active_params(&self) -> f64 {
+        let per_layer =
+            4.0 * self.d_model * self.d_model + self.top_k * 2.0 * self.d_model * self.d_ff;
+        self.layers as f64 * per_layer
+    }
+}
+
+/// One MoE transformer layer: attention block (as in Fig. 2A) + router
+/// dispatch → expert FFNs → combine.
+pub fn moe_layer_graph(cfg: &MoeConfig, batch: f64) -> DataflowGraph {
+    let mut b = GraphBuilder::new(&format!("moe[{}e,top{}]", cfg.n_experts, cfg.top_k));
+    let (h, s, f) = (cfg.d_model, cfg.seq, cfg.d_ff);
+    let t = batch * s;
+    let dt = cfg.dtype_bytes;
+    let act = t * h * dt;
+
+    // ---- attention block (condensed: QKV, attention, proj) ----
+    let ln1 = b.kernel("LN1", KernelKind::LayerNorm { rows: t, cols: h }, 2.0 * h * dt);
+    let qkv = b.kernel(
+        "QKV",
+        KernelKind::Gemm { b: 1.0, m: t, k: h, n: 3.0 * h },
+        3.0 * h * h * dt,
+    );
+    b.tensor("ln1_out", ln1, qkv, act);
+    let attn = b.kernel(
+        "Attn",
+        KernelKind::Gemm { b: batch * cfg.n_heads, m: s, k: cfg.head_dim(), n: 2.0 * s },
+        0.0,
+    );
+    b.tensor("qkv_out", qkv, attn, 3.0 * act);
+    let proj = b.kernel("Proj", KernelKind::Gemm { b: 1.0, m: t, k: h, n: h }, h * h * dt);
+    b.tensor("attn_out", attn, proj, act);
+
+    // ---- router: gating GEMM + all-to-all token dispatch ----
+    let ln2 = b.kernel("LN2", KernelKind::LayerNorm { rows: t, cols: h }, 2.0 * h * dt);
+    b.tensor("proj_out", proj, ln2, act);
+    let gate = b.kernel(
+        "Router",
+        KernelKind::Gemm { b: 1.0, m: t, k: h, n: cfg.n_experts },
+        h * cfg.n_experts * dt,
+    );
+    b.tensor("ln2_out", ln2, gate, act);
+    // dispatch: every token's hidden state travels to its experts' chips —
+    // Embedding kind so the "table" sharding scheme emits the all-to-all
+    let dispatch = b.kernel(
+        "Dispatch",
+        KernelKind::Embedding { lookups: t * cfg.top_k, dim: h },
+        0.0,
+    );
+    b.tensor("gate_out", gate, dispatch, t * cfg.top_k * h * dt);
+
+    // ---- experts (aggregated): top_k FFN passes per token ----
+    let expert_tokens = t * cfg.top_k;
+    let ffn0 = b.kernel(
+        "ExpFFN0",
+        KernelKind::Gemm { b: 1.0, m: expert_tokens, k: h, n: f },
+        cfg.n_experts * h * f * dt,
+    );
+    b.tensor("disp_out", dispatch, ffn0, expert_tokens * h * dt);
+    let gelu = b.kernel(
+        "ExpGeLU",
+        KernelKind::Elementwise { elems: expert_tokens * f, flop_per_elem: 10.0 },
+        0.0,
+    );
+    b.tensor("ffn0_out", ffn0, gelu, expert_tokens * f * dt);
+    let ffn1 = b.kernel(
+        "ExpFFN1",
+        KernelKind::Gemm { b: 1.0, m: expert_tokens, k: f, n: h },
+        cfg.n_experts * f * h * dt,
+    );
+    b.tensor("gelu_out", gelu, ffn1, expert_tokens * f * dt);
+
+    // ---- combine: all-to-all back + weighted sum ----
+    let combine = b.kernel(
+        "Combine",
+        KernelKind::Embedding { lookups: expert_tokens, dim: h },
+        0.0,
+    );
+    b.tensor("ffn1_out", ffn1, combine, expert_tokens * h * dt);
+    let add = b.kernel("Add", KernelKind::Elementwise { elems: t * h, flop_per_elem: 2.0 }, 0.0);
+    b.tensor("comb_out", combine, add, act);
+    b.build()
+}
+
+/// Expert-parallel degree limit: experts can be sharded at most n_experts
+/// ways (the analogue of the heads limit for attention TP).
+pub fn max_expert_parallel(cfg: &MoeConfig) -> usize {
+    cfg.n_experts as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::system::{chip, interconnect, memory, topology, SystemSpec};
+
+    #[test]
+    fn params_total_and_active() {
+        let cfg = moe_gpt_1t();
+        let p = cfg.params();
+        assert!((p / 0.83e12 - 1.0).abs() < 0.15, "total params = {p:.3e}");
+        // sparse activation: active ≪ total
+        assert!(cfg.active_params() < p / 50.0);
+    }
+
+    #[test]
+    fn graph_validates() {
+        let g = moe_layer_graph(&moe_gpt_1t(), 1.0);
+        g.validate().unwrap();
+        assert_eq!(g.n_kernels(), 12);
+        // experts dominate the weights
+        let expert_w: f64 = g
+            .kernels
+            .iter()
+            .filter(|k| k.name.starts_with("Exp"))
+            .map(|k| k.weight_bytes)
+            .sum();
+        assert!(expert_w / g.total_weight_bytes() > 0.95);
+    }
+
+    #[test]
+    fn moe_is_network_sensitive_like_dlrm() {
+        // the dispatch/combine all-to-alls make MoE benefit from NVLink
+        let g = moe_layer_graph(&moe_gpt_1t(), 8.0);
+        let mk = |link: crate::system::LinkTech| {
+            SystemSpec::new(
+                chip::h100(),
+                memory::hbm3(),
+                link.clone(),
+                topology::torus2d(8, 8, &link),
+            )
+        };
+        let slow = crate::pipeline::workload_pass(&g, &mk(interconnect::pcie4()), 3.0, 8);
+        let fast = crate::pipeline::workload_pass(&g, &mk(interconnect::nvlink4()), 3.0, 8);
+        let (Some(s), Some(f)) = (slow, fast) else {
+            panic!("MoE mapping must be feasible");
+        };
+        assert!(f.utilization > 1.5 * s.utilization, "nvlink {} pcie {}", f.utilization, s.utilization);
+    }
+
+    #[test]
+    fn expert_parallel_limit() {
+        assert_eq!(max_expert_parallel(&moe_gpt_1t()), 256);
+    }
+}

@@ -1,0 +1,253 @@
+//! Inter-chip optimization (§IV): choose TP/PP/DP degrees over the network
+//! dimensions, a sharding scheme per kernel, and a pipeline-stage
+//! assignment, minimizing the max per-stage critical time (Eq. 7).
+//!
+//! Decomposition (DESIGN.md §Optimization): plans are enumerated exactly
+//! (every assignment of network dims to parallelism axes, §IV-C's
+//! one-dim-one-strategy rule); per plan, sharding selection is a pairwise
+//! discrete optimization solved by coordinate descent with restarts
+//! (exhaustively certified on small graphs); stage partitioning is an exact
+//! contiguous DP over topological order.
+
+pub mod optimizer;
+pub mod parallelism;
+
+pub use optimizer::{optimize, InterChipOptions};
+pub use parallelism::{enumerate_plans, ParallelismPlan};
+
+use crate::graph::DataflowGraph;
+use crate::sharding::{self, ShardScheme};
+use crate::system::SystemSpec;
+
+/// Per-kernel / per-tensor latency vectors of the §IV-B formulation.
+#[derive(Debug, Clone)]
+pub struct LatencyVectors {
+    /// h_c[i]: compute time of kernel i spread over the TP group (Eq. §IV-B.1).
+    pub h_c: Vec<f64>,
+    /// h_n[i]: inherent collective time of kernel i's chosen scheme (Eq. 5).
+    pub h_n: Vec<f64>,
+    /// h_m[j]: layout-conversion time of tensor j (Eq. 6).
+    pub h_m: Vec<f64>,
+    /// h_p[j]: point-to-point time of tensor j across PP stages.
+    pub h_p: Vec<f64>,
+}
+
+/// Metrics of one pipeline stage under the performance model of Fig. 5.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageMetrics {
+    pub t_comp: f64,
+    pub t_net: f64,
+    pub t_p2p: f64,
+}
+
+impl StageMetrics {
+    /// Eq. 7: the critical time bottlenecking the stage.
+    pub fn t_cri(&self) -> f64 {
+        self.t_comp.max(self.t_net).max(self.t_p2p)
+    }
+}
+
+/// Result of the inter-chip pass ((2) in Fig. 1).
+#[derive(Debug, Clone)]
+pub struct InterChipMapping {
+    pub plan: ParallelismPlan,
+    /// Chosen scheme index per kernel (into `schemes_for(kind, tp)`).
+    pub scheme_idx: Vec<usize>,
+    /// Stage of each kernel (indices into topo order positions!).
+    pub stage_of: Vec<usize>,
+    pub stages: Vec<StageMetrics>,
+    /// max_i t_cri (the §IV objective; seconds per pipeline input).
+    pub t_cri: f64,
+    /// Latency vectors under the chosen schemes.
+    pub vectors: LatencyVectors,
+    /// Design-space size explored (for the paper's O(10^x) accounting).
+    pub space_log10: f64,
+}
+
+impl InterChipMapping {
+    /// Total inherent + conversion communication time per input.
+    pub fn total_net_time(&self) -> f64 {
+        self.vectors.h_n.iter().sum::<f64>() + self.vectors.h_m.iter().sum::<f64>()
+    }
+
+    /// Number of all-reduce-class collectives the chosen sharding emits
+    /// (the §VI-A validation counts these).
+    pub fn count_allreduces(&self, g: &DataflowGraph, tp: usize) -> usize {
+        use crate::collective::Collective;
+        let mut n = 0;
+        for (i, k) in g.kernels.iter().enumerate() {
+            let schemes = sharding::schemes_for(&k.kind, tp);
+            if let Some((op, _)) = schemes[self.scheme_idx[i]].inherent {
+                if op == Collective::AllReduce {
+                    n += 1;
+                }
+            }
+        }
+        for t in &g.tensors {
+            let from = scheme_of(g, &self.scheme_idx, t.src.0, tp).out_layout;
+            let to = scheme_of(g, &self.scheme_idx, t.dst.0, tp).in_layout;
+            if sharding::conversion_op(from, to) == Some(Collective::AllReduce) {
+                n += 1;
+            }
+        }
+        n
+    }
+}
+
+/// Scheme chosen for kernel `k` under a TP degree.
+pub fn scheme_of(g: &DataflowGraph, scheme_idx: &[usize], k: usize, tp: usize) -> ShardScheme {
+    let schemes = sharding::schemes_for(&g.kernels[k].kind, tp);
+    schemes[scheme_idx[k]].clone()
+}
+
+/// The full-size output-tensor bytes of kernel `k` (replicated out-edges
+/// share one size; kernels with no out edge produce the graph output —
+/// approximated by their largest in-edge).
+pub fn kernel_out_bytes(g: &DataflowGraph, k: crate::graph::KernelId) -> f64 {
+    let out = g.out_edges(k).map(|(_, t)| t.bytes).fold(0.0f64, f64::max);
+    if out > 0.0 {
+        out
+    } else {
+        g.in_edges(k).map(|(_, t)| t.bytes).fold(0.0f64, f64::max)
+    }
+}
+
+/// Compute the latency vectors for a given plan + scheme choice (Eqs. 5/6 +
+/// §IV-B.1 compute model + p2p model).
+pub fn latency_vectors(
+    g: &DataflowGraph,
+    sys: &SystemSpec,
+    plan: &ParallelismPlan,
+    scheme_idx: &[usize],
+) -> LatencyVectors {
+    let tp = plan.tp;
+    let tp_dims = plan.tp_dims_ref(&sys.topology);
+    let pp_dims = plan.pp_dims_ref(&sys.topology);
+    let chip_flops = sys.chip.compute_flops();
+
+    let mut h_c = Vec::with_capacity(g.n_kernels());
+    let mut h_n = Vec::with_capacity(g.n_kernels());
+    for (i, k) in g.kernels.iter().enumerate() {
+        let schemes = sharding::schemes_for(&k.kind, tp);
+        let s = &schemes[scheme_idx[i]];
+        // §IV-B.1: FLOP / (n_tp · t_lim · t_flop); a replicated scheme does
+        // not divide its compute (flops_factor = 1), a sharded one divides
+        // by tp (flops_factor = 1/tp) — per-chip time either way.
+        h_c.push(k.flops * s.flops_factor / chip_flops);
+        let out_bytes = kernel_out_bytes(g, crate::graph::KernelId(i));
+        h_n.push(sharding::inherent_time(s, out_bytes, k.weight_bytes, &tp_dims));
+    }
+    let _ = tp; // degree itself is folded into flops_factor
+
+    let mut h_m = Vec::with_capacity(g.n_tensors());
+    let mut h_p = Vec::with_capacity(g.n_tensors());
+    for t in &g.tensors {
+        let from = scheme_of(g, scheme_idx, t.src.0, tp);
+        let to = scheme_of(g, scheme_idx, t.dst.0, tp);
+        h_m.push(sharding::conversion_time(from.out_layout, to.in_layout, t.bytes, &tp_dims));
+        // p2p across pipeline stages: the (sharded) tensor moves once
+        let sharded = t.bytes * from.out_bytes_factor;
+        h_p.push(if plan.pp > 1 {
+            crate::collective::time_hier(crate::collective::Collective::P2P, sharded, &pp_dims)
+        } else {
+            0.0
+        });
+    }
+    LatencyVectors { h_c, h_n, h_m, h_p }
+}
+
+/// Apply a sharding choice to a graph: per-chip FLOP/weights/tensor sizes
+/// ((2) in Fig. 1 — the input to the intra-chip pass), plus the per-kernel
+/// network time (inherent + incoming conversions) charged to each kernel.
+pub fn shard_graph(
+    g: &DataflowGraph,
+    sys: &SystemSpec,
+    plan: &ParallelismPlan,
+    scheme_idx: &[usize],
+) -> (DataflowGraph, Vec<f64>) {
+    let tp = plan.tp;
+    let v = latency_vectors(g, sys, plan, scheme_idx);
+    let mut out = g.clone();
+    for (i, k) in out.kernels.iter_mut().enumerate() {
+        let schemes = sharding::schemes_for(&k.kind, tp);
+        let s = &schemes[scheme_idx[i]];
+        k.flops *= s.flops_factor;
+        k.weight_bytes *= s.weight_factor;
+        // shrink the GEMM dims the scheme divides so the utilization model
+        // sees per-chip shapes (approximate: scale the widest dim)
+        if let crate::graph::KernelKind::Gemm { b, m, k: kk, n } = &mut k.kind {
+            match s.name {
+                "row" => *m /= tp as f64,
+                "col" => *n /= tp as f64,
+                "head" => *b = (*b / tp as f64).max(1.0),
+                "kdim" => *kk /= tp as f64,
+                _ => {}
+            }
+        }
+    }
+    for (j, t) in out.tensors.iter_mut().enumerate() {
+        let s = scheme_of(g, scheme_idx, t.src.0, tp);
+        t.bytes *= s.out_bytes_factor;
+        let _ = j;
+    }
+    let mut net = vec![0.0; g.n_kernels()];
+    for (i, nt) in net.iter_mut().enumerate() {
+        *nt = v.h_n[i];
+    }
+    for (j, t) in g.tensors.iter().enumerate() {
+        net[t.dst.0] += v.h_m[j];
+    }
+    (out, net)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gpt::{gpt3_175b, gpt_layer_graph};
+    use crate::system::{chip, interconnect, memory, topology, SystemSpec};
+
+    fn sys8() -> SystemSpec {
+        SystemSpec::new(
+            chip::sn10(),
+            memory::ddr4(),
+            interconnect::pcie4(),
+            topology::ring(8, &interconnect::pcie4()),
+        )
+    }
+
+    #[test]
+    fn latency_vectors_shapes_and_positivity() {
+        let g = gpt_layer_graph(&gpt3_175b(), 1.0);
+        let sys = sys8();
+        let plans = enumerate_plans(&sys.topology);
+        let plan = plans.iter().find(|p| p.tp == 8).unwrap();
+        let schemes = vec![0usize; g.n_kernels()];
+        let v = latency_vectors(&g, &sys, plan, &schemes);
+        assert_eq!(v.h_c.len(), g.n_kernels());
+        assert_eq!(v.h_m.len(), g.n_tensors());
+        assert!(v.h_c.iter().all(|&t| t >= 0.0));
+        assert!(v.h_c.iter().sum::<f64>() > 0.0);
+        // pp == 1 -> no p2p
+        assert!(v.h_p.iter().all(|&t| t == 0.0));
+    }
+
+    #[test]
+    fn stage_metrics_critical_time() {
+        let m = StageMetrics { t_comp: 3.0, t_net: 5.0, t_p2p: 1.0 };
+        assert_eq!(m.t_cri(), 5.0);
+    }
+
+    #[test]
+    fn compute_time_scales_inverse_tp() {
+        let g = gpt_layer_graph(&gpt3_175b(), 1.0);
+        let sys = sys8();
+        let plans = enumerate_plans(&sys.topology);
+        let p8 = plans.iter().find(|p| p.tp == 8).unwrap();
+        let p1 = plans.iter().find(|p| p.tp == 1 && p.dp == 8).unwrap();
+        let schemes = vec![0usize; g.n_kernels()];
+        let v8 = latency_vectors(&g, &sys, p8, &schemes);
+        let v1 = latency_vectors(&g, &sys, p1, &schemes);
+        let r = v1.h_c.iter().sum::<f64>() / v8.h_c.iter().sum::<f64>();
+        assert!((r - 8.0).abs() < 1e-9);
+    }
+}

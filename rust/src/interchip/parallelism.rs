@@ -1,0 +1,138 @@
+//! Parallelization-plan enumeration (§IV-C): every network dimension is
+//! assigned to exactly one of {TP, PP, DP}; a dimension cannot be split.
+//! The TP/PP/DP degrees are the products of the dims assigned to each axis.
+
+use crate::system::topology::{Dim, Topology};
+
+/// One (TP, PP, DP) plan with its dim assignment.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParallelismPlan {
+    pub tp: usize,
+    pub pp: usize,
+    pub dp: usize,
+    /// Indices into `topology.dims` per axis.
+    pub tp_dims: Vec<usize>,
+    pub pp_dims: Vec<usize>,
+    pub dp_dims: Vec<usize>,
+}
+
+impl ParallelismPlan {
+    pub fn tp_dims_ref<'a>(&self, t: &'a Topology) -> Vec<&'a Dim> {
+        self.tp_dims.iter().map(|&i| &t.dims[i]).collect()
+    }
+
+    pub fn pp_dims_ref<'a>(&self, t: &'a Topology) -> Vec<&'a Dim> {
+        self.pp_dims.iter().map(|&i| &t.dims[i]).collect()
+    }
+
+    pub fn dp_dims_ref<'a>(&self, t: &'a Topology) -> Vec<&'a Dim> {
+        self.dp_dims.iter().map(|&i| &t.dims[i]).collect()
+    }
+
+    pub fn describe(&self) -> String {
+        format!("TP={} PP={} DP={}", self.tp, self.pp, self.dp)
+    }
+}
+
+/// All 3^d assignments of the topology's d dims to {TP, PP, DP}.
+/// Deduplicated by (tp, pp, dp, assignment) — dims of size 1 are pinned to
+/// TP so they do not generate spurious duplicates.
+pub fn enumerate_plans(t: &Topology) -> Vec<ParallelismPlan> {
+    let d = t.dims.len();
+    let mut plans = Vec::new();
+    let n_assign = 3usize.pow(d as u32);
+    'outer: for code in 0..n_assign {
+        let mut c = code;
+        let (mut tp, mut pp, mut dp) = (1usize, 1usize, 1usize);
+        let mut tp_dims = Vec::new();
+        let mut pp_dims = Vec::new();
+        let mut dp_dims = Vec::new();
+        for (i, dim) in t.dims.iter().enumerate() {
+            let axis = c % 3;
+            c /= 3;
+            if dim.size == 1 && axis != 0 {
+                // canonical placement for degenerate dims
+                continue 'outer;
+            }
+            match axis {
+                0 => {
+                    tp = tp.checked_mul(dim.size).expect("tp overflow");
+                    tp_dims.push(i);
+                }
+                1 => {
+                    pp *= dim.size;
+                    pp_dims.push(i);
+                }
+                _ => {
+                    dp *= dim.size;
+                    dp_dims.push(i);
+                }
+            }
+        }
+        plans.push(ParallelismPlan { tp, pp, dp, tp_dims, pp_dims, dp_dims });
+    }
+    plans
+}
+
+/// Plans filtered to those feasible for a workload: PP cannot exceed the
+/// number of pipeline-partitionable units, and DP cannot exceed the number
+/// of independent batch items.
+pub fn feasible_plans(
+    t: &Topology,
+    max_pp_units: usize,
+    max_dp: usize,
+) -> Vec<ParallelismPlan> {
+    enumerate_plans(t)
+        .into_iter()
+        .filter(|p| p.pp <= max_pp_units.max(1) && p.dp <= max_dp.max(1))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::system::interconnect::nvlink4;
+    use crate::system::topology::{ring, torus2d};
+
+    #[test]
+    fn single_ring_has_three_plans() {
+        let t = ring(8, &nvlink4());
+        let plans = enumerate_plans(&t);
+        assert_eq!(plans.len(), 3);
+        let degrees: Vec<(usize, usize, usize)> =
+            plans.iter().map(|p| (p.tp, p.pp, p.dp)).collect();
+        assert!(degrees.contains(&(8, 1, 1)));
+        assert!(degrees.contains(&(1, 8, 1)));
+        assert!(degrees.contains(&(1, 1, 8)));
+    }
+
+    #[test]
+    fn torus_generates_nine_plans() {
+        let t = torus2d(4, 2, &nvlink4());
+        let plans = enumerate_plans(&t);
+        assert_eq!(plans.len(), 9);
+        // the §VII-D plan: TP over the 4-ring, DP over the 2-ring
+        assert!(plans.iter().any(|p| p.tp == 4 && p.pp == 1 && p.dp == 2));
+        // degrees always multiply to the chip count
+        assert!(plans.iter().all(|p| p.tp * p.pp * p.dp == 8));
+    }
+
+    #[test]
+    fn feasibility_filter() {
+        let t = torus2d(4, 2, &nvlink4());
+        let plans = feasible_plans(&t, 1, 2);
+        assert!(plans.iter().all(|p| p.pp == 1 && p.dp <= 2));
+        assert!(!plans.is_empty());
+    }
+
+    #[test]
+    fn dims_partition_is_exact() {
+        let t = torus2d(4, 2, &nvlink4());
+        for p in enumerate_plans(&t) {
+            let mut all: Vec<usize> =
+                p.tp_dims.iter().chain(&p.pp_dims).chain(&p.dp_dims).copied().collect();
+            all.sort_unstable();
+            assert_eq!(all, vec![0, 1]);
+        }
+    }
+}

@@ -1,0 +1,85 @@
+//! Intra-chip optimization (§V): subdivide one chip's assigned subgraph
+//! into partitions that execute sequentially; within a partition all
+//! kernels are fused on-chip and fully pipelined (dataflow execution,
+//! Fig. 2C). Kernel-by-kernel chips (GPUs/TPUs) are modeled as the forced
+//! one-kernel-per-partition assignment (Fig. 2D).
+//!
+//! Per-partition critical time = max(t_comp, t_mem, t_net) (§V-B.4);
+//! objective = minimize Σ over partitions — solved exactly by contiguous DP
+//! over topological order with SRAM/DRAM capacity feasibility.
+
+pub mod optimizer;
+pub mod tiles;
+
+pub use optimizer::{optimize_intra, IntraChipOptions};
+
+use crate::assign::Assignment;
+use crate::graph::DataflowGraph;
+
+/// Metrics of one on-chip partition.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PartitionMetrics {
+    pub t_comp: f64,
+    pub t_mem: f64,
+    pub t_net: f64,
+    /// SRAM bytes used by intra-partition tensors + resident weights.
+    pub sram_used: f64,
+    /// DRAM bytes transferred per pipeline input (matrix D traffic).
+    pub dram_traffic: f64,
+}
+
+impl PartitionMetrics {
+    pub fn t_cri(&self) -> f64 {
+        self.t_comp.max(self.t_mem).max(self.t_net)
+    }
+}
+
+/// Result of the intra-chip pass ((4) in Fig. 1).
+#[derive(Debug, Clone)]
+pub struct IntraChipMapping {
+    pub assignment: Assignment,
+    /// Tiles allocated to each kernel (within its partition).
+    pub tiles: Vec<usize>,
+    pub partitions: Vec<PartitionMetrics>,
+    /// Σ_p max(t_comp, t_mem, t_net) — the §V objective (seconds per
+    /// pipeline input).
+    pub total_time: f64,
+}
+
+impl IntraChipMapping {
+    /// Aggregate DRAM traffic per pipeline input.
+    pub fn total_dram_traffic(&self) -> f64 {
+        self.partitions.iter().map(|p| p.dram_traffic).sum()
+    }
+
+    /// Aggregate compute/memory/network split (for the Fig. 11/13/15/17
+    /// latency breakdowns): each partition contributes its critical time
+    /// attributed to its bottleneck resource.
+    pub fn breakdown(&self) -> (f64, f64, f64) {
+        let (mut c, mut m, mut n) = (0.0, 0.0, 0.0);
+        for p in &self.partitions {
+            let t = p.t_cri();
+            if t <= 0.0 {
+                continue;
+            }
+            if p.t_comp >= p.t_mem && p.t_comp >= p.t_net {
+                c += t;
+            } else if p.t_mem >= p.t_net {
+                m += t;
+            } else {
+                n += t;
+            }
+        }
+        (c, m, n)
+    }
+
+    /// Names of kernels in each partition (for the §VII mapping tables).
+    pub fn partition_names(&self, g: &DataflowGraph) -> Vec<Vec<String>> {
+        self.assignment
+            .members()
+            .iter()
+            .filter(|m| !m.is_empty())
+            .map(|m| m.iter().map(|&k| g.kernels[k].name.clone()).collect())
+            .collect()
+    }
+}

@@ -1,0 +1,186 @@
+//! Compute-tile allocation and the per-kernel utilization model u_c (§V-B.1).
+//!
+//! Each tile is modeled as a 128×128 MXU-like systolic array (the paper's
+//! `t_flop` per tile); the utilization factor follows the SCALE-Sim-style
+//! empirical model [73]: matmul utilization degrades when a GEMM dimension
+//! under-fills the array, vector kernels run on the (slower) vector path.
+
+use crate::graph::KernelKind;
+
+/// Systolic-array edge (elements): full MXU utilization needs all GEMM
+/// dimensions ≥ this.
+pub const ARRAY_DIM: f64 = 128.0;
+
+/// Fraction of a tile's peak FLOP/s available to non-matmul (vector) work.
+pub const VECTOR_FRACTION: f64 = 0.25;
+
+/// Utilization of one kernel on the MXU tiles, independent of tile count
+/// (dimension under-fill; the paper's u_c).
+pub fn utilization(kind: &KernelKind) -> f64 {
+    match *kind {
+        KernelKind::Gemm { m, k, n, .. } => {
+            let fill = |d: f64| (d / ARRAY_DIM).min(1.0);
+            // batch dim adds no under-fill penalty (tiles iterate over it)
+            (fill(m) * fill(n) * fill(k)).max(1e-3)
+        }
+        KernelKind::FusedLayer { .. } => 0.85, // internally well-blocked GEMMs
+        KernelKind::Softmax { .. }
+        | KernelKind::Elementwise { .. }
+        | KernelKind::LayerNorm { .. } => VECTOR_FRACTION,
+        KernelKind::Embedding { .. } => 0.05, // gather-dominated
+        KernelKind::Fft { .. } => 0.30,       // butterfly irregularity
+        KernelKind::Transpose { .. } => VECTOR_FRACTION,
+    }
+}
+
+/// Allocate `total` tiles across kernels to minimize the pipeline's
+/// critical kernel time  max_k f_eff[k] / (tiles[k] · t_flop)  where
+/// f_eff = flops / u_c (§V-B.1). Water-filling: proportional allocation by
+/// largest remainder, then greedy repair moves.
+///
+/// Returns (tiles per kernel, critical time numerator max f_eff/tiles).
+/// None if there are more kernels than tiles.
+pub fn allocate_tiles(f_eff: &[f64], total: usize) -> Option<(Vec<usize>, f64)> {
+    let n = f_eff.len();
+    if n == 0 {
+        return Some((vec![], 0.0));
+    }
+    if n > total {
+        return None;
+    }
+    let sum: f64 = f_eff.iter().sum();
+    if sum <= 0.0 {
+        // zero-FLOP partition (pure data movement): spread evenly
+        let mut tiles = vec![total / n; n];
+        for t in tiles.iter_mut().take(total % n) {
+            *t += 1;
+        }
+        return Some((tiles, 0.0));
+    }
+
+    // proportional share with a floor of 1
+    let mut tiles: Vec<usize> =
+        f_eff.iter().map(|&f| ((f / sum) * total as f64).floor().max(1.0) as usize).collect();
+    // fix overshoot from the floor-of-1 (steal from the most over-provisioned)
+    while tiles.iter().sum::<usize>() > total {
+        let i = (0..n)
+            .filter(|&i| tiles[i] > 1)
+            .min_by(|&a, &b| {
+                let ta = f_eff[a] / (tiles[a] - 1) as f64;
+                let tb = f_eff[b] / (tiles[b] - 1) as f64;
+                ta.total_cmp(&tb)
+            })?;
+        tiles[i] -= 1;
+    }
+    // hand out remaining tiles to the current bottleneck
+    let mut left = total - tiles.iter().sum::<usize>();
+    while left > 0 {
+        let i = (0..n)
+            .max_by(|&a, &b| {
+                (f_eff[a] / tiles[a] as f64).total_cmp(&(f_eff[b] / tiles[b] as f64))
+            })
+            .unwrap();
+        tiles[i] += 1;
+        left -= 1;
+    }
+    // greedy repair: move a tile from the laxest to the bottleneck while the
+    // critical time improves. Bounded: the proportional start is already
+    // near-optimal, and an unbounded loop degenerates to one-tile-at-a-time
+    // shuffling on huge-tile chips (WSE: 850k tiles).
+    for _ in 0..2 * n {
+        let crit = |ts: &[usize]| {
+            (0..n).map(|i| f_eff[i] / ts[i] as f64).fold(0.0f64, f64::max)
+        };
+        let before = crit(&tiles);
+        let hot = (0..n)
+            .max_by(|&a, &b| (f_eff[a] / tiles[a] as f64).total_cmp(&(f_eff[b] / tiles[b] as f64)))
+            .unwrap();
+        // best donor: kernel whose time stays below `before` after losing one
+        let donor = (0..n)
+            .filter(|&i| i != hot && tiles[i] > 1)
+            .min_by(|&a, &b| {
+                let ta = f_eff[a] / (tiles[a] - 1) as f64;
+                let tb = f_eff[b] / (tiles[b] - 1) as f64;
+                ta.total_cmp(&tb)
+            });
+        let Some(d) = donor else { break };
+        tiles[d] -= 1;
+        tiles[hot] += 1;
+        if crit(&tiles) + 1e-18 >= before {
+            tiles[d] += 1;
+            tiles[hot] -= 1;
+            break;
+        }
+    }
+    let crit = (0..n).map(|i| f_eff[i] / tiles[i] as f64).fold(0.0f64, f64::max);
+    Some((tiles, crit))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+
+    #[test]
+    fn gemm_utilization_saturates() {
+        let big = KernelKind::Gemm { b: 1.0, m: 4096.0, k: 4096.0, n: 4096.0 };
+        assert_eq!(utilization(&big), 1.0);
+        let gemv = KernelKind::Gemm { b: 1.0, m: 1.0, k: 4096.0, n: 4096.0 };
+        assert!((utilization(&gemv) - 1.0 / 128.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn vector_kernels_fraction() {
+        assert_eq!(
+            utilization(&KernelKind::Softmax { rows: 10.0, cols: 10.0 }),
+            VECTOR_FRACTION
+        );
+    }
+
+    #[test]
+    fn allocation_proportional() {
+        let (tiles, crit) = allocate_tiles(&[300.0, 100.0], 4).unwrap();
+        assert_eq!(tiles, vec![3, 1]);
+        assert!((crit - 100.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn allocation_respects_floor() {
+        let (tiles, _) = allocate_tiles(&[1e12, 1.0, 1.0], 8).unwrap();
+        assert!(tiles.iter().all(|&t| t >= 1));
+        assert_eq!(tiles.iter().sum::<usize>(), 8);
+        assert_eq!(tiles[0], 6);
+    }
+
+    #[test]
+    fn more_kernels_than_tiles_infeasible() {
+        assert!(allocate_tiles(&[1.0, 1.0, 1.0], 2).is_none());
+    }
+
+    #[test]
+    fn zero_flop_partition() {
+        let (tiles, crit) = allocate_tiles(&[0.0, 0.0], 6).unwrap();
+        assert_eq!(tiles.iter().sum::<usize>(), 6);
+        assert_eq!(crit, 0.0);
+    }
+
+    #[test]
+    fn allocation_never_worse_than_even_split_property() {
+        check("waterfill-beats-even", 100, |rng| {
+            let n = 1 + rng.below(6);
+            let total = n + rng.below(64);
+            let f: Vec<f64> = (0..n).map(|_| rng.uniform(1.0, 1e6)).collect();
+            let (tiles, crit) = allocate_tiles(&f, total).unwrap();
+            assert_eq!(tiles.iter().sum::<usize>(), total);
+            assert!(tiles.iter().all(|&t| t >= 1));
+            // even split baseline
+            let mut even = vec![total / n; n];
+            for t in even.iter_mut().take(total % n) {
+                *t += 1;
+            }
+            let crit_even =
+                (0..n).map(|i| f[i] / even[i] as f64).fold(0.0f64, f64::max);
+            assert!(crit <= crit_even + 1e-9, "crit {crit} even {crit_even} f {f:?}");
+        });
+    }
+}

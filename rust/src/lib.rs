@@ -1,0 +1,35 @@
+//! # DFModel — design space optimization of large-scale systems exploiting
+//! # dataflow mappings
+//!
+//! Reproduction of Ko, Zhang, Hsu, Pedram, Olukotun (Stanford, cs.AR 2024).
+//!
+//! DFModel maps workload dataflow graphs (kernels = vertices, tensors =
+//! edges) onto hierarchical systems by optimizing at two levels:
+//!
+//! * **inter-chip** (§IV): TP/PP/DP parallelization degrees, per-kernel
+//!   sharding strategies, and pipeline-stage assignment over the
+//!   interconnection-network hierarchy — [`interchip`];
+//! * **intra-chip** (§V): kernel fusion into sequentially-executed on-chip
+//!   partitions under SRAM/DRAM constraints with compute-tile allocation —
+//!   [`intrachip`].
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index
+//! mapping every paper table/figure to a module and bench target.
+
+pub mod assign;
+pub mod baselines;
+pub mod collective;
+pub mod config;
+pub mod dse;
+pub mod figures;
+pub mod graph;
+pub mod interchip;
+pub mod intrachip;
+pub mod pipeline;
+pub mod roofline;
+pub mod runtime;
+pub mod serving;
+pub mod sharding;
+pub mod solver;
+pub mod system;
+pub mod util;

@@ -1,0 +1,249 @@
+//! `dfmodel` CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   catalog                       print the Table V chip catalog
+//!   figure <id>|--all             regenerate paper figures/tables (results/)
+//!   optimize [--chips N ...]      optimize a GPT mapping and print it
+//!   dse --workload llm|dlrm|hpl|fft   run the 80-config sweep
+//!   serve [--tp N --pp N ...]     serving model (Fig. 20 style point)
+//!   run-pipeline <name>           execute an AOT pipeline via PJRT
+//!   verify                        verify every pipeline against the oracle
+
+use dfmodel::figures;
+use dfmodel::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.subcommand.as_deref() {
+        Some("catalog") => {
+            print!("{}", figures::table5());
+            0
+        }
+        Some("figure") => cmd_figure(&args),
+        Some("optimize") => cmd_optimize(&args),
+        Some("dse") => cmd_dse(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("run") => cmd_run(&args),
+        Some("run-pipeline") => cmd_run_pipeline(&args),
+        Some("verify") => cmd_verify(&args),
+        _ => {
+            eprintln!(
+                "usage: dfmodel <catalog|figure|optimize|dse|serve|run|run-pipeline|verify> [options]\n\
+                 figures: {}",
+                figures::ALL.join(" ")
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn cmd_figure(args: &Args) -> i32 {
+    let ids: Vec<String> = if args.has_flag("all") {
+        figures::ALL.iter().map(|s| s.to_string()).collect()
+    } else if args.positional.is_empty() {
+        eprintln!("figure: need an id or --all (ids: {})", figures::ALL.join(" "));
+        return 2;
+    } else {
+        args.positional.clone()
+    };
+    for id in &ids {
+        match figures::generate(id) {
+            Some(out) => println!("{out}"),
+            None => {
+                eprintln!("unknown figure '{id}'");
+                return 2;
+            }
+        }
+    }
+    0
+}
+
+fn cmd_optimize(args: &Args) -> i32 {
+    use dfmodel::system::{chip, interconnect, memory, topology, SystemSpec};
+    let chips = args.get_usize("chips", 8);
+    let chip = match args.get_or("chip", "sn10") {
+        "sn10" => chip::sn10(),
+        "sn30" => chip::sn30(),
+        "sn40l" => chip::sn40l(),
+        "h100" => chip::h100(),
+        "a100" => chip::a100(),
+        "tpuv4" => chip::tpu_v4(),
+        "wse2" => chip::wse2(),
+        other => {
+            eprintln!("unknown chip '{other}'");
+            return 2;
+        }
+    };
+    let link = match args.get_or("link", "pcie4") {
+        "pcie4" => interconnect::pcie4(),
+        "nvlink4" => interconnect::nvlink4(),
+        other => {
+            eprintln!("unknown link '{other}'");
+            return 2;
+        }
+    };
+    let mem = match args.get_or("mem", "ddr4") {
+        "ddr4" => memory::ddr4(),
+        "hbm3" => memory::hbm3(),
+        other => {
+            eprintln!("unknown memory '{other}'");
+            return 2;
+        }
+    };
+    let sys = SystemSpec::new(chip, mem, link.clone(), topology::ring(chips, &link));
+    let cfg = match args.get_or("model", "gpt3-175b") {
+        "gpt3-175b" => dfmodel::graph::gpt::gpt3_175b(),
+        "gpt3-1t" => dfmodel::graph::gpt::gpt3_1t(),
+        other => {
+            eprintln!("unknown model '{other}'");
+            return 2;
+        }
+    };
+    println!("system: {}", sys.describe());
+    match dfmodel::pipeline::llm_training(&cfg, &sys, args.get_f64("batch", 64.0)) {
+        Some(r) => {
+            println!("chosen degrees: TP={} PP={} DP={}", r.tp, r.pp, r.dp);
+            println!("step time: {}", dfmodel::util::units::fmt_time(r.step_time));
+            println!("utilization: {:.3}", r.utilization);
+            let (c, m, n) = r.breakdown_frac();
+            println!("breakdown: compute {c:.2} | memory {m:.2} | network {n:.2}");
+            0
+        }
+        None => {
+            eprintln!("no feasible mapping (capacity constraints)");
+            1
+        }
+    }
+}
+
+fn cmd_dse(args: &Args) -> i32 {
+    use dfmodel::dse::Workload;
+    let w = match args.get_or("workload", "llm") {
+        "llm" => Workload::Llm,
+        "dlrm" => Workload::Dlrm,
+        "hpl" => Workload::Hpl,
+        "fft" => Workload::Fft,
+        other => {
+            eprintln!("unknown workload '{other}'");
+            return 2;
+        }
+    };
+    println!("{}", figures::dse_figs::dse_figure(w));
+    0
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    use dfmodel::serving::{evaluate, sn40l_x16, ServingPoint};
+    let m = evaluate(
+        &dfmodel::graph::llama::llama3_8b(),
+        &sn40l_x16(),
+        &ServingPoint {
+            tp: args.get_usize("tp", 16),
+            pp: args.get_usize("pp", 1),
+            batch: args.get_f64("batch", 1.0),
+            prompt_len: args.get_f64("prompt", 1024.0),
+            context: args.get_f64("context", 1024.0),
+        },
+    );
+    println!("TTFT: {}", dfmodel::util::units::fmt_time(m.ttft));
+    println!("prefill: {:.0} tok/s", m.prefill_tps);
+    println!("TPOT: {}", dfmodel::util::units::fmt_time(m.tpot));
+    println!("decode: {:.0} tok/s", m.decode_tps);
+    0
+}
+
+/// `dfmodel run --config exp.json` — declarative experiment launcher.
+fn cmd_run(args: &Args) -> i32 {
+    let Some(path) = args.get("config") else {
+        eprintln!("run: need --config <file.json>");
+        return 2;
+    };
+    match dfmodel::config::Experiment::load(std::path::Path::new(path)) {
+        Ok(exp) => match exp.run() {
+            Ok(result) => {
+                println!("{}", result.pretty());
+                0
+            }
+            Err(e) => {
+                eprintln!("{e}");
+                1
+            }
+        },
+        Err(e) => {
+            eprintln!("{e}");
+            2
+        }
+    }
+}
+
+fn cmd_run_pipeline(args: &Args) -> i32 {
+    let Some(name) = args.positional.first() else {
+        eprintln!("run-pipeline: need a pipeline name (fused|kernel_by_kernel|vendor|dfmodel)");
+        return 2;
+    };
+    let dir = std::path::Path::new("artifacts");
+    match dfmodel::runtime::Runtime::load(dir, &[name.as_str()]) {
+        Ok(rt) => {
+            let x = match rt.reference_input() {
+                Ok(x) => x,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 1;
+                }
+            };
+            match rt.run_pipeline(name, &x) {
+                Ok((out, stats)) => {
+                    println!(
+                        "pipeline '{name}': {} steps, {:.1} KB intermediates, {:?}",
+                        stats.steps,
+                        stats.intermediate_bytes / 1e3,
+                        stats.wall
+                    );
+                    println!("output[0..4] = {:?}", &out[..4.min(out.len())]);
+                    0
+                }
+                Err(e) => {
+                    eprintln!("{e}");
+                    1
+                }
+            }
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            1
+        }
+    }
+}
+
+fn cmd_verify(_args: &Args) -> i32 {
+    let dir = std::path::Path::new("artifacts");
+    match dfmodel::runtime::Runtime::load(dir, &[]) {
+        Ok(rt) => {
+            let mut bad = 0;
+            for name in ["fused", "kernel_by_kernel", "vendor", "dfmodel"] {
+                match rt.verify_pipeline(name) {
+                    Ok(err) => {
+                        let ok = err < rt.manifest.tolerance.max(1e-3);
+                        println!(
+                            "{name:<18} max|err| = {err:.2e}  {}",
+                            if ok { "OK" } else { "FAIL" }
+                        );
+                        if !ok {
+                            bad += 1;
+                        }
+                    }
+                    Err(e) => {
+                        println!("{name:<18} ERROR: {e}");
+                        bad += 1;
+                    }
+                }
+            }
+            i32::from(bad > 0)
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            1
+        }
+    }
+}

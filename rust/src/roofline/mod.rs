@@ -1,0 +1,127 @@
+//! Hierarchical roofline analysis (Fig. 18, after Williams et al. [80]):
+//! a mapping has two operational intensities — FLOP per DRAM byte and FLOP
+//! per network byte — and its achieved throughput is capped by peak
+//! compute, the memory roof OI_mem × d_bw, and the network roof
+//! OI_net × n_bw. Both OIs share one achieved-throughput point.
+
+use crate::system::SystemSpec;
+
+/// One mapping's position on the hierarchical roofline.
+#[derive(Debug, Clone)]
+pub struct RooflinePoint {
+    pub name: String,
+    /// FLOP per DRAM byte.
+    pub oi_mem: f64,
+    /// FLOP per network byte.
+    pub oi_net: f64,
+    /// Modeled achieved FLOP/s (per chip).
+    pub achieved: f64,
+}
+
+/// Which roof binds a mapping.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bound {
+    Compute,
+    Memory,
+    Network,
+}
+
+/// Per-chip roofline model.
+#[derive(Debug, Clone)]
+pub struct Roofline {
+    pub peak_flops: f64,
+    pub mem_bw: f64,
+    pub net_bw: f64,
+}
+
+impl Roofline {
+    pub fn of_system(sys: &SystemSpec) -> Self {
+        Roofline {
+            peak_flops: sys.chip.compute_flops(),
+            mem_bw: sys.memory.bandwidth,
+            net_bw: sys.link.bandwidth,
+        }
+    }
+
+    /// Attainable FLOP/s at the given operational intensities.
+    pub fn attainable(&self, oi_mem: f64, oi_net: f64) -> f64 {
+        self.peak_flops.min(oi_mem * self.mem_bw).min(oi_net * self.net_bw)
+    }
+
+    /// Which roof binds at these intensities.
+    pub fn bound(&self, oi_mem: f64, oi_net: f64) -> Bound {
+        let mem = oi_mem * self.mem_bw;
+        let net = oi_net * self.net_bw;
+        if self.peak_flops <= mem && self.peak_flops <= net {
+            Bound::Compute
+        } else if mem <= net {
+            Bound::Memory
+        } else {
+            Bound::Network
+        }
+    }
+
+    /// Build a point from a mapping's totals (per chip, per input).
+    pub fn point(&self, name: &str, flops: f64, dram_bytes: f64, net_bytes: f64, time: f64)
+        -> RooflinePoint
+    {
+        let oi_mem = if dram_bytes > 0.0 { flops / dram_bytes } else { f64::INFINITY };
+        let oi_net = if net_bytes > 0.0 { flops / net_bytes } else { f64::INFINITY };
+        RooflinePoint { name: name.into(), oi_mem, oi_net, achieved: flops / time }
+    }
+
+    /// Ridge OI (memory): where the memory roof meets peak.
+    pub fn ridge_mem(&self) -> f64 {
+        self.peak_flops / self.mem_bw
+    }
+
+    pub fn ridge_net(&self) -> f64 {
+        self.peak_flops / self.net_bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rl() -> Roofline {
+        Roofline { peak_flops: 300e12, mem_bw: 200e9, net_bw: 25e9 }
+    }
+
+    #[test]
+    fn attainable_min_of_roofs() {
+        let r = rl();
+        // low OI: memory-bound
+        assert_eq!(r.attainable(10.0, 1e9), 10.0 * 200e9);
+        // low net OI: network-bound
+        assert_eq!(r.attainable(1e9, 100.0), 100.0 * 25e9);
+        // both high: compute-bound
+        assert_eq!(r.attainable(1e9, 1e9), 300e12);
+    }
+
+    #[test]
+    fn bound_classification() {
+        let r = rl();
+        assert_eq!(r.bound(1.0, 1e9), Bound::Memory);
+        assert_eq!(r.bound(1e9, 1.0), Bound::Network);
+        assert_eq!(r.bound(1e9, 1e9), Bound::Compute);
+    }
+
+    #[test]
+    fn ridge_points() {
+        let r = rl();
+        assert_eq!(r.ridge_mem(), 1500.0);
+        assert_eq!(r.ridge_net(), 12000.0);
+    }
+
+    #[test]
+    fn point_construction() {
+        let r = rl();
+        let p = r.point("m", 1e12, 1e9, 1e8, 0.01);
+        assert_eq!(p.oi_mem, 1000.0);
+        assert_eq!(p.oi_net, 10000.0);
+        assert_eq!(p.achieved, 1e14);
+        // achieved can never exceed attainable by construction of the model
+        assert!(p.achieved <= r.attainable(p.oi_mem, p.oi_net) * 1.67);
+    }
+}

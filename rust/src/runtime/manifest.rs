@@ -1,0 +1,243 @@
+//! Manifest loader for the AOT artifact directory (artifacts/manifest.json,
+//! written by python/compile/aot.py), parsed with the in-tree JSON module.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One lowered HLO artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    /// Input shapes (f32).
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+}
+
+/// One step of a pipeline: run `artifact` on named buffers.
+#[derive(Debug, Clone)]
+pub struct PipelineStep {
+    pub artifact: String,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct PipelineSpec {
+    pub steps: Vec<PipelineStep>,
+    pub output: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub seq: usize,
+    pub d_ff: usize,
+    pub input_file: String,
+    pub expected_file: String,
+    pub tolerance: f64,
+    pub input_shape: Vec<usize>,
+    pub artifacts: Vec<ArtifactSpec>,
+    pub pipelines: BTreeMap<String, PipelineSpec>,
+}
+
+fn shape_of(v: &Json) -> Result<Vec<usize>> {
+    v.get("shape")
+        .and_then(|s| s.as_array())
+        .map(|a| a.iter().filter_map(|d| d.as_usize()).collect())
+        .ok_or_else(|| anyhow!("bad shape spec"))
+}
+
+fn strings(v: &Json) -> Vec<String> {
+    v.as_array()
+        .map(|a| a.iter().filter_map(|s| s.as_str().map(String::from)).collect())
+        .unwrap_or_default()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts` first)", path.display()))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let cfg = j.get("config").ok_or_else(|| anyhow!("manifest: missing config"))?;
+        let u = |k: &str| -> Result<usize> {
+            cfg.get(k).and_then(|v| v.as_usize()).ok_or_else(|| anyhow!("config.{k} missing"))
+        };
+        let (d_model, n_heads, seq, d_ff) =
+            (u("d_model")?, u("n_heads")?, u("seq")?, u("d_ff")?);
+
+        let mut artifacts = Vec::new();
+        for a in j.get("artifacts").and_then(|v| v.as_array()).unwrap_or(&[]) {
+            let name = a
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("artifact missing name"))?;
+            let file = a
+                .get("file")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("artifact {name}: missing file"))?;
+            let inputs = a
+                .get("inputs")
+                .and_then(|v| v.as_array())
+                .map(|xs| xs.iter().map(shape_of).collect::<Result<Vec<_>>>())
+                .transpose()?
+                .unwrap_or_default();
+            let outputs = a
+                .get("outputs")
+                .and_then(|v| v.as_array())
+                .map(|xs| xs.iter().map(shape_of).collect::<Result<Vec<_>>>())
+                .transpose()?
+                .unwrap_or_default();
+            artifacts.push(ArtifactSpec {
+                name: name.to_string(),
+                file: file.to_string(),
+                inputs,
+                outputs,
+            });
+        }
+
+        let mut pipelines = BTreeMap::new();
+        if let Some(Json::Obj(kv)) = j.get("pipelines") {
+            for (pname, p) in kv {
+                let mut steps = Vec::new();
+                for s in p.get("steps").and_then(|v| v.as_array()).unwrap_or(&[]) {
+                    steps.push(PipelineStep {
+                        artifact: s
+                            .get("artifact")
+                            .and_then(|v| v.as_str())
+                            .ok_or_else(|| anyhow!("{pname}: step missing artifact"))?
+                            .to_string(),
+                        inputs: strings(s.get("in").unwrap_or(&Json::Null)),
+                        outputs: strings(s.get("out").unwrap_or(&Json::Null)),
+                    });
+                }
+                let output = p
+                    .get("output")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("{pname}: missing output"))?
+                    .to_string();
+                pipelines.insert(pname.clone(), PipelineSpec { steps, output });
+            }
+        }
+
+        Ok(Manifest {
+            d_model,
+            n_heads,
+            seq,
+            d_ff,
+            input_file: j
+                .get("input_file")
+                .and_then(|v| v.as_str())
+                .unwrap_or("input_x.bin")
+                .to_string(),
+            expected_file: j
+                .get("expected_file")
+                .and_then(|v| v.as_str())
+                .unwrap_or("expected_out.bin")
+                .to_string(),
+            tolerance: j.get("tolerance").and_then(|v| v.as_f64()).unwrap_or(2e-4),
+            input_shape: vec![seq, d_model],
+            artifacts,
+            pipelines,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Structural check: every pipeline references known artifacts, buffers
+    /// are defined before use, and arities line up.
+    pub fn validate(&self) -> Result<()> {
+        for (pname, p) in &self.pipelines {
+            let mut defined: Vec<&str> = vec!["x"];
+            for s in &p.steps {
+                let art = self
+                    .artifact(&s.artifact)
+                    .ok_or_else(|| anyhow!("{pname}: unknown artifact '{}'", s.artifact))?;
+                if s.inputs.len() != art.inputs.len() || s.outputs.len() != art.outputs.len() {
+                    return Err(anyhow!("{pname}: arity mismatch at '{}'", s.artifact));
+                }
+                for b in &s.inputs {
+                    if !defined.contains(&b.as_str()) {
+                        return Err(anyhow!("{pname}: buffer '{b}' used before defined"));
+                    }
+                }
+                for b in &s.outputs {
+                    defined.push(b);
+                }
+            }
+            if !defined.contains(&p.output.as_str()) {
+                return Err(anyhow!("{pname}: output '{}' never produced", p.output));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "config": {"d_model": 64, "n_heads": 2, "seq": 32, "d_ff": 256,
+                 "head_dim": 32, "dtype": "f32"},
+      "input_file": "input_x.bin",
+      "expected_file": "expected_out.bin",
+      "tolerance": 2e-4,
+      "artifacts": [
+        {"name": "a1", "file": "a1.hlo.txt",
+         "inputs": [{"shape": [32, 64], "dtype": "f32"}],
+         "outputs": [{"shape": [32, 64], "dtype": "f32"}]}
+      ],
+      "pipelines": {
+        "p": {"steps": [{"artifact": "a1", "in": ["x"], "out": ["out"]}],
+               "output": "out"}
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.d_model, 64);
+        assert_eq!(m.input_shape, vec![32, 64]);
+        assert_eq!(m.artifacts.len(), 1);
+        assert_eq!(m.pipelines["p"].steps.len(), 1);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_undefined_buffer() {
+        let bad = SAMPLE.replace("\"in\": [\"x\"]", "\"in\": [\"nope\"]");
+        let m = Manifest::parse(&bad).unwrap();
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_unknown_artifact() {
+        let bad = SAMPLE.replace("{\"artifact\": \"a1\"", "{\"artifact\": \"zz\"");
+        let m = Manifest::parse(&bad).unwrap();
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        let p = Path::new("artifacts");
+        if p.join("manifest.json").exists() {
+            let m = Manifest::load(p).unwrap();
+            m.validate().unwrap();
+            assert!(m.pipelines.contains_key("fused"));
+            assert!(m.pipelines.contains_key("kernel_by_kernel"));
+            assert!(m.pipelines.contains_key("vendor"));
+            assert!(m.pipelines.contains_key("dfmodel"));
+        }
+    }
+}

@@ -1,0 +1,213 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `make artifacts` (python/compile/aot.py) and executes the GPT-layer
+//! mapping variants from the Rust hot path — Python is never on the
+//! request path.
+//!
+//! The executor interprets the manifest's pipeline wiring generically:
+//! named buffers flow between steps, so the same code runs the fused
+//! (1 partition), vendor (4 partitions), DFModel (4 partitions), and
+//! kernel-by-kernel (14 steps) mappings, and reports the host-visible
+//! intermediate traffic each incurs — the Fig. 2C-vs-2D contrast, executed
+//! for real.
+
+pub mod manifest;
+
+pub use manifest::{ArtifactSpec, Manifest, PipelineSpec, PipelineStep};
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+/// Compiled artifacts + manifest, ready to execute.
+pub struct Runtime {
+    pub manifest: Manifest,
+    dir: PathBuf,
+    client: xla::PjRtClient,
+    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
+}
+
+/// Execution statistics of one pipeline run.
+#[derive(Debug, Clone)]
+pub struct PipelineStats {
+    pub steps: usize,
+    /// Bytes of intermediate tensors that crossed the host boundary
+    /// (the analytical model's matrix-D traffic, measured).
+    pub intermediate_bytes: f64,
+    pub wall: Duration,
+}
+
+impl Runtime {
+    /// Load the manifest and compile every artifact needed by `pipelines`
+    /// (all pipelines when empty).
+    pub fn load(dir: &Path, pipelines: &[&str]) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt: {e}"))?;
+        let needed: Vec<String> = if pipelines.is_empty() {
+            manifest.artifacts.iter().map(|a| a.name.clone()).collect()
+        } else {
+            let mut v = Vec::new();
+            for p in pipelines {
+                let spec = manifest
+                    .pipelines
+                    .get(*p)
+                    .ok_or_else(|| anyhow!("unknown pipeline '{p}'"))?;
+                for s in &spec.steps {
+                    if !v.contains(&s.artifact) {
+                        v.push(s.artifact.clone());
+                    }
+                }
+            }
+            v
+        };
+        let mut executables = BTreeMap::new();
+        for name in needed {
+            let art = manifest
+                .artifact(&name)
+                .ok_or_else(|| anyhow!("artifact '{name}' missing from manifest"))?;
+            let path = dir.join(&art.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .map_err(|e| anyhow!("parse {}: {e}", art.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(|e| anyhow!("compile {name}: {e}"))?;
+            executables.insert(name, exe);
+        }
+        Ok(Runtime { manifest, dir: dir.to_path_buf(), client, executables })
+    }
+
+    /// The reference input (f32 LE) written by the AOT step.
+    pub fn reference_input(&self) -> Result<Vec<f32>> {
+        read_f32(&self.dir.join(&self.manifest.input_file))
+    }
+
+    /// The oracle output for the reference input.
+    pub fn expected_output(&self) -> Result<Vec<f32>> {
+        read_f32(&self.dir.join(&self.manifest.expected_file))
+    }
+
+    /// Execute a pipeline on `x` (flattened f32 of the manifest input
+    /// shape). Returns the flattened output and traffic/wall stats.
+    pub fn run_pipeline(&self, pipeline: &str, x: &[f32]) -> Result<(Vec<f32>, PipelineStats)> {
+        let spec = self
+            .manifest
+            .pipelines
+            .get(pipeline)
+            .ok_or_else(|| anyhow!("unknown pipeline '{pipeline}'"))?;
+        let in_shape = &self.manifest.input_shape;
+        let expect: usize = in_shape.iter().product();
+        if x.len() != expect {
+            bail!("input length {} != {:?}", x.len(), in_shape);
+        }
+        let t0 = Instant::now();
+        let mut buffers: BTreeMap<String, xla::Literal> = BTreeMap::new();
+        let dims: Vec<i64> = in_shape.iter().map(|&d| d as i64).collect();
+        buffers.insert(
+            "x".into(),
+            xla::Literal::vec1(x).reshape(&dims).map_err(|e| anyhow!("reshape x: {e}"))?,
+        );
+
+        let mut intermediate_bytes = 0.0;
+        for step in &spec.steps {
+            let exe = self
+                .executables
+                .get(&step.artifact)
+                .ok_or_else(|| anyhow!("artifact '{}' not compiled", step.artifact))?;
+            let args: Vec<&xla::Literal> = step
+                .inputs
+                .iter()
+                .map(|b| {
+                    buffers
+                        .get(b)
+                        .ok_or_else(|| anyhow!("buffer '{b}' undefined at '{}'", step.artifact))
+                })
+                .collect::<Result<_>>()?;
+            let result = exe
+                .execute::<&xla::Literal>(&args)
+                .map_err(|e| anyhow!("execute {}: {e}", step.artifact))?;
+            let root = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch {}: {e}", step.artifact))?;
+            // every artifact returns a tuple (return_tuple=True in aot.py)
+            let outs = root.to_tuple().map_err(|e| anyhow!("untuple: {e}"))?;
+            if outs.len() != step.outputs.len() {
+                bail!(
+                    "step '{}': {} outputs, manifest says {}",
+                    step.artifact,
+                    outs.len(),
+                    step.outputs.len()
+                );
+            }
+            for (name, lit) in step.outputs.iter().zip(outs) {
+                intermediate_bytes += lit.size_bytes() as f64;
+                buffers.insert(name.clone(), lit);
+            }
+        }
+        let out = buffers
+            .get(&spec.output)
+            .ok_or_else(|| anyhow!("pipeline output '{}' missing", spec.output))?;
+        let values = out.to_vec::<f32>().map_err(|e| anyhow!("read output: {e}"))?;
+        Ok((
+            values,
+            PipelineStats {
+                steps: spec.steps.len(),
+                intermediate_bytes,
+                wall: t0.elapsed(),
+            },
+        ))
+    }
+
+    /// Verify a pipeline against the AOT oracle; returns max |err|.
+    pub fn verify_pipeline(&self, pipeline: &str) -> Result<f64> {
+        let x = self.reference_input()?;
+        let want = self.expected_output()?;
+        let (got, _) = self.run_pipeline(pipeline, &x)?;
+        if got.len() != want.len() {
+            bail!("output length {} != expected {}", got.len(), want.len());
+        }
+        let max_err = got
+            .iter()
+            .zip(&want)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .fold(0.0f64, f64::max);
+        Ok(max_err)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+fn read_f32(path: &Path) -> Result<Vec<f32>> {
+    let raw = std::fs::read(path).with_context(|| format!("read {}", path.display()))?;
+    if raw.len() % 4 != 0 {
+        bail!("{}: length {} not a multiple of 4", path.display(), raw.len());
+    }
+    Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_f32_roundtrip() {
+        let dir = std::env::temp_dir().join("dfmodel_rt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("v.bin");
+        let vals = [1.5f32, -2.25, 0.0];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&p, bytes).unwrap();
+        assert_eq!(read_f32(&p).unwrap(), vals);
+    }
+
+    #[test]
+    fn read_f32_rejects_ragged() {
+        let dir = std::env::temp_dir().join("dfmodel_rt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, [0u8; 5]).unwrap();
+        assert!(read_f32(&p).is_err());
+    }
+}

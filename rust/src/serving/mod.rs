@@ -1,0 +1,203 @@
+//! LLM serving model (§VIII-A): prefill (TTFT, prefill throughput) and
+//! autoregressive decode (TPOT, decode throughput) for a model served with
+//! TP×PP over a chip group.
+//!
+//! Prefill resembles a training forward pass (compute-bound at long
+//! prompts); decode streams the weights + KV cache from device memory
+//! every token (memory-bound) and its TP all-reduces are latency-bound
+//! (tiny payloads) — exactly the Fig. 20 observations.
+
+pub mod specdecode;
+
+use crate::graph::llama::LlamaConfig;
+use crate::system::{ChipSpec, LinkTech};
+
+/// The serving platform: a group of identical accelerators.
+#[derive(Debug, Clone)]
+pub struct ServingSystem {
+    pub chip: ChipSpec,
+    /// Device-memory bandwidth the decode path streams from (bytes/s).
+    pub mem_bw: f64,
+    pub link: LinkTech,
+    pub n_chips: usize,
+}
+
+/// The §VIII-A platform: 16 SN40L, 25 GB/s fabric, 150 ns latency,
+/// HBM-class 1.6 TB/s device memory.
+pub fn sn40l_x16() -> ServingSystem {
+    ServingSystem {
+        chip: crate::system::chip::sn40l(),
+        mem_bw: 1.6e12,
+        link: crate::system::interconnect::rdu_fabric(),
+        n_chips: 16,
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct ServingPoint {
+    pub tp: usize,
+    pub pp: usize,
+    pub batch: f64,
+    pub prompt_len: f64,
+    /// Decode context length (tokens already in the KV cache).
+    pub context: f64,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct ServingMetrics {
+    /// Time to first token (whole prefill pass), seconds.
+    pub ttft: f64,
+    /// System prefill throughput, tokens/s.
+    pub prefill_tps: f64,
+    /// Time per output token, seconds.
+    pub tpot: f64,
+    /// System decode throughput, tokens/s.
+    pub decode_tps: f64,
+    /// (compute, memory, network) share of the prefill critical path.
+    pub prefill_breakdown: (f64, f64, f64),
+    pub decode_breakdown: (f64, f64, f64),
+}
+
+/// Dataflow-chip achievable efficiency on the prefill GEMMs.
+const PREFILL_EFF: f64 = 0.8;
+
+/// Evaluate one (model, platform, TP×PP) serving point.
+pub fn evaluate(model: &LlamaConfig, sys: &ServingSystem, pt: &ServingPoint) -> ServingMetrics {
+    assert_eq!(pt.tp * pt.pp, sys.n_chips, "tp*pp must equal the chip count");
+    let tp = pt.tp as f64;
+    let pp = pt.pp as f64;
+    let layers = model.layers as f64;
+    let layers_per_stage = (layers / pp).ceil();
+
+    // ---- prefill ----
+    let tokens = pt.batch * pt.prompt_len;
+    let flops_layer = 2.0 * model.params_per_layer() * tokens / tp
+        + 4.0 * pt.prompt_len * model.d_model * tokens / tp;
+    let t_comp = flops_layer / (sys.chip.compute_flops() * PREFILL_EFF);
+    // weights stream once per layer activation (they exceed SRAM at stack
+    // scale); activations stay on-chip in the fused pipeline
+    let w_layer_chip = model.params_per_layer() * model.dtype_bytes / tp;
+    let t_mem = w_layer_chip / sys.mem_bw;
+    // 2 all-reduces per layer of the activation slice
+    let ar_bytes = tokens * model.d_model * model.dtype_bytes;
+    let t_net = if pt.tp > 1 {
+        2.0 * (2.0 * (tp - 1.0) / tp * ar_bytes / sys.link.bandwidth
+            + 2.0 * (tp - 1.0) * sys.link.latency)
+    } else {
+        0.0
+    };
+    let t_layer_prefill = t_comp.max(t_mem).max(t_net);
+    // serialization through the pipeline + inter-stage hops
+    let p2p = tokens * model.d_model * model.dtype_bytes / tp / sys.link.bandwidth
+        + sys.link.latency;
+    let ttft = layers * t_layer_prefill + (pp - 1.0) * p2p;
+    let stage_time = layers_per_stage * t_layer_prefill;
+    let prefill_tps = tokens / stage_time;
+
+    // ---- decode ----
+    let w_stage_chip = model.params_per_layer() * layers_per_stage * model.dtype_bytes / tp;
+    let kv_stage_chip =
+        pt.batch * pt.context * model.kv_bytes_per_token() * layers_per_stage / layers / tp;
+    let t_mem_stage = (w_stage_chip + kv_stage_chip) / sys.mem_bw;
+    let dec_flops_stage =
+        2.0 * model.params_per_layer() * layers_per_stage * pt.batch / tp;
+    let t_comp_stage = dec_flops_stage / (sys.chip.compute_flops() * 0.3);
+    let ar_dec = pt.batch * model.d_model * model.dtype_bytes;
+    let t_net_stage = if pt.tp > 1 {
+        layers_per_stage
+            * 2.0
+            * (2.0 * (tp - 1.0) / tp * ar_dec / sys.link.bandwidth
+                + 2.0 * (tp - 1.0) * sys.link.latency)
+    } else {
+        0.0
+    };
+    let t_stage_dec = t_mem_stage.max(t_comp_stage) + t_net_stage + if pp > 1.0 { p2p } else { 0.0 };
+    let tpot = pp * t_stage_dec;
+    // pp stages work on different in-flight batches concurrently
+    let decode_tps = pt.batch * pp / tpot;
+
+    let nz = |a: f64, b: f64, c: f64| {
+        let t = (a + b + c).max(1e-30);
+        (a / t, b / t, c / t)
+    };
+    ServingMetrics {
+        ttft,
+        prefill_tps,
+        tpot,
+        decode_tps,
+        prefill_breakdown: nz(t_comp, t_mem, t_net),
+        decode_breakdown: nz(t_comp_stage, t_mem_stage, t_net_stage / layers_per_stage.max(1.0)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::llama::{llama3_70b, llama3_8b};
+
+    fn base_pt() -> ServingPoint {
+        ServingPoint { tp: 16, pp: 1, batch: 1.0, prompt_len: 1024.0, context: 1024.0 }
+    }
+
+    #[test]
+    fn validates_against_measured_sn40l_decode() {
+        // §VIII-A: modeled 1188 tok/s vs measured 1100 tok/s for Llama3 8B
+        // decode on 16 SN40L at TP=16/PP=1 — our model must land in that
+        // band (within 15% of the measurement).
+        let m = evaluate(&llama3_8b(), &sn40l_x16(), &base_pt());
+        let err = (m.decode_tps - 1100.0).abs() / 1100.0;
+        assert!(err < 0.15, "decode_tps = {:.0}, err = {err:.2}", m.decode_tps);
+    }
+
+    #[test]
+    fn tp_reduces_latency_pp_raises_throughput() {
+        // Fig. 20 observations 1 & 2: TP lowers TPOT; PP raises decode
+        // throughput at the cost of latency.
+        let model = llama3_8b();
+        let sys = sn40l_x16();
+        let tp16 = evaluate(&model, &sys, &base_pt());
+        let tp4pp4 = evaluate(&model, &sys, &ServingPoint { tp: 4, pp: 4, ..base_pt() });
+        assert!(tp16.tpot < tp4pp4.tpot);
+        assert!(tp4pp4.decode_tps > tp16.decode_tps);
+    }
+
+    #[test]
+    fn tp_reduces_ttft_on_fast_fabric() {
+        // With a fast fabric (NVLink-class) prefill is compute-bound and
+        // the paper's "TP decreases TTFT" holds; on the 25 GB/s RDU fabric
+        // prefill is network-serialization-bound (Fig. 20 obs. 3) and TP
+        // cannot shrink TTFT — both regimes are asserted here.
+        let model = llama3_8b();
+        let mut sys = sn40l_x16();
+        sys.link = crate::system::interconnect::nvlink4();
+        let tp16 = evaluate(&model, &sys, &base_pt());
+        let tp4pp4 = evaluate(&model, &sys, &ServingPoint { tp: 4, pp: 4, ..base_pt() });
+        assert!(tp16.ttft < tp4pp4.ttft, "{} vs {}", tp16.ttft, tp4pp4.ttft);
+        let slow = sn40l_x16();
+        let (_, _, net) = evaluate(&model, &slow, &base_pt()).prefill_breakdown;
+        assert!(net > 0.5, "slow-fabric prefill should be network-bound");
+    }
+
+    #[test]
+    fn decode_is_memory_or_network_bound() {
+        let m = evaluate(&llama3_8b(), &sn40l_x16(), &base_pt());
+        let (c, mem, net) = m.decode_breakdown;
+        assert!(mem + net > c, "decode must not be compute-bound");
+    }
+
+    #[test]
+    fn prefill_is_compute_heavy_at_long_prompts() {
+        let pt = ServingPoint { prompt_len: 8192.0, batch: 8.0, ..base_pt() };
+        let m = evaluate(&llama3_8b(), &sn40l_x16(), &pt);
+        let (c, mem, _net) = m.prefill_breakdown;
+        assert!(c > mem, "prefill at long prompts should be compute-heavy");
+    }
+
+    #[test]
+    fn bigger_model_slower() {
+        let small = evaluate(&llama3_8b(), &sn40l_x16(), &base_pt());
+        let big = evaluate(&llama3_70b(), &sn40l_x16(), &base_pt());
+        assert!(big.tpot > small.tpot);
+        assert!(big.ttft > small.ttft);
+    }
+}

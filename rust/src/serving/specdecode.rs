@@ -1,0 +1,161 @@
+//! Speculative decoding model (§VIII-B): a small draft model proposes
+//! tokens, the large target model verifies them in one parallel pass.
+//!
+//! * Sequence-based [50]: the draft emits K tokens autoregressively; the
+//!   expected accepted length at per-token acceptance rate a is the
+//!   truncated geometric sum (1 − a^{K+1}) / (1 − a).
+//! * Tree-based (SpecInfer [58]): the draft expands a tree of 2^K tokens,
+//!   boosting the effective acceptance via path diversity but paying an
+//!   exponential draft-generation cost — the Fig. 21 trade-off.
+
+use super::{evaluate, ServingPoint, ServingSystem};
+use crate::graph::llama::LlamaConfig;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scheme {
+    Sequence,
+    Tree,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct SpecDecodePoint {
+    /// Draft window size K.
+    pub window: usize,
+    /// Per-token acceptance rate of the draft model.
+    pub acceptance: f64,
+    pub scheme: Scheme,
+}
+
+/// Expected tokens committed per verification step.
+pub fn expected_accepted(window: usize, acceptance: f64) -> f64 {
+    // Σ_{i=0..K} a^i = (1 - a^{K+1}) / (1 - a); +1 for the bonus token the
+    // verifier always produces is folded into the i = 0 term.
+    let a = acceptance.clamp(0.0, 0.999_999);
+    (1.0 - a.powi(window as i32 + 1)) / (1.0 - a)
+}
+
+/// Effective acceptance under tree expansion: each position has two
+/// alternatives on average, so a token fails only if both branches fail.
+pub fn tree_acceptance(acceptance: f64) -> f64 {
+    1.0 - (1.0 - acceptance) * (1.0 - acceptance)
+}
+
+/// Decoding throughput (tokens/s) of a (draft, target) pair on `sys`.
+pub fn throughput(
+    draft: &LlamaConfig,
+    target: &LlamaConfig,
+    sys: &ServingSystem,
+    pt: &SpecDecodePoint,
+) -> f64 {
+    let sp = ServingPoint {
+        tp: sys.n_chips,
+        pp: 1,
+        batch: 1.0,
+        prompt_len: 1024.0,
+        context: 2048.0,
+    };
+    let tpot_draft = evaluate(draft, sys, &sp).tpot;
+    let tpot_target = evaluate(target, sys, &sp).tpot;
+
+    match pt.scheme {
+        Scheme::Sequence => {
+            let e = expected_accepted(pt.window, pt.acceptance);
+            let t_draft = pt.window as f64 * tpot_draft;
+            // verification = one target pass over K+1 tokens (memory-bound:
+            // ≈ one decode step)
+            e / (t_draft + tpot_target)
+        }
+        Scheme::Tree => {
+            let e = expected_accepted(pt.window, tree_acceptance(pt.acceptance));
+            // the draft must emit 2^K − 1 tree tokens autoregressively along
+            // each path (exponential generation cost — the §VIII-B overhead)
+            let tree_tokens = (1u64 << pt.window.min(30)) as f64 - 1.0;
+            let t_draft = tpot_draft * tree_tokens;
+            // verifying a 2^K-token tree widens the target pass: tree
+            // attention + KV handling grow with the token count
+            let t_verify = tpot_target * (1.0 + 0.05 * (tree_tokens + 1.0));
+            e / (t_draft + t_verify)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::llama::{llama3_405b, llama3_70b, llama3_8b, llama_68m};
+    use crate::serving::sn40l_x16;
+
+    #[test]
+    fn expected_accepted_limits() {
+        assert!((expected_accepted(4, 0.0) - 1.0).abs() < 1e-12);
+        // near-perfect acceptance commits ~K+1 tokens
+        assert!((expected_accepted(4, 0.999999) - 5.0).abs() < 1e-3);
+        // monotone in both arguments
+        assert!(expected_accepted(6, 0.8) > expected_accepted(3, 0.8));
+        assert!(expected_accepted(4, 0.9) > expected_accepted(4, 0.5));
+    }
+
+    #[test]
+    fn spec_decode_beats_vanilla_with_good_draft() {
+        let sys = sn40l_x16();
+        let target = llama3_405b();
+        let vanilla = {
+            let sp = ServingPoint { tp: 16, pp: 1, batch: 1.0, prompt_len: 1024.0, context: 2048.0 };
+            1.0 / evaluate(&target, &sys, &sp).tpot
+        };
+        let spec = throughput(
+            &llama3_8b(),
+            &target,
+            &sys,
+            &SpecDecodePoint { window: 4, acceptance: 0.8, scheme: Scheme::Sequence },
+        );
+        assert!(spec > vanilla, "spec {spec:.1} <= vanilla {vanilla:.1}");
+    }
+
+    #[test]
+    fn large_draft_has_too_much_overhead() {
+        // §VIII-B: the 70B draft is worse than the 8B draft
+        let sys = sn40l_x16();
+        let target = llama3_405b();
+        let pt = SpecDecodePoint { window: 4, acceptance: 0.8, scheme: Scheme::Sequence };
+        let with_8b = throughput(&llama3_8b(), &target, &sys, &pt);
+        let with_70b = throughput(&llama3_70b(), &target, &sys, &pt);
+        assert!(with_8b > with_70b);
+    }
+
+    #[test]
+    fn tree_prefers_tiny_draft_and_short_window() {
+        let sys = sn40l_x16();
+        let target = llama3_405b();
+        // tree with the 68M draft at K=2 beats tree with the 8B draft at K=6
+        let small_short = throughput(
+            &llama_68m(),
+            &target,
+            &sys,
+            &SpecDecodePoint { window: 2, acceptance: 0.7, scheme: Scheme::Tree },
+        );
+        let big_long = throughput(
+            &llama3_8b(),
+            &target,
+            &sys,
+            &SpecDecodePoint { window: 6, acceptance: 0.7, scheme: Scheme::Tree },
+        );
+        assert!(small_short > big_long);
+    }
+
+    #[test]
+    fn sequence_improves_with_window_and_acceptance() {
+        let sys = sn40l_x16();
+        let target = llama3_405b();
+        let t = |w, a| {
+            throughput(
+                &llama3_8b(),
+                &target,
+                &sys,
+                &SpecDecodePoint { window: w, acceptance: a, scheme: Scheme::Sequence },
+            )
+        };
+        assert!(t(6, 0.9) > t(2, 0.9));
+        assert!(t(4, 0.9) > t(4, 0.6));
+    }
+}

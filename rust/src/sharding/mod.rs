@@ -1,0 +1,345 @@
+//! Kernel sharding strategies and tensor layout conversions (§IV-B, Fig. 4).
+//!
+//! TP sharding a kernel across `tp` chips introduces two communication
+//! types: (a) communication *inherent* to the chosen scheme (e.g. the
+//! all-reduce of a partial-sum GEMM — Fig. 4A) and (b) *layout conversion*
+//! between a producer's output layout and a consumer's expected input
+//! layout (Fig. 4B). The per-scheme costs populate the paper's `c_i`
+//! vectors; the pairwise conversion costs populate the `C_j` matrices.
+
+use crate::collective::{time_hier, Collective};
+use crate::graph::{Kernel, KernelKind};
+use crate::system::topology::Dim;
+
+/// Distribution of a tensor across the TP group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Layout {
+    /// Full copy on every chip.
+    Replicated,
+    /// Sharded along the row (token/batch) dimension.
+    Row,
+    /// Sharded along the column (feature) dimension.
+    Col,
+    /// Sharded along attention heads (or any batch dimension).
+    Head,
+    /// Each chip holds a partial sum of the full tensor.
+    Partial,
+}
+
+/// One sharding scheme for a kernel (one entry of `c_i`).
+#[derive(Debug, Clone)]
+pub struct ShardScheme {
+    pub name: &'static str,
+    /// Per-chip FLOP = kernel FLOP × this factor.
+    pub flops_factor: f64,
+    /// Per-chip resident weight bytes = kernel weights × this factor.
+    pub weight_factor: f64,
+    /// Per-chip activation bytes of the output = tensor bytes × this.
+    pub out_bytes_factor: f64,
+    /// Inherent collective: (op, bytes factor on the *output* tensor size).
+    pub inherent: Option<(Collective, f64)>,
+    /// Weight-tensor communication the scheme implies (Fig. 4A: replicating
+    /// a weight operand costs a broadcast): (op, factor on weight bytes).
+    pub weight_comm: Option<(Collective, f64)>,
+    /// Layout this scheme requires on its (activation) inputs.
+    pub in_layout: Layout,
+    /// Layout this scheme produces.
+    pub out_layout: Layout,
+}
+
+impl ShardScheme {
+    #[allow(clippy::too_many_arguments)]
+    fn new(
+        name: &'static str,
+        flops_factor: f64,
+        weight_factor: f64,
+        out_bytes_factor: f64,
+        inherent: Option<(Collective, f64)>,
+        weight_comm: Option<(Collective, f64)>,
+        in_layout: Layout,
+        out_layout: Layout,
+    ) -> Self {
+        ShardScheme {
+            name,
+            flops_factor,
+            weight_factor,
+            out_bytes_factor,
+            inherent,
+            weight_comm,
+            in_layout,
+            out_layout,
+        }
+    }
+}
+
+/// Enumerate the sharding schemes of a kernel for a TP degree (§IV-B).
+/// With tp == 1 only the trivial scheme exists.
+pub fn schemes_for(kind: &KernelKind, tp: usize) -> Vec<ShardScheme> {
+    use Collective::*;
+    use Layout::*;
+    let t = tp as f64;
+    if tp <= 1 {
+        return vec![ShardScheme::new("local", 1.0, 1.0, 1.0, None, None, Replicated, Replicated)];
+    }
+    let inv = 1.0 / t;
+    match kind {
+        KernelKind::Gemm { b, .. } => {
+            if *b > 1.0 {
+                // Batched GEMM (attention score/context): both operands are
+                // activations, so the only valid shardings keep each batch
+                // (head) element local — shard the batch dim or replicate.
+                let mut v = Vec::new();
+                if *b >= t {
+                    v.push(ShardScheme::new("head", inv, 1.0, inv, None, None, Head, Head));
+                }
+                v.push(ShardScheme::new("rep", 1.0, 1.0, 1.0, None, None, Replicated, Replicated));
+                v
+            } else {
+                vec![
+                    // Fig. 4A scheme A: shard rows of A, replicate weights.
+                    ShardScheme::new("row", inv, 1.0, inv, None, Some((Broadcast, 1.0)), Row, Row),
+                    // Megatron column parallelism: shard the weight columns.
+                    ShardScheme::new("col", inv, inv, inv, None, None, Replicated, Col),
+                    // Fig. 4A scheme B: shard the contraction dim → partials.
+                    ShardScheme::new("kdim", inv, inv, 1.0, None, None, Col, Partial),
+                    // no sharding at all: weights still replicated → broadcast
+                    ShardScheme::new("rep", 1.0, 1.0, 1.0, None, Some((Broadcast, 1.0)), Replicated, Replicated),
+                ]
+            }
+        }
+        KernelKind::FusedLayer { .. } => vec![
+            // Internally Megatron-sharded layer: weights/compute divided,
+            // activations replicated at the boundary, and the layer's two
+            // forward all-reduces surface as inherent communication.
+            ShardScheme::new(
+                "megatron",
+                inv,
+                inv,
+                1.0,
+                Some((AllReduce, 2.0)),
+                None,
+                Replicated,
+                Replicated,
+            ),
+            ShardScheme::new(
+                "rep",
+                1.0,
+                1.0,
+                1.0,
+                None,
+                Some((Broadcast, 1.0)),
+                Replicated,
+                Replicated,
+            ),
+        ],
+        KernelKind::Softmax { .. } => vec![
+            ShardScheme::new("head", inv, 1.0, inv, None, None, Head, Head),
+            ShardScheme::new("row", inv, 1.0, inv, None, None, Row, Row),
+            ShardScheme::new("rep", 1.0, 1.0, 1.0, None, None, Replicated, Replicated),
+        ],
+        KernelKind::Elementwise { .. } => vec![
+            ShardScheme::new("row", inv, 1.0, inv, None, None, Row, Row),
+            ShardScheme::new("col", inv, 1.0, inv, None, None, Col, Col),
+            ShardScheme::new("head", inv, 1.0, inv, None, None, Head, Head),
+            ShardScheme::new("rep", 1.0, 1.0, 1.0, None, None, Replicated, Replicated),
+        ],
+        KernelKind::LayerNorm { .. } => vec![
+            // LN reduces across features: needs full rows locally.
+            ShardScheme::new("row", inv, 1.0, inv, None, None, Row, Row),
+            ShardScheme::new("rep", 1.0, 1.0, 1.0, None, None, Replicated, Replicated),
+        ],
+        KernelKind::Embedding { .. } => vec![
+            // tables sharded across chips; pooled vectors exchanged all-to-all
+            ShardScheme::new("table", inv, inv, inv, Some((AllToAll, inv)), None, Row, Row),
+            ShardScheme::new("rep", 1.0, 1.0, 1.0, None, Some((Broadcast, 1.0)), Replicated, Replicated),
+        ],
+        KernelKind::Fft { .. } => vec![
+            // pencil decomposition: local 1-D FFTs, no inherent comm
+            ShardScheme::new("pencil", inv, 1.0, inv, None, None, Row, Row),
+            ShardScheme::new("rep", 1.0, 1.0, 1.0, None, None, Replicated, Replicated),
+        ],
+        KernelKind::Transpose { .. } => vec![
+            // global transpose = all-to-all of the sharded volume
+            ShardScheme::new("alltoall", inv, 1.0, inv, Some((AllToAll, inv)), None, Row, Row),
+            ShardScheme::new("rep", 1.0, 1.0, 1.0, None, None, Replicated, Replicated),
+        ],
+    }
+}
+
+/// Layout-conversion collective required to feed a `to` consumer from a
+/// `from` producer (one entry of `C_j`); None = free.
+pub fn conversion_op(from: Layout, to: Layout) -> Option<Collective> {
+    use Collective::*;
+    use Layout::*;
+    match (from, to) {
+        _ if from == to => None,
+        // a replicated tensor can be sliced locally into any sharding
+        (Replicated, _) => None,
+        // head-sharding of [heads, s, hd] merges to a feature(column)-shard
+        // of [s, h]: the same chips hold the same elements — free (this is
+        // what lets the optimizer discover Megatron's 2-allreduce forward)
+        (Head, Col) | (Col, Head) => None,
+        // partial sums must be combined; reduce-scatter if the consumer
+        // wants a sharded layout (Megatron sequence-parallel), all-reduce
+        // for a replicated one
+        (Partial, Replicated) => Some(AllReduce),
+        (Partial, _) => Some(ReduceScatter),
+        // gather shards to reconstruct the full tensor
+        (_, Replicated) => Some(AllGather),
+        // resharding along a different axis
+        (_, _) => Some(AllToAll),
+    }
+}
+
+/// Time of the layout conversion over the TP dims. `bytes` is the full
+/// (unsharded) tensor size.
+///
+/// Payload conventions match `collective::time` (which takes the *logical
+/// full tensor size*): all-reduce and reduce-scatter operate on full-size
+/// partial buffers; all-gather reconstructs the full size; only all-to-all
+/// re-shards per-chip shards of S/tp.
+pub fn conversion_time(from: Layout, to: Layout, bytes: f64, tp_dims: &[&Dim]) -> f64 {
+    let tp: usize = tp_dims.iter().map(|d| d.size).product();
+    match conversion_op(from, to) {
+        None => 0.0,
+        Some(op) => {
+            let payload = match op {
+                Collective::AllToAll => bytes / tp.max(1) as f64,
+                _ => bytes,
+            };
+            time_hier(op, payload, tp_dims)
+        }
+    }
+}
+
+/// Inherent communication time of a scheme (one entry of `c_i`):
+/// output-tensor collective (e.g. the partial-sum all-reduce) plus the
+/// weight-operand communication (Fig. 4A's broadcast of a replicated
+/// weight tensor). `out_bytes`/`weight_bytes` are full (unsharded) sizes.
+pub fn inherent_time(
+    scheme: &ShardScheme,
+    out_bytes: f64,
+    weight_bytes: f64,
+    tp_dims: &[&Dim],
+) -> f64 {
+    let t_out = match scheme.inherent {
+        None => 0.0,
+        Some((op, factor)) => time_hier(op, out_bytes * factor, tp_dims),
+    };
+    let t_w = match scheme.weight_comm {
+        None => 0.0,
+        Some((op, factor)) => time_hier(op, weight_bytes * factor, tp_dims),
+    };
+    t_out + t_w
+}
+
+/// Per-chip FLOP of a kernel under a scheme.
+pub fn sharded_flops(kernel: &Kernel, scheme: &ShardScheme) -> f64 {
+    kernel.flops * scheme.flops_factor
+}
+
+/// Per-chip weight bytes of a kernel under a scheme.
+pub fn sharded_weights(kernel: &Kernel, scheme: &ShardScheme) -> f64 {
+    kernel.weight_bytes * scheme.weight_factor
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::system::interconnect::nvlink4;
+    use crate::system::topology::{Dim, DimKind};
+
+    fn ring8() -> Dim {
+        Dim::new(DimKind::Ring, 8, &nvlink4())
+    }
+
+    #[test]
+    fn tp1_has_single_trivial_scheme() {
+        let s = schemes_for(&KernelKind::Gemm { b: 1.0, m: 1.0, k: 1.0, n: 1.0 }, 1);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0].flops_factor, 1.0);
+        assert!(s[0].inherent.is_none());
+    }
+
+    #[test]
+    fn gemm_schemes_cover_fig4() {
+        let s = schemes_for(&KernelKind::Gemm { b: 1.0, m: 8.0, k: 8.0, n: 8.0 }, 8);
+        let names: Vec<_> = s.iter().map(|x| x.name).collect();
+        assert!(names.contains(&"row") && names.contains(&"col") && names.contains(&"kdim"));
+        // no head scheme for b=1
+        assert!(!names.contains(&"head"));
+        // batched gemm gets the head scheme
+        let s = schemes_for(&KernelKind::Gemm { b: 96.0, m: 8.0, k: 8.0, n: 8.0 }, 8);
+        assert!(s.iter().any(|x| x.name == "head"));
+    }
+
+    #[test]
+    fn kdim_scheme_produces_partials() {
+        let s = schemes_for(&KernelKind::Gemm { b: 1.0, m: 8.0, k: 8.0, n: 8.0 }, 8);
+        let kdim = s.iter().find(|x| x.name == "kdim").unwrap();
+        assert_eq!(kdim.out_layout, Layout::Partial);
+        assert_eq!(kdim.out_bytes_factor, 1.0); // each chip holds a full-size partial
+    }
+
+    #[test]
+    fn conversion_identity_and_replicated_are_free() {
+        for l in [Layout::Row, Layout::Col, Layout::Head, Layout::Replicated] {
+            assert_eq!(conversion_op(l, l), None);
+            assert_eq!(conversion_op(Layout::Replicated, l), None);
+        }
+    }
+
+    #[test]
+    fn conversion_partial_needs_reduction() {
+        assert_eq!(conversion_op(Layout::Partial, Layout::Replicated), Some(Collective::AllReduce));
+        assert_eq!(
+            conversion_op(Layout::Partial, Layout::Row),
+            Some(Collective::ReduceScatter)
+        );
+    }
+
+    #[test]
+    fn conversion_reshard_is_alltoall() {
+        assert_eq!(conversion_op(Layout::Row, Layout::Col), Some(Collective::AllToAll));
+        assert_eq!(conversion_op(Layout::Head, Layout::Row), Some(Collective::AllToAll));
+    }
+
+    #[test]
+    fn conversion_gather_to_replicated() {
+        assert_eq!(conversion_op(Layout::Row, Layout::Replicated), Some(Collective::AllGather));
+    }
+
+    #[test]
+    fn conversion_time_scales_with_bytes() {
+        let d = ring8();
+        let t1 = conversion_time(Layout::Partial, Layout::Replicated, 1e9, &[&d]);
+        let t2 = conversion_time(Layout::Partial, Layout::Replicated, 2e9, &[&d]);
+        assert!(t2 > 1.9 * t1);
+        assert_eq!(conversion_time(Layout::Row, Layout::Row, 1e9, &[&d]), 0.0);
+    }
+
+    #[test]
+    fn embedding_inherent_alltoall() {
+        let s = schemes_for(&KernelKind::Embedding { lookups: 1.0, dim: 1.0 }, 8);
+        let table = s.iter().find(|x| x.name == "table").unwrap();
+        assert!(matches!(table.inherent, Some((Collective::AllToAll, _))));
+        let d = ring8();
+        assert!(inherent_time(table, 1e9, 0.0, &[&d]) > 0.0);
+    }
+
+    #[test]
+    fn sharded_flops_and_weights() {
+        let k = Kernel {
+            name: "g".into(),
+            kind: KernelKind::Gemm { b: 1.0, m: 8.0, k: 8.0, n: 8.0 },
+            flops: 1024.0,
+            weight_bytes: 128.0,
+        };
+        let s = schemes_for(&k.kind, 8);
+        let col = s.iter().find(|x| x.name == "col").unwrap();
+        assert_eq!(sharded_flops(&k, col), 128.0);
+        assert_eq!(sharded_weights(&k, col), 16.0);
+        let row = s.iter().find(|x| x.name == "row").unwrap();
+        assert_eq!(sharded_weights(&k, row), 128.0); // weights replicated
+    }
+}

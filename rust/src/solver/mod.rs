@@ -1,0 +1,442 @@
+//! Optimization toolkit replacing Gurobi (DESIGN.md §Substitutions).
+//!
+//! The paper's two MIP formulations minimize (a) the max per-stage critical
+//! time over contiguous pipeline partitionings (§IV) and (b) the sum of
+//! per-partition critical times over contiguous fusion partitionings (§V),
+//! with per-kernel discrete choices (sharding schemes, tile counts) nested
+//! inside. On the evaluated graphs both reduce to exact dynamic programs;
+//! this module provides those DPs plus a simulated-annealing fallback for
+//! non-contiguous exploration and an exhaustive assignment enumerator used
+//! by the tests to certify optimality on small instances.
+
+use crate::util::prng::Rng;
+
+/// Exact DP: split items 0..n into at most `max_parts` contiguous segments
+/// minimizing the SUM of segment costs. `cost(a, b)` is the cost of segment
+/// [a, b); return `f64::INFINITY` for infeasible segments.
+///
+/// Returns (total cost, boundaries) where boundaries are the segment start
+/// indices (first is always 0). O(n² · 1) — `max_parts` only caps the count.
+pub fn partition_min_sum<F: Fn(usize, usize) -> f64>(
+    n: usize,
+    max_parts: usize,
+    cost: F,
+) -> Option<(f64, Vec<usize>)> {
+    assert!(n > 0 && max_parts > 0);
+    let inf = f64::INFINITY;
+    // dp[p][i] = best cost of covering 0..i with exactly <= p parts
+    // rolling over p to keep memory O(n).
+    let mut dp = vec![inf; n + 1];
+    let mut back = vec![vec![usize::MAX; n + 1]; max_parts + 1];
+    dp[0] = 0.0;
+    let mut best: Option<(f64, usize)> = None;
+    let mut prev = dp.clone();
+    for p in 1..=max_parts {
+        std::mem::swap(&mut prev, &mut dp);
+        dp.iter_mut().for_each(|v| *v = inf);
+        dp[0] = 0.0;
+        for i in 1..=n {
+            for j in 0..i {
+                if prev[j].is_finite() {
+                    let c = cost(j, i);
+                    let cand = prev[j] + c;
+                    if cand < dp[i] {
+                        dp[i] = cand;
+                        back[p][i] = j;
+                    }
+                }
+            }
+        }
+        if dp[n].is_finite() && best.map_or(true, |(b, _)| dp[n] < b) {
+            best = Some((dp[n], p));
+        }
+    }
+    let (total, parts) = best?;
+    // trace back boundaries
+    let mut bounds = Vec::new();
+    let (mut p, mut i) = (parts, n);
+    while i > 0 {
+        let j = back[p][i];
+        bounds.push(j);
+        i = j;
+        p -= 1;
+    }
+    bounds.reverse();
+    Some((total, bounds))
+}
+
+/// Exact DP: split items 0..n into at most `max_parts` contiguous segments
+/// minimizing the MAX segment cost. Same conventions as `partition_min_sum`.
+pub fn partition_min_max<F: Fn(usize, usize) -> f64>(
+    n: usize,
+    max_parts: usize,
+    cost: F,
+) -> Option<(f64, Vec<usize>)> {
+    assert!(n > 0 && max_parts > 0);
+    let inf = f64::INFINITY;
+    let mut prev = vec![inf; n + 1];
+    let mut dp = vec![inf; n + 1];
+    let mut back = vec![vec![usize::MAX; n + 1]; max_parts + 1];
+    prev[0] = 0.0;
+    let mut best: Option<(f64, usize)> = None;
+    for p in 1..=max_parts {
+        dp.iter_mut().for_each(|v| *v = inf);
+        dp[0] = 0.0;
+        for i in 1..=n {
+            for j in 0..i {
+                if prev[j].is_finite() {
+                    let c = cost(j, i).max(prev[j]);
+                    if c < dp[i] {
+                        dp[i] = c;
+                        back[p][i] = j;
+                    }
+                }
+            }
+        }
+        if dp[n].is_finite() && best.map_or(true, |(b, _)| dp[n] < b) {
+            best = Some((dp[n], p));
+        }
+        std::mem::swap(&mut prev, &mut dp);
+    }
+    let (total, parts) = best?;
+    let mut bounds = Vec::new();
+    // `prev` holds the dp of the last p; re-trace via back tables
+    let (mut p, mut i) = (parts, n);
+    while i > 0 {
+        let j = back[p][i];
+        bounds.push(j);
+        i = j;
+        p -= 1;
+    }
+    bounds.reverse();
+    Some((total, bounds))
+}
+
+/// Convert segment boundaries (start indices) into a per-item partition id.
+pub fn bounds_to_assignment(n: usize, bounds: &[usize]) -> Vec<usize> {
+    let mut part = vec![0usize; n];
+    for (p, &start) in bounds.iter().enumerate() {
+        let end = bounds.get(p + 1).copied().unwrap_or(n);
+        for item in part.iter_mut().take(end).skip(start) {
+            *item = p;
+        }
+    }
+    part
+}
+
+/// Discrete coordinate-descent / iterated-conditional-modes over per-item
+/// label choices with pairwise costs, with `restarts` random restarts.
+/// Exact on chains when `sweeps` is large enough; the tests certify against
+/// exhaustive search on small instances.
+///
+/// `n_labels[i]` = number of choices for item i;
+/// `unary(i, l)` = standalone cost; `pair_sum(i, labels)` = total pairwise
+/// cost of item i's label against its current neighbours.
+pub struct Ics<'a> {
+    pub n_labels: &'a [usize],
+    pub unary: &'a dyn Fn(usize, usize) -> f64,
+    /// cost contribution of item i given the full label vector
+    pub local: &'a dyn Fn(usize, &[usize]) -> f64,
+    /// full objective (for accepting sweeps / restarts)
+    pub total: &'a dyn Fn(&[usize]) -> f64,
+}
+
+pub fn coordinate_descent(ics: &Ics, restarts: usize, sweeps: usize, seed: u64) -> (f64, Vec<usize>) {
+    let n = ics.n_labels.len();
+    let mut rng = Rng::new(seed);
+    let mut best_labels: Vec<usize> = vec![0; n];
+    let mut best_cost = f64::INFINITY;
+    for r in 0..restarts.max(1) {
+        let mut labels: Vec<usize> = if r == 0 {
+            vec![0; n] // deterministic start: first scheme everywhere
+        } else {
+            (0..n).map(|i| rng.below(ics.n_labels[i])).collect()
+        };
+        for _ in 0..sweeps {
+            let mut changed = false;
+            for i in 0..n {
+                let mut best_l = labels[i];
+                let mut best_c = (ics.unary)(i, labels[i]) + (ics.local)(i, &labels);
+                for l in 0..ics.n_labels[i] {
+                    if l == labels[i] {
+                        continue;
+                    }
+                    let old = labels[i];
+                    labels[i] = l;
+                    let c = (ics.unary)(i, l) + (ics.local)(i, &labels);
+                    if c < best_c - 1e-15 {
+                        best_c = c;
+                        best_l = l;
+                    }
+                    labels[i] = old;
+                }
+                if best_l != labels[i] {
+                    labels[i] = best_l;
+                    changed = true;
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+        let cost = (ics.total)(&labels);
+        if cost < best_cost {
+            best_cost = cost;
+            best_labels = labels;
+        }
+    }
+    (best_cost, best_labels)
+}
+
+/// Exhaustively enumerate all label vectors (certification on small
+/// instances; also the exact path when the product of choices is small).
+pub fn exhaustive_labels<F: FnMut(&[usize]) -> f64>(
+    n_labels: &[usize],
+    mut objective: F,
+) -> (f64, Vec<usize>) {
+    let n = n_labels.len();
+    let mut labels = vec![0usize; n];
+    let mut best = (f64::INFINITY, labels.clone());
+    loop {
+        let c = objective(&labels);
+        if c < best.0 {
+            best = (c, labels.clone());
+        }
+        // odometer increment
+        let mut i = 0;
+        loop {
+            if i == n {
+                return best;
+            }
+            labels[i] += 1;
+            if labels[i] < n_labels[i] {
+                break;
+            }
+            labels[i] = 0;
+            i += 1;
+        }
+    }
+}
+
+/// Number of label vectors an exhaustive enumeration would visit.
+pub fn label_space_size(n_labels: &[usize]) -> f64 {
+    n_labels.iter().map(|&c| c as f64).product()
+}
+
+/// Simulated annealing over per-item labels (fallback for large coupled
+/// instances; not needed for the paper's graphs but kept for generality).
+pub fn anneal(
+    n_labels: &[usize],
+    total: &dyn Fn(&[usize]) -> f64,
+    iters: usize,
+    seed: u64,
+) -> (f64, Vec<usize>) {
+    let n = n_labels.len();
+    let mut rng = Rng::new(seed);
+    let mut labels: Vec<usize> = (0..n).map(|i| rng.below(n_labels[i])).collect();
+    let mut cost = total(&labels);
+    let mut best = (cost, labels.clone());
+    let t0: f64 = 1.0;
+    for it in 0..iters {
+        let temp = t0 * (1.0 - it as f64 / iters as f64).max(1e-3);
+        let i = rng.below(n);
+        if n_labels[i] <= 1 {
+            continue;
+        }
+        let old = labels[i];
+        let mut new = rng.below(n_labels[i]);
+        if new == old {
+            new = (new + 1) % n_labels[i];
+        }
+        labels[i] = new;
+        let c = total(&labels);
+        let accept = c <= cost || rng.f64() < ((cost - c) / (temp * cost.abs().max(1e-12))).exp();
+        if accept {
+            cost = c;
+            if c < best.0 {
+                best = (c, labels.clone());
+            }
+        } else {
+            labels[i] = old;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+
+    #[test]
+    fn min_sum_trivial_single_segment() {
+        let (c, b) = partition_min_sum(5, 1, |a, b| (b - a) as f64).unwrap();
+        assert_eq!(c, 5.0);
+        assert_eq!(b, vec![0]);
+    }
+
+    #[test]
+    fn min_sum_prefers_splitting_when_cheaper() {
+        // cost = (len)^2 -> splitting always helps
+        let (c, b) = partition_min_sum(6, 3, |a, b| ((b - a) * (b - a)) as f64).unwrap();
+        assert_eq!(b.len(), 3);
+        assert_eq!(c, 12.0); // 2^2 * 3
+    }
+
+    #[test]
+    fn min_sum_respects_infeasible_segments() {
+        // segments longer than 2 are infeasible
+        let (c, b) =
+            partition_min_sum(6, 6, |a, b| if b - a > 2 { f64::INFINITY } else { 1.0 }).unwrap();
+        assert_eq!(c, 3.0);
+        assert_eq!(b.len(), 3);
+    }
+
+    #[test]
+    fn min_sum_infeasible_returns_none() {
+        let r = partition_min_sum(4, 1, |a, b| if b - a > 2 { f64::INFINITY } else { 1.0 });
+        assert!(r.is_none());
+    }
+
+    #[test]
+    fn min_max_balances_segments() {
+        let w = [3.0, 1.0, 1.0, 1.0, 3.0];
+        let cost = |a: usize, b: usize| w[a..b].iter().sum::<f64>();
+        let (c, bounds) = partition_min_max(5, 3, cost).unwrap();
+        assert_eq!(c, 3.0);
+        assert_eq!(bounds.len(), 3);
+        assert_eq!(bounds, vec![0, 1, 4]);
+    }
+
+    #[test]
+    fn min_max_vs_brute_force_property() {
+        check("minmax-dp-optimal", 60, |rng| {
+            let n = 2 + rng.below(7);
+            let parts = 1 + rng.below(4);
+            let w: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 10.0)).collect();
+            let cost = |a: usize, b: usize| w[a..b].iter().sum::<f64>();
+            let dp = partition_min_max(n, parts, cost).unwrap().0;
+            // brute force over all boundary subsets
+            let mut best = f64::INFINITY;
+            let masks = 1u32 << (n - 1);
+            for m in 0..masks {
+                if (m.count_ones() as usize) >= parts {
+                    continue;
+                }
+                let mut maxseg = 0.0f64;
+                let mut start = 0;
+                for i in 0..n {
+                    let end_here = i == n - 1 || (m >> i) & 1 == 1;
+                    if end_here {
+                        maxseg = maxseg.max(cost(start, i + 1));
+                        start = i + 1;
+                    }
+                }
+                best = best.min(maxseg);
+            }
+            assert!((dp - best).abs() < 1e-9, "dp {dp} brute {best} w {w:?}");
+        });
+    }
+
+    #[test]
+    fn min_sum_vs_brute_force_property() {
+        check("minsum-dp-optimal", 60, |rng| {
+            let n = 2 + rng.below(7);
+            let parts = 1 + rng.below(4);
+            let w: Vec<f64> = (0..n).map(|_| rng.uniform(0.1, 10.0)).collect();
+            // segment cost = max element * len (arbitrary nonlinear)
+            let cost = |a: usize, b: usize| {
+                w[a..b].iter().cloned().fold(0.0f64, f64::max) * (b - a) as f64
+            };
+            let dp = partition_min_sum(n, parts, cost).unwrap().0;
+            let mut best = f64::INFINITY;
+            let masks = 1u32 << (n - 1);
+            for m in 0..masks {
+                if (m.count_ones() as usize) >= parts {
+                    continue;
+                }
+                let mut tot = 0.0f64;
+                let mut start = 0;
+                for i in 0..n {
+                    if i == n - 1 || (m >> i) & 1 == 1 {
+                        tot += cost(start, i + 1);
+                        start = i + 1;
+                    }
+                }
+                best = best.min(tot);
+            }
+            assert!((dp - best).abs() < 1e-9, "dp {dp} brute {best}");
+        });
+    }
+
+    #[test]
+    fn bounds_to_assignment_roundtrip() {
+        let part = bounds_to_assignment(6, &[0, 2, 5]);
+        assert_eq!(part, vec![0, 0, 1, 1, 1, 2]);
+    }
+
+    #[test]
+    fn exhaustive_finds_global_min() {
+        let n_labels = [3usize, 3, 3];
+        let (c, l) = exhaustive_labels(&n_labels, |ls| {
+            ls.iter().map(|&x| (x as f64 - 1.5).powi(2)).sum()
+        });
+        assert_eq!(l, vec![1, 1, 1]); // closest to 1.5 among {0,1,2} (ties -> first found)
+        assert!((c - 3.0 * 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn coordinate_descent_matches_exhaustive_on_chain() {
+        check("icm-chain-optimal", 25, |rng| {
+            let n = 2 + rng.below(4);
+            let k = 2 + rng.below(2);
+            let n_labels: Vec<usize> = vec![k; n];
+            // random chain MRF
+            let unary_tbl: Vec<Vec<f64>> =
+                (0..n).map(|_| (0..k).map(|_| rng.uniform(0.0, 3.0)).collect()).collect();
+            let pair_tbl: Vec<Vec<Vec<f64>>> = (0..n.saturating_sub(1))
+                .map(|_| {
+                    (0..k)
+                        .map(|_| (0..k).map(|_| rng.uniform(0.0, 3.0)).collect())
+                        .collect()
+                })
+                .collect();
+            let total = |ls: &[usize]| -> f64 {
+                let mut c: f64 = ls.iter().enumerate().map(|(i, &l)| unary_tbl[i][l]).sum();
+                for i in 0..n - 1 {
+                    c += pair_tbl[i][ls[i]][ls[i + 1]];
+                }
+                c
+            };
+            let (ex, _) = exhaustive_labels(&n_labels, |ls| total(ls));
+            let unary = |i: usize, l: usize| unary_tbl[i][l];
+            let local = |i: usize, ls: &[usize]| {
+                let mut c = 0.0;
+                if i > 0 {
+                    c += pair_tbl[i - 1][ls[i - 1]][ls[i]];
+                }
+                if i + 1 < n {
+                    c += pair_tbl[i][ls[i]][ls[i + 1]];
+                }
+                c
+            };
+            let ics = Ics { n_labels: &n_labels, unary: &unary, local: &local, total: &total };
+            let (cd, _) = coordinate_descent(&ics, 8, 50, 7);
+            assert!((cd - ex).abs() < 1e-9, "cd {cd} exhaustive {ex}");
+        });
+    }
+
+    #[test]
+    fn anneal_improves_over_random() {
+        let n_labels = vec![4usize; 8];
+        let total = |ls: &[usize]| ls.iter().map(|&l| l as f64).sum::<f64>();
+        let (c, l) = anneal(&n_labels, &total, 3000, 42);
+        assert_eq!(c, 0.0);
+        assert!(l.iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn label_space_size_products() {
+        assert_eq!(label_space_size(&[3, 4, 5]), 60.0);
+    }
+}

@@ -1,0 +1,222 @@
+//! Accelerator chip catalog (Table V plus the §VII/§VIII SambaNova parts).
+//!
+//! `tiles` × `tflop_per_tile` reproduces the paper's `t_lim` × `t_flop`
+//! compute model (§IV-B.1). Power/price are the values the paper collects
+//! from vendor disclosures [6], [10], [39], [42], [69]; where a number is
+//! not public we use a documented estimate consistent with the paper's
+//! efficiency ratios (Fig. 9's superlinear trend).
+
+use crate::util::units::{GB, MB, TFLOPS};
+
+/// Intra-chip execution style (§II-B): dataflow chips may fuse multiple
+/// kernels into a spatial pipeline; kernel-by-kernel chips may not.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecutionModel {
+    Dataflow,
+    KernelByKernel,
+}
+
+/// One accelerator chip.
+#[derive(Debug, Clone)]
+pub struct ChipSpec {
+    pub name: String,
+    /// Compute tiles (`t_lim`): SMs / MXUs / PCUs / WSE cores.
+    pub tiles: usize,
+    /// Peak FLOP/s per tile (`t_flop`), half precision.
+    pub tflop_per_tile: f64,
+    /// On-chip SRAM capacity (`s_cap`), bytes.
+    pub sram_bytes: f64,
+    pub execution: ExecutionModel,
+    pub power_w: f64,
+    pub price_usd: f64,
+}
+
+impl ChipSpec {
+    /// Peak chip compute (`t_lim` × `t_flop`).
+    pub fn compute_flops(&self) -> f64 {
+        self.tiles as f64 * self.tflop_per_tile
+    }
+}
+
+/// NVIDIA H100 GPU: 993 TFLOPS, 113 MB SRAM (Table V); 132 SMs.
+pub fn h100() -> ChipSpec {
+    ChipSpec {
+        name: "H100".into(),
+        tiles: 132,
+        tflop_per_tile: 993.0 * TFLOPS / 132.0,
+        sram_bytes: 113.0 * MB,
+        execution: ExecutionModel::KernelByKernel,
+        power_w: 700.0,
+        price_usd: 30_000.0,
+    }
+}
+
+/// Google TPU v4: 275 TFLOPS, 160 MB SRAM (Table V); 8 MXU groups.
+pub fn tpu_v4() -> ChipSpec {
+    ChipSpec {
+        name: "TPUv4".into(),
+        tiles: 8,
+        tflop_per_tile: 275.0 * TFLOPS / 8.0,
+        sram_bytes: 160.0 * MB,
+        execution: ExecutionModel::KernelByKernel,
+        power_w: 192.0,
+        price_usd: 9_000.0,
+    }
+}
+
+/// SambaNova SN30 RDU: 614 TFLOPS, 640 MB SRAM (Table V); 1280 PCUs.
+pub fn sn30() -> ChipSpec {
+    ChipSpec {
+        name: "SN30".into(),
+        tiles: 1280,
+        tflop_per_tile: 614.0 * TFLOPS / 1280.0,
+        sram_bytes: 640.0 * MB,
+        execution: ExecutionModel::Dataflow,
+        power_w: 450.0,
+        price_usd: 25_000.0,
+    }
+}
+
+/// Cerebras WSE-2: 7500 TFLOPS, 40 GB SRAM (Table V); 850k cores.
+pub fn wse2() -> ChipSpec {
+    ChipSpec {
+        name: "WSE-2".into(),
+        tiles: 850_000,
+        tflop_per_tile: 7500.0 * TFLOPS / 850_000.0,
+        sram_bytes: 40.0 * GB,
+        execution: ExecutionModel::Dataflow,
+        power_w: 15_000.0,
+        price_usd: 2_500_000.0,
+    }
+}
+
+/// SambaNova SN10 RDU (§VII): 307.2 TFLOPS bf16, 320 MB SRAM; 640 PCUs.
+pub fn sn10() -> ChipSpec {
+    ChipSpec {
+        name: "SN10".into(),
+        tiles: 640,
+        tflop_per_tile: 307.2 * TFLOPS / 640.0,
+        sram_bytes: 320.0 * MB,
+        execution: ExecutionModel::Dataflow,
+        power_w: 300.0,
+        price_usd: 18_000.0,
+    }
+}
+
+/// SambaNova SN40L RDU (§VIII): 640 TFLOPS bf16, 520 MB SRAM; 1040 PCUs.
+pub fn sn40l() -> ChipSpec {
+    ChipSpec {
+        name: "SN40L".into(),
+        tiles: 1040,
+        tflop_per_tile: 640.0 * TFLOPS / 1040.0,
+        sram_bytes: 520.0 * MB,
+        execution: ExecutionModel::Dataflow,
+        power_w: 500.0,
+        price_usd: 28_000.0,
+    }
+}
+
+/// NVIDIA A100 GPU (Figs 6/8 validation): 312 TFLOPS bf16, 40 MB L2+smem.
+pub fn a100() -> ChipSpec {
+    ChipSpec {
+        name: "A100".into(),
+        tiles: 108,
+        tflop_per_tile: 312.0 * TFLOPS / 108.0,
+        sram_bytes: 40.0 * MB,
+        execution: ExecutionModel::KernelByKernel,
+        power_w: 400.0,
+        price_usd: 15_000.0,
+    }
+}
+
+/// The four Table V chips in paper order.
+pub fn table_v() -> Vec<ChipSpec> {
+    vec![h100(), tpu_v4(), sn30(), wse2()]
+}
+
+/// A parameterized "generic accelerator" for the Fig. 19 and Fig. 22
+/// sweeps (compute throughput and SRAM as free variables).
+pub fn custom(
+    name: &str,
+    compute_flops: f64,
+    sram_bytes: f64,
+    execution: ExecutionModel,
+) -> ChipSpec {
+    let tiles = 1024;
+    ChipSpec {
+        name: name.into(),
+        tiles,
+        tflop_per_tile: compute_flops / tiles as f64,
+        sram_bytes,
+        execution,
+        power_w: costpower_estimate_w(compute_flops),
+        price_usd: costpower_estimate_usd(compute_flops),
+    }
+}
+
+/// Fig. 9 regression (power in kW as a function of TFLOPS):
+/// Y = 3e-7·X² − 4.3e-4·X + 0.04, clamped to a small floor.
+pub fn costpower_estimate_w(compute_flops: f64) -> f64 {
+    let x = compute_flops / TFLOPS;
+    let kw = 3e-7 * x * x - 4.3e-4 * x + 0.04;
+    (kw * 1000.0).max(50.0)
+}
+
+/// Price follows the same superlinear trend (§VI-C); scale anchored so a
+/// ~1 PFLOPS chip lands near $30k.
+pub fn costpower_estimate_usd(compute_flops: f64) -> f64 {
+    costpower_estimate_w(compute_flops) * 45.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_v_matches_paper() {
+        let chips = table_v();
+        let specs: Vec<(f64, f64)> =
+            chips.iter().map(|c| (c.compute_flops() / TFLOPS, c.sram_bytes)).collect();
+        assert!((specs[0].0 - 993.0).abs() < 0.5);
+        assert!((specs[0].1 - 113.0 * MB).abs() < 1.0);
+        assert!((specs[1].0 - 275.0).abs() < 0.5);
+        assert!((specs[1].1 - 160.0 * MB).abs() < 1.0);
+        assert!((specs[2].0 - 614.0).abs() < 0.5);
+        assert!((specs[2].1 - 640.0 * MB).abs() < 1.0);
+        assert!((specs[3].0 - 7500.0).abs() < 0.5);
+        assert!((specs[3].1 - 40.0 * GB).abs() < 1.0);
+    }
+
+    #[test]
+    fn execution_models() {
+        assert_eq!(h100().execution, ExecutionModel::KernelByKernel);
+        assert_eq!(tpu_v4().execution, ExecutionModel::KernelByKernel);
+        assert_eq!(sn30().execution, ExecutionModel::Dataflow);
+        assert_eq!(wse2().execution, ExecutionModel::Dataflow);
+    }
+
+    #[test]
+    fn sn10_matches_section_vii() {
+        let c = sn10();
+        assert!((c.compute_flops() - 307.2 * TFLOPS).abs() / TFLOPS < 0.1);
+        assert!((c.sram_bytes - 320.0 * MB).abs() < 1.0);
+    }
+
+    #[test]
+    fn power_regression_superlinear() {
+        // doubling throughput should more than double power at the high end
+        let p1 = costpower_estimate_w(3000.0 * TFLOPS);
+        let p2 = costpower_estimate_w(6000.0 * TFLOPS);
+        assert!(p2 > 2.0 * p1);
+        // WSE-scale lands in the tens of kW
+        let wse = costpower_estimate_w(7500.0 * TFLOPS);
+        assert!(wse > 10_000.0 && wse < 25_000.0, "wse power = {wse}");
+    }
+
+    #[test]
+    fn custom_chip() {
+        let c = custom("X", 300.0 * TFLOPS, 300.0 * MB, ExecutionModel::Dataflow);
+        assert!((c.compute_flops() - 300.0 * TFLOPS).abs() < 1.0);
+        assert!(c.power_w >= 50.0);
+    }
+}

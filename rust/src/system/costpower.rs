@@ -1,0 +1,127 @@
+//! Fig. 9: silicon power (and price) versus compute throughput, with the
+//! paper's polynomial regression. We refit the quadratic to the catalog
+//! points by least squares and expose both the paper's published
+//! coefficients and our fit (the bench prints both).
+
+use super::chip::{table_v, ChipSpec};
+use crate::util::units::TFLOPS;
+
+/// Quadratic y = a·x² + b·x + c.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Quadratic {
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+}
+
+impl Quadratic {
+    pub fn eval(&self, x: f64) -> f64 {
+        self.a * x * x + self.b * x + self.c
+    }
+}
+
+/// The paper's published regression (power in kW vs throughput in TFLOPS):
+/// Y = 3e-7·X² − 4.3e-4·X + 0.04.
+pub fn paper_power_curve() -> Quadratic {
+    Quadratic { a: 3e-7, b: -4.3e-4, c: 0.04 }
+}
+
+/// Least-squares quadratic fit through (x, y) points (normal equations on
+/// the 3×3 Vandermonde system, solved by Gaussian elimination).
+pub fn polyfit2(points: &[(f64, f64)]) -> Quadratic {
+    assert!(points.len() >= 3, "need >= 3 points for a quadratic");
+    // Accumulate the normal-equation moments.
+    let mut s = [0.0f64; 5]; // Σ x^0..x^4
+    let mut t = [0.0f64; 3]; // Σ y·x^0..x^2
+    for &(x, y) in points {
+        let mut xp = 1.0;
+        for k in 0..5 {
+            s[k] += xp;
+            if k < 3 {
+                t[k] += y * xp;
+            }
+            xp *= x;
+        }
+    }
+    // Solve [[s4 s3 s2], [s3 s2 s1], [s2 s1 s0]] [a b c]^T = [t2 t1 t0]^T.
+    let mut m = [
+        [s[4], s[3], s[2], t[2]],
+        [s[3], s[2], s[1], t[1]],
+        [s[2], s[1], s[0], t[0]],
+    ];
+    for col in 0..3 {
+        // partial pivot
+        let piv = (col..3).max_by(|&i, &j| m[i][col].abs().total_cmp(&m[j][col].abs())).unwrap();
+        m.swap(col, piv);
+        assert!(m[col][col].abs() > 1e-30, "singular fit system");
+        for row in 0..3 {
+            if row != col {
+                let f = m[row][col] / m[col][col];
+                for k in col..4 {
+                    m[row][k] -= f * m[col][k];
+                }
+            }
+        }
+    }
+    Quadratic { a: m[0][3] / m[0][0], b: m[1][3] / m[1][1], c: m[2][3] / m[2][2] }
+}
+
+/// (TFLOPS, kW) points for the Table V chips.
+pub fn chip_power_points() -> Vec<(f64, f64)> {
+    table_v().iter().map(|c| (c.compute_flops() / TFLOPS, c.power_w / 1000.0)).collect()
+}
+
+/// (TFLOPS, k$) points for the Table V chips.
+pub fn chip_price_points() -> Vec<(f64, f64)> {
+    table_v().iter().map(|c| (c.compute_flops() / TFLOPS, c.price_usd / 1000.0)).collect()
+}
+
+/// Convenience: evaluate a fitted curve for a chip.
+pub fn fitted_power_kw(chip: &ChipSpec, fit: &Quadratic) -> f64 {
+    fit.eval(chip.compute_flops() / TFLOPS)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn polyfit_recovers_exact_quadratic() {
+        let q = Quadratic { a: 2.0, b: -1.0, c: 0.5 };
+        let pts: Vec<(f64, f64)> = [-2.0, -1.0, 0.0, 1.0, 3.0]
+            .iter()
+            .map(|&x| (x, q.eval(x)))
+            .collect();
+        let fit = polyfit2(&pts);
+        assert!((fit.a - q.a).abs() < 1e-9);
+        assert!((fit.b - q.b).abs() < 1e-9);
+        assert!((fit.c - q.c).abs() < 1e-9);
+    }
+
+    #[test]
+    fn catalog_fit_is_superlinear() {
+        let fit = polyfit2(&chip_power_points());
+        assert!(fit.a > 0.0, "quadratic term must be positive: {fit:?}");
+        // doubling top-end throughput more than doubles power
+        let p1 = fit.eval(4000.0);
+        let p2 = fit.eval(8000.0);
+        assert!(p2 > 2.0 * p1);
+    }
+
+    #[test]
+    fn paper_curve_matches_wse_scale() {
+        // the paper's curve puts a 7.5 PFLOPS chip in the ~13-17 kW band
+        let y = paper_power_curve().eval(7500.0);
+        assert!((13.0..18.0).contains(&y), "y = {y}");
+    }
+
+    #[test]
+    fn fit_close_to_catalog_points() {
+        let pts = chip_power_points();
+        let fit = polyfit2(&pts);
+        for (x, y) in pts {
+            let e = (fit.eval(x) - y).abs() / y.max(0.1);
+            assert!(e < 1.5, "poor fit at x={x}: {e}");
+        }
+    }
+}

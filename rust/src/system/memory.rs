@@ -1,0 +1,108 @@
+//! Off-chip memory technology catalog (§VI-C and the 3-D study §VIII-C).
+//!
+//! DFModel's memory model needs per-chip bandwidth (`d_bw`) and capacity
+//! (`d_cap`); price/power are per-GB figures from [39], [43] used for the
+//! efficiency heat maps.
+
+use crate::util::units::{GB, TB};
+
+#[derive(Debug, Clone)]
+pub struct MemoryTech {
+    pub name: String,
+    /// Per-chip bandwidth, bytes/s (`d_bw`).
+    pub bandwidth: f64,
+    /// Per-chip capacity, bytes (`d_cap`).
+    pub capacity: f64,
+    /// $/GB (from [39], [43]).
+    pub price_per_gb: f64,
+    /// W/GB active power.
+    pub power_per_gb: f64,
+}
+
+impl MemoryTech {
+    pub fn price_usd(&self) -> f64 {
+        self.capacity / GB * self.price_per_gb
+    }
+
+    pub fn power_w(&self) -> f64 {
+        self.capacity / GB * self.power_per_gb
+    }
+}
+
+/// DDR4 (the paper: 200 GB/s [1]); large capacity, cheap per GB.
+pub fn ddr4() -> MemoryTech {
+    MemoryTech {
+        name: "DDR4".into(),
+        bandwidth: 200.0 * GB,
+        capacity: 1.0 * TB,
+        price_per_gb: 4.0,
+        power_per_gb: 0.35,
+    }
+}
+
+/// HBM3 (the paper: 3000 GB/s [39]); small capacity, expensive per GB.
+pub fn hbm3() -> MemoryTech {
+    MemoryTech {
+        name: "HBM3".into(),
+        bandwidth: 3000.0 * GB,
+        capacity: 96.0 * GB,
+        price_per_gb: 15.0,
+        power_per_gb: 3.5,
+    }
+}
+
+// ---- §VIII-C 3-D memory study (SN40L with three memory generations) ----
+
+/// 2-D DDR: 100 GB/s.
+pub fn mem2d_ddr() -> MemoryTech {
+    MemoryTech {
+        name: "2D-DDR".into(),
+        bandwidth: 100.0 * GB,
+        capacity: 1.0 * TB,
+        price_per_gb: 4.0,
+        power_per_gb: 0.35,
+    }
+}
+
+/// 2.5-D HBM on interposer: 1 TB/s (bandwidth ∝ die perimeter).
+pub fn mem25d_hbm() -> MemoryTech {
+    MemoryTech {
+        name: "2.5D-HBM".into(),
+        bandwidth: 1.0 * TB,
+        capacity: 96.0 * GB,
+        price_per_gb: 15.0,
+        power_per_gb: 3.0,
+    }
+}
+
+/// 3-D stacked memory: 100 TB/s (bandwidth ∝ die area, [22]).
+pub fn mem3d_stacked() -> MemoryTech {
+    MemoryTech {
+        name: "3D-stacked".into(),
+        bandwidth: 100.0 * TB,
+        capacity: 48.0 * GB,
+        price_per_gb: 40.0,
+        power_per_gb: 6.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bandwidth_ladder() {
+        assert!(ddr4().bandwidth < hbm3().bandwidth);
+        assert!(mem2d_ddr().bandwidth < mem25d_hbm().bandwidth);
+        assert!(mem25d_hbm().bandwidth < mem3d_stacked().bandwidth);
+        assert_eq!(hbm3().bandwidth, 3000.0 * GB);
+        assert_eq!(mem3d_stacked().bandwidth, 100.0 * TB);
+    }
+
+    #[test]
+    fn price_power_aggregation() {
+        let m = hbm3();
+        assert!((m.price_usd() - 96.0 * 15.0).abs() < 1e-6);
+        assert!((m.power_w() - 96.0 * 3.5).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,106 @@
+//! System specification (§III, Fig. 5 right side): accelerator chips,
+//! memory technologies, interconnect technologies, and interconnection
+//! network topologies, hierarchically composed (ASTRA-sim style, §IV-C).
+
+pub mod chip;
+pub mod costpower;
+pub mod interconnect;
+pub mod memory;
+pub mod topology;
+
+pub use chip::{ChipSpec, ExecutionModel};
+pub use interconnect::LinkTech;
+pub use memory::MemoryTech;
+pub use topology::{Dim, DimKind, Topology};
+
+/// A complete system design point: `n_chips` accelerators of one kind, each
+/// with one memory technology, connected by one link technology arranged in
+/// one topology.
+#[derive(Debug, Clone)]
+pub struct SystemSpec {
+    pub chip: ChipSpec,
+    pub memory: MemoryTech,
+    pub link: LinkTech,
+    pub topology: Topology,
+}
+
+impl SystemSpec {
+    pub fn new(chip: ChipSpec, memory: MemoryTech, link: LinkTech, topology: Topology) -> Self {
+        let s = SystemSpec { chip, memory, link, topology };
+        s.validate();
+        s
+    }
+
+    pub fn n_chips(&self) -> usize {
+        self.topology.n_chips()
+    }
+
+    fn validate(&self) {
+        assert!(self.n_chips() >= 1, "empty topology");
+        assert!(self.chip.compute_flops() > 0.0);
+        assert!(self.memory.bandwidth > 0.0);
+        assert!(self.link.bandwidth > 0.0);
+    }
+
+    /// Aggregate peak compute of the whole system.
+    pub fn peak_flops(&self) -> f64 {
+        self.chip.compute_flops() * self.n_chips() as f64
+    }
+
+    /// Total system price (chips + memory + links), for cost-efficiency
+    /// heat maps (Figs 10/12/14/16).
+    pub fn price_usd(&self) -> f64 {
+        let chips = self.chip.price_usd * self.n_chips() as f64;
+        let mem = self.memory.price_usd() * self.n_chips() as f64;
+        let links = self.link.price_usd * self.topology.total_links() as f64;
+        chips + mem + links
+    }
+
+    /// Total system power in watts.
+    pub fn power_w(&self) -> f64 {
+        let chips = self.chip.power_w * self.n_chips() as f64;
+        let mem = self.memory.power_w() * self.n_chips() as f64;
+        let links = self.link.power_w * self.topology.total_links() as f64;
+        chips + mem + links
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "{} x{} | {} | {} | {}",
+            self.chip.name,
+            self.n_chips(),
+            self.memory.name,
+            self.link.name,
+            self.topology.name
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> SystemSpec {
+        SystemSpec::new(
+            chip::h100(),
+            memory::hbm3(),
+            interconnect::nvlink4(),
+            topology::torus2d(4, 2, &interconnect::nvlink4()),
+        )
+    }
+
+    #[test]
+    fn aggregates() {
+        let s = spec();
+        assert_eq!(s.n_chips(), 8);
+        assert!((s.peak_flops() - 8.0 * 993e12).abs() / s.peak_flops() < 1e-12);
+        assert!(s.price_usd() > 8.0 * s.chip.price_usd * 0.99);
+        assert!(s.power_w() > 8.0 * s.chip.power_w * 0.99);
+    }
+
+    #[test]
+    fn describe_mentions_parts() {
+        let d = spec().describe();
+        assert!(d.contains("H100") && d.contains("HBM3") && d.contains("NVLink4"));
+    }
+}

@@ -1,0 +1,206 @@
+//! Interconnection-network topologies, composed hierarchically from 1-D
+//! dimensions (§IV-C, the ASTRA-sim compositional approach [71]): a
+//! multi-dimensional topology is a list of 1-D dims (ring, fully-connected,
+//! switch); each dim is assigned to exactly one parallelization strategy.
+//!
+//! The paper's five evaluated topologies: 2-D torus, 3-D torus, dragonfly
+//! [47], DGX-1 [2], DGX-2 [51].
+
+use super::interconnect::LinkTech;
+
+/// The 1-D building blocks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DimKind {
+    /// Bidirectional ring: 1 link per node per direction.
+    Ring,
+    /// All-pairs direct links: n−1 links per node.
+    FullyConnected,
+    /// Central crossbar switch: 1 uplink per node, non-blocking.
+    Switch,
+}
+
+/// One network dimension: `size` chips connected by `kind` with per-link
+/// bandwidth/latency from the link technology.
+#[derive(Debug, Clone)]
+pub struct Dim {
+    pub kind: DimKind,
+    pub size: usize,
+    /// Per-link, per-direction bandwidth (bytes/s).
+    pub link_bw: f64,
+    /// Per-hop latency (s).
+    pub latency: f64,
+}
+
+impl Dim {
+    pub fn new(kind: DimKind, size: usize, link: &LinkTech) -> Self {
+        assert!(size >= 1);
+        Dim { kind, size, link_bw: link.bandwidth, latency: link.latency }
+    }
+
+    /// Links contributed per node in this dimension (for price/power).
+    pub fn links_per_node(&self) -> f64 {
+        match self.kind {
+            DimKind::Ring => {
+                if self.size > 1 {
+                    2.0
+                } else {
+                    0.0
+                }
+            }
+            DimKind::FullyConnected => (self.size - 1) as f64,
+            // node uplink + its share of the switch (counted as 1 extra)
+            DimKind::Switch => {
+                if self.size > 1 {
+                    2.0
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+}
+
+/// A hierarchical topology: the cartesian product of its dims.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub name: String,
+    pub dims: Vec<Dim>,
+}
+
+impl Topology {
+    pub fn new(name: &str, dims: Vec<Dim>) -> Self {
+        assert!(!dims.is_empty(), "topology needs at least one dim");
+        Topology { name: name.into(), dims }
+    }
+
+    pub fn n_chips(&self) -> usize {
+        self.dims.iter().map(|d| d.size).product()
+    }
+
+    /// Total link count (for system price/power).
+    pub fn total_links(&self) -> f64 {
+        let n = self.n_chips() as f64;
+        // Each node contributes links_per_node per dim; each link shared by
+        // two endpoints (switch uplinks count fully).
+        self.dims.iter().map(|d| d.links_per_node() * n / 2.0).sum()
+    }
+
+    pub fn dim_sizes(&self) -> Vec<usize> {
+        self.dims.iter().map(|d| d.size).collect()
+    }
+}
+
+/// 2-D torus: X × Y rings.
+pub fn torus2d(x: usize, y: usize, link: &LinkTech) -> Topology {
+    Topology::new(
+        &format!("2D-torus[{x}x{y}]"),
+        vec![Dim::new(DimKind::Ring, x, link), Dim::new(DimKind::Ring, y, link)],
+    )
+}
+
+/// 3-D torus: X × Y × Z rings.
+pub fn torus3d(x: usize, y: usize, z: usize, link: &LinkTech) -> Topology {
+    Topology::new(
+        &format!("3D-torus[{x}x{y}x{z}]"),
+        vec![
+            Dim::new(DimKind::Ring, x, link),
+            Dim::new(DimKind::Ring, y, link),
+            Dim::new(DimKind::Ring, z, link),
+        ],
+    )
+}
+
+/// Dragonfly [47]: fully-connected groups, fully-connected globally.
+pub fn dragonfly(group: usize, n_groups: usize, link: &LinkTech) -> Topology {
+    Topology::new(
+        &format!("dragonfly[{group}x{n_groups}]"),
+        vec![
+            Dim::new(DimKind::FullyConnected, group, link),
+            Dim::new(DimKind::FullyConnected, n_groups, link),
+        ],
+    )
+}
+
+/// DGX-1 [2]: 8-GPU NVLink hybrid-cube-mesh (modeled as fully-connected) +
+/// scale-out switch fabric.
+pub fn dgx1(n_nodes: usize, link: &LinkTech) -> Topology {
+    Topology::new(
+        &format!("DGX-1[8x{n_nodes}]"),
+        vec![
+            Dim::new(DimKind::FullyConnected, 8, link),
+            Dim::new(DimKind::Switch, n_nodes, link),
+        ],
+    )
+}
+
+/// DGX-2 [51]: 16 GPUs behind NVSwitch + scale-out switch fabric.
+pub fn dgx2(n_nodes: usize, link: &LinkTech) -> Topology {
+    Topology::new(
+        &format!("DGX-2[16x{n_nodes}]"),
+        vec![
+            Dim::new(DimKind::Switch, 16, link),
+            Dim::new(DimKind::Switch, n_nodes, link),
+        ],
+    )
+}
+
+/// 1-D ring of n chips (the §VII default 8×1 ring).
+pub fn ring(n: usize, link: &LinkTech) -> Topology {
+    Topology::new(&format!("ring[{n}]"), vec![Dim::new(DimKind::Ring, n, link)])
+}
+
+/// The paper's five 1024-chip DSE topologies (§VI-C) for a link tech.
+pub fn dse_topologies_1024(link: &LinkTech) -> Vec<Topology> {
+    vec![
+        torus2d(32, 32, link),
+        torus3d(16, 8, 8, link),
+        dragonfly(32, 32, link),
+        dgx1(128, link),
+        dgx2(64, link),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::system::interconnect::nvlink4;
+
+    #[test]
+    fn chip_counts() {
+        let l = nvlink4();
+        assert_eq!(torus2d(32, 32, &l).n_chips(), 1024);
+        assert_eq!(torus3d(16, 8, 8, &l).n_chips(), 1024);
+        assert_eq!(dragonfly(32, 32, &l).n_chips(), 1024);
+        assert_eq!(dgx1(128, &l).n_chips(), 1024);
+        assert_eq!(dgx2(64, &l).n_chips(), 1024);
+        for t in dse_topologies_1024(&l) {
+            assert_eq!(t.n_chips(), 1024, "{}", t.name);
+        }
+    }
+
+    #[test]
+    fn links_ordering() {
+        let l = nvlink4();
+        // dragonfly (fully-connected both levels) uses far more links than
+        // a 2-D torus of the same size — the Fig. 10 cost/power overhead
+        let df = dragonfly(32, 32, &l).total_links();
+        let t2 = torus2d(32, 32, &l).total_links();
+        assert!(df > 5.0 * t2, "dragonfly {df} vs torus {t2}");
+    }
+
+    #[test]
+    fn single_chip_dims() {
+        let l = nvlink4();
+        let t = ring(1, &l);
+        assert_eq!(t.n_chips(), 1);
+        assert_eq!(t.total_links(), 0.0);
+    }
+
+    #[test]
+    fn dim_links_per_node() {
+        let l = nvlink4();
+        assert_eq!(Dim::new(DimKind::Ring, 8, &l).links_per_node(), 2.0);
+        assert_eq!(Dim::new(DimKind::FullyConnected, 8, &l).links_per_node(), 7.0);
+        assert_eq!(Dim::new(DimKind::Switch, 8, &l).links_per_node(), 2.0);
+    }
+}

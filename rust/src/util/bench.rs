@@ -1,0 +1,118 @@
+//! Tiny benchmark harness (criterion is unavailable offline).
+//!
+//! Measures wall-clock of closures with warmup, reports min/mean/p50, and is
+//! the engine behind `cargo bench` (the `[[bench]]` targets set
+//! `harness = false` and call into this module).
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub min: Duration,
+    pub mean: Duration,
+    pub p50: Duration,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<48} iters={:<4} min={:>12?} mean={:>12?} p50={:>12?}",
+            self.name, self.iters, self.min, self.mean, self.p50
+        )
+    }
+}
+
+/// Run `f` repeatedly: `warmup` unmeasured iterations then `iters` measured.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<Duration> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort_unstable();
+    let min = samples[0];
+    let p50 = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<Duration>() / iters as u32;
+    BenchResult { name: name.to_string(), iters, min, mean, p50 }
+}
+
+/// Time a single invocation (for end-to-end figure generators where one run
+/// is already seconds).
+pub fn time_once<R, F: FnOnce() -> R>(name: &str, f: F) -> (R, BenchResult) {
+    let t0 = Instant::now();
+    let r = f();
+    let d = t0.elapsed();
+    (r, BenchResult { name: name.to_string(), iters: 1, min: d, mean: d, p50: d })
+}
+
+/// Collector that prints results as they land and can dump a summary.
+#[derive(Default)]
+pub struct Runner {
+    pub results: Vec<BenchResult>,
+}
+
+impl Runner {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn run<F: FnMut()>(&mut self, name: &str, warmup: usize, iters: usize, f: F) {
+        let r = bench(name, warmup, iters, f);
+        println!("{}", r.line());
+        self.results.push(r);
+    }
+
+    pub fn run_once<R, F: FnOnce() -> R>(&mut self, name: &str, f: F) -> R {
+        let (out, r) = time_once(name, f);
+        println!("{}", r.line());
+        self.results.push(r);
+        out
+    }
+
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        for r in &self.results {
+            s.push_str(&r.line());
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut n = 0usize;
+        let r = bench("inc", 2, 5, || n += 1);
+        assert_eq!(n, 7); // 2 warmup + 5 measured
+        assert_eq!(r.iters, 5);
+        assert!(r.min <= r.p50);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, r) = time_once("x", || 41 + 1);
+        assert_eq!(v, 42);
+        assert_eq!(r.iters, 1);
+    }
+
+    #[test]
+    fn runner_accumulates() {
+        let mut run = Runner::new();
+        run.run("a", 0, 1, || {});
+        let out = run.run_once("b", || 7);
+        assert_eq!(out, 7);
+        assert_eq!(run.results.len(), 2);
+        assert!(run.summary().contains("a"));
+    }
+}

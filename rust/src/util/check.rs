@@ -1,0 +1,73 @@
+//! Property-check harness (proptest is unavailable offline).
+//!
+//! `check(name, cases, |rng| ...)` runs a randomized property many times
+//! with deterministic per-case seeds; on failure it reports the seed so the
+//! case can be replayed exactly (`CHECK_SEED=<n>`).
+
+use crate::util::prng::Rng;
+
+/// Run `prop` for `cases` deterministic seeds. The property should panic
+/// (e.g. via assert!) on violation; the harness wraps the panic with the
+/// failing seed for replay.
+pub fn check<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(name: &str, cases: u64, prop: F) {
+    // Replay mode: CHECK_SEED pins a single failing case.
+    if let Ok(seed) = std::env::var("CHECK_SEED") {
+        let seed: u64 = seed.parse().expect("CHECK_SEED must be u64");
+        let mut rng = Rng::new(seed);
+        prop(&mut rng);
+        return;
+    }
+    for case in 0..cases {
+        let seed = splitmix(name, case);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            prop(&mut rng);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed at case {case} (CHECK_SEED={seed}): {msg}");
+        }
+    }
+}
+
+fn splitmix(name: &str, case: u64) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+    }
+    h ^ case.wrapping_mul(0x9E3779B97F4A7C15)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("always-true", 50, |rng| {
+            let v = rng.below(10);
+            assert!(v < 10);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            check("always-false", 5, |_rng| {
+                assert!(false, "boom");
+            });
+        });
+        let msg = format!("{:?}", r.unwrap_err().downcast_ref::<String>());
+        assert!(msg.contains("CHECK_SEED="), "{msg}");
+    }
+
+    #[test]
+    fn seeds_are_name_dependent() {
+        assert_ne!(splitmix("a", 0), splitmix("b", 0));
+        assert_ne!(splitmix("a", 0), splitmix("a", 1));
+    }
+}

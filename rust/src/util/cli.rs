@@ -1,0 +1,114 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `prog <subcommand> [positional ...] [--key value] [--flag]`.
+//! Used by `rust/src/main.rs` and the bench binaries.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (first token is NOT argv[0]).
+    pub fn parse_from<I, S>(tokens: I) -> Args
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut args = Args::default();
+        let toks: Vec<String> = tokens.into_iter().map(Into::into).collect();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(name) = t.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    args.options.insert(name.to_string(), toks[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(t.clone());
+            } else {
+                args.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    /// Parse from process argv (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        let a = Args::parse_from(["dse", "--workload", "gpt3-1t", "--chips=1024", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("dse"));
+        assert_eq!(a.get("workload"), Some("gpt3-1t"));
+        assert_eq!(a.get_usize("chips", 0), 1024);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn positionals_after_subcommand() {
+        let a = Args::parse_from(["run", "fig10", "fig11"]);
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.positional, vec!["fig10", "fig11"]);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = Args::parse_from(["x", "--all"]);
+        assert!(a.has_flag("all"));
+        assert_eq!(a.get("all"), None);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse_from::<_, String>([]);
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.get_or("missing", "d"), "d");
+        assert_eq!(a.get_f64("missing", 1.5), 1.5);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = Args::parse_from(["s", "--k=v", "--n=3"]);
+        assert_eq!(a.get("k"), Some("v"));
+        assert_eq!(a.get_usize("n", 0), 3);
+    }
+}

@@ -1,0 +1,12 @@
+//! In-tree substrates replacing crates unavailable in the offline registry
+//! (see DESIGN.md §Substitutions): JSON, CLI parsing, ASCII tables/heatmaps,
+//! PRNG, thread pool, bench harness, unit formatting, property checking.
+
+pub mod bench;
+pub mod check;
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod table;
+pub mod threadpool;
+pub mod units;

@@ -1,0 +1,292 @@
+//! ASCII table / heatmap / CSV rendering for the figure generators.
+//!
+//! The paper's evaluation is heatmaps (Figs 10/12/14/16), stacked latency
+//! breakdowns (Figs 11/13/15/17), sweeps (Figs 7/8/19–22) and tables
+//! (Tables V/VI). Every bench renders through this module so results are
+//! both human-readable (stdout) and machine-readable (CSV in results/).
+
+use std::fmt::Write as _;
+
+/// Column-aligned ASCII table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_display<T: std::fmt::Display>(&mut self, cells: &[T]) -> &mut Self {
+        let cells: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&cells)
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.headers.iter().enumerate() {
+            width[i] = h.chars().count();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "== {} ==", self.title);
+        }
+        let line = |out: &mut String, cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                let pad = width[i] - c.chars().count();
+                let _ = write!(s, " {}{} |", c, " ".repeat(pad));
+            }
+            out.push_str(&s);
+            out.push('\n');
+        };
+        let sep: String = {
+            let mut s = String::from("+");
+            for w in &width {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&sep);
+        line(&mut out, &self.headers);
+        out.push_str(&sep);
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out.push_str(&sep);
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let esc = |c: &str| {
+            if c.contains(',') || c.contains('"') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let _ = writeln!(out, "{}", self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        }
+        out
+    }
+}
+
+/// 2-D heatmap with row/col labels, rendered with a unicode shade ramp plus
+/// the numeric value (the paper's Figs 10/12/14/16 are value-annotated
+/// heatmaps).
+#[derive(Debug, Clone)]
+pub struct Heatmap {
+    pub title: String,
+    pub row_labels: Vec<String>,
+    pub col_labels: Vec<String>,
+    pub values: Vec<Vec<f64>>,
+}
+
+const RAMP: [char; 5] = [' ', '░', '▒', '▓', '█'];
+
+impl Heatmap {
+    pub fn new(title: &str, rows: &[&str], cols: &[&str]) -> Self {
+        Heatmap {
+            title: title.to_string(),
+            row_labels: rows.iter().map(|s| s.to_string()).collect(),
+            col_labels: cols.iter().map(|s| s.to_string()).collect(),
+            values: vec![vec![f64::NAN; cols.len()]; rows.len()],
+        }
+    }
+
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        self.values[r][c] = v;
+    }
+
+    pub fn render(&self) -> String {
+        let finite: Vec<f64> =
+            self.values.iter().flatten().copied().filter(|v| v.is_finite()).collect();
+        let (lo, hi) = finite
+            .iter()
+            .fold((f64::INFINITY, f64::NEG_INFINITY), |(l, h), &v| (l.min(v), h.max(v)));
+        let shade = |v: f64| -> char {
+            if !v.is_finite() || hi <= lo {
+                RAMP[0]
+            } else {
+                let t = (v - lo) / (hi - lo);
+                RAMP[((t * (RAMP.len() - 1) as f64).round() as usize).min(RAMP.len() - 1)]
+            }
+        };
+        let rw = self.row_labels.iter().map(|s| s.chars().count()).max().unwrap_or(0);
+        let cw = self
+            .col_labels
+            .iter()
+            .map(|s| s.chars().count())
+            .max()
+            .unwrap_or(0)
+            .max(7);
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "== {} ==", self.title);
+        }
+        let _ = write!(out, "{} ", " ".repeat(rw));
+        for c in &self.col_labels {
+            let _ = write!(out, "{c:>cw$} ");
+        }
+        out.push('\n');
+        for (r, label) in self.row_labels.iter().enumerate() {
+            let _ = write!(out, "{label:>rw$} ");
+            for v in &self.values[r] {
+                let cell = if v.is_finite() {
+                    format!("{}{:.3}", shade(*v), v)
+                } else {
+                    "-".to_string()
+                };
+                let _ = write!(out, "{cell:>cw$} ");
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut t = Table::new(
+            "",
+            &std::iter::once("row")
+                .chain(self.col_labels.iter().map(|s| s.as_str()))
+                .collect::<Vec<_>>(),
+        );
+        for (r, label) in self.row_labels.iter().enumerate() {
+            let mut cells = vec![label.clone()];
+            cells.extend(self.values[r].iter().map(|v| format!("{v}")));
+            t.row(&cells);
+        }
+        t.to_csv()
+    }
+}
+
+/// Horizontal stacked-bar chart (latency breakdowns, Figs 11/13/15/17).
+pub fn stacked_bars(
+    title: &str,
+    labels: &[String],
+    series_names: &[&str],
+    series: &[Vec<f64>], // series[s][i]
+    width: usize,
+) -> String {
+    assert_eq!(series.len(), series_names.len());
+    let glyphs = ['#', '=', '.', '+', '~'];
+    let totals: Vec<f64> =
+        (0..labels.len()).map(|i| series.iter().map(|s| s[i]).sum()).collect();
+    let max = totals.iter().cloned().fold(0.0f64, f64::max).max(1e-30);
+    let lw = labels.iter().map(|s| s.chars().count()).max().unwrap_or(0);
+    let mut out = String::new();
+    let _ = writeln!(out, "== {title} ==");
+    let legend: Vec<String> = series_names
+        .iter()
+        .enumerate()
+        .map(|(s, n)| format!("{} {}", glyphs[s % glyphs.len()], n))
+        .collect();
+    let _ = writeln!(out, "legend: {}", legend.join("  "));
+    for (i, label) in labels.iter().enumerate() {
+        let mut bar = String::new();
+        for (s, vals) in series.iter().enumerate() {
+            let n = ((vals[i] / max) * width as f64).round() as usize;
+            bar.push_str(&glyphs[s % glyphs.len()].to_string().repeat(n));
+        }
+        let _ = writeln!(out, "{label:>lw$} |{bar} ({:.4})", totals[i]);
+    }
+    out
+}
+
+/// Write a string to `results/<name>`, creating the directory.
+pub fn write_result(name: &str, content: &str) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::path::Path::new("results");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(name);
+    std::fs::write(&path, content)?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["name", "val"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["long-name".into(), "2.5".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("| long-name | 2.5 |"));
+        assert!(s.contains("| a         | 1   |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_escapes_commas() {
+        let mut t = Table::new("x", &["a"]);
+        t.row(&["hello, world".into()]);
+        assert!(t.to_csv().contains("\"hello, world\""));
+    }
+
+    #[test]
+    fn heatmap_renders_and_shades() {
+        let mut h = Heatmap::new("hm", &["r1", "r2"], &["c1", "c2"]);
+        h.set(0, 0, 0.0);
+        h.set(0, 1, 1.0);
+        h.set(1, 0, 0.5);
+        h.set(1, 1, 0.25);
+        let s = h.render();
+        assert!(s.contains("== hm =="));
+        assert!(s.contains('█')); // max cell gets full shade
+        let csv = h.to_csv();
+        assert!(csv.starts_with("row,c1,c2"));
+    }
+
+    #[test]
+    fn heatmap_handles_nan() {
+        let h = Heatmap::new("hm", &["r"], &["c"]);
+        let s = h.render();
+        assert!(s.contains('-'));
+    }
+
+    #[test]
+    fn stacked_bars_render() {
+        let s = stacked_bars(
+            "break",
+            &["cfg1".into(), "cfg2".into()],
+            &["comp", "mem"],
+            &[vec![1.0, 2.0], vec![0.5, 0.0]],
+            20,
+        );
+        assert!(s.contains("legend"));
+        assert!(s.contains("cfg1"));
+        assert!(s.contains('#'));
+    }
+}

@@ -1,0 +1,148 @@
+//! Scoped parallel map over std threads (tokio/rayon unavailable offline).
+//!
+//! The DSE sweep evaluates hundreds of independent (workload, system)
+//! configurations; `parallel_map` fans them out across available cores with
+//! deterministic output ordering.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use (respects `DFMODEL_THREADS`).
+pub fn default_workers() -> usize {
+    if let Ok(v) = std::env::var("DFMODEL_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Apply `f` to every item, in parallel, preserving input order in the
+/// output. Work-steals via a shared atomic index so uneven item costs
+/// balance across workers.
+pub fn parallel_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    parallel_map_workers(items, default_workers(), f)
+}
+
+/// `parallel_map` with an explicit worker count (1 = sequential fast path).
+pub fn parallel_map_workers<T, R, F>(items: &[T], workers: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        return items.iter().map(|t| f(t)).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let slots_ptr = SendPtr(slots.as_mut_ptr());
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let next = &next;
+            let f = &f;
+            scope.spawn(move || {
+                // Bind the whole wrapper (not just its field) so the closure
+                // captures the Send-able SendPtr, not the raw pointer —
+                // edition-2021 disjoint capture would otherwise grab the
+                // non-Send `*mut`.
+                let ptr = slots_ptr;
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let r = f(&items[i]);
+                    // SAFETY: each index i is claimed by exactly one worker
+                    // via the atomic counter, so the writes are disjoint; the
+                    // scope guarantees the buffer outlives all workers.
+                    unsafe {
+                        *ptr.0.add(i) = Some(r);
+                    }
+                }
+            });
+        }
+    });
+
+    slots.into_iter().map(|s| s.expect("worker missed a slot")).collect()
+}
+
+/// Pointer wrapper so the buffer pointer can cross thread bounds; safety is
+/// argued at the single write site above.
+struct SendPtr<T>(*mut T);
+// Manual Clone/Copy: the derive would require T: Copy, but copying the
+// *pointer* is always fine.
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let items: Vec<usize> = (0..100).collect();
+        let out = parallel_map(&items, |&x| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_input() {
+        let items: Vec<usize> = vec![];
+        let out: Vec<usize> = parallel_map(&items, |&x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn single_worker_sequential() {
+        let items: Vec<usize> = (0..10).collect();
+        let out = parallel_map_workers(&items, 1, |&x| x + 1);
+        assert_eq!(out, (1..11).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn more_workers_than_items() {
+        let items = vec![1, 2, 3];
+        let out = parallel_map_workers(&items, 64, |&x| x * x);
+        assert_eq!(out, vec![1, 4, 9]);
+    }
+
+    #[test]
+    fn uneven_work_balances() {
+        let items: Vec<u64> = (0..40).collect();
+        let out = parallel_map_workers(&items, 4, |&x| {
+            // simulate uneven cost
+            let mut acc = 0u64;
+            for i in 0..(x * 1000) {
+                acc = acc.wrapping_add(i);
+            }
+            (x, acc).0
+        });
+        assert_eq!(out, (0..40).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn respects_env_worker_override() {
+        // just exercises the parse path
+        std::env::set_var("DFMODEL_THREADS", "2");
+        assert_eq!(default_workers(), 2);
+        std::env::remove_var("DFMODEL_THREADS");
+    }
+}

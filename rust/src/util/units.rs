@@ -1,0 +1,94 @@
+//! Unit constants and human-readable formatting for the performance model.
+//!
+//! Convention throughout the crate: bytes and FLOP are `f64` in base units,
+//! times in seconds, bandwidths in bytes/second, compute in FLOP/second.
+
+pub const KB: f64 = 1e3;
+pub const MB: f64 = 1e6;
+pub const GB: f64 = 1e9;
+pub const TB: f64 = 1e12;
+
+pub const KIB: f64 = 1024.0;
+pub const MIB: f64 = 1024.0 * 1024.0;
+pub const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+pub const GFLOPS: f64 = 1e9;
+pub const TFLOPS: f64 = 1e12;
+pub const PFLOPS: f64 = 1e15;
+
+pub const US: f64 = 1e-6;
+pub const MS: f64 = 1e-3;
+pub const NS: f64 = 1e-9;
+
+/// "12.3 GB/s", "1.50 TB/s" …
+pub fn fmt_bw(bytes_per_s: f64) -> String {
+    fmt_scaled(bytes_per_s, &[(TB, "TB/s"), (GB, "GB/s"), (MB, "MB/s"), (KB, "KB/s")], "B/s")
+}
+
+/// "640 MB", "40 GB" …
+pub fn fmt_bytes(bytes: f64) -> String {
+    fmt_scaled(bytes, &[(TB, "TB"), (GB, "GB"), (MB, "MB"), (KB, "KB")], "B")
+}
+
+/// "993 TFLOPS" …
+pub fn fmt_flops(flops: f64) -> String {
+    fmt_scaled(flops, &[(PFLOPS, "PFLOPS"), (TFLOPS, "TFLOPS"), (GFLOPS, "GFLOPS")], "FLOPS")
+}
+
+/// "1.2 ms", "3.4 us", "5.6 s" …
+pub fn fmt_time(secs: f64) -> String {
+    if !secs.is_finite() {
+        return format!("{secs}");
+    }
+    let a = secs.abs();
+    if a >= 1.0 {
+        format!("{secs:.3} s")
+    } else if a >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if a >= 1e-6 {
+        format!("{:.3} us", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+fn fmt_scaled(v: f64, scales: &[(f64, &str)], base: &str) -> String {
+    for &(s, name) in scales {
+        if v.abs() >= s {
+            return format!("{:.3} {}", v / s, name);
+        }
+    }
+    format!("{v:.1} {base}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formats_bandwidth() {
+        assert_eq!(fmt_bw(900.0 * GB), "900.000 GB/s");
+        assert_eq!(fmt_bw(3.0 * TB), "3.000 TB/s");
+        assert_eq!(fmt_bw(12.5), "12.5 B/s");
+    }
+
+    #[test]
+    fn formats_flops() {
+        assert_eq!(fmt_flops(993.0 * TFLOPS), "993.000 TFLOPS");
+        assert_eq!(fmt_flops(7.5 * PFLOPS), "7.500 PFLOPS");
+    }
+
+    #[test]
+    fn formats_time() {
+        assert_eq!(fmt_time(1.5), "1.500 s");
+        assert_eq!(fmt_time(0.0025), "2.500 ms");
+        assert_eq!(fmt_time(2.5e-6), "2.500 us");
+        assert_eq!(fmt_time(150e-9), "150.0 ns");
+    }
+
+    #[test]
+    fn formats_bytes() {
+        assert_eq!(fmt_bytes(640.0 * MB), "640.000 MB");
+        assert_eq!(fmt_bytes(40.0 * GB), "40.000 GB");
+    }
+}

@@ -1,0 +1,157 @@
+//! Property tests on the analytical-model invariants: collective cost
+//! models, sharding algebra, serving metrics, and the JSON substrate.
+
+use dfmodel::collective::{time, time_hier, Collective};
+use dfmodel::graph::llama::llama3_8b;
+use dfmodel::serving::{evaluate, sn40l_x16, ServingPoint};
+use dfmodel::sharding::{conversion_op, conversion_time, Layout};
+use dfmodel::system::interconnect::{nvlink4, pcie4};
+use dfmodel::system::topology::{Dim, DimKind};
+use dfmodel::util::check::check;
+use dfmodel::util::json::Json;
+
+const COLLS: [Collective; 6] = [
+    Collective::AllReduce,
+    Collective::AllGather,
+    Collective::ReduceScatter,
+    Collective::Broadcast,
+    Collective::AllToAll,
+    Collective::P2P,
+];
+
+const KINDS: [DimKind; 3] = [DimKind::Ring, DimKind::FullyConnected, DimKind::Switch];
+
+#[test]
+fn collective_time_monotone_in_bytes() {
+    check("coll-monotone-bytes", 100, |rng| {
+        let kind = *rng.choice(&KINDS);
+        let k = 2 + rng.below(63);
+        let dim = Dim::new(kind, k, &nvlink4());
+        let coll = *rng.choice(&COLLS);
+        let s1 = rng.uniform(1e3, 1e9);
+        let s2 = s1 * rng.uniform(1.0, 10.0);
+        let (t1, t2) = (time(coll, s1, &dim), time(coll, s2, &dim));
+        assert!(t2 >= t1 - 1e-15, "{coll:?} {kind:?} k={k}: {t1} vs {t2}");
+    });
+}
+
+#[test]
+fn collective_time_monotone_in_bandwidth() {
+    check("coll-monotone-bw", 100, |rng| {
+        let kind = *rng.choice(&KINDS);
+        let k = 2 + rng.below(63);
+        let fast = Dim::new(kind, k, &nvlink4());
+        let slow = Dim::new(kind, k, &pcie4());
+        let coll = *rng.choice(&COLLS);
+        let s = rng.uniform(1e3, 1e9);
+        assert!(time(coll, s, &fast) <= time(coll, s, &slow) + 1e-15);
+    });
+}
+
+#[test]
+fn allreduce_equals_rs_plus_ag_on_every_kind() {
+    // the decomposition identity the Megatron validation relies on
+    check("ar-rs-ag-identity", 60, |rng| {
+        let kind = *rng.choice(&KINDS);
+        let k = 2 + rng.below(63);
+        let dim = Dim::new(kind, k, &nvlink4());
+        let s = rng.uniform(1e4, 1e9);
+        let ar = time(Collective::AllReduce, s, &dim);
+        let rs_ag =
+            time(Collective::ReduceScatter, s, &dim) + time(Collective::AllGather, s, &dim);
+        assert!(
+            (ar - rs_ag).abs() <= 1e-9 * ar.max(1e-12),
+            "{kind:?} k={k}: ar {ar} vs rs+ag {rs_ag}"
+        );
+    });
+}
+
+#[test]
+fn hierarchical_collectives_nonnegative_and_finite() {
+    check("hier-sane", 80, |rng| {
+        let d1 = Dim::new(*rng.choice(&KINDS), 1 + rng.below(32), &nvlink4());
+        let d2 = Dim::new(*rng.choice(&KINDS), 1 + rng.below(32), &pcie4());
+        let coll = *rng.choice(&COLLS);
+        let s = rng.uniform(0.0, 1e9);
+        let t = time_hier(coll, s, &[&d1, &d2]);
+        assert!(t.is_finite() && t >= 0.0);
+        // zero payload is free
+        assert_eq!(time_hier(coll, 0.0, &[&d1, &d2]), 0.0);
+    });
+}
+
+#[test]
+fn conversion_algebra_consistency() {
+    const LAYOUTS: [Layout; 5] =
+        [Layout::Replicated, Layout::Row, Layout::Col, Layout::Head, Layout::Partial];
+    check("conversion-algebra", 60, |rng| {
+        let from = *rng.choice(&LAYOUTS);
+        let to = *rng.choice(&LAYOUTS);
+        // identity is free; replicated sources are free
+        assert_eq!(conversion_op(from, from), None);
+        assert_eq!(conversion_op(Layout::Replicated, to), None);
+        // cost is zero iff the op is None
+        let dim = Dim::new(DimKind::Ring, 8, &nvlink4());
+        let t = conversion_time(from, to, 1e8, &[&dim]);
+        match conversion_op(from, to) {
+            None => assert_eq!(t, 0.0),
+            Some(_) => assert!(t > 0.0),
+        }
+    });
+}
+
+#[test]
+fn serving_metrics_sane_across_grid() {
+    let model = llama3_8b();
+    let sys = sn40l_x16();
+    check("serving-sane", 40, |rng| {
+        let splits = [(16usize, 1usize), (8, 2), (4, 4), (2, 8), (1, 16)];
+        let (tp, pp) = *rng.choice(&splits);
+        let pt = ServingPoint {
+            tp,
+            pp,
+            batch: 1.0 + rng.below(16) as f64,
+            prompt_len: 128.0 * (1 + rng.below(32)) as f64,
+            context: 128.0 * (1 + rng.below(32)) as f64,
+        };
+        let m = evaluate(&model, &sys, &pt);
+        assert!(m.ttft > 0.0 && m.ttft.is_finite());
+        assert!(m.tpot > 0.0 && m.tpot.is_finite());
+        assert!(m.prefill_tps > 0.0 && m.decode_tps > 0.0);
+        // breakdowns are simplices
+        for (a, b, c) in [m.prefill_breakdown, m.decode_breakdown] {
+            assert!((a + b + c - 1.0).abs() < 1e-9);
+            assert!(a >= 0.0 && b >= 0.0 && c >= 0.0);
+        }
+        // more batch -> more decode throughput (memory-bound weights amortize)
+        let big = evaluate(&model, &sys, &ServingPoint { batch: pt.batch * 4.0, ..pt });
+        assert!(big.decode_tps >= m.decode_tps * 0.999);
+    });
+}
+
+#[test]
+fn json_roundtrip_fuzz() {
+    // generate random JSON values, serialize, reparse, compare
+    fn gen(rng: &mut dfmodel::util::prng::Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.uniform(-1e6, 1e6) * 100.0).round() / 100.0),
+            3 => {
+                let n = rng.below(12);
+                Json::Str((0..n).map(|_| *rng.choice(&['a', '"', '\\', 'é', '\n', 'z'])).collect())
+            }
+            4 => Json::Arr((0..rng.below(4)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(4)).map(|i| (format!("k{i}"), gen(rng, depth - 1))).collect(),
+            ),
+        }
+    }
+    check("json-roundtrip", 150, |rng| {
+        let v = gen(rng, 3);
+        let compact = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(v, compact, "compact roundtrip");
+        let pretty = Json::parse(&v.pretty()).unwrap();
+        assert_eq!(v, pretty, "pretty roundtrip");
+    });
+}

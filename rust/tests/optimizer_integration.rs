@@ -1,0 +1,260 @@
+//! Integration tests across the optimizer stack: inter-chip × intra-chip ×
+//! pipeline composition, invariants under randomized workloads/systems, and
+//! failure injection (infeasible capacities, degenerate topologies).
+
+use dfmodel::assign::Assignment;
+use dfmodel::graph::{gpt, GraphBuilder, KernelKind};
+use dfmodel::interchip::{self, InterChipOptions};
+use dfmodel::intrachip::{self, IntraChipOptions};
+use dfmodel::system::{chip, interconnect, memory, topology, SystemSpec};
+use dfmodel::util::check::check;
+use dfmodel::util::prng::Rng;
+
+fn random_chain_graph(rng: &mut Rng, n: usize) -> dfmodel::graph::DataflowGraph {
+    let mut b = GraphBuilder::new("rand-chain");
+    let mut prev = None;
+    for i in 0..n {
+        let kind = match rng.below(4) {
+            0 => KernelKind::Gemm {
+                b: 1.0,
+                m: rng.uniform(64.0, 4096.0).round(),
+                k: rng.uniform(64.0, 4096.0).round(),
+                n: rng.uniform(64.0, 4096.0).round(),
+            },
+            1 => KernelKind::Elementwise {
+                elems: rng.uniform(1e4, 1e7).round(),
+                flop_per_elem: 2.0,
+            },
+            2 => KernelKind::Softmax {
+                rows: rng.uniform(64.0, 2048.0).round(),
+                cols: rng.uniform(64.0, 2048.0).round(),
+            },
+            _ => KernelKind::LayerNorm {
+                rows: rng.uniform(64.0, 2048.0).round(),
+                cols: rng.uniform(64.0, 2048.0).round(),
+            },
+        };
+        let w = if matches!(kind, KernelKind::Gemm { .. }) {
+            rng.uniform(1e5, 1e8)
+        } else {
+            0.0
+        };
+        let k = b.kernel(&format!("k{i}"), kind, w);
+        if let Some(p) = prev {
+            b.tensor(&format!("t{i}"), p, k, rng.uniform(1e4, 1e7));
+        }
+        prev = Some(k);
+    }
+    b.build()
+}
+
+fn random_system(rng: &mut Rng) -> SystemSpec {
+    let link = if rng.below(2) == 0 { interconnect::pcie4() } else { interconnect::nvlink4() };
+    let mem = if rng.below(2) == 0 { memory::ddr4() } else { memory::hbm3() };
+    let c = match rng.below(4) {
+        0 => chip::h100(),
+        1 => chip::tpu_v4(),
+        2 => chip::sn30(),
+        _ => chip::sn10(),
+    };
+    let topo = match rng.below(3) {
+        0 => topology::ring(8, &link),
+        1 => topology::torus2d(4, 2, &link),
+        _ => topology::torus2d(4, 4, &link),
+    };
+    SystemSpec::new(c, mem, link, topo)
+}
+
+#[test]
+fn interchip_mapping_invariants_on_random_instances() {
+    check("interchip-invariants", 30, |rng| {
+        let n = 3 + rng.below(8);
+        let g = random_chain_graph(rng, n);
+        let sys = random_system(rng);
+        let Some(m) = interchip::optimize(&g, &sys, &InterChipOptions::default()) else {
+            return; // infeasible is a legal outcome
+        };
+        // degrees use all chips
+        assert_eq!(m.plan.tp * m.plan.pp * m.plan.dp, sys.n_chips());
+        // stages are precedence-feasible and contiguous over topo order
+        let asg = Assignment::new(m.stage_of.clone(), m.stages.len());
+        assert!(asg.respects_precedence(&g), "stage precedence violated");
+        // objective equals the max stage critical time
+        let max_stage = m.stages.iter().map(|s| s.t_cri()).fold(0.0f64, f64::max);
+        assert!((m.t_cri - max_stage).abs() <= 1e-12 * max_stage.max(1.0));
+        // latency vectors are non-negative and finite
+        assert!(m.vectors.h_c.iter().all(|v| v.is_finite() && *v >= 0.0));
+        assert!(m.vectors.h_n.iter().all(|v| v.is_finite() && *v >= 0.0));
+        assert!(m.vectors.h_m.iter().all(|v| v.is_finite() && *v >= 0.0));
+    });
+}
+
+#[test]
+fn intrachip_mapping_invariants_on_random_instances() {
+    check("intrachip-invariants", 30, |rng| {
+        let n = 3 + rng.below(10);
+        let g = random_chain_graph(rng, n);
+        let c = if rng.below(2) == 0 { chip::sn10() } else { chip::sn30() };
+        let mem = memory::ddr4();
+        let Some(m) = intrachip::optimize_intra(&g, &c, &mem, &IntraChipOptions::default())
+        else {
+            return;
+        };
+        // partitions cover all kernels, precedence-feasible
+        assert!(m.assignment.respects_precedence(&g));
+        assert_eq!(m.assignment.part.len(), g.n_kernels());
+        // total time is the sum of partition criticals
+        let sum: f64 = m.partitions.iter().map(|p| p.t_cri()).sum();
+        assert!((m.total_time - sum).abs() <= 1e-12 * sum.max(1.0));
+        // SRAM constraint holds in every partition
+        for p in &m.partitions {
+            assert!(p.sram_used <= c.sram_bytes * (1.0 + 1e-9), "SRAM violated");
+        }
+        // fusing never increases DRAM traffic or total time vs kernel-by-kernel
+        let kbk = intrachip::optimize_intra(
+            &g,
+            &c,
+            &mem,
+            &IntraChipOptions { force_kernel_by_kernel: true, ..Default::default() },
+        )
+        .unwrap();
+        assert!(m.total_dram_traffic() <= kbk.total_dram_traffic() + 1e-9);
+        assert!(m.total_time <= kbk.total_time * (1.0 + 1e-9));
+    });
+}
+
+#[test]
+fn sharded_graph_conserves_totals() {
+    check("shard-conservation", 20, |rng| {
+        let n = 4 + rng.below(6);
+        let g = random_chain_graph(rng, n);
+        let sys = random_system(rng);
+        let plans = interchip::enumerate_plans(&sys.topology);
+        let plan = rng.choice(&plans).clone();
+        let (schemes, _) = interchip::optimizer::select_sharding(
+            &g,
+            &sys,
+            &plan,
+            &InterChipOptions::default(),
+        );
+        let (sharded, net) = interchip::shard_graph(&g, &sys, &plan, &schemes);
+        // per-chip totals never exceed the unsharded totals
+        assert!(sharded.total_flops() <= g.total_flops() * (1.0 + 1e-9));
+        assert!(sharded.total_weight_bytes() <= g.total_weight_bytes() * (1.0 + 1e-9));
+        // sharded totals × tp at least cover the original work
+        let tp = plan.tp as f64;
+        assert!(sharded.total_flops() * tp >= g.total_flops() * (1.0 - 1e-9));
+        assert_eq!(net.len(), g.n_kernels());
+        assert!(net.iter().all(|v| v.is_finite() && *v >= 0.0));
+    });
+}
+
+#[test]
+fn pipeline_monotone_in_link_bandwidth() {
+    // a strictly faster interconnect can never lower modeled utilization
+    let cfg = gpt::gpt3_175b();
+    let mk = |link: dfmodel::system::LinkTech| {
+        SystemSpec::new(
+            chip::sn10(),
+            memory::ddr4(),
+            link.clone(),
+            topology::ring(8, &link),
+        )
+    };
+    let slow = dfmodel::pipeline::llm_training(&cfg, &mk(interconnect::pcie4()), 64.0).unwrap();
+    let fast = dfmodel::pipeline::llm_training(&cfg, &mk(interconnect::nvlink4()), 64.0).unwrap();
+    assert!(fast.utilization >= slow.utilization * (1.0 - 1e-9));
+}
+
+#[test]
+fn pipeline_monotone_in_memory_bandwidth() {
+    let cfg = gpt::gpt3_175b();
+    let link = interconnect::pcie4();
+    let mut kbk_chip = chip::sn10();
+    kbk_chip.execution = dfmodel::system::ExecutionModel::KernelByKernel;
+    let mk = |bw: f64| {
+        let mut mem = memory::ddr4();
+        mem.bandwidth = bw;
+        SystemSpec::new(kbk_chip.clone(), mem, link.clone(), topology::ring(8, &link))
+    };
+    let slow = dfmodel::pipeline::llm_training(&cfg, &mk(100e9), 64.0).unwrap();
+    let fast = dfmodel::pipeline::llm_training(&cfg, &mk(600e9), 64.0).unwrap();
+    assert!(fast.utilization >= slow.utilization * (1.0 - 1e-9));
+}
+
+#[test]
+fn failure_injection_zero_capacity_memory() {
+    let cfg = gpt::gpt3_1t();
+    let link = interconnect::pcie4();
+    let mut mem = memory::ddr4();
+    mem.capacity = 1.0; // 1 byte
+    let sys = SystemSpec::new(chip::sn10(), mem, link.clone(), topology::ring(8, &link));
+    assert!(dfmodel::pipeline::llm_training(&cfg, &sys, 64.0).is_none());
+}
+
+#[test]
+fn failure_injection_single_chip_system() {
+    // degenerate 1-chip topology: no parallelism, still a valid mapping for
+    // a small model
+    let cfg = gpt::GptConfig {
+        layers: 2,
+        d_model: 1024.0,
+        n_heads: 8.0,
+        seq: 512.0,
+        d_ff: 4096.0,
+        vocab: 1000.0,
+        dtype_bytes: 2.0,
+    };
+    let link = interconnect::pcie4();
+    let sys =
+        SystemSpec::new(chip::sn10(), memory::ddr4(), link.clone(), topology::ring(1, &link));
+    let r = dfmodel::pipeline::llm_training(&cfg, &sys, 8.0).expect("1-chip feasible");
+    assert_eq!((r.tp, r.pp, r.dp), (1, 1, 1));
+    assert!(r.utilization > 0.0);
+}
+
+#[test]
+fn forced_degrees_cover_the_torus_plans() {
+    // every enumerated plan of a 4x2 torus must be reachable via forcing
+    let g = gpt::gpt_coarse_graph(&gpt::gpt3_175b(), 1.0);
+    let link = interconnect::pcie4();
+    let sys = SystemSpec::new(
+        chip::sn10(),
+        memory::ddr4(),
+        link.clone(),
+        topology::torus2d(4, 2, &link),
+    );
+    for plan in interchip::enumerate_plans(&sys.topology) {
+        if plan.pp > g.n_kernels() {
+            continue;
+        }
+        let m = interchip::optimize(
+            &g,
+            &sys,
+            &InterChipOptions {
+                force_degrees: Some((plan.tp, plan.pp, plan.dp)),
+                ..Default::default()
+            },
+        );
+        if let Some(m) = m {
+            assert_eq!((m.plan.tp, m.plan.pp, m.plan.dp), (plan.tp, plan.pp, plan.dp));
+        }
+    }
+}
+
+#[test]
+fn hpl_feasible_on_sampled_dse_systems() {
+    // spot-check a handful of the 80 systems rather than the full sweep
+    let systems = dfmodel::dse::dse_systems_1024();
+    let mut rng = Rng::new(42);
+    let mut feasible = 0;
+    let mut total = 0;
+    for _ in 0..6 {
+        let sys = rng.choice(&systems);
+        total += 1;
+        if dfmodel::dse::evaluate_point(dfmodel::dse::Workload::Hpl, sys).is_some() {
+            feasible += 1;
+        }
+    }
+    assert!(feasible * 2 >= total, "too many infeasible HPL points: {feasible}/{total}");
+}

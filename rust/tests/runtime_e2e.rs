@@ -1,0 +1,71 @@
+//! Integration: load the AOT artifacts (built by `make artifacts`), compile
+//! them on the PJRT CPU client, execute every mapping variant, and check
+//! numerics against the Python oracle — the full L1→L2→L3 stack.
+//!
+//! Skipped (with a notice) when artifacts/ has not been built.
+
+use dfmodel::runtime::Runtime;
+use std::path::Path;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("artifacts/ not built; run `make artifacts` — skipping");
+        None
+    }
+}
+
+#[test]
+fn all_pipelines_match_the_oracle() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(dir, &[]).expect("load all artifacts");
+    let tol = rt.manifest.tolerance.max(1e-3);
+    for name in ["fused", "kernel_by_kernel", "vendor", "dfmodel"] {
+        let err = rt.verify_pipeline(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(err < tol, "{name}: max err {err} > tol {tol}");
+    }
+}
+
+#[test]
+fn dataflow_mappings_move_less_intermediate_data() {
+    // the Fig. 2C vs 2D contrast, measured on real execution: the fused
+    // mapping's host-visible intermediate traffic is far below the
+    // kernel-by-kernel mapping's.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(dir, &["fused", "kernel_by_kernel", "vendor"]).expect("load");
+    let x = rt.reference_input().unwrap();
+    let (_, fused) = rt.run_pipeline("fused", &x).unwrap();
+    let (_, kbk) = rt.run_pipeline("kernel_by_kernel", &x).unwrap();
+    let (_, vendor) = rt.run_pipeline("vendor", &x).unwrap();
+    assert!(
+        fused.intermediate_bytes * 4.0 < kbk.intermediate_bytes,
+        "fused {} vs kbk {}",
+        fused.intermediate_bytes,
+        kbk.intermediate_bytes
+    );
+    assert!(vendor.intermediate_bytes < kbk.intermediate_bytes);
+    assert_eq!(kbk.steps, 14);
+    assert_eq!(vendor.steps, 4);
+}
+
+#[test]
+fn pipelines_agree_with_each_other() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(dir, &["vendor", "dfmodel"]).expect("load");
+    let x = rt.reference_input().unwrap();
+    let (a, _) = rt.run_pipeline("vendor", &x).unwrap();
+    let (b, _) = rt.run_pipeline("dfmodel", &x).unwrap();
+    let max_err =
+        a.iter().zip(&b).map(|(p, q)| (p - q).abs()).fold(0.0f32, f32::max);
+    assert!(max_err < 1e-3, "vendor vs dfmodel diverge: {max_err}");
+}
+
+#[test]
+fn runtime_rejects_bad_input_length() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(dir, &["fused"]).expect("load");
+    assert!(rt.run_pipeline("fused", &[0.0; 3]).is_err());
+    assert!(rt.run_pipeline("does-not-exist", &[0.0; 3]).is_err());
+}
