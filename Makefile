@@ -1,0 +1,20 @@
+# Convenience targets; the committed artifacts/ match the `artifacts` recipe.
+
+ARTIFACT_FLAGS ?= --d-model 64 --n-heads 2 --seq 128 --d-ff 256
+
+.PHONY: build test bench artifacts
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+bench:
+	cargo bench --bench paper_figures
+	cargo bench --bench ablations
+	cargo bench --bench optimizer_perf
+
+# Regenerate the AOT HLO artifacts (requires JAX; see python/compile/aot.py)
+artifacts:
+	cd python && python3 -m compile.aot --outdir ../artifacts $(ARTIFACT_FLAGS)

@@ -5,7 +5,8 @@
 //!    kernel-by-kernel, vendor 4-partition, DFModel-optimized, fused).
 //! 2. The same four mappings are then *executed for real*: the AOT
 //!    artifacts (L2 JAX model + L1 Pallas kernels, lowered to HLO text by
-//!    `make artifacts`) run on the PJRT CPU client.
+//!    `make artifacts`) run on the default runtime backend — the pure-Rust
+//!    HLO interpreter (or PJRT with `--features pjrt`).
 //! 3. Numerics are verified against the Python oracle and the measured
 //!    intermediate-traffic ordering is compared with the model's
 //!    prediction — proving all layers compose.
@@ -14,19 +15,17 @@
 
 use dfmodel::graph::gpt::{gpt_layer_graph, GptConfig};
 use dfmodel::intrachip::{self, IntraChipOptions};
-use dfmodel::runtime::Runtime;
+use dfmodel::runtime::{find_artifacts, Runtime};
 use dfmodel::system::{chip, memory};
 use dfmodel::util::table::Table;
-use std::path::Path;
 
 fn main() {
-    let dir = Path::new("artifacts");
-    if !dir.join("manifest.json").exists() {
+    let Some(dir) = find_artifacts() else {
         eprintln!("artifacts/ missing — run `make artifacts` first");
         std::process::exit(1);
-    }
-    let rt = Runtime::load(dir, &[]).expect("load artifacts");
-    println!("PJRT platform: {}\n", rt.platform());
+    };
+    let rt = Runtime::load(&dir, &[]).expect("load artifacts");
+    println!("runtime backend: {}\n", rt.platform());
     let m = &rt.manifest;
 
     // ---- model the same tiny layer the artifacts implement ----
@@ -62,7 +61,7 @@ fn main() {
     // ---- execute the real pipelines ----
     let x = rt.reference_input().expect("input");
     let mut t = Table::new(
-        "modeled (analytical) vs executed (PJRT) — tiny GPT layer",
+        "modeled (analytical) vs executed (runtime backend) — tiny GPT layer",
         &[
             "mapping",
             "modeled partitions",

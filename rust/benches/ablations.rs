@@ -156,7 +156,10 @@ fn a4_waterfill_vs_even() -> String {
 /// efficiency derate (documents the §Perf modeling choice).
 fn a5_derate_sensitivity() -> String {
     // run the four-mapping §VII study and report the accumulated speedup
-    let maps = dfmodel::figures::casestudy::four_mappings();
+    let maps = match dfmodel::figures::casestudy::four_mappings() {
+        Ok(m) => m,
+        Err(e) => return format!("A5 — skipped ({e})\n\n"),
+    };
     let base = maps[0].throughput();
     let accum = maps.last().unwrap().throughput() / base;
     let vendor = maps[1].throughput() / base;

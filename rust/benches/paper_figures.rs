@@ -27,7 +27,7 @@ fn main() {
     let mut combined = String::new();
     for id in &ids {
         let out = runner.run_once(&format!("figure::{id}"), || {
-            figures::generate(id).unwrap_or_else(|| format!("unknown figure '{id}'"))
+            figures::generate(id).unwrap_or_else(|e| format!("figure '{id}' failed: {e}"))
         });
         println!("{out}");
         combined.push_str(&format!("===== {id} =====\n{out}\n"));

@@ -18,8 +18,9 @@
 use crate::graph::{dlrm, fft, gpt, hpl, DataflowGraph};
 use crate::interchip::InterChipOptions;
 use crate::system::{chip, interconnect, memory, topology, ChipSpec, SystemSpec};
+use crate::util::error::Result;
 use crate::util::json::Json;
-use anyhow::{anyhow, bail, Result};
+use crate::{bail, err};
 
 /// A parsed experiment specification.
 #[derive(Debug, Clone)]
@@ -39,7 +40,7 @@ pub enum WorkloadSpec {
 
 impl Experiment {
     pub fn parse(text: &str) -> Result<Experiment> {
-        let j = Json::parse(text).map_err(|e| anyhow!("config: {e}"))?;
+        let j = Json::parse(text).map_err(|e| err!("config: {e}"))?;
         let workload = parse_workload(j.get("workload").unwrap_or(&Json::Null))?;
         let system = parse_system(j.get("system").unwrap_or(&Json::Null))?;
         let options = parse_options(j.get("options").unwrap_or(&Json::Null))?;
@@ -48,7 +49,7 @@ impl Experiment {
 
     pub fn load(path: &std::path::Path) -> Result<Experiment> {
         let text = std::fs::read_to_string(path)
-            .map_err(|e| anyhow!("read {}: {e}", path.display()))?;
+            .map_err(|e| err!("read {}: {e}", path.display()))?;
         Experiment::parse(&text)
     }
 

@@ -7,7 +7,9 @@ use crate::interchip::{self, InterChipOptions};
 use crate::intrachip::{self, IntraChipOptions};
 use crate::roofline::Roofline;
 use crate::system::{chip, interconnect, memory, topology, SystemSpec};
+use crate::util::error::Result;
 use crate::util::table::{write_result, Heatmap, Table};
+use crate::{bail, err};
 
 /// One evaluated §VII mapping.
 #[derive(Debug, Clone)]
@@ -31,16 +33,16 @@ impl MappingResult {
 }
 
 /// The §VII system: 8 SN10, DDR 200 GB/s, PCIe 25 GB/s.
-pub fn sn10_system(topo_name: &str) -> SystemSpec {
+pub fn sn10_system(topo_name: &str) -> Result<SystemSpec> {
     let link = interconnect::pcie4();
     let topo = match topo_name {
         "ring8" => topology::ring(8, &link),
         "torus4x2" => topology::torus2d(4, 2, &link),
-        other => panic!("unknown §VII topology {other}"),
+        other => bail!("unknown §VII topology '{other}' (expected ring8|torus4x2)"),
     };
     let mut mem = memory::ddr4();
     mem.capacity = 3e12; // SN10 pairs with large DDR (§VII: "large-capacity")
-    SystemSpec::new(chip::sn10(), mem, link, topo)
+    Ok(SystemSpec::new(chip::sn10(), mem, link, topo))
 }
 
 /// The vendor 4-partition assignment of §VII-B, by kernel name.
@@ -72,13 +74,13 @@ fn eval_mapping(
     degrees: (usize, usize, usize),
     force_kbk: bool,
     force_vendor: bool,
-) -> Option<MappingResult> {
+) -> Result<MappingResult> {
     let fine = gpt::gpt_layer_graph(cfg, 1.0);
     let plans = interchip::enumerate_plans(&sys.topology);
     let plan = plans
         .iter()
         .find(|p| (p.tp, p.pp, p.dp) == degrees)
-        .unwrap_or_else(|| panic!("no plan {degrees:?} in {}", sys.topology.name));
+        .ok_or_else(|| err!("no plan {degrees:?} in {}", sys.topology.name))?;
     let (schemes, _) = interchip::optimizer::select_sharding(
         &fine,
         sys,
@@ -96,11 +98,12 @@ fn eval_mapping(
             sharded.kernels.iter().map(|k| vendor_partition_of(&k.name)).collect();
         opts.force_assignment = Some(part);
     }
-    let intra = intrachip::optimize_intra(&sharded, &sys.chip, &sys.memory, &opts)?;
+    let intra = intrachip::optimize_intra(&sharded, &sys.chip, &sys.memory, &opts)
+        .ok_or_else(|| err!("infeasible intra-chip mapping for '{name}'"))?;
 
     let flops = sharded.total_flops();
     let net_total: f64 = opts_net_total(&intra, &sharded, sys);
-    Some(MappingResult {
+    Ok(MappingResult {
         name: name.into(),
         time: intra.total_time,
         flops,
@@ -119,39 +122,38 @@ fn opts_net_total(
     intra.partitions.iter().map(|p| p.t_net).sum::<f64>() * sys.link.bandwidth
 }
 
-/// All four §VII mappings in Table VI order.
-pub fn four_mappings() -> Vec<MappingResult> {
+/// All four §VII mappings in Table VI order. Errors (rather than panicking
+/// or silently dropping entries) when a plan is missing or infeasible.
+pub fn four_mappings() -> Result<Vec<MappingResult>> {
     let cfg = gpt::gpt3_175b();
-    let ring = sn10_system("ring8");
-    let torus = sn10_system("torus4x2");
-    let mut out = Vec::new();
-    if let Some(m) =
-        eval_mapping("non-dataflow (Calculon-style), 8x1 ring", &cfg, &ring, (8, 1, 1), true, false)
-    {
-        out.push(m);
-    }
-    if let Some(m) =
-        eval_mapping("vendor dataflow mapping, 8x1 ring", &cfg, &ring, (8, 1, 1), false, true)
-    {
-        out.push(m);
-    }
-    if let Some(m) =
-        eval_mapping("DFModel dataflow mapping, 8x1 ring", &cfg, &ring, (8, 1, 1), false, false)
-    {
-        out.push(m);
-    }
-    if let Some(m) =
-        eval_mapping("DFModel dataflow mapping, 4x2 torus", &cfg, &torus, (4, 1, 2), false, false)
-    {
-        out.push(m);
-    }
-    out
+    let ring = sn10_system("ring8")?;
+    let torus = sn10_system("torus4x2")?;
+    Ok(vec![
+        eval_mapping(
+            "non-dataflow (Calculon-style), 8x1 ring",
+            &cfg,
+            &ring,
+            (8, 1, 1),
+            true,
+            false,
+        )?,
+        eval_mapping("vendor dataflow mapping, 8x1 ring", &cfg, &ring, (8, 1, 1), false, true)?,
+        eval_mapping("DFModel dataflow mapping, 8x1 ring", &cfg, &ring, (8, 1, 1), false, false)?,
+        eval_mapping(
+            "DFModel dataflow mapping, 4x2 torus",
+            &cfg,
+            &torus,
+            (4, 1, 2),
+            false,
+            false,
+        )?,
+    ])
 }
 
 /// Fig. 18 + Table VI.
-pub fn fig18_table6() -> String {
-    let maps = four_mappings();
-    let sys = sn10_system("ring8");
+pub fn fig18_table6() -> Result<String> {
+    let maps = four_mappings()?;
+    let sys = sn10_system("ring8")?;
     let rl = Roofline::of_system(&sys);
 
     let mut t18 = Table::new(
@@ -193,7 +195,7 @@ pub fn fig18_table6() -> String {
     out.push('\n');
     out.push_str(&t6.render());
     let _ = write_result("fig18_table6.csv", &t6.to_csv());
-    out
+    Ok(out)
 }
 
 /// Fig. 19: dataflow vs non-dataflow utilization over SRAM × DRAM bw.
@@ -244,10 +246,16 @@ mod tests {
     }
 
     #[test]
+    fn unknown_topology_is_an_error_not_a_panic() {
+        let e = sn10_system("hypercube").unwrap_err();
+        assert!(e.to_string().contains("hypercube"), "{e}");
+    }
+
+    #[test]
     fn speedup_chain_is_monotone() {
         // non-dataflow < vendor < DFModel ring <= DFModel torus (§VII)
-        let maps = four_mappings();
-        assert_eq!(maps.len(), 4, "all four mappings must be feasible");
+        let maps = four_mappings().expect("all four mappings must be feasible");
+        assert_eq!(maps.len(), 4, "all four mappings must be present");
         let thr: Vec<f64> = maps.iter().map(|m| m.throughput()).collect();
         assert!(thr[1] > thr[0], "vendor must beat non-dataflow: {thr:?}");
         assert!(thr[2] >= thr[1] * 0.999, "DFModel must match/beat vendor: {thr:?}");
@@ -259,8 +267,8 @@ mod tests {
 
     #[test]
     fn non_dataflow_mapping_is_memory_bound() {
-        let maps = four_mappings();
-        let sys = sn10_system("ring8");
+        let maps = four_mappings().unwrap();
+        let sys = sn10_system("ring8").unwrap();
         let rl = crate::roofline::Roofline::of_system(&sys);
         let m = &maps[0];
         let p = rl.point(&m.name, m.flops, m.dram_bytes, m.net_bytes, m.time);
@@ -269,7 +277,7 @@ mod tests {
 
     #[test]
     fn dataflow_raises_memory_oi() {
-        let maps = four_mappings();
+        let maps = four_mappings().unwrap();
         let oi = |m: &MappingResult| m.flops / m.dram_bytes;
         assert!(oi(&maps[1]) > 2.0 * oi(&maps[0]), "fusion must raise OI_mem substantially");
     }

@@ -95,17 +95,26 @@ pub struct Tensor {
 }
 
 /// Validation failures for hand-built graphs.
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum GraphError {
-    #[error("kernel id {0} out of range")]
     BadKernelId(usize),
-    #[error("graph has a cycle involving kernel '{0}'")]
     Cycle(String),
-    #[error("tensor '{0}' is a self-loop")]
     SelfLoop(String),
-    #[error("graph is empty")]
     Empty,
 }
+
+impl std::fmt::Display for GraphError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GraphError::BadKernelId(id) => write!(f, "kernel id {id} out of range"),
+            GraphError::Cycle(k) => write!(f, "graph has a cycle involving kernel '{k}'"),
+            GraphError::SelfLoop(t) => write!(f, "tensor '{t}' is a self-loop"),
+            GraphError::Empty => write!(f, "graph is empty"),
+        }
+    }
+}
+
+impl std::error::Error for GraphError {}
 
 /// The workload dataflow graph.
 #[derive(Debug, Clone, Default)]

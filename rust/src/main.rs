@@ -47,16 +47,19 @@ fn cmd_figure(args: &Args) -> i32 {
     } else {
         args.positional.clone()
     };
+    let mut failed = 0;
     for id in &ids {
         match figures::generate(id) {
-            Some(out) => println!("{out}"),
-            None => {
-                eprintln!("unknown figure '{id}'");
-                return 2;
+            Ok(out) => println!("{out}"),
+            Err(e) => {
+                // one bad figure id or infeasible plan degrades to an error
+                // line instead of aborting the whole run
+                eprintln!("figure '{id}': {e}");
+                failed += 1;
             }
         }
     }
-    0
+    i32::from(failed > 0)
 }
 
 fn cmd_optimize(args: &Args) -> i32 {
@@ -177,13 +180,44 @@ fn cmd_run(args: &Args) -> i32 {
     }
 }
 
+/// Load a runtime honoring `--backend interp|pjrt` (default: interp).
+fn load_runtime(
+    dir: &std::path::Path,
+    pipelines: &[&str],
+    args: &Args,
+) -> Result<dfmodel::runtime::Runtime, dfmodel::util::error::Error> {
+    match args.get_or("backend", "interp") {
+        "interp" => dfmodel::runtime::Runtime::load(dir, pipelines),
+        #[cfg(feature = "pjrt")]
+        "pjrt" => {
+            let b = dfmodel::runtime::pjrt::PjrtBackend::cpu()?;
+            dfmodel::runtime::Runtime::load_with(dir, pipelines, &b)
+        }
+        other => Err(dfmodel::err!(
+            "unknown backend '{other}'{}",
+            if cfg!(feature = "pjrt") { "" } else { " (built without the pjrt feature)" }
+        )),
+    }
+}
+
+fn artifacts_dir() -> Result<std::path::PathBuf, dfmodel::util::error::Error> {
+    dfmodel::runtime::find_artifacts()
+        .ok_or_else(|| dfmodel::err!("artifacts/ not found — run `make artifacts` first"))
+}
+
 fn cmd_run_pipeline(args: &Args) -> i32 {
     let Some(name) = args.positional.first() else {
         eprintln!("run-pipeline: need a pipeline name (fused|kernel_by_kernel|vendor|dfmodel)");
         return 2;
     };
-    let dir = std::path::Path::new("artifacts");
-    match dfmodel::runtime::Runtime::load(dir, &[name.as_str()]) {
+    let dir = match artifacts_dir() {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    match load_runtime(&dir, &[name.as_str()], args) {
         Ok(rt) => {
             let x = match rt.reference_input() {
                 Ok(x) => x,
@@ -216,10 +250,17 @@ fn cmd_run_pipeline(args: &Args) -> i32 {
     }
 }
 
-fn cmd_verify(_args: &Args) -> i32 {
-    let dir = std::path::Path::new("artifacts");
-    match dfmodel::runtime::Runtime::load(dir, &[]) {
+fn cmd_verify(args: &Args) -> i32 {
+    let dir = match artifacts_dir() {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    match load_runtime(&dir, &[], args) {
         Ok(rt) => {
+            println!("backend: {}", rt.platform());
             let mut bad = 0;
             for name in ["fused", "kernel_by_kernel", "vendor", "dfmodel"] {
                 match rt.verify_pipeline(name) {

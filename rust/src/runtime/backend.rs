@@ -1,0 +1,55 @@
+//! Pluggable execution backends (the StreamTensor-style split between
+//! dataflow *planning* and *execution*): a [`Backend`] compiles one
+//! HLO-text artifact into an [`Executable`]; the [`Runtime`](super::Runtime)
+//! wires executables together along the manifest's pipelines with named
+//! buffers.
+//!
+//! Two implementations ship in-tree:
+//!  * [`interp::InterpBackend`](super::interp::InterpBackend) — pure-Rust
+//!    HLO interpreter, the default; runs offline with zero dependencies;
+//!  * [`pjrt::PjrtBackend`](super::pjrt::PjrtBackend) — wraps the `xla`
+//!    crate's PJRT CPU client, behind `--features pjrt`.
+
+use crate::util::error::Result;
+use std::path::Path;
+
+/// A flattened f32 tensor with its logical (row-major) shape — the buffer
+/// currency that flows between pipeline steps.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorBuf {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl TensorBuf {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> TensorBuf {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        TensorBuf { shape, data }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Host-visible payload size (f32).
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+/// Compiles HLO-text artifacts into executables.
+pub trait Backend {
+    /// Short backend name for diagnostics ("interp", "pjrt", ...).
+    fn name(&self) -> &'static str;
+
+    /// Compile the artifact `artifact` whose HLO text lives at `path`.
+    fn compile(&self, artifact: &str, path: &Path) -> Result<Box<dyn Executable>>;
+}
+
+/// A compiled artifact. `execute` takes the entry computation's parameters
+/// in positional order (by reference — pipeline buffers are reused across
+/// steps without copying) and returns the root tuple's elements (every AOT
+/// artifact returns a tuple — `return_tuple=True` in `aot.py`).
+pub trait Executable {
+    fn execute(&self, args: &[&TensorBuf]) -> Result<Vec<TensorBuf>>;
+}

@@ -1,0 +1,613 @@
+//! Parser for the HLO *text* interchange format emitted by
+//! `python/compile/aot.py` (`as_hlo_text(print_large_constants=True)`).
+//!
+//! Covers the compact printer form the AOT bridge produces: a `HloModule`
+//! header line, then named computations (`ENTRY` marks the entry) whose
+//! instructions read `[ROOT] name = type opcode(operands), attr=..., ...`.
+//! Layout annotations (`{1,0}`) describe physical placement only and are
+//! skipped — the interpreter works on logical row-major values. `/*...*/`
+//! comments (the printer's `/*index=5*/` hints inside wide tuple types) are
+//! treated as whitespace.
+//!
+//! Large constants (baked model weights) arrive as single multi-megabyte
+//! lines, so parsing is cursor-based over the whole file rather than
+//! line-based.
+
+use crate::util::error::Result;
+use crate::{bail, ensure, err};
+use std::collections::HashMap;
+
+/// Element type of an array value (the subset the artifacts use).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    S32,
+    Pred,
+}
+
+/// An HLO shape: array with dims, or tuple.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Ty {
+    Arr { dtype: Dtype, dims: Vec<usize> },
+    Tuple(Vec<Ty>),
+}
+
+/// Flattened tensor payload.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Pred(Vec<bool>),
+}
+
+impl Data {
+    pub fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::Pred(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A logical row-major tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Data,
+}
+
+impl Tensor {
+    pub fn scalar_f32(x: f32) -> Tensor {
+        Tensor { dims: vec![], data: Data::F32(vec![x]) }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// A runtime value: array or tuple (while-loop state, multi-output roots).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Arr(Tensor),
+    Tuple(Vec<Value>),
+}
+
+/// Instruction attributes (unused fields stay at their defaults).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Attrs {
+    pub dimensions: Vec<usize>,
+    pub index: usize,
+    pub direction: String,
+    pub to_apply: String,
+    pub condition: String,
+    pub body: String,
+    pub true_computation: String,
+    pub false_computation: String,
+    pub branch_computations: Vec<String>,
+    pub dynamic_slice_sizes: Vec<usize>,
+    pub lhs_batch_dims: Vec<usize>,
+    pub lhs_contracting_dims: Vec<usize>,
+    pub rhs_batch_dims: Vec<usize>,
+    pub rhs_contracting_dims: Vec<usize>,
+}
+
+/// One parsed instruction. Operands are resolved to instruction indices in
+/// the owning computation at parse time (the printer emits operands before
+/// their uses).
+#[derive(Debug, Clone)]
+pub struct Instr {
+    pub name: String,
+    pub opcode: String,
+    pub ty: Ty,
+    pub operands: Vec<usize>,
+    /// `parameter(N)` number.
+    pub param: Option<usize>,
+    /// Parsed `constant(...)` payload.
+    pub literal: Option<Tensor>,
+    pub attrs: Attrs,
+}
+
+/// A named computation (region): instructions in definition order.
+#[derive(Debug, Clone)]
+pub struct Computation {
+    pub name: String,
+    pub instrs: Vec<Instr>,
+    /// Parameter number -> instruction index.
+    pub params: Vec<usize>,
+    pub root: usize,
+}
+
+/// A parsed HLO module.
+#[derive(Debug, Clone)]
+pub struct HloModule {
+    pub comps: Vec<Computation>,
+    pub entry: usize,
+    by_name: HashMap<String, usize>,
+}
+
+impl HloModule {
+    /// Index of a computation by its printed name.
+    pub fn comp_index(&self, name: &str) -> Result<usize> {
+        self.by_name
+            .get(name)
+            .copied()
+            .ok_or_else(|| err!("unknown computation '{name}'"))
+    }
+
+    pub fn entry_comp(&self) -> &Computation {
+        &self.comps[self.entry]
+    }
+
+    pub fn parse(text: &str) -> Result<HloModule> {
+        let mut c = Cursor::new(text);
+        c.expect("HloModule")?;
+        c.skip_line(); // module name + entry_computation_layout etc.
+
+        let mut comps: Vec<Computation> = Vec::new();
+        let mut by_name: HashMap<String, usize> = HashMap::new();
+        let mut entry: Option<usize> = None;
+        loop {
+            c.skip_ws();
+            if c.eof() {
+                break;
+            }
+            let mut word = c.ident()?;
+            let mut is_entry = false;
+            if word == "ENTRY" {
+                is_entry = true;
+                word = c.ident()?;
+            }
+            let comp_name = word.to_string();
+            c.expect("{")?;
+
+            let mut instrs: Vec<Instr> = Vec::new();
+            let mut names: HashMap<String, usize> = HashMap::new();
+            let mut root: Option<usize> = None;
+            let mut params: Vec<(usize, usize)> = Vec::new();
+            loop {
+                c.skip_ws();
+                if c.peek() == b'}' {
+                    c.bump();
+                    break;
+                }
+                let (ins, is_root) = parse_instr(&mut c, &names)
+                    .map_err(|e| e.context(format!("in computation '{comp_name}'")))?;
+                let idx = instrs.len();
+                if let Some(p) = ins.param {
+                    params.push((p, idx));
+                }
+                if is_root {
+                    root = Some(idx);
+                }
+                names.insert(ins.name.clone(), idx);
+                instrs.push(ins);
+            }
+            ensure!(!instrs.is_empty(), "computation '{comp_name}' is empty");
+            params.sort();
+            for (k, &(num, _)) in params.iter().enumerate() {
+                ensure!(num == k, "computation '{comp_name}': parameter numbers not contiguous");
+            }
+            let params: Vec<usize> = params.into_iter().map(|(_, i)| i).collect();
+            let root = root.unwrap_or(instrs.len() - 1);
+            if is_entry {
+                ensure!(entry.is_none(), "multiple ENTRY computations");
+                entry = Some(comps.len());
+            }
+            by_name.insert(comp_name.clone(), comps.len());
+            comps.push(Computation { name: comp_name, instrs, params, root });
+        }
+        ensure!(!comps.is_empty(), "module has no computations");
+        // the printer always marks the entry; fall back to the last one
+        let entry = entry.unwrap_or(comps.len() - 1);
+        Ok(HloModule { comps, entry, by_name })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cursor
+// ---------------------------------------------------------------------------
+
+struct Cursor<'a> {
+    t: &'a str,
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(t: &'a str) -> Cursor<'a> {
+        Cursor { t, i: 0 }
+    }
+
+    fn eof(&self) -> bool {
+        self.i >= self.t.len()
+    }
+
+    fn peek(&self) -> u8 {
+        *self.t.as_bytes().get(self.i).unwrap_or(&0)
+    }
+
+    fn bump(&mut self) {
+        self.i += 1;
+    }
+
+    fn rest(&self) -> &'a str {
+        self.t.get(self.i..).unwrap_or("")
+    }
+
+    fn error(&self, msg: &str) -> crate::util::error::Error {
+        let near: String = self.rest().chars().take(40).collect();
+        err!("hlo parse error at byte {}: {msg} near {near:?}", self.i)
+    }
+
+    fn skip_ws(&mut self) {
+        let b = self.t.as_bytes();
+        while self.i < b.len() {
+            let ch = b[self.i];
+            if ch == b' ' || ch == b'\t' || ch == b'\r' || ch == b'\n' {
+                self.i += 1;
+            } else if ch == b'/' && b.get(self.i + 1) == Some(&b'*') {
+                match self.t[self.i + 2..].find("*/") {
+                    Some(j) => self.i += 2 + j + 2,
+                    None => self.i = b.len(),
+                }
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn skip_line(&mut self) {
+        match self.rest().find('\n') {
+            Some(j) => self.i += j + 1,
+            None => self.i = self.t.len(),
+        }
+    }
+
+    fn expect(&mut self, tok: &str) -> Result<()> {
+        self.skip_ws();
+        if self.rest().starts_with(tok) {
+            self.i += tok.len();
+            Ok(())
+        } else {
+            Err(self.error(&format!("expected {tok:?}")))
+        }
+    }
+
+    /// Identifier: `[A-Za-z0-9_.-]+` (covers `region_0.43`, `-inf` is NOT
+    /// an identifier use-case — constants are parsed separately).
+    fn ident(&mut self) -> Result<&'a str> {
+        self.skip_ws();
+        let b = self.t.as_bytes();
+        let start = self.i;
+        while self.i < b.len() {
+            let ch = b[self.i];
+            if ch.is_ascii_alphanumeric() || ch == b'_' || ch == b'.' || ch == b'-' {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        if self.i == start {
+            return Err(self.error("expected identifier"));
+        }
+        Ok(&self.t[start..self.i])
+    }
+
+    /// Consume `open ... close` (nesting-aware); returns the inner text.
+    fn balanced(&mut self, open: u8, close: u8) -> Result<&'a str> {
+        self.skip_ws();
+        if self.peek() != open {
+            return Err(self.error(&format!("expected '{}'", open as char)));
+        }
+        self.bump();
+        let start = self.i;
+        let mut depth = 1usize;
+        let b = self.t.as_bytes();
+        while self.i < b.len() {
+            let ch = b[self.i];
+            if ch == open {
+                depth += 1;
+            } else if ch == close {
+                depth -= 1;
+                if depth == 0 {
+                    let s = &self.t[start..self.i];
+                    self.i += 1;
+                    return Ok(s);
+                }
+            }
+            self.i += 1;
+        }
+        Err(self.error("unbalanced delimiter"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Grammar pieces
+// ---------------------------------------------------------------------------
+
+fn parse_usize_list(s: &str) -> Result<Vec<usize>> {
+    let mut out = Vec::new();
+    for tok in s.split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        out.push(tok.parse::<usize>().map_err(|_| err!("bad integer '{tok}'"))?);
+    }
+    Ok(out)
+}
+
+fn parse_type(c: &mut Cursor) -> Result<Ty> {
+    c.skip_ws();
+    if c.peek() == b'(' {
+        c.bump();
+        let mut elems = Vec::new();
+        c.skip_ws();
+        if c.peek() == b')' {
+            c.bump();
+            return Ok(Ty::Tuple(elems));
+        }
+        loop {
+            elems.push(parse_type(c)?);
+            c.skip_ws();
+            if c.peek() == b',' {
+                c.bump();
+                continue;
+            }
+            c.expect(")")?;
+            return Ok(Ty::Tuple(elems));
+        }
+    }
+    let dt = c.ident()?;
+    let dtype = match dt {
+        "f32" => Dtype::F32,
+        "s32" => Dtype::S32,
+        "pred" => Dtype::Pred,
+        other => bail!("unsupported dtype '{other}'"),
+    };
+    let dims = parse_usize_list(c.balanced(b'[', b']')?)?;
+    c.skip_ws();
+    if c.peek() == b'{' {
+        // layout annotation: physical order only, logically irrelevant
+        c.balanced(b'{', b'}')?;
+    }
+    Ok(Ty::Arr { dtype, dims })
+}
+
+/// Parse a `constant(...)` payload: a scalar (`0.125`, `-inf`, `true`) or a
+/// nested-brace array literal; numbers are flattened in row-major order.
+fn parse_literal(ty: &Ty, text: &str) -> Result<Tensor> {
+    let Ty::Arr { dtype, dims } = ty else {
+        bail!("tuple-typed constants are not supported");
+    };
+    let want: usize = dims.iter().product();
+    let toks = text
+        .split(|ch: char| ch == '{' || ch == '}' || ch == ',' || ch.is_ascii_whitespace())
+        .filter(|t| !t.is_empty());
+    let data = match dtype {
+        Dtype::Pred => {
+            let mut v = Vec::with_capacity(want);
+            for t in toks {
+                match t {
+                    "true" => v.push(true),
+                    "false" => v.push(false),
+                    other => bail!("bad pred literal '{other}'"),
+                }
+            }
+            Data::Pred(v)
+        }
+        Dtype::S32 => {
+            let mut v = Vec::with_capacity(want);
+            for t in toks {
+                v.push(t.parse::<i32>().map_err(|_| err!("bad s32 literal '{t}'"))?);
+            }
+            Data::I32(v)
+        }
+        Dtype::F32 => {
+            let mut v = Vec::with_capacity(want);
+            for t in toks {
+                // f32::from_str accepts "inf", "-inf", "nan", exponents
+                v.push(t.parse::<f32>().map_err(|_| err!("bad f32 literal '{t}'"))?);
+            }
+            Data::F32(v)
+        }
+    };
+    ensure!(
+        data.len() == want,
+        "constant has {} elements, shape {dims:?} wants {want}",
+        data.len()
+    );
+    Ok(Tensor { dims: dims.clone(), data })
+}
+
+fn parse_instr(c: &mut Cursor, names: &HashMap<String, usize>) -> Result<(Instr, bool)> {
+    let mut name = c.ident()?;
+    let mut is_root = false;
+    if name == "ROOT" {
+        is_root = true;
+        name = c.ident()?;
+    }
+    c.expect("=")?;
+    let ty = parse_type(c)?;
+    let opcode = c.ident()?;
+    let inner = c.balanced(b'(', b')')?;
+
+    let mut operands = Vec::new();
+    let mut param = None;
+    let mut literal = None;
+    match opcode {
+        "constant" => {
+            literal = Some(parse_literal(&ty, inner).map_err(|e| e.context(name))?);
+        }
+        "parameter" => {
+            param = Some(
+                inner
+                    .trim()
+                    .parse::<usize>()
+                    .map_err(|_| err!("{name}: bad parameter number '{inner}'"))?,
+            );
+        }
+        _ => {
+            for tok in inner.split(',') {
+                let tok = tok.trim();
+                if tok.is_empty() {
+                    continue;
+                }
+                let idx = names
+                    .get(tok)
+                    .copied()
+                    .ok_or_else(|| err!("{name}: operand '{tok}' used before defined"))?;
+                operands.push(idx);
+            }
+        }
+    }
+
+    let mut attrs = Attrs::default();
+    loop {
+        c.skip_ws();
+        if c.peek() != b',' {
+            break;
+        }
+        c.bump();
+        let key = c.ident()?;
+        c.expect("=")?;
+        c.skip_ws();
+        if c.peek() == b'{' {
+            let inner = c.balanced(b'{', b'}')?;
+            match key {
+                "dimensions" => attrs.dimensions = parse_usize_list(inner)?,
+                "dynamic_slice_sizes" => attrs.dynamic_slice_sizes = parse_usize_list(inner)?,
+                "lhs_batch_dims" => attrs.lhs_batch_dims = parse_usize_list(inner)?,
+                "lhs_contracting_dims" => attrs.lhs_contracting_dims = parse_usize_list(inner)?,
+                "rhs_batch_dims" => attrs.rhs_batch_dims = parse_usize_list(inner)?,
+                "rhs_contracting_dims" => attrs.rhs_contracting_dims = parse_usize_list(inner)?,
+                "branch_computations" => {
+                    attrs.branch_computations = inner
+                        .split(',')
+                        .map(|s| s.trim().to_string())
+                        .filter(|s| !s.is_empty())
+                        .collect()
+                }
+                _ => {} // metadata, sharding, ... — irrelevant to semantics
+            }
+        } else {
+            let val = c.ident()?;
+            match key {
+                "index" => {
+                    attrs.index =
+                        val.parse().map_err(|_| err!("{name}: bad index '{val}'"))?
+                }
+                "direction" => attrs.direction = val.to_string(),
+                "to_apply" => attrs.to_apply = val.to_string(),
+                "condition" => attrs.condition = val.to_string(),
+                "body" => attrs.body = val.to_string(),
+                "true_computation" => attrs.true_computation = val.to_string(),
+                "false_computation" => attrs.false_computation = val.to_string(),
+                _ => {}
+            }
+        }
+    }
+
+    Ok((
+        Instr {
+            name: name.to_string(),
+            opcode: opcode.to_string(),
+            ty,
+            operands,
+            param,
+            literal,
+            attrs,
+        },
+        is_root,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TINY: &str = "HloModule jit_f, entry_computation_layout={(f32[2,3]{1,0})->(f32[2,3]{1,0})}\n\
+\n\
+region_0.2 {\n\
+  Arg_0.3 = f32[] parameter(0)\n\
+  Arg_1.4 = f32[] parameter(1)\n\
+  ROOT add.5 = f32[] add(Arg_0.3, Arg_1.4)\n\
+}\n\
+\n\
+ENTRY main.9 {\n\
+  Arg_0.1 = f32[2,3]{1,0} parameter(0)\n\
+  constant.6 = f32[] constant(0)\n\
+  reduce.7 = f32[2]{0} reduce(Arg_0.1, constant.6), dimensions={1}, to_apply=region_0.2\n\
+  ROOT tuple.8 = (f32[2]{0}) tuple(reduce.7)\n\
+}\n";
+
+    #[test]
+    fn parses_tiny_module() {
+        let m = HloModule::parse(TINY).unwrap();
+        assert_eq!(m.comps.len(), 2);
+        assert_eq!(m.entry_comp().name, "main.9");
+        assert_eq!(m.entry_comp().params.len(), 1);
+        let red = &m.entry_comp().instrs[2];
+        assert_eq!(red.opcode, "reduce");
+        assert_eq!(red.attrs.dimensions, vec![1]);
+        assert_eq!(red.attrs.to_apply, "region_0.2");
+        assert_eq!(red.operands, vec![0, 1]);
+        assert_eq!(m.comp_index("region_0.2").unwrap(), 0);
+        assert!(m.comp_index("nope").is_err());
+    }
+
+    #[test]
+    fn parses_types_and_literals() {
+        let mut c = Cursor::new("(s32[], f32[4,2]{1,0}, /*index=2*/pred[])");
+        let ty = parse_type(&mut c).unwrap();
+        match ty {
+            Ty::Tuple(elems) => {
+                assert_eq!(elems.len(), 3);
+                assert_eq!(elems[0], Ty::Arr { dtype: Dtype::S32, dims: vec![] });
+                assert_eq!(elems[1], Ty::Arr { dtype: Dtype::F32, dims: vec![4, 2] });
+            }
+            _ => panic!("expected tuple"),
+        }
+
+        let ty = Ty::Arr { dtype: Dtype::F32, dims: vec![2, 2] };
+        let t = parse_literal(&ty, "{ { 1, -2.5 }, { -inf, 3e-2 } }").unwrap();
+        match t.data {
+            Data::F32(v) => {
+                assert_eq!(v[0], 1.0);
+                assert_eq!(v[1], -2.5);
+                assert!(v[2].is_infinite() && v[2] < 0.0);
+                assert!((v[3] - 0.03).abs() < 1e-7);
+            }
+            _ => panic!("expected f32"),
+        }
+        let bad = parse_literal(&ty, "{ 1, 2, 3 }");
+        assert!(bad.is_err(), "element count must match shape");
+    }
+
+    #[test]
+    fn rejects_malformed_modules() {
+        assert!(HloModule::parse("not an hlo module").is_err());
+        assert!(HloModule::parse("HloModule x\nc {\n}\n").is_err(), "empty computation");
+        let fwd = "HloModule x\nENTRY e {\n  a = f32[] add(b, b)\n  b = f32[] parameter(0)\n}\n";
+        assert!(HloModule::parse(fwd).is_err(), "operand before definition");
+    }
+
+    #[test]
+    fn parses_every_committed_artifact() {
+        let Some(dir) = super::super::find_artifacts() else {
+            eprintln!("artifacts/ not built — skipping");
+            return;
+        };
+        let man = super::super::Manifest::load(&dir).unwrap();
+        for a in &man.artifacts {
+            let text = std::fs::read_to_string(dir.join(&a.file)).unwrap();
+            let m = HloModule::parse(&text).unwrap_or_else(|e| panic!("{}: {e}", a.file));
+            assert_eq!(m.entry_comp().params.len(), a.inputs.len(), "{}", a.file);
+        }
+    }
+}

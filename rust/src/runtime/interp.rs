@@ -1,0 +1,1020 @@
+//! Pure-Rust HLO interpreter backend — the default executor, so the full
+//! manifest→compile→execute→verify path runs offline with zero external
+//! dependencies (DESIGN.md §Substitutions: replaces the `xla` PJRT crate).
+//!
+//! Implements the opcode set the AOT artifacts use (elementwise arithmetic,
+//! `dot` in full generality, `reduce`, `broadcast`/`transpose`/`reshape`,
+//! dynamic (update-)slice, `select`/`compare`/`convert`, and the control
+//! flow Pallas `interpret=True` lowers to: `call`, `while`, `conditional`).
+//! Values are logical row-major tensors; layout annotations were discarded
+//! at parse time. Accumulations (dot, reduce-add) run in f64 for headroom
+//! against the f32 oracle tolerance.
+
+use super::backend::{Backend, Executable, TensorBuf};
+use super::hlo::{Attrs, Computation, Data, Dtype, HloModule, Instr, Tensor, Ty, Value};
+use crate::util::error::{Context, Result};
+use crate::{bail, ensure, err};
+use std::path::Path;
+
+/// Safety cap for `while` trip counts (a malformed artifact must fail,
+/// not hang CI).
+const MAX_WHILE_ITERS: usize = 1_000_000;
+
+/// The interpreter backend: compiles by parsing the HLO text.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct InterpBackend;
+
+impl Backend for InterpBackend {
+    fn name(&self) -> &'static str {
+        "interp"
+    }
+
+    fn compile(&self, artifact: &str, path: &Path) -> Result<Box<dyn Executable>> {
+        let text = std::fs::read_to_string(path)
+            .context(format!("read artifact '{artifact}' at {}", path.display()))?;
+        let module = HloModule::parse(&text)
+            .map_err(|e| e.context(format!("parse artifact '{artifact}'")))?;
+        Ok(Box::new(InterpExecutable { module }))
+    }
+}
+
+/// A parsed module ready to interpret.
+pub struct InterpExecutable {
+    module: HloModule,
+}
+
+impl Executable for InterpExecutable {
+    fn execute(&self, args: &[&TensorBuf]) -> Result<Vec<TensorBuf>> {
+        let entry = self.module.entry_comp();
+        ensure!(
+            args.len() == entry.params.len(),
+            "entry computation '{}' takes {} parameters, got {}",
+            entry.name,
+            entry.params.len(),
+            args.len()
+        );
+        let mut vals = Vec::with_capacity(args.len());
+        for (k, a) in args.iter().enumerate() {
+            let pins = &entry.instrs[entry.params[k]];
+            if let Ty::Arr { dims, .. } = &pins.ty {
+                ensure!(
+                    dims == &a.shape,
+                    "parameter {k} wants shape {dims:?}, got {:?}",
+                    a.shape
+                );
+            }
+            vals.push(Value::Arr(Tensor {
+                dims: a.shape.clone(),
+                data: Data::F32(a.data.clone()),
+            }));
+        }
+        let root = eval_comp(&self.module, self.module.entry, &vals)?;
+        let items = match root {
+            Value::Tuple(items) => items,
+            v => vec![v], // tolerate non-tuple roots
+        };
+        items.into_iter().map(value_to_buf).collect()
+    }
+}
+
+fn value_to_buf(v: Value) -> Result<TensorBuf> {
+    match v {
+        Value::Arr(Tensor { dims, data: Data::F32(data) }) => {
+            Ok(TensorBuf { shape: dims, data })
+        }
+        Value::Arr(_) => Err(err!("artifact output is not f32")),
+        Value::Tuple(_) => Err(err!("artifact output is a nested tuple")),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Evaluator
+// ---------------------------------------------------------------------------
+
+fn eval_comp(m: &HloModule, ci: usize, args: &[Value]) -> Result<Value> {
+    let c = &m.comps[ci];
+    ensure!(
+        args.len() == c.params.len(),
+        "computation '{}' wants {} args, got {}",
+        c.name,
+        c.params.len(),
+        args.len()
+    );
+    let mut env: Vec<Option<Value>> = vec![None; c.instrs.len()];
+    for i in 0..c.instrs.len() {
+        let v = eval_instr(m, c, i, args, &env)
+            .map_err(|e| e.context(format!("{}.{}", c.name, c.instrs[i].name)))?;
+        env[i] = Some(v);
+    }
+    env[c.root]
+        .take()
+        .ok_or_else(|| err!("computation '{}' produced no root value", c.name))
+}
+
+fn eval_instr(
+    m: &HloModule,
+    c: &Computation,
+    i: usize,
+    args: &[Value],
+    env: &[Option<Value>],
+) -> Result<Value> {
+    let ins = &c.instrs[i];
+    let get = |k: usize| operand(ins, env, k);
+    let arr = |k: usize| operand_arr(ins, env, k);
+
+    match ins.opcode.as_str() {
+        "parameter" => {
+            let p = ins.param.ok_or_else(|| err!("parameter without a number"))?;
+            args.get(p).cloned().ok_or_else(|| err!("parameter {p} out of range"))
+        }
+        "constant" => Ok(Value::Arr(
+            ins.literal.clone().ok_or_else(|| err!("constant without payload"))?,
+        )),
+        "tuple" => {
+            let mut items = Vec::with_capacity(ins.operands.len());
+            for k in 0..ins.operands.len() {
+                items.push(get(k)?.clone());
+            }
+            Ok(Value::Tuple(items))
+        }
+        "get-tuple-element" => match get(0)? {
+            Value::Tuple(items) => items
+                .get(ins.attrs.index)
+                .cloned()
+                .ok_or_else(|| err!("tuple index {} out of range", ins.attrs.index)),
+            Value::Arr(_) => Err(err!("get-tuple-element on an array")),
+        },
+        "add" | "subtract" | "multiply" | "divide" | "maximum" | "minimum" => {
+            Ok(Value::Arr(binary(ins.opcode.as_str(), arr(0)?, arr(1)?)?))
+        }
+        "compare" => Ok(Value::Arr(compare(&ins.attrs.direction, arr(0)?, arr(1)?)?)),
+        "select" => Ok(Value::Arr(select(arr(0)?, arr(1)?, arr(2)?)?)),
+        "exponential" | "sqrt" | "rsqrt" | "tanh" | "negate" | "log" | "abs" => {
+            Ok(Value::Arr(unary(ins.opcode.as_str(), arr(0)?)?))
+        }
+        "convert" => {
+            let Ty::Arr { dtype, .. } = &ins.ty else {
+                bail!("convert to tuple type");
+            };
+            Ok(Value::Arr(convert(arr(0)?, *dtype)))
+        }
+        "reshape" => {
+            let Ty::Arr { dims, .. } = &ins.ty else {
+                bail!("reshape to tuple type");
+            };
+            let t = arr(0)?;
+            ensure!(
+                dims.iter().product::<usize>() == t.elements(),
+                "reshape {:?} -> {dims:?} changes element count",
+                t.dims
+            );
+            Ok(Value::Arr(Tensor { dims: dims.clone(), data: t.data.clone() }))
+        }
+        "broadcast" => {
+            let Ty::Arr { dims, .. } = &ins.ty else {
+                bail!("broadcast to tuple type");
+            };
+            Ok(Value::Arr(broadcast(arr(0)?, &ins.attrs.dimensions, dims)?))
+        }
+        "transpose" => Ok(Value::Arr(transpose(arr(0)?, &ins.attrs.dimensions)?)),
+        "dot" => Ok(Value::Arr(dot(arr(0)?, arr(1)?, &ins.attrs)?)),
+        "reduce" => {
+            ensure!(ins.operands.len() == 2, "variadic reduce unsupported");
+            let rci = m.comp_index(&ins.attrs.to_apply)?;
+            Ok(Value::Arr(reduce(m, rci, arr(0)?, arr(1)?, &ins.attrs.dimensions)?))
+        }
+        "dynamic-slice" => {
+            let t = arr(0)?;
+            let mut starts = Vec::with_capacity(ins.operands.len() - 1);
+            for k in 1..ins.operands.len() {
+                starts.push(scalar_i32(arr(k)?)?);
+            }
+            Ok(Value::Arr(dyn_slice(t, &starts, &ins.attrs.dynamic_slice_sizes)?))
+        }
+        "dynamic-update-slice" => {
+            let t = arr(0)?;
+            let u = arr(1)?;
+            let mut starts = Vec::with_capacity(ins.operands.len() - 2);
+            for k in 2..ins.operands.len() {
+                starts.push(scalar_i32(arr(k)?)?);
+            }
+            Ok(Value::Arr(dyn_update_slice(t, u, &starts)?))
+        }
+        "call" => {
+            let tgt = m.comp_index(&ins.attrs.to_apply)?;
+            let mut a = Vec::with_capacity(ins.operands.len());
+            for k in 0..ins.operands.len() {
+                a.push(get(k)?.clone());
+            }
+            eval_comp(m, tgt, &a)
+        }
+        "while" => {
+            let cond = m.comp_index(&ins.attrs.condition)?;
+            let body = m.comp_index(&ins.attrs.body)?;
+            let mut state = get(0)?.clone();
+            let mut iters = 0usize;
+            loop {
+                let keep = eval_comp(m, cond, std::slice::from_ref(&state))?;
+                if !scalar_pred(&keep)? {
+                    break;
+                }
+                state = eval_comp(m, body, std::slice::from_ref(&state))?;
+                iters += 1;
+                ensure!(iters < MAX_WHILE_ITERS, "while exceeded {MAX_WHILE_ITERS} iterations");
+            }
+            Ok(state)
+        }
+        "conditional" => {
+            let sel = arr(0)?;
+            let (comp_name, operand_k) = match &sel.data {
+                Data::Pred(v) if v.len() == 1 => {
+                    ensure!(
+                        !ins.attrs.true_computation.is_empty(),
+                        "pred conditional without true_computation"
+                    );
+                    if v[0] {
+                        (ins.attrs.true_computation.clone(), 1)
+                    } else {
+                        (ins.attrs.false_computation.clone(), 2)
+                    }
+                }
+                Data::I32(v) if v.len() == 1 => {
+                    let n = ins.attrs.branch_computations.len();
+                    ensure!(n > 0, "indexed conditional without branch_computations");
+                    // XLA: any out-of-range index (including negative) runs
+                    // the LAST branch
+                    let idx = if v[0] < 0 || v[0] as usize >= n { n - 1 } else { v[0] as usize };
+                    (ins.attrs.branch_computations[idx].clone(), idx + 1)
+                }
+                _ => bail!("conditional selector must be a scalar pred or s32"),
+            };
+            let tgt = m.comp_index(&comp_name)?;
+            let branch_arg = get(operand_k)?.clone();
+            eval_comp(m, tgt, std::slice::from_ref(&branch_arg))
+        }
+        other => Err(err!("unhandled opcode '{other}'")),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Operand / scalar helpers
+// ---------------------------------------------------------------------------
+
+fn operand<'a>(ins: &Instr, env: &'a [Option<Value>], k: usize) -> Result<&'a Value> {
+    let idx = *ins.operands.get(k).ok_or_else(|| err!("missing operand {k}"))?;
+    env.get(idx)
+        .and_then(|v| v.as_ref())
+        .ok_or_else(|| err!("operand {k} not yet evaluated"))
+}
+
+fn operand_arr<'a>(ins: &Instr, env: &'a [Option<Value>], k: usize) -> Result<&'a Tensor> {
+    match operand(ins, env, k)? {
+        Value::Arr(t) => Ok(t),
+        Value::Tuple(_) => Err(err!("operand {k} is a tuple, expected array")),
+    }
+}
+
+fn scalar_i32(t: &Tensor) -> Result<i32> {
+    match &t.data {
+        Data::I32(v) if v.len() == 1 => Ok(v[0]),
+        _ => Err(err!("expected a scalar s32, got {:?} elements", t.data.len())),
+    }
+}
+
+fn scalar_pred(v: &Value) -> Result<bool> {
+    match v {
+        Value::Arr(Tensor { data: Data::Pred(p), .. }) if p.len() == 1 => Ok(p[0]),
+        _ => Err(err!("expected a scalar pred")),
+    }
+}
+
+fn scalar_f32(t: &Tensor) -> Result<f32> {
+    match &t.data {
+        Data::F32(v) if v.len() == 1 => Ok(v[0]),
+        _ => Err(err!("expected a scalar f32")),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shape/index machinery (logical row-major)
+// ---------------------------------------------------------------------------
+
+fn strides_of(dims: &[usize]) -> Vec<usize> {
+    let mut st = vec![0usize; dims.len()];
+    let mut acc = 1usize;
+    for i in (0..dims.len()).rev() {
+        st[i] = acc;
+        acc *= dims[i];
+    }
+    st
+}
+
+fn product(dims: &[usize]) -> usize {
+    dims.iter().product()
+}
+
+/// Unravel `flat` into `coords` over `dims` (row-major).
+fn unravel(mut flat: usize, dims: &[usize], coords: &mut [usize]) {
+    for i in (0..dims.len()).rev() {
+        coords[i] = flat % dims[i];
+        flat /= dims[i];
+    }
+}
+
+/// Gather a new payload: `map[oi]` is the source flat index of output `oi`.
+fn apply_map(data: &Data, map: &[usize]) -> Data {
+    match data {
+        Data::F32(v) => Data::F32(map.iter().map(|&i| v[i]).collect()),
+        Data::I32(v) => Data::I32(map.iter().map(|&i| v[i]).collect()),
+        Data::Pred(v) => Data::Pred(map.iter().map(|&i| v[i]).collect()),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Ops
+// ---------------------------------------------------------------------------
+
+fn binary(op: &str, a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    ensure!(
+        a.dims == b.dims,
+        "{op}: shape mismatch {:?} vs {:?}",
+        a.dims,
+        b.dims
+    );
+    let data = match (&a.data, &b.data) {
+        (Data::F32(x), Data::F32(y)) => Data::F32(
+            x.iter()
+                .zip(y)
+                .map(|(p, q)| match op {
+                    "add" => p + q,
+                    "subtract" => p - q,
+                    "multiply" => p * q,
+                    "divide" => p / q,
+                    "maximum" => p.max(*q),
+                    _ => p.min(*q),
+                })
+                .collect(),
+        ),
+        (Data::I32(x), Data::I32(y)) => Data::I32(
+            x.iter()
+                .zip(y)
+                .map(|(p, q)| match op {
+                    "add" => p.wrapping_add(*q),
+                    "subtract" => p.wrapping_sub(*q),
+                    "multiply" => p.wrapping_mul(*q),
+                    "divide" => {
+                        if *q == 0 {
+                            0
+                        } else {
+                            p.wrapping_div(*q)
+                        }
+                    }
+                    "maximum" => (*p).max(*q),
+                    _ => (*p).min(*q),
+                })
+                .collect(),
+        ),
+        _ => bail!("{op}: operands must both be f32 or both s32"),
+    };
+    Ok(Tensor { dims: a.dims.clone(), data })
+}
+
+fn unary(op: &str, a: &Tensor) -> Result<Tensor> {
+    match &a.data {
+        Data::F32(x) => {
+            let f: fn(f32) -> f32 = match op {
+                "exponential" => |v| v.exp(),
+                "sqrt" => |v| v.sqrt(),
+                "rsqrt" => |v| 1.0 / v.sqrt(),
+                "tanh" => |v| v.tanh(),
+                "negate" => |v| -v,
+                "log" => |v| v.ln(),
+                _ => |v| v.abs(),
+            };
+            Ok(Tensor { dims: a.dims.clone(), data: Data::F32(x.iter().map(|&v| f(v)).collect()) })
+        }
+        Data::I32(x) if op == "negate" => Ok(Tensor {
+            dims: a.dims.clone(),
+            data: Data::I32(x.iter().map(|&v| v.wrapping_neg()).collect()),
+        }),
+        Data::I32(x) if op == "abs" => Ok(Tensor {
+            dims: a.dims.clone(),
+            data: Data::I32(x.iter().map(|&v| v.wrapping_abs()).collect()),
+        }),
+        _ => Err(err!("{op}: unsupported operand dtype")),
+    }
+}
+
+#[derive(Clone, Copy)]
+enum Cmp {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+fn compare(direction: &str, a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    ensure!(a.dims == b.dims, "compare: shape mismatch");
+    let c = match direction {
+        "EQ" => Cmp::Eq,
+        "NE" => Cmp::Ne,
+        "LT" => Cmp::Lt,
+        "LE" => Cmp::Le,
+        "GT" => Cmp::Gt,
+        "GE" => Cmp::Ge,
+        other => bail!("compare: unknown direction '{other}'"),
+    };
+    fn apply<T: PartialOrd + PartialEq + Copy>(c: Cmp, p: T, q: T) -> bool {
+        match c {
+            Cmp::Eq => p == q,
+            Cmp::Ne => p != q,
+            Cmp::Lt => p < q,
+            Cmp::Le => p <= q,
+            Cmp::Gt => p > q,
+            Cmp::Ge => p >= q,
+        }
+    }
+    let out = match (&a.data, &b.data) {
+        (Data::F32(x), Data::F32(y)) => {
+            x.iter().zip(y).map(|(p, q)| apply(c, *p, *q)).collect()
+        }
+        (Data::I32(x), Data::I32(y)) => {
+            x.iter().zip(y).map(|(p, q)| apply(c, *p, *q)).collect()
+        }
+        _ => bail!("compare: operands must both be f32 or both s32"),
+    };
+    Ok(Tensor { dims: a.dims.clone(), data: Data::Pred(out) })
+}
+
+fn select(p: &Tensor, on_true: &Tensor, on_false: &Tensor) -> Result<Tensor> {
+    ensure!(on_true.dims == on_false.dims, "select: branch shape mismatch");
+    let Data::Pred(pv) = &p.data else {
+        bail!("select: predicate is not pred-typed");
+    };
+    let n = on_true.elements();
+    ensure!(
+        pv.len() == n || pv.len() == 1,
+        "select: predicate has {} elements, operands {n}",
+        pv.len()
+    );
+    let pick = |i: usize| -> bool {
+        if pv.len() == 1 {
+            pv[0]
+        } else {
+            pv[i]
+        }
+    };
+    let data = match (&on_true.data, &on_false.data) {
+        (Data::F32(t), Data::F32(f)) => {
+            Data::F32((0..n).map(|i| if pick(i) { t[i] } else { f[i] }).collect())
+        }
+        (Data::I32(t), Data::I32(f)) => {
+            Data::I32((0..n).map(|i| if pick(i) { t[i] } else { f[i] }).collect())
+        }
+        (Data::Pred(t), Data::Pred(f)) => {
+            Data::Pred((0..n).map(|i| if pick(i) { t[i] } else { f[i] }).collect())
+        }
+        _ => bail!("select: branch dtype mismatch"),
+    };
+    Ok(Tensor { dims: on_true.dims.clone(), data })
+}
+
+fn convert(a: &Tensor, to: Dtype) -> Tensor {
+    let data = match (&a.data, to) {
+        (Data::F32(v), Dtype::F32) => Data::F32(v.clone()),
+        (Data::F32(v), Dtype::S32) => Data::I32(v.iter().map(|&x| x as i32).collect()),
+        (Data::F32(v), Dtype::Pred) => Data::Pred(v.iter().map(|&x| x != 0.0).collect()),
+        (Data::I32(v), Dtype::F32) => Data::F32(v.iter().map(|&x| x as f32).collect()),
+        (Data::I32(v), Dtype::S32) => Data::I32(v.clone()),
+        (Data::I32(v), Dtype::Pred) => Data::Pred(v.iter().map(|&x| x != 0).collect()),
+        (Data::Pred(v), Dtype::F32) => {
+            Data::F32(v.iter().map(|&x| if x { 1.0 } else { 0.0 }).collect())
+        }
+        (Data::Pred(v), Dtype::S32) => {
+            Data::I32(v.iter().map(|&x| i32::from(x)).collect())
+        }
+        (Data::Pred(v), Dtype::Pred) => Data::Pred(v.clone()),
+    };
+    Tensor { dims: a.dims.clone(), data }
+}
+
+/// HLO broadcast: operand dim `i` maps to output dim `bdims[i]`; all other
+/// output dims replicate.
+fn broadcast(t: &Tensor, bdims: &[usize], out_dims: &[usize]) -> Result<Tensor> {
+    ensure!(
+        t.dims.len() == bdims.len(),
+        "broadcast: operand rank {} vs {} mapped dims",
+        t.dims.len(),
+        bdims.len()
+    );
+    let ost = strides_of(&t.dims);
+    for (i, &d) in bdims.iter().enumerate() {
+        ensure!(
+            d < out_dims.len() && t.dims[i] == out_dims[d],
+            "broadcast: operand dim {i} ({}) does not fit output dim {d} of {out_dims:?}",
+            t.dims[i]
+        );
+        if i > 0 {
+            ensure!(bdims[i - 1] < d, "broadcast: dimensions must be increasing");
+        }
+    }
+    let n = product(out_dims);
+    let mut map = vec![0usize; n];
+    let mut coords = vec![0usize; out_dims.len()];
+    for (oi, slot) in map.iter_mut().enumerate() {
+        unravel(oi, out_dims, &mut coords);
+        let mut off = 0usize;
+        for (i, &d) in bdims.iter().enumerate() {
+            off += coords[d] * ost[i];
+        }
+        *slot = off;
+    }
+    Ok(Tensor { dims: out_dims.to_vec(), data: apply_map(&t.data, &map) })
+}
+
+/// HLO transpose: output dim `i` is operand dim `perm[i]`.
+fn transpose(t: &Tensor, perm: &[usize]) -> Result<Tensor> {
+    ensure!(perm.len() == t.dims.len(), "transpose: rank mismatch");
+    let mut seen = vec![false; perm.len()];
+    for &p in perm {
+        ensure!(p < perm.len() && !seen[p], "transpose: bad permutation {perm:?}");
+        seen[p] = true;
+    }
+    let out_dims: Vec<usize> = perm.iter().map(|&p| t.dims[p]).collect();
+    let ist = strides_of(&t.dims);
+    let n = product(&out_dims);
+    let mut map = vec![0usize; n];
+    let mut coords = vec![0usize; out_dims.len()];
+    for (oi, slot) in map.iter_mut().enumerate() {
+        unravel(oi, &out_dims, &mut coords);
+        let mut off = 0usize;
+        for (i, &p) in perm.iter().enumerate() {
+            off += coords[i] * ist[p];
+        }
+        *slot = off;
+    }
+    Ok(Tensor { dims: out_dims, data: apply_map(&t.data, &map) })
+}
+
+/// General `dot`: result dims are (batch, lhs free, rhs free) in dimension-
+/// number order; f64 accumulation.
+fn dot(lhs: &Tensor, rhs: &Tensor, at: &Attrs) -> Result<Tensor> {
+    let (Data::F32(lf), Data::F32(rf)) = (&lhs.data, &rhs.data) else {
+        bail!("dot: operands must be f32");
+    };
+    let ld = &lhs.dims;
+    let rd = &rhs.dims;
+    let lb = &at.lhs_batch_dims;
+    let lc = &at.lhs_contracting_dims;
+    let rb = &at.rhs_batch_dims;
+    let rc = &at.rhs_contracting_dims;
+    ensure!(lb.len() == rb.len(), "dot: batch dim arity mismatch");
+    ensure!(lc.len() == rc.len(), "dot: contracting dim arity mismatch");
+    for (i, &d) in lb.iter().enumerate() {
+        ensure!(ld[d] == rd[rb[i]], "dot: batch dim size mismatch");
+    }
+    for (i, &d) in lc.iter().enumerate() {
+        ensure!(ld[d] == rd[rc[i]], "dot: contracting dim size mismatch");
+    }
+    let lfree: Vec<usize> =
+        (0..ld.len()).filter(|d| !lb.contains(d) && !lc.contains(d)).collect();
+    let rfree: Vec<usize> =
+        (0..rd.len()).filter(|d| !rb.contains(d) && !rc.contains(d)).collect();
+    let mut out_dims: Vec<usize> = lb.iter().map(|&d| ld[d]).collect();
+    out_dims.extend(lfree.iter().map(|&d| ld[d]));
+    out_dims.extend(rfree.iter().map(|&d| rd[d]));
+    let contract: Vec<usize> = lc.iter().map(|&d| ld[d]).collect();
+
+    let ls = strides_of(ld);
+    let rs = strides_of(rd);
+    let n_out = product(&out_dims);
+    let n_con = product(&contract);
+    let mut out = vec![0f32; n_out];
+    let mut coords = vec![0usize; out_dims.len()];
+    for (oi, slot) in out.iter_mut().enumerate() {
+        unravel(oi, &out_dims, &mut coords);
+        let mut lbase = 0usize;
+        let mut rbase = 0usize;
+        let mut k = 0usize;
+        for (bi, &d) in lb.iter().enumerate() {
+            lbase += coords[k] * ls[d];
+            rbase += coords[k] * rs[rb[bi]];
+            k += 1;
+        }
+        for &d in &lfree {
+            lbase += coords[k] * ls[d];
+            k += 1;
+        }
+        for &d in &rfree {
+            rbase += coords[k] * rs[d];
+            k += 1;
+        }
+        let mut acc = 0f64;
+        if contract.len() == 1 {
+            // the common single-contraction fast path
+            let sl = ls[lc[0]];
+            let sr = rs[rc[0]];
+            for ci in 0..n_con {
+                acc += lf[lbase + ci * sl] as f64 * rf[rbase + ci * sr] as f64;
+            }
+        } else {
+            let mut ccoords = vec![0usize; contract.len()];
+            for ci in 0..n_con {
+                unravel(ci, &contract, &mut ccoords);
+                let mut loff = 0usize;
+                let mut roff = 0usize;
+                for (j, &cc) in ccoords.iter().enumerate() {
+                    loff += cc * ls[lc[j]];
+                    roff += cc * rs[rc[j]];
+                }
+                acc += lf[lbase + loff] as f64 * rf[rbase + roff] as f64;
+            }
+        }
+        *slot = acc as f32;
+    }
+    Ok(Tensor { dims: out_dims, data: Data::F32(out) })
+}
+
+fn reduce(
+    m: &HloModule,
+    rci: usize,
+    t: &Tensor,
+    init: &Tensor,
+    rdims: &[usize],
+) -> Result<Tensor> {
+    let Data::F32(src) = &t.data else {
+        bail!("reduce: only f32 operands supported");
+    };
+    let init_v = scalar_f32(init)?;
+    for &d in rdims {
+        ensure!(d < t.dims.len(), "reduce: dim {d} out of range");
+    }
+    let kept: Vec<usize> = (0..t.dims.len()).filter(|d| !rdims.contains(d)).collect();
+    let out_dims: Vec<usize> = kept.iter().map(|&d| t.dims[d]).collect();
+    let red_dims: Vec<usize> = rdims.iter().map(|&d| t.dims[d]).collect();
+    let ist = strides_of(&t.dims);
+    let n_out = product(&out_dims);
+    let n_red = product(&red_dims);
+
+    let rcomp = &m.comps[rci];
+    let rroot = &rcomp.instrs[rcomp.root];
+    let root_op = rroot.opcode.as_str();
+    // The fast path is only valid for a *trivial* reducer — its root combines
+    // exactly the two region parameters. Anything fancier (scaled sums etc.)
+    // must go through the generic eval_comp fold.
+    let trivial = rcomp.params.len() == 2 && {
+        let mut ops = rroot.operands.clone();
+        let mut ps = rcomp.params.clone();
+        ops.sort_unstable();
+        ps.sort_unstable();
+        ops == ps
+    };
+    let fast: Option<fn(f32, f32) -> f32> = if !trivial {
+        None
+    } else {
+        match root_op {
+            "add" => Some(|a, b| a + b),
+            "maximum" => Some(|a, b| a.max(b)),
+            "minimum" => Some(|a, b| a.min(b)),
+            "multiply" => Some(|a, b| a * b),
+            _ => None,
+        }
+    };
+
+    let mut out = vec![init_v; n_out];
+    let mut ocoords = vec![0usize; out_dims.len()];
+    let mut rcoords = vec![0usize; red_dims.len()];
+    for (oi, slot) in out.iter_mut().enumerate() {
+        unravel(oi, &out_dims, &mut ocoords);
+        let mut base = 0usize;
+        for (j, &d) in kept.iter().enumerate() {
+            base += ocoords[j] * ist[d];
+        }
+        if let Some(f) = fast {
+            // f64 accumulation for the add-reduction hot path
+            if root_op == "add" {
+                let mut acc = init_v as f64;
+                for ri in 0..n_red {
+                    unravel(ri, &red_dims, &mut rcoords);
+                    let mut off = 0usize;
+                    for (j, &cc) in rcoords.iter().enumerate() {
+                        off += cc * ist[rdims[j]];
+                    }
+                    acc += src[base + off] as f64;
+                }
+                *slot = acc as f32;
+            } else {
+                let mut acc = init_v;
+                for ri in 0..n_red {
+                    unravel(ri, &red_dims, &mut rcoords);
+                    let mut off = 0usize;
+                    for (j, &cc) in rcoords.iter().enumerate() {
+                        off += cc * ist[rdims[j]];
+                    }
+                    acc = f(acc, src[base + off]);
+                }
+                *slot = acc;
+            }
+        } else {
+            // generic reducer: fold scalars through the sub-computation
+            let mut acc = init_v;
+            for ri in 0..n_red {
+                unravel(ri, &red_dims, &mut rcoords);
+                let mut off = 0usize;
+                for (j, &cc) in rcoords.iter().enumerate() {
+                    off += cc * ist[rdims[j]];
+                }
+                let r = eval_comp(
+                    m,
+                    rci,
+                    &[
+                        Value::Arr(Tensor::scalar_f32(acc)),
+                        Value::Arr(Tensor::scalar_f32(src[base + off])),
+                    ],
+                )?;
+                acc = match r {
+                    Value::Arr(ref rt) => scalar_f32(rt)?,
+                    _ => bail!("reducer returned a tuple"),
+                };
+            }
+            *slot = acc;
+        }
+    }
+    Ok(Tensor { dims: out_dims, data: Data::F32(out) })
+}
+
+/// Start indices are clamped into `[0, dim - size]` (XLA semantics).
+fn clamp_starts(starts: &[i32], dims: &[usize], sizes: &[usize]) -> Vec<usize> {
+    starts
+        .iter()
+        .enumerate()
+        .map(|(d, &s)| (s.max(0) as usize).min(dims[d] - sizes[d]))
+        .collect()
+}
+
+fn dyn_slice(t: &Tensor, starts: &[i32], sizes: &[usize]) -> Result<Tensor> {
+    ensure!(
+        starts.len() == t.dims.len() && sizes.len() == t.dims.len(),
+        "dynamic-slice: rank mismatch"
+    );
+    for (d, &sz) in sizes.iter().enumerate() {
+        ensure!(sz <= t.dims[d], "dynamic-slice: size {sz} exceeds dim {d}");
+    }
+    let base = clamp_starts(starts, &t.dims, sizes);
+    let ist = strides_of(&t.dims);
+    let n = product(sizes);
+    let mut map = vec![0usize; n];
+    let mut coords = vec![0usize; sizes.len()];
+    for (oi, slot) in map.iter_mut().enumerate() {
+        unravel(oi, sizes, &mut coords);
+        let mut off = 0usize;
+        for (d, &c) in coords.iter().enumerate() {
+            off += (base[d] + c) * ist[d];
+        }
+        *slot = off;
+    }
+    Ok(Tensor { dims: sizes.to_vec(), data: apply_map(&t.data, &map) })
+}
+
+fn dyn_update_slice(t: &Tensor, u: &Tensor, starts: &[i32]) -> Result<Tensor> {
+    ensure!(
+        starts.len() == t.dims.len() && u.dims.len() == t.dims.len(),
+        "dynamic-update-slice: rank mismatch"
+    );
+    for (d, &sz) in u.dims.iter().enumerate() {
+        ensure!(sz <= t.dims[d], "dynamic-update-slice: update exceeds dim {d}");
+    }
+    let base = clamp_starts(starts, &t.dims, &u.dims);
+    let ist = strides_of(&t.dims);
+    let n = product(&u.dims);
+    let mut out = t.data.clone();
+    let mut coords = vec![0usize; u.dims.len()];
+    for ui in 0..n {
+        unravel(ui, &u.dims, &mut coords);
+        let mut off = 0usize;
+        for (d, &c) in coords.iter().enumerate() {
+            off += (base[d] + c) * ist[d];
+        }
+        match (&mut out, &u.data) {
+            (Data::F32(o), Data::F32(s)) => o[off] = s[ui],
+            (Data::I32(o), Data::I32(s)) => o[off] = s[ui],
+            (Data::Pred(o), Data::Pred(s)) => o[off] = s[ui],
+            _ => bail!("dynamic-update-slice: dtype mismatch"),
+        }
+    }
+    Ok(Tensor { dims: t.dims.clone(), data: out })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(hlo: &str, args: &[TensorBuf]) -> Vec<TensorBuf> {
+        let module = HloModule::parse(hlo).expect("parse");
+        let exe = InterpExecutable { module };
+        let refs: Vec<&TensorBuf> = args.iter().collect();
+        exe.execute(&refs).expect("execute")
+    }
+
+    fn buf(shape: &[usize], data: &[f32]) -> TensorBuf {
+        TensorBuf::new(shape.to_vec(), data.to_vec())
+    }
+
+    #[test]
+    fn matmul_and_bias() {
+        // y = x @ w + b with w=[[1,2],[3,4]] (baked constant), b=[10, 20]
+        let hlo = "HloModule jit_f, entry_computation_layout={(f32[2,2]{1,0})->(f32[2,2]{1,0})}\n\
+ENTRY main.9 {\n\
+  Arg_0.1 = f32[2,2]{1,0} parameter(0)\n\
+  constant.2 = f32[2,2]{1,0} constant({ { 1, 2 }, { 3, 4 } })\n\
+  dot.3 = f32[2,2]{1,0} dot(Arg_0.1, constant.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}\n\
+  constant.4 = f32[2]{0} constant({10, 20})\n\
+  broadcast.5 = f32[2,2]{1,0} broadcast(constant.4), dimensions={1}\n\
+  add.6 = f32[2,2]{1,0} add(dot.3, broadcast.5)\n\
+  ROOT tuple.7 = (f32[2,2]{1,0}) tuple(add.6)\n\
+}\n";
+        let out = run(hlo, &[buf(&[2, 2], &[1.0, 0.0, 0.0, 1.0])]);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape, vec![2, 2]);
+        assert_eq!(out[0].data, vec![11.0, 22.0, 13.0, 24.0]);
+    }
+
+    #[test]
+    fn batched_dot_matches_attention_scores() {
+        // scores[h,q,k] = sum_d q[h,q,d] * k[h,k,d]  (the MHA1 form)
+        let hlo = "HloModule jit_f, entry_computation_layout={(f32[2,2,2]{2,1,0}, f32[2,2,2]{2,1,0})->(f32[2,2,2]{2,1,0})}\n\
+ENTRY main.5 {\n\
+  Arg_0.1 = f32[2,2,2]{2,1,0} parameter(0)\n\
+  Arg_1.2 = f32[2,2,2]{2,1,0} parameter(1)\n\
+  dot.3 = f32[2,2,2]{2,1,0} dot(Arg_0.1, Arg_1.2), lhs_batch_dims={0}, lhs_contracting_dims={2}, rhs_batch_dims={0}, rhs_contracting_dims={2}\n\
+  ROOT tuple.4 = (f32[2,2,2]{2,1,0}) tuple(dot.3)\n\
+}\n";
+        let q = buf(&[2, 2, 2], &[1., 2., 3., 4., 5., 6., 7., 8.]);
+        let k = buf(&[2, 2, 2], &[1., 0., 0., 1., 1., 1., 2., 0.]);
+        let out = run(hlo, &[q, k]);
+        // head 0: [[1,2],[3,4]] @ [[1,0],[0,1]]^T = [[1,2],[3,4]]
+        // head 1: [[5,6],[7,8]] @ [[1,1],[2,0]]^T = [[11,10],[15,14]]
+        assert_eq!(out[0].data, vec![1., 2., 3., 4., 11., 10., 15., 14.]);
+    }
+
+    #[test]
+    fn softmax_reduce_exp_divide() {
+        let hlo = "HloModule jit_f, entry_computation_layout={(f32[1,3]{1,0})->(f32[1,3]{1,0})}\n\
+region_0.2 {\n\
+  Arg_0.3 = f32[] parameter(0)\n\
+  Arg_1.4 = f32[] parameter(1)\n\
+  ROOT maximum.5 = f32[] maximum(Arg_0.3, Arg_1.4)\n\
+}\n\
+region_1.6 {\n\
+  Arg_0.7 = f32[] parameter(0)\n\
+  Arg_1.8 = f32[] parameter(1)\n\
+  ROOT add.9 = f32[] add(Arg_0.7, Arg_1.8)\n\
+}\n\
+ENTRY main.20 {\n\
+  Arg_0.1 = f32[1,3]{1,0} parameter(0)\n\
+  constant.10 = f32[] constant(-inf)\n\
+  reduce.11 = f32[1]{0} reduce(Arg_0.1, constant.10), dimensions={1}, to_apply=region_0.2\n\
+  broadcast.12 = f32[1,3]{1,0} broadcast(reduce.11), dimensions={0}\n\
+  subtract.13 = f32[1,3]{1,0} subtract(Arg_0.1, broadcast.12)\n\
+  exponential.14 = f32[1,3]{1,0} exponential(subtract.13)\n\
+  constant.15 = f32[] constant(0)\n\
+  reduce.16 = f32[1]{0} reduce(exponential.14, constant.15), dimensions={1}, to_apply=region_1.6\n\
+  broadcast.17 = f32[1,3]{1,0} broadcast(reduce.16), dimensions={0}\n\
+  divide.18 = f32[1,3]{1,0} divide(exponential.14, broadcast.17)\n\
+  ROOT tuple.19 = (f32[1,3]{1,0}) tuple(divide.18)\n\
+}\n";
+        let out = run(hlo, &[buf(&[1, 3], &[0.0, f32::ln(2.0), f32::ln(3.0)])]);
+        let got = &out[0].data;
+        let want = [1.0 / 6.0, 2.0 / 6.0, 3.0 / 6.0];
+        for (g, w) in got.iter().zip(want) {
+            assert!((g - w).abs() < 1e-6, "{got:?}");
+        }
+    }
+
+    #[test]
+    fn while_loop_accumulates() {
+        // state (i, acc): while i < 4 { acc += 2*i; i += 1 } from (0, 0)
+        let hlo = "HloModule jit_f, entry_computation_layout={(f32[]{})->(f32[]{})}\n\
+body.1 {\n\
+  arg_tuple.2 = (s32[], f32[]) parameter(0)\n\
+  get-tuple-element.3 = s32[] get-tuple-element(arg_tuple.2), index=0\n\
+  get-tuple-element.4 = f32[] get-tuple-element(arg_tuple.2), index=1\n\
+  constant.5 = s32[] constant(1)\n\
+  add.6 = s32[] add(get-tuple-element.3, constant.5)\n\
+  convert.7 = f32[] convert(get-tuple-element.3)\n\
+  constant.8 = f32[] constant(2)\n\
+  multiply.9 = f32[] multiply(convert.7, constant.8)\n\
+  add.10 = f32[] add(get-tuple-element.4, multiply.9)\n\
+  ROOT tuple.11 = (s32[], f32[]) tuple(add.6, add.10)\n\
+}\n\
+cond.12 {\n\
+  arg_tuple.13 = (s32[], f32[]) parameter(0)\n\
+  get-tuple-element.14 = s32[] get-tuple-element(arg_tuple.13), index=0\n\
+  constant.15 = s32[] constant(4)\n\
+  ROOT compare.16 = pred[] compare(get-tuple-element.14, constant.15), direction=LT\n\
+}\n\
+ENTRY main.30 {\n\
+  Arg_0.1 = f32[] parameter(0)\n\
+  constant.17 = s32[] constant(0)\n\
+  tuple.18 = (s32[], f32[]) tuple(constant.17, Arg_0.1)\n\
+  while.19 = (s32[], f32[]) while(tuple.18), condition=cond.12, body=body.1\n\
+  get-tuple-element.20 = f32[] get-tuple-element(while.19), index=1\n\
+  ROOT tuple.21 = (f32[]) tuple(get-tuple-element.20)\n\
+}\n";
+        let out = run(hlo, &[buf(&[], &[1.0])]);
+        // 1 + (0 + 2 + 4 + 6) = 13
+        assert_eq!(out[0].data, vec![13.0]);
+        assert_eq!(out[0].shape, Vec::<usize>::new());
+    }
+
+    #[test]
+    fn indexed_conditional_picks_branch() {
+        // branch 0 doubles, branch 1 negates; s32 selector clamps like XLA
+        let hlo2 = "HloModule jit_f, entry_computation_layout={(f32[2]{0}, f32[]{})->(f32[2]{0})}\n\
+branch_a.1 {\n\
+  Arg_.2 = f32[2]{0} parameter(0)\n\
+  ROOT add.3 = f32[2]{0} add(Arg_.2, Arg_.2)\n\
+}\n\
+branch_b.4 {\n\
+  Arg_.5 = f32[2]{0} parameter(0)\n\
+  ROOT negate.6 = f32[2]{0} negate(Arg_.5)\n\
+}\n\
+ENTRY main.20 {\n\
+  Arg_0.1 = f32[2]{0} parameter(0)\n\
+  Arg_1.2 = f32[] parameter(1)\n\
+  convert.3 = s32[] convert(Arg_1.2)\n\
+  conditional.4 = f32[2]{0} conditional(convert.3, Arg_0.1, Arg_0.1), branch_computations={branch_a.1, branch_b.4}\n\
+  ROOT tuple.5 = (f32[2]{0}) tuple(conditional.4)\n\
+}\n";
+        let out = run(hlo2, &[buf(&[2], &[3.0, -1.0]), buf(&[], &[0.0])]);
+        assert_eq!(out[0].data, vec![6.0, -2.0], "branch 0 doubles");
+        let out = run(hlo2, &[buf(&[2], &[3.0, -1.0]), buf(&[], &[1.0])]);
+        assert_eq!(out[0].data, vec![-3.0, 1.0], "branch 1 negates");
+        let out = run(hlo2, &[buf(&[2], &[3.0, -1.0]), buf(&[], &[9.0])]);
+        assert_eq!(out[0].data, vec![-3.0, 1.0], "index clamps to last branch");
+        // XLA: a NEGATIVE out-of-range index also runs the LAST branch
+        let out = run(hlo2, &[buf(&[2], &[3.0, -1.0]), buf(&[], &[-3.0])]);
+        assert_eq!(out[0].data, vec![-3.0, 1.0], "negative index runs last branch");
+    }
+
+    #[test]
+    fn dynamic_slice_clamps_and_updates() {
+        let hlo = "HloModule jit_f, entry_computation_layout={(f32[4]{0}, f32[]{})->(f32[2]{0})}\n\
+ENTRY main.9 {\n\
+  Arg_0.1 = f32[4]{0} parameter(0)\n\
+  Arg_1.2 = f32[] parameter(1)\n\
+  convert.3 = s32[] convert(Arg_1.2)\n\
+  dynamic-slice.4 = f32[2]{0} dynamic-slice(Arg_0.1, convert.3), dynamic_slice_sizes={2}\n\
+  constant.5 = f32[2]{0} constant({100, 200})\n\
+  add.6 = f32[2]{0} add(dynamic-slice.4, constant.5)\n\
+  ROOT tuple.7 = (f32[2]{0}) tuple(add.6)\n\
+}\n";
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let out = run(hlo, &[buf(&[4], &x), buf(&[], &[1.0])]);
+        assert_eq!(out[0].data, vec![102.0, 203.0]);
+        // start 9 clamps to 2 (= 4 - 2)
+        let out = run(hlo, &[buf(&[4], &x), buf(&[], &[9.0])]);
+        assert_eq!(out[0].data, vec![103.0, 204.0]);
+    }
+
+    #[test]
+    fn transpose_matches_row_major_semantics() {
+        let t = Tensor { dims: vec![2, 3], data: Data::F32(vec![1., 2., 3., 4., 5., 6.]) };
+        let r = transpose(&t, &[1, 0]).unwrap();
+        assert_eq!(r.dims, vec![3, 2]);
+        match r.data {
+            Data::F32(v) => assert_eq!(v, vec![1., 4., 2., 5., 3., 6.]),
+            _ => panic!(),
+        }
+        assert!(transpose(&t, &[0, 0]).is_err());
+    }
+
+    #[test]
+    fn dynamic_update_slice_writes_window() {
+        let t = Tensor { dims: vec![2, 3], data: Data::F32(vec![0.; 6]) };
+        let u = Tensor { dims: vec![1, 2], data: Data::F32(vec![7., 8.]) };
+        let r = dyn_update_slice(&t, &u, &[1, 1]).unwrap();
+        match r.data {
+            Data::F32(v) => assert_eq!(v, vec![0., 0., 0., 0., 7., 8.]),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let hlo = "HloModule jit_f, entry_computation_layout={(f32[2]{0})->(f32[2]{0})}\n\
+ENTRY main.3 {\n\
+  Arg_0.1 = f32[2]{0} parameter(0)\n\
+  ROOT tuple.2 = (f32[2]{0}) tuple(Arg_0.1)\n\
+}\n";
+        let module = HloModule::parse(hlo).unwrap();
+        let exe = InterpExecutable { module };
+        assert!(exe.execute(&[]).is_err(), "arity");
+        let wrong = buf(&[3], &[0.0; 3]);
+        assert!(exe.execute(&[&wrong]).is_err(), "shape");
+        let right = buf(&[2], &[0.0; 2]);
+        assert!(exe.execute(&[&right]).is_ok());
+    }
+}

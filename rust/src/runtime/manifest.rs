@@ -1,8 +1,9 @@
 //! Manifest loader for the AOT artifact directory (artifacts/manifest.json,
 //! written by python/compile/aot.py), parsed with the in-tree JSON module.
 
+use crate::err;
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
-use anyhow::{anyhow, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
 
@@ -48,7 +49,7 @@ fn shape_of(v: &Json) -> Result<Vec<usize>> {
     v.get("shape")
         .and_then(|s| s.as_array())
         .map(|a| a.iter().filter_map(|d| d.as_usize()).collect())
-        .ok_or_else(|| anyhow!("bad shape spec"))
+        .ok_or_else(|| err!("bad shape spec"))
 }
 
 fn strings(v: &Json) -> Vec<String> {
@@ -66,10 +67,10 @@ impl Manifest {
     }
 
     pub fn parse(text: &str) -> Result<Manifest> {
-        let j = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
-        let cfg = j.get("config").ok_or_else(|| anyhow!("manifest: missing config"))?;
+        let j = Json::parse(text).map_err(|e| err!("manifest: {e}"))?;
+        let cfg = j.get("config").ok_or_else(|| err!("manifest: missing config"))?;
         let u = |k: &str| -> Result<usize> {
-            cfg.get(k).and_then(|v| v.as_usize()).ok_or_else(|| anyhow!("config.{k} missing"))
+            cfg.get(k).and_then(|v| v.as_usize()).ok_or_else(|| err!("config.{k} missing"))
         };
         let (d_model, n_heads, seq, d_ff) =
             (u("d_model")?, u("n_heads")?, u("seq")?, u("d_ff")?);
@@ -79,11 +80,11 @@ impl Manifest {
             let name = a
                 .get("name")
                 .and_then(|v| v.as_str())
-                .ok_or_else(|| anyhow!("artifact missing name"))?;
+                .ok_or_else(|| err!("artifact missing name"))?;
             let file = a
                 .get("file")
                 .and_then(|v| v.as_str())
-                .ok_or_else(|| anyhow!("artifact {name}: missing file"))?;
+                .ok_or_else(|| err!("artifact {name}: missing file"))?;
             let inputs = a
                 .get("inputs")
                 .and_then(|v| v.as_array())
@@ -113,7 +114,7 @@ impl Manifest {
                         artifact: s
                             .get("artifact")
                             .and_then(|v| v.as_str())
-                            .ok_or_else(|| anyhow!("{pname}: step missing artifact"))?
+                            .ok_or_else(|| err!("{pname}: step missing artifact"))?
                             .to_string(),
                         inputs: strings(s.get("in").unwrap_or(&Json::Null)),
                         outputs: strings(s.get("out").unwrap_or(&Json::Null)),
@@ -122,7 +123,7 @@ impl Manifest {
                 let output = p
                     .get("output")
                     .and_then(|v| v.as_str())
-                    .ok_or_else(|| anyhow!("{pname}: missing output"))?
+                    .ok_or_else(|| err!("{pname}: missing output"))?
                     .to_string();
                 pipelines.insert(pname.clone(), PipelineSpec { steps, output });
             }
@@ -162,13 +163,13 @@ impl Manifest {
             for s in &p.steps {
                 let art = self
                     .artifact(&s.artifact)
-                    .ok_or_else(|| anyhow!("{pname}: unknown artifact '{}'", s.artifact))?;
+                    .ok_or_else(|| err!("{pname}: unknown artifact '{}'", s.artifact))?;
                 if s.inputs.len() != art.inputs.len() || s.outputs.len() != art.outputs.len() {
-                    return Err(anyhow!("{pname}: arity mismatch at '{}'", s.artifact));
+                    return Err(err!("{pname}: arity mismatch at '{}'", s.artifact));
                 }
                 for b in &s.inputs {
                     if !defined.contains(&b.as_str()) {
-                        return Err(anyhow!("{pname}: buffer '{b}' used before defined"));
+                        return Err(err!("{pname}: buffer '{b}' used before defined"));
                     }
                 }
                 for b in &s.outputs {
@@ -176,7 +177,7 @@ impl Manifest {
                 }
             }
             if !defined.contains(&p.output.as_str()) {
-                return Err(anyhow!("{pname}: output '{}' never produced", p.output));
+                return Err(err!("{pname}: output '{}' never produced", p.output));
             }
         }
         Ok(())

@@ -1,7 +1,13 @@
-//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! Runtime: loads the AOT-compiled HLO-text artifacts produced by
 //! `make artifacts` (python/compile/aot.py) and executes the GPT-layer
 //! mapping variants from the Rust hot path — Python is never on the
 //! request path.
+//!
+//! Execution is delegated to a pluggable [`Backend`] (the executor
+//! abstraction separating dataflow planning from execution): the default
+//! [`InterpBackend`] is a pure-Rust HLO interpreter that runs offline with
+//! zero dependencies; `--features pjrt` adds [`pjrt::PjrtBackend`] wrapping
+//! the `xla` PJRT client.
 //!
 //! The executor interprets the manifest's pipeline wiring generically:
 //! named buffers flow between steps, so the same code runs the fused
@@ -10,11 +16,19 @@
 //! intermediate traffic each incurs — the Fig. 2C-vs-2D contrast, executed
 //! for real.
 
+pub mod backend;
+pub mod hlo;
+pub mod interp;
 pub mod manifest;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
+pub use backend::{Backend, Executable, TensorBuf};
+pub use interp::InterpBackend;
 pub use manifest::{ArtifactSpec, Manifest, PipelineSpec, PipelineStep};
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{Context, Result};
+use crate::{bail, err};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
@@ -23,8 +37,8 @@ use std::time::{Duration, Instant};
 pub struct Runtime {
     pub manifest: Manifest,
     dir: PathBuf,
-    client: xla::PjRtClient,
-    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    backend_name: &'static str,
+    executables: BTreeMap<String, Box<dyn Executable>>,
 }
 
 /// Execution statistics of one pipeline run.
@@ -37,12 +51,29 @@ pub struct PipelineStats {
     pub wall: Duration,
 }
 
+/// Locate the artifact directory: `$DFMODEL_ARTIFACTS`, `artifacts/`, or
+/// `../artifacts/` (tests run with the package root `rust/` as cwd while
+/// `make artifacts` writes to the repository root).
+pub fn find_artifacts() -> Option<PathBuf> {
+    let mut candidates: Vec<PathBuf> = Vec::new();
+    if let Ok(p) = std::env::var("DFMODEL_ARTIFACTS") {
+        candidates.push(PathBuf::from(p));
+    }
+    candidates.push(PathBuf::from("artifacts"));
+    candidates.push(PathBuf::from("../artifacts"));
+    candidates.into_iter().find(|p| p.join("manifest.json").exists())
+}
+
 impl Runtime {
-    /// Load the manifest and compile every artifact needed by `pipelines`
-    /// (all pipelines when empty).
+    /// Load with the default pure-Rust interpreter backend.
     pub fn load(dir: &Path, pipelines: &[&str]) -> Result<Self> {
+        Self::load_with(dir, pipelines, &InterpBackend)
+    }
+
+    /// Load the manifest and compile every artifact needed by `pipelines`
+    /// (all pipelines when empty) with an explicit backend.
+    pub fn load_with(dir: &Path, pipelines: &[&str], backend: &dyn Backend) -> Result<Self> {
         let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt: {e}"))?;
         let needed: Vec<String> = if pipelines.is_empty() {
             manifest.artifacts.iter().map(|a| a.name.clone()).collect()
         } else {
@@ -51,7 +82,7 @@ impl Runtime {
                 let spec = manifest
                     .pipelines
                     .get(*p)
-                    .ok_or_else(|| anyhow!("unknown pipeline '{p}'"))?;
+                    .ok_or_else(|| err!("unknown pipeline '{p}'"))?;
                 for s in &spec.steps {
                     if !v.contains(&s.artifact) {
                         v.push(s.artifact.clone());
@@ -64,17 +95,16 @@ impl Runtime {
         for name in needed {
             let art = manifest
                 .artifact(&name)
-                .ok_or_else(|| anyhow!("artifact '{name}' missing from manifest"))?;
-            let path = dir.join(&art.file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("artifact path not utf-8")?,
-            )
-            .map_err(|e| anyhow!("parse {}: {e}", art.file))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp).map_err(|e| anyhow!("compile {name}: {e}"))?;
+                .ok_or_else(|| err!("artifact '{name}' missing from manifest"))?;
+            let exe = backend.compile(&name, &dir.join(&art.file))?;
             executables.insert(name, exe);
         }
-        Ok(Runtime { manifest, dir: dir.to_path_buf(), client, executables })
+        Ok(Runtime {
+            manifest,
+            dir: dir.to_path_buf(),
+            backend_name: backend.name(),
+            executables,
+        })
     }
 
     /// The reference input (f32 LE) written by the AOT step.
@@ -94,43 +124,32 @@ impl Runtime {
             .manifest
             .pipelines
             .get(pipeline)
-            .ok_or_else(|| anyhow!("unknown pipeline '{pipeline}'"))?;
+            .ok_or_else(|| err!("unknown pipeline '{pipeline}'"))?;
         let in_shape = &self.manifest.input_shape;
         let expect: usize = in_shape.iter().product();
         if x.len() != expect {
             bail!("input length {} != {:?}", x.len(), in_shape);
         }
         let t0 = Instant::now();
-        let mut buffers: BTreeMap<String, xla::Literal> = BTreeMap::new();
-        let dims: Vec<i64> = in_shape.iter().map(|&d| d as i64).collect();
-        buffers.insert(
-            "x".into(),
-            xla::Literal::vec1(x).reshape(&dims).map_err(|e| anyhow!("reshape x: {e}"))?,
-        );
+        let mut buffers: BTreeMap<String, TensorBuf> = BTreeMap::new();
+        buffers.insert("x".into(), TensorBuf::new(in_shape.clone(), x.to_vec()));
 
         let mut intermediate_bytes = 0.0;
         for step in &spec.steps {
             let exe = self
                 .executables
                 .get(&step.artifact)
-                .ok_or_else(|| anyhow!("artifact '{}' not compiled", step.artifact))?;
-            let args: Vec<&xla::Literal> = step
-                .inputs
-                .iter()
-                .map(|b| {
-                    buffers
-                        .get(b)
-                        .ok_or_else(|| anyhow!("buffer '{b}' undefined at '{}'", step.artifact))
-                })
-                .collect::<Result<_>>()?;
-            let result = exe
-                .execute::<&xla::Literal>(&args)
-                .map_err(|e| anyhow!("execute {}: {e}", step.artifact))?;
-            let root = result[0][0]
-                .to_literal_sync()
-                .map_err(|e| anyhow!("fetch {}: {e}", step.artifact))?;
-            // every artifact returns a tuple (return_tuple=True in aot.py)
-            let outs = root.to_tuple().map_err(|e| anyhow!("untuple: {e}"))?;
+                .ok_or_else(|| err!("artifact '{}' not compiled", step.artifact))?;
+            let mut args: Vec<&TensorBuf> = Vec::with_capacity(step.inputs.len());
+            for b in &step.inputs {
+                let buf = buffers
+                    .get(b)
+                    .ok_or_else(|| err!("buffer '{b}' undefined at '{}'", step.artifact))?;
+                args.push(buf);
+            }
+            let outs = exe
+                .execute(&args)
+                .map_err(|e| e.context(format!("step '{}'", step.artifact)))?;
             if outs.len() != step.outputs.len() {
                 bail!(
                     "step '{}': {} outputs, manifest says {}",
@@ -139,17 +158,16 @@ impl Runtime {
                     step.outputs.len()
                 );
             }
-            for (name, lit) in step.outputs.iter().zip(outs) {
-                intermediate_bytes += lit.size_bytes() as f64;
-                buffers.insert(name.clone(), lit);
+            for (name, out) in step.outputs.iter().zip(outs) {
+                intermediate_bytes += out.size_bytes() as f64;
+                buffers.insert(name.clone(), out);
             }
         }
         let out = buffers
             .get(&spec.output)
-            .ok_or_else(|| anyhow!("pipeline output '{}' missing", spec.output))?;
-        let values = out.to_vec::<f32>().map_err(|e| anyhow!("read output: {e}"))?;
+            .ok_or_else(|| err!("pipeline output '{}' missing", spec.output))?;
         Ok((
-            values,
+            out.data.clone(),
             PipelineStats {
                 steps: spec.steps.len(),
                 intermediate_bytes,
@@ -174,13 +192,14 @@ impl Runtime {
         Ok(max_err)
     }
 
+    /// Name of the backend that compiled this runtime's executables.
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.backend_name.to_string()
     }
 }
 
 fn read_f32(path: &Path) -> Result<Vec<f32>> {
-    let raw = std::fs::read(path).with_context(|| format!("read {}", path.display()))?;
+    let raw = std::fs::read(path).context(format!("read {}", path.display()))?;
     if raw.len() % 4 != 0 {
         bail!("{}: length {} not a multiple of 4", path.display(), raw.len());
     }
@@ -209,5 +228,11 @@ mod tests {
         let p = dir.join("bad.bin");
         std::fs::write(&p, [0u8; 5]).unwrap();
         assert!(read_f32(&p).is_err());
+    }
+
+    #[test]
+    fn load_reports_missing_dir() {
+        let e = Runtime::load(Path::new("/nonexistent/artifacts"), &[]).unwrap_err();
+        assert!(e.to_string().contains("manifest.json"), "{e}");
     }
 }

@@ -1,0 +1,82 @@
+//! PJRT-backed execution (`--features pjrt`): compiles the HLO-text
+//! artifacts on the `xla` crate's PJRT CPU client. Offline builds link the
+//! in-tree `xla-stub`, which type-checks this path but errors at runtime;
+//! point the `xla` path dependency at the real crate to execute on PJRT
+//! (DESIGN.md §Substitutions).
+
+use super::backend::{Backend, Executable, TensorBuf};
+use crate::err;
+use crate::util::error::Result;
+use std::path::Path;
+
+/// Backend wrapping one PJRT client.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+}
+
+impl PjrtBackend {
+    /// Connect to the host CPU platform.
+    pub fn cpu() -> Result<PjrtBackend> {
+        let client = xla::PjRtClient::cpu().map_err(|e| err!("pjrt: {e}"))?;
+        Ok(PjrtBackend { client })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn compile(&self, artifact: &str, path: &Path) -> Result<Box<dyn Executable>> {
+        let path_str = path.to_str().ok_or_else(|| err!("artifact path not utf-8"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(|e| err!("parse {artifact}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| err!("compile {artifact}: {e}"))?;
+        Ok(Box::new(PjrtExecutable { exe }))
+    }
+}
+
+struct PjrtExecutable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable for PjrtExecutable {
+    fn execute(&self, args: &[&TensorBuf]) -> Result<Vec<TensorBuf>> {
+        let mut lits = Vec::with_capacity(args.len());
+        for a in args {
+            let dims: Vec<i64> = a.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(&a.data)
+                .reshape(&dims)
+                .map_err(|e| err!("reshape argument: {e}"))?;
+            lits.push(lit);
+        }
+        let refs: Vec<&xla::Literal> = lits.iter().collect();
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(&refs)
+            .map_err(|e| err!("execute: {e}"))?;
+        let root = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| err!("execution produced no output buffer"))?
+            .to_literal_sync()
+            .map_err(|e| err!("fetch result: {e}"))?;
+        // every artifact returns a tuple (return_tuple=True in aot.py)
+        let outs = root.to_tuple().map_err(|e| err!("untuple result: {e}"))?;
+        let mut bufs = Vec::with_capacity(outs.len());
+        for lit in outs {
+            let shape = lit.dims().map_err(|e| err!("result shape: {e}"))?;
+            let data = lit.to_vec::<f32>().map_err(|e| err!("read result: {e}"))?;
+            bufs.push(TensorBuf::new(shape, data));
+        }
+        Ok(bufs)
+    }
+}

@@ -1,0 +1,144 @@
+//! Internal error handling (`anyhow` is unavailable offline — DESIGN.md
+//! §Substitutions): a string-backed [`Error`], a crate-wide [`Result`]
+//! alias, a [`Context`] extension for wrapping foreign errors, and the
+//! [`err!`](crate::err)/[`bail!`](crate::bail)/[`ensure!`](crate::ensure)
+//! macros used by the config, manifest, and runtime layers.
+
+use std::fmt;
+
+/// A human-readable error message, optionally wrapped with context
+/// (outermost context first, like `anyhow`'s chain rendered in one line).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn new(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+
+    /// Prefix additional context: `e.context("load manifest")` renders as
+    /// `load manifest: <inner>`.
+    pub fn context(self, ctx: impl fmt::Display) -> Error {
+        Error { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(msg: String) -> Error {
+        Error { msg }
+    }
+}
+
+impl From<&str> for Error {
+    fn from(msg: &str) -> Error {
+        Error { msg: msg.to_string() }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+impl From<crate::util::json::JsonError> for Error {
+    fn from(e: crate::util::json::JsonError) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// Crate-wide result alias (defaults to the internal [`Error`]).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow::Context`-style adapters for any displayable error.
+pub trait Context<T> {
+    /// Wrap the error with a fixed context prefix.
+    fn context(self, ctx: impl fmt::Display) -> Result<T>;
+    /// Wrap the error with a lazily-built context prefix.
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::new(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::new(format!("{}: {e}", f())))
+    }
+}
+
+/// Build an [`Error`] from a format string (`anyhow::anyhow!` equivalent).
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::new(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] (`anyhow::bail!` equivalent).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds
+/// (`anyhow::ensure!` equivalent).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> Result<usize> {
+        ensure!(flag, "flag was {flag}");
+        Ok(7)
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let e = crate::err!("bad value {}", 42);
+        assert_eq!(e.to_string(), "bad value 42");
+        assert_eq!(fails(true).unwrap(), 7);
+        assert_eq!(fails(false).unwrap_err().to_string(), "flag was false");
+    }
+
+    #[test]
+    fn context_chains() {
+        let inner: std::result::Result<(), std::io::Error> = Err(
+            std::io::Error::new(std::io::ErrorKind::NotFound, "gone"),
+        );
+        let e = inner.context("read manifest").unwrap_err();
+        assert!(e.to_string().starts_with("read manifest: "));
+        let e2 = e.context("load");
+        assert!(e2.to_string().starts_with("load: read manifest: "));
+    }
+
+    #[test]
+    fn conversions() {
+        let e: Error = "plain".into();
+        assert_eq!(e.to_string(), "plain");
+        let j = crate::util::json::Json::parse("{").unwrap_err();
+        let e: Error = j.into();
+        assert!(e.to_string().contains("json parse error"));
+    }
+}

@@ -8,7 +8,15 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Number of worker threads to use (respects `DFMODEL_THREADS`).
 pub fn default_workers() -> usize {
-    if let Ok(v) = std::env::var("DFMODEL_THREADS") {
+    workers_from_override(std::env::var("DFMODEL_THREADS").ok().as_deref())
+}
+
+/// Pure policy behind [`default_workers`]: a parseable override wins
+/// (clamped to >= 1), anything else falls back to available parallelism.
+/// Tests exercise this path instead of mutating process-global env vars
+/// (`std::env::set_var` races against concurrently-running tests).
+pub fn workers_from_override(over: Option<&str>) -> usize {
+    if let Some(v) = over {
         if let Ok(n) = v.parse::<usize>() {
             return n.max(1);
         }
@@ -140,9 +148,13 @@ mod tests {
 
     #[test]
     fn respects_env_worker_override() {
-        // just exercises the parse path
-        std::env::set_var("DFMODEL_THREADS", "2");
-        assert_eq!(default_workers(), 2);
-        std::env::remove_var("DFMODEL_THREADS");
+        // pure path — no process-global env mutation (set_var would race
+        // against cargo's concurrent test threads)
+        assert_eq!(workers_from_override(Some("2")), 2);
+        assert_eq!(workers_from_override(Some("0")), 1, "override clamps to >= 1");
+        let fallback = workers_from_override(None);
+        assert!(fallback >= 1);
+        assert_eq!(workers_from_override(Some("not-a-number")), fallback);
+        assert!(default_workers() >= 1);
     }
 }

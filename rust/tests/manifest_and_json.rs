@@ -1,0 +1,155 @@
+//! Coverage for the zero-dependency substrates the runtime leans on:
+//! `util::json` round-trips (escapes, nesting, number edge cases) and
+//! `runtime::manifest` error paths (malformed manifests must produce the
+//! internal `Error`, never a panic).
+
+use dfmodel::runtime::Manifest;
+use dfmodel::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// util::json
+// ---------------------------------------------------------------------------
+
+fn roundtrip(src: &str) -> Json {
+    let v = Json::parse(src).expect(src);
+    let compact = Json::parse(&v.to_string()).expect("reparse compact");
+    assert_eq!(v, compact, "compact round-trip of {src}");
+    let pretty = Json::parse(&v.pretty()).expect("reparse pretty");
+    assert_eq!(v, pretty, "pretty round-trip of {src}");
+    v
+}
+
+#[test]
+fn json_roundtrips_escapes() {
+    let v = roundtrip(r#"{"s": "line\nbreak\ttab \"quoted\" back\\slash \u0041 é 😀"}"#);
+    assert_eq!(
+        v.get("s").unwrap().as_str().unwrap(),
+        "line\nbreak\ttab \"quoted\" back\\slash A é 😀"
+    );
+    // control characters survive a serialize→parse cycle
+    let ctl = Json::Str("\u{1}\u{2}".to_string());
+    assert_eq!(Json::parse(&ctl.to_string()).unwrap(), ctl);
+}
+
+#[test]
+fn json_roundtrips_nested_arrays() {
+    let v = roundtrip(r#"{"a": [[1, 2], [3, [4, {"b": [true, false, null]}]], []]}"#);
+    let outer = v.get("a").unwrap().as_array().unwrap();
+    assert_eq!(outer.len(), 3);
+    assert_eq!(outer[2], Json::Arr(vec![]));
+}
+
+#[test]
+fn json_number_edge_cases() {
+    let v = roundtrip(r#"[0, -0.5, 1e3, 1.5e-7, 2e+8, 123456789012345, 1e308]"#);
+    let a = v.as_array().unwrap();
+    assert_eq!(a[0].as_f64(), Some(0.0));
+    assert_eq!(a[1].as_f64(), Some(-0.5));
+    assert_eq!(a[2].as_f64(), Some(1000.0));
+    assert_eq!(a[3].as_f64(), Some(1.5e-7));
+    assert_eq!(a[4].as_f64(), Some(2e8));
+    assert_eq!(a[5].as_i64(), Some(123_456_789_012_345));
+    assert_eq!(a[6].as_f64(), Some(1e308));
+    // negative numbers refuse usize conversion, integers keep precision
+    assert_eq!(a[1].as_usize(), None);
+    assert_eq!(a[5].as_usize(), Some(123_456_789_012_345));
+}
+
+#[test]
+fn json_rejects_malformed_inputs() {
+    for bad in [
+        "{\"a\": }",
+        "[1, 2",
+        "\"\\q\"",
+        "tru",
+        "{\"a\" 1}",
+        "[1,]",
+        "01x",
+        "\"\\u12\"",
+    ] {
+        assert!(Json::parse(bad).is_err(), "{bad} should not parse");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// runtime::manifest
+// ---------------------------------------------------------------------------
+
+const GOOD: &str = r#"{
+  "config": {"d_model": 64, "n_heads": 2, "seq": 32, "d_ff": 256,
+             "head_dim": 32, "dtype": "f32"},
+  "input_file": "input_x.bin",
+  "expected_file": "expected_out.bin",
+  "tolerance": 2e-4,
+  "artifacts": [
+    {"name": "a1", "file": "a1.hlo.txt",
+     "inputs": [{"shape": [32, 64], "dtype": "f32"}],
+     "outputs": [{"shape": [32, 64], "dtype": "f32"}]}
+  ],
+  "pipelines": {
+    "p": {"steps": [{"artifact": "a1", "in": ["x"], "out": ["out"]}],
+          "output": "out"}
+  }
+}"#;
+
+#[test]
+fn wellformed_manifest_parses_and_validates() {
+    let m = Manifest::parse(GOOD).unwrap();
+    assert_eq!(m.d_model, 64);
+    assert_eq!(m.input_shape, vec![32, 64]);
+    assert_eq!(m.artifacts.len(), 1);
+    m.validate().unwrap();
+}
+
+#[test]
+fn missing_config_is_an_error() {
+    let e = Manifest::parse(r#"{"artifacts": []}"#).unwrap_err();
+    assert!(e.to_string().contains("config"), "{e}");
+}
+
+#[test]
+fn missing_config_field_is_an_error() {
+    let bad = GOOD.replace("\"seq\": 32,", "");
+    let e = Manifest::parse(&bad).unwrap_err();
+    assert!(e.to_string().contains("seq"), "{e}");
+}
+
+#[test]
+fn artifact_missing_file_is_an_error() {
+    let bad = GOOD.replace("\"file\": \"a1.hlo.txt\",", "");
+    let e = Manifest::parse(&bad).unwrap_err();
+    assert!(e.to_string().contains("missing file"), "{e}");
+}
+
+#[test]
+fn artifact_missing_name_is_an_error() {
+    let bad = GOOD.replace("\"name\": \"a1\",", "");
+    let e = Manifest::parse(&bad).unwrap_err();
+    assert!(e.to_string().contains("missing name"), "{e}");
+}
+
+#[test]
+fn pipeline_step_missing_artifact_is_an_error() {
+    let bad = GOOD.replace("\"artifact\": \"a1\",", "");
+    let e = Manifest::parse(&bad).unwrap_err();
+    assert!(e.to_string().contains("step missing artifact"), "{e}");
+}
+
+#[test]
+fn pipeline_missing_output_is_an_error() {
+    let bad = GOOD.replace("\"output\": \"out\"", "\"no_output\": 1");
+    let e = Manifest::parse(&bad).unwrap_err();
+    assert!(e.to_string().contains("missing output"), "{e}");
+}
+
+#[test]
+fn non_json_manifest_is_an_error() {
+    let e = Manifest::parse("HloModule oops").unwrap_err();
+    assert!(e.to_string().contains("manifest"), "{e}");
+}
+
+#[test]
+fn load_from_missing_dir_mentions_make_artifacts() {
+    let e = Manifest::load(std::path::Path::new("/nonexistent")).unwrap_err();
+    assert!(e.to_string().contains("make artifacts"), "{e}");
+}

@@ -1,26 +1,26 @@
 //! Integration: load the AOT artifacts (built by `make artifacts`), compile
-//! them on the PJRT CPU client, execute every mapping variant, and check
-//! numerics against the Python oracle — the full L1→L2→L3 stack.
+//! them on the default backend (the pure-Rust HLO interpreter — no PJRT,
+//! no network), execute every mapping variant, and check numerics against
+//! the Python oracle — the full L1→L2→L3 stack, offline.
 //!
 //! Skipped (with a notice) when artifacts/ has not been built.
 
-use dfmodel::runtime::Runtime;
-use std::path::Path;
+use dfmodel::runtime::{find_artifacts, Runtime};
+use std::path::PathBuf;
 
-fn artifacts_dir() -> Option<&'static Path> {
-    let p = Path::new("artifacts");
-    if p.join("manifest.json").exists() {
-        Some(p)
-    } else {
+fn artifacts_dir() -> Option<PathBuf> {
+    let found = find_artifacts();
+    if found.is_none() {
         eprintln!("artifacts/ not built; run `make artifacts` — skipping");
-        None
     }
+    found
 }
 
 #[test]
 fn all_pipelines_match_the_oracle() {
     let Some(dir) = artifacts_dir() else { return };
-    let rt = Runtime::load(dir, &[]).expect("load all artifacts");
+    let rt = Runtime::load(&dir, &[]).expect("load all artifacts");
+    assert_eq!(rt.platform(), "interp", "default backend must be the interpreter");
     let tol = rt.manifest.tolerance.max(1e-3);
     for name in ["fused", "kernel_by_kernel", "vendor", "dfmodel"] {
         let err = rt.verify_pipeline(name).unwrap_or_else(|e| panic!("{name}: {e}"));
@@ -34,7 +34,7 @@ fn dataflow_mappings_move_less_intermediate_data() {
     // mapping's host-visible intermediate traffic is far below the
     // kernel-by-kernel mapping's.
     let Some(dir) = artifacts_dir() else { return };
-    let rt = Runtime::load(dir, &["fused", "kernel_by_kernel", "vendor"]).expect("load");
+    let rt = Runtime::load(&dir, &["fused", "kernel_by_kernel", "vendor"]).expect("load");
     let x = rt.reference_input().unwrap();
     let (_, fused) = rt.run_pipeline("fused", &x).unwrap();
     let (_, kbk) = rt.run_pipeline("kernel_by_kernel", &x).unwrap();
@@ -53,7 +53,7 @@ fn dataflow_mappings_move_less_intermediate_data() {
 #[test]
 fn pipelines_agree_with_each_other() {
     let Some(dir) = artifacts_dir() else { return };
-    let rt = Runtime::load(dir, &["vendor", "dfmodel"]).expect("load");
+    let rt = Runtime::load(&dir, &["vendor", "dfmodel"]).expect("load");
     let x = rt.reference_input().unwrap();
     let (a, _) = rt.run_pipeline("vendor", &x).unwrap();
     let (b, _) = rt.run_pipeline("dfmodel", &x).unwrap();
@@ -65,7 +65,14 @@ fn pipelines_agree_with_each_other() {
 #[test]
 fn runtime_rejects_bad_input_length() {
     let Some(dir) = artifacts_dir() else { return };
-    let rt = Runtime::load(dir, &["fused"]).expect("load");
+    let rt = Runtime::load(&dir, &["fused"]).expect("load");
     assert!(rt.run_pipeline("fused", &[0.0; 3]).is_err());
     assert!(rt.run_pipeline("does-not-exist", &[0.0; 3]).is_err());
+}
+
+#[test]
+fn unknown_pipeline_and_artifact_error_cleanly() {
+    let Some(dir) = artifacts_dir() else { return };
+    let e = Runtime::load(&dir, &["no-such-pipeline"]).unwrap_err();
+    assert!(e.to_string().contains("no-such-pipeline"), "{e}");
 }

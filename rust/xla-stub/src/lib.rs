@@ -1,0 +1,172 @@
+//! Offline stub of the `xla` (xla-rs) API surface used by
+//! `dfmodel::runtime::pjrt` (DESIGN.md §Substitutions).
+//!
+//! The real crate links libxla/PJRT, which cannot be built in the offline
+//! tier-1 environment. This stub has the same types and signatures so
+//! `cargo build --features pjrt` still type-checks the PJRT-backed path;
+//! every entry point fails at *runtime* with a clear message. To execute on
+//! PJRT for real, point the `xla` path dependency in `rust/Cargo.toml` at
+//! the actual crate (and reconcile any upstream API drift there).
+
+use std::fmt;
+
+/// Error for every stub entry point (and the real crate's error slot).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn stub_err() -> Error {
+    Error(
+        "xla stub: built without a real PJRT runtime; point the `xla` path \
+         dependency at the real crate (see DESIGN.md §Substitutions)"
+            .to_string(),
+    )
+}
+
+/// Element types `Literal::to_vec` can extract.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+
+/// A host-side tensor literal.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data_f32: Vec<f32>,
+    dims: Vec<usize>,
+}
+
+impl Literal {
+    /// Build a rank-1 f32 literal.
+    pub fn vec1(values: &[f32]) -> Literal {
+        Literal { data_f32: values.to_vec(), dims: vec![values.len()] }
+    }
+
+    /// Reinterpret with the given dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data_f32.len() {
+            return Err(Error(format!(
+                "reshape: {} elements into dims {dims:?}",
+                self.data_f32.len()
+            )));
+        }
+        Ok(Literal {
+            data_f32: self.data_f32.clone(),
+            dims: dims.iter().map(|&d| d as usize).collect(),
+        })
+    }
+
+    /// Logical dimensions of this literal.
+    pub fn dims(&self) -> Result<Vec<usize>, Error> {
+        Ok(self.dims.clone())
+    }
+
+    /// Total payload size in bytes.
+    pub fn size_bytes(&self) -> usize {
+        self.data_f32.len() * 4
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        Err(stub_err())
+    }
+
+    /// Extract the flattened payload.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        Err(stub_err())
+    }
+}
+
+/// Parsed HLO module (the text interchange format of `make artifacts`).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        Err(stub_err())
+    }
+}
+
+/// An XLA computation ready for compilation.
+#[derive(Debug, Clone)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// A device-resident buffer produced by execution.
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(stub_err())
+    }
+}
+
+/// A compiled, loaded executable.
+#[derive(Debug, Clone)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    /// Execute on the given argument literals; outer Vec is per-device.
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(stub_err())
+    }
+}
+
+/// A PJRT client bound to one platform.
+#[derive(Debug, Clone)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    /// Connect to the host CPU platform.
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(stub_err())
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(stub_err())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_shape_plumbing_works_without_pjrt() {
+        let lit = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = lit.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.dims().unwrap(), vec![2, 3]);
+        assert_eq!(r.size_bytes(), 24);
+        assert!(lit.reshape(&[7]).is_err());
+    }
+
+    #[test]
+    fn runtime_entry_points_error_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let msg = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(msg.contains("stub"));
+    }
+}
