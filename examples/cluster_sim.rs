@@ -1,0 +1,41 @@
+//! Cluster serving walkthrough: bursty traffic for Llama3-8B on one
+//! 16×SN40L replica (the §VIII-A platform), simulated with continuous
+//! batching and KV admission control, then the capacity planner picks the
+//! cheapest Llama3-70B fleet for 2 requests/s under SLOs.
+//!
+//!     cargo run --release --example cluster_sim
+
+use dfmodel::cluster::engine::{simulate, ReplicaConfig, Slo};
+use dfmodel::cluster::planner::{plan, render, PlanTarget, PlanTraffic};
+use dfmodel::cluster::workload::{Arrivals, LengthDist, TraceSpec};
+use dfmodel::graph::llama::{llama3_70b, llama3_8b};
+use dfmodel::serving::sn40l_x16;
+
+fn main() {
+    // ---- 1. one replica under a bursty diurnal cycle ----
+    let cfg = ReplicaConfig::new(llama3_8b(), sn40l_x16(), 16, 1);
+    let spec = TraceSpec {
+        seed: 17,
+        n_requests: 400,
+        arrivals: Arrivals::Bursty { base: 2.0, peak: 14.0, period: 60.0 },
+        prompt: LengthDist { mean: 1024.0, sigma: 0.4, min: 16, max: 8192 },
+        output: LengthDist { mean: 128.0, sigma: 0.6, min: 2, max: 2048 },
+    };
+    let slo = Slo { ttft: 1.0, tpot: 0.02 };
+    println!("== Llama3 8B on 16xSN40L, bursty 2..14 rps ==");
+    let report = simulate(&cfg, 1, &spec.generate(), &slo).expect("feasible");
+    print!("{}", report.render());
+
+    // ---- 2. capacity planning for Llama3-70B at 2 rps ----
+    let target = PlanTarget { qps: 2.0, slo: Slo { ttft: 2.0, tpot: 0.05 }, attainment: 0.9 };
+    let res = plan(&llama3_70b(), &target, &PlanTraffic::default());
+    println!();
+    print!("{}", render(&res, 10));
+    if let Some(i) = res.best {
+        let c = &res.candidates[i];
+        println!(
+            "cheapest fleet: {} x{} TP{}xPP{} x {} replicas @ ${:.2}/hr",
+            c.platform, c.group, c.tp, c.pp, c.replicas, c.usd_per_hour
+        );
+    }
+}

@@ -1,0 +1,42 @@
+//! `cargo bench --bench cluster_sim`
+//!
+//! Tracks the discrete-event engine's throughput (events/sec) so scheduler
+//! regressions are visible: a saturated single replica, a 4-replica
+//! cluster, and one full planner sweep.
+
+use dfmodel::cluster::engine::{simulate, ReplicaConfig, Slo};
+use dfmodel::cluster::planner::{plan, PlanTarget, PlanTraffic};
+use dfmodel::cluster::workload::TraceSpec;
+use dfmodel::graph::llama::{llama3_70b, llama3_8b};
+use dfmodel::serving::sn40l_x16;
+use dfmodel::util::bench::Runner;
+
+fn main() {
+    let mut r = Runner::new();
+    let slo = Slo { ttft: 2.0, tpot: 0.05 };
+
+    let cfg = ReplicaConfig::new(llama3_8b(), sn40l_x16(), 16, 1);
+    let requests = TraceSpec::poisson(7, 40.0, 2000).generate();
+    let mut events = 0u64;
+    r.run("engine(8B, 1 replica, 2000 reqs, saturated)", 1, 5, || {
+        events = simulate(&cfg, 1, &requests, &slo).expect("feasible").events;
+    });
+    let secs = r.results.last().unwrap().min.as_secs_f64().max(1e-12);
+    println!("  -> event-loop throughput: {:.0} events/s ({events} events)", events as f64 / secs);
+
+    r.run("engine(8B, 4 replicas, 2000 reqs)", 1, 5, || {
+        events = simulate(&cfg, 4, &requests, &slo).expect("feasible").events;
+    });
+    let secs = r.results.last().unwrap().min.as_secs_f64().max(1e-12);
+    println!("  -> event-loop throughput: {:.0} events/s ({events} events)", events as f64 / secs);
+
+    let target = PlanTarget { qps: 2.0, slo, attainment: 0.9 };
+    let traffic = PlanTraffic { n_requests: 200, ..Default::default() };
+    let best = r.run_once("planner(70B, full catalog sweep)", || {
+        plan(&llama3_70b(), &target, &traffic).best
+    });
+    println!("  -> planner found a fleet: {}", best.is_some());
+
+    let _ = dfmodel::util::table::write_result("cluster_sim.txt", &r.summary());
+    println!("\n{}", r.summary());
+}

@@ -1,0 +1,522 @@
+//! Deterministic discrete-event cluster engine: request arrivals feed
+//! per-replica continuous-batching schedulers (iteration-level, Orca-style
+//! prefill/decode interleaving) whose step durations come from the §VIII-A
+//! analytical serving model — the simulator's per-step cost oracle.
+//!
+//! Determinism: the event heap orders by (time, insertion sequence), every
+//! scheduling decision breaks ties by index, and the only randomness lives
+//! in the seeded trace — so one (config, trace) pair always produces one
+//! event history.
+
+use std::collections::{BinaryHeap, VecDeque};
+use std::fmt::Write as _;
+
+use super::workload::Request;
+use crate::graph::llama::LlamaConfig;
+use crate::serving::{self, ServingPoint, ServingSystem};
+use crate::util::units::fmt_time;
+
+/// One replica's static configuration: the model served with TP×PP over a
+/// chip group, plus the scheduler's batching/KV policy.
+#[derive(Debug, Clone)]
+pub struct ReplicaConfig {
+    pub model: LlamaConfig,
+    pub sys: ServingSystem,
+    pub tp: usize,
+    pub pp: usize,
+    /// Iteration-level cap on concurrently running sequences.
+    pub max_batch: usize,
+    /// Fraction of post-weights device memory usable by the KV cache.
+    pub kv_headroom: f64,
+}
+
+impl ReplicaConfig {
+    pub fn new(model: LlamaConfig, sys: ServingSystem, tp: usize, pp: usize) -> Self {
+        ReplicaConfig { model, sys, tp, pp, max_batch: 32, kv_headroom: 0.9 }
+    }
+
+    /// KV-cache budget: group device memory minus resident weights, derated
+    /// by the headroom factor. `None` when the weights alone do not fit.
+    pub fn kv_budget_bytes(&self) -> Option<f64> {
+        let free = self.sys.mem_total() - self.model.weight_bytes();
+        (free > 0.0).then(|| free * self.kv_headroom)
+    }
+
+    fn point(&self, batch: f64, prompt_len: f64, context: f64) -> ServingPoint {
+        ServingPoint { tp: self.tp, pp: self.pp, batch, prompt_len, context }
+    }
+}
+
+/// Latency SLOs a request must meet to count toward goodput.
+#[derive(Debug, Clone, Copy)]
+pub struct Slo {
+    /// Time-to-first-token bound, seconds.
+    pub ttft: f64,
+    /// Mean time-per-output-token bound, seconds.
+    pub tpot: f64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Event {
+    Arrival(usize),
+    StepDone(usize),
+}
+
+/// Heap entry ordered earliest-first by (time, insertion sequence); the
+/// sequence tie-break keeps equal-timestamp processing FIFO.
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    t: f64,
+    seq: u64,
+    ev: Event,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // reversed so the max-heap pops the earliest entry first
+        other.t.total_cmp(&self.t).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// The step a replica currently has in flight.
+#[derive(Debug, Clone)]
+enum StepKind {
+    /// Whole-prompt passes for newly admitted requests.
+    Prefill(Vec<usize>),
+    /// One decode iteration: one token for every running request.
+    Decode(Vec<usize>),
+}
+
+#[derive(Debug, Default)]
+struct Replica {
+    queue: VecDeque<usize>,
+    running: Vec<usize>,
+    pending_prefill: Vec<usize>,
+    kv_used: f64,
+    /// Requests dispatched here and not yet finished (for load balancing).
+    resident: usize,
+    current: Option<StepKind>,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct ReqState {
+    generated: usize,
+    kv_reserved: f64,
+    admitted: Option<f64>,
+    first_token: Option<f64>,
+    finished: Option<f64>,
+    rejected: bool,
+}
+
+/// Per-request outcome.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RequestMetrics {
+    pub id: usize,
+    /// Arrival → admission into a batch.
+    pub queue_time: f64,
+    /// Arrival → first token.
+    pub ttft: f64,
+    /// Mean time per output token after the first; 0 for 1-token outputs.
+    pub tpot: f64,
+    /// Arrival → last token.
+    pub e2e: f64,
+    pub output: usize,
+}
+
+/// Percentile summary of one latency metric.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Pcts {
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+/// Summarize samples (sorts in place; all-zero summary when empty).
+pub fn percentiles(samples: &mut [f64]) -> Pcts {
+    if samples.is_empty() {
+        return Pcts { mean: 0.0, p50: 0.0, p95: 0.0, p99: 0.0 };
+    }
+    samples.sort_by(f64::total_cmp);
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let at = |p: f64| samples[(p * (samples.len() - 1) as f64).round() as usize];
+    Pcts { mean, p50: at(0.50), p95: at(0.95), p99: at(0.99) }
+}
+
+/// Aggregate simulation outcome.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub n_offered: usize,
+    pub n_completed: usize,
+    /// Requests whose KV need alone exceeds a replica's budget.
+    pub n_rejected: usize,
+    pub makespan: f64,
+    pub queue: Pcts,
+    pub ttft: Pcts,
+    pub tpot: Pcts,
+    pub throughput_rps: f64,
+    /// SLO-meeting completions per second.
+    pub goodput_rps: f64,
+    /// Fraction of completed requests meeting both SLOs.
+    pub slo_attainment: f64,
+    pub output_tokens_per_s: f64,
+    /// Peak KV residency as a fraction of the per-replica budget.
+    pub kv_peak_frac: f64,
+    pub events: u64,
+    pub steps: u64,
+    pub per_request: Vec<RequestMetrics>,
+}
+
+impl SimReport {
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "requests : {} offered | {} completed | {} rejected | makespan {}",
+            self.n_offered,
+            self.n_completed,
+            self.n_rejected,
+            fmt_time(self.makespan)
+        );
+        let _ = writeln!(
+            s,
+            "rates    : {:.2} rps throughput | {:.2} rps goodput | {:.1}% in SLO | {:.0} tok/s out",
+            self.throughput_rps,
+            self.goodput_rps,
+            self.slo_attainment * 100.0,
+            self.output_tokens_per_s
+        );
+        let _ = writeln!(
+            s,
+            "engine   : {} events | {} steps | KV peak {:.1}%",
+            self.events,
+            self.steps,
+            self.kv_peak_frac * 100.0
+        );
+        for (name, p) in [("queue", &self.queue), ("TTFT", &self.ttft), ("TPOT", &self.tpot)] {
+            let _ = writeln!(
+                s,
+                "{name:<9}: mean {} | p50 {} | p95 {} | p99 {}",
+                fmt_time(p.mean),
+                fmt_time(p.p50),
+                fmt_time(p.p95),
+                fmt_time(p.p99)
+            );
+        }
+        s
+    }
+}
+
+struct Sim<'a> {
+    cfg: &'a ReplicaConfig,
+    requests: &'a [Request],
+    budget: f64,
+    kv_per_tok: f64,
+    reps: Vec<Replica>,
+    state: Vec<ReqState>,
+    heap: BinaryHeap<Entry>,
+    seq: u64,
+    events: u64,
+    steps: u64,
+    kv_peak: f64,
+    now: f64,
+}
+
+impl Sim<'_> {
+    fn push(&mut self, t: f64, ev: Event) {
+        self.heap.push(Entry { t, seq: self.seq, ev });
+        self.seq += 1;
+    }
+
+    /// Admit queued requests (FCFS, bounded by the batch cap and the KV
+    /// budget) and launch the next step on replica `ri` if it is idle.
+    fn start_step(&mut self, ri: usize, t: f64) {
+        if self.reps[ri].current.is_some() {
+            return;
+        }
+        loop {
+            let rep = &mut self.reps[ri];
+            if rep.running.len() + rep.pending_prefill.len() >= self.cfg.max_batch {
+                break;
+            }
+            let Some(&i) = rep.queue.front() else { break };
+            let need = (self.requests[i].prompt + self.requests[i].output) as f64 * self.kv_per_tok;
+            if rep.kv_used + need > self.budget {
+                break;
+            }
+            rep.queue.pop_front();
+            rep.kv_used += need;
+            rep.pending_prefill.push(i);
+            self.state[i].kv_reserved = need;
+            self.state[i].admitted = Some(t);
+        }
+        self.kv_peak = self.kv_peak.max(self.reps[ri].kv_used);
+        let (kind, dt) = if !self.reps[ri].pending_prefill.is_empty() {
+            let members = std::mem::take(&mut self.reps[ri].pending_prefill);
+            let batch = members.len() as f64;
+            let prompt = members.iter().map(|&i| self.requests[i].prompt).max().unwrap() as f64;
+            let pt = self.cfg.point(batch, prompt, prompt);
+            let m = serving::evaluate(&self.cfg.model, &self.cfg.sys, &pt)
+                .expect("split feasibility was checked before the run");
+            (StepKind::Prefill(members), m.ttft)
+        } else if !self.reps[ri].running.is_empty() {
+            let members = self.reps[ri].running.clone();
+            let batch = members.len() as f64;
+            let context = members
+                .iter()
+                .map(|&i| (self.requests[i].prompt + self.state[i].generated) as f64)
+                .sum::<f64>()
+                / batch;
+            let pt = self.cfg.point(batch, 1.0, context);
+            let m = serving::evaluate(&self.cfg.model, &self.cfg.sys, &pt)
+                .expect("split feasibility was checked before the run");
+            (StepKind::Decode(members), m.tpot)
+        } else {
+            return; // replica idles until the next arrival
+        };
+        self.reps[ri].current = Some(kind);
+        self.steps += 1;
+        self.push(t + dt, Event::StepDone(ri));
+    }
+
+    fn finish_request(&mut self, ri: usize, i: usize, t: f64) {
+        self.state[i].finished = Some(t);
+        self.reps[ri].kv_used -= self.state[i].kv_reserved;
+        self.reps[ri].resident -= 1;
+    }
+
+    fn step_done(&mut self, ri: usize, t: f64) {
+        let kind = self.reps[ri].current.take().expect("completion without a step in flight");
+        match kind {
+            StepKind::Prefill(members) => {
+                for i in members {
+                    self.state[i].first_token = Some(t);
+                    self.state[i].generated = 1;
+                    if self.state[i].generated >= self.requests[i].output {
+                        self.finish_request(ri, i, t);
+                    } else {
+                        self.reps[ri].running.push(i);
+                    }
+                }
+            }
+            StepKind::Decode(members) => {
+                let mut still = Vec::with_capacity(members.len());
+                for i in members {
+                    self.state[i].generated += 1;
+                    if self.state[i].generated >= self.requests[i].output {
+                        self.finish_request(ri, i, t);
+                    } else {
+                        still.push(i);
+                    }
+                }
+                self.reps[ri].running = still;
+            }
+        }
+        self.start_step(ri, t);
+    }
+}
+
+/// Simulate `replicas` identical replicas serving `requests` (arrivals join
+/// the least-loaded replica, ties broken by index). Returns `None` when the
+/// configuration is infeasible: TP×PP does not cover the chip group, or the
+/// model weights exceed the group's device memory.
+pub fn simulate(
+    cfg: &ReplicaConfig,
+    replicas: usize,
+    requests: &[Request],
+    slo: &Slo,
+) -> Option<SimReport> {
+    if replicas == 0 {
+        return None;
+    }
+    // probe the oracle once so infeasibility surfaces here, not mid-run
+    serving::evaluate(&cfg.model, &cfg.sys, &cfg.point(1.0, 1.0, 1.0))?;
+    let budget = cfg.kv_budget_bytes()?;
+    let mut sim = Sim {
+        cfg,
+        requests,
+        budget,
+        kv_per_tok: cfg.model.kv_bytes_per_token(),
+        reps: (0..replicas).map(|_| Replica::default()).collect(),
+        state: vec![
+            ReqState {
+                generated: 0,
+                kv_reserved: 0.0,
+                admitted: None,
+                first_token: None,
+                finished: None,
+                rejected: false,
+            };
+            requests.len()
+        ],
+        heap: BinaryHeap::new(),
+        seq: 0,
+        events: 0,
+        steps: 0,
+        kv_peak: 0.0,
+        now: 0.0,
+    };
+    for (i, r) in requests.iter().enumerate() {
+        sim.push(r.arrival, Event::Arrival(i));
+    }
+    while let Some(Entry { t, ev, .. }) = sim.heap.pop() {
+        sim.events += 1;
+        sim.now = t;
+        match ev {
+            Event::Arrival(i) => {
+                let need = (requests[i].prompt + requests[i].output) as f64 * sim.kv_per_tok;
+                if need > sim.budget {
+                    sim.state[i].rejected = true;
+                    continue;
+                }
+                let ri = (0..replicas).min_by_key(|&r| (sim.reps[r].resident, r)).unwrap();
+                sim.reps[ri].resident += 1;
+                sim.reps[ri].queue.push_back(i);
+                sim.start_step(ri, t);
+            }
+            Event::StepDone(ri) => sim.step_done(ri, t),
+        }
+    }
+
+    let mut per = Vec::with_capacity(requests.len());
+    let (mut q, mut tt, mut tp) = (Vec::new(), Vec::new(), Vec::new());
+    let mut good = 0usize;
+    let mut tokens = 0.0;
+    let mut rejected = 0usize;
+    for (i, r) in requests.iter().enumerate() {
+        let s = &sim.state[i];
+        if s.rejected {
+            rejected += 1;
+            continue;
+        }
+        let (Some(first), Some(done), Some(adm)) = (s.first_token, s.finished, s.admitted) else {
+            continue;
+        };
+        let ttft = first - r.arrival;
+        let tpot = if r.output > 1 { (done - first) / (r.output - 1) as f64 } else { 0.0 };
+        q.push(adm - r.arrival);
+        tt.push(ttft);
+        if r.output > 1 {
+            tp.push(tpot);
+        }
+        tokens += r.output as f64;
+        if ttft <= slo.ttft && (r.output <= 1 || tpot <= slo.tpot) {
+            good += 1;
+        }
+        per.push(RequestMetrics {
+            id: r.id,
+            queue_time: adm - r.arrival,
+            ttft,
+            tpot,
+            e2e: done - r.arrival,
+            output: r.output,
+        });
+    }
+    let makespan = sim.now.max(1e-30);
+    Some(SimReport {
+        n_offered: requests.len(),
+        n_completed: per.len(),
+        n_rejected: rejected,
+        makespan,
+        queue: percentiles(&mut q),
+        ttft: percentiles(&mut tt),
+        tpot: percentiles(&mut tp),
+        throughput_rps: per.len() as f64 / makespan,
+        goodput_rps: good as f64 / makespan,
+        slo_attainment: if per.is_empty() { 0.0 } else { good as f64 / per.len() as f64 },
+        output_tokens_per_s: tokens / makespan,
+        kv_peak_frac: sim.kv_peak / budget,
+        events: sim.events,
+        steps: sim.steps,
+        per_request: per,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::workload::TraceSpec;
+    use crate::graph::llama::llama3_8b;
+    use crate::serving::sn40l_x16;
+
+    fn cfg() -> ReplicaConfig {
+        ReplicaConfig::new(llama3_8b(), sn40l_x16(), 16, 1)
+    }
+
+    fn slo() -> Slo {
+        Slo { ttft: 1.0, tpot: 0.02 }
+    }
+
+    #[test]
+    fn all_requests_complete_and_metrics_are_sane() {
+        let requests = TraceSpec::poisson(2, 4.0, 120).generate();
+        let r = simulate(&cfg(), 1, &requests, &slo()).expect("feasible");
+        assert_eq!(r.n_completed, 120);
+        assert_eq!(r.n_rejected, 0);
+        assert!(r.makespan > 0.0);
+        assert!(r.ttft.p50 > 0.0 && r.ttft.p99 >= r.ttft.p50);
+        assert!(r.tpot.p50 > 0.0 && r.tpot.p99 >= r.tpot.p50);
+        assert!(r.kv_peak_frac > 0.0 && r.kv_peak_frac <= 1.0);
+        assert!(r.events >= r.steps);
+        for m in &r.per_request {
+            assert!(m.queue_time >= 0.0 && m.ttft >= m.queue_time && m.e2e >= m.ttft);
+        }
+    }
+
+    #[test]
+    fn more_replicas_cut_latency_under_load() {
+        let requests = TraceSpec::poisson(6, 30.0, 200).generate();
+        let one = simulate(&cfg(), 1, &requests, &slo()).unwrap();
+        let four = simulate(&cfg(), 4, &requests, &slo()).unwrap();
+        assert!(four.ttft.p99 < one.ttft.p99, "{} vs {}", four.ttft.p99, one.ttft.p99);
+        assert!(four.slo_attainment >= one.slo_attainment);
+    }
+
+    #[test]
+    fn infeasible_configs_are_none() {
+        let requests = TraceSpec::poisson(1, 1.0, 10).generate();
+        // split does not cover the group
+        let mut bad = cfg();
+        bad.tp = 4;
+        assert!(simulate(&bad, 1, &requests, &slo()).is_none());
+        // weights alone exceed device memory
+        let mut tiny = cfg();
+        tiny.sys.mem_cap = 1e6;
+        assert!(simulate(&tiny, 1, &requests, &slo()).is_none());
+        // zero replicas
+        assert!(simulate(&cfg(), 0, &requests, &slo()).is_none());
+    }
+
+    #[test]
+    fn oversized_requests_are_rejected_not_stuck() {
+        let mut requests = TraceSpec::poisson(4, 2.0, 20).generate();
+        // a prompt so large its KV reservation alone exceeds the budget
+        requests[5].prompt = 80_000_000;
+        let r = simulate(&cfg(), 1, &requests, &slo()).unwrap();
+        assert_eq!(r.n_rejected, 1);
+        assert_eq!(r.n_completed, 19);
+    }
+
+    #[test]
+    fn percentiles_of_known_samples() {
+        let mut v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let p = percentiles(&mut v);
+        assert_eq!(p.p50, 51.0);
+        assert_eq!(p.p95, 95.0);
+        assert_eq!(p.p99, 99.0);
+        assert!((p.mean - 50.5).abs() < 1e-12);
+        let z = percentiles(&mut []);
+        assert_eq!(z.p99, 0.0);
+    }
+}

@@ -1,0 +1,21 @@
+//! Request-level cluster serving simulation (§VIII-A extended to open-loop
+//! traffic): the analytical serving model predicts steady-state TTFT/TPOT
+//! for one batch; this subsystem wraps it in a deterministic discrete-event
+//! simulator so arrivals, queueing, continuous batching, and KV-cache
+//! pressure are modeled too, and adds an SLO-aware capacity planner.
+//!
+//! * [`workload`] — seeded request generators: Poisson and bursty/diurnal
+//!   arrivals, log-normal prompt/output-length distributions.
+//! * [`engine`] — event-driven replica engine: iteration-level continuous
+//!   batching with prefill/decode interleaving, KV-capacity admission
+//!   control, per-request TTFT/TPOT/queue-time, percentiles and goodput.
+//! * [`planner`] — sweeps (chip platform × TP×PP × replica count) and
+//!   returns the cheapest fleet meeting a target QPS + SLO.
+
+pub mod engine;
+pub mod planner;
+pub mod workload;
+
+pub use engine::{percentiles, simulate, Pcts, ReplicaConfig, RequestMetrics, SimReport, Slo};
+pub use planner::{plan, FleetPlan, PlanResult, PlanTarget, PlanTraffic, Platform};
+pub use workload::{Arrivals, LengthDist, Request, TraceSpec};

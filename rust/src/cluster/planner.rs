@@ -1,0 +1,284 @@
+//! SLO-aware capacity planner: sweep (chip platform × TP×PP split × replica
+//! count) in parallel, simulate each candidate fleet against the target
+//! traffic, and return the cheapest configuration whose goodput meets the
+//! QPS + SLO target — the first coupling of the §VI cost catalog to the
+//! §VIII serving model.
+
+use super::engine::{simulate, ReplicaConfig, SimReport, Slo};
+use super::workload::{Arrivals, LengthDist, Request, TraceSpec};
+use crate::graph::llama::LlamaConfig;
+use crate::serving::{self, ServingSystem};
+use crate::system::{chip, interconnect, memory, ChipSpec, LinkTech, MemoryTech};
+use crate::util::table::Table;
+use crate::util::threadpool::parallel_map;
+use crate::util::units::fmt_time;
+
+/// A serving platform: an accelerator paired with the device memory and
+/// fabric it ships with.
+#[derive(Debug, Clone)]
+pub struct Platform {
+    pub chip: ChipSpec,
+    pub mem: MemoryTech,
+    pub link: LinkTech,
+}
+
+impl Platform {
+    /// One replica: a `group`-chip instance of this platform.
+    pub fn replica(&self, group: usize) -> ServingSystem {
+        ServingSystem {
+            chip: self.chip.clone(),
+            mem_bw: self.mem.bandwidth,
+            mem_cap: self.mem.capacity,
+            link: self.link.clone(),
+            n_chips: group,
+        }
+    }
+}
+
+/// The serving-platform catalog: Table V's DRAM-backed chips plus the §VIII
+/// SN40L (WSE-2 has no device DRAM in this model and is excluded).
+pub fn catalog() -> Vec<Platform> {
+    vec![
+        Platform { chip: chip::h100(), mem: memory::hbm3(), link: interconnect::nvlink4() },
+        Platform { chip: chip::tpu_v4(), mem: memory::hbm3(), link: interconnect::pcie4() },
+        Platform {
+            chip: chip::sn40l(),
+            mem: memory::sn40l_hbm(),
+            link: interconnect::rdu_fabric(),
+        },
+        Platform { chip: chip::sn30(), mem: memory::ddr4(), link: interconnect::pcie4() },
+    ]
+}
+
+/// What the fleet must achieve.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanTarget {
+    /// Offered load, requests/s.
+    pub qps: f64,
+    pub slo: Slo,
+    /// Required fraction of completed requests meeting both SLOs.
+    pub attainment: f64,
+}
+
+/// Traffic shape used for the planning simulations.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanTraffic {
+    pub seed: u64,
+    pub n_requests: usize,
+    pub prompt: LengthDist,
+    pub output: LengthDist,
+}
+
+impl Default for PlanTraffic {
+    fn default() -> Self {
+        PlanTraffic {
+            seed: 17,
+            n_requests: 300,
+            prompt: LengthDist { mean: 1024.0, sigma: 0.4, min: 16, max: 8192 },
+            output: LengthDist { mean: 128.0, sigma: 0.6, min: 2, max: 2048 },
+        }
+    }
+}
+
+/// One evaluated fleet configuration.
+#[derive(Debug, Clone)]
+pub struct FleetPlan {
+    pub platform: String,
+    /// Chips per replica.
+    pub group: usize,
+    pub tp: usize,
+    pub pp: usize,
+    pub replicas: usize,
+    pub chips_total: usize,
+    pub capex_usd: f64,
+    /// 3-year-amortized capex plus electricity at $0.12/kWh.
+    pub usd_per_hour: f64,
+    pub meets_target: bool,
+    pub report: SimReport,
+}
+
+/// Fleet cost: capex (chips + device memory + one ring link per chip in
+/// each replica) and the amortized $/hr.
+pub fn fleet_cost(p: &Platform, group: usize, replicas: usize) -> (f64, f64) {
+    let links = if group > 1 { group } else { 0 } as f64;
+    let replica_capex = p.chip.price_usd * group as f64
+        + p.mem.price_usd() * group as f64
+        + p.link.price_usd * links;
+    let replica_w =
+        p.chip.power_w * group as f64 + p.mem.power_w() * group as f64 + p.link.power_w * links;
+    let capex = replica_capex * replicas as f64;
+    let watts = replica_w * replicas as f64;
+    let usd_per_hour = capex / (3.0 * 365.0 * 24.0) + watts / 1000.0 * 0.12;
+    (capex, usd_per_hour)
+}
+
+/// All (tp, pp) factorizations of a group size.
+pub fn splits(group: usize) -> Vec<(usize, usize)> {
+    (1..=group).filter(|tp| group % tp == 0).map(|tp| (tp, group / tp)).collect()
+}
+
+/// Analytic seed for the replica-count search: full-batch decode tokens/s
+/// divided by the mean output length. It ignores prefill time, so it lower-
+/// bounds the fleet; the simulation loop corrects it upward.
+fn seed_replicas(cfg: &ReplicaConfig, target: &PlanTarget, traffic: &PlanTraffic) -> Option<usize> {
+    let ctx = traffic.prompt.mean + 0.5 * traffic.output.mean;
+    let m = serving::evaluate(
+        &cfg.model,
+        &cfg.sys,
+        &serving::ServingPoint {
+            tp: cfg.tp,
+            pp: cfg.pp,
+            batch: cfg.max_batch as f64,
+            prompt_len: 1.0,
+            context: ctx,
+        },
+    )?;
+    let req_per_s = m.decode_tps / traffic.output.mean;
+    if req_per_s <= 0.0 {
+        return None;
+    }
+    Some(((target.qps / req_per_s).ceil() as usize).max(1))
+}
+
+/// Evaluate one (platform, group, tp, pp): search replica counts upward
+/// from the analytic seed until the simulated fleet meets the target (or
+/// give up and report the last attempt as failing). Growth is ×1.5 per
+/// attempt — the seed underestimates by the prefill share, which is a
+/// bounded factor, so a fixed number of multiplicative steps covers it at
+/// any qps (an additive +1 search would not).
+fn evaluate_candidate(
+    model: &LlamaConfig,
+    p: &Platform,
+    group: usize,
+    tp: usize,
+    pp: usize,
+    target: &PlanTarget,
+    traffic: &PlanTraffic,
+    requests: &[Request],
+) -> Option<FleetPlan> {
+    let cfg = ReplicaConfig::new(*model, p.replica(group), tp, pp);
+    cfg.kv_budget_bytes()?; // weights must fit the group
+    let mut replicas = seed_replicas(&cfg, target, traffic)?;
+    let mut last: Option<(usize, SimReport, bool)> = None;
+    for _ in 0..6 {
+        let report = simulate(&cfg, replicas, requests, &target.slo)?;
+        let ok = report.slo_attainment >= target.attainment
+            && report.n_completed == report.n_offered;
+        last = Some((replicas, report, ok));
+        if ok {
+            break;
+        }
+        replicas = (replicas + replicas / 2).max(replicas + 1);
+    }
+    let (replicas, report, meets_target) = last?;
+    let (capex_usd, usd_per_hour) = fleet_cost(p, group, replicas);
+    Some(FleetPlan {
+        platform: p.chip.name.clone(),
+        group,
+        tp,
+        pp,
+        replicas,
+        chips_total: group * replicas,
+        capex_usd,
+        usd_per_hour,
+        meets_target,
+        report,
+    })
+}
+
+/// The planner's output: every evaluated fleet, cheapest first.
+#[derive(Debug, Clone)]
+pub struct PlanResult {
+    pub candidates: Vec<FleetPlan>,
+    /// Index into `candidates` of the cheapest plan meeting the target.
+    pub best: Option<usize>,
+}
+
+/// Sweep the candidate space (catalog × group sizes × TP×PP splits) with
+/// `util::threadpool::parallel_map` and rank by $/hr.
+pub fn plan(model: &LlamaConfig, target: &PlanTarget, traffic: &PlanTraffic) -> PlanResult {
+    let groups = [4usize, 8, 16];
+    let mut cands: Vec<(Platform, usize, usize, usize)> = Vec::new();
+    for p in catalog() {
+        for &g in &groups {
+            for (tp, pp) in splits(g) {
+                cands.push((p.clone(), g, tp, pp));
+            }
+        }
+    }
+    // one shared trace: every candidate is judged on identical traffic
+    let requests = TraceSpec {
+        seed: traffic.seed,
+        n_requests: traffic.n_requests,
+        arrivals: Arrivals::Poisson { rate: target.qps },
+        prompt: traffic.prompt,
+        output: traffic.output,
+    }
+    .generate();
+    let mut candidates: Vec<FleetPlan> = parallel_map(&cands, |(p, g, tp, pp)| {
+        evaluate_candidate(model, p, *g, *tp, *pp, target, traffic, &requests)
+    })
+    .into_iter()
+    .flatten()
+    .collect();
+    candidates.sort_by(|a, b| {
+        a.usd_per_hour.total_cmp(&b.usd_per_hour).then(a.chips_total.cmp(&b.chips_total))
+    });
+    let best = candidates.iter().position(|c| c.meets_target);
+    PlanResult { candidates, best }
+}
+
+/// Render the ranked fleets (top `limit`) as an ASCII table.
+pub fn render(res: &PlanResult, limit: usize) -> String {
+    let mut t = Table::new(
+        "Capacity plan — cheapest fleets first",
+        &["fleet", "chips", "$/hr", "capex $", "SLO att.", "TTFT p99", "TPOT p99", "meets"],
+    );
+    for (i, c) in res.candidates.iter().take(limit).enumerate() {
+        let marker = if Some(i) == res.best { " <== plan" } else { "" };
+        t.row(&[
+            format!("{}x{} TP{}xPP{} r{}", c.platform, c.group, c.tp, c.pp, c.replicas),
+            format!("{}", c.chips_total),
+            format!("{:.2}", c.usd_per_hour),
+            format!("{:.0}", c.capex_usd),
+            format!("{:.1}%", c.report.slo_attainment * 100.0),
+            fmt_time(c.report.ttft.p99),
+            fmt_time(c.report.tpot.p99),
+            format!("{}{}", if c.meets_target { "yes" } else { "no" }, marker),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splits_factorize_exactly() {
+        assert_eq!(splits(4), vec![(1, 4), (2, 2), (4, 1)]);
+        assert_eq!(splits(16).len(), 5);
+        for (tp, pp) in splits(16) {
+            assert_eq!(tp * pp, 16);
+        }
+    }
+
+    #[test]
+    fn fleet_cost_scales_linearly_in_replicas() {
+        let p = &catalog()[0];
+        let (c1, h1) = fleet_cost(p, 8, 1);
+        let (c3, h3) = fleet_cost(p, 8, 3);
+        assert!((c3 / c1 - 3.0).abs() < 1e-9);
+        assert!((h3 / h1 - 3.0).abs() < 1e-9);
+        assert!(c1 > 8.0 * p.chip.price_usd, "memory and links must add cost");
+    }
+
+    #[test]
+    fn catalog_platforms_build_feasible_replicas() {
+        for p in catalog() {
+            let sys = p.replica(8);
+            assert_eq!(sys.n_chips, 8);
+            assert!(sys.mem_bw > 0.0 && sys.mem_cap > 0.0);
+        }
+    }
+}

@@ -1,0 +1,184 @@
+//! Synthetic request traffic for the cluster simulator: seeded arrival
+//! processes (Poisson and bursty/diurnal via Lewis thinning) and sampled
+//! prompt/output-length distributions, all driven by `util::prng` so every
+//! trace regenerates bit-identically from its seed.
+
+use crate::util::prng::Rng;
+
+/// One inference request in a trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Request {
+    pub id: usize,
+    /// Arrival time, seconds from trace start.
+    pub arrival: f64,
+    /// Prompt length, tokens.
+    pub prompt: usize,
+    /// Output length, tokens (the first token is produced by prefill).
+    pub output: usize,
+}
+
+/// Arrival-process shape.
+#[derive(Debug, Clone, Copy)]
+pub enum Arrivals {
+    /// Memoryless arrivals at a constant rate (requests/s).
+    Poisson { rate: f64 },
+    /// Rate modulated sinusoidally between `base` and `peak` over `period`
+    /// seconds — a compressed diurnal cycle with bursty crests.
+    Bursty { base: f64, peak: f64, period: f64 },
+}
+
+impl Arrivals {
+    /// Instantaneous rate at time `t` (requests/s).
+    pub fn rate_at(&self, t: f64) -> f64 {
+        match *self {
+            Arrivals::Poisson { rate } => rate,
+            Arrivals::Bursty { base, peak, period } => {
+                base + (peak - base) * 0.5 * (1.0 + (2.0 * std::f64::consts::PI * t / period).sin())
+            }
+        }
+    }
+
+    /// Mean rate over a full cycle.
+    pub fn mean_rate(&self) -> f64 {
+        match *self {
+            Arrivals::Poisson { rate } => rate,
+            Arrivals::Bursty { base, peak, .. } => 0.5 * (base + peak),
+        }
+    }
+
+    fn peak_rate(&self) -> f64 {
+        match *self {
+            Arrivals::Poisson { rate } => rate,
+            Arrivals::Bursty { peak, .. } => peak,
+        }
+    }
+
+    /// Next arrival strictly after `t`: inversion for Poisson, Lewis
+    /// thinning against the peak rate for the modulated process.
+    pub fn next_after(&self, mut t: f64, rng: &mut Rng) -> f64 {
+        let lmax = self.peak_rate();
+        assert!(lmax > 0.0, "arrival rate must be positive");
+        loop {
+            t += rng.exp(lmax);
+            if rng.f64() * lmax <= self.rate_at(t) {
+                return t;
+            }
+        }
+    }
+}
+
+/// Token-length distribution: log-normal around `mean` (σ in log space),
+/// rounded and clamped to `[min, max]`.
+#[derive(Debug, Clone, Copy)]
+pub struct LengthDist {
+    pub mean: f64,
+    pub sigma: f64,
+    pub min: usize,
+    pub max: usize,
+}
+
+impl LengthDist {
+    /// Degenerate distribution: every sample is exactly `n` tokens.
+    pub fn fixed(n: usize) -> Self {
+        LengthDist { mean: n as f64, sigma: 0.0, min: n, max: n }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let v = rng.lognormal_mean(self.mean, self.sigma);
+        (v.round() as usize).clamp(self.min.max(1), self.max)
+    }
+}
+
+/// A reproducible synthetic workload: everything needed to regenerate the
+/// same request trace from the seed.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceSpec {
+    pub seed: u64,
+    pub n_requests: usize,
+    pub arrivals: Arrivals,
+    pub prompt: LengthDist,
+    pub output: LengthDist,
+}
+
+impl TraceSpec {
+    /// Chatbot-flavored default: ~1k-token prompts, ~128-token outputs,
+    /// Poisson arrivals at `rate` requests/s.
+    pub fn poisson(seed: u64, rate: f64, n_requests: usize) -> Self {
+        TraceSpec {
+            seed,
+            n_requests,
+            arrivals: Arrivals::Poisson { rate },
+            prompt: LengthDist { mean: 1024.0, sigma: 0.4, min: 16, max: 8192 },
+            output: LengthDist { mean: 128.0, sigma: 0.6, min: 2, max: 2048 },
+        }
+    }
+
+    /// Generate the trace: `n_requests` requests in arrival order.
+    pub fn generate(&self) -> Vec<Request> {
+        let mut rng = Rng::new(self.seed);
+        let mut t = 0.0;
+        let mut out = Vec::with_capacity(self.n_requests);
+        for id in 0..self.n_requests {
+            t = self.arrivals.next_after(t, &mut rng);
+            out.push(Request {
+                id,
+                arrival: t,
+                prompt: self.prompt.sample(&mut rng),
+                output: self.output.sample(&mut rng),
+            });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traces_are_seeded_and_ordered() {
+        let spec = TraceSpec::poisson(9, 4.0, 400);
+        let a = spec.generate();
+        assert_eq!(a, spec.generate(), "same seed must regenerate the trace");
+        assert_ne!(a, TraceSpec::poisson(10, 4.0, 400).generate());
+        for w in a.windows(2) {
+            assert!(w[1].arrival > w[0].arrival, "arrivals must be increasing");
+        }
+    }
+
+    #[test]
+    fn lengths_respect_bounds() {
+        let spec = TraceSpec::poisson(3, 4.0, 2000);
+        for r in spec.generate() {
+            assert!((16..=8192).contains(&r.prompt));
+            assert!((2..=2048).contains(&r.output));
+        }
+        let mut rng = Rng::new(1);
+        assert_eq!(LengthDist::fixed(777).sample(&mut rng), 777);
+    }
+
+    #[test]
+    fn bursty_rate_oscillates_between_base_and_peak() {
+        let a = Arrivals::Bursty { base: 2.0, peak: 10.0, period: 60.0 };
+        for i in 0..600 {
+            let r = a.rate_at(i as f64 * 0.37);
+            assert!((2.0 - 1e-9..=10.0 + 1e-9).contains(&r));
+        }
+        assert!((a.mean_rate() - 6.0).abs() < 1e-12);
+        assert!((a.rate_at(15.0) - 10.0).abs() < 1e-9, "crest at period/4");
+    }
+
+    #[test]
+    fn bursty_thinning_hits_the_mean_rate() {
+        let spec = TraceSpec {
+            seed: 5,
+            n_requests: 3000,
+            arrivals: Arrivals::Bursty { base: 2.0, peak: 10.0, period: 30.0 },
+            prompt: LengthDist::fixed(128),
+            output: LengthDist::fixed(16),
+        };
+        let trace = spec.generate();
+        let rate = trace.len() as f64 / trace.last().unwrap().arrival;
+        assert!((rate / 6.0 - 1.0).abs() < 0.15, "empirical rate {rate:.2} vs mean 6.0");
+    }
+}

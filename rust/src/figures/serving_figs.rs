@@ -21,7 +21,8 @@ pub fn fig20() -> String {
             &model,
             &sys,
             &ServingPoint { tp, pp, batch: 1.0, prompt_len: 1024.0, context: 1024.0 },
-        );
+        )
+        .expect("every Fig. 20 split covers the 16-chip group");
         let (c, mem, net) = m.decode_breakdown;
         let bound = if mem >= net && mem >= c {
             "memory"
@@ -43,7 +44,8 @@ pub fn fig20() -> String {
         &model,
         &sys,
         &ServingPoint { tp: 16, pp: 1, batch: 1.0, prompt_len: 1024.0, context: 1024.0 },
-    );
+    )
+    .expect("TP=16/PP=1 covers the 16-chip group");
     let mut out = t.render();
     out.push_str(&format!(
         "validation: TP=16/PP=1 decode = {:.0} tok/s (paper model 1188, measured 1100; our error vs measured {:.0}%)\n",

@@ -18,6 +18,7 @@
 
 pub mod assign;
 pub mod baselines;
+pub mod cluster;
 pub mod collective;
 pub mod config;
 pub mod dse;

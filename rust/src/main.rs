@@ -6,6 +6,8 @@
 //!   optimize [--chips N ...]      optimize a GPT mapping and print it
 //!   dse --workload llm|dlrm|hpl|fft   run the 80-config sweep
 //!   serve [--tp N --pp N ...]     serving model (Fig. 20 style point)
+//!   simulate [--qps R ...]        request-level cluster serving simulation
+//!   plan --qps R --slo-ttft S --slo-tpot S   SLO-aware capacity planner
 //!   run-pipeline <name>           execute an AOT pipeline via PJRT
 //!   verify                        verify every pipeline against the oracle
 
@@ -23,12 +25,14 @@ fn main() {
         Some("optimize") => cmd_optimize(&args),
         Some("dse") => cmd_dse(&args),
         Some("serve") => cmd_serve(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("plan") => cmd_plan(&args),
         Some("run") => cmd_run(&args),
         Some("run-pipeline") => cmd_run_pipeline(&args),
         Some("verify") => cmd_verify(&args),
         _ => {
             eprintln!(
-                "usage: dfmodel <catalog|figure|optimize|dse|serve|run|run-pipeline|verify> [options]\n\
+                "usage: dfmodel <catalog|figure|optimize|dse|serve|simulate|plan|run|run-pipeline|verify> [options]\n\
                  figures: {}",
                 figures::ALL.join(" ")
             );
@@ -138,22 +142,155 @@ fn cmd_dse(args: &Args) -> i32 {
 
 fn cmd_serve(args: &Args) -> i32 {
     use dfmodel::serving::{evaluate, sn40l_x16, ServingPoint};
-    let m = evaluate(
+    let tp = args.get_usize("tp", 16);
+    let pp = args.get_usize("pp", 1);
+    let sys = sn40l_x16();
+    let Some(m) = evaluate(
         &dfmodel::graph::llama::llama3_8b(),
-        &sn40l_x16(),
+        &sys,
         &ServingPoint {
-            tp: args.get_usize("tp", 16),
-            pp: args.get_usize("pp", 1),
+            tp,
+            pp,
             batch: args.get_f64("batch", 1.0),
             prompt_len: args.get_f64("prompt", 1024.0),
             context: args.get_f64("context", 1024.0),
         },
-    );
+    ) else {
+        eprintln!("infeasible split: tp {tp} x pp {pp} != {} chips", sys.n_chips);
+        return 2;
+    };
     println!("TTFT: {}", dfmodel::util::units::fmt_time(m.ttft));
     println!("prefill: {:.0} tok/s", m.prefill_tps);
     println!("TPOT: {}", dfmodel::util::units::fmt_time(m.tpot));
     println!("decode: {:.0} tok/s", m.decode_tps);
     0
+}
+
+/// Parse `--model 8b|70b|405b` (the Llama-3 serving family).
+fn parse_model(args: &Args, default: &str) -> Result<dfmodel::graph::llama::LlamaConfig, String> {
+    match args.get_or("model", default) {
+        "8b" => Ok(dfmodel::graph::llama::llama3_8b()),
+        "70b" => Ok(dfmodel::graph::llama::llama3_70b()),
+        "405b" => Ok(dfmodel::graph::llama::llama3_405b()),
+        other => Err(format!("unknown model '{other}' (known: 8b 70b 405b)")),
+    }
+}
+
+/// Parse `--qps`: must be a positive, finite request rate.
+fn parse_qps(args: &Args, default: f64) -> Result<f64, String> {
+    let qps = args.get_f64("qps", default);
+    if qps.is_finite() && qps > 0.0 {
+        Ok(qps)
+    } else {
+        Err(format!("--qps must be a positive rate, got {qps}"))
+    }
+}
+
+/// `dfmodel simulate` — request-level cluster serving simulation on SN40L
+/// replicas of `--tp` × `--pp` chips each.
+fn cmd_simulate(args: &Args) -> i32 {
+    use dfmodel::cluster::engine::{simulate, ReplicaConfig, Slo};
+    use dfmodel::cluster::workload::{Arrivals, LengthDist, TraceSpec};
+    let (model, rate) = match (parse_model(args, "8b"), parse_qps(args, 4.0)) {
+        (Ok(m), Ok(q)) => (m, q),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let tp = args.get_usize("tp", 16);
+    let pp = args.get_usize("pp", 1);
+    let mut sys = dfmodel::serving::sn40l_x16();
+    sys.n_chips = tp * pp;
+    let mut cfg = ReplicaConfig::new(model, sys, tp, pp);
+    cfg.max_batch = args.get_usize("max-batch", 32);
+    let replicas = args.get_usize("replicas", 1);
+    let arrivals = match args.get_or("arrivals", "poisson") {
+        "poisson" => Arrivals::Poisson { rate },
+        "bursty" => Arrivals::Bursty {
+            base: rate * 0.25,
+            peak: rate * 1.75,
+            period: args.get_f64("period", 60.0),
+        },
+        other => {
+            eprintln!("unknown arrival process '{other}' (known: poisson bursty)");
+            return 2;
+        }
+    };
+    let spec = TraceSpec {
+        seed: args.get_usize("seed", 17) as u64,
+        n_requests: args.get_usize("requests", 200),
+        arrivals,
+        prompt: LengthDist { mean: args.get_f64("prompt", 1024.0), sigma: 0.4, min: 16, max: 8192 },
+        output: LengthDist { mean: args.get_f64("output", 128.0), sigma: 0.6, min: 2, max: 2048 },
+    };
+    let slo = Slo { ttft: args.get_f64("slo-ttft", 1.0), tpot: args.get_f64("slo-tpot", 0.02) };
+    println!(
+        "simulating {} requests @ {rate} rps on {replicas} replica(s) of {} x{} (TP{tp}xPP{pp})",
+        spec.n_requests, cfg.sys.chip.name, cfg.sys.n_chips
+    );
+    match simulate(&cfg, replicas, &spec.generate(), &slo) {
+        Some(r) => {
+            print!("{}", r.render());
+            0
+        }
+        None => {
+            eprintln!("infeasible configuration (tp*pp != chips, or weights exceed device memory)");
+            1
+        }
+    }
+}
+
+/// `dfmodel plan` — cheapest fleet meeting a QPS + SLO target.
+fn cmd_plan(args: &Args) -> i32 {
+    use dfmodel::cluster::engine::Slo;
+    use dfmodel::cluster::planner::{plan, render, PlanTarget, PlanTraffic};
+    let (model, qps) = match (parse_model(args, "70b"), parse_qps(args, 2.0)) {
+        (Ok(m), Ok(q)) => (m, q),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let target = PlanTarget {
+        qps,
+        slo: Slo { ttft: args.get_f64("slo-ttft", 2.0), tpot: args.get_f64("slo-tpot", 0.05) },
+        attainment: args.get_f64("attainment", 0.9),
+    };
+    let traffic = PlanTraffic {
+        seed: args.get_usize("seed", 17) as u64,
+        n_requests: args.get_usize("requests", 300),
+        ..Default::default()
+    };
+    let res = plan(&model, &target, &traffic);
+    print!("{}", render(&res, args.get_usize("top", 12)));
+    match res.best {
+        Some(i) => {
+            let c = &res.candidates[i];
+            println!(
+                "plan: {} x{} per replica, TP{}xPP{}, {} replica(s) = {} chips, ${:.2}/hr (capex ${:.0})",
+                c.platform,
+                c.group,
+                c.tp,
+                c.pp,
+                c.replicas,
+                c.chips_total,
+                c.usd_per_hour,
+                c.capex_usd
+            );
+            0
+        }
+        None => {
+            eprintln!(
+                "no fleet in the catalog meets {} rps at TTFT<={}s / TPOT<={}s ({}% attainment)",
+                target.qps,
+                target.slo.ttft,
+                target.slo.tpot,
+                target.attainment * 100.0
+            );
+            1
+        }
+    }
 }
 
 /// `dfmodel run --config exp.json` — declarative experiment launcher.

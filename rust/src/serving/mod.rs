@@ -18,16 +18,29 @@ pub struct ServingSystem {
     pub chip: ChipSpec,
     /// Device-memory bandwidth the decode path streams from (bytes/s).
     pub mem_bw: f64,
+    /// Device-memory capacity per chip (bytes) — bounds resident weights
+    /// plus KV cache for the cluster simulator's admission control.
+    pub mem_cap: f64,
     pub link: LinkTech,
     pub n_chips: usize,
 }
 
+impl ServingSystem {
+    /// Total device memory across the chip group.
+    pub fn mem_total(&self) -> f64 {
+        self.mem_cap * self.n_chips as f64
+    }
+}
+
 /// The §VIII-A platform: 16 SN40L, 25 GB/s fabric, 150 ns latency,
-/// HBM-class 1.6 TB/s device memory.
+/// HBM-class 1.6 TB/s / 64 GB device memory per chip
+/// (`system::memory::sn40l_hbm`).
 pub fn sn40l_x16() -> ServingSystem {
+    let hbm = crate::system::memory::sn40l_hbm();
     ServingSystem {
         chip: crate::system::chip::sn40l(),
-        mem_bw: 1.6e12,
+        mem_bw: hbm.bandwidth,
+        mem_cap: hbm.capacity,
         link: crate::system::interconnect::rdu_fabric(),
         n_chips: 16,
     }
@@ -61,9 +74,17 @@ pub struct ServingMetrics {
 /// Dataflow-chip achievable efficiency on the prefill GEMMs.
 const PREFILL_EFF: f64 = 0.8;
 
-/// Evaluate one (model, platform, TP×PP) serving point.
-pub fn evaluate(model: &LlamaConfig, sys: &ServingSystem, pt: &ServingPoint) -> ServingMetrics {
-    assert_eq!(pt.tp * pt.pp, sys.n_chips, "tp*pp must equal the chip count");
+/// Evaluate one (model, platform, TP×PP) serving point. Returns `None`
+/// when the split does not cover the chip group (tp·pp ≠ n_chips), so
+/// sweeps and the cluster planner can skip infeasible points.
+pub fn evaluate(
+    model: &LlamaConfig,
+    sys: &ServingSystem,
+    pt: &ServingPoint,
+) -> Option<ServingMetrics> {
+    if pt.tp == 0 || pt.pp == 0 || pt.tp * pt.pp != sys.n_chips {
+        return None;
+    }
     let tp = pt.tp as f64;
     let pp = pt.pp as f64;
     let layers = model.layers as f64;
@@ -120,14 +141,14 @@ pub fn evaluate(model: &LlamaConfig, sys: &ServingSystem, pt: &ServingPoint) -> 
         let t = (a + b + c).max(1e-30);
         (a / t, b / t, c / t)
     };
-    ServingMetrics {
+    Some(ServingMetrics {
         ttft,
         prefill_tps,
         tpot,
         decode_tps,
         prefill_breakdown: nz(t_comp, t_mem, t_net),
         decode_breakdown: nz(t_comp_stage, t_mem_stage, t_net_stage / layers_per_stage.max(1.0)),
-    }
+    })
 }
 
 #[cfg(test)]
@@ -144,7 +165,7 @@ mod tests {
         // §VIII-A: modeled 1188 tok/s vs measured 1100 tok/s for Llama3 8B
         // decode on 16 SN40L at TP=16/PP=1 — our model must land in that
         // band (within 15% of the measurement).
-        let m = evaluate(&llama3_8b(), &sn40l_x16(), &base_pt());
+        let m = evaluate(&llama3_8b(), &sn40l_x16(), &base_pt()).unwrap();
         let err = (m.decode_tps - 1100.0).abs() / 1100.0;
         assert!(err < 0.15, "decode_tps = {:.0}, err = {err:.2}", m.decode_tps);
     }
@@ -155,10 +176,21 @@ mod tests {
         // throughput at the cost of latency.
         let model = llama3_8b();
         let sys = sn40l_x16();
-        let tp16 = evaluate(&model, &sys, &base_pt());
-        let tp4pp4 = evaluate(&model, &sys, &ServingPoint { tp: 4, pp: 4, ..base_pt() });
+        let tp16 = evaluate(&model, &sys, &base_pt()).unwrap();
+        let tp4pp4 = evaluate(&model, &sys, &ServingPoint { tp: 4, pp: 4, ..base_pt() }).unwrap();
         assert!(tp16.tpot < tp4pp4.tpot);
         assert!(tp4pp4.decode_tps > tp16.decode_tps);
+    }
+
+    #[test]
+    fn mismatched_split_is_none() {
+        let sys = sn40l_x16();
+        for (tp, pp) in [(3, 2), (16, 16), (0, 16), (5, 3)] {
+            assert!(
+                evaluate(&llama3_8b(), &sys, &ServingPoint { tp, pp, ..base_pt() }).is_none(),
+                "tp={tp} pp={pp} should be infeasible on 16 chips"
+            );
+        }
     }
 
     #[test]
@@ -170,17 +202,17 @@ mod tests {
         let model = llama3_8b();
         let mut sys = sn40l_x16();
         sys.link = crate::system::interconnect::nvlink4();
-        let tp16 = evaluate(&model, &sys, &base_pt());
-        let tp4pp4 = evaluate(&model, &sys, &ServingPoint { tp: 4, pp: 4, ..base_pt() });
+        let tp16 = evaluate(&model, &sys, &base_pt()).unwrap();
+        let tp4pp4 = evaluate(&model, &sys, &ServingPoint { tp: 4, pp: 4, ..base_pt() }).unwrap();
         assert!(tp16.ttft < tp4pp4.ttft, "{} vs {}", tp16.ttft, tp4pp4.ttft);
         let slow = sn40l_x16();
-        let (_, _, net) = evaluate(&model, &slow, &base_pt()).prefill_breakdown;
+        let (_, _, net) = evaluate(&model, &slow, &base_pt()).unwrap().prefill_breakdown;
         assert!(net > 0.5, "slow-fabric prefill should be network-bound");
     }
 
     #[test]
     fn decode_is_memory_or_network_bound() {
-        let m = evaluate(&llama3_8b(), &sn40l_x16(), &base_pt());
+        let m = evaluate(&llama3_8b(), &sn40l_x16(), &base_pt()).unwrap();
         let (c, mem, net) = m.decode_breakdown;
         assert!(mem + net > c, "decode must not be compute-bound");
     }
@@ -188,15 +220,15 @@ mod tests {
     #[test]
     fn prefill_is_compute_heavy_at_long_prompts() {
         let pt = ServingPoint { prompt_len: 8192.0, batch: 8.0, ..base_pt() };
-        let m = evaluate(&llama3_8b(), &sn40l_x16(), &pt);
+        let m = evaluate(&llama3_8b(), &sn40l_x16(), &pt).unwrap();
         let (c, mem, _net) = m.prefill_breakdown;
         assert!(c > mem, "prefill at long prompts should be compute-heavy");
     }
 
     #[test]
     fn bigger_model_slower() {
-        let small = evaluate(&llama3_8b(), &sn40l_x16(), &base_pt());
-        let big = evaluate(&llama3_70b(), &sn40l_x16(), &base_pt());
+        let small = evaluate(&llama3_8b(), &sn40l_x16(), &base_pt()).unwrap();
+        let big = evaluate(&llama3_70b(), &sn40l_x16(), &base_pt()).unwrap();
         assert!(big.tpot > small.tpot);
         assert!(big.ttft > small.ttft);
     }

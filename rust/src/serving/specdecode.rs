@@ -54,8 +54,8 @@ pub fn throughput(
         prompt_len: 1024.0,
         context: 2048.0,
     };
-    let tpot_draft = evaluate(draft, sys, &sp).tpot;
-    let tpot_target = evaluate(target, sys, &sp).tpot;
+    let tpot_draft = evaluate(draft, sys, &sp).expect("tp = n_chips is always feasible").tpot;
+    let tpot_target = evaluate(target, sys, &sp).expect("tp = n_chips is always feasible").tpot;
 
     match pt.scheme {
         Scheme::Sequence => {
@@ -101,7 +101,7 @@ mod tests {
         let target = llama3_405b();
         let vanilla = {
             let sp = ServingPoint { tp: 16, pp: 1, batch: 1.0, prompt_len: 1024.0, context: 2048.0 };
-            1.0 / evaluate(&target, &sys, &sp).tpot
+            1.0 / evaluate(&target, &sys, &sp).unwrap().tpot
         };
         let spec = throughput(
             &llama3_8b(),

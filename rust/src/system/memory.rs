@@ -51,6 +51,19 @@ pub fn hbm3() -> MemoryTech {
     }
 }
 
+/// SN40L's fast device-memory tier (§VIII-A): 1.6 TB/s, 64 GB per chip.
+/// Single source for both the serving platform (`serving::sn40l_x16`) and
+/// the cluster planner's catalog, so the two layers cannot drift.
+pub fn sn40l_hbm() -> MemoryTech {
+    MemoryTech {
+        name: "HBM-SN40L".into(),
+        bandwidth: 1.6 * TB,
+        capacity: 64.0 * GB,
+        price_per_gb: 15.0,
+        power_per_gb: 3.5,
+    }
+}
+
 // ---- §VIII-C 3-D memory study (SN40L with three memory generations) ----
 
 /// 2-D DDR: 100 GB/s.

@@ -77,6 +77,21 @@ impl Rng {
         let u2 = self.f64();
         (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
     }
+
+    /// Exponential with rate `lambda` (mean 1/λ) via inversion — the
+    /// inter-arrival distribution of the cluster workload generators.
+    pub fn exp(&mut self, lambda: f64) -> f64 {
+        assert!(lambda > 0.0, "Rng::exp needs a positive rate");
+        -(1.0 - self.f64()).ln() / lambda
+    }
+
+    /// Log-normal with expectation `mean` and log-space standard deviation
+    /// `sigma`: exp(μ + σZ) with μ = ln(mean) − σ²/2 so E[X] = mean.
+    pub fn lognormal_mean(&mut self, mean: f64, sigma: f64) -> f64 {
+        assert!(mean > 0.0, "Rng::lognormal_mean needs a positive mean");
+        let mu = mean.ln() - 0.5 * sigma * sigma;
+        (mu + sigma * self.normal()).exp()
+    }
 }
 
 #[cfg(test)]
@@ -142,6 +157,27 @@ mod tests {
         let mut sorted = v.clone();
         sorted.sort_unstable();
         assert_eq!(sorted, (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn exp_mean_matches_rate() {
+        let mut r = Rng::new(13);
+        let n = 20_000;
+        for lambda in [0.5, 4.0] {
+            let mean = (0..n).map(|_| r.exp(lambda)).sum::<f64>() / n as f64;
+            assert!((mean * lambda - 1.0).abs() < 0.05, "lambda={lambda} mean={mean}");
+        }
+        assert!((0..1000).all(|_| r.exp(2.0) >= 0.0));
+    }
+
+    #[test]
+    fn lognormal_hits_requested_mean() {
+        let mut r = Rng::new(21);
+        let n = 40_000;
+        let mean = (0..n).map(|_| r.lognormal_mean(1024.0, 0.4)).sum::<f64>() / n as f64;
+        assert!((mean / 1024.0 - 1.0).abs() < 0.05, "mean={mean}");
+        // sigma = 0 degenerates to the point mass
+        assert!((r.lognormal_mean(128.0, 0.0) - 128.0).abs() < 1e-9);
     }
 
     #[test]

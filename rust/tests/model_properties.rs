@@ -36,6 +36,28 @@ fn collective_time_monotone_in_bytes() {
 }
 
 #[test]
+fn collective_time_nonnegative_free_singletons_and_ar_dominates_ag() {
+    // three invariants across every (collective, dim kind): times are
+    // non-negative and finite, a singleton dim is free, and all-reduce
+    // costs at least an all-gather of the same buffer (it moves strictly
+    // more data: reduce-scatter + all-gather).
+    check("coll-nonneg-ar-ge-ag", 120, |rng| {
+        let kind = *rng.choice(&KINDS);
+        let coll = *rng.choice(&COLLS);
+        let s = rng.uniform(1.0, 1e10);
+        let single = Dim::new(kind, 1, &nvlink4());
+        assert_eq!(time(coll, s, &single), 0.0, "{coll:?} {kind:?} singleton not free");
+        let k = 2 + rng.below(127);
+        let dim = Dim::new(kind, k, &nvlink4());
+        let t = time(coll, s, &dim);
+        assert!(t.is_finite() && t >= 0.0, "{coll:?} {kind:?} k={k}: t={t}");
+        let ar = time(Collective::AllReduce, s, &dim);
+        let ag = time(Collective::AllGather, s, &dim);
+        assert!(ar >= ag - 1e-15, "{kind:?} k={k}: all-reduce {ar} < all-gather {ag}");
+    });
+}
+
+#[test]
 fn collective_time_monotone_in_bandwidth() {
     check("coll-monotone-bw", 100, |rng| {
         let kind = *rng.choice(&KINDS);
@@ -114,7 +136,7 @@ fn serving_metrics_sane_across_grid() {
             prompt_len: 128.0 * (1 + rng.below(32)) as f64,
             context: 128.0 * (1 + rng.below(32)) as f64,
         };
-        let m = evaluate(&model, &sys, &pt);
+        let m = evaluate(&model, &sys, &pt).expect("every grid split covers the group");
         assert!(m.ttft > 0.0 && m.ttft.is_finite());
         assert!(m.tpot > 0.0 && m.tpot.is_finite());
         assert!(m.prefill_tps > 0.0 && m.decode_tps > 0.0);
@@ -124,9 +146,22 @@ fn serving_metrics_sane_across_grid() {
             assert!(a >= 0.0 && b >= 0.0 && c >= 0.0);
         }
         // more batch -> more decode throughput (memory-bound weights amortize)
-        let big = evaluate(&model, &sys, &ServingPoint { batch: pt.batch * 4.0, ..pt });
+        let big = evaluate(&model, &sys, &ServingPoint { batch: pt.batch * 4.0, ..pt })
+            .expect("same split, still feasible");
         assert!(big.decode_tps >= m.decode_tps * 0.999);
     });
+}
+
+#[test]
+fn serving_rejects_mismatched_splits() {
+    let sys = sn40l_x16();
+    for (tp, pp) in [(3, 2), (16, 16), (0, 4), (5, 3)] {
+        let pt = ServingPoint { tp, pp, batch: 1.0, prompt_len: 128.0, context: 128.0 };
+        assert!(
+            evaluate(&llama3_8b(), &sys, &pt).is_none(),
+            "tp={tp} pp={pp} must be rejected on a 16-chip group"
+        );
+    }
 }
 
 #[test]
