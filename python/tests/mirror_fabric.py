@@ -1,0 +1,790 @@
+#!/usr/bin/env python3
+"""Python mirror of rust/src/fabric/ — the validation harness the Rust
+subsystem's numerics were developed against (run directly: `python3
+mirror_fabric.py`; it is not a pytest module).
+
+Defines the same semantics (graph expansion, routing, schedules, packetized
+event loop) as the Rust implementation, and validates the numeric
+acceptance criteria:
+  1. ring-algorithm on ring dims == analytical formula (near-exact)
+  2. best-algo on contention-free FC/switch dims within 15% of analytical
+  3. select flips algorithms between latency-bound and bandwidth-bound payloads
+  4. DGX-1 hybrid cube-mesh quantifiably slower than the fully-connected shortcut
+  5. hierarchical (BlueConnect) on a torus matches time_hier
+"""
+import heapq
+import math
+from itertools import product
+
+GB = 1e9
+NS = 1e-9
+
+# ---- link techs ----
+NVLINK4 = dict(bw=900.0 * GB, lat=150.0 * NS)
+PCIE4 = dict(bw=25.0 * GB, lat=500.0 * NS)
+
+RING, FC, SWITCH = "ring", "fc", "switch"
+
+
+class Dim:
+    def __init__(self, kind, size, link, cubemesh=False):
+        self.kind = kind
+        self.size = size
+        self.bw = link["bw"]
+        self.lat = link["lat"]
+        self.cubemesh = cubemesh
+
+
+def torus2d(x, y, link):
+    return [Dim(RING, x, link), Dim(RING, y, link)]
+
+
+def torus3d(x, y, z, link):
+    return [Dim(RING, x, link), Dim(RING, y, link), Dim(RING, z, link)]
+
+
+def dragonfly(g, n, link):
+    return [Dim(FC, g, link), Dim(FC, n, link)]
+
+
+def dgx1(n, link):
+    return [Dim(FC, 8, link, cubemesh=True), Dim(SWITCH, n, link)]
+
+
+def dgx2(n, link):
+    return [Dim(SWITCH, 16, link), Dim(SWITCH, n, link)]
+
+
+def ring_topo(n, link):
+    return [Dim(RING, n, link)]
+
+
+# ---- analytical model (mirror of collective/mod.rs) ----
+AR, AG, RS_, A2A, BC, P2P = "AllReduce", "AllGather", "ReduceScatter", "AllToAll", "Broadcast", "P2P"
+
+
+def a_time(coll, bytes_, dim):
+    k = float(dim.size)
+    if dim.size <= 1 or bytes_ <= 0:
+        return 0.0
+    b, a = dim.bw, dim.lat
+    frac = (k - 1.0) / k
+    if dim.kind == RING:
+        return {
+            AR: 2 * frac * bytes_ / b + 2 * (k - 1) * a,
+            AG: frac * bytes_ / b + (k - 1) * a,
+            RS_: frac * bytes_ / b + (k - 1) * a,
+            BC: frac * bytes_ / b + (k - 1) * a,
+            A2A: bytes_ * k / (4 * b) + (k - 1) * a,
+            P2P: bytes_ / b + a,
+        }[coll]
+    if dim.kind == FC:
+        return {
+            AR: 2 * bytes_ / (k * b) + 2 * a,
+            AG: bytes_ / (k * b) + a,
+            RS_: bytes_ / (k * b) + a,
+            BC: 2 * bytes_ / (k * b) + 2 * a,
+            A2A: bytes_ / (k * b) + a,
+            P2P: bytes_ / b + a,
+        }[coll]
+    return {
+        AR: 2 * frac * bytes_ / b + 2 * a,
+        AG: frac * bytes_ / b + a,
+        RS_: frac * bytes_ / b + a,
+        BC: bytes_ / b + a,
+        A2A: frac * bytes_ / b + a,
+        P2P: bytes_ / b + 2 * a,
+    }[coll]
+
+
+def a_time_hier(coll, bytes_, dims):
+    active = [d for d in dims if d.size > 1]
+    if not active or bytes_ <= 0:
+        return 0.0
+    if coll == AR:
+        t, payload = 0.0, bytes_
+        for d in active:
+            t += a_time(RS_, payload, d)
+            payload /= d.size
+        for d in reversed(active):
+            payload *= d.size
+            t += a_time(AG, payload, d)
+        return t
+    if coll == RS_:
+        t, payload = 0.0, bytes_
+        for d in active:
+            t += a_time(RS_, payload, d)
+            payload /= d.size
+        return t
+    if coll == AG:
+        total = math.prod(d.size for d in active)
+        payload, t = bytes_ / total, 0.0
+        for d in reversed(active):
+            payload *= d.size
+            t += a_time(AG, payload, d)
+        return t
+    if coll in (BC, A2A):
+        return sum(a_time(coll, bytes_, d) for d in active)
+    return max(a_time(P2P, bytes_, d) for d in active)
+
+
+# ---- fabric graph ----
+CUBE_EDGES = [(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3),
+              (4, 5), (4, 6), (4, 7), (5, 6), (5, 7), (6, 7),
+              (0, 4), (1, 5), (2, 6), (3, 7)]
+CUBE_RING = [0, 1, 2, 3, 7, 6, 5, 4]
+
+
+def cube_next():
+    """next-hop table within the 8-node cube-mesh, BFS lowest-id tie-break."""
+    adj = {i: [] for i in range(8)}
+    for a, b in CUBE_EDGES:
+        adj[a].append(b)
+        adj[b].append(a)
+    for i in adj:
+        adj[i].sort()
+    nxt = [[0] * 8 for _ in range(8)]
+    for dst in range(8):
+        dist = {dst: 0}
+        q = [dst]
+        while q:
+            u = q.pop(0)
+            for v in adj[u]:
+                if v not in dist:
+                    dist[v] = dist[u] + 1
+                    q.append(v)
+        for u in range(8):
+            if u == dst:
+                nxt[u][dst] = u
+            else:
+                nxt[u][dst] = min(v for v in adj[u] if dist[v] == dist[u] - 1)
+    return nxt
+
+
+CUBE_NEXT = cube_next()
+
+
+class Graph:
+    def __init__(self, dims):
+        self.dims = dims
+        self.sizes = [d.size for d in dims]
+        self.strides = []
+        s = 1
+        for d in dims:
+            self.strides.append(s)
+            s *= d.size
+        self.n_chips = s
+        self.links = []   # (src, dst, bw, lat)
+        self.adj = {}
+        self.link_ix = {}
+        self.switch_base = [None] * len(dims)
+        n_nodes = self.n_chips
+        for di, d in enumerate(dims):
+            if d.kind == SWITCH and d.size > 1:
+                self.switch_base[di] = n_nodes
+                n_nodes += self.n_chips // d.size
+        self.n_nodes = n_nodes
+        for di, d in enumerate(dims):
+            if d.size <= 1:
+                continue
+            for line in self.lines(di):
+                if d.cubemesh:
+                    assert d.size == 8
+                    for a, b in CUBE_EDGES:
+                        self.add_link(line[a], line[b], d)
+                        self.add_link(line[b], line[a], d)
+                elif d.kind == RING:
+                    k = d.size
+                    for c in range(k):
+                        self.add_link(line[c], line[(c + 1) % k], d)
+                        if k > 2:
+                            self.add_link(line[c], line[(c - 1) % k], d)
+                elif d.kind == FC:
+                    for a in range(d.size):
+                        for b in range(d.size):
+                            if a != b:
+                                self.add_link(line[a], line[b], d)
+                else:  # SWITCH
+                    sw = self.switch_node(di, line[0])
+                    for c in line:
+                        self.add_link(c, sw, d)
+                        self.add_link(sw, c, d)
+
+    def add_link(self, a, b, d):
+        ix = len(self.links)
+        self.links.append((a, b, d.bw, d.lat))
+        self.adj.setdefault(a, []).append(ix)
+        self.link_ix[(a, b)] = ix
+
+    def coords(self, chip):
+        return [(chip // self.strides[i]) % self.sizes[i] for i in range(len(self.dims))]
+
+    def chip_at(self, coords):
+        return sum(c * s for c, s in zip(coords, self.strides))
+
+    def lines(self, di):
+        """all maximal lines along dim di (lists of chip ids, coord order)."""
+        others = [range(self.sizes[i]) if i != di else [0] for i in range(len(self.dims))]
+        out = []
+        for combo in product(*others):
+            base = list(combo)
+            line = []
+            for c in range(self.sizes[di]):
+                base[di] = c
+                line.append(self.chip_at(base))
+            out.append(line)
+        return out
+
+    def switch_node(self, di, chip):
+        co = self.coords(chip)
+        stride, size = self.strides[di], self.sizes[di]
+        cid = chip - co[di] * stride
+        rank = (cid // (stride * size)) * stride + cid % stride
+        return self.switch_base[di] + rank
+
+    def dim_order_path(self, src, dst):
+        path = []
+        cur = self.coords(src)
+        node = src
+        dstc = self.coords(dst)
+        for di, d in enumerate(self.dims):
+            while cur[di] != dstc[di]:
+                if d.cubemesh:
+                    nxt = CUBE_NEXT[cur[di]][dstc[di]]
+                elif d.kind == RING:
+                    k = d.size
+                    fwd = (dstc[di] - cur[di]) % k
+                    bwd = (cur[di] - dstc[di]) % k
+                    nxt = (cur[di] + 1) % k if fwd <= bwd else (cur[di] - 1) % k
+                elif d.kind == FC:
+                    nxt = dstc[di]
+                else:  # SWITCH: two links via crossbar
+                    nn = node + (dstc[di] - cur[di]) * self.strides[di]
+                    sw = self.switch_node(di, node)
+                    path.append(self.link_ix[(node, sw)])
+                    path.append(self.link_ix[(sw, nn)])
+                    node = nn
+                    cur[di] = dstc[di]
+                    continue
+                nn = node + (nxt - cur[di]) * self.strides[di]
+                path.append(self.link_ix[(node, nn)])
+                node = nn
+                cur[di] = nxt
+        return path
+
+
+# ---- schedules ----
+class Builder:
+    def __init__(self):
+        self.msgs = []  # (src, dst, bytes, deps)
+
+    def send(self, src, dst, nbytes, deps):
+        self.msgs.append((src, dst, nbytes, list(deps)))
+        return len(self.msgs) - 1
+
+
+def snake_order(g, group):
+    gset = sorted(group)
+    vdims = varying_dims(g, gset)
+
+    def key(chip):
+        co = g.coords(chip)
+        k, flip = 0, False
+        for di in reversed(vdims):
+            c = (g.sizes[di] - 1 - co[di]) if flip else co[di]
+            k = k * g.sizes[di] + c
+            flip ^= (co[di] % 2 == 1)
+        return k
+
+    return sorted(gset, key=key)
+
+
+def varying_dims(g, group):
+    base = g.coords(group[0])
+    vd = set()
+    for chip in group[1:]:
+        for di, c in enumerate(g.coords(chip)):
+            if c != base[di]:
+                vd.add(di)
+    return sorted(vd)
+
+
+def ring_rs(b, ring, S, init):
+    k = len(ring)
+    if k < 2 or S <= 0:
+        return {c: list(init.get(c, [])) for c in ring}
+    chunk = S / k
+    prev = {}
+    for s in range(k - 1):
+        cur = {}
+        for i in range(k):
+            deps = init.get(ring[i], []) if s == 0 else [prev[(i - 1) % k]]
+            cur[i] = b.send(ring[i], ring[(i + 1) % k], chunk, deps)
+        prev = cur
+    return {ring[i]: [prev[(i - 1) % k]] for i in range(k)}
+
+
+ring_ag = ring_rs  # identical message structure / cost
+
+
+def direct_rs(b, group, S, init):
+    k = len(group)
+    if k < 2 or S <= 0:
+        return {c: list(init.get(c, [])) for c in group}
+    chunk = S / k
+    finals = {c: [] for c in group}
+    for i in range(k):
+        for s in range(1, k):  # staggered: distinct receive slot per sender
+            j = (i + s) % k
+            m = b.send(group[i], group[j], chunk, init.get(group[i], []))
+            finals[group[j]].append(m)
+    return finals
+
+
+direct_ag = direct_rs
+
+
+def hd_rs(b, group, S, init):
+    k = len(group)
+    if k < 2 or S <= 0:
+        return {c: list(init.get(c, [])) for c in group}
+    assert k & (k - 1) == 0
+    recv = {c: init.get(c, []) for c in group}
+    d = k // 2
+    while d >= 1:
+        nxt = {}
+        for i in range(k):
+            p = i ^ d
+            m = b.send(group[i], group[p], S * d / k, recv[group[i]])
+            nxt.setdefault(group[p], []).append(m)
+        recv = nxt
+        d //= 2
+    return recv
+
+
+def hd_ag(b, group, S, init):
+    k = len(group)
+    if k < 2 or S <= 0:
+        return {c: list(init.get(c, [])) for c in group}
+    assert k & (k - 1) == 0
+    recv = {c: init.get(c, []) for c in group}
+    d = 1
+    while d < k:
+        nxt = {}
+        for i in range(k):
+            p = i ^ d
+            m = b.send(group[i], group[p], S * d / k, recv[group[i]])
+            nxt.setdefault(group[p], []).append(m)
+        recv = nxt
+        d *= 2
+    return recv
+
+
+def shift_a2a(b, group, S, init):
+    k = len(group)
+    if k < 2 or S <= 0:
+        return {c: list(init.get(c, [])) for c in group}
+    chunk = S / k
+    recv = {c: init.get(c, []) for c in group}
+    for r in range(1, k):
+        nxt = {}
+        for i in range(k):
+            m = b.send(group[i], group[(i + r) % k], chunk, recv[group[i]])
+            nxt.setdefault(group[(i + r) % k], []).append(m)
+        recv = nxt
+    return recv
+
+
+def direct_a2a(b, group, S, init):
+    return direct_rs(b, group, S, init)
+
+
+def chain_bcast(b, ring, S, init):
+    k = len(ring)
+    if k < 2 or S <= 0:
+        return {c: list(init.get(c, [])) for c in ring}
+    m = max(16, min(512, 8 * k, math.ceil(S / 4096)))
+    chunk = S / m
+    finals = {c: [] for c in ring}
+    prev_hop = {}
+    for c in range(m):
+        for h in range(k - 1):
+            deps = list(init.get(ring[0], [])) if h == 0 else [prev_hop[h - 1]]
+            mid = b.send(ring[h], ring[h + 1], chunk, deps)
+            prev_hop[h] = mid
+            if c == m - 1:
+                finals[ring[h + 1]] = [mid]
+    return finals
+
+
+def scatter_ag_bcast(b, group, S, init):
+    k = len(group)
+    if k < 2 or S <= 0:
+        return {c: list(init.get(c, [])) for c in group}
+    chunk = S / k
+    got = {}
+    for j in range(1, k):
+        got[group[j]] = [b.send(group[0], group[j], chunk, init.get(group[0], []))]
+    got[group[0]] = list(init.get(group[0], []))
+    return direct_ag(b, group, S, got)
+
+
+def tree_bcast(b, group, S, init):
+    k = len(group)
+    if k < 2 or S <= 0:
+        return {c: list(init.get(c, [])) for c in group}
+    assert k & (k - 1) == 0
+    got = {group[0]: list(init.get(group[0], []))}
+    t = 1
+    while t < k:
+        for i in range(t):
+            m = b.send(group[i], group[i + t], S, got[group[i]])
+            got[group[i + t]] = [m]
+        t *= 2
+    finals = dict(got)
+    finals[group[0]] = list(init.get(group[0], []))
+    return finals
+
+
+def sub_order(g, line, di):
+    d = g.dims[di]
+    if d.cubemesh:
+        return [line[i] for i in CUBE_RING]
+    return line
+
+
+def hier_schedule(b, g, coll, group, S):
+    vdims = varying_dims(g, group)
+    if not vdims:
+        return
+    part = {}  # per-chip pending deps
+
+    def lines_of(gr, di):
+        by = {}
+        for c in gr:
+            co = g.coords(c)
+            keyc = tuple(x for i, x in enumerate(co) if i != di)
+            by.setdefault(keyc, []).append(c)
+        return [sorted(v, key=lambda ch: g.coords(ch)[di]) for v in by.values()]
+
+    def run_phase(di, fn_ring, fn_other, payload):
+        nonlocal part
+        nxt = {}
+        for line in lines_of(group, di):
+            d = g.dims[di]
+            if d.kind == RING or d.cubemesh:
+                o = sub_order(g, line, di)
+                fin = fn_ring(b, o, payload, part)
+            else:
+                fin = fn_other(b, line, payload, part)
+            nxt.update(fin)
+        part = nxt
+
+    if coll == AR:
+        payload = S
+        for di in vdims:
+            run_phase(di, ring_rs, direct_rs, payload)
+            payload /= g.sizes[di]
+        for di in reversed(vdims):
+            payload *= g.sizes[di]
+            run_phase(di, ring_ag, direct_ag, payload)
+    elif coll == RS_:
+        payload = S
+        for di in vdims:
+            run_phase(di, ring_rs, direct_rs, payload)
+            payload /= g.sizes[di]
+    elif coll == AG:
+        payload = S / math.prod(g.sizes[di] for di in vdims)
+        for di in reversed(vdims):
+            payload *= g.sizes[di]
+            run_phase(di, ring_ag, direct_ag, payload)
+    elif coll == A2A:
+        for di in vdims:
+            run_phase(di, shift_a2a, direct_a2a, S)
+    elif coll == BC:
+        owners = {group[0]}
+        for di in vdims:
+            for line in lines_of(group, di):
+                roots = [c for c in line if c in owners]
+                if not roots:
+                    continue
+                o = sub_order(g, line, di)
+                while o[0] != roots[0]:
+                    o = o[1:] + o[:1]
+                d = g.dims[di]
+                if d.kind == FC:
+                    scatter_ag_bcast(b, o, S, part)
+                else:
+                    chain_bcast(b, o, S, part)
+                owners.update(line)
+    else:  # P2P
+        b.send(group[0], group[-1], S, [])
+
+
+def build_schedule(g, algo, coll, group, S):
+    """returns list of msgs or None if infeasible."""
+    b = Builder()
+    k = len(group)
+    if k < 2 or S <= 0:
+        return b.msgs
+    if coll == P2P:
+        b.send(group[0], group[-1], S, [])
+        return b.msgs
+    if algo == "hier":
+        hier_schedule(b, g, coll, group, S)
+        return b.msgs
+    order = snake_order(g, group)
+    if algo == "hd" and (k & (k - 1)) != 0:
+        return None
+    if coll == AR:
+        if algo == "ring":
+            fin = ring_rs(b, order, S, {})
+            ring_ag(b, order, S, fin)
+        elif algo == "hd":
+            fin = hd_rs(b, order, S, {})
+            hd_ag(b, order, S, fin)
+        else:
+            fin = direct_rs(b, order, S, {})
+            direct_ag(b, order, S, fin)
+    elif coll == RS_:
+        {"ring": ring_rs, "hd": hd_rs, "direct": direct_rs}[algo](b, order, S, {})
+    elif coll == AG:
+        {"ring": ring_ag, "hd": hd_ag, "direct": direct_ag}[algo](b, order, S, {})
+    elif coll == A2A:
+        {"ring": shift_a2a, "hd": shift_a2a, "direct": direct_a2a}[algo](b, order, S, {})
+    elif coll == BC:
+        if algo == "ring":
+            chain_bcast(b, order, S, {})
+        elif algo == "hd":
+            tree_bcast(b, order, S, {})
+        else:
+            scatter_ag_bcast(b, order, S, {})
+    return b.msgs
+
+
+# ---- simulator ----
+PKT_BYTES = 256e3
+MIN_PKTS, MAX_PKTS = 16, 64
+
+
+def simulate(g, msgs, routing="dimorder"):
+    if not msgs:
+        return dict(time=0.0, events=0, max_util=0.0)
+    n = len(msgs)
+    dep_cnt = [len(m[3]) for m in msgs]
+    ready_t = [0.0] * n
+    dependents = [[] for _ in range(n)]
+    for i, m in enumerate(msgs):
+        for d in m[3]:
+            assert d < i, "deps must point backwards"
+            dependents[d].append(i)
+    paths = [None] * n
+    pkts_left = [0] * n
+    free = [0.0] * len(g.links)
+    busy = [0.0] * len(g.links)
+    heap = []
+    seq = 0
+    dists = {}
+
+    def dist_to(dst):
+        if dst not in dists:
+            # BFS over reversed links
+            radj = {}
+            for ix, (a, bb, _, _) in enumerate(g.links):
+                radj.setdefault(bb, []).append((a, ix))
+            dd = {dst: 0}
+            q = [dst]
+            while q:
+                u = q.pop(0)
+                for v, _ in radj.get(u, []):
+                    if v not in dd:
+                        dd[v] = dd[u] + 1
+                        q.append(v)
+            dists[dst] = dd
+        return dists[dst]
+
+    def inject(i, t):
+        nonlocal seq
+        src, dst, nbytes, _ = msgs[i]
+        if routing == "dimorder":
+            paths[i] = g.dim_order_path(src, dst)
+            hops = len(paths[i])
+        else:
+            hops = dist_to(dst)[src]
+        npk = 1 if hops <= 1 else max(MIN_PKTS, min(MAX_PKTS, math.ceil(nbytes / PKT_BYTES)))
+        npk = min(npk, max(1, math.ceil(nbytes / 1.0)))  # no zero-size pkts
+        pkts_left[i] = npk
+        for _ in range(npk):
+            heapq.heappush(heap, (t, seq, i, src, 0))
+            seq += 1
+
+    def complete(i, t):
+        for j in dependents[i]:
+            ready_t[j] = max(ready_t[j], t)
+            dep_cnt[j] -= 1
+            if dep_cnt[j] == 0:
+                inject(j, ready_t[j])
+
+    for i in range(n):
+        if dep_cnt[i] == 0:
+            inject(i, 0.0)
+    events = 0
+    end = 0.0
+    done = 0
+    while heap:
+        t, _, i, node, hop = heapq.heappop(heap)
+        events += 1
+        src, dst, nbytes, _ = msgs[i]
+        npk_total = pkts_left[i] if hop == 0 else None  # unused
+        if node == dst:
+            pkts_left[i] -= 1
+            end = max(end, t)
+            if pkts_left[i] == 0:
+                done += 1
+                complete(i, t)
+            continue
+        if routing == "dimorder":
+            l = paths[i][hop]
+        else:
+            dd = dist_to(dst)
+            cands = [ix for ix in g.adj[node] if dd.get(g.links[ix][1], 1 << 30) == dd[node] - 1]
+            l = min(cands, key=lambda ix: (free[ix], ix))
+        a, bnode, bw, lat = g.links[l]
+        hops_total = len(paths[i]) if routing == "dimorder" else dist_to(dst)[src]
+        npk = 1 if hops_total <= 1 else max(MIN_PKTS, min(MAX_PKTS, math.ceil(nbytes / PKT_BYTES)))
+        size = nbytes / npk
+        ts = max(t, free[l])
+        free[l] = ts + size / bw
+        busy[l] += size / bw
+        heapq.heappush(heap, (free[l] + lat, seq, i, bnode, hop + 1))
+        seq += 1
+    assert done == n, f"deadlock: {done}/{n}"
+    mx = max((bsy / end for bsy in busy), default=0.0) if end > 0 else 0.0
+    return dict(time=end, events=events, max_util=mx)
+
+
+ALGOS = ["ring", "hd", "direct", "hier"]
+
+
+def best(g, coll, group, S, dims_for_analytical):
+    results = {}
+    for a in ALGOS:
+        msgs = build_schedule(g, a, coll, group, S)
+        if msgs is None:
+            continue
+        r = simulate(g, msgs)
+        results[a] = r["time"]
+    ana = a_time_hier(coll, S, dims_for_analytical)
+    b = min(results, key=results.get)
+    return b, results[b], results, ana
+
+
+# =====================  validation  =====================
+def rel(a, b):
+    return abs(a - b) / max(abs(b), 1e-30)
+
+
+def group_of_dims(g, vdims):
+    out = []
+    for chip in range(g.n_chips):
+        co = g.coords(chip)
+        if all(co[i] == 0 for i in range(len(g.dims)) if i not in vdims):
+            out.append(chip)
+    return out
+
+
+fails = []
+
+
+def check(name, cond, detail=""):
+    status = "ok " if cond else "FAIL"
+    print(f"[{status}] {name} {detail}")
+    if not cond:
+        fails.append(name)
+
+
+print("== 1. ring algorithm on ring dims is (near-)exact ==")
+for k in [4, 8, 16]:
+    for S in [1e6, 64e6]:
+        g = Graph(ring_topo(k, NVLINK4))
+        msgs = build_schedule(g, "ring", AR, list(range(k)), S)
+        t = simulate(g, msgs)["time"]
+        ana = a_time(AR, S, g.dims[0])
+        check(f"ring({k}) AR S={S:.0e}", rel(t, ana) < 1e-9, f"sim={t:.3e} ana={ana:.3e}")
+    for coll in [AG, RS_]:
+        g = Graph(ring_topo(8, NVLINK4))
+        msgs = build_schedule(g, "ring", coll, list(range(8)), 32e6)
+        t = simulate(g, msgs)["time"]
+        ana = a_time(coll, 32e6, g.dims[0])
+        check(f"ring(8) {coll}", rel(t, ana) < 1e-9, f"sim={t:.3e} ana={ana:.3e}")
+
+print("== 1b. ring dim inside torus2d(4,4), per-dim group ==")
+g = Graph(torus2d(4, 4, NVLINK4))
+for vd in [0, 1]:
+    grp = group_of_dims(g, [vd])
+    msgs = build_schedule(g, "ring", AR, grp, 16e6)
+    t = simulate(g, msgs)["time"]
+    ana = a_time(AR, 16e6, g.dims[vd])
+    check(f"torus dim{vd} AR", rel(t, ana) < 1e-9, f"sim={t:.3e} ana={ana:.3e}")
+
+print("== 1c. hier on torus2d(4,4) matches time_hier ==")
+for S in [1e6, 64e6]:
+    for coll in [AR, AG, RS_]:
+        msgs = build_schedule(g, "hier", coll, list(range(16)), S)
+        t = simulate(g, msgs)["time"]
+        ana = a_time_hier(coll, S, g.dims)
+        check(f"torus hier {coll} S={S:.0e}", rel(t, ana) < 0.02, f"sim={t:.3e} ana={ana:.3e} rel={rel(t,ana):.3f}")
+
+print("== 2. FC / switch contention-free dims within 15% ==")
+for kind, mk in [("fc", lambda k: [Dim(FC, k, NVLINK4)]), ("sw", lambda k: [Dim(SWITCH, k, NVLINK4)])]:
+    for k in [2, 4, 8, 16]:
+        for coll in [AR, AG, RS_, A2A, P2P]:
+            for S in [16e6, 128e6]:
+                g2 = Graph(mk(k))
+                bname, t, allr, ana = best(g2, coll, list(range(k)), S, g2.dims)
+                check(f"{kind}({k}) {coll} S={S:.0e}", rel(t, ana) < 0.15,
+                      f"best={bname} sim={t:.3e} ana={ana:.3e} rel={rel(t,ana):+.3f}")
+
+print("== 3. algorithm selection flips with payload ==")
+for topo_name, dims, n in [("ring16", ring_topo(16, NVLINK4), 16),
+                           ("torus4x4", torus2d(4, 4, NVLINK4), 16),
+                           ("sw16", [Dim(SWITCH, 16, NVLINK4)], 16)]:
+    g3 = Graph(dims)
+    small = best(g3, AR, list(range(n)), 32e3, g3.dims)
+    large = best(g3, AR, list(range(n)), 256e6, g3.dims)
+    print(f"  {topo_name}: small(32KB) best={small[0]} {dict((a, f'{t:.2e}') for a, t in small[2].items())}")
+    print(f"  {topo_name}: large(256MB) best={large[0]} {dict((a, f'{t:.2e}') for a, t in large[2].items())}")
+
+print("== 4. DGX-1 cube-mesh slower than FC shortcut ==")
+g4 = Graph(dgx1(2, NVLINK4))
+grp8 = group_of_dims(g4, [0])
+for S in [16e6, 128e6]:
+    bname, t, allr, _ = best(g4, AR, grp8, S, g4.dims[:1])
+    ana_fc = a_time(AR, S, Dim(FC, 8, NVLINK4))
+    print(f"  dgx1 node AR S={S:.0e}: best={bname} sim={t:.3e} fc-ana={ana_fc:.3e} gap={t/ana_fc:.2f}x")
+    check(f"dgx1 gap S={S:.0e}", t > ana_fc * 1.05, "")
+
+print("== 5. five 64-chip topologies, AR 64MB: sim vs analytical (the figure) ==")
+for name, dims in [("torus2d8x8", torus2d(8, 8, NVLINK4)),
+                   ("torus3d4", torus3d(4, 4, 4, NVLINK4)),
+                   ("dragonfly8x8", dragonfly(8, 8, NVLINK4)),
+                   ("dgx1x8", dgx1(8, NVLINK4)),
+                   ("dgx2x4", dgx2(4, NVLINK4))]:
+    g5 = Graph(dims)
+    bname, t, allr, ana = best(g5, AR, list(range(g5.n_chips)), 64e6, g5.dims)
+    print(f"  {name:14s} best={bname:6s} sim={t:.4e} ana={ana:.4e} ratio={t/ana:.2f} "
+          f"{dict((a, f'{x:.2e}') for a, x in allr.items())}")
+
+print("== 6. determinism ==")
+g6 = Graph(torus2d(4, 4, NVLINK4))
+m6 = build_schedule(g6, "direct", A2A, list(range(16)), 8e6)
+r1 = simulate(g6, m6)
+r2 = simulate(g6, m6)
+check("deterministic", r1 == r2, f"{r1['time']:.6e}")
+
+print("== 7. adaptive routing sanity (A2A on torus) ==")
+tadp = simulate(g6, m6, routing="adaptive")
+print(f"  dimorder={r1['time']:.4e} adaptive={tadp['time']:.4e}")
+
+print()
+print("FAILURES:", fails if fails else "none")

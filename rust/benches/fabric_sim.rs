@@ -1,0 +1,68 @@
+//! `cargo bench --bench fabric_sim`
+//!
+//! Tracks the fabric simulator's throughput (simulated messages/sec and
+//! packet-hop events/sec) so event-loop regressions are visible: ring and
+//! direct all-reduces on a 4×4 torus, a 64-chip hierarchical all-reduce,
+//! and one full algorithm-selection sweep.
+
+use dfmodel::collective::Collective;
+use dfmodel::fabric::{build, simulate, Algo, FabricGraph, SimConfig};
+use dfmodel::system::{interconnect, topology};
+use dfmodel::util::bench::Runner;
+
+fn main() {
+    let link = interconnect::nvlink4();
+    let mut r = Runner::new();
+    let cfg = SimConfig::default();
+
+    let t16 = topology::torus2d(4, 4, &link);
+    let g16 = FabricGraph::new(&t16);
+    let grp16: Vec<usize> = (0..16).collect();
+    let mut stats = (0usize, 0u64);
+    for algo in [Algo::Ring, Algo::Direct] {
+        let sched = build(&g16, algo, Collective::AllReduce, &grp16, 64e6).unwrap();
+        r.run(&format!("sim(torus4x4, AR 64MB, {})", algo.name()), 3, 10, || {
+            let res = simulate(&g16, &sched, &cfg);
+            stats = (res.msgs, res.events);
+        });
+        let secs = r.results.last().unwrap().min.as_secs_f64().max(1e-12);
+        println!(
+            "  -> {:.0} msgs/s | {:.0} events/s ({} msgs, {} events)",
+            stats.0 as f64 / secs,
+            stats.1 as f64 / secs,
+            stats.0,
+            stats.1
+        );
+    }
+
+    let t64 = topology::torus3d(4, 4, 4, &link);
+    let g64 = FabricGraph::new(&t64);
+    let grp64: Vec<usize> = (0..64).collect();
+    let sched = build(&g64, Algo::Hier, Collective::AllReduce, &grp64, 64e6).unwrap();
+    r.run("sim(torus4x4x4, AR 64MB, hier)", 3, 10, || {
+        let res = simulate(&g64, &sched, &cfg);
+        stats = (res.msgs, res.events);
+    });
+    let secs = r.results.last().unwrap().min.as_secs_f64().max(1e-12);
+    println!(
+        "  -> {:.0} msgs/s | {:.0} events/s ({} msgs, {} events)",
+        stats.0 as f64 / secs,
+        stats.1 as f64 / secs,
+        stats.0,
+        stats.1
+    );
+
+    let n = r.run_once("select(torus4x4, AR, 4 algos x 2 payloads)", || {
+        let mut count = 0;
+        for bytes in [32e3, 256e6] {
+            count +=
+                dfmodel::fabric::evaluate_algos(&g16, &grp16, Collective::AllReduce, bytes, &cfg)
+                    .len();
+        }
+        count
+    });
+    println!("  -> {n} algorithm evaluations");
+
+    let _ = dfmodel::util::table::write_result("fabric_sim.txt", &r.summary());
+    println!("\n{}", r.summary());
+}

@@ -7,7 +7,9 @@
 //! Conventions: `bytes` is the per-chip buffer size S; returned times are
 //! seconds = bandwidth term + latency (α) term.
 
-use crate::system::topology::{Dim, DimKind};
+use std::collections::HashMap;
+
+use crate::system::topology::{Dim, DimFabric, DimKind};
 
 /// Collective operations DFModel's sharding strategies emit.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -128,6 +130,130 @@ pub fn group_size(dims: &[&Dim]) -> usize {
     dims.iter().map(|d| d.size).product()
 }
 
+// ---------------------------------------------------------------------------
+// Calibrated collective model (fed by `fabric::select::calibrate`).
+// ---------------------------------------------------------------------------
+
+/// Canonical key of a dim group: the sorted multiset of (wiring code, size,
+/// link-bandwidth bits, link-latency bits) over the active (size > 1) dims.
+/// Congruent dims of one topology share a key and dim order does not
+/// matter, so a calibration built from one subgroup applies to every
+/// congruent subgroup — while same-shaped dims on *different* link
+/// technologies never alias.
+pub type DimsKey = Vec<(u8, usize, u64, u64)>;
+
+/// Key for a dim slice (see [`DimsKey`]).
+pub fn dims_key(dims: &[&Dim]) -> DimsKey {
+    let mut key: DimsKey = dims
+        .iter()
+        .filter(|d| d.size > 1)
+        .map(|d| {
+            let kind = match d.kind {
+                DimKind::Ring => 0u8,
+                DimKind::FullyConnected => 1,
+                DimKind::Switch => 2,
+            };
+            let code = if d.fabric == DimFabric::CubeMesh { kind + 4 } else { kind };
+            (code, d.size, d.link_bw.to_bits(), d.latency.to_bits())
+        })
+        .collect();
+    key.sort_unstable();
+    key
+}
+
+/// One calibration breakpoint: simulated / analytical time at `bytes`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CalPoint {
+    pub bytes: f64,
+    pub ratio: f64,
+}
+
+/// Fabric-simulation calibration table: per (collective, dim-group key),
+/// ratio breakpoints over payload size. Lookups interpolate the ratio
+/// linearly in log-payload and clamp beyond the calibrated range, so the
+/// calibrated time inherits the analytical model's shape between (and
+/// outside) breakpoints.
+#[derive(Debug, Clone, Default)]
+pub struct Calibration {
+    /// Per dim-group key, a small (collective → breakpoints) list — keyed
+    /// this way so lookups borrow the caller's key instead of cloning it
+    /// (the optimizer queries this on its inner sharding loops).
+    points: HashMap<DimsKey, Vec<(Collective, Vec<CalPoint>)>>,
+}
+
+impl Calibration {
+    pub fn insert(&mut self, coll: Collective, key: DimsKey, mut pts: Vec<CalPoint>) {
+        pts.retain(|p| p.bytes > 0.0 && p.ratio.is_finite() && p.ratio > 0.0);
+        pts.sort_by(|a, b| a.bytes.total_cmp(&b.bytes));
+        if pts.is_empty() {
+            return;
+        }
+        let slot = self.points.entry(key).or_default();
+        match slot.iter().position(|(c, _)| *c == coll) {
+            Some(i) => slot[i].1 = pts,
+            None => slot.push((coll, pts)),
+        }
+    }
+
+    /// Number of calibrated (collective, dim-group) tables.
+    pub fn len(&self) -> usize {
+        self.points.values().map(|v| v.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Whether any collective is calibrated for this dim-group key (lets
+    /// `fabric::select::calibrate` skip congruent subsets it already swept).
+    pub fn contains_key(&self, key: &DimsKey) -> bool {
+        self.points.contains_key(key)
+    }
+
+    /// Simulated/analytical ratio for (coll, key) at a payload, or None if
+    /// that group was never calibrated.
+    pub fn ratio(&self, coll: Collective, key: &DimsKey, bytes: f64) -> Option<f64> {
+        let pts = &self.points.get(key)?.iter().find(|(c, _)| *c == coll)?.1;
+        let first = pts.first()?;
+        if pts.len() == 1 || bytes <= first.bytes {
+            return Some(first.ratio);
+        }
+        let last = pts.last().expect("non-empty");
+        if bytes >= last.bytes {
+            return Some(last.ratio);
+        }
+        let i = pts.partition_point(|p| p.bytes < bytes);
+        let (lo, hi) = (&pts[i - 1], &pts[i]);
+        let t = (bytes.ln() - lo.bytes.ln()) / (hi.bytes.ln() - lo.bytes.ln());
+        Some(lo.ratio + t * (hi.ratio - lo.ratio))
+    }
+}
+
+/// Which collective-cost model downstream passes (sharding selection, the
+/// inter-chip optimizer, the DP gradient term) consult.
+#[derive(Debug, Clone, Default)]
+pub enum CollectiveModel {
+    /// The closed-form α-β formulas in this module.
+    #[default]
+    Analytical,
+    /// Analytical times rescaled by fabric-simulation ratios; groups the
+    /// table does not cover fall back to analytical.
+    Calibrated(Calibration),
+}
+
+impl CollectiveModel {
+    /// `time_hier` under this model.
+    pub fn time_hier(&self, coll: Collective, bytes: f64, dims: &[&Dim]) -> f64 {
+        let base = time_hier(coll, bytes, dims);
+        match self {
+            CollectiveModel::Analytical => base,
+            CollectiveModel::Calibrated(c) => {
+                base * c.ratio(coll, &dims_key(dims), bytes).unwrap_or(1.0)
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -237,5 +363,42 @@ mod tests {
     fn group_size_products() {
         let (a, b) = (ring(4), sw(8));
         assert_eq!(group_size(&[&a, &b]), 32);
+    }
+
+    #[test]
+    fn dims_key_is_order_insensitive_and_drops_singletons() {
+        let (a, b, one) = (ring(4), sw(8), ring(1));
+        assert_eq!(dims_key(&[&a, &b]), dims_key(&[&b, &a, &one]));
+        assert_ne!(dims_key(&[&a]), dims_key(&[&b]));
+        assert!(dims_key(&[&one]).is_empty());
+    }
+
+    #[test]
+    fn calibration_interpolates_and_clamps() {
+        let d = ring(8);
+        let key = dims_key(&[&d]);
+        let mut c = Calibration::default();
+        c.insert(
+            Collective::AllReduce,
+            key.clone(),
+            vec![CalPoint { bytes: 1e6, ratio: 2.0 }, CalPoint { bytes: 1e8, ratio: 4.0 }],
+        );
+        assert_eq!(c.len(), 1);
+        let r = |b: f64| c.ratio(Collective::AllReduce, &key, b).unwrap();
+        assert!((r(1e3) - 2.0).abs() < 1e-12, "clamped low");
+        assert!((r(1e9) - 4.0).abs() < 1e-12, "clamped high");
+        assert!((r(1e7) - 3.0).abs() < 1e-12, "log-midpoint");
+        // uncalibrated (collective, key) pairs fall back
+        assert!(c.ratio(Collective::AllGather, &key, 1e7).is_none());
+
+        let model = CollectiveModel::Calibrated(c);
+        let s = 1e7;
+        let base = time_hier(Collective::AllReduce, s, &[&d]);
+        assert!((model.time_hier(Collective::AllReduce, s, &[&d]) - 3.0 * base).abs() < 1e-12);
+        // uncalibrated collectives under a calibrated model stay analytical
+        let ag = time_hier(Collective::AllGather, s, &[&d]);
+        assert_eq!(model.time_hier(Collective::AllGather, s, &[&d]), ag);
+        let ana = CollectiveModel::Analytical;
+        assert_eq!(ana.time_hier(Collective::AllReduce, s, &[&d]), base);
     }
 }

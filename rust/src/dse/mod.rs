@@ -83,6 +83,20 @@ pub fn evaluate_point(w: Workload, sys: &SystemSpec) -> Option<DesignPoint> {
     })
 }
 
+/// `evaluate_point` with the system's collective costs recalibrated by the
+/// fabric simulator first (`CollectiveModel::Calibrated`): the same sweep,
+/// but every TP/PP/DP and sharding decision is priced with simulated
+/// contention instead of the closed-form shortcut. Subsets larger than
+/// `opts.max_group` keep the analytical costs.
+pub fn evaluate_point_calibrated(
+    w: Workload,
+    sys: &SystemSpec,
+    opts: &crate::fabric::CalibrateOpts,
+) -> Option<DesignPoint> {
+    let calibrated = crate::fabric::calibrate_system(sys, opts);
+    evaluate_point(w, &calibrated)
+}
+
 /// The 4 memory × interconnect combinations of §VI-C.
 pub fn mem_link_combos() -> Vec<(memory::MemoryTech, interconnect::LinkTech)> {
     vec![

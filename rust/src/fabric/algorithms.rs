@@ -1,0 +1,606 @@
+//! Collective-algorithm message schedules.
+//!
+//! A [`Schedule`] is a DAG of messages: each message departs its source
+//! once all of its `deps` (earlier messages) have fully *arrived*; the
+//! simulator supplies routing and contention. Four algorithm families per
+//! collective (mirroring the NCCL/BlueConnect design space):
+//!
+//! * **ring** — pipelined chunked neighbor exchange over a snake
+//!   (boustrophedon) order of the group, so every ring step is a single
+//!   physical hop on tori. Bandwidth-optimal, `O(k)` latency steps.
+//! * **halving-doubling** — recursive halving/doubling over power-of-two
+//!   groups: `O(log k)` steps, but partners sit far apart on rings.
+//! * **direct** — all-port scatter-style exchange with staggered
+//!   destination order (chip *i* starts at peer *i+1*), matching the
+//!   closed-form formulas on fully-connected and switch dims.
+//! * **hier** — BlueConnect phase-per-dim decomposition with shrinking /
+//!   growing payloads, ring sub-passes inside ring/cube-mesh dims and
+//!   direct sub-passes inside fully-connected/switch dims; this is the
+//!   schedule-level twin of `collective::time_hier`.
+//!
+//! Reduction compute is free, as in the analytical model: times are pure
+//! network times.
+
+use std::collections::BTreeMap;
+
+use super::graph::{CUBE_RING, FabricGraph};
+use crate::collective::Collective;
+use crate::system::topology::{DimFabric, DimKind};
+
+/// Algorithm family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Algo {
+    Ring,
+    HalvingDoubling,
+    Direct,
+    Hier,
+}
+
+impl Algo {
+    pub const ALL: [Algo; 4] = [Algo::Ring, Algo::HalvingDoubling, Algo::Direct, Algo::Hier];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Algo::Ring => "ring",
+            Algo::HalvingDoubling => "hd",
+            Algo::Direct => "direct",
+            Algo::Hier => "hier",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Algo> {
+        match s {
+            "ring" => Some(Algo::Ring),
+            "hd" | "halving-doubling" => Some(Algo::HalvingDoubling),
+            "direct" => Some(Algo::Direct),
+            "hier" | "hierarchical" => Some(Algo::Hier),
+            _ => None,
+        }
+    }
+}
+
+/// One message: `bytes` from chip `src` to chip `dst`, departing once every
+/// message in `deps` (indices into the schedule, always earlier) arrived.
+#[derive(Debug, Clone)]
+pub struct Msg {
+    pub src: usize,
+    pub dst: usize,
+    pub bytes: f64,
+    pub deps: Vec<u32>,
+}
+
+/// A complete message schedule for one collective.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub coll: Collective,
+    pub algo: Algo,
+    pub msgs: Vec<Msg>,
+}
+
+/// Pending per-chip dependencies between passes (BTreeMap: schedules must
+/// be bit-identical run to run, so no hash-order iteration anywhere).
+type Deps = BTreeMap<usize, Vec<u32>>;
+
+struct B {
+    msgs: Vec<Msg>,
+}
+
+impl B {
+    fn send(&mut self, src: usize, dst: usize, bytes: f64, deps: Vec<u32>) -> u32 {
+        debug_assert!(deps.iter().all(|&d| (d as usize) < self.msgs.len()));
+        self.msgs.push(Msg { src, dst, bytes, deps });
+        (self.msgs.len() - 1) as u32
+    }
+}
+
+fn get_deps(init: &Deps, chip: usize) -> Vec<u32> {
+    init.get(&chip).cloned().unwrap_or_default()
+}
+
+fn passthrough(init: &Deps, group: &[usize]) -> Deps {
+    group.iter().map(|&c| (c, get_deps(init, c))).collect()
+}
+
+/// Dims in which the group's members differ.
+fn varying_dims(g: &FabricGraph, group: &[usize]) -> Vec<usize> {
+    let base = g.coords(group[0]);
+    let mut vary = vec![false; g.dims().len()];
+    for &c in &group[1..] {
+        for (v, (a, b)) in vary.iter_mut().zip(g.coords(c).iter().zip(&base)) {
+            if a != b {
+                *v = true;
+            }
+        }
+    }
+    (0..vary.len()).filter(|&i| vary[i]).collect()
+}
+
+/// Boustrophedon order of the group over its varying dims: consecutive
+/// members (wrap included, for even dim sizes) are physically adjacent on
+/// tori, making ring passes single-hop.
+fn snake_order(g: &FabricGraph, group: &[usize]) -> Vec<usize> {
+    let mut gs: Vec<usize> = group.to_vec();
+    gs.sort_unstable();
+    let vd = varying_dims(g, &gs);
+    let mut keyed: Vec<(usize, usize)> = gs
+        .iter()
+        .map(|&c| {
+            let co = g.coords(c);
+            let mut key = 0usize;
+            let mut flip = false;
+            for &di in vd.iter().rev() {
+                let size = g.dims()[di].size;
+                let x = if flip { size - 1 - co[di] } else { co[di] };
+                key = key * size + x;
+                flip ^= co[di] % 2 == 1;
+            }
+            (key, c)
+        })
+        .collect();
+    keyed.sort_unstable();
+    keyed.into_iter().map(|(_, c)| c).collect()
+}
+
+/// Pipelined ring pass (reduce-scatter and all-gather are cost-identical):
+/// k−1 steps; in each, position i sends an S/k chunk to i+1, gated on its
+/// receive from the previous step. Returns each chip's final receive.
+fn ring_pass(b: &mut B, ring: &[usize], s: f64, init: &Deps) -> Deps {
+    let k = ring.len();
+    if k < 2 || s <= 0.0 {
+        return passthrough(init, ring);
+    }
+    let chunk = s / k as f64;
+    let mut prev: Vec<u32> = Vec::new();
+    for step in 0..k - 1 {
+        let mut cur = Vec::with_capacity(k);
+        for i in 0..k {
+            let deps =
+                if step == 0 { get_deps(init, ring[i]) } else { vec![prev[(i + k - 1) % k]] };
+            cur.push(b.send(ring[i], ring[(i + 1) % k], chunk, deps));
+        }
+        prev = cur;
+    }
+    ring.iter().enumerate().map(|(i, &c)| (c, vec![prev[(i + k - 1) % k]])).collect()
+}
+
+/// Direct all-port pass: every chip exchanges S/k chunks with every peer,
+/// destinations staggered (chip i starts at peer i+1) so no receiver is hit
+/// by all senders in the same slot. Returns each chip's receives.
+fn direct_pass(b: &mut B, group: &[usize], s: f64, init: &Deps) -> Deps {
+    let k = group.len();
+    if k < 2 || s <= 0.0 {
+        return passthrough(init, group);
+    }
+    let chunk = s / k as f64;
+    let mut fin: Deps = group.iter().map(|&c| (c, Vec::new())).collect();
+    for i in 0..k {
+        for off in 1..k {
+            let j = (i + off) % k;
+            let m = b.send(group[i], group[j], chunk, get_deps(init, group[i]));
+            fin.get_mut(&group[j]).expect("receiver in group").push(m);
+        }
+    }
+    fin
+}
+
+/// Recursive halving (`halving = true`: distances k/2…1, sizes S/2…S/k) or
+/// doubling (distances 1…k/2, sizes S/k…S/2) over a power-of-two group.
+fn hd_pass(b: &mut B, group: &[usize], s: f64, init: &Deps, halving: bool) -> Deps {
+    let k = group.len();
+    if k < 2 || s <= 0.0 {
+        return passthrough(init, group);
+    }
+    debug_assert!(k.is_power_of_two());
+    let mut recv = passthrough(init, group);
+    let mut dists: Vec<usize> = Vec::new();
+    let mut d = 1;
+    while d < k {
+        dists.push(d);
+        d *= 2;
+    }
+    if halving {
+        dists.reverse();
+    }
+    for d in dists {
+        let mut nxt = Deps::new();
+        for i in 0..k {
+            let p = i ^ d;
+            let m = b.send(group[i], group[p], s * d as f64 / k as f64, get_deps(&recv, group[i]));
+            nxt.entry(group[p]).or_default().push(m);
+        }
+        recv = nxt;
+    }
+    recv
+}
+
+/// Shift all-to-all: k−1 rounds, round r sends the S/k block to position
+/// i+r, each round gated on the previous round's receive.
+fn shift_a2a(b: &mut B, group: &[usize], s: f64, init: &Deps) -> Deps {
+    let k = group.len();
+    if k < 2 || s <= 0.0 {
+        return passthrough(init, group);
+    }
+    let chunk = s / k as f64;
+    let mut recv = passthrough(init, group);
+    for r in 1..k {
+        let mut nxt = Deps::new();
+        for i in 0..k {
+            let j = (i + r) % k;
+            let m = b.send(group[i], group[j], chunk, get_deps(&recv, group[i]));
+            nxt.entry(group[j]).or_default().push(m);
+        }
+        recv = nxt;
+    }
+    recv
+}
+
+/// Pipelined chain broadcast from position 0 around the order: chunked so
+/// the chain streams instead of store-and-forwarding the full buffer.
+fn chain_bcast(b: &mut B, ring: &[usize], s: f64, init: &Deps) -> Deps {
+    let k = ring.len();
+    if k < 2 || s <= 0.0 {
+        return passthrough(init, ring);
+    }
+    let by_bytes = ((s / 4096.0).ceil() as usize).max(1);
+    let m = (8 * k).clamp(16, 512).min(by_bytes);
+    let chunk = s / m as f64;
+    let mut fin: Deps = ring.iter().map(|&c| (c, Vec::new())).collect();
+    fin.insert(ring[0], get_deps(init, ring[0]));
+    let mut prev_hop: Vec<u32> = vec![0; k - 1];
+    for c in 0..m {
+        for h in 0..k - 1 {
+            let deps = if h == 0 { get_deps(init, ring[0]) } else { vec![prev_hop[h - 1]] };
+            let mid = b.send(ring[h], ring[h + 1], chunk, deps);
+            prev_hop[h] = mid;
+            if c == m - 1 {
+                fin.insert(ring[h + 1], vec![mid]);
+            }
+        }
+    }
+    fin
+}
+
+/// Two-phase broadcast: scatter S/k chunks from the root, then direct
+/// all-gather — this is what the closed-form FC/switch broadcast assumes.
+fn scatter_ag_bcast(b: &mut B, group: &[usize], s: f64, init: &Deps) -> Deps {
+    let k = group.len();
+    if k < 2 || s <= 0.0 {
+        return passthrough(init, group);
+    }
+    let chunk = s / k as f64;
+    let mut got = Deps::new();
+    got.insert(group[0], get_deps(init, group[0]));
+    for &j in &group[1..] {
+        let m = b.send(group[0], j, chunk, get_deps(init, group[0]));
+        got.insert(j, vec![m]);
+    }
+    direct_pass(b, group, s, &got)
+}
+
+/// Binomial-tree broadcast over a power-of-two group.
+fn tree_bcast(b: &mut B, group: &[usize], s: f64, init: &Deps) -> Deps {
+    let k = group.len();
+    if k < 2 || s <= 0.0 {
+        return passthrough(init, group);
+    }
+    debug_assert!(k.is_power_of_two());
+    let mut got = Deps::new();
+    got.insert(group[0], get_deps(init, group[0]));
+    let mut t = 1;
+    while t < k {
+        for i in 0..t {
+            let m = b.send(group[i], group[i + t], s, get_deps(&got, group[i]));
+            got.insert(group[i + t], vec![m]);
+        }
+        t *= 2;
+    }
+    got
+}
+
+/// Partition the group into its maximal lines along dim `di`, each sorted
+/// by that dim's coordinate; lines sorted for determinism.
+fn lines_of(g: &FabricGraph, group: &[usize], di: usize) -> Vec<Vec<usize>> {
+    let mut by: BTreeMap<Vec<usize>, Vec<usize>> = BTreeMap::new();
+    for &c in group {
+        let mut co = g.coords(c);
+        co[di] = 0;
+        by.entry(co).or_default().push(c);
+    }
+    let mut lines: Vec<Vec<usize>> = by.into_values().collect();
+    for l in &mut lines {
+        l.sort_by_key(|&c| g.coords(c)[di]);
+    }
+    lines
+}
+
+/// Ring order inside one dim's line: the Hamiltonian cycle for cube-mesh
+/// dims, coordinate order otherwise.
+fn sub_order(g: &FabricGraph, line: &[usize], di: usize) -> Vec<usize> {
+    if g.dims()[di].fabric == DimFabric::CubeMesh {
+        CUBE_RING.iter().map(|&i| line[i]).collect()
+    } else {
+        line.to_vec()
+    }
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Pass {
+    Rs,
+    Ag,
+    A2a,
+}
+
+/// One hierarchical phase over dim `di`: per-line sub-pass, ring-style
+/// inside ring/cube-mesh dims, direct inside FC/switch dims.
+fn run_phase(
+    b: &mut B,
+    g: &FabricGraph,
+    group: &[usize],
+    di: usize,
+    pass: Pass,
+    payload: f64,
+    part: &Deps,
+) -> Deps {
+    let d = &g.dims()[di];
+    let ring_like = d.kind == DimKind::Ring || d.fabric == DimFabric::CubeMesh;
+    let mut nxt = Deps::new();
+    for line in lines_of(g, group, di) {
+        let fin = if ring_like {
+            let o = sub_order(g, &line, di);
+            match pass {
+                Pass::Rs | Pass::Ag => ring_pass(b, &o, payload, part),
+                Pass::A2a => shift_a2a(b, &o, payload, part),
+            }
+        } else {
+            // FC/switch dims: the direct all-port pass serves RS, AG and A2A
+            direct_pass(b, &line, payload, part)
+        };
+        nxt.extend(fin);
+    }
+    nxt
+}
+
+/// BlueConnect phase-per-dim hierarchical schedule. Requires the group to
+/// be an axis-aligned product of full dim lines (what `ParallelismPlan` dim
+/// assignments and `select::calibrate` subsets always are) — partial lines
+/// would make the per-phase payload scaling and owner propagation wrong.
+fn hier(b: &mut B, g: &FabricGraph, coll: Collective, group: &[usize], s: f64) {
+    let vdims = varying_dims(g, group);
+    if vdims.is_empty() {
+        return;
+    }
+    debug_assert_eq!(
+        group.len(),
+        vdims.iter().map(|&di| g.dims()[di].size).product::<usize>(),
+        "hier schedules need an axis-aligned product group"
+    );
+    let mut part = Deps::new();
+    match coll {
+        Collective::AllReduce => {
+            let mut payload = s;
+            for &di in &vdims {
+                part = run_phase(b, g, group, di, Pass::Rs, payload, &part);
+                payload /= g.dims()[di].size as f64;
+            }
+            for &di in vdims.iter().rev() {
+                payload *= g.dims()[di].size as f64;
+                part = run_phase(b, g, group, di, Pass::Ag, payload, &part);
+            }
+        }
+        Collective::ReduceScatter => {
+            let mut payload = s;
+            for &di in &vdims {
+                part = run_phase(b, g, group, di, Pass::Rs, payload, &part);
+                payload /= g.dims()[di].size as f64;
+            }
+        }
+        Collective::AllGather => {
+            let total: f64 = vdims.iter().map(|&di| g.dims()[di].size as f64).product();
+            let mut payload = s / total;
+            for &di in vdims.iter().rev() {
+                payload *= g.dims()[di].size as f64;
+                part = run_phase(b, g, group, di, Pass::Ag, payload, &part);
+            }
+        }
+        Collective::AllToAll => {
+            for &di in &vdims {
+                part = run_phase(b, g, group, di, Pass::A2a, s, &part);
+            }
+        }
+        Collective::Broadcast => {
+            let mut owners: std::collections::BTreeSet<usize> = std::collections::BTreeSet::new();
+            owners.insert(group[0]);
+            for &di in &vdims {
+                for line in lines_of(g, group, di) {
+                    let Some(&root) = line.iter().find(|c| owners.contains(c)) else {
+                        continue;
+                    };
+                    let o = sub_order(g, &line, di);
+                    let pos = o.iter().position(|&c| c == root).expect("root in line");
+                    let rot: Vec<usize> =
+                        o[pos..].iter().chain(o[..pos].iter()).copied().collect();
+                    let d = &g.dims()[di];
+                    let fin = if d.kind == DimKind::FullyConnected
+                        && d.fabric != DimFabric::CubeMesh
+                    {
+                        scatter_ag_bcast(b, &rot, s, &part)
+                    } else {
+                        chain_bcast(b, &rot, s, &part)
+                    };
+                    for (c, dps) in fin {
+                        part.insert(c, dps);
+                    }
+                    owners.extend(line.iter().copied());
+                }
+            }
+        }
+        Collective::P2P => {
+            b.send(group[0], *group.last().expect("non-empty"), s, Vec::new());
+        }
+    }
+}
+
+/// Build the message schedule for `algo` × `coll` over `group` (global chip
+/// ids) at `bytes` per chip. `None` when the algorithm cannot run on this
+/// group (halving-doubling needs a power-of-two size); an empty schedule
+/// (time 0) for degenerate groups or payloads. `Algo::Hier` additionally
+/// requires an axis-aligned product group (full lines along its varying
+/// dims), which is what plan dim assignments and calibration subsets are.
+pub fn build(
+    g: &FabricGraph,
+    algo: Algo,
+    coll: Collective,
+    group: &[usize],
+    bytes: f64,
+) -> Option<Schedule> {
+    let mut b = B { msgs: Vec::new() };
+    let k = group.len();
+    if k >= 2 && bytes > 0.0 {
+        if coll == Collective::P2P {
+            b.send(group[0], group[k - 1], bytes, Vec::new());
+        } else if algo == Algo::Hier {
+            hier(&mut b, g, coll, group, bytes);
+        } else {
+            if algo == Algo::HalvingDoubling && !k.is_power_of_two() {
+                return None;
+            }
+            let order = snake_order(g, group);
+            let none = Deps::new();
+            match coll {
+                Collective::AllReduce => match algo {
+                    Algo::Ring => {
+                        let f = ring_pass(&mut b, &order, bytes, &none);
+                        ring_pass(&mut b, &order, bytes, &f);
+                    }
+                    Algo::HalvingDoubling => {
+                        let f = hd_pass(&mut b, &order, bytes, &none, true);
+                        hd_pass(&mut b, &order, bytes, &f, false);
+                    }
+                    _ => {
+                        let f = direct_pass(&mut b, &order, bytes, &none);
+                        direct_pass(&mut b, &order, bytes, &f);
+                    }
+                },
+                Collective::ReduceScatter => {
+                    let _ = match algo {
+                        Algo::Ring => ring_pass(&mut b, &order, bytes, &none),
+                        Algo::HalvingDoubling => hd_pass(&mut b, &order, bytes, &none, true),
+                        _ => direct_pass(&mut b, &order, bytes, &none),
+                    };
+                }
+                Collective::AllGather => {
+                    let _ = match algo {
+                        Algo::Ring => ring_pass(&mut b, &order, bytes, &none),
+                        Algo::HalvingDoubling => hd_pass(&mut b, &order, bytes, &none, false),
+                        _ => direct_pass(&mut b, &order, bytes, &none),
+                    };
+                }
+                Collective::AllToAll => {
+                    let _ = match algo {
+                        Algo::Direct => direct_pass(&mut b, &order, bytes, &none),
+                        _ => shift_a2a(&mut b, &order, bytes, &none),
+                    };
+                }
+                Collective::Broadcast => {
+                    let _ = match algo {
+                        Algo::Ring => chain_bcast(&mut b, &order, bytes, &none),
+                        Algo::HalvingDoubling => tree_bcast(&mut b, &order, bytes, &none),
+                        _ => scatter_ag_bcast(&mut b, &order, bytes, &none),
+                    };
+                }
+                Collective::P2P => unreachable!("handled above"),
+            }
+        }
+    }
+    Some(Schedule { coll, algo, msgs: b.msgs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::system::interconnect::nvlink4;
+    use crate::system::topology;
+
+    fn torus() -> FabricGraph {
+        FabricGraph::new(&topology::torus2d(4, 4, &nvlink4()))
+    }
+
+    #[test]
+    fn ring_allreduce_message_count() {
+        let g = torus();
+        let group: Vec<usize> = (0..16).collect();
+        let s = build(&g, Algo::Ring, Collective::AllReduce, &group, 1e6).unwrap();
+        // RS + AG, each k(k−1) chunk messages
+        assert_eq!(s.msgs.len(), 2 * 16 * 15);
+        // every chunk is S/k
+        assert!(s.msgs.iter().all(|m| (m.bytes - 1e6 / 16.0).abs() < 1e-9));
+    }
+
+    #[test]
+    fn snake_order_is_adjacent_on_torus() {
+        let g = torus();
+        let group: Vec<usize> = (0..16).collect();
+        let o = snake_order(&g, &group);
+        for i in 0..o.len() {
+            let a = o[i];
+            let b = o[(i + 1) % o.len()];
+            assert_eq!(g.dim_order_path(a, b).len(), 1, "{a}->{b} not adjacent");
+        }
+    }
+
+    #[test]
+    fn deps_always_point_backwards() {
+        let g = torus();
+        let group: Vec<usize> = (0..16).collect();
+        for algo in Algo::ALL {
+            for coll in [
+                Collective::AllReduce,
+                Collective::AllGather,
+                Collective::ReduceScatter,
+                Collective::AllToAll,
+                Collective::Broadcast,
+                Collective::P2P,
+            ] {
+                let Some(s) = build(&g, algo, coll, &group, 1e6) else { continue };
+                for (i, m) in s.msgs.iter().enumerate() {
+                    assert!(m.deps.iter().all(|&d| (d as usize) < i), "{algo:?} {coll:?}");
+                    assert!(m.bytes > 0.0 && m.src != m.dst);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hd_requires_power_of_two() {
+        let g = FabricGraph::new(&topology::ring(6, &nvlink4()));
+        let group: Vec<usize> = (0..6).collect();
+        assert!(build(&g, Algo::HalvingDoubling, Collective::AllReduce, &group, 1e6).is_none());
+        assert!(build(&g, Algo::Ring, Collective::AllReduce, &group, 1e6).is_some());
+    }
+
+    #[test]
+    fn degenerate_groups_are_empty_schedules() {
+        let g = torus();
+        let s = build(&g, Algo::Ring, Collective::AllReduce, &[3], 1e6).unwrap();
+        assert!(s.msgs.is_empty());
+        let s = build(&g, Algo::Ring, Collective::AllReduce, &[0, 1], 0.0).unwrap();
+        assert!(s.msgs.is_empty());
+    }
+
+    #[test]
+    fn hier_alltoall_phases_per_dim() {
+        let g = torus();
+        let group: Vec<usize> = (0..16).collect();
+        let s = build(&g, Algo::Hier, Collective::AllToAll, &group, 1e6).unwrap();
+        // 2 phases × 4 lines × k(k−1) shift messages
+        assert_eq!(s.msgs.len(), 2 * 4 * 4 * 3);
+    }
+
+    #[test]
+    fn algo_names_roundtrip() {
+        for a in Algo::ALL {
+            assert_eq!(Algo::parse(a.name()), Some(a));
+        }
+        assert!(Algo::parse("nope").is_none());
+    }
+}

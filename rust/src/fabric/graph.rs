@@ -1,0 +1,395 @@
+//! Link-level expansion of a [`Topology`] into an explicit node/link graph.
+//!
+//! Chips come first (ids `0..n_chips`, mixed-radix over the dim sizes with
+//! dim 0 fastest); every Switch dim adds one crossbar node per line after
+//! the chips. A chip pair differs in at most one dim, so each directed link
+//! belongs to exactly one dim and `(src, dst)` identifies it uniquely.
+//!
+//! Routing:
+//! * **dimension-ordered**: correct coordinates dim by dim in index order —
+//!   minimal direction inside rings (ties go positive), direct hops inside
+//!   fully-connected dims, up/down through the crossbar for switch dims,
+//!   BFS next-hops (lowest-id tie-break) inside the DGX-1 cube-mesh. Every
+//!   dim-ordered path is a shortest path in these product topologies.
+//! * **minimal-adaptive** (`sim::Routing::MinimalAdaptive`): the simulator
+//!   picks per hop among all shortest-path successors (`dists_to`) by
+//!   earliest link availability.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::system::topology::{Dim, DimFabric, DimKind, Topology};
+
+/// One directed link: bytes serialize at `bw`, then arrive `latency` later.
+#[derive(Debug, Clone, Copy)]
+pub struct Link {
+    pub src: usize,
+    pub dst: usize,
+    /// Bytes/s, one direction.
+    pub bw: f64,
+    /// Seconds per traversal.
+    pub latency: f64,
+}
+
+/// The 16 undirected edges of the DGX-1 hybrid cube-mesh [2]: two
+/// fully-connected quads plus the cube matching i↔i+4.
+pub const CUBE_EDGES: [(usize, usize); 16] = [
+    (0, 1),
+    (0, 2),
+    (0, 3),
+    (1, 2),
+    (1, 3),
+    (2, 3),
+    (4, 5),
+    (4, 6),
+    (4, 7),
+    (5, 6),
+    (5, 7),
+    (6, 7),
+    (0, 4),
+    (1, 5),
+    (2, 6),
+    (3, 7),
+];
+
+/// A Hamiltonian cycle of the cube-mesh; ring sub-algorithms follow it so
+/// every ring step is a single physical hop.
+pub const CUBE_RING: [usize; 8] = [0, 1, 2, 3, 7, 6, 5, 4];
+
+/// Explicit node/link expansion of one topology.
+#[derive(Debug, Clone)]
+pub struct FabricGraph {
+    pub name: String,
+    pub n_chips: usize,
+    pub links: Vec<Link>,
+    /// Outgoing link ids per node (chips first, then switch nodes).
+    pub adj: Vec<Vec<u32>>,
+    dims: Vec<Dim>,
+    strides: Vec<usize>,
+    /// First switch-node id per Switch dim.
+    switch_base: Vec<Option<usize>>,
+    /// Incoming link ids per node (for reverse BFS).
+    radj: Vec<Vec<u32>>,
+    link_ix: HashMap<(usize, usize), u32>,
+    /// `cube_next[a][b]`: next cube-mesh coordinate from a toward b.
+    cube_next: [[usize; 8]; 8],
+}
+
+impl FabricGraph {
+    pub fn new(t: &Topology) -> Self {
+        let dims = t.dims.clone();
+        let mut strides = Vec::with_capacity(dims.len());
+        let mut n = 1usize;
+        for d in &dims {
+            strides.push(n);
+            n *= d.size;
+        }
+        let n_chips = n;
+        let mut switch_base = vec![None; dims.len()];
+        let mut n_nodes = n_chips;
+        for (i, d) in dims.iter().enumerate() {
+            if d.kind == DimKind::Switch && d.size > 1 && d.fabric == DimFabric::Kind {
+                switch_base[i] = Some(n_nodes);
+                n_nodes += n_chips / d.size;
+            }
+        }
+        let mut g = FabricGraph {
+            name: t.name.clone(),
+            n_chips,
+            links: Vec::new(),
+            adj: vec![Vec::new(); n_nodes],
+            dims,
+            strides,
+            switch_base,
+            radj: vec![Vec::new(); n_nodes],
+            link_ix: HashMap::new(),
+            cube_next: cube_next_table(),
+        };
+        for di in 0..g.dims.len() {
+            let d = g.dims[di].clone();
+            if d.size <= 1 {
+                continue;
+            }
+            let lines = g.lines(di);
+            for line in lines {
+                if d.fabric == DimFabric::CubeMesh {
+                    assert_eq!(d.size, 8, "cube-mesh dims have exactly 8 nodes");
+                    for &(a, b) in CUBE_EDGES.iter() {
+                        g.add_link(line[a], line[b], &d);
+                        g.add_link(line[b], line[a], &d);
+                    }
+                } else {
+                    match d.kind {
+                        DimKind::Ring => {
+                            let k = d.size;
+                            for c in 0..k {
+                                g.add_link(line[c], line[(c + 1) % k], &d);
+                                if k > 2 {
+                                    g.add_link(line[c], line[(c + k - 1) % k], &d);
+                                }
+                            }
+                        }
+                        DimKind::FullyConnected => {
+                            for a in 0..d.size {
+                                for b in 0..d.size {
+                                    if a != b {
+                                        g.add_link(line[a], line[b], &d);
+                                    }
+                                }
+                            }
+                        }
+                        DimKind::Switch => {
+                            let sw = g.switch_node(di, line[0]);
+                            for &c in &line {
+                                g.add_link(c, sw, &d);
+                                g.add_link(sw, c, &d);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        g
+    }
+
+    fn add_link(&mut self, src: usize, dst: usize, d: &Dim) {
+        let id = self.links.len() as u32;
+        self.links.push(Link { src, dst, bw: d.link_bw, latency: d.latency });
+        self.adj[src].push(id);
+        self.radj[dst].push(id);
+        let prev = self.link_ix.insert((src, dst), id);
+        debug_assert!(prev.is_none(), "duplicate link {src}->{dst}");
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.adj.len()
+    }
+
+    pub fn dims(&self) -> &[Dim] {
+        &self.dims
+    }
+
+    /// Per-dim coordinates of a chip.
+    pub fn coords(&self, chip: usize) -> Vec<usize> {
+        (0..self.dims.len()).map(|i| (chip / self.strides[i]) % self.dims[i].size).collect()
+    }
+
+    /// Chip id of a coordinate vector.
+    pub fn chip_at(&self, coords: &[usize]) -> usize {
+        coords.iter().zip(&self.strides).map(|(&c, &s)| c * s).sum()
+    }
+
+    /// Chip ids of every maximal line along dim `di`, each in coord order.
+    pub fn lines(&self, di: usize) -> Vec<Vec<usize>> {
+        let k = self.dims[di].size;
+        let stride = self.strides[di];
+        let n_lines = self.n_chips / k;
+        (0..n_lines)
+            .map(|r| {
+                let base = (r / stride) * stride * k + r % stride;
+                (0..k).map(|c| base + c * stride).collect()
+            })
+            .collect()
+    }
+
+    /// Crossbar node serving `chip`'s line along switch dim `di`.
+    pub fn switch_node(&self, di: usize, chip: usize) -> usize {
+        let stride = self.strides[di];
+        let k = self.dims[di].size;
+        let coord = (chip / stride) % k;
+        let cid = chip - coord * stride;
+        let rank = (cid / (stride * k)) * stride + cid % stride;
+        self.switch_base[di].expect("not a switch dim") + rank
+    }
+
+    /// Dimension-ordered route `src → dst` as link ids (deterministic).
+    pub fn dim_order_path(&self, src: usize, dst: usize) -> Vec<u32> {
+        let mut path = Vec::new();
+        let mut cur = self.coords(src);
+        let dstc = self.coords(dst);
+        let mut node = src;
+        for (di, d) in self.dims.iter().enumerate() {
+            let stride = self.strides[di];
+            while cur[di] != dstc[di] {
+                if d.fabric == DimFabric::CubeMesh {
+                    let nxt = self.cube_next[cur[di]][dstc[di]];
+                    let nn = node - cur[di] * stride + nxt * stride;
+                    path.push(self.link_ix[&(node, nn)]);
+                    node = nn;
+                    cur[di] = nxt;
+                    continue;
+                }
+                match d.kind {
+                    DimKind::Ring => {
+                        let k = d.size;
+                        let fwd = (dstc[di] + k - cur[di]) % k;
+                        let bwd = (cur[di] + k - dstc[di]) % k;
+                        let nxt =
+                            if fwd <= bwd { (cur[di] + 1) % k } else { (cur[di] + k - 1) % k };
+                        let nn = node - cur[di] * stride + nxt * stride;
+                        path.push(self.link_ix[&(node, nn)]);
+                        node = nn;
+                        cur[di] = nxt;
+                    }
+                    DimKind::FullyConnected => {
+                        let nn = node - cur[di] * stride + dstc[di] * stride;
+                        path.push(self.link_ix[&(node, nn)]);
+                        node = nn;
+                        cur[di] = dstc[di];
+                    }
+                    DimKind::Switch => {
+                        let nn = node - cur[di] * stride + dstc[di] * stride;
+                        let sw = self.switch_node(di, node);
+                        path.push(self.link_ix[&(node, sw)]);
+                        path.push(self.link_ix[&(sw, nn)]);
+                        node = nn;
+                        cur[di] = dstc[di];
+                    }
+                }
+            }
+        }
+        path
+    }
+
+    /// BFS hop distances from every node to `dst` (`u32::MAX` unreachable).
+    pub fn dists_to(&self, dst: usize) -> Vec<u32> {
+        let mut dist = vec![u32::MAX; self.n_nodes()];
+        dist[dst] = 0;
+        let mut q = VecDeque::with_capacity(self.n_nodes());
+        q.push_back(dst);
+        while let Some(u) = q.pop_front() {
+            for &lix in &self.radj[u] {
+                let v = self.links[lix as usize].src;
+                if dist[v] == u32::MAX {
+                    dist[v] = dist[u] + 1;
+                    q.push_back(v);
+                }
+            }
+        }
+        dist
+    }
+}
+
+/// BFS next-hop table of the 8-node cube-mesh, lowest-id tie-break.
+fn cube_next_table() -> [[usize; 8]; 8] {
+    let mut adj = [[false; 8]; 8];
+    for &(a, b) in CUBE_EDGES.iter() {
+        adj[a][b] = true;
+        adj[b][a] = true;
+    }
+    let mut next = [[0usize; 8]; 8];
+    for dst in 0..8 {
+        let mut dist = [usize::MAX; 8];
+        dist[dst] = 0;
+        let mut q = vec![dst];
+        let mut qi = 0;
+        while qi < q.len() {
+            let u = q[qi];
+            qi += 1;
+            for v in 0..8 {
+                if adj[u][v] && dist[v] == usize::MAX {
+                    dist[v] = dist[u] + 1;
+                    q.push(v);
+                }
+            }
+        }
+        for u in 0..8 {
+            next[u][dst] = if u == dst {
+                u
+            } else {
+                (0..8).find(|&v| adj[u][v] && dist[v] + 1 == dist[u]).expect("connected mesh")
+            };
+        }
+    }
+    next
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::system::interconnect::nvlink4;
+    use crate::system::topology;
+
+    #[test]
+    fn torus_expansion_counts() {
+        let t = topology::torus2d(4, 4, &nvlink4());
+        let g = FabricGraph::new(&t);
+        assert_eq!(g.n_chips, 16);
+        assert_eq!(g.n_nodes(), 16); // no switches
+        // 2 dims × 16 chips × 2 directions
+        assert_eq!(g.links.len(), 64);
+        assert!(g.adj.iter().take(16).all(|a| a.len() == 4));
+    }
+
+    #[test]
+    fn ring_of_two_has_one_link_per_direction() {
+        let t = topology::ring(2, &nvlink4());
+        let g = FabricGraph::new(&t);
+        assert_eq!(g.links.len(), 2);
+    }
+
+    #[test]
+    fn switch_dims_add_crossbar_nodes() {
+        let t = topology::dgx2(4, &nvlink4()); // [Switch 16, Switch 4] = 64 chips
+        let g = FabricGraph::new(&t);
+        assert_eq!(g.n_chips, 64);
+        // 4 crossbars for the 16-dim lines + 16 for the 4-dim lines
+        assert_eq!(g.n_nodes(), 64 + 4 + 16);
+        // every chip: 1 uplink per switch dim
+        assert!(g.adj.iter().take(64).all(|a| a.len() == 2));
+    }
+
+    #[test]
+    fn dgx1_local_dim_is_the_cube_mesh() {
+        let t = topology::dgx1(1, &nvlink4());
+        let g = FabricGraph::new(&t);
+        assert_eq!(g.n_chips, 8);
+        // 16 undirected edges = 32 directed links, degree 4 per GPU
+        assert_eq!(g.links.len(), 32);
+        assert!(g.adj.iter().take(8).all(|a| a.len() == 4));
+        // 0 → 5 is not a mesh edge: exactly 2 hops
+        assert_eq!(g.dim_order_path(0, 5).len(), 2);
+        assert_eq!(g.dim_order_path(0, 1).len(), 1);
+    }
+
+    #[test]
+    fn dim_order_paths_are_minimal_on_tori() {
+        let t = topology::torus2d(4, 4, &nvlink4());
+        let g = FabricGraph::new(&t);
+        for src in 0..16 {
+            let dists = g.dists_to(src);
+            for dst in 0..16 {
+                let p = g.dim_order_path(dst, src);
+                assert_eq!(p.len() as u32, dists[dst], "{dst}->{src}");
+                // path links actually chain from dst to src
+                let mut node = dst;
+                for &l in &p {
+                    assert_eq!(g.links[l as usize].src, node);
+                    node = g.links[l as usize].dst;
+                }
+                assert_eq!(node, src);
+            }
+        }
+    }
+
+    #[test]
+    fn switch_paths_cross_the_crossbar() {
+        let t = topology::dgx2(4, &nvlink4());
+        let g = FabricGraph::new(&t);
+        // same box: up + down
+        assert_eq!(g.dim_order_path(0, 1).len(), 2);
+        // different box: up+down intra, then up+down inter
+        assert_eq!(g.dim_order_path(0, 17).len(), 4);
+    }
+
+    #[test]
+    fn lines_partition_chips() {
+        let t = topology::torus3d(4, 2, 2, &nvlink4());
+        let g = FabricGraph::new(&t);
+        for di in 0..3 {
+            let lines = g.lines(di);
+            let mut all: Vec<usize> = lines.iter().flatten().copied().collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..16).collect::<Vec<_>>(), "dim {di}");
+        }
+    }
+}

@@ -1,0 +1,41 @@
+//! Packet-level network-fabric simulator with topology-aware collective
+//! algorithm selection — the validation-and-optimization layer under the
+//! §IV-B interconnection-network model.
+//!
+//! The closed-form `collective` module prices every inter-chip decision
+//! (TP/PP/DP assignment, sharding, the DSE heat maps, the cluster planner)
+//! with α-β formulas that cannot see link contention, routing, or
+//! algorithm choice. This module makes those costs *certifiable*:
+//!
+//! * [`graph`] expands any `system::topology::Topology` into an explicit
+//!   node/link graph — tori, dragonfly, DGX-2 crossbars, and the real
+//!   DGX-1 hybrid cube-mesh (which the analytical model shortcuts as
+//!   fully-connected) — with dimension-ordered and minimal-adaptive
+//!   routing;
+//! * [`algorithms`] emits message schedules for ring, recursive
+//!   halving/doubling, direct all-port, and hierarchical (BlueConnect
+//!   phase-per-dim) variants of every collective the sharding layer emits;
+//! * [`sim`] plays a schedule over the graph with link-occupancy
+//!   contention, deterministically (same config → same trace), returning
+//!   completion time plus per-link utilization;
+//! * [`select`] sweeps algorithms per (collective, payload, topology) and
+//!   distills a calibration table that `collective::CollectiveModel`
+//!   carries into `interchip::optimize`, `pipeline`, and the DSE.
+//!
+//! Fidelity contract (enforced by `rust/tests/fabric_sim.rs`): ring
+//! schedules on ring dims reproduce the α-β formulas exactly, and the best
+//! algorithm on contention-free fully-connected/switch dims lands within
+//! 15% of `collective::time` for AR/AG/RS/A2A/P2P. Broadcast is the known
+//! exception: the analytical switch form assumes hardware multicast that
+//! no software schedule reproduces, which the calibration path surfaces
+//! honestly instead of hiding.
+
+pub mod algorithms;
+pub mod graph;
+pub mod select;
+pub mod sim;
+
+pub use algorithms::{build, Algo, Msg, Schedule};
+pub use graph::{FabricGraph, Link};
+pub use select::{best, calibrate, calibrate_system, evaluate_algos, AlgoEval, CalibrateOpts};
+pub use sim::{simulate, Routing, SimConfig, SimResult};

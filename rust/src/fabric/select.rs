@@ -1,0 +1,229 @@
+//! Topology-aware algorithm selection and calibration.
+//!
+//! `evaluate_algos` sweeps every feasible algorithm family for one
+//! (collective, payload, group) and ranks them by simulated time — small
+//! latency-bound payloads favor direct/tree schedules, large
+//! bandwidth-bound payloads favor ring/hierarchical ones, and the winner
+//! depends on the topology (that is the point of the subsystem).
+//!
+//! `calibrate` turns those sweeps into a [`Calibration`] table the
+//! analytical model consumes (`CollectiveModel::Calibrated`): for every dim
+//! subset of a topology (bounded by `max_group`), the best simulated time
+//! is recorded as a ratio over `collective::time_hier` at a payload grid.
+//! `calibrate_system` wires the table into a [`SystemSpec`], which
+//! `interchip::optimize`, `pipeline` and `dse::evaluate_point_calibrated`
+//! then consult — the fabric's contention model flows into every
+//! downstream mapping decision.
+
+use super::algorithms::{self, Algo};
+use super::graph::FabricGraph;
+use super::sim::{simulate, SimConfig};
+use crate::collective::{self, CalPoint, Calibration, Collective, CollectiveModel};
+use crate::system::topology::{Dim, Topology};
+use crate::system::SystemSpec;
+
+/// One algorithm's simulated outcome for a (collective, payload, group).
+#[derive(Debug, Clone)]
+pub struct AlgoEval {
+    pub algo: Algo,
+    /// Simulated completion time (seconds).
+    pub time: f64,
+    pub max_link_util: f64,
+    pub msgs: usize,
+    pub packets: u64,
+    pub events: u64,
+}
+
+/// Simulate every feasible algorithm, fastest first (ties keep the
+/// `Algo::ALL` order, so results are deterministic).
+pub fn evaluate_algos(
+    g: &FabricGraph,
+    group: &[usize],
+    coll: Collective,
+    bytes: f64,
+    cfg: &SimConfig,
+) -> Vec<AlgoEval> {
+    let mut out = Vec::new();
+    for algo in Algo::ALL {
+        let Some(sched) = algorithms::build(g, algo, coll, group, bytes) else {
+            continue;
+        };
+        let r = simulate(g, &sched, cfg);
+        out.push(AlgoEval {
+            algo,
+            time: r.time,
+            max_link_util: r.max_link_util,
+            msgs: r.msgs,
+            packets: r.packets,
+            events: r.events,
+        });
+    }
+    out.sort_by(|a, b| a.time.total_cmp(&b.time));
+    out
+}
+
+/// The fastest algorithm for a (collective, payload, group), if any runs.
+pub fn best(
+    g: &FabricGraph,
+    group: &[usize],
+    coll: Collective,
+    bytes: f64,
+    cfg: &SimConfig,
+) -> Option<AlgoEval> {
+    evaluate_algos(g, group, coll, bytes, cfg).into_iter().next()
+}
+
+/// Calibration sweep configuration.
+#[derive(Debug, Clone)]
+pub struct CalibrateOpts {
+    /// Payload grid (bytes per chip); ratios interpolate between points.
+    pub payloads: Vec<f64>,
+    pub colls: Vec<Collective>,
+    pub sim: SimConfig,
+    /// Skip dim subsets whose chip group exceeds this (simulation cost
+    /// guard — on 1024-chip topologies only the sub-64-chip groups, which
+    /// are what TP/PP assignments actually use, get calibrated).
+    pub max_group: usize,
+}
+
+impl Default for CalibrateOpts {
+    fn default() -> Self {
+        CalibrateOpts {
+            // latency-bound, mixed, bandwidth-bound
+            payloads: vec![256e3, 4e6, 64e6],
+            colls: vec![
+                Collective::AllReduce,
+                Collective::AllGather,
+                Collective::ReduceScatter,
+                Collective::AllToAll,
+                Collective::Broadcast,
+                Collective::P2P,
+            ],
+            sim: SimConfig::default(),
+            max_group: 64,
+        }
+    }
+}
+
+/// Chips whose coordinates are 0 outside `dims_idx` — the canonical
+/// subgroup spanned by those dims (every congruent subgroup is symmetric).
+fn group_for(g: &FabricGraph, dims_idx: &[usize]) -> Vec<usize> {
+    (0..g.n_chips)
+        .filter(|&c| {
+            g.coords(c).iter().enumerate().all(|(i, &x)| dims_idx.contains(&i) || x == 0)
+        })
+        .collect()
+}
+
+/// Build a calibration table for every dim subset of `t` (see module docs).
+pub fn calibrate(t: &Topology, opts: &CalibrateOpts) -> Calibration {
+    let g = FabricGraph::new(t);
+    let nd = t.dims.len();
+    let mut cal = Calibration::default();
+    for mask in 1u32..(1u32 << nd) {
+        let dims_idx: Vec<usize> = (0..nd).filter(|&i| mask >> i & 1 == 1).collect();
+        if dims_idx.iter().any(|&i| t.dims[i].size <= 1) {
+            continue; // canonical masks only: singleton dims never vary
+        }
+        let group = group_for(&g, &dims_idx);
+        if group.len() < 2 || group.len() > opts.max_group {
+            continue;
+        }
+        let dim_refs: Vec<&Dim> = dims_idx.iter().map(|&i| &t.dims[i]).collect();
+        let key = collective::dims_key(&dim_refs);
+        if cal.contains_key(&key) {
+            continue; // a congruent subset was already swept
+        }
+        for &coll in &opts.colls {
+            let mut pts = Vec::with_capacity(opts.payloads.len());
+            for &s in &opts.payloads {
+                let ana = collective::time_hier(coll, s, &dim_refs);
+                if ana <= 0.0 {
+                    continue;
+                }
+                if let Some(b) = best(&g, &group, coll, s, &opts.sim) {
+                    pts.push(CalPoint { bytes: s, ratio: b.time / ana });
+                }
+            }
+            cal.insert(coll, key.clone(), pts);
+        }
+    }
+    cal
+}
+
+/// `sys` with its collective model swapped for a fabric calibration of its
+/// own topology — the entry point that threads simulation fidelity into
+/// `interchip::optimize` and the DSE.
+pub fn calibrate_system(sys: &SystemSpec, opts: &CalibrateOpts) -> SystemSpec {
+    let cal = calibrate(&sys.topology, opts);
+    sys.clone().with_collective_model(CollectiveModel::Calibrated(cal))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::system::interconnect::nvlink4;
+    use crate::system::topology;
+
+    #[test]
+    fn selection_flips_between_latency_and_bandwidth_bound_payloads() {
+        // the acceptance case: on a 16-chip ring, tiny payloads pick the
+        // latency-light direct schedule, huge ones the bandwidth-optimal ring
+        let t = topology::ring(16, &nvlink4());
+        let g = FabricGraph::new(&t);
+        let group: Vec<usize> = (0..16).collect();
+        let cfg = SimConfig::default();
+        let small = best(&g, &group, Collective::AllReduce, 32e3, &cfg).unwrap();
+        let large = best(&g, &group, Collective::AllReduce, 256e6, &cfg).unwrap();
+        assert_eq!(small.algo, Algo::Direct, "small payload: {:?}", small);
+        assert_eq!(large.algo, Algo::Ring, "large payload: {:?}", large);
+    }
+
+    #[test]
+    fn evaluate_algos_is_sorted_and_covers_all_families() {
+        let t = topology::torus2d(4, 4, &nvlink4());
+        let g = FabricGraph::new(&t);
+        let group: Vec<usize> = (0..16).collect();
+        let evals = evaluate_algos(&g, &group, Collective::AllReduce, 16e6, &SimConfig::default());
+        assert_eq!(evals.len(), 4);
+        assert!(evals.windows(2).all(|w| w[0].time <= w[1].time));
+        assert!(evals.iter().all(|e| e.time > 0.0 && e.msgs > 0));
+    }
+
+    #[test]
+    fn calibration_covers_ring_subsets_with_near_unity_ratio() {
+        let t = topology::ring(8, &nvlink4());
+        let cal = calibrate(&t, &CalibrateOpts::default());
+        assert!(!cal.is_empty());
+        let key = collective::dims_key(&[&t.dims[0]]);
+        // the best ring-dim algorithm reproduces the analytical formula at
+        // bandwidth-bound payloads (or beats it via direct at latency-bound)
+        let r = cal.ratio(Collective::AllReduce, &key, 64e6).expect("calibrated");
+        assert!(r > 0.5 && r < 1.1, "ratio {r}");
+    }
+
+    #[test]
+    fn calibrate_system_swaps_the_model() {
+        let link = nvlink4();
+        let sys = SystemSpec::new(
+            crate::system::chip::a100(),
+            crate::system::memory::hbm3(),
+            link.clone(),
+            topology::ring(8, &link),
+        );
+        assert!(matches!(sys.collective_model, CollectiveModel::Analytical));
+        let cal = calibrate_system(&sys, &CalibrateOpts::default());
+        match &cal.collective_model {
+            CollectiveModel::Calibrated(c) => assert!(!c.is_empty()),
+            m => panic!("expected calibrated model, got {m:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_groups_are_skipped() {
+        let t = topology::torus2d(16, 16, &nvlink4());
+        let opts = CalibrateOpts { max_group: 8, ..Default::default() };
+        let cal = calibrate(&t, &opts);
+        assert!(cal.is_empty(), "16-chip dims exceed the 8-chip guard");
+    }
+}

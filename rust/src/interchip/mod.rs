@@ -125,6 +125,7 @@ pub fn latency_vectors(
     let pp_dims = plan.pp_dims_ref(&sys.topology);
     let chip_flops = sys.chip.compute_flops();
 
+    let model = &sys.collective_model;
     let mut h_c = Vec::with_capacity(g.n_kernels());
     let mut h_n = Vec::with_capacity(g.n_kernels());
     for (i, k) in g.kernels.iter().enumerate() {
@@ -135,7 +136,7 @@ pub fn latency_vectors(
         // by tp (flops_factor = 1/tp) — per-chip time either way.
         h_c.push(k.flops * s.flops_factor / chip_flops);
         let out_bytes = kernel_out_bytes(g, crate::graph::KernelId(i));
-        h_n.push(sharding::inherent_time(s, out_bytes, k.weight_bytes, &tp_dims));
+        h_n.push(sharding::inherent_time_model(model, s, out_bytes, k.weight_bytes, &tp_dims));
     }
     let _ = tp; // degree itself is folded into flops_factor
 
@@ -144,11 +145,17 @@ pub fn latency_vectors(
     for t in &g.tensors {
         let from = scheme_of(g, scheme_idx, t.src.0, tp);
         let to = scheme_of(g, scheme_idx, t.dst.0, tp);
-        h_m.push(sharding::conversion_time(from.out_layout, to.in_layout, t.bytes, &tp_dims));
+        h_m.push(sharding::conversion_time_model(
+            model,
+            from.out_layout,
+            to.in_layout,
+            t.bytes,
+            &tp_dims,
+        ));
         // p2p across pipeline stages: the (sharded) tensor moves once
         let sharded = t.bytes * from.out_bytes_factor;
         h_p.push(if plan.pp > 1 {
-            crate::collective::time_hier(crate::collective::Collective::P2P, sharded, &pp_dims)
+            model.time_hier(crate::collective::Collective::P2P, sharded, &pp_dims)
         } else {
             0.0
         });

@@ -114,6 +114,7 @@ pub fn select_sharding(
     let tp_dims = plan.tp_dims_ref(&sys.topology);
     let n = g.n_kernels();
     let chip_flops = sys.chip.compute_flops();
+    let model = &sys.collective_model;
 
     // Precompute per-kernel scheme tables and their unary costs: inherent
     // collective time (Eq. 5) + per-chip compute time under the scheme
@@ -131,7 +132,7 @@ pub fn select_sharding(
             scheme_tbl[i]
                 .iter()
                 .map(|s| {
-                    sharding::inherent_time(s, out_bytes, k.weight_bytes, &tp_dims)
+                    sharding::inherent_time_model(model, s, out_bytes, k.weight_bytes, &tp_dims)
                         + k.flops * s.flops_factor / chip_flops
                         + k.weight_bytes * s.weight_factor * 1e-24
                 })
@@ -149,7 +150,8 @@ pub fn select_sharding(
                     scheme_tbl[t.dst.0]
                         .iter()
                         .map(|to| {
-                            sharding::conversion_time(
+                            sharding::conversion_time_model(
+                                model,
                                 from.out_layout,
                                 to.in_layout,
                                 t.bytes,

@@ -22,6 +22,7 @@ pub mod cluster;
 pub mod collective;
 pub mod config;
 pub mod dse;
+pub mod fabric;
 pub mod figures;
 pub mod graph;
 pub mod interchip;

@@ -8,6 +8,8 @@
 //!   serve [--tp N --pp N ...]     serving model (Fig. 20 style point)
 //!   simulate [--qps R ...]        request-level cluster serving simulation
 //!   plan --qps R --slo-ttft S --slo-tpot S   SLO-aware capacity planner
+//!   fabric [--topo F --chips N --coll C ...]  link-level collective simulation
+//!   topo [--topo F --chips N]     topology facts (links, bisection bandwidth)
 //!   run-pipeline <name>           execute an AOT pipeline via PJRT
 //!   verify                        verify every pipeline against the oracle
 
@@ -27,12 +29,14 @@ fn main() {
         Some("serve") => cmd_serve(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("plan") => cmd_plan(&args),
+        Some("fabric") => cmd_fabric(&args),
+        Some("topo") => cmd_topo(&args),
         Some("run") => cmd_run(&args),
         Some("run-pipeline") => cmd_run_pipeline(&args),
         Some("verify") => cmd_verify(&args),
         _ => {
             eprintln!(
-                "usage: dfmodel <catalog|figure|optimize|dse|serve|simulate|plan|run|run-pipeline|verify> [options]\n\
+                "usage: dfmodel <catalog|figure|optimize|dse|serve|simulate|plan|fabric|topo|run|run-pipeline|verify> [options]\n\
                  figures: {}",
                 figures::ALL.join(" ")
             );
@@ -291,6 +295,156 @@ fn cmd_plan(args: &Args) -> i32 {
             1
         }
     }
+}
+
+/// Parse `--topo <family> --chips N --link L` into a topology.
+fn parse_topology(
+    args: &Args,
+) -> Result<(dfmodel::system::Topology, dfmodel::system::LinkTech), String> {
+    use dfmodel::system::{interconnect, topology};
+    let link = match args.get_or("link", "nvlink4") {
+        "nvlink4" => interconnect::nvlink4(),
+        "pcie4" => interconnect::pcie4(),
+        "rdu" => interconnect::rdu_fabric(),
+        other => return Err(format!("unknown link '{other}' (known: nvlink4 pcie4 rdu)")),
+    };
+    let family = args.get_or("topo", "torus2d");
+    let chips = args.get_usize("chips", 16);
+    match topology::by_name(family, chips, &link) {
+        Some(t) => Ok((t, link)),
+        None => Err(format!(
+            "no '{family}' topology at {chips} chips \
+             (families: ring torus2d torus3d dragonfly dgx1 dgx2; \
+             dgx1 needs chips%8==0, dgx2 chips%16==0)"
+        )),
+    }
+}
+
+/// `dfmodel fabric` — link-level collective simulation: every algorithm
+/// family vs the analytical α-β model on one topology.
+fn cmd_fabric(args: &Args) -> i32 {
+    use dfmodel::collective::{self, Collective};
+    use dfmodel::fabric::{self, Algo, Routing, SimConfig};
+    use dfmodel::util::units::{fmt_bw, fmt_time};
+    let (topo, _link) = match parse_topology(args) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let coll = match args.get_or("coll", "allreduce") {
+        "allreduce" => Collective::AllReduce,
+        "allgather" => Collective::AllGather,
+        "reducescatter" => Collective::ReduceScatter,
+        "alltoall" => Collective::AllToAll,
+        "broadcast" => Collective::Broadcast,
+        "p2p" => Collective::P2P,
+        other => {
+            eprintln!(
+                "unknown collective '{other}' \
+                 (known: allreduce allgather reducescatter alltoall broadcast p2p)"
+            );
+            return 2;
+        }
+    };
+    let Some(routing) = Routing::parse(args.get_or("routing", "dimorder")) else {
+        eprintln!("unknown routing (known: dimorder adaptive)");
+        return 2;
+    };
+    let bytes = args.get_f64("bytes", args.get_f64("mb", 64.0) * 1e6);
+    let cfg = SimConfig {
+        routing,
+        seed: args.get_usize("seed", 0) as u64,
+        ..Default::default()
+    };
+    let g = fabric::FabricGraph::new(&topo);
+    println!(
+        "fabric : {} | {} chips | {} nodes | {} links | bisection {} | routing {}",
+        topo.name,
+        topo.n_chips(),
+        g.n_nodes(),
+        g.links.len(),
+        fmt_bw(topo.bisection_bytes_per_s()),
+        routing.name()
+    );
+    let dims: Vec<&dfmodel::system::Dim> = topo.dims.iter().collect();
+    let ana = collective::time_hier(coll, bytes, &dims);
+    println!("collective: {coll:?} {:.2} MB/chip | analytical {}", bytes / 1e6, fmt_time(ana));
+    let group: Vec<usize> = (0..topo.n_chips()).collect();
+    let mut evals = fabric::evaluate_algos(&g, &group, coll, bytes, &cfg);
+    if let Some(name) = args.get("algo") {
+        let Some(a) = Algo::parse(name) else {
+            eprintln!("unknown algo '{name}' (known: ring hd direct hier)");
+            return 2;
+        };
+        evals.retain(|e| e.algo == a);
+    }
+    if evals.is_empty() {
+        eprintln!("no feasible algorithm for this (collective, group)");
+        return 1;
+    }
+    println!(
+        "{:<8} {:>12} {:>10} {:>9} {:>8} {:>9}",
+        "algo", "simulated", "vs-ana", "max-link", "msgs", "packets"
+    );
+    for e in &evals {
+        println!(
+            "{:<8} {:>12} {:>9.1}% {:>8.0}% {:>8} {:>9}",
+            e.algo.name(),
+            fmt_time(e.time),
+            (e.time / ana - 1.0) * 100.0,
+            e.max_link_util * 100.0,
+            e.msgs,
+            e.packets
+        );
+    }
+    let best = &evals[0];
+    println!(
+        "best: {} at {} ({:+.1}% vs analytical)",
+        best.algo.name(),
+        fmt_time(best.time),
+        (best.time / ana - 1.0) * 100.0
+    );
+    let trace_limit = args.get_usize("trace", 0);
+    if trace_limit > 0 {
+        let sched = dfmodel::fabric::build(&g, best.algo, coll, &group, bytes)
+            .expect("best algo was feasible");
+        let tcfg = SimConfig { trace_limit, ..cfg };
+        let r = dfmodel::fabric::simulate(&g, &sched, &tcfg);
+        println!("trace (first {} packet-hops, seed {}):", r.trace.len(), tcfg.seed);
+        for line in &r.trace {
+            println!("  {line}");
+        }
+    }
+    0
+}
+
+/// `dfmodel topo` — chip/link counts and bisection bandwidth of a topology.
+fn cmd_topo(args: &Args) -> i32 {
+    use dfmodel::util::units::fmt_bw;
+    let (topo, _link) = match parse_topology(args) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    println!("{}", topo.name);
+    println!("chips      : {}", topo.n_chips());
+    for (i, d) in topo.dims.iter().enumerate() {
+        println!(
+            "dim {i}      : {:?} x{} ({:?}) | {} per link | bisection {} links",
+            d.kind,
+            d.size,
+            d.fabric,
+            fmt_bw(d.link_bw),
+            d.bisection_links()
+        );
+    }
+    println!("links      : {:.0}", topo.total_links());
+    println!("bisection  : {} one-way", fmt_bw(topo.bisection_bytes_per_s()));
+    0
 }
 
 /// `dfmodel run --config exp.json` — declarative experiment launcher.

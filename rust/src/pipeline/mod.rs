@@ -142,7 +142,7 @@ fn llm_training_with_mapping(
     if dp > 1 {
         let dp_dims = inter.plan.dp_dims_ref(&sys.topology);
         let grad_bytes = cfg.params() * cfg.dtype_bytes / (tp as f64 * pp as f64);
-        let t_dp = crate::collective::time_hier(
+        let t_dp = sys.collective_model.time_hier(
             crate::collective::Collective::AllReduce,
             grad_bytes,
             &dp_dims,

@@ -7,7 +7,7 @@
 //! layout (Fig. 4B). The per-scheme costs populate the paper's `c_i`
 //! vectors; the pairwise conversion costs populate the `C_j` matrices.
 
-use crate::collective::{time_hier, Collective};
+use crate::collective::{Collective, CollectiveModel};
 use crate::graph::{Kernel, KernelKind};
 use crate::system::topology::Dim;
 
@@ -199,6 +199,18 @@ pub fn conversion_op(from: Layout, to: Layout) -> Option<Collective> {
 /// partial buffers; all-gather reconstructs the full size; only all-to-all
 /// re-shards per-chip shards of S/tp.
 pub fn conversion_time(from: Layout, to: Layout, bytes: f64, tp_dims: &[&Dim]) -> f64 {
+    conversion_time_model(&CollectiveModel::Analytical, from, to, bytes, tp_dims)
+}
+
+/// `conversion_time` under a caller-chosen collective-cost model (the
+/// fabric-calibrated path threads through here).
+pub fn conversion_time_model(
+    model: &CollectiveModel,
+    from: Layout,
+    to: Layout,
+    bytes: f64,
+    tp_dims: &[&Dim],
+) -> f64 {
     let tp: usize = tp_dims.iter().map(|d| d.size).product();
     match conversion_op(from, to) {
         None => 0.0,
@@ -207,7 +219,7 @@ pub fn conversion_time(from: Layout, to: Layout, bytes: f64, tp_dims: &[&Dim]) -
                 Collective::AllToAll => bytes / tp.max(1) as f64,
                 _ => bytes,
             };
-            time_hier(op, payload, tp_dims)
+            model.time_hier(op, payload, tp_dims)
         }
     }
 }
@@ -222,13 +234,24 @@ pub fn inherent_time(
     weight_bytes: f64,
     tp_dims: &[&Dim],
 ) -> f64 {
+    inherent_time_model(&CollectiveModel::Analytical, scheme, out_bytes, weight_bytes, tp_dims)
+}
+
+/// `inherent_time` under a caller-chosen collective-cost model.
+pub fn inherent_time_model(
+    model: &CollectiveModel,
+    scheme: &ShardScheme,
+    out_bytes: f64,
+    weight_bytes: f64,
+    tp_dims: &[&Dim],
+) -> f64 {
     let t_out = match scheme.inherent {
         None => 0.0,
-        Some((op, factor)) => time_hier(op, out_bytes * factor, tp_dims),
+        Some((op, factor)) => model.time_hier(op, out_bytes * factor, tp_dims),
     };
     let t_w = match scheme.weight_comm {
         None => 0.0,
-        Some((op, factor)) => time_hier(op, weight_bytes * factor, tp_dims),
+        Some((op, factor)) => model.time_hier(op, weight_bytes * factor, tp_dims),
     };
     t_out + t_w
 }

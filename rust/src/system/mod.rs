@@ -11,7 +11,9 @@ pub mod topology;
 pub use chip::{ChipSpec, ExecutionModel};
 pub use interconnect::LinkTech;
 pub use memory::MemoryTech;
-pub use topology::{Dim, DimKind, Topology};
+pub use topology::{Dim, DimFabric, DimKind, Topology};
+
+use crate::collective::CollectiveModel;
 
 /// A complete system design point: `n_chips` accelerators of one kind, each
 /// with one memory technology, connected by one link technology arranged in
@@ -22,13 +24,29 @@ pub struct SystemSpec {
     pub memory: MemoryTech,
     pub link: LinkTech,
     pub topology: Topology,
+    /// Collective-cost model the optimizer passes consult: analytical by
+    /// default; `fabric::select::calibrate_system` swaps in a
+    /// simulation-calibrated one.
+    pub collective_model: CollectiveModel,
 }
 
 impl SystemSpec {
     pub fn new(chip: ChipSpec, memory: MemoryTech, link: LinkTech, topology: Topology) -> Self {
-        let s = SystemSpec { chip, memory, link, topology };
+        let s = SystemSpec {
+            chip,
+            memory,
+            link,
+            topology,
+            collective_model: CollectiveModel::Analytical,
+        };
         s.validate();
         s
+    }
+
+    /// Same system with a different collective-cost model.
+    pub fn with_collective_model(mut self, model: CollectiveModel) -> Self {
+        self.collective_model = model;
+        self
     }
 
     pub fn n_chips(&self) -> usize {

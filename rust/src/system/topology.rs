@@ -19,6 +19,19 @@ pub enum DimKind {
     Switch,
 }
 
+/// Physical realization of a dim inside the `fabric` link-level graph. The
+/// closed-form `collective` model always keys off `kind`; the simulator
+/// keys off this, so a dim can keep an analytical shortcut (DGX-1 modeled
+/// as fully-connected) while the fabric expands the true wiring.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DimFabric {
+    /// Expand per `kind`: ring / all-pairs / star through a crossbar node.
+    Kind,
+    /// The DGX-1 8-GPU NVLink hybrid cube-mesh [2]: two fully-connected
+    /// quads {0..3}, {4..7} plus the cube matching i↔i+4 (size must be 8).
+    CubeMesh,
+}
+
 /// One network dimension: `size` chips connected by `kind` with per-link
 /// bandwidth/latency from the link technology.
 #[derive(Debug, Clone)]
@@ -29,12 +42,44 @@ pub struct Dim {
     pub link_bw: f64,
     /// Per-hop latency (s).
     pub latency: f64,
+    /// Link-level wiring used by the fabric simulator.
+    pub fabric: DimFabric,
 }
 
 impl Dim {
     pub fn new(kind: DimKind, size: usize, link: &LinkTech) -> Self {
         assert!(size >= 1);
-        Dim { kind, size, link_bw: link.bandwidth, latency: link.latency }
+        Dim {
+            kind,
+            size,
+            link_bw: link.bandwidth,
+            latency: link.latency,
+            fabric: DimFabric::Kind,
+        }
+    }
+
+    /// One-way bisection capacity of this dim in links (multiply by
+    /// `link_bw` for bytes/s): the minimum directed link count crossing a
+    /// balanced split of the dim's nodes.
+    pub fn bisection_links(&self) -> f64 {
+        if self.size <= 1 {
+            return 0.0;
+        }
+        if self.fabric == DimFabric::CubeMesh {
+            // quad|quad split severs only the 4 matching edges
+            return 4.0;
+        }
+        match self.kind {
+            DimKind::Ring => {
+                if self.size == 2 {
+                    1.0
+                } else {
+                    2.0
+                }
+            }
+            DimKind::FullyConnected => ((self.size / 2) * ((self.size + 1) / 2)) as f64,
+            DimKind::Switch => (self.size / 2) as f64,
+        }
     }
 
     /// Links contributed per node in this dimension (for price/power).
@@ -88,6 +133,24 @@ impl Topology {
     pub fn dim_sizes(&self) -> Vec<usize> {
         self.dims.iter().map(|d| d.size).collect()
     }
+
+    /// One-way bisection bandwidth (bytes/s): the worst balanced cut runs
+    /// perpendicular to one dim, crossed by that dim's bisection links in
+    /// each of the `n_chips / size` parallel lines. 0 for a single chip.
+    pub fn bisection_bytes_per_s(&self) -> f64 {
+        let n = self.n_chips() as f64;
+        let worst = self
+            .dims
+            .iter()
+            .filter(|d| d.size > 1)
+            .map(|d| d.bisection_links() * d.link_bw * n / d.size as f64)
+            .fold(f64::INFINITY, f64::min);
+        if worst.is_finite() {
+            worst
+        } else {
+            0.0
+        }
+    }
 }
 
 /// 2-D torus: X × Y rings.
@@ -121,15 +184,19 @@ pub fn dragonfly(group: usize, n_groups: usize, link: &LinkTech) -> Topology {
     )
 }
 
-/// DGX-1 [2]: 8-GPU NVLink hybrid-cube-mesh (modeled as fully-connected) +
-/// scale-out switch fabric.
+/// DGX-1 [2]: 8-GPU NVLink hybrid-cube-mesh + scale-out switch fabric.
+///
+/// The closed-form `collective` model keeps the historical fully-connected
+/// *shortcut* for the intra-node dim (every per-kind formula below treats
+/// it as all-pairs); the dim is tagged `DimFabric::CubeMesh` so the fabric
+/// simulator expands the true 16-edge hybrid cube-mesh and the `fabric`
+/// figure quantifies the shortcut's optimism (~4× on large all-reduces).
 pub fn dgx1(n_nodes: usize, link: &LinkTech) -> Topology {
+    let mut local = Dim::new(DimKind::FullyConnected, 8, link);
+    local.fabric = DimFabric::CubeMesh;
     Topology::new(
         &format!("DGX-1[8x{n_nodes}]"),
-        vec![
-            Dim::new(DimKind::FullyConnected, 8, link),
-            Dim::new(DimKind::Switch, n_nodes, link),
-        ],
+        vec![local, Dim::new(DimKind::Switch, n_nodes, link)],
     )
 }
 
@@ -147,6 +214,55 @@ pub fn dgx2(n_nodes: usize, link: &LinkTech) -> Topology {
 /// 1-D ring of n chips (the §VII default 8×1 ring).
 pub fn ring(n: usize, link: &LinkTech) -> Topology {
     Topology::new(&format!("ring[{n}]"), vec![Dim::new(DimKind::Ring, n, link)])
+}
+
+/// Build a topology family by name at a total chip count, using balanced
+/// factorizations (`torus2d 16` → 4×4, `torus3d 16` → 4×2×2). `None` when
+/// the family name is unknown or the count does not fit it (DGX-1 needs a
+/// multiple of 8, DGX-2 of 16). This is the `dfmodel fabric`/`topo` entry.
+pub fn by_name(family: &str, chips: usize, link: &LinkTech) -> Option<Topology> {
+    if chips == 0 {
+        return None;
+    }
+    match family {
+        "ring" => Some(ring(chips, link)),
+        "torus2d" => {
+            let (x, y) = factor2(chips);
+            Some(torus2d(x, y, link))
+        }
+        "torus3d" => {
+            let (x, y, z) = factor3(chips);
+            Some(torus3d(x, y, z, link))
+        }
+        "dragonfly" => {
+            let (g, n) = factor2(chips);
+            Some(dragonfly(g, n, link))
+        }
+        "dgx1" => (chips % 8 == 0).then(|| dgx1(chips / 8, link)),
+        "dgx2" => (chips % 16 == 0).then(|| dgx2(chips / 16, link)),
+        _ => None,
+    }
+}
+
+/// Nearest-to-square divisor pair x·y == n with x ≥ y.
+fn factor2(n: usize) -> (usize, usize) {
+    let mut y = (n as f64).sqrt().floor() as usize;
+    y = y.max(1);
+    while y > 1 && n % y != 0 {
+        y -= 1;
+    }
+    (n / y, y)
+}
+
+/// Nearest-to-cube divisor triple x·y·z == n with x ≥ y ≥ z.
+fn factor3(n: usize) -> (usize, usize, usize) {
+    let mut z = (n as f64).cbrt().floor() as usize;
+    z = z.max(1);
+    while z > 1 && n % z != 0 {
+        z -= 1;
+    }
+    let (x, y) = factor2(n / z);
+    (x, y, z)
 }
 
 /// The paper's five 1024-chip DSE topologies (§VI-C) for a link tech.
@@ -202,5 +318,58 @@ mod tests {
         assert_eq!(Dim::new(DimKind::Ring, 8, &l).links_per_node(), 2.0);
         assert_eq!(Dim::new(DimKind::FullyConnected, 8, &l).links_per_node(), 7.0);
         assert_eq!(Dim::new(DimKind::Switch, 8, &l).links_per_node(), 2.0);
+    }
+
+    #[test]
+    fn bisection_per_dim_kind() {
+        let l = nvlink4();
+        assert_eq!(Dim::new(DimKind::Ring, 8, &l).bisection_links(), 2.0);
+        assert_eq!(Dim::new(DimKind::Ring, 2, &l).bisection_links(), 1.0);
+        assert_eq!(Dim::new(DimKind::Ring, 1, &l).bisection_links(), 0.0);
+        assert_eq!(Dim::new(DimKind::FullyConnected, 8, &l).bisection_links(), 16.0);
+        assert_eq!(Dim::new(DimKind::FullyConnected, 5, &l).bisection_links(), 6.0);
+        assert_eq!(Dim::new(DimKind::Switch, 8, &l).bisection_links(), 4.0);
+        // the DGX-1 cube-mesh is cut at its 4 matching edges
+        let cube = &dgx1(1, &l).dims[0];
+        assert_eq!(cube.fabric, DimFabric::CubeMesh);
+        assert_eq!(cube.bisection_links(), 4.0);
+    }
+
+    #[test]
+    fn bisection_of_topologies() {
+        let l = nvlink4();
+        let bw = l.bandwidth;
+        // 32×32 torus: 2 links × 32 parallel rows in the worst direction
+        let t2 = torus2d(32, 32, &l);
+        assert!((t2.bisection_bytes_per_s() - 64.0 * bw).abs() < 1e-3);
+        // a single chip has no bisection
+        assert_eq!(ring(1, &l).bisection_bytes_per_s(), 0.0);
+        // dragonfly's all-pairs global dim dwarfs the torus cut
+        assert!(dragonfly(32, 32, &l).bisection_bytes_per_s() > t2.bisection_bytes_per_s());
+        // DGX-1: intra-node cube-mesh cut = 4·bw × (n/8) lines
+        let d1 = dgx1(128, &l);
+        assert!((d1.bisection_bytes_per_s() - 4.0 * bw * 128.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn by_name_families() {
+        let l = nvlink4();
+        let cases = [
+            ("ring", 7),
+            ("torus2d", 16),
+            ("torus3d", 16),
+            ("dragonfly", 12),
+            ("dgx1", 64),
+            ("dgx2", 64),
+        ];
+        for (fam, chips) in cases {
+            let t = by_name(fam, chips, &l).expect(fam);
+            assert_eq!(t.n_chips(), chips, "{fam}");
+        }
+        assert_eq!(by_name("torus2d", 16, &l).unwrap().dim_sizes(), vec![4, 4]);
+        assert_eq!(by_name("torus3d", 16, &l).unwrap().dim_sizes(), vec![4, 2, 2]);
+        assert!(by_name("dgx1", 12, &l).is_none());
+        assert!(by_name("nope", 8, &l).is_none());
+        assert!(by_name("ring", 0, &l).is_none());
     }
 }

@@ -1,0 +1,170 @@
+//! Fabric-simulator acceptance tests: fidelity against the analytical
+//! collective model on contention-free dims, determinism, and the
+//! calibrated-model path through the inter-chip optimizer and the DSE.
+
+use dfmodel::collective::{self, Collective, CollectiveModel};
+use dfmodel::fabric::{
+    best, build, calibrate_system, evaluate_algos, Algo, CalibrateOpts, FabricGraph, SimConfig,
+};
+use dfmodel::graph::gpt::{gpt3_175b, gpt_layer_graph};
+use dfmodel::interchip::{self, InterChipOptions};
+use dfmodel::system::interconnect::nvlink4;
+use dfmodel::system::topology::{self, Dim, DimKind};
+use dfmodel::system::{chip, interconnect, memory, SystemSpec};
+use dfmodel::util::check::check;
+
+const FIVE: [Collective; 5] = [
+    Collective::AllReduce,
+    Collective::AllGather,
+    Collective::ReduceScatter,
+    Collective::AllToAll,
+    Collective::P2P,
+];
+
+/// Acceptance: the ring algorithm on ring dims reproduces the α-β formula.
+#[test]
+fn ring_algorithm_matches_analytical_on_ring_dims() {
+    for k in [4, 8, 16] {
+        for bytes in [1e6, 64e6] {
+            let t = topology::ring(k, &nvlink4());
+            let g = FabricGraph::new(&t);
+            let group: Vec<usize> = (0..k).collect();
+            let s = build(&g, Algo::Ring, Collective::AllReduce, &group, bytes).unwrap();
+            let sim = dfmodel::fabric::simulate(&g, &s, &SimConfig::default()).time;
+            let ana = collective::time(Collective::AllReduce, bytes, &t.dims[0]);
+            let rel = (sim - ana).abs() / ana;
+            assert!(rel < 0.15, "k={k} bytes={bytes}: sim {sim} vs ana {ana} ({rel:.3})");
+            // in fact the match is exact up to float noise
+            assert!(rel < 1e-9, "expected exact match, got rel {rel}");
+        }
+    }
+    // a single ring dim *inside* a torus behaves identically
+    let t = topology::torus2d(4, 4, &nvlink4());
+    let g = FabricGraph::new(&t);
+    let col0: Vec<usize> = (0..4).collect(); // varies dim 0 only
+    let s = build(&g, Algo::Ring, Collective::AllReduce, &col0, 16e6).unwrap();
+    let sim = dfmodel::fabric::simulate(&g, &s, &SimConfig::default()).time;
+    let ana = collective::time(Collective::AllReduce, 16e6, &t.dims[0]);
+    assert!((sim - ana).abs() / ana < 1e-9);
+}
+
+/// Satellite: on contention-free fully-connected/switch dims, the best
+/// simulated algorithm lands within 15% of `collective::time` for every
+/// collective with a scatter-style optimal schedule. (Broadcast is excluded
+/// by design: the closed form assumes hardware multicast.)
+#[test]
+fn fabric_matches_analytical_on_fc_and_switch_dims() {
+    check("fabric-fc-switch-15pct", 24, |rng| {
+        let kind =
+            if rng.below(2) == 0 { DimKind::FullyConnected } else { DimKind::Switch };
+        let k = [2usize, 4, 8, 16][rng.below(4)];
+        let bytes = rng.uniform(8e6, 128e6);
+        let coll = FIVE[rng.below(FIVE.len())];
+        let t = topology::Topology::new("prop", vec![Dim::new(kind, k, &nvlink4())]);
+        let g = FabricGraph::new(&t);
+        let group: Vec<usize> = (0..k).collect();
+        let b = best(&g, &group, coll, bytes, &SimConfig::default()).expect("feasible");
+        let ana = collective::time(coll, bytes, &t.dims[0]);
+        let rel = (b.time - ana).abs() / ana;
+        assert!(
+            rel < 0.15,
+            "{kind:?}({k}) {coll:?} S={bytes:.2e}: best {:?} sim {} vs ana {ana} ({rel:.3})",
+            b.algo,
+            b.time
+        );
+    });
+}
+
+/// The hierarchical schedule is the simulation twin of `time_hier`.
+#[test]
+fn hier_schedule_matches_time_hier_on_torus() {
+    let t = topology::torus2d(4, 4, &nvlink4());
+    let g = FabricGraph::new(&t);
+    let group: Vec<usize> = (0..16).collect();
+    let dims: Vec<&Dim> = t.dims.iter().collect();
+    for coll in [Collective::AllReduce, Collective::AllGather, Collective::ReduceScatter] {
+        for bytes in [1e6, 64e6] {
+            let s = build(&g, Algo::Hier, coll, &group, bytes).unwrap();
+            let sim = dfmodel::fabric::simulate(&g, &s, &SimConfig::default()).time;
+            let ana = collective::time_hier(coll, bytes, &dims);
+            let rel = (sim - ana).abs() / ana;
+            assert!(rel < 0.02, "{coll:?} S={bytes:.0e}: sim {sim} ana {ana} ({rel:.3})");
+        }
+    }
+}
+
+/// Same config → bit-identical results, across the whole selection sweep.
+#[test]
+fn evaluation_sweep_is_deterministic() {
+    let t = topology::torus2d(4, 4, &nvlink4());
+    let g = FabricGraph::new(&t);
+    let group: Vec<usize> = (0..16).collect();
+    let cfg = SimConfig::default();
+    let a = evaluate_algos(&g, &group, Collective::AllReduce, 16e6, &cfg);
+    let b = evaluate_algos(&g, &group, Collective::AllReduce, 16e6, &cfg);
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.algo, y.algo);
+        assert_eq!(x.time, y.time);
+        assert_eq!(x.events, y.events);
+    }
+}
+
+/// The DGX-1 hybrid cube-mesh is materially slower than the analytical
+/// fully-connected shortcut — the fidelity gap the `fabric` figure reports.
+#[test]
+fn dgx1_cube_mesh_gap_is_quantified() {
+    let t = topology::dgx1(1, &nvlink4());
+    let g = FabricGraph::new(&t);
+    let group: Vec<usize> = (0..8).collect();
+    let b = best(&g, &group, Collective::AllReduce, 64e6, &SimConfig::default()).unwrap();
+    let fc = Dim::new(DimKind::FullyConnected, 8, &nvlink4());
+    let ana = collective::time(Collective::AllReduce, 64e6, &fc);
+    let gap = b.time / ana;
+    assert!(gap > 2.0 && gap < 10.0, "cube-mesh/FC gap {gap}");
+}
+
+/// CollectiveModel::Calibrated threads through `interchip::optimize`: the
+/// optimizer runs end-to-end on simulation-calibrated costs and the result
+/// stays in the same regime as the analytical one.
+#[test]
+fn calibrated_model_threads_through_interchip_optimize() {
+    let link = interconnect::pcie4();
+    let sys = SystemSpec::new(
+        chip::sn10(),
+        memory::ddr4(),
+        link.clone(),
+        topology::ring(8, &link),
+    );
+    let cal_sys = calibrate_system(&sys, &CalibrateOpts::default());
+    match &cal_sys.collective_model {
+        CollectiveModel::Calibrated(c) => assert!(!c.is_empty()),
+        m => panic!("expected calibrated model, got {m:?}"),
+    }
+    let g = gpt_layer_graph(&gpt3_175b(), 1.0);
+    let opts = InterChipOptions { force_degrees: Some((8, 1, 1)), ..Default::default() };
+    let ana = interchip::optimize(&g, &sys, &opts).expect("analytical mapping");
+    let cal = interchip::optimize(&g, &cal_sys, &opts).expect("calibrated mapping");
+    assert!(cal.t_cri.is_finite() && cal.t_cri > 0.0);
+    let ratio = cal.t_cri / ana.t_cri;
+    assert!((0.2..5.0).contains(&ratio), "calibrated/analytical t_cri ratio {ratio}");
+}
+
+/// The calibrated path also reaches the DSE sweep entry point.
+#[test]
+fn calibrated_dse_point_evaluates() {
+    use dfmodel::dse::{evaluate_point, evaluate_point_calibrated, Workload};
+    let link = interconnect::nvlink4();
+    let sys = SystemSpec::new(
+        chip::h100(),
+        memory::hbm3(),
+        link.clone(),
+        topology::torus2d(32, 32, &link),
+    );
+    let ana = evaluate_point(Workload::Llm, &sys).expect("analytical point");
+    let cal = evaluate_point_calibrated(Workload::Llm, &sys, &CalibrateOpts::default())
+        .expect("calibrated point");
+    assert!(cal.utilization > 0.0 && cal.utilization <= 1.0);
+    let ratio = cal.utilization / ana.utilization;
+    assert!((0.2..5.0).contains(&ratio), "calibrated/analytical utilization ratio {ratio}");
+}

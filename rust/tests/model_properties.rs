@@ -103,6 +103,30 @@ fn hierarchical_collectives_nonnegative_and_finite() {
 }
 
 #[test]
+fn hierarchical_time_monotone_in_payload_across_all_dim_kinds() {
+    // the fabric calibration interpolates over payload, so the analytical
+    // baseline it rescales must itself be monotone in bytes for every
+    // hierarchy of dim kinds
+    check("hier-monotone-bytes", 120, |rng| {
+        let d1 = Dim::new(*rng.choice(&KINDS), 2 + rng.below(31), &nvlink4());
+        let d2 = Dim::new(*rng.choice(&KINDS), 1 + rng.below(32), &pcie4());
+        let d3 = Dim::new(*rng.choice(&KINDS), 1 + rng.below(16), &nvlink4());
+        let coll = *rng.choice(&COLLS);
+        let s1 = rng.uniform(1e3, 1e9);
+        let s2 = s1 * rng.uniform(1.0, 16.0);
+        let t1 = time_hier(coll, s1, &[&d1, &d2, &d3]);
+        let t2 = time_hier(coll, s2, &[&d1, &d2, &d3]);
+        assert!(
+            t2 >= t1 - 1e-15,
+            "{coll:?} over ({:?},{:?},{:?}): S {s1:.3e}->{s2:.3e} but t {t1:.3e}->{t2:.3e}",
+            d1.kind,
+            d2.kind,
+            d3.kind
+        );
+    });
+}
+
+#[test]
 fn conversion_algebra_consistency() {
     const LAYOUTS: [Layout; 5] =
         [Layout::Replicated, Layout::Row, Layout::Col, Layout::Head, Layout::Partial];
