@@ -13,8 +13,9 @@
 //!
 //!     make artifacts && cargo run --release --example e2e_gpt_mapping
 
+use dfmodel::api;
 use dfmodel::graph::gpt::{gpt_layer_graph, GptConfig};
-use dfmodel::intrachip::{self, IntraChipOptions};
+use dfmodel::intrachip::IntraChipOptions;
 use dfmodel::runtime::{find_artifacts, Runtime};
 use dfmodel::system::{chip, memory};
 use dfmodel::util::table::Table;
@@ -52,7 +53,7 @@ fn main() {
             opts.force_assignment =
                 Some(graph.kernels.iter().map(|k| f(&k.name)).collect());
         }
-        intrachip::optimize_intra(&graph, &small_chip, &mem, &opts).expect("feasible")
+        api::map_chip(&graph, &small_chip, &mem, &opts).expect("feasible")
     };
     let kbk_model = model(true, None);
     let vendor_model = model(false, Some(dfmodel::figures::casestudy::vendor_partition_of));

@@ -5,10 +5,11 @@
 //!
 //!     cargo run --release --example fabric_sim
 
+use dfmodel::api;
 use dfmodel::collective::{self, Collective, CollectiveModel};
 use dfmodel::fabric::{self, CalibrateOpts, FabricGraph, SimConfig};
 use dfmodel::graph::gpt::{gpt3_175b, gpt_layer_graph};
-use dfmodel::interchip::{self, InterChipOptions};
+use dfmodel::interchip::InterChipOptions;
 use dfmodel::system::{chip, interconnect, memory, topology, Dim, SystemSpec};
 use dfmodel::util::units::fmt_time;
 
@@ -48,14 +49,14 @@ fn main() {
         plink.clone(),
         topology::ring(8, &plink),
     );
-    let cal_sys = fabric::calibrate_system(&sys, &CalibrateOpts::default());
+    let cal_sys = api::calibrate(&sys, &CalibrateOpts::default());
     if let CollectiveModel::Calibrated(c) = &cal_sys.collective_model {
         println!("\ncalibrated {} (collective × dim-group) tables", c.len());
     }
     let gr = gpt_layer_graph(&gpt3_175b(), 1.0);
     let opts = InterChipOptions { force_degrees: Some((8, 1, 1)), ..Default::default() };
-    let ana = interchip::optimize(&gr, &sys, &opts).expect("analytical mapping");
-    let cal = interchip::optimize(&gr, &cal_sys, &opts).expect("calibrated mapping");
+    let ana = api::map_graph(&gr, &sys, &opts).expect("analytical mapping");
+    let cal = api::map_graph(&gr, &cal_sys, &opts).expect("calibrated mapping");
     println!("GPT3-175B layer on 8×SN10 ring, TP=8:");
     println!("  analytical model : t_cri {}", fmt_time(ana.t_cri));
     println!("  calibrated model : t_cri {}", fmt_time(cal.t_cri));

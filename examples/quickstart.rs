@@ -1,32 +1,39 @@
-//! Quickstart: build a workload dataflow graph, describe a system, run both
-//! DFModel optimization passes, and print the resulting mapping.
+//! Quickstart: describe a scenario with the builder API, evaluate it, and
+//! read the report — then peel the facade back one level and run the two
+//! optimization passes (§IV inter-chip, §V intra-chip) by hand.
 //!
 //!     cargo run --release --example quickstart
 
+use dfmodel::api::{self, Scenario, SystemCfg};
 use dfmodel::graph::gpt::{gpt3_175b, gpt_layer_graph};
 use dfmodel::interchip::{self, InterChipOptions};
-use dfmodel::intrachip::{self, IntraChipOptions};
-use dfmodel::system::{chip, interconnect, memory, topology, SystemSpec};
+use dfmodel::intrachip::IntraChipOptions;
 use dfmodel::util::units::fmt_time;
 
 fn main() {
-    // 1. the workload: one GPT3-175B transformer layer (Fig. 2A, 14 kernels)
+    // ---- 1. the facade: one scenario in, one report out ----
+    // GPT3-175B training on 8 SambaNova SN10 RDUs on a PCIe ring (§VII)
+    let scenario = Scenario::llm("gpt3-175b")
+        .batch(64.0)
+        .on(SystemCfg::new("sn10", "ddr4", "pcie4").ring(8));
+    let report = scenario.evaluate().expect("feasible mapping");
+    print!("{}", report.render());
+    println!("(as JSON: every field of `report.to_json()` is stable)\n");
+
+    // the same scenario round-trips through JSON — save it, ship it, rerun
+    // it with `dfmodel optimize --scenario my.json`
+    let text = scenario.to_json().pretty();
+    assert_eq!(Scenario::parse(&text).unwrap(), scenario);
+
+    // ---- 2. under the facade: the two passes on one layer graph ----
     let cfg = gpt3_175b();
     let graph = gpt_layer_graph(&cfg, 1.0);
+    let sys = SystemCfg::new("sn10", "ddr4", "pcie4").ring(8).build().unwrap();
     println!("workload: {}", graph.summary());
-
-    // 2. the system: 8 SambaNova SN10 RDUs on a PCIe ring (§VII)
-    let link = interconnect::pcie4();
-    let sys = SystemSpec::new(
-        chip::sn10(),
-        memory::ddr4(),
-        link.clone(),
-        topology::ring(8, &link),
-    );
     println!("system:   {}", sys.describe());
 
-    // 3. inter-chip pass (§IV): TP/PP/DP + sharding + stages
-    let inter = interchip::optimize(&graph, &sys, &InterChipOptions::default())
+    // inter-chip pass (§IV): TP/PP/DP + sharding + stages
+    let inter = api::map_graph(&graph, &sys, &InterChipOptions::default())
         .expect("feasible inter-chip mapping");
     println!(
         "\ninter-chip: {} | critical time {} | explored O(10^{:.0}) mappings",
@@ -35,10 +42,10 @@ fn main() {
         inter.space_log10
     );
 
-    // 4. intra-chip pass (§V): fuse kernels into on-chip partitions
+    // intra-chip pass (§V): fuse kernels into on-chip partitions
     let (sharded, net_time) =
         interchip::shard_graph(&graph, &sys, &inter.plan, &inter.scheme_idx);
-    let intra = intrachip::optimize_intra(
+    let intra = api::map_chip(
         &sharded,
         &sys.chip,
         &sys.memory,
@@ -46,8 +53,11 @@ fn main() {
     )
     .expect("feasible intra-chip mapping");
 
-    println!("intra-chip: {} fused partitions, per-input time {}", intra.assignment.n_used(),
-        fmt_time(intra.total_time));
+    println!(
+        "intra-chip: {} fused partitions, per-input time {}",
+        intra.assignment.n_used(),
+        fmt_time(intra.total_time)
+    );
     for (i, names) in intra.partition_names(&sharded).iter().enumerate() {
         println!("  partition {i}: {}", names.join(", "));
     }

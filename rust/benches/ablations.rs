@@ -7,6 +7,7 @@
 //!   A4  tile water-filling vs even split (critical-time gap)
 //!   A5  kernel-by-kernel efficiency derate sensitivity (Table VI chain)
 
+use dfmodel::api;
 use dfmodel::collective::{time, time_hier, Collective};
 use dfmodel::graph::gpt::{gpt3_175b, gpt3_1t, gpt_coarse_graph, gpt_layer_graph};
 use dfmodel::interchip::{self, InterChipOptions};
@@ -110,7 +111,7 @@ fn a3_stage_dp_vs_greedy() -> String {
     );
     let g = gpt_coarse_graph(&gpt3_1t(), 1.0);
     let opts = InterChipOptions { force_degrees: Some((16, 16, 4)), ..Default::default() };
-    let m = interchip::optimize(&g, &sys, &opts).expect("feasible");
+    let m = api::map_graph(&g, &sys, &opts).expect("feasible");
     // greedy: equal layer counts
     let per = g.n_kernels() / 16;
     let greedy_worst = m

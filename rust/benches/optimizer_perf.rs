@@ -6,9 +6,10 @@
 //! 80-point sweep. The paper's scale reference: a trillion-parameter LLM
 //! onto 1024 accelerators, full joint space, in 20 min on 64 CPUs.
 
+use dfmodel::api::{self, Scenario, SystemCfg};
 use dfmodel::graph::gpt::{gpt3_175b, gpt3_1t, gpt_coarse_graph, gpt_layer_graph};
 use dfmodel::interchip::{self, InterChipOptions};
-use dfmodel::intrachip::{self, IntraChipOptions};
+use dfmodel::intrachip::IntraChipOptions;
 use dfmodel::system::{chip, interconnect, memory, topology, SystemSpec};
 use dfmodel::util::bench::Runner;
 
@@ -45,14 +46,14 @@ fn main() {
     );
     let coarse = gpt_coarse_graph(&gpt3_1t(), 1.0);
     r.run("interchip_optimize(GPT3-1T coarse, 1024 chips)", 1, 3, || {
-        let _ = interchip::optimize(&coarse, &sys1024, &InterChipOptions::default());
+        let _ = api::map_graph(&coarse, &sys1024, &InterChipOptions::default());
     });
 
     // ---- intra-chip fusion DP on the sharded layer ----
     let (sharded, net_time) =
         interchip::shard_graph(&fine, &sys8, &plan8, &vec![1; fine.n_kernels()]);
     r.run("intrachip_optimize(sharded layer, SN10)", 2, 10, || {
-        let _ = intrachip::optimize_intra(
+        let _ = api::map_chip(
             &sharded,
             &sys8.chip,
             &sys8.memory,
@@ -63,6 +64,15 @@ fn main() {
     // ---- one LLM design point end to end ----
     r.run("llm_design_point(GPT3-1T, 1024 H100)", 1, 3, || {
         let _ = dfmodel::pipeline::llm_training(&gpt3_1t(), &sys1024, 2048.0);
+    });
+
+    // ---- the facade end to end: Scenario -> Report (guards the api
+    // overhead over the raw pipeline call above) ----
+    let scenario = Scenario::llm("gpt3-175b")
+        .batch(64.0)
+        .on(SystemCfg::new("sn10", "ddr4", "pcie4").ring(8));
+    r.run("scenario_evaluate(GPT3-175B, 8xSN10 ring)", 1, 5, || {
+        let _ = scenario.evaluate();
     });
 
     // ---- the full 80-point LLM DSE sweep (the paper's headline run) ----

@@ -1,0 +1,555 @@
+//! # The Scenario → Mapping → Report facade
+//!
+//! One typed, serializable entry point for everything DFModel can
+//! co-optimize: build a [`Scenario`] (workload + system + knobs — via the
+//! builder or a JSON file), call [`Scenario::evaluate`], and read the
+//! resulting [`Report`] (with its [`Mapping`]) through stable accessors or
+//! as JSON.
+//!
+//! ```text
+//!   Scenario ──evaluate()──▶ internals (pub(crate))          ──▶ Report
+//!   workload ─┐              interchip::optimize (§IV)            mapping (TP/PP/DP,
+//!   system   ─┼─▶ build ───▶ intrachip::optimize_intra (§V)       schemes, stages,
+//!   knobs    ─┘              fabric::calibrate_system             partitions)
+//!   serving/cluster/fabric   serving::evaluate (§VIII-A)          perf | serving |
+//!   options                  cluster::{engine, planner}           cluster | plan |
+//!                            fabric::{sim, select}                fabric sections
+//! ```
+//!
+//! The legacy free functions (`dse::evaluate_point*`,
+//! `interchip::optimize`, `intrachip::optimize_intra`,
+//! `fabric::calibrate_system`) are `pub(crate)` internals; external
+//! callers go through this module — either the scenario path or the typed
+//! wrappers ([`evaluate_design`], [`map_graph`], [`map_chip`],
+//! [`calibrate`]) for single-pass studies.
+
+pub mod report;
+pub mod scenario;
+
+pub use report::{
+    ClusterReport, FabricAlgoEval, FabricReport, Mapping, PerfReport, PlanCandidate, PlanReport,
+    Report, ServingReport,
+};
+pub use scenario::{
+    ClusterCfg, CollectiveCfg, FabricCfg, Goal, Knobs, Scenario, ServingCfg, SystemCfg,
+    TopologyCfg, WorkloadCfg,
+};
+
+use crate::dse::{DesignPoint, Workload};
+use crate::fabric::CalibrateOpts;
+use crate::graph::DataflowGraph;
+use crate::interchip::{InterChipMapping, InterChipOptions};
+use crate::intrachip::{IntraChipMapping, IntraChipOptions};
+use crate::system::{ChipSpec, MemoryTech, SystemSpec};
+use crate::util::error::Result;
+use crate::{bail, err};
+
+use scenario::BuiltWorkload;
+
+/// Evaluate one DSE workload on one explicit system design point; `None`
+/// when infeasible. The facade over the `pub(crate)`
+/// `dse::evaluate_point`.
+pub fn evaluate_design(w: Workload, sys: &SystemSpec) -> Option<DesignPoint> {
+    crate::dse::evaluate_point(w, sys)
+}
+
+/// [`evaluate_design`] with the system's collective costs recalibrated by
+/// the fabric simulator first.
+pub fn evaluate_design_calibrated(
+    w: Workload,
+    sys: &SystemSpec,
+    opts: &CalibrateOpts,
+) -> Option<DesignPoint> {
+    crate::dse::evaluate_point_calibrated(w, sys, opts)
+}
+
+/// The §IV inter-chip pass on an explicit graph: TP/PP/DP degrees,
+/// per-kernel sharding, pipeline stages. `None` when no plan satisfies the
+/// capacity constraints.
+pub fn map_graph(
+    g: &DataflowGraph,
+    sys: &SystemSpec,
+    opts: &InterChipOptions,
+) -> Option<InterChipMapping> {
+    crate::interchip::optimize(g, sys, opts)
+}
+
+/// The §V intra-chip pass on one chip's (already sharded) subgraph: kernel
+/// fusion into sequential partitions under SRAM/DRAM constraints.
+pub fn map_chip(
+    g: &DataflowGraph,
+    chip: &ChipSpec,
+    memory: &MemoryTech,
+    opts: &IntraChipOptions,
+) -> Option<IntraChipMapping> {
+    crate::intrachip::optimize_intra(g, chip, memory, opts)
+}
+
+/// The system with its collective model swapped for a fabric calibration
+/// of its own topology.
+pub fn calibrate(sys: &SystemSpec, opts: &CalibrateOpts) -> SystemSpec {
+    crate::fabric::calibrate_system(sys, opts)
+}
+
+/// The §VI-C 80-system sweep for one workload (facade over `dse::sweep`).
+pub fn sweep(w: Workload) -> Vec<DesignPoint> {
+    crate::dse::sweep(w)
+}
+
+/// JSON rendering of DSE design points (`dfmodel dse --json`).
+pub fn design_points_json(w: Workload, points: &[DesignPoint]) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    Json::obj(vec![
+        ("workload", Json::from(w.name())),
+        (
+            "points",
+            Json::arr(points.iter().map(|p| {
+                Json::obj(vec![
+                    ("chip", Json::from(p.chip.as_str())),
+                    ("topo", Json::from(p.topo.as_str())),
+                    ("mem", Json::from(p.mem.as_str())),
+                    ("link", Json::from(p.link.as_str())),
+                    ("utilization", Json::from(p.utilization)),
+                    ("cost_eff", Json::from(p.cost_eff)),
+                    ("power_eff", Json::from(p.power_eff)),
+                    (
+                        "breakdown",
+                        Json::obj(vec![
+                            ("compute", Json::from(p.breakdown.0)),
+                            ("memory", Json::from(p.breakdown.1)),
+                            ("network", Json::from(p.breakdown.2)),
+                        ]),
+                    ),
+                ])
+            })),
+        ),
+    ])
+}
+
+impl Scenario {
+    /// Run the scenario end to end and return its [`Report`]. Errors carry
+    /// the reason (bad name, infeasible split, capacity violation) instead
+    /// of a bare `None`.
+    pub fn evaluate(&self) -> Result<Report> {
+        // no upfront check(): every eval path validates what it touches
+        // with the same errors, so nothing is built twice
+        match self.goal {
+            Goal::Map => self.eval_map(),
+            Goal::Serve => self.eval_serve(),
+            Goal::Simulate => self.eval_simulate(),
+            Goal::Plan => self.eval_plan(),
+            Goal::Fabric => self.eval_fabric(),
+        }
+    }
+
+    fn report_base(&self, system: String) -> Report {
+        Report {
+            goal: self.goal,
+            workload: self.workload.describe(),
+            system,
+            mapping: None,
+            perf: None,
+            serving: None,
+            cluster: None,
+            plan: None,
+            fabric: None,
+        }
+    }
+
+    fn eval_map(&self) -> Result<Report> {
+        let base_sys = self.system.build()?;
+        let (sys, calibrated) = match self.knobs.calibrate_opts()? {
+            None => (base_sys, false),
+            Some(opts) => (crate::fabric::calibrate_system(&base_sys, &opts), true),
+        };
+        let opts = self.knobs.interchip_options();
+        let r = match self.workload.build(&self.knobs)? {
+            BuiltWorkload::Gpt { cfg, batch } => {
+                crate::pipeline::llm_training_opts(&cfg, &sys, batch, &opts)
+            }
+            BuiltWorkload::Graph { graph, passes, max_dp } => {
+                // graph workloads default to the legacy state factor (bf16
+                // weights + grads, §VI-C) unless the knob overrides it
+                let mut gopts = opts.clone();
+                gopts.max_dp = max_dp;
+                if self.knobs.state_bytes_per_weight_byte.is_none() {
+                    gopts.state_bytes_per_weight_byte = 2.0;
+                }
+                crate::pipeline::workload_pass_opts(&graph, &sys, passes, &gopts)
+            }
+        };
+        let r = r.ok_or_else(|| {
+            err!(
+                "no feasible mapping for {} on {} (capacity constraints)",
+                self.workload.describe(),
+                sys.describe()
+            )
+        })?;
+        let (c, m, n) = r.breakdown_frac();
+        let mut rep = self.report_base(sys.describe());
+        rep.mapping = Some(Mapping {
+            tp: r.tp,
+            pp: r.pp,
+            dp: r.dp,
+            n_stages: r.mapping.n_stages,
+            n_partitions: r.mapping.n_partitions,
+            schemes: r.mapping.schemes.clone(),
+            calibrated,
+        });
+        rep.perf = Some(PerfReport {
+            step_time: r.step_time,
+            utilization: r.utilization,
+            achieved_flops: r.achieved_flops,
+            cost_eff: r.achieved_flops / 1e9 / sys.price_usd(),
+            power_eff: r.achieved_flops / 1e9 / sys.power_w(),
+            breakdown: (c, m, n),
+        });
+        Ok(rep)
+    }
+
+    fn eval_serve(&self) -> Result<Report> {
+        let sys = self.system.build_serving()?;
+        let model = self.workload.llama_config()?;
+        let pt = crate::serving::ServingPoint {
+            tp: self.serving.tp,
+            pp: self.serving.pp,
+            batch: self.serving.batch,
+            prompt_len: self.serving.prompt,
+            context: self.serving.context,
+        };
+        let m = crate::serving::evaluate(&model, &sys, &pt)?;
+        let mut rep = self.report_base(format!("{} x{}", sys.chip.name, sys.n_chips));
+        rep.mapping = Some(Mapping {
+            tp: pt.tp,
+            pp: pt.pp,
+            dp: 1,
+            n_stages: pt.pp,
+            n_partitions: 0,
+            schemes: Vec::new(),
+            calibrated: false,
+        });
+        rep.serving = Some(ServingReport {
+            ttft: m.ttft,
+            prefill_tps: m.prefill_tps,
+            tpot: m.tpot,
+            decode_tps: m.decode_tps,
+            prefill_breakdown: m.prefill_breakdown,
+            decode_breakdown: m.decode_breakdown,
+        });
+        Ok(rep)
+    }
+
+    fn eval_simulate(&self) -> Result<Report> {
+        use crate::cluster::engine::{simulate, ReplicaConfig, Slo};
+        use crate::cluster::workload::{Arrivals, LengthDist, TraceSpec};
+        let sys = self.system.build_serving()?;
+        let model = self.workload.llama_config()?;
+        let c = &self.cluster;
+        c.check_traffic()?;
+        let mut cfg = ReplicaConfig::new(model, sys, self.serving.tp, self.serving.pp);
+        cfg.max_batch = c.max_batch;
+        let arrivals = match c.arrivals.as_str() {
+            "poisson" => Arrivals::Poisson { rate: c.rate },
+            "bursty" => {
+                Arrivals::Bursty { base: c.rate * 0.25, peak: c.rate * 1.75, period: c.period }
+            }
+            other => bail!("unknown arrival process '{other}' (known: poisson bursty)"),
+        };
+        let spec = TraceSpec {
+            seed: c.seed,
+            n_requests: c.requests,
+            arrivals,
+            prompt: LengthDist { mean: c.prompt_mean, sigma: 0.4, min: 16, max: 8192 },
+            output: LengthDist { mean: c.output_mean, sigma: 0.6, min: 2, max: 2048 },
+        };
+        let slo = Slo { ttft: c.slo_ttft, tpot: c.slo_tpot };
+        let r = simulate(&cfg, c.replicas, &spec.generate(), &slo)?;
+        let mut rep = self.report_base(format!(
+            "{} x{} (TP{}xPP{}) x {} replica(s)",
+            cfg.sys.chip.name, cfg.sys.n_chips, cfg.tp, cfg.pp, c.replicas
+        ));
+        rep.mapping = Some(Mapping {
+            tp: cfg.tp,
+            pp: cfg.pp,
+            dp: c.replicas,
+            n_stages: cfg.pp,
+            n_partitions: 0,
+            schemes: Vec::new(),
+            calibrated: false,
+        });
+        rep.cluster = Some(ClusterReport {
+            offered: r.n_offered,
+            completed: r.n_completed,
+            rejected: r.n_rejected,
+            makespan: r.makespan,
+            throughput_rps: r.throughput_rps,
+            goodput_rps: r.goodput_rps,
+            slo_attainment: r.slo_attainment,
+            output_tokens_per_s: r.output_tokens_per_s,
+            kv_peak_frac: r.kv_peak_frac,
+            events: r.events,
+            steps: r.steps,
+            queue: r.queue,
+            ttft: r.ttft,
+            tpot: r.tpot,
+        });
+        Ok(rep)
+    }
+
+    fn eval_plan(&self) -> Result<Report> {
+        use crate::cluster::engine::Slo;
+        use crate::cluster::planner::{plan, FleetPlan, PlanTarget, PlanTraffic};
+        let model = self.workload.llama_config()?;
+        let c = &self.cluster;
+        c.check_plan()?;
+        let target = PlanTarget {
+            qps: c.qps,
+            slo: Slo { ttft: c.slo_ttft, tpot: c.slo_tpot },
+            attainment: c.attainment,
+        };
+        let mut traffic =
+            PlanTraffic { seed: c.seed, n_requests: c.requests, ..Default::default() };
+        traffic.prompt.mean = c.prompt_mean;
+        traffic.output.mean = c.output_mean;
+        let res = plan(&model, &target, &traffic);
+        let cand = |f: &FleetPlan| PlanCandidate {
+            platform: f.platform.clone(),
+            group: f.group,
+            tp: f.tp,
+            pp: f.pp,
+            replicas: f.replicas,
+            chips_total: f.chips_total,
+            usd_per_hour: f.usd_per_hour,
+            capex_usd: f.capex_usd,
+            slo_attainment: f.report.slo_attainment,
+            ttft_p99: f.report.ttft.p99,
+            tpot_p99: f.report.tpot.p99,
+            meets_target: f.meets_target,
+        };
+        let mut rep = self.report_base("serving-platform catalog".into());
+        rep.plan = Some(PlanReport {
+            qps: c.qps,
+            slo_ttft: c.slo_ttft,
+            slo_tpot: c.slo_tpot,
+            attainment: c.attainment,
+            candidates: res.candidates.len(),
+            best: res.best.map(|i| cand(&res.candidates[i])),
+            top: res.candidates.iter().take(c.top).map(cand).collect(),
+        });
+        Ok(rep)
+    }
+
+    fn eval_fabric(&self) -> Result<Report> {
+        use crate::fabric::{self, Algo, Routing, SimConfig};
+        let (topo, _link) = self.system.build_topology()?;
+        let f = &self.fabric;
+        let coll = scenario::collective_by_name(&f.collective)?;
+        let routing = Routing::parse(&f.routing)
+            .ok_or_else(|| err!("unknown routing '{}' (known: dimorder adaptive)", f.routing))?;
+        let cfg = SimConfig { routing, seed: f.seed, ..Default::default() };
+        let g = fabric::FabricGraph::new(&topo);
+        let dims: Vec<&crate::system::Dim> = topo.dims.iter().collect();
+        let ana = crate::collective::time_hier(coll, f.bytes, &dims);
+        let group: Vec<usize> = (0..topo.n_chips()).collect();
+        let mut evals = fabric::evaluate_algos(&g, &group, coll, f.bytes, &cfg);
+        if let Some(name) = &f.algo {
+            let a = Algo::parse(name)
+                .ok_or_else(|| err!("unknown algo '{name}' (known: ring hd direct hier)"))?;
+            evals.retain(|e| e.algo == a);
+        }
+        if evals.is_empty() {
+            bail!("no feasible algorithm for {coll:?} on {}", topo.name);
+        }
+        let mut rep = self.report_base(topo.name.clone());
+        rep.fabric = Some(FabricReport {
+            topology: topo.name.clone(),
+            chips: topo.n_chips(),
+            nodes: g.n_nodes(),
+            links: g.links.len(),
+            bisection_bytes_per_s: topo.bisection_bytes_per_s(),
+            collective: f.collective.clone(),
+            bytes: f.bytes,
+            routing: f.routing.clone(),
+            analytical: ana,
+            best: evals[0].algo.name().to_string(),
+            evals: evals
+                .iter()
+                .map(|e| FabricAlgoEval {
+                    algo: e.algo.name().to_string(),
+                    time: e.time,
+                    vs_analytical: e.time / ana - 1.0,
+                    max_link_util: e.max_link_util,
+                    msgs: e.msgs,
+                    packets: e.packets,
+                })
+                .collect(),
+        });
+        Ok(rep)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::system::{chip, interconnect, memory, topology};
+
+    /// The four paper workloads must reproduce `dse::evaluate_point` bit
+    /// for bit through the facade (same code path, same numbers).
+    #[test]
+    fn facade_matches_legacy_dse_points_on_paper_workloads() {
+        let cases: [(Workload, Scenario, SystemCfg); 4] = [
+            (
+                Workload::Llm,
+                Scenario::llm("gpt3-1t").batch(2048.0),
+                SystemCfg::new("h100", "hbm3", "nvlink4").torus2d(32, 32),
+            ),
+            (
+                Workload::Dlrm,
+                Scenario::dlrm(),
+                SystemCfg::new("sn30", "hbm3", "nvlink4").torus2d(32, 32),
+            ),
+            (
+                Workload::Hpl,
+                Scenario::hpl(),
+                SystemCfg::new("tpuv4", "ddr4", "pcie4").torus2d(32, 32),
+            ),
+            (
+                Workload::Fft,
+                Scenario::fft(),
+                SystemCfg::new("tpuv4", "hbm3", "nvlink4").torus2d(32, 32),
+            ),
+        ];
+        for (w, scenario, syscfg) in cases {
+            let sys = syscfg.build().unwrap();
+            let legacy = crate::dse::evaluate_point(w, &sys);
+            let facade = scenario.on(syscfg).evaluate();
+            match (legacy, facade) {
+                (Some(p), Ok(r)) => {
+                    let perf = r.perf.as_ref().expect("map goal fills perf");
+                    assert_eq!(perf.utilization, p.utilization, "{w:?} utilization");
+                    assert_eq!(perf.cost_eff, p.cost_eff, "{w:?} cost_eff");
+                    assert_eq!(perf.power_eff, p.power_eff, "{w:?} power_eff");
+                    assert_eq!(perf.breakdown, p.breakdown, "{w:?} breakdown");
+                    assert!(r.degrees().is_some());
+                }
+                (None, Err(_)) => {} // infeasible either way is consistent
+                (l, f) => panic!("{w:?}: legacy {l:?} vs facade {f:?} disagree on feasibility"),
+            }
+        }
+    }
+
+    /// `map_chip` is the same optimizer as the `pub(crate)` internal.
+    #[test]
+    fn map_chip_matches_internal_optimizer() {
+        use crate::intrachip::IntraChipOptions;
+        let g = crate::graph::gpt::gpt_layer_graph(&crate::graph::gpt::gpt3_175b(), 1.0);
+        let c = chip::sn10();
+        let mem = memory::ddr4();
+        let a = map_chip(&g, &c, &mem, &IntraChipOptions::default()).unwrap();
+        let b = crate::intrachip::optimize_intra(&g, &c, &mem, &IntraChipOptions::default())
+            .unwrap();
+        assert_eq!(a.total_time, b.total_time);
+        assert_eq!(a.assignment.part, b.assignment.part);
+    }
+
+    /// Scenario serde round-trip: same scenario in, identical report out.
+    #[test]
+    fn roundtripped_scenario_reports_identically() {
+        let s = Scenario::llm("gpt3-175b")
+            .batch(64.0)
+            .on(SystemCfg::new("sn10", "ddr4", "pcie4").ring(8));
+        let back = Scenario::parse(&s.to_json().pretty()).unwrap();
+        assert_eq!(s, back);
+        let a = s.evaluate().unwrap();
+        let b = back.evaluate().unwrap();
+        assert_eq!(a, b, "round-tripped scenario must evaluate identically");
+        assert!(a.utilization().unwrap() > 0.0);
+        let (tp, pp, dp) = a.degrees().unwrap();
+        assert_eq!(tp * pp * dp, 8);
+    }
+
+    /// The mapping section carries schemes/stages/partitions.
+    #[test]
+    fn map_report_exposes_mapping_detail() {
+        let r = Scenario::llm("gpt3-175b").evaluate().unwrap();
+        let m = r.mapping.as_ref().unwrap();
+        assert!(m.n_stages >= 1);
+        assert!(m.n_partitions >= 1);
+        assert!(!m.schemes.is_empty(), "LLM mapping must report per-kernel schemes");
+        let json = r.to_json();
+        assert!(json.get("mapping").is_some());
+        assert!(json.get("perf").unwrap().get("utilization").is_some());
+    }
+
+    /// Serve goal matches `serving::evaluate` directly.
+    #[test]
+    fn serve_scenario_matches_serving_model() {
+        let r = Scenario::llama("8b").evaluate().unwrap();
+        let v = r.serving.as_ref().unwrap();
+        let sys = crate::serving::sn40l_x16();
+        let m = crate::serving::evaluate(
+            &crate::graph::llama::llama3_8b(),
+            &sys,
+            &crate::serving::ServingPoint {
+                tp: 16,
+                pp: 1,
+                batch: 1.0,
+                prompt_len: 1024.0,
+                context: 1024.0,
+            },
+        )
+        .unwrap();
+        assert_eq!(v.ttft, m.ttft);
+        assert_eq!(v.tpot, m.tpot);
+        assert_eq!(v.decode_tps, m.decode_tps);
+    }
+
+    /// An infeasible serving split surfaces the descriptive error.
+    #[test]
+    fn infeasible_split_reports_reason() {
+        let e = Scenario::llama("8b").serving_split(5, 2).evaluate().unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("TP5") && msg.contains("PP2"), "{msg}");
+        assert!(msg.contains("16-chip"), "{msg}");
+    }
+
+    /// The calibrated-knob path reaches the fabric and changes the model.
+    #[test]
+    fn calibrated_fabric_knob_threads_through() {
+        let s = Scenario::llm("gpt3-175b").calibrated_fabric();
+        let r = s.evaluate().unwrap();
+        assert!(r.mapping.unwrap().calibrated);
+        // the analytical twin of the same scenario differs only in knobs
+        let a = Scenario::llm("gpt3-175b").evaluate().unwrap();
+        assert!(!a.mapping.unwrap().calibrated);
+    }
+
+    /// Fabric goal reproduces `evaluate_algos` through the facade.
+    #[test]
+    fn fabric_scenario_races_algorithms() {
+        let s = Scenario::llm("gpt3-175b")
+            .on(SystemCfg::new("h100", "hbm3", "nvlink4").torus2d(4, 4))
+            .fabric_sweep("allreduce", 16e6);
+        let r = s.evaluate().unwrap();
+        let f = r.fabric.as_ref().unwrap();
+        assert_eq!(f.chips, 16);
+        assert_eq!(f.evals.len(), 4, "all four families run on a torus");
+        assert!(f.evals.windows(2).all(|w| w[0].time <= w[1].time));
+        assert_eq!(f.best, f.evals[0].algo);
+        assert!(f.analytical > 0.0);
+    }
+
+    /// evaluate_design wrapper mirrors the internal point evaluation.
+    #[test]
+    fn evaluate_design_wrapper_works() {
+        let link = interconnect::nvlink4();
+        let sys = SystemSpec::new(
+            chip::h100(),
+            memory::hbm3(),
+            link.clone(),
+            topology::torus2d(32, 32, &link),
+        );
+        let p = evaluate_design(Workload::Llm, &sys).expect("feasible");
+        assert!(p.utilization > 0.0 && p.utilization <= 1.0);
+    }
+}

@@ -1,0 +1,543 @@
+//! The output side of the facade: [`Mapping`] (what the optimizer chose)
+//! and [`Report`] (what it achieves), with stable accessors, a JSON
+//! emitter (`--json` on every CLI subcommand), and a human rendering.
+
+use std::fmt::Write as _;
+
+use crate::cluster::engine::Pcts;
+use crate::util::json::Json;
+use crate::util::table::Table;
+use crate::util::units::{fmt_bw, fmt_time};
+
+use super::scenario::Goal;
+
+/// The mapping decisions behind a report: parallelization degrees, the
+/// per-kernel shard schemes, pipeline stages, and fused on-chip partitions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mapping {
+    pub tp: usize,
+    pub pp: usize,
+    /// Data-parallel degree (replica count for serving goals).
+    pub dp: usize,
+    /// Pipeline stages of the inter-chip pass.
+    pub n_stages: usize,
+    /// Fused partitions of the intra-chip pass (0 for serving goals).
+    pub n_partitions: usize,
+    /// (kernel, scheme) pairs of the chosen sharding (empty for serving).
+    pub schemes: Vec<(String, String)>,
+    /// Whether collective costs came from the fabric calibration.
+    pub calibrated: bool,
+}
+
+impl Mapping {
+    pub fn degrees(&self) -> (usize, usize, usize) {
+        (self.tp, self.pp, self.dp)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("tp", Json::from(self.tp)),
+            ("pp", Json::from(self.pp)),
+            ("dp", Json::from(self.dp)),
+            ("n_stages", Json::from(self.n_stages)),
+            ("n_partitions", Json::from(self.n_partitions)),
+            ("calibrated", Json::from(self.calibrated)),
+            (
+                "schemes",
+                Json::Obj(
+                    self.schemes.iter().map(|(k, v)| (k.clone(), Json::from(v.as_str()))).collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Throughput/cost/power outcome of a `Map` scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PerfReport {
+    /// Wall-clock of one training iteration / one solve (seconds).
+    pub step_time: f64,
+    /// Achieved / peak throughput of the whole system.
+    pub utilization: f64,
+    pub achieved_flops: f64,
+    /// Achieved GFLOP/s per dollar.
+    pub cost_eff: f64,
+    /// Achieved GFLOP/s per watt.
+    pub power_eff: f64,
+    /// (compute, memory, network) fractional latency breakdown.
+    pub breakdown: (f64, f64, f64),
+}
+
+impl PerfReport {
+    pub fn to_json(&self) -> Json {
+        let (c, m, n) = self.breakdown;
+        Json::obj(vec![
+            ("step_time_s", Json::from(self.step_time)),
+            ("utilization", Json::from(self.utilization)),
+            ("achieved_flops", Json::from(self.achieved_flops)),
+            ("cost_eff_gflops_per_usd", Json::from(self.cost_eff)),
+            ("power_eff_gflops_per_w", Json::from(self.power_eff)),
+            (
+                "breakdown",
+                Json::obj(vec![
+                    ("compute", Json::from(c)),
+                    ("memory", Json::from(m)),
+                    ("network", Json::from(n)),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// Analytical serving metrics of a `Serve` scenario (§VIII-A).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingReport {
+    pub ttft: f64,
+    pub prefill_tps: f64,
+    pub tpot: f64,
+    pub decode_tps: f64,
+    pub prefill_breakdown: (f64, f64, f64),
+    pub decode_breakdown: (f64, f64, f64),
+}
+
+fn breakdown_json(b: (f64, f64, f64)) -> Json {
+    Json::obj(vec![
+        ("compute", Json::from(b.0)),
+        ("memory", Json::from(b.1)),
+        ("network", Json::from(b.2)),
+    ])
+}
+
+impl ServingReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ttft_s", Json::from(self.ttft)),
+            ("prefill_tps", Json::from(self.prefill_tps)),
+            ("tpot_s", Json::from(self.tpot)),
+            ("decode_tps", Json::from(self.decode_tps)),
+            ("prefill_breakdown", breakdown_json(self.prefill_breakdown)),
+            ("decode_breakdown", breakdown_json(self.decode_breakdown)),
+        ])
+    }
+}
+
+fn pcts_json(p: &Pcts) -> Json {
+    Json::obj(vec![
+        ("mean", Json::from(p.mean)),
+        ("p50", Json::from(p.p50)),
+        ("p95", Json::from(p.p95)),
+        ("p99", Json::from(p.p99)),
+    ])
+}
+
+/// Aggregate outcome of a `Simulate` scenario (cluster engine).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterReport {
+    pub offered: usize,
+    pub completed: usize,
+    pub rejected: usize,
+    pub makespan: f64,
+    pub throughput_rps: f64,
+    pub goodput_rps: f64,
+    pub slo_attainment: f64,
+    pub output_tokens_per_s: f64,
+    pub kv_peak_frac: f64,
+    pub events: u64,
+    pub steps: u64,
+    pub queue: Pcts,
+    pub ttft: Pcts,
+    pub tpot: Pcts,
+}
+
+impl ClusterReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("offered", Json::from(self.offered)),
+            ("completed", Json::from(self.completed)),
+            ("rejected", Json::from(self.rejected)),
+            ("makespan_s", Json::from(self.makespan)),
+            ("throughput_rps", Json::from(self.throughput_rps)),
+            ("goodput_rps", Json::from(self.goodput_rps)),
+            ("slo_attainment", Json::from(self.slo_attainment)),
+            ("output_tokens_per_s", Json::from(self.output_tokens_per_s)),
+            ("kv_peak_frac", Json::from(self.kv_peak_frac)),
+            ("events", Json::from(self.events as usize)),
+            ("steps", Json::from(self.steps as usize)),
+            ("queue", pcts_json(&self.queue)),
+            ("ttft", pcts_json(&self.ttft)),
+            ("tpot", pcts_json(&self.tpot)),
+        ])
+    }
+}
+
+/// One evaluated fleet of a `Plan` scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanCandidate {
+    pub platform: String,
+    pub group: usize,
+    pub tp: usize,
+    pub pp: usize,
+    pub replicas: usize,
+    pub chips_total: usize,
+    pub usd_per_hour: f64,
+    pub capex_usd: f64,
+    pub slo_attainment: f64,
+    pub ttft_p99: f64,
+    pub tpot_p99: f64,
+    pub meets_target: bool,
+}
+
+impl PlanCandidate {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("platform", Json::from(self.platform.as_str())),
+            ("group", Json::from(self.group)),
+            ("tp", Json::from(self.tp)),
+            ("pp", Json::from(self.pp)),
+            ("replicas", Json::from(self.replicas)),
+            ("chips_total", Json::from(self.chips_total)),
+            ("usd_per_hour", Json::from(self.usd_per_hour)),
+            ("capex_usd", Json::from(self.capex_usd)),
+            ("slo_attainment", Json::from(self.slo_attainment)),
+            ("ttft_p99_s", Json::from(self.ttft_p99)),
+            ("tpot_p99_s", Json::from(self.tpot_p99)),
+            ("meets_target", Json::from(self.meets_target)),
+        ])
+    }
+}
+
+/// Outcome of a `Plan` scenario: the cheapest feasible fleet plus the top
+/// of the ranking.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanReport {
+    pub qps: f64,
+    pub slo_ttft: f64,
+    pub slo_tpot: f64,
+    pub attainment: f64,
+    /// Total candidates evaluated.
+    pub candidates: usize,
+    /// Cheapest fleet meeting the target, if any.
+    pub best: Option<PlanCandidate>,
+    /// Cheapest-first ranking (bounded by the scenario's `top`).
+    pub top: Vec<PlanCandidate>,
+}
+
+impl PlanReport {
+    pub fn to_json(&self) -> Json {
+        let mut kv = vec![
+            ("qps", Json::from(self.qps)),
+            ("slo_ttft_s", Json::from(self.slo_ttft)),
+            ("slo_tpot_s", Json::from(self.slo_tpot)),
+            ("attainment", Json::from(self.attainment)),
+            ("candidates", Json::from(self.candidates)),
+            ("feasible", Json::from(self.best.is_some())),
+        ];
+        if let Some(b) = &self.best {
+            kv.push(("best", b.to_json()));
+        }
+        kv.push(("top", Json::arr(self.top.iter().map(|c| c.to_json()))));
+        Json::obj(kv)
+    }
+}
+
+/// One algorithm's simulated outcome in a `Fabric` scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FabricAlgoEval {
+    pub algo: String,
+    pub time: f64,
+    /// `time / analytical - 1`.
+    pub vs_analytical: f64,
+    pub max_link_util: f64,
+    pub msgs: usize,
+    pub packets: u64,
+}
+
+/// Outcome of a `Fabric` scenario: every algorithm family raced against
+/// the analytical α-β model on one topology.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FabricReport {
+    pub topology: String,
+    pub chips: usize,
+    pub nodes: usize,
+    pub links: usize,
+    pub bisection_bytes_per_s: f64,
+    pub collective: String,
+    pub bytes: f64,
+    pub routing: String,
+    pub analytical: f64,
+    /// Fastest algorithm family name.
+    pub best: String,
+    /// Fastest-first evaluations.
+    pub evals: Vec<FabricAlgoEval>,
+}
+
+impl FabricReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("topology", Json::from(self.topology.as_str())),
+            ("chips", Json::from(self.chips)),
+            ("nodes", Json::from(self.nodes)),
+            ("links", Json::from(self.links)),
+            ("bisection_bytes_per_s", Json::from(self.bisection_bytes_per_s)),
+            ("collective", Json::from(self.collective.as_str())),
+            ("bytes", Json::from(self.bytes)),
+            ("routing", Json::from(self.routing.as_str())),
+            ("analytical_s", Json::from(self.analytical)),
+            ("best", Json::from(self.best.as_str())),
+            (
+                "evals",
+                Json::arr(self.evals.iter().map(|e| {
+                    Json::obj(vec![
+                        ("algo", Json::from(e.algo.as_str())),
+                        ("time_s", Json::from(e.time)),
+                        ("vs_analytical", Json::from(e.vs_analytical)),
+                        ("max_link_util", Json::from(e.max_link_util)),
+                        ("msgs", Json::from(e.msgs)),
+                        ("packets", Json::from(e.packets as usize)),
+                    ])
+                })),
+            ),
+        ])
+    }
+}
+
+/// What a [`Scenario`](crate::api::Scenario) achieved: the chosen
+/// [`Mapping`] plus one section per goal. Sections absent for other goals
+/// are `None`; the accessors below are the stable query surface.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Report {
+    pub goal: Goal,
+    pub workload: String,
+    pub system: String,
+    pub mapping: Option<Mapping>,
+    pub perf: Option<PerfReport>,
+    pub serving: Option<ServingReport>,
+    pub cluster: Option<ClusterReport>,
+    pub plan: Option<PlanReport>,
+    pub fabric: Option<FabricReport>,
+}
+
+impl Report {
+    /// The chosen (TP, PP, DP) degrees, when a mapping was made.
+    pub fn degrees(&self) -> Option<(usize, usize, usize)> {
+        self.mapping.as_ref().map(Mapping::degrees)
+    }
+
+    /// Training-throughput utilization (`Map` goal).
+    pub fn utilization(&self) -> Option<f64> {
+        self.perf.as_ref().map(|p| p.utilization)
+    }
+
+    /// Iteration/solve wall-clock (`Map` goal).
+    pub fn step_time(&self) -> Option<f64> {
+        self.perf.as_ref().map(|p| p.step_time)
+    }
+
+    /// The cheapest feasible fleet (`Plan` goal).
+    pub fn feasible_plan(&self) -> Option<&PlanCandidate> {
+        self.plan.as_ref().and_then(|p| p.best.as_ref())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut kv = vec![
+            ("goal", Json::from(self.goal.name())),
+            ("workload", Json::from(self.workload.as_str())),
+            ("system", Json::from(self.system.as_str())),
+        ];
+        if let Some(m) = &self.mapping {
+            kv.push(("mapping", m.to_json()));
+        }
+        if let Some(p) = &self.perf {
+            kv.push(("perf", p.to_json()));
+        }
+        if let Some(s) = &self.serving {
+            kv.push(("serving", s.to_json()));
+        }
+        if let Some(c) = &self.cluster {
+            kv.push(("cluster", c.to_json()));
+        }
+        if let Some(p) = &self.plan {
+            kv.push(("plan", p.to_json()));
+        }
+        if let Some(f) = &self.fabric {
+            kv.push(("fabric", f.to_json()));
+        }
+        Json::obj(kv)
+    }
+
+    /// Human rendering (the CLI's default output).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "workload: {}", self.workload);
+        let _ = writeln!(s, "system  : {}", self.system);
+        if let Some(m) = &self.mapping {
+            let _ = writeln!(s, "degrees : TP={} PP={} DP={}", m.tp, m.pp, m.dp);
+            if m.n_stages > 0 || m.n_partitions > 0 {
+                let _ = writeln!(
+                    s,
+                    "mapping : {} pipeline stage(s) | {} fused partition(s) | collectives {}",
+                    m.n_stages,
+                    m.n_partitions,
+                    if m.calibrated { "calibrated" } else { "analytical" }
+                );
+            }
+        }
+        if let Some(p) = &self.perf {
+            let _ = writeln!(s, "step time: {}", fmt_time(p.step_time));
+            let _ = writeln!(s, "utilization: {:.3}", p.utilization);
+            let (c, m, n) = p.breakdown;
+            let _ = writeln!(s, "breakdown: compute {c:.2} | memory {m:.2} | network {n:.2}");
+            let _ = writeln!(
+                s,
+                "efficiency: {:.3} GFLOP/s/$ | {:.3} GFLOP/s/W",
+                p.cost_eff, p.power_eff
+            );
+        }
+        if let Some(v) = &self.serving {
+            let _ = writeln!(s, "TTFT: {}", fmt_time(v.ttft));
+            let _ = writeln!(s, "prefill: {:.0} tok/s", v.prefill_tps);
+            let _ = writeln!(s, "TPOT: {}", fmt_time(v.tpot));
+            let _ = writeln!(s, "decode: {:.0} tok/s", v.decode_tps);
+        }
+        if let Some(c) = &self.cluster {
+            render_cluster(c, &mut s);
+        }
+        if let Some(p) = &self.plan {
+            render_plan(p, &mut s);
+        }
+        if let Some(f) = &self.fabric {
+            render_fabric(f, &mut s);
+        }
+        s
+    }
+}
+
+fn render_cluster(c: &ClusterReport, s: &mut String) {
+    let _ = writeln!(
+        s,
+        "requests : {} offered | {} completed | {} rejected | makespan {}",
+        c.offered,
+        c.completed,
+        c.rejected,
+        fmt_time(c.makespan)
+    );
+    let _ = writeln!(
+        s,
+        "rates    : {:.2} rps throughput | {:.2} rps goodput | {:.1}% in SLO | {:.0} tok/s out",
+        c.throughput_rps,
+        c.goodput_rps,
+        c.slo_attainment * 100.0,
+        c.output_tokens_per_s
+    );
+    let _ = writeln!(
+        s,
+        "engine   : {} events | {} steps | KV peak {:.1}%",
+        c.events,
+        c.steps,
+        c.kv_peak_frac * 100.0
+    );
+    for (name, p) in [("queue", &c.queue), ("TTFT", &c.ttft), ("TPOT", &c.tpot)] {
+        let _ = writeln!(
+            s,
+            "{name:<9}: mean {} | p50 {} | p95 {} | p99 {}",
+            fmt_time(p.mean),
+            fmt_time(p.p50),
+            fmt_time(p.p95),
+            fmt_time(p.p99)
+        );
+    }
+}
+
+fn render_plan(p: &PlanReport, s: &mut String) {
+    let mut t = Table::new(
+        "Capacity plan — cheapest fleets first",
+        &["fleet", "chips", "$/hr", "capex $", "SLO att.", "TTFT p99", "TPOT p99", "meets"],
+    );
+    for c in &p.top {
+        let marker = if p.best.as_ref() == Some(c) { " <== plan" } else { "" };
+        t.row(&[
+            format!("{}x{} TP{}xPP{} r{}", c.platform, c.group, c.tp, c.pp, c.replicas),
+            format!("{}", c.chips_total),
+            format!("{:.2}", c.usd_per_hour),
+            format!("{:.0}", c.capex_usd),
+            format!("{:.1}%", c.slo_attainment * 100.0),
+            fmt_time(c.ttft_p99),
+            fmt_time(c.tpot_p99),
+            format!("{}{}", if c.meets_target { "yes" } else { "no" }, marker),
+        ]);
+    }
+    s.push_str(&t.render());
+    match &p.best {
+        Some(c) => {
+            let _ = writeln!(
+                s,
+                "plan: {} x{} per replica, TP{}xPP{}, {} replica(s) = {} chips, ${:.2}/hr \
+                 (capex ${:.0})",
+                c.platform,
+                c.group,
+                c.tp,
+                c.pp,
+                c.replicas,
+                c.chips_total,
+                c.usd_per_hour,
+                c.capex_usd
+            );
+        }
+        None => {
+            let _ = writeln!(
+                s,
+                "no fleet in the catalog meets {} rps at TTFT<={}s / TPOT<={}s ({}% attainment)",
+                p.qps,
+                p.slo_ttft,
+                p.slo_tpot,
+                p.attainment * 100.0
+            );
+        }
+    }
+}
+
+fn render_fabric(f: &FabricReport, s: &mut String) {
+    let _ = writeln!(
+        s,
+        "fabric : {} | {} chips | {} nodes | {} links | bisection {} | routing {}",
+        f.topology,
+        f.chips,
+        f.nodes,
+        f.links,
+        fmt_bw(f.bisection_bytes_per_s),
+        f.routing
+    );
+    let _ = writeln!(
+        s,
+        "collective: {} {:.2} MB/chip | analytical {}",
+        f.collective,
+        f.bytes / 1e6,
+        fmt_time(f.analytical)
+    );
+    let _ = writeln!(
+        s,
+        "{:<8} {:>12} {:>10} {:>9} {:>8} {:>9}",
+        "algo", "simulated", "vs-ana", "max-link", "msgs", "packets"
+    );
+    for e in &f.evals {
+        let _ = writeln!(
+            s,
+            "{:<8} {:>12} {:>9.1}% {:>8.0}% {:>8} {:>9}",
+            e.algo,
+            fmt_time(e.time),
+            e.vs_analytical * 100.0,
+            e.max_link_util * 100.0,
+            e.msgs,
+            e.packets
+        );
+    }
+    if let Some(b) = f.evals.first() {
+        let _ = writeln!(
+            s,
+            "best: {} at {} ({:+.1}% vs analytical)",
+            b.algo,
+            fmt_time(b.time),
+            b.vs_analytical * 100.0
+        );
+    }
+}

@@ -1,0 +1,1130 @@
+//! The declarative input side of the facade: [`Scenario`] — one serializable
+//! description of (workload, system, knobs) plus per-goal options — built
+//! either from a JSON file or through the builder methods
+//! (`Scenario::llm("gpt3-1t").on(...).calibrated_fabric()`), and
+//! round-trippable through `util::json` so one scenario file drives the
+//! CLI, the examples, the figures, and the tests.
+
+use crate::collective::Collective;
+use crate::fabric::{Algo, CalibrateOpts, Routing, SimConfig};
+use crate::graph::gpt::{self, GptConfig};
+use crate::graph::llama::{self, LlamaConfig};
+use crate::graph::{dlrm, fft, hpl, moe, DataflowGraph};
+use crate::interchip::InterChipOptions;
+use crate::serving::ServingSystem;
+use crate::system::{chip, interconnect, memory, topology};
+use crate::system::{ChipSpec, LinkTech, MemoryTech, SystemSpec, Topology};
+use crate::util::error::Result;
+use crate::util::json::Json;
+use crate::{bail, err};
+
+/// What to do with the scenario — mirrors the CLI subcommands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Goal {
+    /// Map a training workload onto a system (optimize / DSE point).
+    Map,
+    /// Analytical serving point (§VIII-A).
+    Serve,
+    /// Request-level cluster serving simulation.
+    Simulate,
+    /// SLO-aware capacity planning over the platform catalog.
+    Plan,
+    /// Link-level collective simulation on one topology.
+    Fabric,
+}
+
+impl Goal {
+    pub fn name(self) -> &'static str {
+        match self {
+            Goal::Map => "map",
+            Goal::Serve => "serve",
+            Goal::Simulate => "simulate",
+            Goal::Plan => "plan",
+            Goal::Fabric => "fabric",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Goal> {
+        match s {
+            "map" | "optimize" | "dse" => Some(Goal::Map),
+            "serve" => Some(Goal::Serve),
+            "simulate" => Some(Goal::Simulate),
+            "plan" => Some(Goal::Plan),
+            "fabric" => Some(Goal::Fabric),
+            _ => None,
+        }
+    }
+}
+
+/// The workload under study: a training workload (`Map` goal) or a Llama
+/// serving model (`Serve`/`Simulate`/`Plan` goals).
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkloadCfg {
+    /// GPT-family LLM training, model by name (`gpt3-175b|gpt3-1t|gpt-100t`).
+    Gpt { model: String, batch: f64 },
+    /// GPT training with an explicit architecture (`"model": "custom"`).
+    GptCustom { cfg: GptConfig, batch: f64 },
+    Dlrm { batch: f64 },
+    Hpl,
+    Fft,
+    Moe { batch: f64 },
+    /// Llama-3 serving model by name (`8b|70b|405b|68m`).
+    Llama { model: String },
+}
+
+/// Resolve a GPT model name (the three paper configurations).
+pub fn gpt_by_name(name: &str) -> Result<GptConfig> {
+    Ok(match name {
+        "gpt3-175b" => gpt::gpt3_175b(),
+        "gpt3-1t" => gpt::gpt3_1t(),
+        "gpt-100t" => gpt::gpt_100t(),
+        other => bail!("unknown gpt model '{other}' (known: gpt3-175b gpt3-1t gpt-100t)"),
+    })
+}
+
+/// Resolve a Llama model name (the §VIII serving family).
+pub fn llama_by_name(name: &str) -> Result<LlamaConfig> {
+    Ok(match name {
+        "8b" => llama::llama3_8b(),
+        "70b" => llama::llama3_70b(),
+        "405b" => llama::llama3_405b(),
+        "68m" => llama::llama_68m(),
+        other => bail!("unknown llama model '{other}' (known: 8b 70b 405b 68m)"),
+    })
+}
+
+/// A `Map`-goal workload resolved into the pipeline layer's input.
+pub(crate) enum BuiltWorkload {
+    Gpt { cfg: GptConfig, batch: f64 },
+    Graph { graph: DataflowGraph, passes: f64, max_dp: usize },
+}
+
+impl WorkloadCfg {
+    /// Short human description for reports.
+    pub fn describe(&self) -> String {
+        match self {
+            WorkloadCfg::Gpt { model, batch } => format!("gpt {model} (batch {batch})"),
+            WorkloadCfg::GptCustom { cfg, batch } => {
+                format!("gpt custom[{}L,h={}] (batch {batch})", cfg.layers, cfg.d_model)
+            }
+            WorkloadCfg::Dlrm { batch } => format!("dlrm (batch {batch})"),
+            WorkloadCfg::Hpl => "hpl".into(),
+            WorkloadCfg::Fft => "fft".into(),
+            WorkloadCfg::Moe { batch } => format!("moe (batch {batch})"),
+            WorkloadCfg::Llama { model } => format!("llama {model} serving"),
+        }
+    }
+
+    /// The DSE sweep axis this workload belongs to, if any.
+    pub fn dse_kind(&self) -> Option<crate::dse::Workload> {
+        match self {
+            WorkloadCfg::Gpt { .. } | WorkloadCfg::GptCustom { .. } => {
+                Some(crate::dse::Workload::Llm)
+            }
+            WorkloadCfg::Dlrm { .. } => Some(crate::dse::Workload::Dlrm),
+            WorkloadCfg::Hpl => Some(crate::dse::Workload::Hpl),
+            WorkloadCfg::Fft => Some(crate::dse::Workload::Fft),
+            WorkloadCfg::Moe { .. } | WorkloadCfg::Llama { .. } => None,
+        }
+    }
+
+    pub(crate) fn build(&self, knobs: &Knobs) -> Result<BuiltWorkload> {
+        Ok(match self {
+            WorkloadCfg::Gpt { model, batch } => {
+                BuiltWorkload::Gpt { cfg: gpt_by_name(model)?, batch: *batch }
+            }
+            WorkloadCfg::GptCustom { cfg, batch } => {
+                BuiltWorkload::Gpt { cfg: *cfg, batch: *batch }
+            }
+            WorkloadCfg::Dlrm { batch } => BuiltWorkload::Graph {
+                graph: dlrm::dlrm_graph(&dlrm::dlrm_793b(), *batch),
+                passes: 3.0,
+                max_dp: knobs.max_dp.unwrap_or(64),
+            },
+            WorkloadCfg::Hpl => BuiltWorkload::Graph {
+                graph: hpl::hpl_graph(&hpl::hpl_5m()),
+                passes: 1.0,
+                max_dp: knobs.max_dp.unwrap_or(1),
+            },
+            WorkloadCfg::Fft => BuiltWorkload::Graph {
+                graph: fft::fft_graph(&fft::fft_1t()),
+                passes: 1.0,
+                max_dp: knobs.max_dp.unwrap_or(1),
+            },
+            WorkloadCfg::Moe { batch } => BuiltWorkload::Graph {
+                graph: moe::moe_layer_graph(&moe::moe_gpt_1t(), *batch),
+                passes: 3.0,
+                max_dp: knobs.max_dp.unwrap_or(64),
+            },
+            WorkloadCfg::Llama { model } => {
+                bail!("llama {model} is a serving workload; use goal serve/simulate/plan")
+            }
+        })
+    }
+
+    pub(crate) fn llama_config(&self) -> Result<LlamaConfig> {
+        match self {
+            WorkloadCfg::Llama { model } => llama_by_name(model),
+            other => bail!("this goal needs a llama serving workload, got '{}'", other.describe()),
+        }
+    }
+
+    /// Name-level validation for the `Map` goal — the cheap twin of
+    /// [`WorkloadCfg::build`] that does not materialize any graph.
+    pub(crate) fn check_for_map(&self) -> Result<()> {
+        match self {
+            WorkloadCfg::Gpt { model, .. } => gpt_by_name(model).map(|_| ()),
+            WorkloadCfg::Llama { model } => {
+                bail!("llama {model} is a serving workload; use goal serve/simulate/plan")
+            }
+            _ => Ok(()),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            WorkloadCfg::Gpt { model, batch } => Json::obj(vec![
+                ("kind", Json::from("gpt")),
+                ("model", Json::from(model.as_str())),
+                ("batch", Json::from(*batch)),
+            ]),
+            WorkloadCfg::GptCustom { cfg, batch } => Json::obj(vec![
+                ("kind", Json::from("gpt")),
+                ("model", Json::from("custom")),
+                ("layers", Json::from(cfg.layers)),
+                ("d_model", Json::from(cfg.d_model)),
+                ("n_heads", Json::from(cfg.n_heads)),
+                ("seq", Json::from(cfg.seq)),
+                ("d_ff", Json::from(cfg.d_ff)),
+                ("vocab", Json::from(cfg.vocab)),
+                ("dtype_bytes", Json::from(cfg.dtype_bytes)),
+                ("batch", Json::from(*batch)),
+            ]),
+            WorkloadCfg::Dlrm { batch } => Json::obj(vec![
+                ("kind", Json::from("dlrm")),
+                ("batch", Json::from(*batch)),
+            ]),
+            WorkloadCfg::Hpl => Json::obj(vec![("kind", Json::from("hpl"))]),
+            WorkloadCfg::Fft => Json::obj(vec![("kind", Json::from("fft"))]),
+            WorkloadCfg::Moe { batch } => Json::obj(vec![
+                ("kind", Json::from("moe")),
+                ("batch", Json::from(*batch)),
+            ]),
+            WorkloadCfg::Llama { model } => Json::obj(vec![
+                ("kind", Json::from("llama")),
+                ("model", Json::from(model.as_str())),
+            ]),
+        }
+    }
+}
+
+/// Topology description: explicit per-dim sizes, or a total chip count
+/// balanced by `topology::by_name`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TopologyCfg {
+    pub kind: String,
+    /// Explicit per-dim sizes; empty when `chips` drives a balanced build.
+    pub dims: Vec<usize>,
+    /// Total chip count for balanced construction (`topology::by_name`).
+    pub chips: Option<usize>,
+}
+
+impl TopologyCfg {
+    pub fn build(&self, link: &LinkTech) -> Result<Topology> {
+        if let Some(n) = self.chips {
+            return topology::by_name(&self.kind, n, link).ok_or_else(|| {
+                err!(
+                    "no '{}' topology at {n} chips (families: ring torus2d torus3d dragonfly \
+                     dgx1 dgx2; dgx1 needs chips%8==0, dgx2 chips%16==0)",
+                    self.kind
+                )
+            });
+        }
+        Ok(match (self.kind.as_str(), self.dims.as_slice()) {
+            ("ring", [n]) => topology::ring(*n, link),
+            ("torus2d", [x, y]) => topology::torus2d(*x, *y, link),
+            ("torus3d", [x, y, z]) => topology::torus3d(*x, *y, *z, link),
+            ("dragonfly", [g, n]) => topology::dragonfly(*g, *n, link),
+            ("dgx1", [n]) => topology::dgx1(*n, link),
+            ("dgx2", [n]) => topology::dgx2(*n, link),
+            (k, d) => bail!("bad topology {k} with dims {d:?}"),
+        })
+    }
+}
+
+/// The system under study, by component name (resolved against the paper's
+/// catalogs at evaluation time).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SystemCfg {
+    pub chip: String,
+    pub memory: String,
+    pub link: String,
+    pub topology: TopologyCfg,
+}
+
+impl Default for SystemCfg {
+    fn default() -> Self {
+        SystemCfg::new("sn10", "ddr4", "pcie4")
+    }
+}
+
+impl SystemCfg {
+    /// A system on an 8-chip ring (override with the topology builders).
+    pub fn new(chip: &str, memory: &str, link: &str) -> SystemCfg {
+        SystemCfg {
+            chip: chip.into(),
+            memory: memory.into(),
+            link: link.into(),
+            topology: TopologyCfg { kind: "ring".into(), dims: vec![8], chips: None },
+        }
+    }
+
+    /// The §VIII-A serving platform: 16 SN40L on the RDU fabric.
+    pub fn sn40l_x16() -> SystemCfg {
+        SystemCfg::new("sn40l", "sn40l-hbm", "rdu").ring(16)
+    }
+
+    pub fn ring(mut self, n: usize) -> Self {
+        self.topology = TopologyCfg { kind: "ring".into(), dims: vec![n], chips: None };
+        self
+    }
+
+    pub fn torus2d(mut self, x: usize, y: usize) -> Self {
+        self.topology = TopologyCfg { kind: "torus2d".into(), dims: vec![x, y], chips: None };
+        self
+    }
+
+    pub fn torus3d(mut self, x: usize, y: usize, z: usize) -> Self {
+        self.topology = TopologyCfg { kind: "torus3d".into(), dims: vec![x, y, z], chips: None };
+        self
+    }
+
+    pub fn dragonfly(mut self, group: usize, n_groups: usize) -> Self {
+        self.topology =
+            TopologyCfg { kind: "dragonfly".into(), dims: vec![group, n_groups], chips: None };
+        self
+    }
+
+    /// Balanced topology of a family at a total chip count.
+    pub fn topo(mut self, kind: &str, chips: usize) -> Self {
+        self.topology = TopologyCfg { kind: kind.into(), dims: Vec::new(), chips: Some(chips) };
+        self
+    }
+
+    pub fn build(&self) -> Result<SystemSpec> {
+        let link = link_by_name(&self.link)?;
+        Ok(SystemSpec::new(
+            chip_by_name(&self.chip)?,
+            memory_by_name(&self.memory)?,
+            link.clone(),
+            self.topology.build(&link)?,
+        ))
+    }
+
+    /// The serving view of this system: one replica spanning the topology's
+    /// chips, decode streaming from this memory technology.
+    pub fn build_serving(&self) -> Result<ServingSystem> {
+        let mem = memory_by_name(&self.memory)?;
+        let link = link_by_name(&self.link)?;
+        let topo = self.topology.build(&link)?;
+        Ok(ServingSystem {
+            chip: chip_by_name(&self.chip)?,
+            mem_bw: mem.bandwidth,
+            mem_cap: mem.capacity,
+            link,
+            n_chips: topo.n_chips(),
+        })
+    }
+
+    pub fn build_topology(&self) -> Result<(Topology, LinkTech)> {
+        let link = link_by_name(&self.link)?;
+        Ok((self.topology.build(&link)?, link))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut topo = vec![("kind", Json::from(self.topology.kind.as_str()))];
+        if !self.topology.dims.is_empty() {
+            topo.push(("dims", Json::arr(self.topology.dims.iter().map(|&d| Json::from(d)))));
+        }
+        if let Some(n) = self.topology.chips {
+            topo.push(("chips", Json::from(n)));
+        }
+        Json::obj(vec![
+            ("chip", Json::from(self.chip.as_str())),
+            ("memory", Json::from(self.memory.as_str())),
+            ("link", Json::from(self.link.as_str())),
+            ("topology", Json::obj(topo)),
+        ])
+    }
+}
+
+/// Resolve an accelerator-chip name (Table V + the §VII/§VIII RDUs).
+pub fn chip_by_name(name: &str) -> Result<ChipSpec> {
+    Ok(match name {
+        "h100" => chip::h100(),
+        "a100" => chip::a100(),
+        "tpuv4" => chip::tpu_v4(),
+        "sn10" => chip::sn10(),
+        "sn30" => chip::sn30(),
+        "sn40l" => chip::sn40l(),
+        "wse2" => chip::wse2(),
+        other => bail!("unknown chip '{other}' (known: h100 a100 tpuv4 sn10 sn30 sn40l wse2)"),
+    })
+}
+
+/// Resolve a memory-technology name.
+pub fn memory_by_name(name: &str) -> Result<MemoryTech> {
+    Ok(match name {
+        "ddr4" => memory::ddr4(),
+        "hbm3" => memory::hbm3(),
+        "sn40l-hbm" => memory::sn40l_hbm(),
+        "2d-ddr" => memory::mem2d_ddr(),
+        "2.5d-hbm" => memory::mem25d_hbm(),
+        "3d-stacked" => memory::mem3d_stacked(),
+        other => bail!(
+            "unknown memory '{other}' (known: ddr4 hbm3 sn40l-hbm 2d-ddr 2.5d-hbm 3d-stacked)"
+        ),
+    })
+}
+
+/// Resolve an interconnect-technology name.
+pub fn link_by_name(name: &str) -> Result<LinkTech> {
+    Ok(match name {
+        "pcie4" => interconnect::pcie4(),
+        "nvlink4" => interconnect::nvlink4(),
+        "rdu" => interconnect::rdu_fabric(),
+        other => bail!("unknown link '{other}' (known: pcie4 nvlink4 rdu)"),
+    })
+}
+
+/// Resolve a collective name (`dfmodel fabric --coll ...` / fabric
+/// scenarios).
+pub fn collective_by_name(name: &str) -> Result<Collective> {
+    Ok(match name {
+        "allreduce" => Collective::AllReduce,
+        "allgather" => Collective::AllGather,
+        "reducescatter" => Collective::ReduceScatter,
+        "alltoall" => Collective::AllToAll,
+        "broadcast" => Collective::Broadcast,
+        "p2p" => Collective::P2P,
+        other => bail!(
+            "unknown collective '{other}' (known: allreduce allgather reducescatter alltoall \
+             broadcast p2p)"
+        ),
+    })
+}
+
+/// Which collective-cost model prices the mapping decisions.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum CollectiveCfg {
+    /// Closed-form α-β formulas (§IV-B).
+    #[default]
+    Analytical,
+    /// Fabric-simulation-calibrated costs (`fabric::select`).
+    Calibrated { max_group: usize, seed: u64, routing: String },
+}
+
+impl CollectiveCfg {
+    /// Calibration with the default guard (groups ≤ 64 chips, dim-ordered
+    /// routing, seed 0).
+    pub fn calibrated() -> CollectiveCfg {
+        CollectiveCfg::Calibrated { max_group: 64, seed: 0, routing: "dimorder".into() }
+    }
+}
+
+/// Mapping knobs threaded into the inter-chip optimizer.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Knobs {
+    pub collective: CollectiveCfg,
+    /// Restrict to one (tp, pp, dp) combination (§VII case studies).
+    pub force_degrees: Option<(usize, usize, usize)>,
+    /// DRAM bytes of training state per byte of bf16 weights.
+    pub state_bytes_per_weight_byte: Option<f64>,
+    pub max_pp: Option<usize>,
+    pub max_dp: Option<usize>,
+}
+
+impl Knobs {
+    /// The inter-chip options these knobs select (unset knobs keep the
+    /// optimizer defaults, so a default `Scenario` matches the legacy
+    /// free-function path bit for bit).
+    pub fn interchip_options(&self) -> InterChipOptions {
+        let mut o = InterChipOptions::default();
+        if let Some(v) = self.state_bytes_per_weight_byte {
+            o.state_bytes_per_weight_byte = v;
+        }
+        o.force_degrees = self.force_degrees;
+        if let Some(v) = self.max_pp {
+            o.max_pp = v;
+        }
+        if let Some(v) = self.max_dp {
+            o.max_dp = v;
+        }
+        o
+    }
+
+    /// Calibration options when the calibrated collective model is chosen.
+    pub fn calibrate_opts(&self) -> Result<Option<CalibrateOpts>> {
+        match &self.collective {
+            CollectiveCfg::Analytical => Ok(None),
+            CollectiveCfg::Calibrated { max_group, seed, routing } => {
+                let routing = Routing::parse(routing).ok_or_else(|| {
+                    err!("unknown routing '{routing}' (known: dimorder adaptive)")
+                })?;
+                Ok(Some(CalibrateOpts {
+                    max_group: *max_group,
+                    sim: SimConfig { routing, seed: *seed, ..Default::default() },
+                    ..Default::default()
+                }))
+            }
+        }
+    }
+
+    pub fn options_json(&self) -> Json {
+        let mut kv: Vec<(&str, Json)> = Vec::new();
+        if let Some((tp, pp, dp)) = self.force_degrees {
+            kv.push(("force_tp", Json::from(tp)));
+            kv.push(("force_pp", Json::from(pp)));
+            kv.push(("force_dp", Json::from(dp)));
+        }
+        if let Some(v) = self.state_bytes_per_weight_byte {
+            kv.push(("state_bytes_per_weight_byte", Json::from(v)));
+        }
+        if let Some(v) = self.max_pp {
+            kv.push(("max_pp", Json::from(v)));
+        }
+        if let Some(v) = self.max_dp {
+            kv.push(("max_dp", Json::from(v)));
+        }
+        Json::obj(kv)
+    }
+
+    pub fn collective_json(&self) -> Json {
+        match &self.collective {
+            CollectiveCfg::Analytical => Json::obj(vec![("model", Json::from("analytical"))]),
+            CollectiveCfg::Calibrated { max_group, seed, routing } => Json::obj(vec![
+                ("model", Json::from("calibrated")),
+                ("max_group", Json::from(*max_group)),
+                ("seed", Json::from(*seed as usize)),
+                ("routing", Json::from(routing.as_str())),
+            ]),
+        }
+    }
+}
+
+/// One analytical serving point (§VIII-A).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServingCfg {
+    pub tp: usize,
+    pub pp: usize,
+    pub batch: f64,
+    pub prompt: f64,
+    /// Decode context length (tokens already in the KV cache).
+    pub context: f64,
+}
+
+impl Default for ServingCfg {
+    fn default() -> Self {
+        ServingCfg { tp: 16, pp: 1, batch: 1.0, prompt: 1024.0, context: 1024.0 }
+    }
+}
+
+/// Cluster simulation / capacity-planning options.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterCfg {
+    pub replicas: usize,
+    /// Iteration-level cap on concurrently running sequences.
+    pub max_batch: usize,
+    pub requests: usize,
+    pub seed: u64,
+    /// Arrival process: `poisson` | `bursty`.
+    pub arrivals: String,
+    /// Offered load (requests/s) for `simulate`.
+    pub rate: f64,
+    /// Bursty-cycle period (s).
+    pub period: f64,
+    pub prompt_mean: f64,
+    pub output_mean: f64,
+    pub slo_ttft: f64,
+    pub slo_tpot: f64,
+    /// Planner target load (requests/s).
+    pub qps: f64,
+    /// Required fraction of completions meeting both SLOs.
+    pub attainment: f64,
+    /// Candidates kept in the plan report.
+    pub top: usize,
+}
+
+impl Default for ClusterCfg {
+    fn default() -> Self {
+        ClusterCfg {
+            replicas: 1,
+            max_batch: 32,
+            requests: 200,
+            seed: 17,
+            arrivals: "poisson".into(),
+            rate: 4.0,
+            period: 60.0,
+            prompt_mean: 1024.0,
+            output_mean: 128.0,
+            slo_ttft: 1.0,
+            slo_tpot: 0.02,
+            qps: 2.0,
+            attainment: 0.9,
+            top: 12,
+        }
+    }
+}
+
+impl ClusterCfg {
+    /// Validate the simulation traffic shape: a zero/negative/NaN rate or
+    /// bursty period would panic or hang the trace generator.
+    pub(crate) fn check_traffic(&self) -> Result<()> {
+        if !(self.rate.is_finite() && self.rate > 0.0) {
+            bail!("cluster rate must be a positive request rate, got {}", self.rate);
+        }
+        match self.arrivals.as_str() {
+            "poisson" => {}
+            "bursty" => {
+                if !(self.period.is_finite() && self.period > 0.0) {
+                    bail!("bursty period must be a positive duration, got {}", self.period);
+                }
+            }
+            other => bail!("unknown arrival process '{other}' (known: poisson bursty)"),
+        }
+        Ok(())
+    }
+
+    /// Validate the planner target load (it seeds a Poisson trace).
+    pub(crate) fn check_plan(&self) -> Result<()> {
+        if !(self.qps.is_finite() && self.qps > 0.0) {
+            bail!("plan qps must be a positive request rate, got {}", self.qps);
+        }
+        Ok(())
+    }
+}
+
+/// One collective simulation on the scenario's topology.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FabricCfg {
+    pub collective: String,
+    /// Payload bytes per chip.
+    pub bytes: f64,
+    pub routing: String,
+    pub seed: u64,
+    /// Restrict to one algorithm family (`ring|hd|direct|hier`).
+    pub algo: Option<String>,
+}
+
+impl Default for FabricCfg {
+    fn default() -> Self {
+        FabricCfg {
+            collective: "allreduce".into(),
+            bytes: 64e6,
+            routing: "dimorder".into(),
+            seed: 0,
+            algo: None,
+        }
+    }
+}
+
+/// One declarative experiment: workload + system + knobs + per-goal
+/// options. Build with the constructors below, or parse from JSON; run
+/// with [`Scenario::evaluate`](crate::api::Scenario::evaluate).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub goal: Goal,
+    pub workload: WorkloadCfg,
+    pub system: SystemCfg,
+    pub knobs: Knobs,
+    pub serving: ServingCfg,
+    pub cluster: ClusterCfg,
+    pub fabric: FabricCfg,
+}
+
+impl Scenario {
+    fn base(goal: Goal, workload: WorkloadCfg) -> Scenario {
+        Scenario {
+            goal,
+            workload,
+            system: SystemCfg::default(),
+            knobs: Knobs::default(),
+            serving: ServingCfg::default(),
+            cluster: ClusterCfg::default(),
+            fabric: FabricCfg::default(),
+        }
+    }
+
+    /// GPT-family training scenario (`gpt3-175b|gpt3-1t|gpt-100t`).
+    pub fn llm(model: &str) -> Scenario {
+        Scenario::base(Goal::Map, WorkloadCfg::Gpt { model: model.into(), batch: 64.0 })
+    }
+
+    /// GPT training with an explicit architecture.
+    pub fn llm_custom(cfg: GptConfig) -> Scenario {
+        Scenario::base(Goal::Map, WorkloadCfg::GptCustom { cfg, batch: 64.0 })
+    }
+
+    /// The 793B DLRM training iteration (§VI-C.2).
+    pub fn dlrm() -> Scenario {
+        Scenario::base(Goal::Map, WorkloadCfg::Dlrm { batch: 65_536.0 })
+    }
+
+    /// The 5M² HPL solve (§VI-C.3).
+    pub fn hpl() -> Scenario {
+        Scenario::base(Goal::Map, WorkloadCfg::Hpl)
+    }
+
+    /// The 1T-point FFT (§VI-C.4).
+    pub fn fft() -> Scenario {
+        Scenario::base(Goal::Map, WorkloadCfg::Fft)
+    }
+
+    /// One MoE layer (3 passes, like DLRM).
+    pub fn moe() -> Scenario {
+        Scenario::base(Goal::Map, WorkloadCfg::Moe { batch: 1.0 })
+    }
+
+    /// Llama serving scenario (`8b|70b|405b`) on the §VIII SN40L platform.
+    pub fn llama(model: &str) -> Scenario {
+        let mut s = Scenario::base(Goal::Serve, WorkloadCfg::Llama { model: model.into() });
+        s.system = SystemCfg::sn40l_x16();
+        s
+    }
+
+    /// Evaluate on this system instead of the default.
+    pub fn on(mut self, system: SystemCfg) -> Scenario {
+        self.system = system;
+        self
+    }
+
+    /// Global batch (training) or serving batch (llama scenarios).
+    /// HPL/FFT have fixed paper problem sizes, so batch is a no-op there.
+    pub fn batch(mut self, batch: f64) -> Scenario {
+        match &mut self.workload {
+            WorkloadCfg::Gpt { batch: b, .. }
+            | WorkloadCfg::GptCustom { batch: b, .. }
+            | WorkloadCfg::Dlrm { batch: b }
+            | WorkloadCfg::Moe { batch: b } => *b = batch,
+            WorkloadCfg::Hpl | WorkloadCfg::Fft => {}
+            WorkloadCfg::Llama { .. } => self.serving.batch = batch,
+        }
+        self
+    }
+
+    /// Price collectives with the fabric simulator's calibration table.
+    pub fn calibrated_fabric(mut self) -> Scenario {
+        self.knobs.collective = CollectiveCfg::calibrated();
+        self
+    }
+
+    /// Force the (TP, PP, DP) degrees (§VII case studies).
+    pub fn forced(mut self, tp: usize, pp: usize, dp: usize) -> Scenario {
+        self.knobs.force_degrees = Some((tp, pp, dp));
+        self
+    }
+
+    /// Serving TP×PP split (must cover the system's chip group).
+    pub fn serving_split(mut self, tp: usize, pp: usize) -> Scenario {
+        self.serving.tp = tp;
+        self.serving.pp = pp;
+        self
+    }
+
+    /// Prompt length and decode context of the serving point.
+    pub fn prompt_context(mut self, prompt: f64, context: f64) -> Scenario {
+        self.serving.prompt = prompt;
+        self.serving.context = context;
+        self
+    }
+
+    /// Latency SLOs for goodput accounting and planning.
+    pub fn slo(mut self, ttft: f64, tpot: f64) -> Scenario {
+        self.cluster.slo_ttft = ttft;
+        self.cluster.slo_tpot = tpot;
+        self
+    }
+
+    /// Switch to the cluster simulation goal at an offered load.
+    pub fn simulate_traffic(mut self, rate: f64, requests: usize) -> Scenario {
+        self.goal = Goal::Simulate;
+        self.cluster.rate = rate;
+        self.cluster.requests = requests;
+        self
+    }
+
+    /// Switch to the capacity-planning goal at a target load.
+    pub fn plan_for(mut self, qps: f64) -> Scenario {
+        self.goal = Goal::Plan;
+        self.cluster.qps = qps;
+        self
+    }
+
+    /// Switch to the fabric-simulation goal for one collective sweep.
+    pub fn fabric_sweep(mut self, collective: &str, bytes: f64) -> Scenario {
+        self.goal = Goal::Fabric;
+        self.fabric.collective = collective.into();
+        self.fabric.bytes = bytes;
+        self
+    }
+
+    /// Validate every name and knob without running anything (and without
+    /// materializing workload graphs). `parse` calls this;
+    /// builder-constructed scenarios get the same errors from `evaluate`.
+    pub fn check(&self) -> Result<()> {
+        self.system.build()?;
+        match self.goal {
+            Goal::Map => {
+                self.workload.check_for_map()?;
+            }
+            Goal::Serve | Goal::Simulate | Goal::Plan => {
+                self.workload.llama_config()?;
+                if self.goal == Goal::Simulate {
+                    self.cluster.check_traffic()?;
+                }
+                if self.goal == Goal::Plan {
+                    self.cluster.check_plan()?;
+                }
+            }
+            Goal::Fabric => {
+                collective_by_name(&self.fabric.collective)?;
+                if Routing::parse(&self.fabric.routing).is_none() {
+                    bail!("unknown routing '{}' (known: dimorder adaptive)", self.fabric.routing);
+                }
+                if let Some(a) = &self.fabric.algo {
+                    if Algo::parse(a).is_none() {
+                        bail!("unknown algo '{a}' (known: ring hd direct hier)");
+                    }
+                }
+            }
+        }
+        let _ = self.knobs.calibrate_opts()?;
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("goal", Json::from(self.goal.name())),
+            ("workload", self.workload.to_json()),
+            ("system", self.system.to_json()),
+            ("options", self.knobs.options_json()),
+            ("collective", self.knobs.collective_json()),
+            ("serving", serving_json(&self.serving)),
+            ("cluster", cluster_json(&self.cluster)),
+            ("fabric", fabric_json(&self.fabric)),
+        ])
+    }
+
+    pub fn parse(text: &str) -> Result<Scenario> {
+        let j = Json::parse(text).map_err(|e| err!("scenario: {e}"))?;
+        Scenario::from_json(&j)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Scenario> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| err!("read {}: {e}", path.display()))?;
+        Scenario::parse(&text)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Scenario> {
+        let goal = match j.get("goal").and_then(|v| v.as_str()) {
+            None => Goal::Map,
+            Some(g) => Goal::parse(g).ok_or_else(|| {
+                err!("unknown goal '{g}' (known: map serve simulate plan fabric)")
+            })?,
+        };
+        let wj = j.get("workload").unwrap_or(&Json::Null);
+        let workload = parse_workload(wj)?;
+        let system = parse_system(j.get("system").unwrap_or(&Json::Null))?;
+        let mut knobs = parse_options(j.get("options").unwrap_or(&Json::Null))?;
+        knobs.collective = parse_collective_cfg(j.get("collective").unwrap_or(&Json::Null))?;
+        // legacy schema: dlrm/moe configs may carry max_dp in the workload obj
+        if knobs.max_dp.is_none() {
+            knobs.max_dp = wj.get("max_dp").and_then(|v| v.as_usize());
+        }
+        let serving = parse_serving(j.get("serving").unwrap_or(&Json::Null));
+        let cluster = parse_cluster(j.get("cluster").unwrap_or(&Json::Null));
+        let fabric = parse_fabric(j.get("fabric").unwrap_or(&Json::Null));
+        let s = Scenario { goal, workload, system, knobs, serving, cluster, fabric };
+        s.check()?;
+        Ok(s)
+    }
+}
+
+fn parse_workload(j: &Json) -> Result<WorkloadCfg> {
+    let kind = j.get("kind").and_then(|v| v.as_str()).unwrap_or("gpt");
+    Ok(match kind {
+        "gpt" => {
+            let model = j.get("model").and_then(|v| v.as_str()).unwrap_or("gpt3-175b");
+            let batch = j.get("batch").and_then(|v| v.as_f64()).unwrap_or(64.0);
+            if model == "custom" {
+                let cfg = GptConfig {
+                    layers: j.get("layers").and_then(|v| v.as_usize()).unwrap_or(96),
+                    d_model: j.get("d_model").and_then(|v| v.as_f64()).unwrap_or(12288.0),
+                    n_heads: j.get("n_heads").and_then(|v| v.as_f64()).unwrap_or(96.0),
+                    seq: j.get("seq").and_then(|v| v.as_f64()).unwrap_or(2048.0),
+                    d_ff: j.get("d_ff").and_then(|v| v.as_f64()).unwrap_or(4.0 * 12288.0),
+                    vocab: j.get("vocab").and_then(|v| v.as_f64()).unwrap_or(50257.0),
+                    dtype_bytes: j.get("dtype_bytes").and_then(|v| v.as_f64()).unwrap_or(2.0),
+                };
+                WorkloadCfg::GptCustom { cfg, batch }
+            } else {
+                gpt_by_name(model)?;
+                WorkloadCfg::Gpt { model: model.into(), batch }
+            }
+        }
+        "dlrm" => {
+            WorkloadCfg::Dlrm { batch: j.get("batch").and_then(|v| v.as_f64()).unwrap_or(65_536.0) }
+        }
+        "hpl" => WorkloadCfg::Hpl,
+        "fft" => WorkloadCfg::Fft,
+        "moe" => WorkloadCfg::Moe { batch: j.get("batch").and_then(|v| v.as_f64()).unwrap_or(1.0) },
+        "llama" => {
+            let model = j.get("model").and_then(|v| v.as_str()).unwrap_or("8b");
+            llama_by_name(model)?;
+            WorkloadCfg::Llama { model: model.into() }
+        }
+        other => bail!("unknown workload kind '{other}'"),
+    })
+}
+
+fn parse_system(j: &Json) -> Result<SystemCfg> {
+    let t = j.get("topology").unwrap_or(&Json::Null);
+    let mut topology = TopologyCfg {
+        kind: t.get("kind").and_then(|v| v.as_str()).unwrap_or("ring").to_string(),
+        dims: t
+            .get("dims")
+            .and_then(|v| v.as_array())
+            .map(|a| a.iter().filter_map(|d| d.as_usize()).collect())
+            .unwrap_or_default(),
+        chips: t.get("chips").and_then(|v| v.as_usize()),
+    };
+    if topology.dims.is_empty() && topology.chips.is_none() {
+        topology.dims = vec![8];
+    }
+    Ok(SystemCfg {
+        chip: j.get("chip").and_then(|v| v.as_str()).unwrap_or("sn10").to_string(),
+        memory: j.get("memory").and_then(|v| v.as_str()).unwrap_or("ddr4").to_string(),
+        link: j.get("link").and_then(|v| v.as_str()).unwrap_or("pcie4").to_string(),
+        topology,
+    })
+}
+
+fn parse_options(j: &Json) -> Result<Knobs> {
+    let tp = j.get("force_tp").and_then(|v| v.as_usize());
+    let pp = j.get("force_pp").and_then(|v| v.as_usize());
+    let dp = j.get("force_dp").and_then(|v| v.as_usize());
+    let force_degrees = if let (Some(tp), Some(pp), Some(dp)) = (tp, pp, dp) {
+        Some((tp, pp, dp))
+    } else if tp.is_some() || pp.is_some() || dp.is_some() {
+        bail!("force_tp/force_pp/force_dp must be given together")
+    } else {
+        None
+    };
+    Ok(Knobs {
+        collective: CollectiveCfg::Analytical,
+        force_degrees,
+        state_bytes_per_weight_byte: j
+            .get("state_bytes_per_weight_byte")
+            .and_then(|v| v.as_f64()),
+        max_pp: j.get("max_pp").and_then(|v| v.as_usize()),
+        max_dp: j.get("max_dp").and_then(|v| v.as_usize()),
+    })
+}
+
+fn parse_collective_cfg(j: &Json) -> Result<CollectiveCfg> {
+    match j.get("model").and_then(|v| v.as_str()) {
+        None | Some("analytical") => Ok(CollectiveCfg::Analytical),
+        Some("calibrated") => Ok(CollectiveCfg::Calibrated {
+            max_group: j.get("max_group").and_then(|v| v.as_usize()).unwrap_or(64),
+            seed: j.get("seed").and_then(|v| v.as_usize()).unwrap_or(0) as u64,
+            routing: j.get("routing").and_then(|v| v.as_str()).unwrap_or("dimorder").to_string(),
+        }),
+        Some(other) => bail!("unknown collective model '{other}' (known: analytical calibrated)"),
+    }
+}
+
+fn parse_serving(j: &Json) -> ServingCfg {
+    let d = ServingCfg::default();
+    ServingCfg {
+        tp: j.get("tp").and_then(|v| v.as_usize()).unwrap_or(d.tp),
+        pp: j.get("pp").and_then(|v| v.as_usize()).unwrap_or(d.pp),
+        batch: j.get("batch").and_then(|v| v.as_f64()).unwrap_or(d.batch),
+        prompt: j.get("prompt").and_then(|v| v.as_f64()).unwrap_or(d.prompt),
+        context: j.get("context").and_then(|v| v.as_f64()).unwrap_or(d.context),
+    }
+}
+
+fn serving_json(s: &ServingCfg) -> Json {
+    Json::obj(vec![
+        ("tp", Json::from(s.tp)),
+        ("pp", Json::from(s.pp)),
+        ("batch", Json::from(s.batch)),
+        ("prompt", Json::from(s.prompt)),
+        ("context", Json::from(s.context)),
+    ])
+}
+
+fn parse_cluster(j: &Json) -> ClusterCfg {
+    let d = ClusterCfg::default();
+    ClusterCfg {
+        replicas: j.get("replicas").and_then(|v| v.as_usize()).unwrap_or(d.replicas),
+        max_batch: j.get("max_batch").and_then(|v| v.as_usize()).unwrap_or(d.max_batch),
+        requests: j.get("requests").and_then(|v| v.as_usize()).unwrap_or(d.requests),
+        seed: j.get("seed").and_then(|v| v.as_usize()).map(|v| v as u64).unwrap_or(d.seed),
+        arrivals: j.get("arrivals").and_then(|v| v.as_str()).unwrap_or(&d.arrivals).to_string(),
+        rate: j.get("rate").and_then(|v| v.as_f64()).unwrap_or(d.rate),
+        period: j.get("period").and_then(|v| v.as_f64()).unwrap_or(d.period),
+        prompt_mean: j.get("prompt_mean").and_then(|v| v.as_f64()).unwrap_or(d.prompt_mean),
+        output_mean: j.get("output_mean").and_then(|v| v.as_f64()).unwrap_or(d.output_mean),
+        slo_ttft: j.get("slo_ttft").and_then(|v| v.as_f64()).unwrap_or(d.slo_ttft),
+        slo_tpot: j.get("slo_tpot").and_then(|v| v.as_f64()).unwrap_or(d.slo_tpot),
+        qps: j.get("qps").and_then(|v| v.as_f64()).unwrap_or(d.qps),
+        attainment: j.get("attainment").and_then(|v| v.as_f64()).unwrap_or(d.attainment),
+        top: j.get("top").and_then(|v| v.as_usize()).unwrap_or(d.top),
+    }
+}
+
+fn cluster_json(c: &ClusterCfg) -> Json {
+    Json::obj(vec![
+        ("replicas", Json::from(c.replicas)),
+        ("max_batch", Json::from(c.max_batch)),
+        ("requests", Json::from(c.requests)),
+        ("seed", Json::from(c.seed as usize)),
+        ("arrivals", Json::from(c.arrivals.as_str())),
+        ("rate", Json::from(c.rate)),
+        ("period", Json::from(c.period)),
+        ("prompt_mean", Json::from(c.prompt_mean)),
+        ("output_mean", Json::from(c.output_mean)),
+        ("slo_ttft", Json::from(c.slo_ttft)),
+        ("slo_tpot", Json::from(c.slo_tpot)),
+        ("qps", Json::from(c.qps)),
+        ("attainment", Json::from(c.attainment)),
+        ("top", Json::from(c.top)),
+    ])
+}
+
+fn parse_fabric(j: &Json) -> FabricCfg {
+    let d = FabricCfg::default();
+    FabricCfg {
+        collective: collective_name(j, &d),
+        bytes: j.get("bytes").and_then(|v| v.as_f64()).unwrap_or(d.bytes),
+        routing: j.get("routing").and_then(|v| v.as_str()).unwrap_or(&d.routing).to_string(),
+        seed: j.get("seed").and_then(|v| v.as_usize()).map(|v| v as u64).unwrap_or(d.seed),
+        algo: j.get("algo").and_then(|v| v.as_str()).map(|s| s.to_string()),
+    }
+}
+
+fn collective_name(j: &Json, d: &FabricCfg) -> String {
+    j.get("collective").and_then(|v| v.as_str()).unwrap_or(&d.collective).to_string()
+}
+
+fn fabric_json(f: &FabricCfg) -> Json {
+    let mut kv = vec![
+        ("collective", Json::from(f.collective.as_str())),
+        ("bytes", Json::from(f.bytes)),
+        ("routing", Json::from(f.routing.as_str())),
+        ("seed", Json::from(f.seed as usize)),
+    ];
+    if let Some(a) = &f.algo {
+        kv.push(("algo", Json::from(a.as_str())));
+    }
+    Json::obj(kv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_match_legacy_config_defaults() {
+        let s = Scenario::llm("gpt3-175b");
+        assert_eq!(s.goal, Goal::Map);
+        assert_eq!(s.system, SystemCfg::default());
+        assert_eq!(s.system.build().unwrap().n_chips(), 8);
+        assert_eq!(s.knobs.interchip_options().state_bytes_per_weight_byte, 8.0);
+    }
+
+    #[test]
+    fn serde_roundtrips_every_goal() {
+        let scenarios = [
+            Scenario::llm("gpt3-1t")
+                .batch(2048.0)
+                .on(SystemCfg::new("h100", "hbm3", "nvlink4").torus2d(32, 32)),
+            Scenario::dlrm().calibrated_fabric(),
+            Scenario::hpl().forced(4, 1, 2),
+            Scenario::llama("8b").serving_split(4, 4).prompt_context(2048.0, 512.0),
+            Scenario::llama("70b").plan_for(2.0).slo(2.0, 0.05),
+            Scenario::llama("8b").simulate_traffic(8.0, 100),
+            Scenario::llm("gpt3-175b").on(SystemCfg::default()).fabric_sweep("alltoall", 16e6),
+        ];
+        for s in scenarios {
+            let text = s.to_json().pretty();
+            let back = Scenario::parse(&text).expect("roundtrip parse");
+            assert_eq!(s, back, "scenario changed across serde:\n{text}");
+        }
+    }
+
+    #[test]
+    fn custom_gpt_roundtrips() {
+        let cfg = GptConfig {
+            layers: 4,
+            d_model: 1024.0,
+            n_heads: 8.0,
+            seq: 512.0,
+            d_ff: 4096.0,
+            vocab: 1000.0,
+            dtype_bytes: 2.0,
+        };
+        let s = Scenario::llm_custom(cfg).batch(8.0);
+        let back = Scenario::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn parse_rejects_bad_names() {
+        assert!(Scenario::parse(r#"{"system": {"chip": "zz80"}}"#).is_err());
+        assert!(Scenario::parse(r#"{"workload": {"kind": "prolog"}}"#).is_err());
+        assert!(Scenario::parse(r#"{"workload": {"kind": "gpt", "model": "gpt5"}}"#).is_err());
+        assert!(Scenario::parse(r#"{"goal": "teleport"}"#).is_err());
+        assert!(Scenario::parse(r#"{"options": {"force_tp": 8}}"#).is_err());
+        assert!(Scenario::parse("not json").is_err());
+        let e = Scenario::parse(r#"{"collective": {"model": "psychic"}}"#).unwrap_err();
+        assert!(e.to_string().contains("psychic"), "{e}");
+    }
+
+    #[test]
+    fn legacy_experiment_schema_still_parses() {
+        let s = Scenario::parse(
+            r#"{
+              "workload": {"kind": "gpt", "model": "gpt3-175b", "batch": 64},
+              "system": {"chip": "sn10", "memory": "ddr4", "link": "pcie4",
+                         "topology": {"kind": "ring", "dims": [8]}},
+              "options": {"force_tp": 8, "force_pp": 1, "force_dp": 1}
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(s.goal, Goal::Map);
+        assert_eq!(s.knobs.force_degrees, Some((8, 1, 1)));
+        assert_eq!(s.system.build().unwrap().n_chips(), 8);
+    }
+
+    #[test]
+    fn balanced_topology_by_chip_count() {
+        let s = SystemCfg::new("h100", "hbm3", "nvlink4").topo("torus2d", 16);
+        let sys = s.build().unwrap();
+        assert_eq!(sys.n_chips(), 16);
+        let back =
+            Scenario::parse(&Scenario::llm("gpt3-175b").on(s.clone()).to_json().to_string())
+                .unwrap();
+        assert_eq!(back.system, s);
+    }
+
+    #[test]
+    fn serving_system_has_sn40l_memory() {
+        let sys = SystemCfg::sn40l_x16().build_serving().unwrap();
+        assert_eq!(sys.n_chips, 16);
+        assert!(sys.mem_bw > 1e12, "SN40L HBM-class bandwidth expected");
+        assert!(sys.mem_cap > 1e9);
+    }
+}

@@ -14,7 +14,9 @@ use std::fmt::Write as _;
 use super::workload::Request;
 use crate::graph::llama::LlamaConfig;
 use crate::serving::{self, ServingPoint, ServingSystem};
+use crate::util::error::{Context as _, Result};
 use crate::util::units::fmt_time;
+use crate::{ensure, err};
 
 /// One replica's static configuration: the model served with TP×PP over a
 /// chip group, plus the scheduler's batching/KV policy.
@@ -328,21 +330,28 @@ impl Sim<'_> {
 }
 
 /// Simulate `replicas` identical replicas serving `requests` (arrivals join
-/// the least-loaded replica, ties broken by index). Returns `None` when the
-/// configuration is infeasible: TP×PP does not cover the chip group, or the
-/// model weights exceed the group's device memory.
+/// the least-loaded replica, ties broken by index). Errors — with the
+/// reason — when the configuration is infeasible: TP×PP does not cover the
+/// chip group, or the model weights exceed the group's device memory.
 pub fn simulate(
     cfg: &ReplicaConfig,
     replicas: usize,
     requests: &[Request],
     slo: &Slo,
-) -> Option<SimReport> {
-    if replicas == 0 {
-        return None;
-    }
+) -> Result<SimReport> {
+    ensure!(replicas > 0, "cluster simulation needs at least one replica");
     // probe the oracle once so infeasibility surfaces here, not mid-run
-    serving::evaluate(&cfg.model, &cfg.sys, &cfg.point(1.0, 1.0, 1.0))?;
-    let budget = cfg.kv_budget_bytes()?;
+    serving::evaluate(&cfg.model, &cfg.sys, &cfg.point(1.0, 1.0, 1.0))
+        .context("replica configuration")?;
+    let budget = cfg.kv_budget_bytes().ok_or_else(|| {
+        err!(
+            "model weights ({:.1} GB) exceed the replica's device memory ({:.1} GB across {} \
+             chips)",
+            cfg.model.weight_bytes() / 1e9,
+            cfg.sys.mem_total() / 1e9,
+            cfg.sys.n_chips
+        )
+    })?;
     let mut sim = Sim {
         cfg,
         requests,
@@ -424,7 +433,7 @@ pub fn simulate(
         });
     }
     let makespan = sim.now.max(1e-30);
-    Some(SimReport {
+    Ok(SimReport {
         n_offered: requests.len(),
         n_completed: per.len(),
         n_rejected: rejected,
@@ -484,18 +493,21 @@ mod tests {
     }
 
     #[test]
-    fn infeasible_configs_are_none() {
+    fn infeasible_configs_are_descriptive_errors() {
         let requests = TraceSpec::poisson(1, 1.0, 10).generate();
         // split does not cover the group
         let mut bad = cfg();
         bad.tp = 4;
-        assert!(simulate(&bad, 1, &requests, &slo()).is_none());
+        let e = simulate(&bad, 1, &requests, &slo()).unwrap_err();
+        assert!(e.to_string().contains("TP4xPP1"), "{e}");
         // weights alone exceed device memory
         let mut tiny = cfg();
         tiny.sys.mem_cap = 1e6;
-        assert!(simulate(&tiny, 1, &requests, &slo()).is_none());
+        let e = simulate(&tiny, 1, &requests, &slo()).unwrap_err();
+        assert!(e.to_string().contains("device memory"), "{e}");
         // zero replicas
-        assert!(simulate(&cfg(), 0, &requests, &slo()).is_none());
+        let e = simulate(&cfg(), 0, &requests, &slo()).unwrap_err();
+        assert!(e.to_string().contains("replica"), "{e}");
     }
 
     #[test]

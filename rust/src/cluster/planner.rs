@@ -132,7 +132,8 @@ fn seed_replicas(cfg: &ReplicaConfig, target: &PlanTarget, traffic: &PlanTraffic
             prompt_len: 1.0,
             context: ctx,
         },
-    )?;
+    )
+    .ok()?;
     let req_per_s = m.decode_tps / traffic.output.mean;
     if req_per_s <= 0.0 {
         return None;
@@ -161,7 +162,7 @@ fn evaluate_candidate(
     let mut replicas = seed_replicas(&cfg, target, traffic)?;
     let mut last: Option<(usize, SimReport, bool)> = None;
     for _ in 0..6 {
-        let report = simulate(&cfg, replicas, requests, &target.slo)?;
+        let report = simulate(&cfg, replicas, requests, &target.slo).ok()?;
         let ok = report.slo_attainment >= target.attainment
             && report.n_completed == report.n_offered;
         last = Some((replicas, report, ok));

@@ -1,8 +1,13 @@
-//! JSON experiment configuration: declarative (workload, system, options)
-//! specs so sweeps and one-off studies are launchable without recompiling —
-//! `dfmodel run --config exp.json`.
+//! JSON experiment configuration — **deprecated shim** over the
+//! [`crate::api`] facade.
 //!
-//! Schema (all sections optional where a default exists):
+//! `Experiment` predates [`crate::api::Scenario`] and is kept only so
+//! `dfmodel run --config exp.json` and existing config files keep working:
+//! parsing delegates to `Scenario::parse` (the legacy
+//! `workload`/`system`/`options` schema is a subset of the scenario
+//! schema), and `run()` delegates to `Scenario::evaluate`, reshaped into
+//! the legacy flat result object. New code should use the facade directly:
+//!
 //! ```json
 //! {
 //!   "workload": {"kind": "gpt", "model": "gpt3-175b", "batch": 64},
@@ -15,16 +20,25 @@
 //! }
 //! ```
 
-use crate::graph::{dlrm, fft, gpt, hpl, DataflowGraph};
+use crate::api::scenario::BuiltWorkload;
+use crate::api::{Goal, Scenario};
+use crate::ensure;
+use crate::graph::gpt;
+use crate::graph::DataflowGraph;
 use crate::interchip::InterChipOptions;
-use crate::system::{chip, interconnect, memory, topology, ChipSpec, SystemSpec};
+use crate::system::SystemSpec;
 use crate::util::error::Result;
 use crate::util::json::Json;
-use crate::{bail, err};
 
-/// A parsed experiment specification.
+/// A parsed experiment specification (legacy view of a [`Scenario`]).
+///
+/// `workload`/`system`/`options` are a **read-only resolved view** for
+/// inspection; `run()` evaluates `scenario`, so mutate that (or use the
+/// facade builder) to change what runs.
 #[derive(Debug, Clone)]
 pub struct Experiment {
+    /// The facade scenario this experiment shims over.
+    pub scenario: Scenario,
     pub workload: WorkloadSpec,
     pub system: SystemSpec,
     pub options: InterChipOptions,
@@ -40,42 +54,63 @@ pub enum WorkloadSpec {
 
 impl Experiment {
     pub fn parse(text: &str) -> Result<Experiment> {
-        let j = Json::parse(text).map_err(|e| err!("config: {e}"))?;
-        let workload = parse_workload(j.get("workload").unwrap_or(&Json::Null))?;
-        let system = parse_system(j.get("system").unwrap_or(&Json::Null))?;
-        let options = parse_options(j.get("options").unwrap_or(&Json::Null))?;
-        Ok(Experiment { workload, system, options })
+        Experiment::from_scenario(Scenario::parse(text)?)
     }
 
     pub fn load(path: &std::path::Path) -> Result<Experiment> {
-        let text = std::fs::read_to_string(path)
-            .map_err(|e| err!("read {}: {e}", path.display()))?;
-        Experiment::parse(&text)
+        Experiment::from_scenario(Scenario::load(path)?)
     }
 
-    /// Run the experiment and return a machine-readable result object.
+    /// Build the legacy view (resolved workload/system/options) of a
+    /// `Map`-goal scenario.
+    pub fn from_scenario(scenario: Scenario) -> Result<Experiment> {
+        ensure!(
+            scenario.goal == Goal::Map,
+            "the legacy config shim only drives map-goal scenarios; use \
+             `--scenario` on the '{}' subcommand instead",
+            scenario.goal.name()
+        );
+        // builder-constructed scenarios may not have been validated yet;
+        // checking here keeps run()'s feasible:false path for genuine
+        // infeasibility only (config errors stay errors)
+        scenario.check()?;
+        let workload = match scenario.workload.build(&scenario.knobs)? {
+            BuiltWorkload::Gpt { cfg, batch } => WorkloadSpec::Gpt { cfg, batch },
+            BuiltWorkload::Graph { graph, passes, max_dp } => {
+                WorkloadSpec::Graph { graph, passes, max_dp }
+            }
+        };
+        let system = scenario.system.build()?;
+        let options = scenario.knobs.interchip_options();
+        Ok(Experiment { scenario, workload, system, options })
+    }
+
+    /// Run the experiment and return a machine-readable result object (the
+    /// legacy flat shape; `Scenario::evaluate` + `Report::to_json` is the
+    /// richer replacement).
     pub fn run(&self) -> Result<Json> {
-        let result = match &self.workload {
-            WorkloadSpec::Gpt { cfg, batch } => {
-                crate::pipeline::llm_training_opts(cfg, &self.system, *batch, &self.options)
+        let report = match self.scenario.evaluate() {
+            Ok(r) => r,
+            // an infeasible mapping keeps the legacy feasible:false shape;
+            // any other failure (e.g. a name mutated to garbage after
+            // parsing) stays an error instead of masquerading as infeasible
+            Err(e) if e.to_string().starts_with("no feasible mapping") => {
+                return Ok(Json::obj(vec![("feasible", Json::Bool(false))]));
             }
-            WorkloadSpec::Graph { graph, passes, max_dp } => {
-                crate::pipeline::workload_pass(graph, &self.system, *passes, *max_dp)
-            }
+            Err(e) => return Err(e),
         };
-        let Some(r) = result else {
-            return Ok(Json::obj(vec![("feasible", Json::Bool(false))]));
-        };
-        let (c, m, n) = r.breakdown_frac();
+        let (tp, pp, dp) = report.degrees().unwrap_or((1, 1, 1));
+        let perf = report.perf.as_ref().expect("map goal fills perf");
+        let (c, m, n) = perf.breakdown;
         Ok(Json::obj(vec![
             ("feasible", Json::Bool(true)),
-            ("system", Json::from(self.system.describe())),
-            ("tp", Json::from(r.tp)),
-            ("pp", Json::from(r.pp)),
-            ("dp", Json::from(r.dp)),
-            ("step_time_s", Json::from(r.step_time)),
-            ("utilization", Json::from(r.utilization)),
-            ("achieved_flops", Json::from(r.achieved_flops)),
+            ("system", Json::from(report.system.clone())),
+            ("tp", Json::from(tp)),
+            ("pp", Json::from(pp)),
+            ("dp", Json::from(dp)),
+            ("step_time_s", Json::from(perf.step_time)),
+            ("utilization", Json::from(perf.utilization)),
+            ("achieved_flops", Json::from(perf.achieved_flops)),
             (
                 "breakdown",
                 Json::obj(vec![
@@ -88,130 +123,6 @@ impl Experiment {
             ("power_w", Json::from(self.system.power_w())),
         ]))
     }
-}
-
-fn parse_workload(j: &Json) -> Result<WorkloadSpec> {
-    let kind = j.get("kind").and_then(|v| v.as_str()).unwrap_or("gpt");
-    match kind {
-        "gpt" => {
-            let model = j.get("model").and_then(|v| v.as_str()).unwrap_or("gpt3-175b");
-            let cfg = match model {
-                "gpt3-175b" => gpt::gpt3_175b(),
-                "gpt3-1t" => gpt::gpt3_1t(),
-                "gpt-100t" => gpt::gpt_100t(),
-                "custom" => gpt::GptConfig {
-                    layers: j.get("layers").and_then(|v| v.as_usize()).unwrap_or(96),
-                    d_model: j.get("d_model").and_then(|v| v.as_f64()).unwrap_or(12288.0),
-                    n_heads: j.get("n_heads").and_then(|v| v.as_f64()).unwrap_or(96.0),
-                    seq: j.get("seq").and_then(|v| v.as_f64()).unwrap_or(2048.0),
-                    d_ff: j.get("d_ff").and_then(|v| v.as_f64()).unwrap_or(4.0 * 12288.0),
-                    vocab: j.get("vocab").and_then(|v| v.as_f64()).unwrap_or(50257.0),
-                    dtype_bytes: j.get("dtype_bytes").and_then(|v| v.as_f64()).unwrap_or(2.0),
-                },
-                other => bail!("unknown gpt model '{other}'"),
-            };
-            let batch = j.get("batch").and_then(|v| v.as_f64()).unwrap_or(64.0);
-            Ok(WorkloadSpec::Gpt { cfg, batch })
-        }
-        "dlrm" => {
-            let batch = j.get("batch").and_then(|v| v.as_f64()).unwrap_or(65_536.0);
-            Ok(WorkloadSpec::Graph {
-                graph: dlrm::dlrm_graph(&dlrm::dlrm_793b(), batch),
-                passes: 3.0,
-                max_dp: j.get("max_dp").and_then(|v| v.as_usize()).unwrap_or(64),
-            })
-        }
-        "hpl" => Ok(WorkloadSpec::Graph {
-            graph: hpl::hpl_graph(&hpl::hpl_5m()),
-            passes: 1.0,
-            max_dp: 1,
-        }),
-        "fft" => Ok(WorkloadSpec::Graph {
-            graph: fft::fft_graph(&fft::fft_1t()),
-            passes: 1.0,
-            max_dp: 1,
-        }),
-        "moe" => {
-            let cfg = crate::graph::moe::moe_gpt_1t();
-            let batch = j.get("batch").and_then(|v| v.as_f64()).unwrap_or(1.0);
-            Ok(WorkloadSpec::Graph {
-                graph: crate::graph::moe::moe_layer_graph(&cfg, batch),
-                passes: 3.0,
-                max_dp: j.get("max_dp").and_then(|v| v.as_usize()).unwrap_or(64),
-            })
-        }
-        other => bail!("unknown workload kind '{other}'"),
-    }
-}
-
-fn parse_chip(name: &str) -> Result<ChipSpec> {
-    Ok(match name {
-        "h100" => chip::h100(),
-        "a100" => chip::a100(),
-        "tpuv4" => chip::tpu_v4(),
-        "sn10" => chip::sn10(),
-        "sn30" => chip::sn30(),
-        "sn40l" => chip::sn40l(),
-        "wse2" => chip::wse2(),
-        other => bail!("unknown chip '{other}'"),
-    })
-}
-
-fn parse_system(j: &Json) -> Result<SystemSpec> {
-    let c = parse_chip(j.get("chip").and_then(|v| v.as_str()).unwrap_or("sn10"))?;
-    let mem = match j.get("memory").and_then(|v| v.as_str()).unwrap_or("ddr4") {
-        "ddr4" => memory::ddr4(),
-        "hbm3" => memory::hbm3(),
-        "2d-ddr" => memory::mem2d_ddr(),
-        "2.5d-hbm" => memory::mem25d_hbm(),
-        "3d-stacked" => memory::mem3d_stacked(),
-        other => bail!("unknown memory '{other}'"),
-    };
-    let link = match j.get("link").and_then(|v| v.as_str()).unwrap_or("pcie4") {
-        "pcie4" => interconnect::pcie4(),
-        "nvlink4" => interconnect::nvlink4(),
-        "rdu" => interconnect::rdu_fabric(),
-        other => bail!("unknown link '{other}'"),
-    };
-    let t = j.get("topology").unwrap_or(&Json::Null);
-    let kind = t.get("kind").and_then(|v| v.as_str()).unwrap_or("ring");
-    let dims: Vec<usize> = t
-        .get("dims")
-        .and_then(|v| v.as_array())
-        .map(|a| a.iter().filter_map(|d| d.as_usize()).collect())
-        .unwrap_or_else(|| vec![8]);
-    let topo = match (kind, dims.as_slice()) {
-        ("ring", [n]) => topology::ring(*n, &link),
-        ("torus2d", [x, y]) => topology::torus2d(*x, *y, &link),
-        ("torus3d", [x, y, z]) => topology::torus3d(*x, *y, *z, &link),
-        ("dragonfly", [g, n]) => topology::dragonfly(*g, *n, &link),
-        ("dgx1", [n]) => topology::dgx1(*n, &link),
-        ("dgx2", [n]) => topology::dgx2(*n, &link),
-        (k, d) => bail!("bad topology {k} with dims {d:?}"),
-    };
-    Ok(SystemSpec::new(c, mem, link, topo))
-}
-
-fn parse_options(j: &Json) -> Result<InterChipOptions> {
-    let mut o = InterChipOptions::default();
-    if let Some(v) = j.get("state_bytes_per_weight_byte").and_then(|v| v.as_f64()) {
-        o.state_bytes_per_weight_byte = v;
-    }
-    let tp = j.get("force_tp").and_then(|v| v.as_usize());
-    let pp = j.get("force_pp").and_then(|v| v.as_usize());
-    let dp = j.get("force_dp").and_then(|v| v.as_usize());
-    if let (Some(tp), Some(pp), Some(dp)) = (tp, pp, dp) {
-        o.force_degrees = Some((tp, pp, dp));
-    } else if tp.is_some() || pp.is_some() || dp.is_some() {
-        bail!("force_tp/force_pp/force_dp must be given together");
-    }
-    if let Some(v) = j.get("max_pp").and_then(|v| v.as_usize()) {
-        o.max_pp = v;
-    }
-    if let Some(v) = j.get("max_dp").and_then(|v| v.as_usize()) {
-        o.max_dp = v;
-    }
-    Ok(o)
 }
 
 #[cfg(test)]
@@ -289,5 +200,17 @@ mod tests {
         let e = Experiment::parse(cfg).unwrap();
         let r = e.run().unwrap();
         assert_eq!(r.get("feasible"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn shim_run_matches_facade_report() {
+        let e = Experiment::parse(SAMPLE).unwrap();
+        let legacy = e.run().unwrap();
+        let report = e.scenario.evaluate().unwrap();
+        assert_eq!(
+            legacy.get("utilization").unwrap().as_f64(),
+            report.utilization(),
+            "shim and facade must agree"
+        );
     }
 }

@@ -4,6 +4,8 @@
 //! Figs 10–17 heat maps and latency breakdowns — plus the Fig. 19
 //! SRAM×DRAM-bandwidth sweep and the Fig. 22 3-D-memory sweep.
 
+use std::sync::OnceLock;
+
 use crate::graph::{dlrm, fft, gpt, hpl};
 use crate::pipeline;
 use crate::system::{chip, interconnect, memory, topology, ChipSpec, SystemSpec};
@@ -55,7 +57,10 @@ pub struct DesignPoint {
 }
 
 /// Evaluate one workload on one system; None when infeasible.
-pub fn evaluate_point(w: Workload, sys: &SystemSpec) -> Option<DesignPoint> {
+///
+/// `pub(crate)`: external callers go through `api::evaluate_design` or a
+/// `api::Scenario` (the facade is the only public seam).
+pub(crate) fn evaluate_point(w: Workload, sys: &SystemSpec) -> Option<DesignPoint> {
     let r = match w {
         Workload::Llm => pipeline::llm_training(&gpt::gpt3_1t(), sys, 2048.0)?,
         Workload::Dlrm => {
@@ -88,7 +93,9 @@ pub fn evaluate_point(w: Workload, sys: &SystemSpec) -> Option<DesignPoint> {
 /// but every TP/PP/DP and sharding decision is priced with simulated
 /// contention instead of the closed-form shortcut. Subsets larger than
 /// `opts.max_group` keep the analytical costs.
-pub fn evaluate_point_calibrated(
+///
+/// `pub(crate)`: the public seam is `api::evaluate_design_calibrated`.
+pub(crate) fn evaluate_point_calibrated(
     w: Workload,
     sys: &SystemSpec,
     opts: &crate::fabric::CalibrateOpts,
@@ -97,28 +104,36 @@ pub fn evaluate_point_calibrated(
     evaluate_point(w, &calibrated)
 }
 
-/// The 4 memory × interconnect combinations of §VI-C.
-pub fn mem_link_combos() -> Vec<(memory::MemoryTech, interconnect::LinkTech)> {
-    vec![
-        (memory::ddr4(), interconnect::pcie4()),
-        (memory::ddr4(), interconnect::nvlink4()),
-        (memory::hbm3(), interconnect::pcie4()),
-        (memory::hbm3(), interconnect::nvlink4()),
-    ]
+/// The 4 memory × interconnect combinations of §VI-C, built once and
+/// cached — sweeps call this per design point, so the fresh-`Vec`-per-call
+/// version allocated 4 specs × 80 points × every sweep for nothing.
+pub fn mem_link_combos() -> &'static [(memory::MemoryTech, interconnect::LinkTech)] {
+    static COMBOS: OnceLock<Vec<(memory::MemoryTech, interconnect::LinkTech)>> = OnceLock::new();
+    COMBOS.get_or_init(|| {
+        vec![
+            (memory::ddr4(), interconnect::pcie4()),
+            (memory::ddr4(), interconnect::nvlink4()),
+            (memory::hbm3(), interconnect::pcie4()),
+            (memory::hbm3(), interconnect::nvlink4()),
+        ]
+    })
 }
 
 /// All 80 system specs of the §VI-C design space (4 chips × 5 topologies ×
-/// 4 mem/link combos) at 1024 accelerators.
-pub fn dse_systems_1024() -> Vec<SystemSpec> {
-    let mut out = Vec::new();
-    for c in chip::table_v() {
-        for (mem, link) in mem_link_combos() {
-            for topo in topology::dse_topologies_1024(&link) {
-                out.push(SystemSpec::new(c.clone(), mem.clone(), link.clone(), topo));
+/// 4 mem/link combos) at 1024 accelerators, built once and cached.
+pub fn dse_systems_1024() -> &'static [SystemSpec] {
+    static SYSTEMS: OnceLock<Vec<SystemSpec>> = OnceLock::new();
+    SYSTEMS.get_or_init(|| {
+        let mut out = Vec::new();
+        for c in chip::table_v() {
+            for (mem, link) in mem_link_combos() {
+                for topo in topology::dse_topologies_1024(link) {
+                    out.push(SystemSpec::new(c.clone(), mem.clone(), link.clone(), topo));
+                }
             }
         }
-    }
-    out
+        out
+    })
 }
 
 /// Run the full sweep for one workload (parallel across design points).
@@ -126,7 +141,7 @@ pub fn dse_systems_1024() -> Vec<SystemSpec> {
 /// the gap.
 pub fn sweep(w: Workload) -> Vec<DesignPoint> {
     let systems = dse_systems_1024();
-    parallel_map(&systems, |sys| {
+    parallel_map(systems, |sys| {
         evaluate_point(w, sys).unwrap_or(DesignPoint {
             chip: sys.chip.name.clone(),
             topo: sys.topology.name.clone(),

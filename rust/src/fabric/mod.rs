@@ -37,5 +37,9 @@ pub mod sim;
 
 pub use algorithms::{build, Algo, Msg, Schedule};
 pub use graph::{FabricGraph, Link};
-pub use select::{best, calibrate, calibrate_system, evaluate_algos, AlgoEval, CalibrateOpts};
+pub use select::{best, calibrate, evaluate_algos, AlgoEval, CalibrateOpts};
 pub use sim::{simulate, Routing, SimConfig, SimResult};
+
+/// `pub(crate)`: external callers go through `api::calibrate` or a
+/// calibrated-fabric `api::Scenario` knob.
+pub(crate) use select::calibrate_system;

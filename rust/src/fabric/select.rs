@@ -153,8 +153,9 @@ pub fn calibrate(t: &Topology, opts: &CalibrateOpts) -> Calibration {
 
 /// `sys` with its collective model swapped for a fabric calibration of its
 /// own topology — the entry point that threads simulation fidelity into
-/// `interchip::optimize` and the DSE.
-pub fn calibrate_system(sys: &SystemSpec, opts: &CalibrateOpts) -> SystemSpec {
+/// `interchip::optimize` and the DSE. (`pub(crate)` — the public seam is
+/// `api::calibrate`.)
+pub(crate) fn calibrate_system(sys: &SystemSpec, opts: &CalibrateOpts) -> SystemSpec {
     let cal = calibrate(&sys.topology, opts);
     sys.clone().with_collective_model(CollectiveModel::Calibrated(cal))
 }

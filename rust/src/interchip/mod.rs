@@ -12,8 +12,12 @@
 pub mod optimizer;
 pub mod parallelism;
 
-pub use optimizer::{optimize, InterChipOptions};
+pub use optimizer::InterChipOptions;
 pub use parallelism::{enumerate_plans, ParallelismPlan};
+
+/// `pub(crate)`: external callers go through `api::map_graph` or a
+/// `api::Scenario` — the facade is the only public optimization seam.
+pub(crate) use optimizer::optimize;
 
 use crate::graph::DataflowGraph;
 use crate::sharding::{self, ShardScheme};

@@ -44,7 +44,8 @@ impl Default for InterChipOptions {
 
 /// Run the §IV optimization: returns the best mapping across all feasible
 /// plans, or None if no plan satisfies the capacity constraints.
-pub fn optimize(
+/// (`pub(crate)` — the public seam is `api::map_graph`.)
+pub(crate) fn optimize(
     g: &DataflowGraph,
     sys: &SystemSpec,
     opts: &InterChipOptions,

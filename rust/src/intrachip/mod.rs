@@ -11,7 +11,11 @@
 pub mod optimizer;
 pub mod tiles;
 
-pub use optimizer::{optimize_intra, IntraChipOptions};
+pub use optimizer::IntraChipOptions;
+
+/// `pub(crate)`: external callers go through `api::map_chip` or a
+/// `api::Scenario` — the facade is the only public optimization seam.
+pub(crate) use optimizer::optimize_intra;
 
 use crate::assign::Assignment;
 use crate::graph::DataflowGraph;

@@ -37,7 +37,8 @@ impl Default for IntraChipOptions {
 
 /// Run the §V optimization for one chip's (already sharded) subgraph.
 /// Returns None when no feasible partitioning exists (capacity exceeded).
-pub fn optimize_intra(
+/// (`pub(crate)` — the public seam is `api::map_chip`.)
+pub(crate) fn optimize_intra(
     g: &DataflowGraph,
     chip: &ChipSpec,
     memory: &MemoryTech,

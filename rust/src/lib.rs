@@ -15,7 +15,12 @@
 //!
 //! See `DESIGN.md` for the system inventory and the per-experiment index
 //! mapping every paper table/figure to a module and bench target.
+//!
+//! The public entry point is the [`api`] facade: a declarative
+//! [`api::Scenario`] in, a [`api::Report`] (with its [`api::Mapping`])
+//! out. The optimizer internals stay `pub(crate)`.
 
+pub mod api;
 pub mod assign;
 pub mod baselines;
 pub mod cluster;

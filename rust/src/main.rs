@@ -1,23 +1,59 @@
 //! `dfmodel` CLI — the L3 leader entrypoint.
 //!
-//! Subcommands:
+//! Subcommands (scenario-driven ones accept `--scenario <file.json>` to
+//! load a full `api::Scenario`, and `--json` for the machine-readable
+//! report):
 //!   catalog                       print the Table V chip catalog
 //!   figure <id>|--all             regenerate paper figures/tables (results/)
-//!   optimize [--chips N ...]      optimize a GPT mapping and print it
+//!   optimize [--chips N ...]      map a GPT workload and print the report
 //!   dse --workload llm|dlrm|hpl|fft   run the 80-config sweep
 //!   serve [--tp N --pp N ...]     serving model (Fig. 20 style point)
 //!   simulate [--qps R ...]        request-level cluster serving simulation
 //!   plan --qps R --slo-ttft S --slo-tpot S   SLO-aware capacity planner
 //!   fabric [--topo F --chips N --coll C ...]  link-level collective simulation
 //!   topo [--topo F --chips N]     topology facts (links, bisection bandwidth)
-//!   run-pipeline <name>           execute an AOT pipeline via PJRT
+//!   run --config exp.json         legacy declarative experiment launcher
+//!   run-pipeline <name>           execute an AOT pipeline via the runtime
 //!   verify                        verify every pipeline against the oracle
+//!   version | --version           print the version
 
+use dfmodel::api::{Goal, Scenario, SystemCfg};
 use dfmodel::figures;
-use dfmodel::util::cli::Args;
+use dfmodel::util::cli::{suggest, Args};
+
+const SUBCOMMANDS: &[&str] = &[
+    "catalog",
+    "figure",
+    "optimize",
+    "dse",
+    "serve",
+    "simulate",
+    "plan",
+    "fabric",
+    "topo",
+    "run",
+    "run-pipeline",
+    "verify",
+    "version",
+];
+
+fn usage() {
+    eprintln!(
+        "usage: dfmodel <{}> [options]\n\
+         figures: {}\n\
+         scenario subcommands (optimize dse serve simulate plan fabric) accept\n\
+         --scenario <file.json> and --json",
+        SUBCOMMANDS.join("|"),
+        figures::ALL.join(" ")
+    );
+}
 
 fn main() {
     let args = Args::from_env();
+    if args.has_flag("version") {
+        println!("dfmodel {}", env!("CARGO_PKG_VERSION"));
+        std::process::exit(0);
+    }
     let code = match args.subcommand.as_deref() {
         Some("catalog") => {
             print!("{}", figures::table5());
@@ -34,12 +70,20 @@ fn main() {
         Some("run") => cmd_run(&args),
         Some("run-pipeline") => cmd_run_pipeline(&args),
         Some("verify") => cmd_verify(&args),
-        _ => {
-            eprintln!(
-                "usage: dfmodel <catalog|figure|optimize|dse|serve|simulate|plan|fabric|topo|run|run-pipeline|verify> [options]\n\
-                 figures: {}",
-                figures::ALL.join(" ")
-            );
+        Some("version") => {
+            println!("dfmodel {}", env!("CARGO_PKG_VERSION"));
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'");
+            if let Some(s) = suggest(other, SUBCOMMANDS) {
+                eprintln!("did you mean '{s}'?");
+            }
+            usage();
+            2
+        }
+        None => {
+            usage();
             2
         }
     };
@@ -63,6 +107,9 @@ fn cmd_figure(args: &Args) -> i32 {
                 // one bad figure id or infeasible plan degrades to an error
                 // line instead of aborting the whole run
                 eprintln!("figure '{id}': {e}");
+                if let Some(s) = suggest(id, figures::ALL) {
+                    eprintln!("did you mean '{s}'?");
+                }
                 failed += 1;
             }
         }
@@ -70,113 +117,139 @@ fn cmd_figure(args: &Args) -> i32 {
     i32::from(failed > 0)
 }
 
-fn cmd_optimize(args: &Args) -> i32 {
-    use dfmodel::system::{chip, interconnect, memory, topology, SystemSpec};
-    let chips = args.get_usize("chips", 8);
-    let chip = match args.get_or("chip", "sn10") {
-        "sn10" => chip::sn10(),
-        "sn30" => chip::sn30(),
-        "sn40l" => chip::sn40l(),
-        "h100" => chip::h100(),
-        "a100" => chip::a100(),
-        "tpuv4" => chip::tpu_v4(),
-        "wse2" => chip::wse2(),
-        other => {
-            eprintln!("unknown chip '{other}'");
-            return 2;
-        }
-    };
-    let link = match args.get_or("link", "pcie4") {
-        "pcie4" => interconnect::pcie4(),
-        "nvlink4" => interconnect::nvlink4(),
-        other => {
-            eprintln!("unknown link '{other}'");
-            return 2;
-        }
-    };
-    let mem = match args.get_or("mem", "ddr4") {
-        "ddr4" => memory::ddr4(),
-        "hbm3" => memory::hbm3(),
-        other => {
-            eprintln!("unknown memory '{other}'");
-            return 2;
-        }
-    };
-    let sys = SystemSpec::new(chip, mem, link.clone(), topology::ring(chips, &link));
-    let cfg = match args.get_or("model", "gpt3-175b") {
-        "gpt3-175b" => dfmodel::graph::gpt::gpt3_175b(),
-        "gpt3-1t" => dfmodel::graph::gpt::gpt3_1t(),
-        other => {
-            eprintln!("unknown model '{other}'");
-            return 2;
-        }
-    };
-    println!("system: {}", sys.describe());
-    match dfmodel::pipeline::llm_training(&cfg, &sys, args.get_f64("batch", 64.0)) {
-        Some(r) => {
-            println!("chosen degrees: TP={} PP={} DP={}", r.tp, r.pp, r.dp);
-            println!("step time: {}", dfmodel::util::units::fmt_time(r.step_time));
-            println!("utilization: {:.3}", r.utilization);
-            let (c, m, n) = r.breakdown_frac();
-            println!("breakdown: compute {c:.2} | memory {m:.2} | network {n:.2}");
-            0
-        }
+/// Load `--scenario <file>` (validating its goal against the subcommand)
+/// or build one from the flag set.
+fn load_scenario(
+    args: &Args,
+    want: Goal,
+    build: impl FnOnce(&Args) -> Result<Scenario, String>,
+) -> Result<Scenario, String> {
+    let s = match args.get("scenario") {
+        Some(path) => Scenario::load(std::path::Path::new(path)).map_err(|e| e.to_string())?,
         None => {
-            eprintln!("no feasible mapping (capacity constraints)");
+            let s = build(args)?;
+            s.check().map_err(|e| e.to_string())?;
+            s
+        }
+    };
+    if s.goal != want {
+        return Err(format!(
+            "scenario goal '{}' does not match this subcommand (expected '{}')",
+            s.goal.name(),
+            want.name()
+        ));
+    }
+    Ok(s)
+}
+
+/// Print a report (`--json` switches to the JSON form) and derive the
+/// exit code: a plan that found no feasible fleet is a failure exit.
+fn print_report(args: &Args, r: &dfmodel::api::Report) -> i32 {
+    if args.has_flag("json") {
+        println!("{}", r.to_json().pretty());
+    } else {
+        print!("{}", r.render());
+    }
+    if let Some(p) = &r.plan {
+        return i32::from(p.best.is_none());
+    }
+    0
+}
+
+/// Evaluate + print a scenario. Infeasibility exits 1; config errors were
+/// already caught at exit 2.
+fn run_scenario(args: &Args, s: &Scenario) -> i32 {
+    match s.evaluate() {
+        Ok(r) => print_report(args, &r),
+        Err(e) => {
+            eprintln!("{e}");
             1
+        }
+    }
+}
+
+fn scenario_optimize(args: &Args) -> Result<Scenario, String> {
+    let system = SystemCfg::new(
+        args.get_or("chip", "sn10"),
+        args.get_or("mem", "ddr4"),
+        args.get_or("link", "pcie4"),
+    )
+    .topo(args.get_or("topo", "ring"), args.get_usize("chips", 8));
+    Ok(Scenario::llm(args.get_or("model", "gpt3-175b"))
+        .batch(args.get_f64("batch", 64.0))
+        .on(system))
+}
+
+fn cmd_optimize(args: &Args) -> i32 {
+    match load_scenario(args, Goal::Map, scenario_optimize) {
+        Ok(s) => run_scenario(args, &s),
+        Err(e) => {
+            eprintln!("{e}");
+            2
         }
     }
 }
 
 fn cmd_dse(args: &Args) -> i32 {
     use dfmodel::dse::Workload;
-    let w = match args.get_or("workload", "llm") {
-        "llm" => Workload::Llm,
-        "dlrm" => Workload::Dlrm,
-        "hpl" => Workload::Hpl,
-        "fft" => Workload::Fft,
-        other => {
-            eprintln!("unknown workload '{other}'");
-            return 2;
+    let w = if args.get("scenario").is_some() {
+        match load_scenario(args, Goal::Map, |_| Err("unreachable".into())) {
+            Ok(s) => match s.workload.dse_kind() {
+                Some(w) => {
+                    // the sweep covers the fixed §VI-C design space: only the
+                    // workload family is taken from the scenario
+                    eprintln!(
+                        "dse: sweeping the 80-system §VI-C space for workload '{}' \
+                         (the scenario's system/batch/knobs do not apply here)",
+                        w.name()
+                    );
+                    w
+                }
+                None => {
+                    eprintln!("scenario workload '{}' has no DSE axis", s.workload.describe());
+                    return 2;
+                }
+            },
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    } else {
+        match args.get_or("workload", "llm") {
+            "llm" => Workload::Llm,
+            "dlrm" => Workload::Dlrm,
+            "hpl" => Workload::Hpl,
+            "fft" => Workload::Fft,
+            other => {
+                eprintln!("unknown workload '{other}' (known: llm dlrm hpl fft)");
+                return 2;
+            }
         }
     };
-    println!("{}", figures::dse_figs::dse_figure(w));
+    if args.has_flag("json") {
+        let points = dfmodel::api::sweep(w);
+        println!("{}", dfmodel::api::design_points_json(w, &points).pretty());
+    } else {
+        println!("{}", figures::dse_figs::dse_figure(w));
+    }
     0
+}
+
+fn scenario_serve(args: &Args) -> Result<Scenario, String> {
+    Ok(Scenario::llama(args.get_or("model", "8b"))
+        .serving_split(args.get_usize("tp", 16), args.get_usize("pp", 1))
+        .batch(args.get_f64("batch", 1.0))
+        .prompt_context(args.get_f64("prompt", 1024.0), args.get_f64("context", 1024.0)))
 }
 
 fn cmd_serve(args: &Args) -> i32 {
-    use dfmodel::serving::{evaluate, sn40l_x16, ServingPoint};
-    let tp = args.get_usize("tp", 16);
-    let pp = args.get_usize("pp", 1);
-    let sys = sn40l_x16();
-    let Some(m) = evaluate(
-        &dfmodel::graph::llama::llama3_8b(),
-        &sys,
-        &ServingPoint {
-            tp,
-            pp,
-            batch: args.get_f64("batch", 1.0),
-            prompt_len: args.get_f64("prompt", 1024.0),
-            context: args.get_f64("context", 1024.0),
-        },
-    ) else {
-        eprintln!("infeasible split: tp {tp} x pp {pp} != {} chips", sys.n_chips);
-        return 2;
-    };
-    println!("TTFT: {}", dfmodel::util::units::fmt_time(m.ttft));
-    println!("prefill: {:.0} tok/s", m.prefill_tps);
-    println!("TPOT: {}", dfmodel::util::units::fmt_time(m.tpot));
-    println!("decode: {:.0} tok/s", m.decode_tps);
-    0
-}
-
-/// Parse `--model 8b|70b|405b` (the Llama-3 serving family).
-fn parse_model(args: &Args, default: &str) -> Result<dfmodel::graph::llama::LlamaConfig, String> {
-    match args.get_or("model", default) {
-        "8b" => Ok(dfmodel::graph::llama::llama3_8b()),
-        "70b" => Ok(dfmodel::graph::llama::llama3_70b()),
-        "405b" => Ok(dfmodel::graph::llama::llama3_405b()),
-        other => Err(format!("unknown model '{other}' (known: 8b 70b 405b)")),
+    match load_scenario(args, Goal::Serve, scenario_serve) {
+        Ok(s) => run_scenario(args, &s),
+        Err(e) => {
+            eprintln!("{e}");
+            2
+        }
     }
 }
 
@@ -190,240 +263,136 @@ fn parse_qps(args: &Args, default: f64) -> Result<f64, String> {
     }
 }
 
-/// `dfmodel simulate` — request-level cluster serving simulation on SN40L
-/// replicas of `--tp` × `--pp` chips each.
-fn cmd_simulate(args: &Args) -> i32 {
-    use dfmodel::cluster::engine::{simulate, ReplicaConfig, Slo};
-    use dfmodel::cluster::workload::{Arrivals, LengthDist, TraceSpec};
-    let (model, rate) = match (parse_model(args, "8b"), parse_qps(args, 4.0)) {
-        (Ok(m), Ok(q)) => (m, q),
-        (Err(e), _) | (_, Err(e)) => {
-            eprintln!("{e}");
-            return 2;
-        }
-    };
+fn scenario_simulate(args: &Args) -> Result<Scenario, String> {
+    let rate = parse_qps(args, 4.0)?;
     let tp = args.get_usize("tp", 16);
     let pp = args.get_usize("pp", 1);
-    let mut sys = dfmodel::serving::sn40l_x16();
-    sys.n_chips = tp * pp;
-    let mut cfg = ReplicaConfig::new(model, sys, tp, pp);
-    cfg.max_batch = args.get_usize("max-batch", 32);
-    let replicas = args.get_usize("replicas", 1);
-    let arrivals = match args.get_or("arrivals", "poisson") {
-        "poisson" => Arrivals::Poisson { rate },
-        "bursty" => Arrivals::Bursty {
-            base: rate * 0.25,
-            peak: rate * 1.75,
-            period: args.get_f64("period", 60.0),
-        },
-        other => {
-            eprintln!("unknown arrival process '{other}' (known: poisson bursty)");
-            return 2;
-        }
-    };
-    let spec = TraceSpec {
-        seed: args.get_usize("seed", 17) as u64,
-        n_requests: args.get_usize("requests", 200),
-        arrivals,
-        prompt: LengthDist { mean: args.get_f64("prompt", 1024.0), sigma: 0.4, min: 16, max: 8192 },
-        output: LengthDist { mean: args.get_f64("output", 128.0), sigma: 0.6, min: 2, max: 2048 },
-    };
-    let slo = Slo { ttft: args.get_f64("slo-ttft", 1.0), tpot: args.get_f64("slo-tpot", 0.02) };
-    println!(
-        "simulating {} requests @ {rate} rps on {replicas} replica(s) of {} x{} (TP{tp}xPP{pp})",
-        spec.n_requests, cfg.sys.chip.name, cfg.sys.n_chips
-    );
-    match simulate(&cfg, replicas, &spec.generate(), &slo) {
-        Some(r) => {
-            print!("{}", r.render());
-            0
-        }
-        None => {
-            eprintln!("infeasible configuration (tp*pp != chips, or weights exceed device memory)");
-            1
+    if tp == 0 || pp == 0 {
+        return Err(format!("--tp/--pp must be positive, got tp={tp} pp={pp}"));
+    }
+    let mut s = Scenario::llama(args.get_or("model", "8b"))
+        .on(SystemCfg::sn40l_x16().ring(tp * pp))
+        .serving_split(tp, pp)
+        .simulate_traffic(rate, args.get_usize("requests", 200))
+        .slo(args.get_f64("slo-ttft", 1.0), args.get_f64("slo-tpot", 0.02));
+    s.cluster.replicas = args.get_usize("replicas", 1);
+    s.cluster.max_batch = args.get_usize("max-batch", 32);
+    s.cluster.seed = args.get_usize("seed", 17) as u64;
+    s.cluster.arrivals = args.get_or("arrivals", "poisson").to_string();
+    s.cluster.period = args.get_f64("period", 60.0);
+    s.cluster.prompt_mean = args.get_f64("prompt", 1024.0);
+    s.cluster.output_mean = args.get_f64("output", 128.0);
+    Ok(s)
+}
+
+/// `dfmodel simulate` — request-level cluster serving simulation.
+fn cmd_simulate(args: &Args) -> i32 {
+    match load_scenario(args, Goal::Simulate, scenario_simulate) {
+        Ok(s) => run_scenario(args, &s),
+        Err(e) => {
+            eprintln!("{e}");
+            2
         }
     }
+}
+
+fn scenario_plan(args: &Args) -> Result<Scenario, String> {
+    let qps = parse_qps(args, 2.0)?;
+    let mut s = Scenario::llama(args.get_or("model", "70b"))
+        .plan_for(qps)
+        .slo(args.get_f64("slo-ttft", 2.0), args.get_f64("slo-tpot", 0.05));
+    s.cluster.attainment = args.get_f64("attainment", 0.9);
+    s.cluster.requests = args.get_usize("requests", 300);
+    s.cluster.seed = args.get_usize("seed", 17) as u64;
+    s.cluster.top = args.get_usize("top", 12);
+    Ok(s)
 }
 
 /// `dfmodel plan` — cheapest fleet meeting a QPS + SLO target.
 fn cmd_plan(args: &Args) -> i32 {
-    use dfmodel::cluster::engine::Slo;
-    use dfmodel::cluster::planner::{plan, render, PlanTarget, PlanTraffic};
-    let (model, qps) = match (parse_model(args, "70b"), parse_qps(args, 2.0)) {
-        (Ok(m), Ok(q)) => (m, q),
-        (Err(e), _) | (_, Err(e)) => {
+    match load_scenario(args, Goal::Plan, scenario_plan) {
+        Ok(s) => run_scenario(args, &s),
+        Err(e) => {
             eprintln!("{e}");
-            return 2;
-        }
-    };
-    let target = PlanTarget {
-        qps,
-        slo: Slo { ttft: args.get_f64("slo-ttft", 2.0), tpot: args.get_f64("slo-tpot", 0.05) },
-        attainment: args.get_f64("attainment", 0.9),
-    };
-    let traffic = PlanTraffic {
-        seed: args.get_usize("seed", 17) as u64,
-        n_requests: args.get_usize("requests", 300),
-        ..Default::default()
-    };
-    let res = plan(&model, &target, &traffic);
-    print!("{}", render(&res, args.get_usize("top", 12)));
-    match res.best {
-        Some(i) => {
-            let c = &res.candidates[i];
-            println!(
-                "plan: {} x{} per replica, TP{}xPP{}, {} replica(s) = {} chips, ${:.2}/hr (capex ${:.0})",
-                c.platform,
-                c.group,
-                c.tp,
-                c.pp,
-                c.replicas,
-                c.chips_total,
-                c.usd_per_hour,
-                c.capex_usd
-            );
-            0
-        }
-        None => {
-            eprintln!(
-                "no fleet in the catalog meets {} rps at TTFT<={}s / TPOT<={}s ({}% attainment)",
-                target.qps,
-                target.slo.ttft,
-                target.slo.tpot,
-                target.attainment * 100.0
-            );
-            1
+            2
         }
     }
 }
 
-/// Parse `--topo <family> --chips N --link L` into a topology.
-fn parse_topology(
-    args: &Args,
-) -> Result<(dfmodel::system::Topology, dfmodel::system::LinkTech), String> {
-    use dfmodel::system::{interconnect, topology};
-    let link = match args.get_or("link", "nvlink4") {
-        "nvlink4" => interconnect::nvlink4(),
-        "pcie4" => interconnect::pcie4(),
-        "rdu" => interconnect::rdu_fabric(),
-        other => return Err(format!("unknown link '{other}' (known: nvlink4 pcie4 rdu)")),
-    };
-    let family = args.get_or("topo", "torus2d");
-    let chips = args.get_usize("chips", 16);
-    match topology::by_name(family, chips, &link) {
-        Some(t) => Ok((t, link)),
-        None => Err(format!(
-            "no '{family}' topology at {chips} chips \
-             (families: ring torus2d torus3d dragonfly dgx1 dgx2; \
-             dgx1 needs chips%8==0, dgx2 chips%16==0)"
-        )),
-    }
+fn scenario_fabric(args: &Args) -> Result<Scenario, String> {
+    let system = SystemCfg::new("h100", "hbm3", args.get_or("link", "nvlink4"))
+        .topo(args.get_or("topo", "torus2d"), args.get_usize("chips", 16));
+    let bytes = args.get_f64("bytes", args.get_f64("mb", 64.0) * 1e6);
+    let mut s = Scenario::llm("gpt3-175b")
+        .on(system)
+        .fabric_sweep(args.get_or("coll", "allreduce"), bytes);
+    s.fabric.routing = args.get_or("routing", "dimorder").to_string();
+    s.fabric.seed = args.get_usize("seed", 0) as u64;
+    s.fabric.algo = args.get("algo").map(|a| a.to_string());
+    Ok(s)
 }
 
 /// `dfmodel fabric` — link-level collective simulation: every algorithm
 /// family vs the analytical α-β model on one topology.
 fn cmd_fabric(args: &Args) -> i32 {
-    use dfmodel::collective::{self, Collective};
-    use dfmodel::fabric::{self, Algo, Routing, SimConfig};
-    use dfmodel::util::units::{fmt_bw, fmt_time};
-    let (topo, _link) = match parse_topology(args) {
-        Ok(t) => t,
+    let s = match load_scenario(args, Goal::Fabric, scenario_fabric) {
+        Ok(s) => s,
         Err(e) => {
             eprintln!("{e}");
             return 2;
         }
     };
-    let coll = match args.get_or("coll", "allreduce") {
-        "allreduce" => Collective::AllReduce,
-        "allgather" => Collective::AllGather,
-        "reducescatter" => Collective::ReduceScatter,
-        "alltoall" => Collective::AllToAll,
-        "broadcast" => Collective::Broadcast,
-        "p2p" => Collective::P2P,
-        other => {
-            eprintln!(
-                "unknown collective '{other}' \
-                 (known: allreduce allgather reducescatter alltoall broadcast p2p)"
-            );
-            return 2;
+    let r = match s.evaluate() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
         }
     };
-    let Some(routing) = Routing::parse(args.get_or("routing", "dimorder")) else {
-        eprintln!("unknown routing (known: dimorder adaptive)");
-        return 2;
-    };
-    let bytes = args.get_f64("bytes", args.get_f64("mb", 64.0) * 1e6);
-    let cfg = SimConfig {
-        routing,
-        seed: args.get_usize("seed", 0) as u64,
-        ..Default::default()
-    };
-    let g = fabric::FabricGraph::new(&topo);
-    println!(
-        "fabric : {} | {} chips | {} nodes | {} links | bisection {} | routing {}",
-        topo.name,
-        topo.n_chips(),
-        g.n_nodes(),
-        g.links.len(),
-        fmt_bw(topo.bisection_bytes_per_s()),
-        routing.name()
-    );
-    let dims: Vec<&dfmodel::system::Dim> = topo.dims.iter().collect();
-    let ana = collective::time_hier(coll, bytes, &dims);
-    println!("collective: {coll:?} {:.2} MB/chip | analytical {}", bytes / 1e6, fmt_time(ana));
-    let group: Vec<usize> = (0..topo.n_chips()).collect();
-    let mut evals = fabric::evaluate_algos(&g, &group, coll, bytes, &cfg);
-    if let Some(name) = args.get("algo") {
-        let Some(a) = Algo::parse(name) else {
-            eprintln!("unknown algo '{name}' (known: ring hd direct hier)");
-            return 2;
-        };
-        evals.retain(|e| e.algo == a);
+    let code = print_report(args, &r);
+    if code != 0 {
+        return code;
     }
-    if evals.is_empty() {
-        eprintln!("no feasible algorithm for this (collective, group)");
-        return 1;
-    }
-    println!(
-        "{:<8} {:>12} {:>10} {:>9} {:>8} {:>9}",
-        "algo", "simulated", "vs-ana", "max-link", "msgs", "packets"
-    );
-    for e in &evals {
-        println!(
-            "{:<8} {:>12} {:>9.1}% {:>8.0}% {:>8} {:>9}",
-            e.algo.name(),
-            fmt_time(e.time),
-            (e.time / ana - 1.0) * 100.0,
-            e.max_link_util * 100.0,
-            e.msgs,
-            e.packets
-        );
-    }
-    let best = &evals[0];
-    println!(
-        "best: {} at {} ({:+.1}% vs analytical)",
-        best.algo.name(),
-        fmt_time(best.time),
-        (best.time / ana - 1.0) * 100.0
-    );
     let trace_limit = args.get_usize("trace", 0);
     if trace_limit > 0 {
-        let sched = dfmodel::fabric::build(&g, best.algo, coll, &group, bytes)
-            .expect("best algo was feasible");
-        let tcfg = SimConfig { trace_limit, ..cfg };
-        let r = dfmodel::fabric::simulate(&g, &sched, &tcfg);
-        println!("trace (first {} packet-hops, seed {}):", r.trace.len(), tcfg.seed);
-        for line in &r.trace {
-            println!("  {line}");
+        if let Err(e) = print_trace(&s, &r, trace_limit) {
+            eprintln!("trace: {e}");
+            return 1;
         }
     }
     0
 }
 
+/// Replay the winning algorithm with event tracing enabled (`--trace N`).
+fn print_trace(s: &Scenario, r: &dfmodel::api::Report, limit: usize) -> Result<(), String> {
+    use dfmodel::api::scenario::collective_by_name;
+    use dfmodel::fabric::{self, Algo, Routing, SimConfig};
+    let f = r.fabric.as_ref().ok_or("no fabric section in the report")?;
+    let (topo, _link) = s.system.build_topology().map_err(|e| e.to_string())?;
+    let coll = collective_by_name(&f.collective).map_err(|e| e.to_string())?;
+    let algo = Algo::parse(&f.best).ok_or("unknown best algorithm")?;
+    let routing = Routing::parse(&f.routing).ok_or("unknown routing")?;
+    let g = fabric::FabricGraph::new(&topo);
+    let group: Vec<usize> = (0..topo.n_chips()).collect();
+    let sched = fabric::build(&g, algo, coll, &group, f.bytes)
+        .ok_or("best algorithm no longer feasible")?;
+    let tcfg =
+        SimConfig { routing, seed: s.fabric.seed, trace_limit: limit, ..Default::default() };
+    let res = fabric::simulate(&g, &sched, &tcfg);
+    println!("trace (first {} packet-hops, seed {}):", res.trace.len(), tcfg.seed);
+    for line in &res.trace {
+        println!("  {line}");
+    }
+    Ok(())
+}
+
 /// `dfmodel topo` — chip/link counts and bisection bandwidth of a topology.
 fn cmd_topo(args: &Args) -> i32 {
     use dfmodel::util::units::fmt_bw;
-    let (topo, _link) = match parse_topology(args) {
+    // chip/memory are irrelevant to the topology view; any valid pair works
+    let system = SystemCfg::new("h100", "hbm3", args.get_or("link", "nvlink4"))
+        .topo(args.get_or("topo", "torus2d"), args.get_usize("chips", 16));
+    let (topo, _link) = match system.build_topology() {
         Ok(t) => t,
         Err(e) => {
             eprintln!("{e}");
@@ -447,7 +416,8 @@ fn cmd_topo(args: &Args) -> i32 {
     0
 }
 
-/// `dfmodel run --config exp.json` — declarative experiment launcher.
+/// `dfmodel run --config exp.json` — legacy declarative experiment
+/// launcher (a shim over `--scenario`; see `config::Experiment`).
 fn cmd_run(args: &Args) -> i32 {
     let Some(path) = args.get("config") else {
         eprintln!("run: need --config <file.json>");

@@ -7,7 +7,33 @@ use crate::graph::gpt::{gpt_layer_graph, GptConfig};
 use crate::graph::DataflowGraph;
 use crate::interchip::{self, InterChipOptions};
 use crate::intrachip::{self, IntraChipOptions};
+use crate::sharding;
 use crate::system::SystemSpec;
+
+/// Summary of the mapping decisions behind a [`StepResult`], surfaced by
+/// the `api` facade's `Mapping` type.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MappingSummary {
+    /// (kernel name, chosen sharding scheme name) on the optimized graph
+    /// (the fine layer graph for LLM training, the whole graph otherwise).
+    pub schemes: Vec<(String, String)>,
+    /// Pipeline stages of the inter-chip pass.
+    pub n_stages: usize,
+    /// Fused partitions of the intra-chip pass.
+    pub n_partitions: usize,
+}
+
+/// (kernel name, scheme name) pairs for a chosen sharding.
+fn scheme_names(g: &DataflowGraph, scheme_idx: &[usize], tp: usize) -> Vec<(String, String)> {
+    g.kernels
+        .iter()
+        .enumerate()
+        .map(|(i, k)| {
+            let schemes = sharding::schemes_for(&k.kind, tp);
+            (k.name.clone(), schemes[scheme_idx[i]].name.to_string())
+        })
+        .collect()
+}
 
 /// Result of evaluating one workload on one system design point.
 #[derive(Debug, Clone)]
@@ -26,6 +52,8 @@ pub struct StepResult {
     pub tp: usize,
     pub pp: usize,
     pub dp: usize,
+    /// Sharding/stage/fusion decisions behind the numbers.
+    pub mapping: MappingSummary,
 }
 
 impl StepResult {
@@ -51,7 +79,9 @@ pub fn llm_training(
 }
 
 /// `llm_training` with caller-controlled inter-chip options (e.g. the §VIII-C
-/// study keeps only bf16 weights resident: state factor 2).
+/// study keeps only bf16 weights resident: state factor 2). The caller's
+/// `max_pp`/`max_dp` act as caps on the model-derived bounds (layers /
+/// global batch), so facade knobs tighten rather than vanish.
 pub fn llm_training_opts(
     cfg: &GptConfig,
     sys: &SystemSpec,
@@ -61,8 +91,8 @@ pub fn llm_training_opts(
     let micro_batch = 1.0;
     let coarse = crate::graph::gpt::gpt_coarse_graph(cfg, micro_batch);
     let inter_opts = InterChipOptions {
-        max_pp: cfg.layers,
-        max_dp: global_batch as usize,
+        max_pp: base_opts.max_pp.min(cfg.layers),
+        max_dp: base_opts.max_dp.min(global_batch as usize),
         ..base_opts.clone()
     };
     let inter = interchip::optimize(&coarse, sys, &inter_opts)?;
@@ -173,6 +203,11 @@ fn llm_training_with_mapping(
         tp,
         pp,
         dp,
+        mapping: MappingSummary {
+            schemes: scheme_names(&fine, &fine_schemes, tp),
+            n_stages: inter.stages.len(),
+            n_partitions: intra.assignment.n_used(),
+        },
     })
 }
 
@@ -188,7 +223,18 @@ pub fn workload_pass(
 ) -> Option<StepResult> {
     let inter_opts =
         InterChipOptions { max_dp, state_bytes_per_weight_byte: 2.0, ..Default::default() };
-    let inter = interchip::optimize(g, sys, &inter_opts)?;
+    workload_pass_opts(g, sys, passes, &inter_opts)
+}
+
+/// `workload_pass` with caller-controlled inter-chip options (the facade's
+/// forced-degree / state-bytes knobs for non-GPT workloads).
+pub fn workload_pass_opts(
+    g: &DataflowGraph,
+    sys: &SystemSpec,
+    passes: f64,
+    inter_opts: &InterChipOptions,
+) -> Option<StepResult> {
+    let inter = interchip::optimize(g, sys, inter_opts)?;
     let (tp, pp, dp) = (inter.plan.tp, inter.plan.pp, inter.plan.dp);
 
     let (sharded, net_time) = interchip::shard_graph(g, sys, &inter.plan, &inter.scheme_idx);
@@ -218,6 +264,11 @@ pub fn workload_pass(
         tp,
         pp,
         dp,
+        mapping: MappingSummary {
+            schemes: scheme_names(g, &inter.scheme_idx, tp),
+            n_stages: inter.stages.len(),
+            n_partitions: intra.assignment.n_used(),
+        },
     })
 }
 

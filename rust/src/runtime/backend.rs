@@ -7,8 +7,8 @@
 //! Two implementations ship in-tree:
 //!  * [`interp::InterpBackend`](super::interp::InterpBackend) — pure-Rust
 //!    HLO interpreter, the default; runs offline with zero dependencies;
-//!  * [`pjrt::PjrtBackend`](super::pjrt::PjrtBackend) — wraps the `xla`
-//!    crate's PJRT CPU client, behind `--features pjrt`.
+//!  * `pjrt::PjrtBackend` — wraps the `xla` crate's PJRT CPU client,
+//!    behind `--features pjrt` (feature-gated, so not doc-linked here).
 
 use crate::util::error::Result;
 use std::path::Path;

@@ -6,7 +6,7 @@
 //! Execution is delegated to a pluggable [`Backend`] (the executor
 //! abstraction separating dataflow planning from execution): the default
 //! [`InterpBackend`] is a pure-Rust HLO interpreter that runs offline with
-//! zero dependencies; `--features pjrt` adds [`pjrt::PjrtBackend`] wrapping
+//! zero dependencies; `--features pjrt` adds `pjrt::PjrtBackend` wrapping
 //! the `xla` PJRT client.
 //!
 //! The executor interprets the manifest's pipeline wiring generically:

@@ -9,8 +9,10 @@
 
 pub mod specdecode;
 
+use crate::ensure;
 use crate::graph::llama::LlamaConfig;
 use crate::system::{ChipSpec, LinkTech};
+use crate::util::error::Result;
 
 /// The serving platform: a group of identical accelerators.
 #[derive(Debug, Clone)]
@@ -74,17 +76,22 @@ pub struct ServingMetrics {
 /// Dataflow-chip achievable efficiency on the prefill GEMMs.
 const PREFILL_EFF: f64 = 0.8;
 
-/// Evaluate one (model, platform, TP×PP) serving point. Returns `None`
-/// when the split does not cover the chip group (tp·pp ≠ n_chips), so
-/// sweeps and the cluster planner can skip infeasible points.
+/// Evaluate one (model, platform, TP×PP) serving point. Errors (with the
+/// reason) when the split does not cover the chip group (tp·pp ≠ n_chips),
+/// so sweeps and the cluster planner can skip — and report — infeasible
+/// points.
 pub fn evaluate(
     model: &LlamaConfig,
     sys: &ServingSystem,
     pt: &ServingPoint,
-) -> Option<ServingMetrics> {
-    if pt.tp == 0 || pt.pp == 0 || pt.tp * pt.pp != sys.n_chips {
-        return None;
-    }
+) -> Result<ServingMetrics> {
+    ensure!(
+        pt.tp > 0 && pt.pp > 0 && pt.tp * pt.pp == sys.n_chips,
+        "infeasible serving split: TP{}xPP{} does not cover the {}-chip group",
+        pt.tp,
+        pt.pp,
+        sys.n_chips
+    );
     let tp = pt.tp as f64;
     let pp = pt.pp as f64;
     let layers = model.layers as f64;
@@ -141,7 +148,7 @@ pub fn evaluate(
         let t = (a + b + c).max(1e-30);
         (a / t, b / t, c / t)
     };
-    Some(ServingMetrics {
+    Ok(ServingMetrics {
         ttft,
         prefill_tps,
         tpot,
@@ -183,12 +190,15 @@ mod tests {
     }
 
     #[test]
-    fn mismatched_split_is_none() {
+    fn mismatched_split_is_descriptive_error() {
         let sys = sn40l_x16();
         for (tp, pp) in [(3, 2), (16, 16), (0, 16), (5, 3)] {
+            let e = evaluate(&llama3_8b(), &sys, &ServingPoint { tp, pp, ..base_pt() })
+                .expect_err("tp*pp != 16 must be infeasible");
+            let msg = e.to_string();
             assert!(
-                evaluate(&llama3_8b(), &sys, &ServingPoint { tp, pp, ..base_pt() }).is_none(),
-                "tp={tp} pp={pp} should be infeasible on 16 chips"
+                msg.contains(&format!("TP{tp}xPP{pp}")) && msg.contains("16-chip"),
+                "unhelpful error for tp={tp} pp={pp}: {msg}"
             );
         }
     }

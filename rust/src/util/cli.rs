@@ -70,6 +70,45 @@ impl Args {
     }
 }
 
+/// Levenshtein edit distance (for "did you mean" hints).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for i in 1..=a.len() {
+        cur[0] = i;
+        for j in 1..=b.len() {
+            let cost = usize::from(a[i - 1] != b[j - 1]);
+            cur[j] = (prev[j] + 1).min(cur[j - 1] + 1).min(prev[j - 1] + cost);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// The candidate closest to `input` by edit distance, when close enough to
+/// be a plausible typo. The threshold scales with the input length (a
+/// fixed cutoff would let 1-3 character garbage match everything).
+pub fn suggest<'a>(input: &str, candidates: &[&'a str]) -> Option<&'a str> {
+    let mut best: Option<(usize, &'a str)> = None;
+    for &c in candidates {
+        let d = edit_distance(input, c);
+        let better = match best {
+            None => true,
+            Some((bd, _)) => d < bd,
+        };
+        if better {
+            best = Some((d, c));
+        }
+    }
+    let limit = (input.chars().count() / 3).clamp(1, 3);
+    match best {
+        Some((d, c)) if d <= limit => Some(c),
+        _ => None,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -110,5 +149,23 @@ mod tests {
         let a = Args::parse_from(["s", "--k=v", "--n=3"]);
         assert_eq!(a.get("k"), Some("v"));
         assert_eq!(a.get_usize("n", 0), 3);
+    }
+
+    #[test]
+    fn suggest_finds_near_misses() {
+        let cmds = ["optimize", "simulate", "plan", "fabric", "dse"];
+        assert_eq!(suggest("optimzie", &cmds), Some("optimize"));
+        assert_eq!(suggest("simulat", &cmds), Some("simulate"));
+        assert_eq!(suggest("pla", &cmds), Some("plan"));
+        // way off: no suggestion rather than a misleading one
+        assert_eq!(suggest("quantum-teleport", &cmds), None);
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("abc", "abc"), 0);
+        assert_eq!(edit_distance("abc", "abd"), 1);
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
     }
 }

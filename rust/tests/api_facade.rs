@@ -1,0 +1,51 @@
+//! Facade integration tests: the committed scenario files drive the same
+//! entry point as the CLI, scenarios round-trip through JSON, and the
+//! report JSON exposes the stable keys the CI smoke test checks.
+
+use std::path::Path;
+
+use dfmodel::api::{Goal, Scenario};
+
+fn scenario_dir() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/scenarios")
+}
+
+#[test]
+fn committed_llm_dgx_scenario_reproduces_a_paper_design_point() {
+    let s = Scenario::load(&scenario_dir().join("llm_dgx.json")).expect("load scenario");
+    assert_eq!(s.goal, Goal::Map);
+    let r = s.evaluate().expect("feasible");
+    let (tp, pp, dp) = r.degrees().unwrap();
+    assert_eq!(tp * pp * dp, 1024, "the DGX-scale point spans 1024 chips");
+    let u = r.utilization().unwrap();
+    assert!(u > 0.0 && u <= 1.0, "utilization {u}");
+    // the CI smoke run pipes this through `jq -e '.perf.utilization'`
+    let json = r.to_json();
+    assert!(json.get("perf").unwrap().get("utilization").unwrap().as_f64().is_some());
+    assert!(json.get("mapping").unwrap().get("tp").is_some());
+}
+
+#[test]
+fn committed_serve_scenario_evaluates() {
+    let s = Scenario::load(&scenario_dir().join("serve_sn40l.json")).expect("load scenario");
+    assert_eq!(s.goal, Goal::Serve);
+    let r = s.evaluate().expect("feasible");
+    let v = r.serving.as_ref().expect("serve goal fills serving");
+    assert!(v.decode_tps > 0.0 && v.ttft > 0.0);
+}
+
+#[test]
+fn scenario_files_roundtrip_through_json() {
+    for name in ["llm_dgx.json", "serve_sn40l.json"] {
+        let s = Scenario::load(&scenario_dir().join(name)).unwrap();
+        let re = Scenario::parse(&s.to_json().pretty()).unwrap();
+        assert_eq!(s, re, "{name} must round-trip");
+    }
+}
+
+#[test]
+fn report_renders_human_text() {
+    let r = Scenario::llama("8b").evaluate().unwrap();
+    let text = r.render();
+    assert!(text.contains("TTFT") && text.contains("decode"), "{text}");
+}

@@ -2,12 +2,11 @@
 //! collective model on contention-free dims, determinism, and the
 //! calibrated-model path through the inter-chip optimizer and the DSE.
 
+use dfmodel::api;
 use dfmodel::collective::{self, Collective, CollectiveModel};
-use dfmodel::fabric::{
-    best, build, calibrate_system, evaluate_algos, Algo, CalibrateOpts, FabricGraph, SimConfig,
-};
+use dfmodel::fabric::{best, build, evaluate_algos, Algo, CalibrateOpts, FabricGraph, SimConfig};
 use dfmodel::graph::gpt::{gpt3_175b, gpt_layer_graph};
-use dfmodel::interchip::{self, InterChipOptions};
+use dfmodel::interchip::InterChipOptions;
 use dfmodel::system::interconnect::nvlink4;
 use dfmodel::system::topology::{self, Dim, DimKind};
 use dfmodel::system::{chip, interconnect, memory, SystemSpec};
@@ -124,9 +123,9 @@ fn dgx1_cube_mesh_gap_is_quantified() {
     assert!(gap > 2.0 && gap < 10.0, "cube-mesh/FC gap {gap}");
 }
 
-/// CollectiveModel::Calibrated threads through `interchip::optimize`: the
-/// optimizer runs end-to-end on simulation-calibrated costs and the result
-/// stays in the same regime as the analytical one.
+/// CollectiveModel::Calibrated threads through the facade's inter-chip
+/// pass: the optimizer runs end-to-end on simulation-calibrated costs and
+/// the result stays in the same regime as the analytical one.
 #[test]
 fn calibrated_model_threads_through_interchip_optimize() {
     let link = interconnect::pcie4();
@@ -136,24 +135,26 @@ fn calibrated_model_threads_through_interchip_optimize() {
         link.clone(),
         topology::ring(8, &link),
     );
-    let cal_sys = calibrate_system(&sys, &CalibrateOpts::default());
+    let cal_sys = api::calibrate(&sys, &CalibrateOpts::default());
     match &cal_sys.collective_model {
         CollectiveModel::Calibrated(c) => assert!(!c.is_empty()),
         m => panic!("expected calibrated model, got {m:?}"),
     }
     let g = gpt_layer_graph(&gpt3_175b(), 1.0);
     let opts = InterChipOptions { force_degrees: Some((8, 1, 1)), ..Default::default() };
-    let ana = interchip::optimize(&g, &sys, &opts).expect("analytical mapping");
-    let cal = interchip::optimize(&g, &cal_sys, &opts).expect("calibrated mapping");
+    let ana = api::map_graph(&g, &sys, &opts).expect("analytical mapping");
+    let cal = api::map_graph(&g, &cal_sys, &opts).expect("calibrated mapping");
     assert!(cal.t_cri.is_finite() && cal.t_cri > 0.0);
     let ratio = cal.t_cri / ana.t_cri;
     assert!((0.2..5.0).contains(&ratio), "calibrated/analytical t_cri ratio {ratio}");
 }
 
-/// The calibrated path also reaches the DSE sweep entry point.
+/// The calibrated path also reaches the DSE design-point entry, both via
+/// the typed wrappers and via a calibrated-fabric scenario.
 #[test]
 fn calibrated_dse_point_evaluates() {
-    use dfmodel::dse::{evaluate_point, evaluate_point_calibrated, Workload};
+    use dfmodel::api::{Scenario, SystemCfg};
+    use dfmodel::dse::Workload;
     let link = interconnect::nvlink4();
     let sys = SystemSpec::new(
         chip::h100(),
@@ -161,10 +162,17 @@ fn calibrated_dse_point_evaluates() {
         link.clone(),
         topology::torus2d(32, 32, &link),
     );
-    let ana = evaluate_point(Workload::Llm, &sys).expect("analytical point");
-    let cal = evaluate_point_calibrated(Workload::Llm, &sys, &CalibrateOpts::default())
+    let ana = api::evaluate_design(Workload::Llm, &sys).expect("analytical point");
+    let cal = api::evaluate_design_calibrated(Workload::Llm, &sys, &CalibrateOpts::default())
         .expect("calibrated point");
     assert!(cal.utilization > 0.0 && cal.utilization <= 1.0);
     let ratio = cal.utilization / ana.utilization;
     assert!((0.2..5.0).contains(&ratio), "calibrated/analytical utilization ratio {ratio}");
+    // the scenario path prices with the same calibrated model
+    let scenario = Scenario::llm("gpt3-1t")
+        .batch(2048.0)
+        .on(SystemCfg::new("h100", "hbm3", "nvlink4").torus2d(32, 32))
+        .calibrated_fabric();
+    let report = scenario.evaluate().expect("calibrated scenario");
+    assert_eq!(report.utilization(), Some(cal.utilization));
 }

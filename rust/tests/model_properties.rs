@@ -181,9 +181,11 @@ fn serving_rejects_mismatched_splits() {
     let sys = sn40l_x16();
     for (tp, pp) in [(3, 2), (16, 16), (0, 4), (5, 3)] {
         let pt = ServingPoint { tp, pp, batch: 1.0, prompt_len: 128.0, context: 128.0 };
+        let e = evaluate(&llama3_8b(), &sys, &pt)
+            .expect_err("tp*pp != 16 must be rejected on a 16-chip group");
         assert!(
-            evaluate(&llama3_8b(), &sys, &pt).is_none(),
-            "tp={tp} pp={pp} must be rejected on a 16-chip group"
+            e.to_string().contains("serving split"),
+            "tp={tp} pp={pp}: unhelpful error {e}"
         );
     }
 }

@@ -2,10 +2,11 @@
 //! pipeline composition, invariants under randomized workloads/systems, and
 //! failure injection (infeasible capacities, degenerate topologies).
 
+use dfmodel::api;
 use dfmodel::assign::Assignment;
 use dfmodel::graph::{gpt, GraphBuilder, KernelKind};
 use dfmodel::interchip::{self, InterChipOptions};
-use dfmodel::intrachip::{self, IntraChipOptions};
+use dfmodel::intrachip::IntraChipOptions;
 use dfmodel::system::{chip, interconnect, memory, topology, SystemSpec};
 use dfmodel::util::check::check;
 use dfmodel::util::prng::Rng;
@@ -71,7 +72,7 @@ fn interchip_mapping_invariants_on_random_instances() {
         let n = 3 + rng.below(8);
         let g = random_chain_graph(rng, n);
         let sys = random_system(rng);
-        let Some(m) = interchip::optimize(&g, &sys, &InterChipOptions::default()) else {
+        let Some(m) = api::map_graph(&g, &sys, &InterChipOptions::default()) else {
             return; // infeasible is a legal outcome
         };
         // degrees use all chips
@@ -96,8 +97,7 @@ fn intrachip_mapping_invariants_on_random_instances() {
         let g = random_chain_graph(rng, n);
         let c = if rng.below(2) == 0 { chip::sn10() } else { chip::sn30() };
         let mem = memory::ddr4();
-        let Some(m) = intrachip::optimize_intra(&g, &c, &mem, &IntraChipOptions::default())
-        else {
+        let Some(m) = api::map_chip(&g, &c, &mem, &IntraChipOptions::default()) else {
             return;
         };
         // partitions cover all kernels, precedence-feasible
@@ -111,7 +111,7 @@ fn intrachip_mapping_invariants_on_random_instances() {
             assert!(p.sram_used <= c.sram_bytes * (1.0 + 1e-9), "SRAM violated");
         }
         // fusing never increases DRAM traffic or total time vs kernel-by-kernel
-        let kbk = intrachip::optimize_intra(
+        let kbk = api::map_chip(
             &g,
             &c,
             &mem,
@@ -228,7 +228,7 @@ fn forced_degrees_cover_the_torus_plans() {
         if plan.pp > g.n_kernels() {
             continue;
         }
-        let m = interchip::optimize(
+        let m = api::map_graph(
             &g,
             &sys,
             &InterChipOptions {
@@ -250,9 +250,9 @@ fn hpl_feasible_on_sampled_dse_systems() {
     let mut feasible = 0;
     let mut total = 0;
     for _ in 0..6 {
-        let sys = rng.choice(&systems);
+        let sys = rng.choice(systems);
         total += 1;
-        if dfmodel::dse::evaluate_point(dfmodel::dse::Workload::Hpl, sys).is_some() {
+        if api::evaluate_design(dfmodel::dse::Workload::Hpl, sys).is_some() {
             feasible += 1;
         }
     }
