@@ -1,0 +1,23 @@
+//! Pareto-frontier exploration of the §VI-C design space through the
+//! facade: GPT3-1T training over the paper grid extended with a batch
+//! axis, pruned by the roofline bound.
+//!
+//!     cargo run --release --example explore_frontier
+
+use dfmodel::api::{ExploreOptions, Scenario};
+
+fn main() {
+    let opts = ExploreOptions {
+        batches: vec![None, Some(4096.0)],
+        top: 12,
+        ..Default::default()
+    };
+    let scenario = Scenario::llm("gpt3-1t").batch(2048.0).explore(opts);
+    match scenario.evaluate() {
+        Ok(report) => print!("{}", report.render()),
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -38,5 +38,6 @@ fn main() {
     println!("  -> planner found a fleet: {}", best.is_some());
 
     let _ = dfmodel::util::table::write_result("cluster_sim.txt", &r.summary());
+    let _ = r.write_json("cluster_sim");
     println!("\n{}", r.summary());
 }

@@ -1,0 +1,81 @@
+//! `cargo bench --bench explore`
+//!
+//! Explorer throughput (candidates/s) with and without bound pruning on a
+//! 64-point LLM space, plus the pruned §VI-C paper grid — the headline
+//! entries of the CI bench-regression gate (results/bench_explore.json →
+//! BENCH_5.json vs ci/bench_baseline.json).
+
+use dfmodel::dse::Workload;
+use dfmodel::explore::{explore, ChipCfg, ExploreSettings, MemCfg, SearchSpace, WorkloadSpec};
+use dfmodel::graph::gpt::GptConfig;
+use dfmodel::util::bench::{quick_mode, Runner};
+
+/// A 64-candidate space over a 16-layer GPT: catalog chips plus a ladder of
+/// high-compute low-SRAM kernel-by-kernel parts the pruner can discard.
+fn bench_space() -> SearchSpace {
+    let cfg = GptConfig {
+        layers: 16,
+        d_model: 2048.0,
+        n_heads: 16.0,
+        seq: 1024.0,
+        d_ff: 8192.0,
+        vocab: 50257.0,
+        dtype_bytes: 2.0,
+    };
+    let mut chips = vec![ChipCfg::named("sn30"), ChipCfg::named("h100"), ChipCfg::named("tpuv4")];
+    for i in 0..5usize {
+        chips.push(ChipCfg::Custom {
+            name: format!("kbk-{i}"),
+            compute_tflops: 1000.0 + 700.0 * i as f64,
+            sram_mb: 24.0,
+            dataflow: false,
+            tiles: None,
+            power_w: None,
+            price_usd: None,
+        });
+    }
+    SearchSpace {
+        workload: WorkloadSpec {
+            kind: Workload::Llm,
+            gpt: Some(cfg),
+            batch: Some(64.0),
+            state_bytes_per_weight_byte: None,
+        },
+        chips,
+        mems: vec![MemCfg::named("hbm3"), MemCfg::named("ddr4")],
+        links: vec!["nvlink4".into(), "pcie4".into()],
+        topologies: vec!["torus2d".into(), "ring".into()],
+        chip_counts: vec![16],
+        batches: vec![None],
+    }
+}
+
+fn main() {
+    let mut r = Runner::new();
+    let space = bench_space();
+    let n = space.candidates().expect("bench space is valid").len();
+    let iters = if quick_mode() { 1 } else { 3 };
+
+    for (name, prune) in [("explore_pruned", true), ("explore_exhaustive", false)] {
+        let settings = ExploreSettings { prune, ..Default::default() };
+        r.run_with_items(&format!("{name}({n} candidates, 16 chips)"), 0, iters, n as f64, || {
+            let out = explore(&space, &settings).expect("explore runs");
+            assert!(!out.frontier.is_empty());
+        });
+    }
+
+    // the §VI-C LLM grid through the pruning explorer (paper scale; skipped
+    // in DFMODEL_BENCH_QUICK CI mode)
+    if !quick_mode() {
+        let grid = SearchSpace::paper_grid(Workload::Llm);
+        let settings = ExploreSettings::default();
+        r.run_with_items("explore_paper_grid(GPT3-1T, 80 systems)", 0, 1, 80.0, || {
+            let out = explore(&grid, &settings).expect("explore runs");
+            assert!(!out.frontier.is_empty());
+        });
+    }
+
+    let _ = dfmodel::util::table::write_result("explore.txt", &r.summary());
+    let _ = r.write_json("explore");
+    println!("\n{}", r.summary());
+}

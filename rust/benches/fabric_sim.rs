@@ -64,5 +64,6 @@ fn main() {
     println!("  -> {n} algorithm evaluations");
 
     let _ = dfmodel::util::table::write_result("fabric_sim.txt", &r.summary());
+    let _ = r.write_json("fabric_sim");
     println!("\n{}", r.summary());
 }

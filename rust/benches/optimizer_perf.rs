@@ -11,7 +11,7 @@ use dfmodel::graph::gpt::{gpt3_175b, gpt3_1t, gpt_coarse_graph, gpt_layer_graph}
 use dfmodel::interchip::{self, InterChipOptions};
 use dfmodel::intrachip::IntraChipOptions;
 use dfmodel::system::{chip, interconnect, memory, topology, SystemSpec};
-use dfmodel::util::bench::Runner;
+use dfmodel::util::bench::{quick_mode, Runner};
 
 fn main() {
     let mut r = Runner::new();
@@ -75,10 +75,13 @@ fn main() {
         let _ = scenario.evaluate();
     });
 
-    // ---- the full 80-point LLM DSE sweep (the paper's headline run) ----
-    r.run("dse_sweep(GPT3-1T, 80 systems)", 0, 1, || {
-        let _ = dfmodel::dse::sweep(dfmodel::dse::Workload::Llm);
-    });
+    // ---- the full 80-point LLM DSE sweep (the paper's headline run;
+    // skipped in DFMODEL_BENCH_QUICK CI mode) ----
+    if !quick_mode() {
+        r.run("dse_sweep(GPT3-1T, 80 systems)", 0, 1, || {
+            let _ = dfmodel::dse::sweep(dfmodel::dse::Workload::Llm);
+        });
+    }
 
     // ---- serving + spec-decode models (cheap, but tracked) ----
     r.run("serving_grid(fig20)", 1, 5, || {
@@ -86,5 +89,6 @@ fn main() {
     });
 
     let _ = dfmodel::util::table::write_result("optimizer_perf.txt", &r.summary());
+    let _ = r.write_json("optimizer_perf");
     println!("\n{}", r.summary());
 }

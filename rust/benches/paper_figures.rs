@@ -35,5 +35,6 @@ fn main() {
     combined.push_str("\n===== generation times =====\n");
     combined.push_str(&runner.summary());
     let _ = dfmodel::util::table::write_result("paper_figures.txt", &combined);
+    let _ = runner.write_json("paper_figures");
     println!("\n{}", runner.summary());
 }

@@ -27,12 +27,12 @@ pub mod report;
 pub mod scenario;
 
 pub use report::{
-    ClusterReport, FabricAlgoEval, FabricReport, Mapping, PerfReport, PlanCandidate, PlanReport,
-    Report, ServingReport,
+    ClusterReport, ExplorePoint, ExploreReport, FabricAlgoEval, FabricReport, Mapping, PerfReport,
+    PlanCandidate, PlanReport, Report, ServingReport,
 };
 pub use scenario::{
-    ClusterCfg, CollectiveCfg, FabricCfg, Goal, Knobs, Scenario, ServingCfg, SystemCfg,
-    TopologyCfg, WorkloadCfg,
+    ClusterCfg, CollectiveCfg, ExploreOptions, FabricCfg, Goal, Knobs, Scenario, ServingCfg,
+    SystemCfg, TopologyCfg, WorkloadCfg,
 };
 
 use crate::dse::{DesignPoint, Workload};
@@ -109,9 +109,11 @@ pub fn design_points_json(w: Workload, points: &[DesignPoint]) -> crate::util::j
                     ("topo", Json::from(p.topo.as_str())),
                     ("mem", Json::from(p.mem.as_str())),
                     ("link", Json::from(p.link.as_str())),
+                    ("dataflow", Json::from(p.dataflow)),
                     ("utilization", Json::from(p.utilization)),
                     ("cost_eff", Json::from(p.cost_eff)),
                     ("power_eff", Json::from(p.power_eff)),
+                    ("achieved_flops", Json::from(p.achieved_flops)),
                     (
                         "breakdown",
                         Json::obj(vec![
@@ -139,6 +141,7 @@ impl Scenario {
             Goal::Simulate => self.eval_simulate(),
             Goal::Plan => self.eval_plan(),
             Goal::Fabric => self.eval_fabric(),
+            Goal::Explore => self.eval_explore(),
         }
     }
 
@@ -153,6 +156,7 @@ impl Scenario {
             cluster: None,
             plan: None,
             fabric: None,
+            explore: None,
         }
     }
 
@@ -336,6 +340,27 @@ impl Scenario {
             best: res.best.map(|i| cand(&res.candidates[i])),
             top: res.candidates.iter().take(c.top).map(cand).collect(),
         });
+        Ok(rep)
+    }
+
+    fn eval_explore(&self) -> Result<Report> {
+        if self.explore.top == 0 {
+            bail!("explore top must be >= 1");
+        }
+        let space = self.explore.space(&self.workload, &self.knobs)?;
+        let outcome = crate::explore::explore(&space, &self.explore.settings())?;
+        let mut rep = self.report_base(format!(
+            "{}-candidate search space ({} chips x {} mems x {} links x {} topologies x {} \
+             counts x {} batches)",
+            outcome.candidates,
+            self.explore.chips.len(),
+            self.explore.mems.len(),
+            self.explore.links.len(),
+            self.explore.topologies.len(),
+            self.explore.chip_counts.len(),
+            self.explore.batches.len()
+        ));
+        rep.explore = Some(ExploreReport::from_outcome(&outcome, self.explore.top));
         Ok(rep)
     }
 
@@ -537,6 +562,37 @@ mod tests {
         assert!(f.evals.windows(2).all(|w| w[0].time <= w[1].time));
         assert_eq!(f.best, f.evals[0].algo);
         assert!(f.analytical > 0.0);
+    }
+
+    /// Explore goal runs the explorer and fills the explore section with
+    /// consistent counters and a sorted frontier.
+    #[test]
+    fn explore_scenario_reports_frontier() {
+        use crate::explore::{ChipCfg, MemCfg};
+        let opts = ExploreOptions {
+            chips: vec![ChipCfg::named("sn10"), ChipCfg::named("h100")],
+            mems: vec![MemCfg::named("ddr4"), MemCfg::named("hbm3")],
+            links: vec!["pcie4".into()],
+            topologies: vec!["ring".into()],
+            chip_counts: vec![8],
+            batches: vec![None],
+            prune: false,
+            budget: None,
+            top: 8,
+        };
+        let r = Scenario::llm("gpt3-175b").batch(16.0).explore(opts).evaluate().unwrap();
+        assert_eq!(r.goal, Goal::Explore);
+        let e = r.explore.as_ref().expect("explore section");
+        assert_eq!(e.candidates, 4);
+        assert_eq!(e.candidates, e.evaluated + e.cache_hits + e.pruned + e.skipped_budget);
+        assert!(e.frontier_size >= 1);
+        assert!(!e.frontier.is_empty());
+        // frontier rows sorted by utilization, best first
+        for w in r.frontier().unwrap().windows(2) {
+            assert!(w[0].utilization >= w[1].utilization);
+        }
+        assert_eq!(r.best_utilization(), Some(e.frontier[0].utilization));
+        assert!(r.to_json().get("explore").unwrap().get("frontier").is_some());
     }
 
     /// evaluate_design wrapper mirrors the internal point evaluation.

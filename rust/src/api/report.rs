@@ -301,6 +301,189 @@ impl FabricReport {
     }
 }
 
+/// One design point of an `Explore` scenario's Pareto frontier.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExplorePoint {
+    pub chip: String,
+    pub topo: String,
+    pub mem: String,
+    pub link: String,
+    /// Effective batch override (None = the workload's default).
+    pub batch: Option<f64>,
+    pub dataflow: bool,
+    pub utilization: f64,
+    pub cost_eff: f64,
+    pub power_eff: f64,
+}
+
+impl ExplorePoint {
+    pub fn to_json(&self) -> Json {
+        let mut kv = vec![
+            ("chip", Json::from(self.chip.as_str())),
+            ("topo", Json::from(self.topo.as_str())),
+            ("mem", Json::from(self.mem.as_str())),
+            ("link", Json::from(self.link.as_str())),
+        ];
+        if let Some(b) = self.batch {
+            kv.push(("batch", Json::from(b)));
+        }
+        kv.push(("dataflow", Json::from(self.dataflow)));
+        kv.push(("utilization", Json::from(self.utilization)));
+        kv.push(("cost_eff", Json::from(self.cost_eff)));
+        kv.push(("power_eff", Json::from(self.power_eff)));
+        Json::obj(kv)
+    }
+}
+
+/// Outcome of an `Explore` scenario: coverage counters plus the exact
+/// Pareto frontier over (utilization, cost efficiency, power efficiency).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExploreReport {
+    /// Enumerated candidates of the search space.
+    pub candidates: usize,
+    /// Unique optimizer evaluations performed.
+    pub evaluated: usize,
+    /// Candidates answered by the memoized cache.
+    pub cache_hits: usize,
+    /// Candidates skipped by the dominated-bound rule.
+    pub pruned: usize,
+    /// Candidates skipped by the evaluation budget.
+    pub skipped_budget: usize,
+    /// Visited candidates with no feasible mapping.
+    pub infeasible: usize,
+    /// Feasible points not on the frontier.
+    pub dominated: usize,
+    /// Full frontier size (the `frontier` rows are bounded by `top`).
+    pub frontier_size: usize,
+    /// Utilization-sorted frontier rows.
+    pub frontier: Vec<ExplorePoint>,
+    /// Dataflow / non-dataflow ratios of the per-objective maxima —
+    /// (utilization, cost-eff, power-eff), the §VI-C headline claims.
+    /// Conservative under pruning: pruned candidates contribute their
+    /// upper bounds to the non-dataflow side.
+    pub ratios: Option<(f64, f64, f64)>,
+}
+
+impl ExploreReport {
+    /// Condense an explorer outcome, keeping the top frontier rows.
+    pub fn from_outcome(out: &crate::explore::ExploreOutcome, top: usize) -> ExploreReport {
+        let mut idx = out.frontier.clone();
+        idx.sort_by(|&a, &b| {
+            let (pa, pb) = (&out.points[a], &out.points[b]);
+            pb.utilization
+                .total_cmp(&pa.utilization)
+                .then(pb.cost_eff.total_cmp(&pa.cost_eff))
+                .then(pa.chip.cmp(&pb.chip))
+        });
+        let frontier = idx
+            .iter()
+            .take(top)
+            .map(|&i| {
+                let p = &out.points[i];
+                ExplorePoint {
+                    chip: p.chip.clone(),
+                    topo: p.topo.clone(),
+                    mem: p.mem.clone(),
+                    link: p.link.clone(),
+                    batch: out.point_batches[i],
+                    dataflow: p.dataflow,
+                    utilization: p.utilization,
+                    cost_eff: p.cost_eff,
+                    power_eff: p.power_eff,
+                }
+            })
+            .collect();
+        ExploreReport {
+            candidates: out.candidates,
+            evaluated: out.evaluated,
+            cache_hits: out.cache_hits,
+            pruned: out.pruned,
+            skipped_budget: out.skipped_budget,
+            infeasible: out.infeasible,
+            dominated: out.dominated(),
+            frontier_size: out.frontier.len(),
+            frontier,
+            ratios: out.frontier_ratios().map(|r| (r[0], r[1], r[2])),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut kv = vec![
+            ("candidates", Json::from(self.candidates)),
+            ("evaluated", Json::from(self.evaluated)),
+            ("cache_hits", Json::from(self.cache_hits)),
+            ("pruned", Json::from(self.pruned)),
+            ("skipped_budget", Json::from(self.skipped_budget)),
+            ("infeasible", Json::from(self.infeasible)),
+            ("dominated", Json::from(self.dominated)),
+            ("frontier_size", Json::from(self.frontier_size)),
+            ("frontier", Json::arr(self.frontier.iter().map(ExplorePoint::to_json))),
+        ];
+        if let Some((u, c, p)) = self.ratios {
+            kv.push((
+                "ratios",
+                Json::obj(vec![
+                    ("utilization", Json::from(u)),
+                    ("cost_eff", Json::from(c)),
+                    ("power_eff", Json::from(p)),
+                ]),
+            ));
+        }
+        Json::obj(kv)
+    }
+
+    /// Human rendering — the CLI report section and the `"explore"` figure
+    /// share this single formatter.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "explore  : {} candidates | {} evaluated | {} cache hits | {} pruned | {} \
+             budget-skipped",
+            self.candidates, self.evaluated, self.cache_hits, self.pruned, self.skipped_budget
+        );
+        let _ = writeln!(
+            s,
+            "frontier : {} point(s) | {} dominated | {} infeasible",
+            self.frontier_size, self.dominated, self.infeasible
+        );
+        s.push_str(&self.frontier_table().render());
+        if let Some((u, c, p)) = self.ratios {
+            let _ = writeln!(
+                s,
+                "dataflow vs non-dataflow maxima: {u:.2}x util | {c:.2}x GFLOP/s/$ | {p:.2}x \
+                 GFLOP/s/W (paper: 1.52x / 1.59x / 1.6x)"
+            );
+        }
+        s
+    }
+
+    /// The frontier rows as a table (also the `"explore"` figure's CSV).
+    pub fn frontier_table(&self) -> Table {
+        let mut t = Table::new(
+            "Pareto frontier — utilization | GFLOP/s/$ | GFLOP/s/W",
+            &["chip", "topo", "mem", "link", "batch", "exec", "util", "cost_eff", "power_eff"],
+        );
+        for p in &self.frontier {
+            t.row(&[
+                p.chip.clone(),
+                p.topo.clone(),
+                p.mem.clone(),
+                p.link.clone(),
+                match p.batch {
+                    Some(b) => format!("{b:.0}"),
+                    None => "default".into(),
+                },
+                if p.dataflow { "dataflow".into() } else { "kernel".into() },
+                format!("{:.3}", p.utilization),
+                format!("{:.3}", p.cost_eff),
+                format!("{:.3}", p.power_eff),
+            ]);
+        }
+        t
+    }
+}
+
 /// What a [`Scenario`](crate::api::Scenario) achieved: the chosen
 /// [`Mapping`] plus one section per goal. Sections absent for other goals
 /// are `None`; the accessors below are the stable query surface.
@@ -315,6 +498,7 @@ pub struct Report {
     pub cluster: Option<ClusterReport>,
     pub plan: Option<PlanReport>,
     pub fabric: Option<FabricReport>,
+    pub explore: Option<ExploreReport>,
 }
 
 impl Report {
@@ -336,6 +520,16 @@ impl Report {
     /// The cheapest feasible fleet (`Plan` goal).
     pub fn feasible_plan(&self) -> Option<&PlanCandidate> {
         self.plan.as_ref().and_then(|p| p.best.as_ref())
+    }
+
+    /// The Pareto-frontier rows (`Explore` goal), best utilization first.
+    pub fn frontier(&self) -> Option<&[ExplorePoint]> {
+        self.explore.as_ref().map(|e| e.frontier.as_slice())
+    }
+
+    /// Best frontier utilization (`Explore` goal).
+    pub fn best_utilization(&self) -> Option<f64> {
+        self.explore.as_ref().and_then(|e| e.frontier.first()).map(|p| p.utilization)
     }
 
     pub fn to_json(&self) -> Json {
@@ -361,6 +555,9 @@ impl Report {
         }
         if let Some(f) = &self.fabric {
             kv.push(("fabric", f.to_json()));
+        }
+        if let Some(e) = &self.explore {
+            kv.push(("explore", e.to_json()));
         }
         Json::obj(kv)
     }
@@ -408,8 +605,15 @@ impl Report {
         if let Some(f) = &self.fabric {
             render_fabric(f, &mut s);
         }
+        if let Some(e) = &self.explore {
+            render_explore(e, &mut s);
+        }
         s
     }
+}
+
+fn render_explore(e: &ExploreReport, s: &mut String) {
+    s.push_str(&e.render());
 }
 
 fn render_cluster(c: &ClusterReport, s: &mut String) {

@@ -6,6 +6,7 @@
 //! CLI, the examples, the figures, and the tests.
 
 use crate::collective::Collective;
+use crate::explore::{ChipCfg, MemCfg, SearchSpace, WorkloadSpec};
 use crate::fabric::{Algo, CalibrateOpts, Routing, SimConfig};
 use crate::graph::gpt::{self, GptConfig};
 use crate::graph::llama::{self, LlamaConfig};
@@ -31,6 +32,8 @@ pub enum Goal {
     Plan,
     /// Link-level collective simulation on one topology.
     Fabric,
+    /// Pareto-frontier exploration of a parameterized design space.
+    Explore,
 }
 
 impl Goal {
@@ -41,6 +44,7 @@ impl Goal {
             Goal::Simulate => "simulate",
             Goal::Plan => "plan",
             Goal::Fabric => "fabric",
+            Goal::Explore => "explore",
         }
     }
 
@@ -51,6 +55,7 @@ impl Goal {
             "simulate" => Some(Goal::Simulate),
             "plan" => Some(Goal::Plan),
             "fabric" => Some(Goal::Fabric),
+            "explore" => Some(Goal::Explore),
             _ => None,
         }
     }
@@ -167,6 +172,63 @@ impl WorkloadCfg {
             WorkloadCfg::Llama { model } => llama_by_name(model),
             other => bail!("this goal needs a llama serving workload, got '{}'", other.describe()),
         }
+    }
+
+    /// The explorer's workload spec for this workload (`Explore` goal):
+    /// the DSE axis plus the architecture/batch/state knobs it carries.
+    /// Knobs the explorer cannot thread (calibrated collectives, forced or
+    /// capped degrees) are rejected instead of silently ignored.
+    pub(crate) fn explore_spec(&self, knobs: &Knobs) -> Result<WorkloadSpec> {
+        use crate::dse::Workload;
+        if knobs.collective != CollectiveCfg::Analytical {
+            bail!(
+                "explore always prices collectives analytically; drop the calibrated \
+                 collective model from the scenario"
+            );
+        }
+        if knobs.force_degrees.is_some() || knobs.max_pp.is_some() || knobs.max_dp.is_some() {
+            bail!(
+                "explore optimizes TP/PP/DP per candidate; forced/capped degrees \
+                 (force_*, max_pp, max_dp) are not supported for the explore goal"
+            );
+        }
+        let state = knobs.state_bytes_per_weight_byte;
+        Ok(match self {
+            WorkloadCfg::Gpt { model, batch } => WorkloadSpec {
+                kind: Workload::Llm,
+                gpt: Some(gpt_by_name(model)?),
+                batch: Some(*batch),
+                state_bytes_per_weight_byte: state,
+            },
+            WorkloadCfg::GptCustom { cfg, batch } => WorkloadSpec {
+                kind: Workload::Llm,
+                gpt: Some(*cfg),
+                batch: Some(*batch),
+                state_bytes_per_weight_byte: state,
+            },
+            WorkloadCfg::Dlrm { batch } => WorkloadSpec {
+                kind: Workload::Dlrm,
+                gpt: None,
+                batch: Some(*batch),
+                state_bytes_per_weight_byte: state,
+            },
+            WorkloadCfg::Hpl => WorkloadSpec {
+                kind: Workload::Hpl,
+                gpt: None,
+                batch: None,
+                state_bytes_per_weight_byte: state,
+            },
+            WorkloadCfg::Fft => WorkloadSpec {
+                kind: Workload::Fft,
+                gpt: None,
+                batch: None,
+                state_bytes_per_weight_byte: state,
+            },
+            WorkloadCfg::Moe { .. } | WorkloadCfg::Llama { .. } => bail!(
+                "workload '{}' has no design-space axis; explore needs gpt/dlrm/hpl/fft",
+                self.describe()
+            ),
+        })
     }
 
     /// Name-level validation for the `Map` goal — the cheap twin of
@@ -628,6 +690,77 @@ impl Default for FabricCfg {
     }
 }
 
+/// Search-space axes and driver knobs of the `Explore` goal. The workload
+/// under exploration comes from the scenario's [`WorkloadCfg`]; the axes
+/// here parameterize the *systems* (the default is the §VI-C 80-system
+/// paper grid).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExploreOptions {
+    pub chips: Vec<ChipCfg>,
+    pub mems: Vec<MemCfg>,
+    pub links: Vec<String>,
+    pub topologies: Vec<String>,
+    pub chip_counts: Vec<usize>,
+    /// Per-candidate batch overrides (`None` entries defer to the
+    /// workload's batch).
+    pub batches: Vec<Option<f64>>,
+    /// Skip candidates whose roofline bound is already dominated.
+    pub prune: bool,
+    /// Stop evaluating after visiting this many candidates.
+    pub budget: Option<usize>,
+    /// Frontier rows kept in the report.
+    pub top: usize,
+}
+
+impl Default for ExploreOptions {
+    fn default() -> Self {
+        let s = SearchSpace::paper_grid(crate::dse::Workload::Llm);
+        ExploreOptions {
+            chips: s.chips,
+            mems: s.mems,
+            links: s.links,
+            topologies: s.topologies,
+            chip_counts: s.chip_counts,
+            batches: s.batches,
+            prune: true,
+            budget: None,
+            top: 16,
+        }
+    }
+}
+
+impl ExploreOptions {
+    /// The search space these axes describe for the scenario's workload.
+    pub(crate) fn space(&self, workload: &WorkloadCfg, knobs: &Knobs) -> Result<SearchSpace> {
+        Ok(SearchSpace {
+            workload: workload.explore_spec(knobs)?,
+            chips: self.chips.clone(),
+            mems: self.mems.clone(),
+            links: self.links.clone(),
+            topologies: self.topologies.clone(),
+            chip_counts: self.chip_counts.clone(),
+            batches: self.batches.clone(),
+        })
+    }
+
+    pub(crate) fn settings(&self) -> crate::explore::ExploreSettings {
+        crate::explore::ExploreSettings {
+            prune: self.prune,
+            budget: self.budget,
+            ..Default::default()
+        }
+    }
+
+    /// Axis-level validation without evaluating anything.
+    pub(crate) fn check(&self, workload: &WorkloadCfg, knobs: &Knobs) -> Result<()> {
+        self.space(workload, knobs)?.candidates()?;
+        if self.top == 0 {
+            bail!("explore top must be >= 1");
+        }
+        Ok(())
+    }
+}
+
 /// One declarative experiment: workload + system + knobs + per-goal
 /// options. Build with the constructors below, or parse from JSON; run
 /// with [`Scenario::evaluate`](crate::api::Scenario::evaluate).
@@ -640,6 +773,7 @@ pub struct Scenario {
     pub serving: ServingCfg,
     pub cluster: ClusterCfg,
     pub fabric: FabricCfg,
+    pub explore: ExploreOptions,
 }
 
 impl Scenario {
@@ -652,6 +786,7 @@ impl Scenario {
             serving: ServingCfg::default(),
             cluster: ClusterCfg::default(),
             fabric: FabricCfg::default(),
+            explore: ExploreOptions::default(),
         }
     }
 
@@ -768,6 +903,14 @@ impl Scenario {
         self
     }
 
+    /// Switch to the design-space-exploration goal: Pareto frontier of the
+    /// given system axes for this scenario's workload.
+    pub fn explore(mut self, opts: ExploreOptions) -> Scenario {
+        self.goal = Goal::Explore;
+        self.explore = opts;
+        self
+    }
+
     /// Validate every name and knob without running anything (and without
     /// materializing workload graphs). `parse` calls this;
     /// builder-constructed scenarios get the same errors from `evaluate`.
@@ -797,6 +940,9 @@ impl Scenario {
                     }
                 }
             }
+            Goal::Explore => {
+                self.explore.check(&self.workload, &self.knobs)?;
+            }
         }
         let _ = self.knobs.calibrate_opts()?;
         Ok(())
@@ -812,6 +958,7 @@ impl Scenario {
             ("serving", serving_json(&self.serving)),
             ("cluster", cluster_json(&self.cluster)),
             ("fabric", fabric_json(&self.fabric)),
+            ("explore", explore_json(&self.explore)),
         ])
     }
 
@@ -845,7 +992,8 @@ impl Scenario {
         let serving = parse_serving(j.get("serving").unwrap_or(&Json::Null));
         let cluster = parse_cluster(j.get("cluster").unwrap_or(&Json::Null));
         let fabric = parse_fabric(j.get("fabric").unwrap_or(&Json::Null));
-        let s = Scenario { goal, workload, system, knobs, serving, cluster, fabric };
+        let explore = parse_explore(j.get("explore").unwrap_or(&Json::Null))?;
+        let s = Scenario { goal, workload, system, knobs, serving, cluster, fabric, explore };
         s.check()?;
         Ok(s)
     }
@@ -1032,6 +1180,112 @@ fn fabric_json(f: &FabricCfg) -> Json {
     Json::obj(kv)
 }
 
+fn explore_json(e: &ExploreOptions) -> Json {
+    let mut kv = vec![
+        ("chips", Json::arr(e.chips.iter().map(ChipCfg::to_json))),
+        ("mems", Json::arr(e.mems.iter().map(MemCfg::to_json))),
+        ("links", Json::arr(e.links.iter().map(|l| Json::from(l.as_str())))),
+        ("topologies", Json::arr(e.topologies.iter().map(|t| Json::from(t.as_str())))),
+        ("chip_counts", Json::arr(e.chip_counts.iter().map(|&c| Json::from(c)))),
+        (
+            "batches",
+            Json::arr(e.batches.iter().map(|b| match b {
+                Some(v) => Json::from(*v),
+                None => Json::Null,
+            })),
+        ),
+        ("prune", Json::from(e.prune)),
+        ("top", Json::from(e.top)),
+    ];
+    if let Some(b) = e.budget {
+        kv.push(("budget", Json::from(b)));
+    }
+    Json::obj(kv)
+}
+
+fn parse_explore(j: &Json) -> Result<ExploreOptions> {
+    let d = ExploreOptions::default();
+    if matches!(j, Json::Null) {
+        return Ok(d);
+    }
+    let str_list = |key: &str, dft: Vec<String>| -> Result<Vec<String>> {
+        match j.get(key).and_then(|v| v.as_array()) {
+            Some(a) => a
+                .iter()
+                .map(|s| {
+                    s.as_str()
+                        .map(|s| s.to_string())
+                        .ok_or_else(|| err!("explore {key} entries must be strings, got {s}"))
+                })
+                .collect(),
+            None => Ok(dft),
+        }
+    };
+    let chips = match j.get("chips").and_then(|v| v.as_array()) {
+        Some(a) => a.iter().map(ChipCfg::from_json).collect::<Result<Vec<_>>>()?,
+        None => d.chips,
+    };
+    let mems = match j.get("mems").and_then(|v| v.as_array()) {
+        Some(a) => a.iter().map(MemCfg::from_json).collect::<Result<Vec<_>>>()?,
+        None => d.mems,
+    };
+    let chip_counts = match j.get("chip_counts").and_then(|v| v.as_array()) {
+        Some(a) => a
+            .iter()
+            .map(|c| {
+                c.as_f64()
+                    .filter(|v| v.fract() == 0.0 && *v >= 0.0)
+                    .map(|v| v as usize)
+                    .ok_or_else(|| err!("explore chip_counts entries must be chip counts, got {c}"))
+            })
+            .collect::<Result<Vec<_>>>()?,
+        None => d.chip_counts,
+    };
+    let batches = match j.get("batches").and_then(|v| v.as_array()) {
+        Some(a) => a
+            .iter()
+            .map(|b| match b {
+                Json::Null => Ok(None),
+                Json::Num(v) => Ok(Some(*v)),
+                other => bail!("explore batches entries must be numbers or null, got {other}"),
+            })
+            .collect::<Result<Vec<_>>>()?,
+        None => d.batches,
+    };
+    let prune = match j.get("prune") {
+        None => d.prune,
+        Some(v) => v.as_bool().ok_or_else(|| err!("explore prune must be a boolean, got {v}"))?,
+    };
+    let budget = match j.get("budget") {
+        None => None,
+        Some(v) => Some(
+            v.as_f64()
+                .filter(|b| b.fract() == 0.0 && *b >= 0.0)
+                .map(|b| b as usize)
+                .ok_or_else(|| err!("explore budget must be a candidate count, got {v}"))?,
+        ),
+    };
+    let top = match j.get("top") {
+        None => d.top,
+        Some(v) => v
+            .as_f64()
+            .filter(|t| t.fract() == 0.0 && *t >= 0.0)
+            .map(|t| t as usize)
+            .ok_or_else(|| err!("explore top must be a row count, got {v}"))?,
+    };
+    Ok(ExploreOptions {
+        chips,
+        mems,
+        links: str_list("links", d.links)?,
+        topologies: str_list("topologies", d.topologies)?,
+        chip_counts,
+        batches,
+        prune,
+        budget,
+        top,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1057,6 +1311,12 @@ mod tests {
             Scenario::llama("70b").plan_for(2.0).slo(2.0, 0.05),
             Scenario::llama("8b").simulate_traffic(8.0, 100),
             Scenario::llm("gpt3-175b").on(SystemCfg::default()).fabric_sweep("alltoall", 16e6),
+            Scenario::hpl().explore(ExploreOptions {
+                chip_counts: vec![64, 256],
+                batches: vec![None, Some(128.0)],
+                budget: Some(40),
+                ..Default::default()
+            }),
         ];
         for s in scenarios {
             let text = s.to_json().pretty();
@@ -1088,6 +1348,32 @@ mod tests {
         assert!(Scenario::parse(r#"{"workload": {"kind": "gpt", "model": "gpt5"}}"#).is_err());
         assert!(Scenario::parse(r#"{"goal": "teleport"}"#).is_err());
         assert!(Scenario::parse(r#"{"options": {"force_tp": 8}}"#).is_err());
+        assert!(Scenario::parse(r#"{"goal": "explore", "explore": {"chips": ["z80"]}}"#).is_err());
+        assert!(
+            Scenario::parse(r#"{"goal": "explore", "explore": {"batches": ["4096"]}}"#).is_err(),
+            "a stringly batch must not silently become the default"
+        );
+        assert!(
+            Scenario::parse(r#"{"goal": "explore", "explore": {"chip_counts": [64.5]}}"#)
+                .is_err()
+        );
+        assert!(
+            Scenario::parse(r#"{"goal": "explore", "explore": {"budget": "40"}}"#).is_err(),
+            "a stringly budget must not silently disable the cap"
+        );
+        assert!(
+            Scenario::parse(r#"{"goal": "explore", "options": {"force_tp": 2, "force_pp": 2, "force_dp": 2}}"#)
+                .is_err(),
+            "forced degrees are rejected for the explore goal"
+        );
+        assert!(
+            Scenario::parse(r#"{"goal": "explore", "explore": {"topologies": ["moebius"]}}"#)
+                .is_err()
+        );
+        assert!(
+            Scenario::parse(r#"{"goal": "explore", "workload": {"kind": "llama"}}"#).is_err(),
+            "serving workloads have no explore axis"
+        );
         assert!(Scenario::parse("not json").is_err());
         let e = Scenario::parse(r#"{"collective": {"model": "psychic"}}"#).unwrap_err();
         assert!(e.to_string().contains("psychic"), "{e}");

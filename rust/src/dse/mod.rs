@@ -3,13 +3,18 @@
 //! technologies, evaluated for the four workloads — the data behind the
 //! Figs 10–17 heat maps and latency breakdowns — plus the Fig. 19
 //! SRAM×DRAM-bandwidth sweep and the Fig. 22 3-D-memory sweep.
+//!
+//! The fixed grids here are thin instantiations of the parameterized
+//! explorer (`crate::explore`): each sweep is a committed
+//! `SearchSpace` preset run exhaustively (no pruning), so open-ended
+//! spaces and the paper's tables share one evaluation path.
 
 use std::sync::OnceLock;
 
 use crate::graph::{dlrm, fft, gpt, hpl};
+use crate::interchip::InterChipOptions;
 use crate::pipeline;
-use crate::system::{chip, interconnect, memory, topology, ChipSpec, SystemSpec};
-use crate::util::threadpool::parallel_map;
+use crate::system::{chip, interconnect, memory, topology, ExecutionModel, SystemSpec};
 
 /// The four evaluated workloads.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -46,14 +51,52 @@ pub struct DesignPoint {
     pub topo: String,
     pub mem: String,
     pub link: String,
+    /// True when the chip executes dataflow-fused (the RDU/WSE class).
+    pub dataflow: bool,
     /// Throughput utilization (achieved / peak).
     pub utilization: f64,
     /// Achieved GFLOP/s per dollar.
     pub cost_eff: f64,
     /// Achieved GFLOP/s per watt.
     pub power_eff: f64,
+    /// Absolute achieved FLOP/s of the whole system.
+    pub achieved_flops: f64,
     /// (compute, memory, network) fractional latency breakdown.
     pub breakdown: (f64, f64, f64),
+}
+
+impl DesignPoint {
+    /// The NaN-filled marker for an infeasible system (heat maps show the
+    /// gap; the explorer's frontier skips non-finite points).
+    pub fn infeasible(sys: &SystemSpec) -> DesignPoint {
+        DesignPoint {
+            chip: sys.chip.name.clone(),
+            topo: sys.topology.name.clone(),
+            mem: sys.memory.name.clone(),
+            link: sys.link.name.clone(),
+            dataflow: sys.chip.execution == ExecutionModel::Dataflow,
+            utilization: f64::NAN,
+            cost_eff: f64::NAN,
+            power_eff: f64::NAN,
+            achieved_flops: f64::NAN,
+            breakdown: (f64::NAN, f64::NAN, f64::NAN),
+        }
+    }
+
+    fn from_step(r: &pipeline::StepResult, sys: &SystemSpec) -> DesignPoint {
+        DesignPoint {
+            chip: sys.chip.name.clone(),
+            topo: sys.topology.name.clone(),
+            mem: sys.memory.name.clone(),
+            link: sys.link.name.clone(),
+            dataflow: sys.chip.execution == ExecutionModel::Dataflow,
+            utilization: r.utilization,
+            cost_eff: r.achieved_flops / 1e9 / sys.price_usd(),
+            power_eff: r.achieved_flops / 1e9 / sys.power_w(),
+            achieved_flops: r.achieved_flops,
+            breakdown: r.breakdown_frac(),
+        }
+    }
 }
 
 /// Evaluate one workload on one system; None when infeasible.
@@ -61,31 +104,68 @@ pub struct DesignPoint {
 /// `pub(crate)`: external callers go through `api::evaluate_design` or a
 /// `api::Scenario` (the facade is the only public seam).
 pub(crate) fn evaluate_point(w: Workload, sys: &SystemSpec) -> Option<DesignPoint> {
+    evaluate_point_cfg(w, sys, None, None, None)
+}
+
+/// [`evaluate_point`] with the explorer's knobs: GPT architecture override
+/// (the Fig. 19/22 models), batch override, and training-state factor.
+/// Every `None` keeps the fixed §VI-C behavior bit for bit.
+pub(crate) fn evaluate_point_cfg(
+    w: Workload,
+    sys: &SystemSpec,
+    gpt_cfg: Option<&gpt::GptConfig>,
+    batch: Option<f64>,
+    state_bytes_per_weight_byte: Option<f64>,
+) -> Option<DesignPoint> {
     let r = match w {
-        Workload::Llm => pipeline::llm_training(&gpt::gpt3_1t(), sys, 2048.0)?,
+        Workload::Llm => {
+            let cfg = gpt_cfg.copied().unwrap_or_else(gpt::gpt3_1t);
+            let b = batch.unwrap_or(2048.0);
+            match state_bytes_per_weight_byte {
+                None => pipeline::llm_training(&cfg, sys, b)?,
+                Some(s) => {
+                    let opts = InterChipOptions {
+                        state_bytes_per_weight_byte: s,
+                        ..Default::default()
+                    };
+                    pipeline::llm_training_opts(&cfg, sys, b, &opts)?
+                }
+            }
+        }
         Workload::Dlrm => {
-            let g = dlrm::dlrm_graph(&dlrm::dlrm_793b(), 65_536.0);
-            pipeline::workload_pass(&g, sys, 3.0, 64)?
+            let g = dlrm::dlrm_graph(&dlrm::dlrm_793b(), batch.unwrap_or(65_536.0));
+            graph_pass(&g, sys, 3.0, 64, state_bytes_per_weight_byte)?
         }
         Workload::Hpl => {
             let g = hpl::hpl_graph(&hpl::hpl_5m());
-            pipeline::workload_pass(&g, sys, 1.0, 1)?
+            graph_pass(&g, sys, 1.0, 1, state_bytes_per_weight_byte)?
         }
         Workload::Fft => {
             let g = fft::fft_graph(&fft::fft_1t());
-            pipeline::workload_pass(&g, sys, 1.0, 1)?
+            graph_pass(&g, sys, 1.0, 1, state_bytes_per_weight_byte)?
         }
     };
-    Some(DesignPoint {
-        chip: sys.chip.name.clone(),
-        topo: sys.topology.name.clone(),
-        mem: sys.memory.name.clone(),
-        link: sys.link.name.clone(),
-        utilization: r.utilization,
-        cost_eff: r.achieved_flops / 1e9 / sys.price_usd(),
-        power_eff: r.achieved_flops / 1e9 / sys.power_w(),
-        breakdown: r.breakdown_frac(),
-    })
+    Some(DesignPoint::from_step(&r, sys))
+}
+
+fn graph_pass(
+    g: &crate::graph::DataflowGraph,
+    sys: &SystemSpec,
+    passes: f64,
+    max_dp: usize,
+    state_bytes_per_weight_byte: Option<f64>,
+) -> Option<pipeline::StepResult> {
+    match state_bytes_per_weight_byte {
+        None => pipeline::workload_pass(g, sys, passes, max_dp),
+        Some(s) => {
+            let opts = InterChipOptions {
+                max_dp,
+                state_bytes_per_weight_byte: s,
+                ..Default::default()
+            };
+            pipeline::workload_pass_opts(g, sys, passes, &opts)
+        }
+    }
 }
 
 /// `evaluate_point` with the system's collective costs recalibrated by the
@@ -121,6 +201,8 @@ pub fn mem_link_combos() -> &'static [(memory::MemoryTech, interconnect::LinkTec
 
 /// All 80 system specs of the §VI-C design space (4 chips × 5 topologies ×
 /// 4 mem/link combos) at 1024 accelerators, built once and cached.
+/// `explore::SearchSpace::paper_grid` enumerates the same systems in the
+/// same order (pinned by `tests/explore.rs`).
 pub fn dse_systems_1024() -> &'static [SystemSpec] {
     static SYSTEMS: OnceLock<Vec<SystemSpec>> = OnceLock::new();
     SYSTEMS.get_or_init(|| {
@@ -136,23 +218,19 @@ pub fn dse_systems_1024() -> &'static [SystemSpec] {
     })
 }
 
-/// Run the full sweep for one workload (parallel across design points).
+/// Run the full §VI-C sweep for one workload (parallel across design
+/// points) — the exhaustive explorer over the [`paper grid`] preset.
 /// Infeasible points are reported with NaN utilization so heat maps show
 /// the gap.
+///
+/// [`paper grid`]: crate::explore::SearchSpace::paper_grid
 pub fn sweep(w: Workload) -> Vec<DesignPoint> {
-    let systems = dse_systems_1024();
-    parallel_map(systems, |sys| {
-        evaluate_point(w, sys).unwrap_or(DesignPoint {
-            chip: sys.chip.name.clone(),
-            topo: sys.topology.name.clone(),
-            mem: sys.memory.name.clone(),
-            link: sys.link.name.clone(),
-            utilization: f64::NAN,
-            cost_eff: f64::NAN,
-            power_eff: f64::NAN,
-            breakdown: (f64::NAN, f64::NAN, f64::NAN),
-        })
-    })
+    crate::explore::explore(
+        &crate::explore::SearchSpace::paper_grid(w),
+        &crate::explore::ExploreSettings::exhaustive(),
+    )
+    .expect("the committed paper grid is a valid search space")
+    .points
 }
 
 // ---------------------------------------------------------------------------
@@ -170,28 +248,29 @@ pub struct Fig19Cell {
 
 /// The Fig. 19 experiment: GPT3 175B on 8 accelerators (4×2 torus),
 /// 300 TFLOPS chips; sweep SRAM {150, 300, 500} MB × DRAM bw
-/// {100, 300, 600} GB/s.
+/// {100, 300, 600} GB/s — the exhaustive explorer over
+/// `explore::SearchSpace::fig19_grid`.
 pub fn fig19_sweep() -> Vec<Fig19Cell> {
-    use crate::util::units::{GB, MB, TFLOPS};
-    let cfg = gpt::gpt3_175b();
-    let link = interconnect::pcie4();
+    let out = crate::explore::explore(
+        &crate::explore::SearchSpace::fig19_grid(),
+        &crate::explore::ExploreSettings::exhaustive(),
+    )
+    .expect("the committed fig19 grid is a valid search space");
+    // enumeration order: chips (SRAM-major, dataflow before kernel-by-
+    // kernel) × DRAM bandwidth
+    let srams = [150.0, 300.0, 500.0];
+    let bws = [100.0, 300.0, 600.0];
+    assert_eq!(out.points.len(), srams.len() * 2 * bws.len());
     let mut cells = Vec::new();
-    for &sram in &[150.0, 300.0, 500.0] {
-        for &bw in &[100.0, 300.0, 600.0] {
-            let run = |exec| {
-                let c = chip::custom("sweep", 300.0 * TFLOPS, sram * MB, exec);
-                let mut mem = memory::ddr4();
-                mem.bandwidth = bw * GB;
-                let sys = SystemSpec::new(c, mem, link.clone(), topology::torus2d(4, 2, &link));
-                pipeline::llm_training(&cfg, &sys, 64.0).map(|r| r.utilization)
-            };
-            let df = run(crate::system::ExecutionModel::Dataflow).unwrap_or(f64::NAN);
-            let kbk = run(crate::system::ExecutionModel::KernelByKernel).unwrap_or(f64::NAN);
+    for (si, &sram) in srams.iter().enumerate() {
+        for (bi, &bw) in bws.iter().enumerate() {
+            let df = &out.points[(2 * si) * bws.len() + bi];
+            let kbk = &out.points[(2 * si + 1) * bws.len() + bi];
             cells.push(Fig19Cell {
                 sram_mb: sram,
                 dram_gbs: bw,
-                dataflow_util: df,
-                non_dataflow_util: kbk,
+                dataflow_util: df.utilization,
+                non_dataflow_util: kbk.utilization,
             });
         }
     }
@@ -210,60 +289,31 @@ pub struct Fig22Cell {
     pub achieved: f64,
 }
 
-/// SN40L-like chip with 2080 iso-area units split between compute tiles and
-/// SRAM units (§VIII-C).
-fn unit_chip(compute_pct: f64) -> ChipSpec {
-    use crate::util::units::{MB, TFLOPS};
-    let units = 2080.0;
-    let compute_units = (units * compute_pct).round();
-    let mem_units = units - compute_units;
-    // calibration: 1040 compute units = 640 TFLOPS; 1040 mem units = 520 MB
-    let flops = 640.0 * TFLOPS * compute_units / 1040.0;
-    let sram = 520.0 * MB * mem_units / 1040.0;
-    ChipSpec {
-        name: format!("SN40L-{:.0}%", compute_pct * 100.0),
-        tiles: compute_units.max(1.0) as usize,
-        tflop_per_tile: flops / compute_units.max(1.0),
-        sram_bytes: sram.max(1.0),
-        execution: crate::system::ExecutionModel::Dataflow,
-        power_w: 500.0,
-        price_usd: 28_000.0,
-    }
-}
-
 /// Sweep compute percentage {20..80%} × three memory generations on 1024
-/// chips training the 100T model.
+/// chips training the 100T model (§VIII-C) — the exhaustive explorer over
+/// `explore::SearchSpace::fig22_grid`.
 pub fn fig22_sweep() -> Vec<Fig22Cell> {
-    let cfg = gpt::gpt_100t();
-    let mems =
-        [memory::mem2d_ddr(), memory::mem25d_hbm(), memory::mem3d_stacked()];
-    let link = interconnect::rdu_fabric();
-    let mut out = Vec::new();
-    for mem in &mems {
-        for pct in [0.2, 0.35, 0.5, 0.65, 0.8] {
-            let c = unit_chip(pct);
-            // §VIII-C studies memory *bandwidth*: capacity is provisioned
-            // (SN40L pairs the fast tier with large DDR) and only bf16
-            // weights stay resident (state factor 2).
-            let mut mem = mem.clone();
-            mem.capacity = 1e12;
-            let sys = SystemSpec::new(
-                c,
-                mem.clone(),
-                link.clone(),
-                topology::torus2d(32, 32, &link),
-            );
-            let opts = crate::interchip::InterChipOptions {
-                state_bytes_per_weight_byte: 2.0,
-                ..Default::default()
-            };
-            let achieved = pipeline::llm_training_opts(&cfg, &sys, 4096.0, &opts)
-                .map(|r| r.achieved_flops)
-                .unwrap_or(f64::NAN);
-            out.push(Fig22Cell { mem_name: mem.name.clone(), compute_pct: pct, achieved });
+    let out = crate::explore::explore(
+        &crate::explore::SearchSpace::fig22_grid(),
+        &crate::explore::ExploreSettings::exhaustive(),
+    )
+    .expect("the committed fig22 grid is a valid search space");
+    // enumeration order: chips (compute percentage) × memory generation
+    let pcts = [0.2, 0.35, 0.5, 0.65, 0.8];
+    let n_mems = 3;
+    assert_eq!(out.points.len(), pcts.len() * n_mems);
+    let mut cells = Vec::new();
+    for mi in 0..n_mems {
+        for (pi, &pct) in pcts.iter().enumerate() {
+            let p = &out.points[pi * n_mems + mi];
+            cells.push(Fig22Cell {
+                mem_name: p.mem.clone(),
+                compute_pct: pct,
+                achieved: p.achieved_flops,
+            });
         }
     }
-    out
+    cells
 }
 
 #[cfg(test)]
@@ -290,6 +340,26 @@ mod tests {
         let p = evaluate_point(Workload::Llm, &sys).expect("feasible");
         assert!(p.utilization > 0.0 && p.utilization <= 1.0);
         assert!(p.cost_eff > 0.0 && p.power_eff > 0.0);
+        assert!(p.achieved_flops > 0.0);
+        assert!(!p.dataflow, "H100 is a kernel-by-kernel chip");
+    }
+
+    #[test]
+    fn infeasible_point_is_nan_marked() {
+        let link = interconnect::pcie4();
+        let sys = SystemSpec::new(
+            chip::sn10(),
+            memory::ddr4(),
+            link.clone(),
+            topology::ring(8, &link),
+        );
+        let p = DesignPoint::infeasible(&sys);
+        assert_eq!(p.chip, sys.chip.name);
+        assert!(p.dataflow);
+        assert!(p.utilization.is_nan());
+        assert!(p.cost_eff.is_nan());
+        assert!(p.power_eff.is_nan());
+        assert!(p.achieved_flops.is_nan());
     }
 
     #[test]

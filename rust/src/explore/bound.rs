@@ -1,0 +1,201 @@
+//! Roofline upper bounds for explorer pruning.
+//!
+//! A candidate can be skipped without running the two-level optimizer when
+//! an upper bound on everything it could achieve is already strictly
+//! dominated by an *evaluated* design point: the bound over-estimates every
+//! objective, so the candidate's true point is dominated by the same
+//! evaluated point and can never join the Pareto frontier.
+//!
+//! The bounds are floors of the performance model itself, with slack:
+//!
+//! * **compute ceiling** — the intra-chip pass derates peak by the
+//!   execution-efficiency factor (the shared
+//!   `intrachip::optimizer::EXEC_EFF_*` constants: 0.62 kernel-by-kernel,
+//!   0.90 dataflow) and by per-kind utilization ≤ 1, so achieved/peak can
+//!   never exceed the derate; [`COMPUTE_MARGIN`] covers the small
+//!   useful-vs-modeled FLOP accounting mismatches.
+//! * **memory roof (kernel-by-kernel only)** — every kernel invocation
+//!   reloads its weights and crosses DRAM with its tensors (Fig. 2D), so
+//!   per-chip traffic is at least `(weights + activations) / n_chips` per
+//!   unit of work while per-chip FLOP is `useful / n_chips`: utilization is
+//!   capped by `OI · d_bw / chip_peak`. Dataflow chips can fuse partitions
+//!   and keep weights resident across sequential partitions, so no sound
+//!   memory floor exists for them — their roof is infinite.
+
+use crate::dse::Workload;
+use crate::graph::{dlrm, fft, gpt, hpl, DataflowGraph};
+use crate::intrachip::optimizer::{EXEC_EFF_DATAFLOW, EXEC_EFF_KERNEL_BY_KERNEL};
+use crate::system::{ExecutionModel, SystemSpec};
+
+use super::{SearchSpace, WorkloadSpec};
+
+/// Slack over the execution-efficiency ceiling (per-kind utilization
+/// rounding, pipeline-fill accounting).
+pub const COMPUTE_MARGIN: f64 = 1.15;
+
+/// Slack over the kernel-by-kernel memory roof (sharding unevenness,
+/// activation-byte undercounting on the coarse graph).
+pub const MEM_MARGIN: f64 = 1.5;
+
+/// Workload aggregates behind the pruning bound, computed once per explore
+/// run from the workload's dataflow graph.
+#[derive(Debug, Clone, Copy)]
+pub struct BoundProfile {
+    /// FLOP per unit of work (one sequence for LLM, one pass otherwise).
+    pub useful_flops: f64,
+    /// Resident weight bytes of the whole model.
+    pub weight_bytes: f64,
+    /// Inter-kernel tensor bytes per unit of work.
+    pub activation_bytes: f64,
+}
+
+fn profile_of(g: &DataflowGraph) -> BoundProfile {
+    BoundProfile {
+        useful_flops: g.total_flops(),
+        weight_bytes: g.total_weight_bytes(),
+        activation_bytes: g.total_tensor_bytes(),
+    }
+}
+
+impl BoundProfile {
+    /// Aggregates covering a whole search space. For LLM the batch cancels
+    /// out of the roofline ratios; for DLRM operational intensity *grows*
+    /// with batch (weights amortize over more items), so the profile is
+    /// built at the largest batch on the axis — the bound then
+    /// over-estimates every candidate regardless of its batch override.
+    pub fn for_space(space: &SearchSpace) -> BoundProfile {
+        let mut spec = space.workload;
+        if spec.kind == Workload::Dlrm {
+            let base = spec.batch.unwrap_or(65_536.0);
+            let max = space.batches.iter().flatten().fold(base, |m, &b| m.max(b));
+            spec.batch = Some(max);
+        }
+        BoundProfile::for_workload(&spec)
+    }
+
+    /// Aggregates for one explorer workload (batch overrides cancel out of
+    /// the roofline ratios, so the profile is batch-independent for LLM).
+    pub fn for_workload(spec: &WorkloadSpec) -> BoundProfile {
+        match spec.kind {
+            Workload::Llm => {
+                let cfg = spec.gpt.unwrap_or_else(gpt::gpt3_1t);
+                profile_of(&gpt::gpt_coarse_graph(&cfg, 1.0))
+            }
+            Workload::Dlrm => {
+                profile_of(&dlrm::dlrm_graph(&dlrm::dlrm_793b(), spec.batch.unwrap_or(65_536.0)))
+            }
+            Workload::Hpl => profile_of(&hpl::hpl_graph(&hpl::hpl_5m())),
+            Workload::Fft => profile_of(&fft::fft_graph(&fft::fft_1t())),
+        }
+    }
+
+    /// Upper bound on the utilization any mapping of this workload can
+    /// achieve on `sys` (≤ 1).
+    pub fn utilization_bound(&self, sys: &SystemSpec) -> f64 {
+        let kbk = sys.chip.execution == ExecutionModel::KernelByKernel;
+        let exec_eff = if kbk { EXEC_EFF_KERNEL_BY_KERNEL } else { EXEC_EFF_DATAFLOW };
+        let mem = if kbk {
+            let traffic = self.weight_bytes + self.activation_bytes;
+            if traffic > 0.0 {
+                self.useful_flops / traffic * sys.memory.bandwidth / sys.chip.compute_flops()
+                    * MEM_MARGIN
+            } else {
+                f64::INFINITY
+            }
+        } else {
+            f64::INFINITY
+        };
+        (exec_eff * COMPUTE_MARGIN).min(mem).min(1.0)
+    }
+
+    /// Upper bounds on (utilization, cost efficiency, power efficiency):
+    /// for a fixed system all three scale with achieved FLOP/s, so one
+    /// utilization bound caps the whole objective vector.
+    pub fn objective_bounds(&self, sys: &SystemSpec) -> [f64; 3] {
+        let u = self.utilization_bound(sys);
+        let achieved = u * sys.peak_flops();
+        [u, achieved / 1e9 / sys.price_usd(), achieved / 1e9 / sys.power_w()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::system::{chip, interconnect, memory, topology, ChipSpec, MemoryTech};
+
+    fn spec() -> WorkloadSpec {
+        WorkloadSpec {
+            kind: Workload::Llm,
+            gpt: None,
+            batch: None,
+            state_bytes_per_weight_byte: None,
+        }
+    }
+
+    fn sys(c: ChipSpec, mem: MemoryTech) -> SystemSpec {
+        let link = interconnect::nvlink4();
+        SystemSpec::new(c, mem, link.clone(), topology::torus2d(4, 4, &link))
+    }
+
+    #[test]
+    fn bounds_respect_execution_ceilings() {
+        let p = BoundProfile::for_workload(&spec());
+        let kbk = p.utilization_bound(&sys(chip::h100(), memory::hbm3()));
+        let df = p.utilization_bound(&sys(chip::sn30(), memory::hbm3()));
+        assert!(kbk <= EXEC_EFF_KERNEL_BY_KERNEL * COMPUTE_MARGIN + 1e-12, "kbk bound {kbk}");
+        assert!(df <= 1.0 && df > 0.9, "df bound {df}");
+    }
+
+    #[test]
+    fn kbk_bound_monotone_in_memory_bandwidth() {
+        let p = BoundProfile::for_workload(&spec());
+        let slow = p.utilization_bound(&sys(chip::h100(), memory::ddr4()));
+        let fast = p.utilization_bound(&sys(chip::h100(), memory::hbm3()));
+        assert!(slow <= fast, "slower DRAM cannot raise the bound: {slow} vs {fast}");
+    }
+
+    #[test]
+    fn objective_bounds_scale_with_peak_over_price_and_power() {
+        let p = BoundProfile::for_workload(&spec());
+        let s = sys(chip::h100(), memory::hbm3());
+        let [u, c, w] = p.objective_bounds(&s);
+        assert!((c - u * s.peak_flops() / 1e9 / s.price_usd()).abs() < 1e-9);
+        assert!((w - u * s.peak_flops() / 1e9 / s.power_w()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn space_profile_covers_the_largest_dlrm_batch() {
+        let mut space = SearchSpace::paper_grid(Workload::Dlrm);
+        space.batches = vec![None, Some(1_000_000.0)];
+        let p = BoundProfile::for_space(&space);
+        let big = BoundProfile::for_workload(&WorkloadSpec {
+            kind: Workload::Dlrm,
+            gpt: None,
+            batch: Some(1_000_000.0),
+            state_bytes_per_weight_byte: None,
+        });
+        assert_eq!(p.useful_flops, big.useful_flops);
+        let small = BoundProfile::for_space(&SearchSpace::paper_grid(Workload::Dlrm));
+        let oi = |p: &BoundProfile| p.useful_flops / (p.weight_bytes + p.activation_bytes);
+        assert!(
+            oi(&p) > oi(&small),
+            "operational intensity must grow with batch: {} vs {}",
+            oi(&p),
+            oi(&small)
+        );
+    }
+
+    #[test]
+    fn profiles_exist_for_all_workloads() {
+        for w in Workload::all() {
+            let p = BoundProfile::for_workload(&WorkloadSpec {
+                kind: w,
+                gpt: None,
+                batch: None,
+                state_bytes_per_weight_byte: None,
+            });
+            assert!(p.useful_flops > 0.0, "{w:?}");
+            assert!(p.activation_bytes > 0.0, "{w:?}");
+        }
+    }
+}

@@ -1,0 +1,828 @@
+//! # Parameterized multi-objective design-space exploration
+//!
+//! The §VI-C evaluation sweeps a *fixed* 80-system grid; this module
+//! generalizes it to a declarative [`SearchSpace`] — sets over chip
+//! compute/SRAM/execution, DRAM technology (with bandwidth/capacity
+//! overrides), link technology, topology family, chip count, and
+//! per-workload batch — evaluated in parallel with:
+//!
+//! * **bound-based pruning** — a candidate whose roofline upper bound
+//!   ([`BoundProfile`]) is already strictly dominated by an evaluated
+//!   design point is skipped: the bound over-estimates every objective, so
+//!   the candidate can never reach the Pareto frontier;
+//! * **memoized evaluation** — results are cached on the canonicalized
+//!   `SystemSpec` (plus effective batch), so axes that alias to the same
+//!   system evaluate once;
+//! * **deterministic scheduling** — candidates are processed in fixed
+//!   chunks ordered by descending utilization bound, so counters and the
+//!   frontier are identical for any worker count.
+//!
+//! The output [`ExploreOutcome`] carries every evaluated [`DesignPoint`],
+//! the exact Pareto frontier over (utilization, cost efficiency, power
+//! efficiency), and the dataflow/non-dataflow frontier ratios behind the
+//! paper's 1.52×/1.59×/1.6× headline claims. The fixed `dse::sweep`,
+//! `dse::fig19_sweep`, and `dse::fig22_sweep` grids are thin instantiations
+//! of the presets here ([`SearchSpace::paper_grid`] and friends).
+
+pub mod bound;
+pub mod pareto;
+
+pub use bound::BoundProfile;
+pub use pareto::{dominates, pareto_frontier};
+
+use std::collections::{HashMap, HashSet};
+use std::fmt::Write as _;
+
+use crate::api::scenario::{chip_by_name, link_by_name, memory_by_name};
+use crate::dse::{self, DesignPoint, Workload};
+use crate::graph::gpt::{self, GptConfig};
+use crate::system::{chip, topology, ChipSpec, ExecutionModel, MemoryTech, SystemSpec};
+use crate::util::error::Result;
+use crate::util::json::Json;
+use crate::util::threadpool::{parallel_map, parallel_map_workers};
+use crate::util::units::{GB, MB, TFLOPS};
+use crate::{ensure, err};
+
+/// One chip-axis value: a catalog part by name, or a parameterized
+/// accelerator in the Fig. 19/22 style (compute and SRAM as free variables,
+/// power/price defaulting to the Fig. 9 regressions).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ChipCfg {
+    /// Catalog chip (`h100 a100 tpuv4 sn10 sn30 sn40l wse2`).
+    Named(String),
+    /// Parameterized accelerator.
+    Custom {
+        name: String,
+        compute_tflops: f64,
+        sram_mb: f64,
+        /// Dataflow (fused spatial pipelines) vs kernel-by-kernel.
+        dataflow: bool,
+        /// Compute tiles; defaults to `chip::custom`'s 1024.
+        tiles: Option<usize>,
+        /// Power override (W); defaults to the Fig. 9 regression.
+        power_w: Option<f64>,
+        /// Price override ($); defaults to the Fig. 9-derived estimate.
+        price_usd: Option<f64>,
+    },
+}
+
+impl ChipCfg {
+    pub fn named(name: &str) -> ChipCfg {
+        ChipCfg::Named(name.into())
+    }
+
+    pub fn build(&self) -> Result<ChipSpec> {
+        match self {
+            ChipCfg::Named(n) => chip_by_name(n),
+            ChipCfg::Custom {
+                name,
+                compute_tflops,
+                sram_mb,
+                dataflow,
+                tiles,
+                power_w,
+                price_usd,
+            } => {
+                ensure!(*compute_tflops > 0.0, "chip '{name}': compute_tflops must be positive");
+                ensure!(*sram_mb > 0.0, "chip '{name}': sram_mb must be positive");
+                let tiles = tiles.unwrap_or(1024);
+                ensure!(tiles >= 1, "chip '{name}': tiles must be >= 1");
+                let flops = compute_tflops * TFLOPS;
+                Ok(ChipSpec {
+                    name: name.clone(),
+                    tiles,
+                    tflop_per_tile: flops / tiles as f64,
+                    sram_bytes: sram_mb * MB,
+                    execution: if *dataflow {
+                        ExecutionModel::Dataflow
+                    } else {
+                        ExecutionModel::KernelByKernel
+                    },
+                    power_w: power_w.unwrap_or_else(|| chip::costpower_estimate_w(flops)),
+                    price_usd: price_usd.unwrap_or_else(|| chip::costpower_estimate_usd(flops)),
+                })
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            ChipCfg::Named(n) => Json::from(n.as_str()),
+            ChipCfg::Custom {
+                name,
+                compute_tflops,
+                sram_mb,
+                dataflow,
+                tiles,
+                power_w,
+                price_usd,
+            } => {
+                let mut kv = vec![
+                    ("name", Json::from(name.as_str())),
+                    ("compute_tflops", Json::from(*compute_tflops)),
+                    ("sram_mb", Json::from(*sram_mb)),
+                    ("dataflow", Json::from(*dataflow)),
+                ];
+                if let Some(t) = tiles {
+                    kv.push(("tiles", Json::from(*t)));
+                }
+                if let Some(p) = power_w {
+                    kv.push(("power_w", Json::from(*p)));
+                }
+                if let Some(p) = price_usd {
+                    kv.push(("price_usd", Json::from(*p)));
+                }
+                Json::obj(kv)
+            }
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<ChipCfg> {
+        if let Some(s) = j.as_str() {
+            return Ok(ChipCfg::Named(s.into()));
+        }
+        let name = j.get("name").and_then(|v| v.as_str()).unwrap_or("custom").to_string();
+        let compute_tflops = j
+            .get("compute_tflops")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| err!("custom chip '{name}' needs compute_tflops"))?;
+        let sram_mb = j
+            .get("sram_mb")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| err!("custom chip '{name}' needs sram_mb"))?;
+        Ok(ChipCfg::Custom {
+            name,
+            compute_tflops,
+            sram_mb,
+            dataflow: j.get("dataflow").and_then(|v| v.as_bool()).unwrap_or(true),
+            tiles: j.get("tiles").and_then(|v| v.as_usize()),
+            power_w: j.get("power_w").and_then(|v| v.as_f64()),
+            price_usd: j.get("price_usd").and_then(|v| v.as_f64()),
+        })
+    }
+}
+
+/// One memory-axis value: a catalog technology, optionally with bandwidth
+/// and/or capacity overridden (the Fig. 19/22 sweep style).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemCfg {
+    pub name: String,
+    /// Override per-chip bandwidth (GB/s).
+    pub bandwidth_gbs: Option<f64>,
+    /// Override per-chip capacity (GB).
+    pub capacity_gb: Option<f64>,
+}
+
+impl MemCfg {
+    pub fn named(name: &str) -> MemCfg {
+        MemCfg { name: name.into(), bandwidth_gbs: None, capacity_gb: None }
+    }
+
+    pub fn build(&self) -> Result<MemoryTech> {
+        let mut m = memory_by_name(&self.name)?;
+        if let Some(b) = self.bandwidth_gbs {
+            ensure!(b > 0.0, "memory '{}': bandwidth_gbs must be positive", self.name);
+            m.bandwidth = b * GB;
+        }
+        if let Some(c) = self.capacity_gb {
+            ensure!(c > 0.0, "memory '{}': capacity_gb must be positive", self.name);
+            m.capacity = c * GB;
+        }
+        Ok(m)
+    }
+
+    pub fn to_json(&self) -> Json {
+        if self.bandwidth_gbs.is_none() && self.capacity_gb.is_none() {
+            return Json::from(self.name.as_str());
+        }
+        let mut kv = vec![("name", Json::from(self.name.as_str()))];
+        if let Some(b) = self.bandwidth_gbs {
+            kv.push(("bandwidth_gbs", Json::from(b)));
+        }
+        if let Some(c) = self.capacity_gb {
+            kv.push(("capacity_gb", Json::from(c)));
+        }
+        Json::obj(kv)
+    }
+
+    pub fn from_json(j: &Json) -> Result<MemCfg> {
+        if let Some(s) = j.as_str() {
+            return Ok(MemCfg::named(s));
+        }
+        let name = j
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| err!("memory axis object needs a name"))?;
+        Ok(MemCfg {
+            name: name.into(),
+            bandwidth_gbs: j.get("bandwidth_gbs").and_then(|v| v.as_f64()),
+            capacity_gb: j.get("capacity_gb").and_then(|v| v.as_f64()),
+        })
+    }
+}
+
+/// The workload under exploration: one of the four §VI-C axes, with the GPT
+/// architecture, batch, and training-state factor as free knobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WorkloadSpec {
+    pub kind: Workload,
+    /// GPT architecture override for `Llm` (default: the §VI-C gpt3-1t).
+    pub gpt: Option<GptConfig>,
+    /// Default batch (sequences for LLM, items for DLRM); `None` keeps the
+    /// paper's fixed value (2048 sequences / 65536 items).
+    pub batch: Option<f64>,
+    /// DRAM bytes of training state per byte of bf16 weights. `None`
+    /// keeps each workload's historical default: 8 (weights + grads +
+    /// fp32 moments) for LLM training, 2 (bf16 weights + grads) for the
+    /// fixed graph workloads (DLRM/HPL/FFT).
+    pub state_bytes_per_weight_byte: Option<f64>,
+}
+
+impl WorkloadSpec {
+    /// The paper's fixed workload (default architecture and batch).
+    pub fn paper(kind: Workload) -> WorkloadSpec {
+        WorkloadSpec { kind, gpt: None, batch: None, state_bytes_per_weight_byte: None }
+    }
+}
+
+/// A declarative multi-axis design space: the cartesian product of the
+/// axes, in fixed nesting order batch → chip → memory → link → chip count →
+/// topology family (so [`SearchSpace::paper_grid`] enumerates the §VI-C
+/// systems in their historical order).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchSpace {
+    pub workload: WorkloadSpec,
+    pub chips: Vec<ChipCfg>,
+    pub mems: Vec<MemCfg>,
+    /// Link technologies by name (`pcie4 nvlink4 rdu`).
+    pub links: Vec<String>,
+    /// Topology family names (`topology::by_name`); a (family, count) pair
+    /// the family cannot realize (e.g. dgx1 at a non-multiple of 8) is
+    /// skipped.
+    pub topologies: Vec<String>,
+    pub chip_counts: Vec<usize>,
+    /// Per-candidate batch override axis; `None` defers to the workload.
+    pub batches: Vec<Option<f64>>,
+}
+
+/// One enumerated point of a [`SearchSpace`].
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub batch: Option<f64>,
+    pub sys: SystemSpec,
+}
+
+impl SearchSpace {
+    /// The §VI-C 80-system grid (4 chips × 4 mem/link combos × 5 topologies
+    /// at 1024 chips) for one workload — `dse::sweep`'s space.
+    pub fn paper_grid(w: Workload) -> SearchSpace {
+        SearchSpace {
+            workload: WorkloadSpec::paper(w),
+            chips: ["h100", "tpuv4", "sn30", "wse2"].iter().map(|c| ChipCfg::named(c)).collect(),
+            mems: vec![MemCfg::named("ddr4"), MemCfg::named("hbm3")],
+            links: vec!["pcie4".into(), "nvlink4".into()],
+            topologies: ["torus2d", "torus3d", "dragonfly", "dgx1", "dgx2"]
+                .iter()
+                .map(|t| (*t).to_string())
+                .collect(),
+            chip_counts: vec![1024],
+            batches: vec![None],
+        }
+    }
+
+    /// The Fig. 19 grid: GPT3-175B (batch 64) on 8 chips, 300-TFLOPS
+    /// accelerators with SRAM {150, 300, 500} MB in both execution styles ×
+    /// DDR bandwidth {100, 300, 600} GB/s — `dse::fig19_sweep`'s space.
+    pub fn fig19_grid() -> SearchSpace {
+        let mut chips = Vec::new();
+        for sram in [150.0, 300.0, 500.0] {
+            for dataflow in [true, false] {
+                chips.push(ChipCfg::Custom {
+                    name: format!("sweep-{}-{sram:.0}MB", if dataflow { "df" } else { "kbk" }),
+                    compute_tflops: 300.0,
+                    sram_mb: sram,
+                    dataflow,
+                    tiles: None,
+                    power_w: None,
+                    price_usd: None,
+                });
+            }
+        }
+        SearchSpace {
+            workload: WorkloadSpec {
+                kind: Workload::Llm,
+                gpt: Some(gpt::gpt3_175b()),
+                batch: Some(64.0),
+                state_bytes_per_weight_byte: None,
+            },
+            chips,
+            mems: [100.0, 300.0, 600.0]
+                .iter()
+                .map(|&bw| MemCfg {
+                    name: "ddr4".into(),
+                    bandwidth_gbs: Some(bw),
+                    capacity_gb: None,
+                })
+                .collect(),
+            links: vec!["pcie4".into()],
+            topologies: vec!["torus2d".into()],
+            chip_counts: vec![8],
+            batches: vec![None],
+        }
+    }
+
+    /// The Fig. 22 grid: GPT-100T (batch 4096, bf16-only state) on 1024
+    /// SN40L-like chips whose 2080 iso-area units split between compute and
+    /// SRAM {20..80%}, × three memory generations with provisioned capacity
+    /// — `dse::fig22_sweep`'s space.
+    pub fn fig22_grid() -> SearchSpace {
+        let chips = [0.2, 0.35, 0.5, 0.65, 0.8]
+            .iter()
+            .map(|&pct| {
+                let units = 2080.0;
+                let compute_units = (units * pct).round();
+                let mem_units = units - compute_units;
+                // calibration as §VIII-C: 1040 compute units = 640 TFLOPS;
+                // 1040 mem units = 520 MB
+                ChipCfg::Custom {
+                    name: format!("SN40L-{:.0}%", pct * 100.0),
+                    compute_tflops: 640.0 * compute_units / 1040.0,
+                    sram_mb: (520.0 * MB * mem_units / 1040.0).max(1.0) / MB,
+                    dataflow: true,
+                    tiles: Some(compute_units.max(1.0) as usize),
+                    power_w: Some(500.0),
+                    price_usd: Some(28_000.0),
+                }
+            })
+            .collect();
+        SearchSpace {
+            workload: WorkloadSpec {
+                kind: Workload::Llm,
+                gpt: Some(gpt::gpt_100t()),
+                batch: Some(4096.0),
+                state_bytes_per_weight_byte: Some(2.0),
+            },
+            chips,
+            mems: ["2d-ddr", "2.5d-hbm", "3d-stacked"]
+                .iter()
+                .map(|&m| MemCfg {
+                    name: m.into(),
+                    bandwidth_gbs: None,
+                    capacity_gb: Some(1000.0),
+                })
+                .collect(),
+            links: vec!["rdu".into()],
+            topologies: vec!["torus2d".into()],
+            chip_counts: vec![1024],
+            batches: vec![None],
+        }
+    }
+
+    /// Enumerate every buildable candidate, validating axis values.
+    pub fn candidates(&self) -> Result<Vec<Candidate>> {
+        ensure!(!self.chips.is_empty(), "search space needs at least one chip");
+        ensure!(!self.mems.is_empty(), "search space needs at least one memory technology");
+        ensure!(!self.links.is_empty(), "search space needs at least one link technology");
+        ensure!(!self.topologies.is_empty(), "search space needs at least one topology family");
+        ensure!(!self.chip_counts.is_empty(), "search space needs at least one chip count");
+        ensure!(!self.batches.is_empty(), "search space needs at least one batch entry");
+        for f in &self.topologies {
+            ensure!(
+                topology::FAMILIES.contains(&f.as_str()),
+                "unknown topology family '{f}' (known: {})",
+                topology::FAMILIES.join(" ")
+            );
+        }
+        for &n in &self.chip_counts {
+            ensure!(n >= 1, "chip count must be >= 1");
+        }
+        for b in self.batches.iter().flatten() {
+            ensure!(b.is_finite() && *b > 0.0, "batch override must be positive, got {b}");
+        }
+        let chips: Vec<ChipSpec> = self.chips.iter().map(ChipCfg::build).collect::<Result<_>>()?;
+        let mems: Vec<MemoryTech> = self.mems.iter().map(MemCfg::build).collect::<Result<_>>()?;
+        let links = self
+            .links
+            .iter()
+            .map(|l| link_by_name(l))
+            .collect::<Result<Vec<_>>>()?;
+        let mut out = Vec::new();
+        for &batch in &self.batches {
+            for c in &chips {
+                for mem in &mems {
+                    for link in &links {
+                        for &n in &self.chip_counts {
+                            for family in &self.topologies {
+                                if let Some(topo) = topology::by_name(family, n, link) {
+                                    out.push(Candidate {
+                                        batch,
+                                        sys: SystemSpec::new(
+                                            c.clone(),
+                                            mem.clone(),
+                                            link.clone(),
+                                            topo,
+                                        ),
+                                    });
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        ensure!(!out.is_empty(), "search space produced no buildable candidates");
+        Ok(out)
+    }
+}
+
+/// Driver knobs, orthogonal to the space itself.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExploreSettings {
+    /// Skip candidates whose roofline bound is dominated by an evaluated
+    /// point (never drops a frontier point — see [`bound`]).
+    pub prune: bool,
+    /// Stop evaluating after visiting this many candidates (the rest are
+    /// reported as budget-skipped).
+    pub budget: Option<usize>,
+    /// Candidates per deterministic scheduling chunk.
+    pub chunk: usize,
+    /// Worker override for the parallel map (`None`: DFMODEL_THREADS /
+    /// available parallelism).
+    pub workers: Option<usize>,
+}
+
+impl Default for ExploreSettings {
+    fn default() -> Self {
+        ExploreSettings { prune: true, budget: None, chunk: 16, workers: None }
+    }
+}
+
+impl ExploreSettings {
+    /// Evaluate every candidate (no pruning, no budget) — the sweep-parity
+    /// mode the fixed `dse` grids run under.
+    pub fn exhaustive() -> ExploreSettings {
+        ExploreSettings { prune: false, ..Default::default() }
+    }
+}
+
+/// Everything one explore run produced.
+#[derive(Debug, Clone)]
+pub struct ExploreOutcome {
+    pub workload: Workload,
+    /// Enumerated candidates of the space.
+    pub candidates: usize,
+    /// Unique optimizer evaluations performed.
+    pub evaluated: usize,
+    /// Candidates answered from the memoized cache.
+    pub cache_hits: usize,
+    /// Candidates skipped by the dominated-bound rule.
+    pub pruned: usize,
+    /// Candidates skipped by the evaluation budget.
+    pub skipped_budget: usize,
+    /// Visited candidates with no feasible mapping.
+    pub infeasible: usize,
+    /// Visited candidates in enumeration order (infeasible = NaN point).
+    pub points: Vec<DesignPoint>,
+    /// Effective batch override per point (parallel to `points`; `None`
+    /// for workloads with a fixed problem size).
+    pub point_batches: Vec<Option<f64>>,
+    /// Indices into `points` of the exact Pareto frontier over
+    /// (utilization, cost efficiency, power efficiency).
+    pub frontier: Vec<usize>,
+    /// Per-objective maxima of the *bounds* of pruned candidates, split by
+    /// execution class (`[dataflow, kernel-by-kernel]`) — folded into
+    /// [`ExploreOutcome::frontier_ratios`] so pruning can only understate
+    /// the reported dataflow advantage, never inflate it.
+    pub pruned_bound_maxima: [Option<[f64; 3]>; 2],
+}
+
+impl ExploreOutcome {
+    /// Feasible evaluated points (frontier + dominated).
+    pub fn feasible(&self) -> usize {
+        self.points.iter().filter(|p| p.utilization.is_finite()).count()
+    }
+
+    /// Feasible evaluated points not on the frontier.
+    pub fn dominated(&self) -> usize {
+        self.feasible() - self.frontier.len()
+    }
+
+    pub fn frontier_points(&self) -> Vec<&DesignPoint> {
+        self.frontier.iter().map(|&i| &self.points[i]).collect()
+    }
+
+    /// Dataflow / non-dataflow ratios of the per-objective feasible maxima
+    /// (utilization, cost efficiency, power efficiency) — the §VI-C
+    /// headline comparison. The non-dataflow denominator folds in the
+    /// bounds of pruned candidates (bound ≥ actual), so with pruning the
+    /// ratios are conservative: never larger than the exhaustive run's.
+    /// `None` when either execution class is entirely absent.
+    pub fn frontier_ratios(&self) -> Option<[f64; 3]> {
+        let best = |dataflow: bool| -> Option<[f64; 3]> {
+            let mut m: Option<[f64; 3]> = None;
+            for p in &self.points {
+                if p.dataflow != dataflow || !p.utilization.is_finite() {
+                    continue;
+                }
+                let m = m.get_or_insert([f64::MIN, f64::MIN, f64::MIN]);
+                m[0] = m[0].max(p.utilization);
+                m[1] = m[1].max(p.cost_eff);
+                m[2] = m[2].max(p.power_eff);
+            }
+            m
+        };
+        let d = best(true)?;
+        let mut k = best(false);
+        if let Some(pb) = self.pruned_bound_maxima[1] {
+            k = Some(match k {
+                Some(k) => [k[0].max(pb[0]), k[1].max(pb[1]), k[2].max(pb[2])],
+                None => pb,
+            });
+        }
+        let k = k?;
+        Some([d[0] / k[0], d[1] / k[1], d[2] / k[2]])
+    }
+}
+
+/// The batch a candidate actually trains with — `None` for HPL/FFT, whose
+/// paper problem sizes are fixed (a batch axis then aliases in the cache
+/// instead of forcing duplicate evaluations).
+fn effective_batch(spec: &WorkloadSpec, c: &Candidate) -> Option<f64> {
+    match spec.kind {
+        Workload::Llm | Workload::Dlrm => c.batch.or(spec.batch),
+        Workload::Hpl | Workload::Fft => None,
+    }
+}
+
+/// Evaluate one candidate through the same path as `dse::evaluate_point`.
+pub(crate) fn evaluate_candidate(spec: &WorkloadSpec, c: &Candidate) -> Option<DesignPoint> {
+    dse::evaluate_point_cfg(
+        spec.kind,
+        &c.sys,
+        spec.gpt.as_ref(),
+        effective_batch(spec, c),
+        spec.state_bytes_per_weight_byte,
+    )
+}
+
+/// Canonicalized memoization key: effective batch + every semantic field of
+/// the system spec (floats by bit pattern, so aliasing axes hit exactly).
+fn cache_key(spec: &WorkloadSpec, c: &Candidate) -> String {
+    let s = &c.sys;
+    let mut k = String::new();
+    match effective_batch(spec, c) {
+        Some(b) => {
+            let _ = write!(k, "b{:x};", b.to_bits());
+        }
+        None => k.push_str("bdef;"),
+    }
+    let _ = write!(
+        k,
+        "c:{}:{}:{:x}:{:x}:{:?}:{:x}:{:x};",
+        s.chip.name,
+        s.chip.tiles,
+        s.chip.tflop_per_tile.to_bits(),
+        s.chip.sram_bytes.to_bits(),
+        s.chip.execution,
+        s.chip.power_w.to_bits(),
+        s.chip.price_usd.to_bits()
+    );
+    let _ = write!(
+        k,
+        "m:{}:{:x}:{:x}:{:x}:{:x};",
+        s.memory.name,
+        s.memory.bandwidth.to_bits(),
+        s.memory.capacity.to_bits(),
+        s.memory.price_per_gb.to_bits(),
+        s.memory.power_per_gb.to_bits()
+    );
+    let _ = write!(
+        k,
+        "l:{}:{:x}:{:x}:{:x}:{:x};",
+        s.link.name,
+        s.link.bandwidth.to_bits(),
+        s.link.latency.to_bits(),
+        s.link.price_usd.to_bits(),
+        s.link.power_w.to_bits()
+    );
+    let _ = write!(k, "t:{}", s.topology.name);
+    for d in &s.topology.dims {
+        let _ = write!(
+            k,
+            ":{:?}x{}@{:x}+{:x}/{:?}",
+            d.kind,
+            d.size,
+            d.link_bw.to_bits(),
+            d.latency.to_bits(),
+            d.fabric
+        );
+    }
+    k
+}
+
+/// Run the explorer: enumerate, (optionally) prune, evaluate in parallel,
+/// and extract the exact Pareto frontier. Deterministic for any worker
+/// count: scheduling order and chunk boundaries are functions of the space
+/// alone, and pruning only consults points from previous chunks.
+pub fn explore(space: &SearchSpace, settings: &ExploreSettings) -> Result<ExploreOutcome> {
+    let cands = space.candidates()?;
+    let n = cands.len();
+    let profile = if settings.prune { Some(BoundProfile::for_space(space)) } else { None };
+    let bounds: Vec<[f64; 3]> = match &profile {
+        Some(p) => cands.iter().map(|c| p.objective_bounds(&c.sys)).collect(),
+        None => Vec::new(),
+    };
+    let mut order: Vec<usize> = (0..n).collect();
+    if profile.is_some() {
+        // strongest upper bounds first: the frontier seeds early, so later
+        // chunks prune against real evaluated points
+        order.sort_by(|&a, &b| bounds[b][0].total_cmp(&bounds[a][0]).then(a.cmp(&b)));
+    }
+    // without pruning or a budget there is nothing to decide between
+    // chunks: one maximal chunk keeps the sweep fully parallel
+    let chunk =
+        if settings.prune || settings.budget.is_some() { settings.chunk.max(1) } else { n };
+
+    let mut cache: HashMap<String, Option<DesignPoint>> = HashMap::new();
+    let mut results: Vec<Option<Option<DesignPoint>>> = vec![None; n];
+    let mut archive: Vec<[f64; 3]> = Vec::new();
+    let mut pruned_bound_maxima: [Option<[f64; 3]>; 2] = [None, None];
+    let (mut evaluated, mut cache_hits) = (0usize, 0usize);
+    let (mut pruned, mut skipped_budget) = (0usize, 0usize);
+    let mut visited = 0usize;
+
+    for sched in order.chunks(chunk) {
+        let mut todo: Vec<usize> = Vec::new();
+        for &i in sched {
+            if matches!(settings.budget, Some(b) if visited >= b) {
+                skipped_budget += 1;
+                continue;
+            }
+            if profile.is_some() && archive.iter().any(|f| pareto::dominates(f, &bounds[i])) {
+                pruned += 1;
+                let kbk = cands[i].sys.chip.execution == ExecutionModel::KernelByKernel;
+                let e = pruned_bound_maxima[usize::from(kbk)].get_or_insert([f64::MIN; 3]);
+                for (slot, b) in e.iter_mut().zip(bounds[i]) {
+                    *slot = slot.max(b);
+                }
+                continue;
+            }
+            visited += 1;
+            todo.push(i);
+        }
+        // evaluate each distinct system once, in first-occurrence order
+        let mut seen: HashSet<String> = HashSet::new();
+        let mut fresh: Vec<(String, usize)> = Vec::new();
+        let mut key_of: Vec<(usize, String)> = Vec::with_capacity(todo.len());
+        for &i in &todo {
+            let key = cache_key(&space.workload, &cands[i]);
+            if !cache.contains_key(&key) && seen.insert(key.clone()) {
+                fresh.push((key.clone(), i));
+            }
+            key_of.push((i, key));
+        }
+        let eval = |(_, i): &(String, usize)| evaluate_candidate(&space.workload, &cands[*i]);
+        let outs = match settings.workers {
+            Some(w) => parallel_map_workers(&fresh, w, eval),
+            None => parallel_map(&fresh, eval),
+        };
+        evaluated += fresh.len();
+        cache_hits += todo.len() - fresh.len();
+        for ((key, _), out) in fresh.iter().zip(outs) {
+            cache.insert(key.clone(), out);
+        }
+        for (i, key) in key_of {
+            let r = cache.get(&key).cloned().unwrap_or(None);
+            if let Some(p) = &r {
+                pareto::archive_insert(&mut archive, [p.utilization, p.cost_eff, p.power_eff]);
+            }
+            results[i] = Some(r);
+        }
+    }
+
+    let mut points = Vec::new();
+    let mut point_batches = Vec::new();
+    let mut infeasible = 0usize;
+    for (i, r) in results.into_iter().enumerate() {
+        if let Some(r) = r {
+            match r {
+                Some(p) => points.push(p),
+                None => {
+                    infeasible += 1;
+                    points.push(DesignPoint::infeasible(&cands[i].sys));
+                }
+            }
+            point_batches.push(effective_batch(&space.workload, &cands[i]));
+        }
+    }
+    let objs: Vec<[f64; 3]> =
+        points.iter().map(|p| [p.utilization, p.cost_eff, p.power_eff]).collect();
+    let frontier = pareto::pareto_frontier(&objs);
+    Ok(ExploreOutcome {
+        workload: space.workload.kind,
+        candidates: n,
+        evaluated,
+        cache_hits,
+        pruned,
+        skipped_budget,
+        infeasible,
+        points,
+        point_batches,
+        frontier,
+        pruned_bound_maxima,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chip_cfg_builds_and_roundtrips() {
+        let named = ChipCfg::named("h100");
+        assert_eq!(named.build().unwrap().name, "H100");
+        assert_eq!(ChipCfg::from_json(&named.to_json()).unwrap(), named);
+
+        let custom = ChipCfg::Custom {
+            name: "x".into(),
+            compute_tflops: 300.0,
+            sram_mb: 256.0,
+            dataflow: false,
+            tiles: Some(512),
+            power_w: Some(111.0),
+            price_usd: None,
+        };
+        let c = custom.build().unwrap();
+        assert_eq!(c.tiles, 512);
+        assert_eq!(c.execution, ExecutionModel::KernelByKernel);
+        assert_eq!(c.power_w, 111.0);
+        assert!(c.price_usd > 0.0, "price falls back to the Fig. 9 estimate");
+        assert_eq!(ChipCfg::from_json(&custom.to_json()).unwrap(), custom);
+
+        assert!(ChipCfg::named("z80").build().is_err());
+        assert!(ChipCfg::from_json(&Json::obj(vec![("name", Json::from("y"))])).is_err());
+    }
+
+    #[test]
+    fn mem_cfg_overrides_and_roundtrips() {
+        let m = MemCfg { name: "ddr4".into(), bandwidth_gbs: Some(300.0), capacity_gb: None };
+        let built = m.build().unwrap();
+        assert_eq!(built.name, "DDR4");
+        assert_eq!(built.bandwidth, 300.0 * GB);
+        assert_eq!(MemCfg::from_json(&m.to_json()).unwrap(), m);
+        assert_eq!(MemCfg::from_json(&Json::from("hbm3")).unwrap(), MemCfg::named("hbm3"));
+        assert!(MemCfg::named("sram9000").build().is_err());
+    }
+
+    #[test]
+    fn paper_grid_enumerates_80_candidates_in_order() {
+        let cands = SearchSpace::paper_grid(Workload::Llm).candidates().unwrap();
+        assert_eq!(cands.len(), 80);
+        // chip-major order, five topologies per (mem, link) combo
+        assert_eq!(cands[0].sys.chip.name, "H100");
+        assert_eq!(cands[0].sys.memory.name, "DDR4");
+        assert_eq!(cands[0].sys.link.name, "PCIe4");
+        assert!(cands[0].sys.topology.name.starts_with("2D-torus"));
+        assert_eq!(cands[20].sys.chip.name, "TPUv4");
+        for c in &cands {
+            assert_eq!(c.sys.n_chips(), 1024);
+        }
+    }
+
+    #[test]
+    fn fig_grids_have_expected_shapes() {
+        assert_eq!(SearchSpace::fig19_grid().candidates().unwrap().len(), 18);
+        let f22 = SearchSpace::fig22_grid().candidates().unwrap();
+        assert_eq!(f22.len(), 15);
+        for c in &f22 {
+            assert_eq!(c.sys.memory.capacity, 1000.0 * GB);
+        }
+    }
+
+    #[test]
+    fn invalid_spaces_are_rejected() {
+        let mut s = SearchSpace::paper_grid(Workload::Llm);
+        s.topologies = vec!["moebius".into()];
+        assert!(s.candidates().is_err());
+        let mut s = SearchSpace::paper_grid(Workload::Llm);
+        s.batches = vec![Some(-1.0)];
+        assert!(s.candidates().is_err());
+        let mut s = SearchSpace::paper_grid(Workload::Llm);
+        s.chips.clear();
+        assert!(s.candidates().is_err());
+        // dgx1 cannot realize 10 chips: the combo is skipped, not an error
+        let mut s = SearchSpace::paper_grid(Workload::Llm);
+        s.topologies = vec!["dgx1".into(), "ring".into()];
+        s.chip_counts = vec![10];
+        let c = s.candidates().unwrap();
+        assert!(c.iter().all(|c| c.sys.topology.name.starts_with("ring")));
+    }
+
+    #[test]
+    fn unrealizable_combos_everywhere_is_an_error() {
+        let mut s = SearchSpace::paper_grid(Workload::Llm);
+        s.topologies = vec!["dgx2".into()];
+        s.chip_counts = vec![10];
+        assert!(s.candidates().is_err());
+    }
+}

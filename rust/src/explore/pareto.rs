@@ -1,0 +1,96 @@
+//! Exact Pareto-frontier extraction over the three maximized DSE
+//! objectives — (utilization, cost efficiency, power efficiency) — plus the
+//! nondominated archive the pruning loop maintains.
+
+/// `a` strictly Pareto-dominates `b` (maximization): at least as good on
+/// every objective and strictly better on at least one.
+pub fn dominates(a: &[f64; 3], b: &[f64; 3]) -> bool {
+    a[0] >= b[0]
+        && a[1] >= b[1]
+        && a[2] >= b[2]
+        && (a[0] > b[0] || a[1] > b[1] || a[2] > b[2])
+}
+
+/// Indices of the exact Pareto frontier among `objs`. Non-finite vectors
+/// (infeasible NaN points) never join the frontier. Ties are kept: two
+/// identical vectors are both on the frontier, so the result is a pure
+/// function of the multiset of objective vectors.
+pub fn pareto_frontier(objs: &[[f64; 3]]) -> Vec<usize> {
+    let feasible: Vec<usize> = objs
+        .iter()
+        .enumerate()
+        .filter(|(_, o)| o.iter().all(|v| v.is_finite()))
+        .map(|(i, _)| i)
+        .collect();
+    feasible
+        .iter()
+        .copied()
+        .filter(|&i| !feasible.iter().any(|&j| j != i && dominates(&objs[j], &objs[i])))
+        .collect()
+}
+
+/// Insert `v` into a minimal nondominated archive: dominated or duplicate
+/// entries are dropped, entries `v` dominates are evicted.
+pub(crate) fn archive_insert(archive: &mut Vec<[f64; 3]>, v: [f64; 3]) {
+    if v.iter().any(|x| !x.is_finite()) {
+        return;
+    }
+    if archive.iter().any(|a| dominates(a, &v) || a == &v) {
+        return;
+    }
+    archive.retain(|a| !dominates(&v, a));
+    archive.push(v);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dominance_is_strict() {
+        assert!(dominates(&[1.0, 1.0, 1.0], &[1.0, 1.0, 0.5]));
+        assert!(!dominates(&[1.0, 1.0, 1.0], &[1.0, 1.0, 1.0]), "equal never dominates");
+        assert!(!dominates(&[2.0, 0.5, 1.0], &[1.0, 1.0, 1.0]), "trade-off never dominates");
+    }
+
+    #[test]
+    fn frontier_laws_on_synthetic_points() {
+        let objs = [
+            [1.0, 1.0, 1.0], // frontier
+            [0.5, 0.5, 0.5], // dominated by 0
+            [2.0, 0.1, 0.1], // frontier (best utilization)
+            [1.0, 1.0, 1.0], // duplicate of 0: stays on the frontier
+            [f64::NAN, 1.0, 1.0], // infeasible
+            [0.1, 3.0, 0.2], // frontier (best cost efficiency)
+        ];
+        let f = pareto_frontier(&objs);
+        assert_eq!(f, vec![0, 2, 3, 5]);
+        for &i in &f {
+            for &j in &f {
+                assert!(i == j || !dominates(&objs[i], &objs[j]));
+            }
+        }
+    }
+
+    #[test]
+    fn frontier_of_empty_and_infeasible() {
+        assert!(pareto_frontier(&[]).is_empty());
+        assert!(pareto_frontier(&[[f64::NAN, 0.0, 0.0]]).is_empty());
+    }
+
+    #[test]
+    fn archive_stays_minimal() {
+        let mut a = Vec::new();
+        archive_insert(&mut a, [1.0, 1.0, 1.0]);
+        archive_insert(&mut a, [0.5, 0.5, 0.5]); // dominated: dropped
+        assert_eq!(a.len(), 1);
+        archive_insert(&mut a, [1.0, 1.0, 1.0]); // duplicate: dropped
+        assert_eq!(a.len(), 1);
+        archive_insert(&mut a, [2.0, 2.0, 2.0]); // evicts the first
+        assert_eq!(a, vec![[2.0, 2.0, 2.0]]);
+        archive_insert(&mut a, [0.1, 9.0, 0.1]); // trade-off: kept
+        assert_eq!(a.len(), 2);
+        archive_insert(&mut a, [f64::NAN, 9.0, 9.0]); // non-finite: ignored
+        assert_eq!(a.len(), 2);
+    }
+}

@@ -98,6 +98,20 @@ fn render(w: Workload, points: &[DesignPoint]) -> String {
     out
 }
 
+/// The "explore" figure: the §VI-C LLM grid run through the pruning
+/// explorer — coverage counters, the Pareto frontier over (utilization,
+/// cost efficiency, power efficiency), and the dataflow headline ratios.
+/// Rendering is shared with the `Explore` goal's CLI report
+/// (`ExploreReport::render`); this adds only the CSV artifact.
+pub fn explore_figure() -> crate::util::error::Result<String> {
+    use crate::api::ExploreReport;
+    use crate::explore::{explore, ExploreSettings, SearchSpace};
+    let out = explore(&SearchSpace::paper_grid(Workload::Llm), &ExploreSettings::default())?;
+    let rep = ExploreReport::from_outcome(&out, out.frontier.len());
+    let _ = write_result("explore.csv", &rep.frontier_table().to_csv());
+    Ok(rep.render())
+}
+
 /// Aggregate ratios mirroring the paper's §VI-C bullet lists.
 pub fn key_observations(w: Workload, points: &[DesignPoint]) -> String {
     let finite = |v: f64| v.is_finite();
@@ -183,9 +197,11 @@ mod tests {
                     topo: "2D-torus[32x32]".into(),
                     mem: "HBM3".into(),
                     link: link.into(),
+                    dataflow: chip == "SN30" || chip == "WSE-2",
                     utilization: if chip == "SN30" { 0.5 } else { 0.3 },
                     cost_eff: 1.0,
                     power_eff: 1.0,
+                    achieved_flops: 1e15,
                     breakdown: (0.5, 0.3, 0.2),
                 });
             }

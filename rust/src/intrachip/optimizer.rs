@@ -8,6 +8,17 @@ use crate::graph::DataflowGraph;
 use crate::solver;
 use crate::system::{ChipSpec, ExecutionModel, MemoryTech};
 
+/// Achievable-efficiency derate of kernel-by-kernel execution: launch/sync
+/// overhead and imperfect intra-kernel overlap (Calculon's 0.62 achievable
+/// MFU). Shared with the explorer's pruning bound
+/// (`explore::bound`), which is only sound while it uses the same
+/// ceilings as this optimizer.
+pub const EXEC_EFF_KERNEL_BY_KERNEL: f64 = 0.62;
+
+/// Achievable-efficiency derate of a fused spatial pipeline (~0.9 of the
+/// per-kind-derated peak). See [`EXEC_EFF_KERNEL_BY_KERNEL`].
+pub const EXEC_EFF_DATAFLOW: f64 = 0.90;
+
 #[derive(Debug, Clone)]
 pub struct IntraChipOptions {
     /// Maximum number of sequential partitions (`p_max`); defaults to one
@@ -81,11 +92,7 @@ pub(crate) fn optimize_intra(
     }
 
     let kbk = opts.force_kernel_by_kernel || chip.execution == ExecutionModel::KernelByKernel;
-    // Achievable-efficiency derate: kernel-by-kernel execution pays launch/
-    // sync overhead and imperfect intra-kernel overlap (Calculon's 0.62
-    // achievable MFU); a fused spatial pipeline sustains ~0.9 of the
-    // u_c-derated peak.
-    let exec_eff = if kbk { 0.62 } else { 0.90 };
+    let exec_eff = if kbk { EXEC_EFF_KERNEL_BY_KERNEL } else { EXEC_EFF_DATAFLOW };
 
     let evaluate = |a: usize, b: usize| -> Option<PartitionMetrics> {
         segment_metrics(

@@ -7,11 +7,13 @@
 //!   figure <id>|--all             regenerate paper figures/tables (results/)
 //!   optimize [--chips N ...]      map a GPT workload and print the report
 //!   dse --workload llm|dlrm|hpl|fft   run the 80-config sweep
+//!   explore [--workload W --budget N --no-prune]  Pareto-frontier explorer
 //!   serve [--tp N --pp N ...]     serving model (Fig. 20 style point)
 //!   simulate [--qps R ...]        request-level cluster serving simulation
 //!   plan --qps R --slo-ttft S --slo-tpot S   SLO-aware capacity planner
 //!   fabric [--topo F --chips N --coll C ...]  link-level collective simulation
 //!   topo [--topo F --chips N]     topology facts (links, bisection bandwidth)
+//!   bench-check [--current F --baseline F]  CI bench-regression gate
 //!   run --config exp.json         legacy declarative experiment launcher
 //!   run-pipeline <name>           execute an AOT pipeline via the runtime
 //!   verify                        verify every pipeline against the oracle
@@ -26,11 +28,13 @@ const SUBCOMMANDS: &[&str] = &[
     "figure",
     "optimize",
     "dse",
+    "explore",
     "serve",
     "simulate",
     "plan",
     "fabric",
     "topo",
+    "bench-check",
     "run",
     "run-pipeline",
     "verify",
@@ -41,7 +45,7 @@ fn usage() {
     eprintln!(
         "usage: dfmodel <{}> [options]\n\
          figures: {}\n\
-         scenario subcommands (optimize dse serve simulate plan fabric) accept\n\
+         scenario subcommands (optimize dse explore serve simulate plan fabric) accept\n\
          --scenario <file.json> and --json",
         SUBCOMMANDS.join("|"),
         figures::ALL.join(" ")
@@ -62,11 +66,13 @@ fn main() {
         Some("figure") => cmd_figure(&args),
         Some("optimize") => cmd_optimize(&args),
         Some("dse") => cmd_dse(&args),
+        Some("explore") => cmd_explore(&args),
         Some("serve") => cmd_serve(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("plan") => cmd_plan(&args),
         Some("fabric") => cmd_fabric(&args),
         Some("topo") => cmd_topo(&args),
+        Some("bench-check") => cmd_bench_check(&args),
         Some("run") => cmd_run(&args),
         Some("run-pipeline") => cmd_run_pipeline(&args),
         Some("verify") => cmd_verify(&args),
@@ -234,6 +240,49 @@ fn cmd_dse(args: &Args) -> i32 {
         println!("{}", figures::dse_figs::dse_figure(w));
     }
     0
+}
+
+fn scenario_explore(args: &Args) -> Result<Scenario, String> {
+    let s = match args.get_or("workload", "llm") {
+        "llm" => Scenario::llm("gpt3-1t").batch(2048.0),
+        "dlrm" => Scenario::dlrm(),
+        "hpl" => Scenario::hpl(),
+        "fft" => Scenario::fft(),
+        other => return Err(format!("unknown workload '{other}' (known: llm dlrm hpl fft)")),
+    };
+    // default axes are the §VI-C paper grid; knobs below tune the driver
+    let opts = dfmodel::api::ExploreOptions {
+        top: args.get_usize("top", 16),
+        ..Default::default()
+    };
+    Ok(s.explore(opts))
+}
+
+/// `dfmodel explore` — Pareto-frontier design-space exploration with
+/// bound-based pruning (`--no-prune` and `--budget N` override the
+/// scenario's driver knobs).
+fn cmd_explore(args: &Args) -> i32 {
+    match load_scenario(args, Goal::Explore, scenario_explore) {
+        Ok(mut s) => {
+            if let Some(b) = args.get("budget") {
+                match b.parse::<usize>() {
+                    Ok(v) => s.explore.budget = Some(v),
+                    Err(_) => {
+                        eprintln!("--budget must be a candidate count, got '{b}'");
+                        return 2;
+                    }
+                }
+            }
+            if args.has_flag("no-prune") {
+                s.explore.prune = false;
+            }
+            run_scenario(args, &s)
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            2
+        }
+    }
 }
 
 fn scenario_serve(args: &Args) -> Result<Scenario, String> {
@@ -414,6 +463,47 @@ fn cmd_topo(args: &Args) -> i32 {
     println!("links      : {:.0}", topo.total_links());
     println!("bisection  : {} one-way", fmt_bw(topo.bisection_bytes_per_s()));
     0
+}
+
+/// `dfmodel bench-check` — the CI bench-regression gate: compare a merged
+/// bench JSON (BENCH_5.json) against the committed baseline and fail on
+/// >tolerance p50/throughput moves. Benches absent from the baseline are
+/// skipped (bootstrap: copy a CI BENCH artifact into the baseline to arm
+/// the gate).
+fn cmd_bench_check(args: &Args) -> i32 {
+    use dfmodel::util::bench::compare_to_baseline;
+    use dfmodel::util::json::Json;
+    let cur_path = args.get_or("current", "BENCH_5.json");
+    let base_path = args.get_or("baseline", "ci/bench_baseline.json");
+    let tolerance = args.get_f64("tolerance", 0.3);
+    let load = |path: &str| -> Result<Json, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        Json::parse(&text).map_err(|e| format!("{path}: {e}"))
+    };
+    let (current, baseline) = match (load(cur_path), load(base_path)) {
+        (Ok(c), Ok(b)) => (c, b),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let cmp = compare_to_baseline(&current, &baseline, tolerance);
+    println!(
+        "bench-check: {} entr{} compared against {base_path} (tolerance {:.0}%)",
+        cmp.compared,
+        if cmp.compared == 1 { "y" } else { "ies" },
+        tolerance * 100.0
+    );
+    if cmp.compared == 0 {
+        println!("  no baseline entries yet — copy a CI BENCH artifact into {base_path} to arm");
+    }
+    for r in &cmp.regressions {
+        println!(
+            "  REGRESSION {}::{} {}: baseline {:.0} -> current {:.0} ({:.2}x)",
+            r.bench, r.name, r.metric, r.baseline, r.current, r.ratio
+        );
+    }
+    i32::from(!cmp.regressions.is_empty())
 }
 
 /// `dfmodel run --config exp.json` — legacy declarative experiment

@@ -216,6 +216,9 @@ pub fn ring(n: usize, link: &LinkTech) -> Topology {
     Topology::new(&format!("ring[{n}]"), vec![Dim::new(DimKind::Ring, n, link)])
 }
 
+/// The topology family names [`by_name`] understands.
+pub const FAMILIES: &[&str] = &["ring", "torus2d", "torus3d", "dragonfly", "dgx1", "dgx2"];
+
 /// Build a topology family by name at a total chip count, using balanced
 /// factorizations (`torus2d 16` → 4×4, `torus3d 16` → 4×2×2). `None` when
 /// the family name is unknown or the count does not fit it (DGX-1 needs a

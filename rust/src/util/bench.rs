@@ -3,8 +3,21 @@
 //! Measures wall-clock of closures with warmup, reports min/mean/p50, and is
 //! the engine behind `cargo bench` (the `[[bench]]` targets set
 //! `harness = false` and call into this module).
+//!
+//! CI integration: `DFMODEL_BENCH_QUICK=1` scales every measurement down to
+//! a smoke-sized run ([`quick_mode`]), and [`Runner::write_json`] emits the
+//! machine-readable per-bench results the bench-regression gate merges into
+//! `BENCH_*.json` and checks with [`compare_to_baseline`]
+//! (`dfmodel bench-check`).
 
 use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+/// True when the quick CI mode is requested (`DFMODEL_BENCH_QUICK=1`).
+pub fn quick_mode() -> bool {
+    matches!(std::env::var("DFMODEL_BENCH_QUICK").ok().as_deref(), Some("1") | Some("true"))
+}
 
 #[derive(Debug, Clone)]
 pub struct BenchResult {
@@ -13,20 +26,55 @@ pub struct BenchResult {
     pub min: Duration,
     pub mean: Duration,
     pub p50: Duration,
+    /// Optional items/s derived from the min sample (`with_throughput`).
+    pub throughput: Option<f64>,
 }
 
 impl BenchResult {
     pub fn line(&self) -> String {
-        format!(
+        let mut s = format!(
             "{:<48} iters={:<4} min={:>12?} mean={:>12?} p50={:>12?}",
             self.name, self.iters, self.min, self.mean, self.p50
-        )
+        );
+        if let Some(t) = self.throughput {
+            s.push_str(&format!(" thr={t:.1}/s"));
+        }
+        s
+    }
+
+    /// Attach an items-per-iteration throughput derived from the min
+    /// sample (the noise-robust statistic the regression gate compares).
+    pub fn with_throughput(mut self, items_per_iter: f64) -> BenchResult {
+        let secs = self.min.as_secs_f64();
+        if secs > 0.0 {
+            self.throughput = Some(items_per_iter / secs);
+        }
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut kv = vec![
+            ("name", Json::from(self.name.as_str())),
+            ("iters", Json::from(self.iters)),
+            ("min_ns", Json::from(self.min.as_secs_f64() * 1e9)),
+            ("mean_ns", Json::from(self.mean.as_secs_f64() * 1e9)),
+            ("p50_ns", Json::from(self.p50.as_secs_f64() * 1e9)),
+        ];
+        if let Some(t) = self.throughput {
+            kv.push(("throughput_per_s", Json::from(t)));
+        }
+        Json::obj(kv)
     }
 }
 
 /// Run `f` repeatedly: `warmup` unmeasured iterations then `iters` measured.
+/// In quick mode ([`quick_mode`]) warmup is capped at 1 and iters at 3 so
+/// the CI bench-regression job stays smoke-sized (3 samples keep the
+/// min-based regression gate reasonably noise-robust).
 pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
     assert!(iters > 0);
+    let (warmup, iters) =
+        if quick_mode() { (warmup.min(1), iters.min(3)) } else { (warmup, iters) };
     for _ in 0..warmup {
         f();
     }
@@ -40,7 +88,7 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
     let min = samples[0];
     let p50 = samples[samples.len() / 2];
     let mean = samples.iter().sum::<Duration>() / iters as u32;
-    BenchResult { name: name.to_string(), iters, min, mean, p50 }
+    BenchResult { name: name.to_string(), iters, min, mean, p50, throughput: None }
 }
 
 /// Time a single invocation (for end-to-end figure generators where one run
@@ -49,7 +97,15 @@ pub fn time_once<R, F: FnOnce() -> R>(name: &str, f: F) -> (R, BenchResult) {
     let t0 = Instant::now();
     let r = f();
     let d = t0.elapsed();
-    (r, BenchResult { name: name.to_string(), iters: 1, min: d, mean: d, p50: d })
+    let b = BenchResult {
+        name: name.to_string(),
+        iters: 1,
+        min: d,
+        mean: d,
+        p50: d,
+        throughput: None,
+    };
+    (r, b)
 }
 
 /// Collector that prints results as they land and can dump a summary.
@@ -69,6 +125,20 @@ impl Runner {
         self.results.push(r);
     }
 
+    /// `run` plus an items/s throughput column (e.g. explorer points/s).
+    pub fn run_with_items<F: FnMut()>(
+        &mut self,
+        name: &str,
+        warmup: usize,
+        iters: usize,
+        items_per_iter: f64,
+        f: F,
+    ) {
+        let r = bench(name, warmup, iters, f).with_throughput(items_per_iter);
+        println!("{}", r.line());
+        self.results.push(r);
+    }
+
     pub fn run_once<R, F: FnOnce() -> R>(&mut self, name: &str, f: F) -> R {
         let (out, r) = time_once(name, f);
         println!("{}", r.line());
@@ -84,6 +154,109 @@ impl Runner {
         }
         s
     }
+
+    /// Machine-readable results keyed by bench-target name — one object the
+    /// CI job merges across targets into `BENCH_*.json`.
+    pub fn to_json(&self, bench_name: &str) -> Json {
+        Json::Obj(vec![(
+            bench_name.to_string(),
+            Json::obj(vec![(
+                "results",
+                Json::arr(self.results.iter().map(BenchResult::to_json)),
+            )]),
+        )])
+    }
+
+    /// Write `results/bench_<name>.json` for the CI bench-regression gate.
+    pub fn write_json(&self, bench_name: &str) -> std::io::Result<std::path::PathBuf> {
+        crate::util::table::write_result(
+            &format!("bench_{bench_name}.json"),
+            &self.to_json(bench_name).pretty(),
+        )
+    }
+}
+
+/// One >tolerance move between a current and baseline bench entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Regression {
+    pub bench: String,
+    pub name: String,
+    /// `min_ns` (grew) or `throughput_per_s` (shrank).
+    pub metric: &'static str,
+    pub baseline: f64,
+    pub current: f64,
+    /// Slowdown factor (> 1).
+    pub ratio: f64,
+}
+
+/// Outcome of one baseline comparison.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BaselineComparison {
+    /// Entries present in both the current results and the baseline.
+    pub compared: usize,
+    pub regressions: Vec<Regression>,
+}
+
+/// Compare merged bench JSON (the [`Runner::to_json`] shape, one key per
+/// bench target) against a committed baseline. Entries missing from the
+/// baseline are skipped — the bootstrap path: CI uploads the merged JSON as
+/// an artifact so maintainers can copy it into the baseline to arm the
+/// gate. A regression is a min time that grew, or a throughput that
+/// shrank, by more than `tolerance` (0.3 = 30%); min is compared instead
+/// of p50 because CI-runner noise is one-sided.
+pub fn compare_to_baseline(current: &Json, baseline: &Json, tolerance: f64) -> BaselineComparison {
+    let mut cmp = BaselineComparison { compared: 0, regressions: Vec::new() };
+    let Json::Obj(benches) = current else {
+        return cmp;
+    };
+    for (bench, cur) in benches {
+        let Some(base) = baseline.get(bench) else {
+            continue;
+        };
+        let cur_rs = cur.get("results").and_then(Json::as_array).unwrap_or(&[]);
+        let base_rs = base.get("results").and_then(Json::as_array).unwrap_or(&[]);
+        for c in cur_rs {
+            let Some(name) = c.get("name").and_then(Json::as_str) else {
+                continue;
+            };
+            let Some(b) = base_rs.iter().find(|r| r.get("name").and_then(Json::as_str) == Some(name))
+            else {
+                continue;
+            };
+            cmp.compared += 1;
+            if let (Some(cp), Some(bp)) = (
+                c.get("min_ns").and_then(Json::as_f64),
+                b.get("min_ns").and_then(Json::as_f64),
+            ) {
+                if bp > 0.0 && cp > bp * (1.0 + tolerance) {
+                    cmp.regressions.push(Regression {
+                        bench: bench.clone(),
+                        name: name.to_string(),
+                        metric: "min_ns",
+                        baseline: bp,
+                        current: cp,
+                        ratio: cp / bp,
+                    });
+                }
+            }
+            if let (Some(ct), Some(bt)) = (
+                c.get("throughput_per_s").and_then(Json::as_f64),
+                b.get("throughput_per_s").and_then(Json::as_f64),
+            ) {
+                if bt > 0.0 && ct > 0.0 && ct < bt / (1.0 + tolerance) {
+                    cmp.regressions.push(Regression {
+                        bench: bench.clone(),
+                        name: name.to_string(),
+                        metric: "throughput_per_s",
+                        baseline: bt,
+                        current: ct,
+                        ratio: bt / ct,
+                    });
+                }
+            }
+        }
+    }
+    cmp
 }
 
 #[cfg(test)]
@@ -94,8 +267,12 @@ mod tests {
     fn bench_counts_iters() {
         let mut n = 0usize;
         let r = bench("inc", 2, 5, || n += 1);
-        assert_eq!(n, 7); // 2 warmup + 5 measured
-        assert_eq!(r.iters, 5);
+        if quick_mode() {
+            assert!(r.iters <= 3);
+        } else {
+            assert_eq!(n, 7); // 2 warmup + 5 measured
+            assert_eq!(r.iters, 5);
+        }
         assert!(r.min <= r.p50);
     }
 
@@ -114,5 +291,70 @@ mod tests {
         assert_eq!(out, 7);
         assert_eq!(run.results.len(), 2);
         assert!(run.summary().contains("a"));
+    }
+
+    #[test]
+    fn throughput_and_json_shape() {
+        let mut run = Runner::new();
+        run.run_with_items("t", 0, 1, 100.0, || std::thread::sleep(Duration::from_millis(1)));
+        let r = run.results.last().unwrap();
+        let t = r.throughput.expect("throughput set");
+        assert!(t > 0.0 && t < 1e6, "100 items over >=1ms: {t}");
+        let j = run.to_json("demo");
+        let results = j.get("demo").unwrap().get("results").unwrap();
+        let e = &results.as_array().unwrap()[0];
+        assert_eq!(e.get("name").unwrap().as_str(), Some("t"));
+        assert!(e.get("p50_ns").unwrap().as_f64().unwrap() > 0.0);
+        assert!(e.get("throughput_per_s").is_some());
+    }
+
+    fn entry(name: &str, min_ns: f64, thr: Option<f64>) -> Json {
+        let mut kv = vec![("name", Json::from(name)), ("min_ns", Json::from(min_ns))];
+        if let Some(t) = thr {
+            kv.push(("throughput_per_s", Json::from(t)));
+        }
+        Json::obj(kv)
+    }
+
+    fn bench_json(bench: &str, entries: Vec<Json>) -> Json {
+        Json::Obj(vec![(
+            bench.to_string(),
+            Json::obj(vec![("results", Json::Arr(entries))]),
+        )])
+    }
+
+    #[test]
+    fn baseline_comparison_flags_only_regressions() {
+        let baseline = bench_json(
+            "explore",
+            vec![entry("a", 100.0, Some(50.0)), entry("b", 100.0, None)],
+        );
+        // a: min fine but throughput collapsed; b: min 2x slower
+        let current = bench_json(
+            "explore",
+            vec![entry("a", 110.0, Some(10.0)), entry("b", 200.0, None)],
+        );
+        let cmp = compare_to_baseline(&current, &baseline, 0.3);
+        assert_eq!(cmp.compared, 2);
+        assert_eq!(cmp.regressions.len(), 2);
+        assert_eq!(cmp.regressions[0].metric, "throughput_per_s");
+        assert_eq!(cmp.regressions[1].metric, "min_ns");
+        // improvements and in-tolerance noise never flag
+        let ok = bench_json(
+            "explore",
+            vec![entry("a", 90.0, Some(60.0)), entry("b", 125.0, None)],
+        );
+        assert!(compare_to_baseline(&ok, &baseline, 0.3).regressions.is_empty());
+    }
+
+    #[test]
+    fn missing_baseline_entries_are_skipped() {
+        let current = bench_json("explore", vec![entry("new", 100.0, None)]);
+        let cmp = compare_to_baseline(&current, &Json::obj(vec![]), 0.3);
+        assert_eq!(cmp.compared, 0);
+        assert!(cmp.regressions.is_empty());
+        // a baseline for a different bench target is also skipped
+        let other = bench_json("cluster_sim", vec![entry("new", 1.0, None)]);
+        assert_eq!(compare_to_baseline(&current, &other, 0.3).compared, 0);
     }
 }

@@ -1,0 +1,333 @@
+//! Explorer property tests: frontier laws, determinism across worker
+//! counts, prune-vs-exhaustive equivalence on a ≥500-point space, budget
+//! semantics, paper-grid parity with the fixed `dse` systems, and the
+//! scenario-level explore goal (serde + report consistency).
+
+use dfmodel::api::{self, ExploreOptions, Scenario};
+use dfmodel::dse::{self, Workload};
+use dfmodel::explore::{
+    explore, pareto, ChipCfg, ExploreOutcome, ExploreSettings, MemCfg, SearchSpace, WorkloadSpec,
+};
+use dfmodel::graph::gpt::GptConfig;
+use dfmodel::system::{chip, interconnect, memory, topology, SystemSpec};
+
+/// A small GPT so one optimizer evaluation is cheap in debug builds.
+fn tiny_gpt() -> GptConfig {
+    GptConfig {
+        layers: 8,
+        d_model: 1024.0,
+        n_heads: 8.0,
+        seq: 512.0,
+        d_ff: 4096.0,
+        vocab: 32000.0,
+        dtype_bytes: 2.0,
+    }
+}
+
+/// High-compute, tiny-SRAM kernel-by-kernel parts paired with slow DRAM:
+/// their roofline bound is far below what the good chips achieve, so the
+/// pruner can discard them once the frontier is seeded.
+fn junk_chip(i: usize) -> ChipCfg {
+    ChipCfg::Custom {
+        name: format!("junk-{i}"),
+        compute_tflops: 1000.0 + 250.0 * i as f64,
+        sram_mb: 16.0,
+        dataflow: false,
+        tiles: None,
+        power_w: None,
+        price_usd: None,
+    }
+}
+
+fn tiny_workload() -> WorkloadSpec {
+    WorkloadSpec {
+        kind: Workload::Llm,
+        gpt: Some(tiny_gpt()),
+        batch: Some(32.0),
+        state_bytes_per_weight_byte: None,
+    }
+}
+
+/// 4 chips × 2 mems × 2 links × 2 topologies = 32 candidates at 8 chips.
+fn small_space() -> SearchSpace {
+    SearchSpace {
+        workload: tiny_workload(),
+        chips: vec![ChipCfg::named("sn30"), ChipCfg::named("h100"), junk_chip(0), junk_chip(4)],
+        mems: vec![
+            MemCfg::named("hbm3"),
+            MemCfg { name: "ddr4".into(), bandwidth_gbs: Some(25.0), capacity_gb: None },
+        ],
+        links: vec!["nvlink4".into(), "pcie4".into()],
+        topologies: vec!["torus2d".into(), "ring".into()],
+        chip_counts: vec![8],
+        batches: vec![None],
+    }
+}
+
+/// 16 chips × 2 mems × 2 links × 2 topologies × 2 counts × 2 batches = 512.
+fn big_space() -> SearchSpace {
+    let mut chips = vec![ChipCfg::named("sn30"), ChipCfg::named("tpuv4")];
+    for i in 0..14 {
+        chips.push(junk_chip(i));
+    }
+    SearchSpace {
+        chips,
+        chip_counts: vec![8, 16],
+        batches: vec![None, Some(64.0)],
+        ..small_space()
+    }
+}
+
+fn objectives(out: &ExploreOutcome) -> Vec<[f64; 3]> {
+    out.points.iter().map(|p| [p.utilization, p.cost_eff, p.power_eff]).collect()
+}
+
+/// Identity + objective bits of one point (for cross-run comparison).
+fn point_key(out: &ExploreOutcome, i: usize) -> String {
+    let p = &out.points[i];
+    format!(
+        "{}|{}|{}|{}|{:?}|{:x}|{:x}|{:x}",
+        p.chip,
+        p.topo,
+        p.mem,
+        p.link,
+        out.point_batches[i],
+        p.utilization.to_bits(),
+        p.cost_eff.to_bits(),
+        p.power_eff.to_bits()
+    )
+}
+
+#[test]
+fn frontier_is_mutually_nondominated_and_covers_dominated_points() {
+    let out = explore(&small_space(), &ExploreSettings::exhaustive()).unwrap();
+    assert_eq!(out.points.len(), out.candidates, "exhaustive mode visits everything");
+    let objs = objectives(&out);
+    for &i in &out.frontier {
+        for &j in &out.frontier {
+            assert!(
+                i == j || !pareto::dominates(&objs[i], &objs[j]),
+                "frontier point {j} dominated by frontier point {i}"
+            );
+        }
+    }
+    for (j, o) in objs.iter().enumerate() {
+        if o.iter().all(|v| v.is_finite()) && !out.frontier.contains(&j) {
+            assert!(
+                out.frontier.iter().any(|&i| pareto::dominates(&objs[i], o)),
+                "dominated point {j} not covered by any frontier point"
+            );
+        }
+    }
+    assert!(!out.frontier.is_empty());
+    assert_eq!(out.dominated(), out.feasible() - out.frontier.len());
+}
+
+#[test]
+fn outcome_deterministic_across_worker_counts() {
+    let space = small_space();
+    let run = |workers: usize| {
+        explore(&space, &ExploreSettings { workers: Some(workers), ..Default::default() })
+            .unwrap()
+    };
+    let one = run(1);
+    for other in [run(3), run(4)] {
+        assert_eq!(one.frontier, other.frontier);
+        assert_eq!(one.evaluated, other.evaluated);
+        assert_eq!(one.cache_hits, other.cache_hits);
+        assert_eq!(one.pruned, other.pruned);
+        assert_eq!(one.infeasible, other.infeasible);
+        assert_eq!(one.points.len(), other.points.len());
+        for i in 0..one.points.len() {
+            assert_eq!(point_key(&one, i), point_key(&other, i));
+        }
+    }
+}
+
+#[test]
+fn pruning_preserves_frontier_and_evaluates_fewer_points() {
+    let space = big_space();
+    let full = explore(&space, &ExploreSettings::exhaustive()).unwrap();
+    let pruned = explore(&space, &ExploreSettings::default()).unwrap();
+    assert!(full.candidates >= 500, "space must cover >= 500 points, got {}", full.candidates);
+    assert_eq!(full.evaluated + full.cache_hits, full.candidates);
+
+    let mut fa: Vec<String> = full.frontier.iter().map(|&i| point_key(&full, i)).collect();
+    let mut fb: Vec<String> = pruned.frontier.iter().map(|&i| point_key(&pruned, i)).collect();
+    fa.sort();
+    fb.sort();
+    assert_eq!(fa, fb, "pruning changed the Pareto frontier");
+
+    assert!(pruned.pruned > 0, "no candidate was pruned");
+    assert!(
+        pruned.evaluated < full.evaluated,
+        "pruning must evaluate fewer points: {} vs {}",
+        pruned.evaluated,
+        full.evaluated
+    );
+    let accounted =
+        pruned.evaluated + pruned.cache_hits + pruned.pruned + pruned.skipped_budget;
+    assert_eq!(accounted, pruned.candidates);
+}
+
+#[test]
+fn paper_grid_reproduces_dse_systems_exactly() {
+    for w in Workload::all() {
+        let cands = SearchSpace::paper_grid(w).candidates().unwrap();
+        let systems = dse::dse_systems_1024();
+        assert_eq!(cands.len(), systems.len(), "{w:?}");
+        for (c, s) in cands.iter().zip(systems) {
+            assert_eq!(c.batch, None);
+            assert_eq!(c.sys.describe(), s.describe());
+            assert_eq!(c.sys.chip.tiles, s.chip.tiles);
+            assert_eq!(c.sys.chip.tflop_per_tile.to_bits(), s.chip.tflop_per_tile.to_bits());
+            assert_eq!(c.sys.chip.sram_bytes.to_bits(), s.chip.sram_bytes.to_bits());
+            assert_eq!(c.sys.chip.execution, s.chip.execution);
+            assert_eq!(c.sys.chip.power_w.to_bits(), s.chip.power_w.to_bits());
+            assert_eq!(c.sys.chip.price_usd.to_bits(), s.chip.price_usd.to_bits());
+            assert_eq!(c.sys.memory.bandwidth.to_bits(), s.memory.bandwidth.to_bits());
+            assert_eq!(c.sys.memory.capacity.to_bits(), s.memory.capacity.to_bits());
+            assert_eq!(c.sys.link.bandwidth.to_bits(), s.link.bandwidth.to_bits());
+            assert_eq!(c.sys.link.latency.to_bits(), s.link.latency.to_bits());
+            assert_eq!(c.sys.topology.dim_sizes(), s.topology.dim_sizes());
+        }
+    }
+}
+
+/// One §VI-C system end to end through the explorer must equal the direct
+/// design-point evaluation bit for bit (`dse::sweep` parity at full scale).
+#[test]
+fn explorer_evaluation_matches_design_point_at_paper_scale() {
+    let space = SearchSpace {
+        workload: WorkloadSpec {
+            kind: Workload::Llm,
+            gpt: None,
+            batch: None,
+            state_bytes_per_weight_byte: None,
+        },
+        chips: vec![ChipCfg::named("h100")],
+        mems: vec![MemCfg::named("hbm3")],
+        links: vec!["nvlink4".into()],
+        topologies: vec!["torus2d".into()],
+        chip_counts: vec![1024],
+        batches: vec![None],
+    };
+    let out = explore(&space, &ExploreSettings::exhaustive()).unwrap();
+    assert_eq!(out.points.len(), 1);
+    let link = interconnect::nvlink4();
+    let sys = SystemSpec::new(
+        chip::h100(),
+        memory::hbm3(),
+        link.clone(),
+        topology::torus2d(32, 32, &link),
+    );
+    let direct = api::evaluate_design(Workload::Llm, &sys).expect("feasible");
+    let p = &out.points[0];
+    assert_eq!(p.utilization.to_bits(), direct.utilization.to_bits());
+    assert_eq!(p.cost_eff.to_bits(), direct.cost_eff.to_bits());
+    assert_eq!(p.power_eff.to_bits(), direct.power_eff.to_bits());
+    assert_eq!(p.achieved_flops.to_bits(), direct.achieved_flops.to_bits());
+    assert_eq!(p.breakdown.0.to_bits(), direct.breakdown.0.to_bits());
+    assert_eq!(p.breakdown.1.to_bits(), direct.breakdown.1.to_bits());
+    assert_eq!(p.breakdown.2.to_bits(), direct.breakdown.2.to_bits());
+}
+
+#[test]
+fn budget_caps_visited_candidates() {
+    let out = explore(
+        &small_space(),
+        &ExploreSettings { prune: false, budget: Some(5), ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(out.points.len(), 5);
+    assert_eq!(out.skipped_budget, out.candidates - 5);
+    assert_eq!(out.evaluated + out.cache_hits, 5);
+}
+
+#[test]
+fn aliasing_batch_axes_hit_the_cache() {
+    // batch override equal to the workload batch → same canonical key
+    let space = SearchSpace {
+        chips: vec![ChipCfg::named("sn30")],
+        mems: vec![MemCfg::named("hbm3")],
+        links: vec!["nvlink4".into()],
+        topologies: vec!["ring".into()],
+        batches: vec![None, Some(32.0)],
+        ..small_space()
+    };
+    let out = explore(&space, &ExploreSettings::exhaustive()).unwrap();
+    assert_eq!(out.candidates, 2);
+    assert_eq!(out.evaluated, 1);
+    assert_eq!(out.cache_hits, 1);
+    assert_eq!(point_key(&out, 0), point_key(&out, 1));
+}
+
+#[test]
+fn fixed_size_workloads_alias_across_the_batch_axis() {
+    // HPL's problem size is fixed: a batch axis must hit the cache, not
+    // force duplicate optimizer runs or batch-labeled duplicate rows
+    let space = SearchSpace {
+        workload: WorkloadSpec {
+            kind: Workload::Hpl,
+            gpt: None,
+            batch: None,
+            state_bytes_per_weight_byte: None,
+        },
+        chips: vec![ChipCfg::named("tpuv4")],
+        mems: vec![MemCfg::named("hbm3")],
+        links: vec!["nvlink4".into()],
+        topologies: vec!["torus2d".into()],
+        chip_counts: vec![16],
+        batches: vec![None, Some(7.0)],
+    };
+    let out = explore(&space, &ExploreSettings::exhaustive()).unwrap();
+    assert_eq!(out.candidates, 2);
+    assert_eq!(out.evaluated, 1);
+    assert_eq!(out.cache_hits, 1);
+    assert_eq!(out.point_batches, vec![None, None]);
+}
+
+#[test]
+fn scenario_explore_roundtrips_and_reports() {
+    let opts = ExploreOptions {
+        chips: vec![
+            ChipCfg::named("sn30"),
+            ChipCfg::Custom {
+                name: "mini".into(),
+                compute_tflops: 500.0,
+                sram_mb: 128.0,
+                dataflow: true,
+                tiles: Some(512),
+                power_w: None,
+                price_usd: None,
+            },
+        ],
+        mems: vec![
+            MemCfg::named("ddr4"),
+            MemCfg { name: "hbm3".into(), bandwidth_gbs: Some(2000.0), capacity_gb: Some(64.0) },
+        ],
+        links: vec!["pcie4".into()],
+        topologies: vec!["ring".into(), "torus2d".into()],
+        chip_counts: vec![8],
+        batches: vec![None, Some(16.0)],
+        prune: true,
+        budget: Some(64),
+        top: 4,
+    };
+    let s = Scenario::llm_custom(tiny_gpt()).batch(16.0).explore(opts);
+    let text = s.to_json().pretty();
+    let back = Scenario::parse(&text).expect("explore scenario parses");
+    assert_eq!(s, back, "explore scenario changed across serde:\n{text}");
+
+    let r = back.evaluate().unwrap();
+    let e = r.explore.as_ref().expect("explore section");
+    assert_eq!(e.candidates, 16);
+    assert_eq!(e.candidates, e.evaluated + e.cache_hits + e.pruned + e.skipped_budget);
+    assert!(e.frontier_size >= 1);
+    assert!(e.frontier.len() <= 4, "report frontier bounded by top");
+    let json = r.to_json();
+    let ex = json.get("explore").expect("explore json section");
+    assert!(ex.get("frontier").is_some());
+    assert!(ex.get("candidates").is_some());
+    assert!(r.frontier().is_some());
+}
