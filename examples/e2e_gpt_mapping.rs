@@ -43,7 +43,7 @@ fn main() {
     // a small dataflow chip so the tiny layer still has interesting
     // SRAM pressure; DDR-class memory
     let mut small_chip = chip::sn10();
-    small_chip.sram_bytes = 2e6;
+    small_chip.sram_bytes = dfmodel::util::units::Bytes::new(2e6);
     let mem = memory::ddr4();
 
     // model each variant with the SAME partitioning the artifacts execute

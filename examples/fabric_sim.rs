@@ -11,7 +11,7 @@ use dfmodel::fabric::{self, CalibrateOpts, FabricGraph, SimConfig};
 use dfmodel::graph::gpt::{gpt3_175b, gpt_layer_graph};
 use dfmodel::interchip::InterChipOptions;
 use dfmodel::system::{chip, interconnect, memory, topology, Dim, SystemSpec};
-use dfmodel::util::units::fmt_time;
+use dfmodel::util::units::{fmt_time, Bytes};
 
 fn main() {
     // ---- 1. algorithm race on a 4×4 torus ----
@@ -25,10 +25,10 @@ fn main() {
         "== {} | {} links | bisection {:.1} TB/s ==",
         topo.name,
         g.links.len(),
-        topo.bisection_bytes_per_s() / 1e12
+        topo.bisection_bytes_per_s().raw() / 1e12
     );
     for bytes in [32e3, 256e6] {
-        let ana = collective::time_hier(Collective::AllReduce, bytes, &dims);
+        let ana = collective::time_hier(Collective::AllReduce, Bytes::new(bytes), &dims).raw();
         println!("AllReduce {:.3} MB/chip (analytical {}):", bytes / 1e6, fmt_time(ana));
         for e in fabric::evaluate_algos(&g, &group, Collective::AllReduce, bytes, &cfg) {
             println!(
@@ -58,8 +58,8 @@ fn main() {
     let ana = api::map_graph(&gr, &sys, &opts).expect("analytical mapping");
     let cal = api::map_graph(&gr, &cal_sys, &opts).expect("calibrated mapping");
     println!("GPT3-175B layer on 8×SN10 ring, TP=8:");
-    println!("  analytical model : t_cri {}", fmt_time(ana.t_cri));
-    println!("  calibrated model : t_cri {}", fmt_time(cal.t_cri));
+    println!("  analytical model : t_cri {}", fmt_time(ana.t_cri.raw()));
+    println!("  calibrated model : t_cri {}", fmt_time(cal.t_cri.raw()));
     println!(
         "  (simulation-certified collective costs shift the bound by {:+.1}%)",
         (cal.t_cri / ana.t_cri - 1.0) * 100.0

@@ -38,7 +38,7 @@ fn main() {
     println!(
         "\ninter-chip: {} | critical time {} | explored O(10^{:.0}) mappings",
         inter.plan.describe(),
-        fmt_time(inter.t_cri),
+        fmt_time(inter.t_cri.raw()),
         inter.space_log10
     );
 

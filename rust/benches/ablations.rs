@@ -9,6 +9,7 @@
 
 use dfmodel::api;
 use dfmodel::collective::{time, time_hier, Collective};
+use dfmodel::util::units::Bytes;
 use dfmodel::graph::gpt::{gpt3_175b, gpt3_1t, gpt_coarse_graph, gpt_layer_graph};
 use dfmodel::interchip::{self, InterChipOptions};
 use dfmodel::intrachip::tiles::allocate_tiles;
@@ -40,8 +41,8 @@ fn a1_hier_vs_flat() -> String {
         let flat = Dim::new(DimKind::Ring, n, &nv);
         let d1 = Dim::new(DimKind::Ring, side, &nv);
         let d2 = Dim::new(DimKind::Ring, side, &nv);
-        let tf = time(Collective::AllReduce, 1e9, &flat);
-        let th = time_hier(Collective::AllReduce, 1e9, &[&d1, &d2]);
+        let tf = time(Collective::AllReduce, Bytes::new(1e9), &flat).raw();
+        let th = time_hier(Collective::AllReduce, Bytes::new(1e9), &[&d1, &d2]).raw();
         t.row(&[
             format!("{n}"),
             format!("{:.3}", tf * 1e3),
@@ -122,9 +123,9 @@ fn a3_stage_dp_vs_greedy() -> String {
         .fold(0.0f64, f64::max);
     format!(
         "A3 — stage partitioning (GPT3-1T, tp=16 pp=16): DP max-stage {:.4e}s vs equal-split compute {:.4e}s (DP <= greedy: {})\n\n",
-        m.t_cri,
+        m.t_cri.raw(),
         greedy_worst,
-        m.t_cri <= greedy_worst * 1.0001
+        m.t_cri.raw() <= greedy_worst * 1.0001
     )
 }
 

@@ -133,16 +133,24 @@ impl Scenario {
     /// the reason (bad name, infeasible split, capacity violation) instead
     /// of a bare `None`.
     pub fn evaluate(&self) -> Result<Report> {
+        // lint pre-flight (opt out with `no_lint`): errors abort before any
+        // optimizer runs; warnings ride along on the report. Beyond that,
         // no upfront check(): every eval path validates what it touches
-        // with the same errors, so nothing is built twice
-        match self.goal {
+        // with the same errors, so nothing is built twice.
+        let lint = if self.lint { crate::lint::lint_scenario(self) } else { Default::default() };
+        if lint.has_errors() {
+            bail!("scenario fails lint:\n{}", lint.render());
+        }
+        let mut rep = match self.goal {
             Goal::Map => self.eval_map(),
             Goal::Serve => self.eval_serve(),
             Goal::Simulate => self.eval_simulate(),
             Goal::Plan => self.eval_plan(),
             Goal::Fabric => self.eval_fabric(),
             Goal::Explore => self.eval_explore(),
-        }
+        }?;
+        rep.lint = lint;
+        Ok(rep)
     }
 
     fn report_base(&self, system: String) -> Report {
@@ -157,6 +165,7 @@ impl Scenario {
             plan: None,
             fabric: None,
             explore: None,
+            lint: Default::default(),
         }
     }
 
@@ -204,8 +213,8 @@ impl Scenario {
             step_time: r.step_time,
             utilization: r.utilization,
             achieved_flops: r.achieved_flops,
-            cost_eff: r.achieved_flops / 1e9 / sys.price_usd(),
-            power_eff: r.achieved_flops / 1e9 / sys.power_w(),
+            cost_eff: r.achieved_flops / 1e9 / sys.price_usd().raw(),
+            power_eff: r.achieved_flops / 1e9 / sys.power_w().raw(),
             breakdown: (c, m, n),
         });
         Ok(rep)
@@ -374,7 +383,9 @@ impl Scenario {
         let cfg = SimConfig { routing, seed: f.seed, ..Default::default() };
         let g = fabric::FabricGraph::new(&topo);
         let dims: Vec<&crate::system::Dim> = topo.dims.iter().collect();
-        let ana = crate::collective::time_hier(coll, f.bytes, &dims);
+        let ana =
+            crate::collective::time_hier(coll, crate::util::units::Bytes::new(f.bytes), &dims)
+                .raw();
         let group: Vec<usize> = (0..topo.n_chips()).collect();
         let mut evals = fabric::evaluate_algos(&g, &group, coll, f.bytes, &cfg);
         if let Some(name) = &f.algo {
@@ -391,7 +402,7 @@ impl Scenario {
             chips: topo.n_chips(),
             nodes: g.n_nodes(),
             links: g.links.len(),
-            bisection_bytes_per_s: topo.bisection_bytes_per_s(),
+            bisection_bytes_per_s: topo.bisection_bytes_per_s().raw(),
             collective: f.collective.clone(),
             bytes: f.bytes,
             routing: f.routing.clone(),

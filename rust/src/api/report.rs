@@ -499,6 +499,9 @@ pub struct Report {
     pub plan: Option<PlanReport>,
     pub fabric: Option<FabricReport>,
     pub explore: Option<ExploreReport>,
+    /// Pre-flight lint diagnostics (warnings only — errors abort
+    /// `evaluate` before a report exists). Empty when linting is off.
+    pub lint: crate::lint::LintReport,
 }
 
 impl Report {
@@ -559,6 +562,9 @@ impl Report {
         if let Some(e) = &self.explore {
             kv.push(("explore", e.to_json()));
         }
+        if !self.lint.is_clean() {
+            kv.push(("lint", self.lint.to_json()));
+        }
         Json::obj(kv)
     }
 
@@ -567,6 +573,9 @@ impl Report {
         let mut s = String::new();
         let _ = writeln!(s, "workload: {}", self.workload);
         let _ = writeln!(s, "system  : {}", self.system);
+        for d in &self.lint.diags {
+            let _ = writeln!(s, "{}", d.render());
+        }
         if let Some(m) = &self.mapping {
             let _ = writeln!(s, "degrees : TP={} PP={} DP={}", m.tp, m.pp, m.dp);
             if m.n_stages > 0 || m.n_partitions > 0 {

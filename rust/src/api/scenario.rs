@@ -391,8 +391,8 @@ impl SystemCfg {
         let topo = self.topology.build(&link)?;
         Ok(ServingSystem {
             chip: chip_by_name(&self.chip)?,
-            mem_bw: mem.bandwidth,
-            mem_cap: mem.capacity,
+            mem_bw: mem.bandwidth.raw(),
+            mem_cap: mem.capacity.raw(),
             link,
             n_chips: topo.n_chips(),
         })
@@ -774,6 +774,9 @@ pub struct Scenario {
     pub cluster: ClusterCfg,
     pub fabric: FabricCfg,
     pub explore: ExploreOptions,
+    /// Run the [`crate::lint`] pre-flight in `evaluate` (default `true`);
+    /// disable with [`Scenario::no_lint`] or `"lint": false` in JSON.
+    pub lint: bool,
 }
 
 impl Scenario {
@@ -787,6 +790,7 @@ impl Scenario {
             cluster: ClusterCfg::default(),
             fabric: FabricCfg::default(),
             explore: ExploreOptions::default(),
+            lint: true,
         }
     }
 
@@ -844,6 +848,13 @@ impl Scenario {
             WorkloadCfg::Hpl | WorkloadCfg::Fft => {}
             WorkloadCfg::Llama { .. } => self.serving.batch = batch,
         }
+        self
+    }
+
+    /// Skip the [`crate::lint`] pre-flight in `evaluate` (expert escape
+    /// hatch for deliberately degenerate inputs).
+    pub fn no_lint(mut self) -> Scenario {
+        self.lint = false;
         self
     }
 
@@ -949,7 +960,7 @@ impl Scenario {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut kv = vec![
             ("goal", Json::from(self.goal.name())),
             ("workload", self.workload.to_json()),
             ("system", self.system.to_json()),
@@ -959,7 +970,11 @@ impl Scenario {
             ("cluster", cluster_json(&self.cluster)),
             ("fabric", fabric_json(&self.fabric)),
             ("explore", explore_json(&self.explore)),
-        ])
+        ];
+        if !self.lint {
+            kv.push(("lint", Json::Bool(false)));
+        }
+        Json::obj(kv)
     }
 
     pub fn parse(text: &str) -> Result<Scenario> {
@@ -974,6 +989,14 @@ impl Scenario {
     }
 
     pub fn from_json(j: &Json) -> Result<Scenario> {
+        let s = Scenario::from_json_unchecked(j)?;
+        s.check()?;
+        Ok(s)
+    }
+
+    /// [`Scenario::from_json`] without the [`Scenario::check`] pass — the
+    /// lint engine uses this so it can diagnose scenarios `check` rejects.
+    pub fn from_json_unchecked(j: &Json) -> Result<Scenario> {
         let goal = match j.get("goal").and_then(|v| v.as_str()) {
             None => Goal::Map,
             Some(g) => Goal::parse(g).ok_or_else(|| {
@@ -993,9 +1016,8 @@ impl Scenario {
         let cluster = parse_cluster(j.get("cluster").unwrap_or(&Json::Null));
         let fabric = parse_fabric(j.get("fabric").unwrap_or(&Json::Null));
         let explore = parse_explore(j.get("explore").unwrap_or(&Json::Null))?;
-        let s = Scenario { goal, workload, system, knobs, serving, cluster, fabric, explore };
-        s.check()?;
-        Ok(s)
+        let lint = j.get("lint").and_then(|v| v.as_bool()).unwrap_or(true);
+        Ok(Scenario { goal, workload, system, knobs, serving, cluster, fabric, explore, lint })
     }
 }
 

@@ -53,7 +53,7 @@ pub fn iteration(
 
     // memory capacity: weights + grads + optimizer state, sharded TP×PP
     let state_bytes = cfg.params() * cfg.dtype_bytes * 8.0 / (tp * pp);
-    if state_bytes > sys.memory.capacity {
+    if state_bytes > sys.memory.capacity.raw() {
         return None;
     }
 
@@ -63,21 +63,21 @@ pub fn iteration(
 
     // ---- per-layer forward: compute (roofline vs memory) ----
     let flops_layer = (24.0 * h * h + 4.0 * cfg.seq * h) * tokens_micro / tp;
-    let t_comp = flops_layer / (sys.chip.compute_flops() * KBK_COMPUTE_EFF);
+    let t_comp = flops_layer / (sys.chip.compute_flops().raw() * KBK_COMPUTE_EFF);
     // kernel-by-kernel DRAM traffic: weights once + ~14 intermediate
     // tensors read+written (2x), scores tensor pair dominates at long seq
     let act = tokens_micro * h * cfg.dtype_bytes / tp;
     let scores = pt.microbatch * cfg.n_heads * cfg.seq * cfg.seq * cfg.dtype_bytes / tp;
     let weights_layer = 12.0 * h * h * cfg.dtype_bytes / tp;
     let dram_layer = weights_layer + 2.0 * (12.0 * act + 2.0 * scores + 2.0 * act * 4.0);
-    let t_mem = dram_layer / sys.memory.bandwidth;
+    let t_mem = dram_layer / sys.memory.bandwidth.raw();
     let t_layer_fwd = t_comp.max(t_mem);
 
     // ---- TP communication: 2 all-reduces per layer per pass ----
     // ring all-reduce over the TP group on the system's link tech
     let ar_bytes = tokens_micro * h * cfg.dtype_bytes;
     let t_ar = if pt.tp > 1 {
-        2.0 * (tp - 1.0) / tp * ar_bytes / sys.link.bandwidth
+        2.0 * (tp - 1.0) / tp * ar_bytes / sys.link.bandwidth.raw()
     } else {
         0.0
     };
@@ -94,7 +94,7 @@ pub fn iteration(
 
     // p2p activations between stages, fwd + bwd
     let pp_comm = if pt.pp > 1 {
-        2.0 * micro_count * (act * tp) / sys.link.bandwidth / tp
+        2.0 * micro_count * (act * tp) / sys.link.bandwidth.raw() / tp
     } else {
         0.0
     };
@@ -102,7 +102,7 @@ pub fn iteration(
     // DP gradient all-reduce (exposed; Calculon reports it separately)
     let dp_comm = if pt.dp > 1 {
         let grad = cfg.params() * cfg.dtype_bytes / (tp * pp);
-        2.0 * (dp - 1.0) / dp * grad / sys.link.bandwidth
+        2.0 * (dp - 1.0) / dp * grad / sys.link.bandwidth.raw()
     } else {
         0.0
     };
@@ -115,7 +115,7 @@ pub fn utilization(cfg: &GptConfig, sys: &SystemSpec, pt: &CalculonPoint) -> Opt
     let b = iteration(cfg, sys, pt)?;
     let tokens = pt.global_batch * cfg.seq;
     let useful = cfg.train_flops_per_token() * tokens;
-    Some(useful / b.total() / sys.peak_flops())
+    Some(useful / b.total() / sys.peak_flops().raw())
 }
 
 #[cfg(test)]
@@ -160,7 +160,7 @@ mod tests {
     fn capacity_gate() {
         let cfg = gpt3_1t();
         let mut sys = a100_cluster(1024);
-        sys.memory.capacity = 1e9;
+        sys.memory.capacity = crate::util::units::Bytes::new(1e9);
         assert!(iteration(&cfg, &sys, &pt(8, 32, 4)).is_none());
     }
 

@@ -38,19 +38,19 @@ pub fn iteration_time(
     let (tpi, ppi, dpi) = degrees(cfg, sys.n_chips(), pt.hb_domain);
     let (tp, pp, dp) = (tpi as f64, ppi as f64, dpi as f64);
     // same training-state capacity gate as the other models
-    if cfg.params() * cfg.dtype_bytes * 8.0 / (tp * pp) > sys.memory.capacity {
+    if cfg.params() * cfg.dtype_bytes * 8.0 / (tp * pp) > sys.memory.capacity.raw() {
         return None;
     }
 
     let tokens_micro = pt.microbatch * cfg.seq;
     let h = cfg.d_model;
     let flops_layer = (24.0 * h * h + 4.0 * cfg.seq * h) * tokens_micro / tp;
-    let t_layer = flops_layer / (sys.chip.compute_flops() * super::calculon::KBK_COMPUTE_EFF);
+    let t_layer = flops_layer / (sys.chip.compute_flops().raw() * super::calculon::KBK_COMPUTE_EFF);
 
     // TP all-reduces on the in-domain (NVLink) bandwidth
     let ar_bytes = tokens_micro * h * cfg.dtype_bytes;
     let t_ar_layer =
-        if tp > 1.0 { 4.0 * (tp - 1.0) / tp * ar_bytes / sys.link.bandwidth } else { 0.0 };
+        if tp > 1.0 { 4.0 * (tp - 1.0) / tp * ar_bytes / sys.link.bandwidth.raw() } else { 0.0 };
 
     let layers_per_stage = (cfg.layers as f64 / pp).ceil();
     let micro_count = (pt.global_batch / (dp * pt.microbatch)).max(1.0);
@@ -60,10 +60,10 @@ pub fn iteration_time(
 
     // PP p2p + DP gradient all-reduce ride the rails (cross-domain links)
     let act = tokens_micro * h * cfg.dtype_bytes / tp;
-    let pp_comm = if pp > 1.0 { 2.0 * micro_count * act / rail.bandwidth } else { 0.0 };
+    let pp_comm = if pp > 1.0 { 2.0 * micro_count * act / rail.bandwidth.raw() } else { 0.0 };
     let dp_comm = if dp > 1.0 {
         let grad = cfg.params() * cfg.dtype_bytes / (tp * pp);
-        2.0 * (dp - 1.0) / dp * grad / rail.bandwidth
+        2.0 * (dp - 1.0) / dp * grad / rail.bandwidth.raw()
     } else {
         0.0
     };
@@ -80,7 +80,7 @@ pub fn utilization(
 ) -> Option<f64> {
     let t = iteration_time(cfg, sys, rail, pt)?;
     let useful = cfg.train_flops_per_token() * pt.global_batch * cfg.seq;
-    Some(useful / t / sys.peak_flops())
+    Some(useful / t / sys.peak_flops().raw())
 }
 
 #[cfg(test)]

@@ -522,7 +522,7 @@ mod tests {
 
     #[test]
     fn percentiles_of_known_samples() {
-        let mut v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let mut v: Vec<f64> = (1..=100).map(f64::from).collect();
         let p = percentiles(&mut v);
         assert_eq!(p.p50, 51.0);
         assert_eq!(p.p95, 95.0);

@@ -27,8 +27,8 @@ impl Platform {
     pub fn replica(&self, group: usize) -> ServingSystem {
         ServingSystem {
             chip: self.chip.clone(),
-            mem_bw: self.mem.bandwidth,
-            mem_cap: self.mem.capacity,
+            mem_bw: self.mem.bandwidth.raw(),
+            mem_cap: self.mem.capacity.raw(),
             link: self.link.clone(),
             n_chips: group,
         }
@@ -106,8 +106,8 @@ pub fn fleet_cost(p: &Platform, group: usize, replicas: usize) -> (f64, f64) {
         + p.link.price_usd * links;
     let replica_w =
         p.chip.power_w * group as f64 + p.mem.power_w() * group as f64 + p.link.power_w * links;
-    let capex = replica_capex * replicas as f64;
-    let watts = replica_w * replicas as f64;
+    let capex = (replica_capex * replicas as f64).raw();
+    let watts = (replica_w * replicas as f64).raw();
     let usd_per_hour = capex / (3.0 * 365.0 * 24.0) + watts / 1000.0 * 0.12;
     (capex, usd_per_hour)
 }
@@ -271,7 +271,7 @@ mod tests {
         let (c3, h3) = fleet_cost(p, 8, 3);
         assert!((c3 / c1 - 3.0).abs() < 1e-9);
         assert!((h3 / h1 - 3.0).abs() < 1e-9);
-        assert!(c1 > 8.0 * p.chip.price_usd, "memory and links must add cost");
+        assert!(c1 > 8.0 * p.chip.price_usd.raw(), "memory and links must add cost");
     }
 
     #[test]

@@ -161,7 +161,7 @@ mod tests {
     fn bursty_rate_oscillates_between_base_and_peak() {
         let a = Arrivals::Bursty { base: 2.0, peak: 10.0, period: 60.0 };
         for i in 0..600 {
-            let r = a.rate_at(i as f64 * 0.37);
+            let r = a.rate_at(f64::from(i) * 0.37);
             assert!((2.0 - 1e-9..=10.0 + 1e-9).contains(&r));
         }
         assert!((a.mean_rate() - 6.0).abs() < 1e-12);

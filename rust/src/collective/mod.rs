@@ -10,6 +10,7 @@
 use std::collections::HashMap;
 
 use crate::system::topology::{Dim, DimFabric, DimKind};
+use crate::util::units::{Bytes, Seconds};
 
 /// Collective operations DFModel's sharding strategies emit.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -23,11 +24,13 @@ pub enum Collective {
     P2P,
 }
 
-/// Time for `coll` over one network dimension.
-pub fn time(coll: Collective, bytes: f64, dim: &Dim) -> f64 {
+/// Time for `coll` over one network dimension. The per-chip buffer is a
+/// typed [`Bytes`] quantity and the result a typed [`Seconds`] — the α-β
+/// formulas below only type-check because `Bytes / BytesPerSec = Seconds`.
+pub fn time(coll: Collective, bytes: Bytes, dim: &Dim) -> Seconds {
     let k = dim.size as f64;
-    if dim.size <= 1 || bytes <= 0.0 {
-        return 0.0;
+    if dim.size <= 1 || bytes <= Bytes::ZERO {
+        return Seconds::ZERO;
     }
     let b = dim.link_bw;
     let a = dim.latency;
@@ -69,14 +72,14 @@ pub fn time(coll: Collective, bytes: f64, dim: &Dim) -> f64 {
 ///   (resp. growing) payloads.
 /// * AllToAll: payload stays S per phase (every chip still exchanges its
 ///   full buffer within each dim).
-pub fn time_hier(coll: Collective, bytes: f64, dims: &[&Dim]) -> f64 {
+pub fn time_hier(coll: Collective, bytes: Bytes, dims: &[&Dim]) -> Seconds {
     let active: Vec<&Dim> = dims.iter().copied().filter(|d| d.size > 1).collect();
-    if active.is_empty() || bytes <= 0.0 {
-        return 0.0;
+    if active.is_empty() || bytes <= Bytes::ZERO {
+        return Seconds::ZERO;
     }
     match coll {
         Collective::AllReduce => {
-            let mut t = 0.0;
+            let mut t = Seconds::ZERO;
             let mut payload = bytes;
             // reduce-scatter down
             for d in &active {
@@ -91,7 +94,7 @@ pub fn time_hier(coll: Collective, bytes: f64, dims: &[&Dim]) -> f64 {
             t
         }
         Collective::ReduceScatter => {
-            let mut t = 0.0;
+            let mut t = Seconds::ZERO;
             let mut payload = bytes;
             for d in &active {
                 t += time(Collective::ReduceScatter, payload, d);
@@ -102,7 +105,7 @@ pub fn time_hier(coll: Collective, bytes: f64, dims: &[&Dim]) -> f64 {
         Collective::AllGather => {
             let total: f64 = active.iter().map(|d| d.size as f64).product();
             let mut payload = bytes / total;
-            let mut t = 0.0;
+            let mut t = Seconds::ZERO;
             for d in active.iter().rev() {
                 payload *= d.size as f64;
                 t += time(Collective::AllGather, payload, d);
@@ -120,7 +123,7 @@ pub fn time_hier(coll: Collective, bytes: f64, dims: &[&Dim]) -> f64 {
             active
                 .iter()
                 .map(|d| time(Collective::P2P, bytes, d))
-                .fold(0.0f64, f64::max)
+                .fold(Seconds::ZERO, Seconds::max)
         }
     }
 }
@@ -242,13 +245,15 @@ pub enum CollectiveModel {
 }
 
 impl CollectiveModel {
-    /// `time_hier` under this model.
-    pub fn time_hier(&self, coll: Collective, bytes: f64, dims: &[&Dim]) -> f64 {
+    /// `time_hier` under this model. The calibration table itself stays in
+    /// raw `f64` payload space (a serialization-adjacent boundary), so the
+    /// lookup goes through `.raw()`.
+    pub fn time_hier(&self, coll: Collective, bytes: Bytes, dims: &[&Dim]) -> Seconds {
         let base = time_hier(coll, bytes, dims);
         match self {
             CollectiveModel::Analytical => base,
             CollectiveModel::Calibrated(c) => {
-                base * c.ratio(coll, &dims_key(dims), bytes).unwrap_or(1.0)
+                base * c.ratio(coll, &dims_key(dims), bytes.raw()).unwrap_or(1.0)
             }
         }
     }
@@ -278,24 +283,24 @@ mod tests {
             Collective::AllToAll,
             Collective::Broadcast,
         ] {
-            assert_eq!(time(coll, 1e9, &ring(1)), 0.0);
+            assert_eq!(time(coll, Bytes::new(1e9), &ring(1)), Seconds::ZERO);
         }
     }
 
     #[test]
     fn ring_allreduce_matches_2x_bandwidth_rule() {
         let d = ring(8);
-        let s = 1e9;
+        let s = Bytes::new(1e9);
         let t = time(Collective::AllReduce, s, &d);
         let bw_term = 2.0 * (7.0 / 8.0) * s / d.link_bw;
-        assert!((t - bw_term) < 16.0 * d.latency + 1e-12);
+        assert!((t - bw_term) < 16.0 * d.latency + Seconds::new(1e-12));
         assert!(t >= bw_term);
     }
 
     #[test]
     fn allreduce_is_twice_allgather_bandwidth() {
         let d = ring(16);
-        let s = 1e8;
+        let s = Bytes::new(1e8);
         let ar = time(Collective::AllReduce, s, &d);
         let ag = time(Collective::AllGather, s, &d);
         assert!((ar / ag - 2.0).abs() < 0.01);
@@ -303,7 +308,7 @@ mod tests {
 
     #[test]
     fn fc_alltoall_beats_ring_alltoall() {
-        let s = 1e9;
+        let s = Bytes::new(1e9);
         let t_ring = time(Collective::AllToAll, s, &ring(32));
         let t_fc = time(Collective::AllToAll, s, &fc(32));
         // direct links give ~k²/4 advantage over the ring bisection
@@ -312,7 +317,7 @@ mod tests {
 
     #[test]
     fn switch_alltoall_between_ring_and_fc() {
-        let s = 1e9;
+        let s = Bytes::new(1e9);
         let t_ring = time(Collective::AllToAll, s, &ring(32));
         let t_sw = time(Collective::AllToAll, s, &sw(32));
         let t_fc = time(Collective::AllToAll, s, &fc(32));
@@ -326,7 +331,7 @@ mod tests {
         let d1 = ring(32);
         let d2 = ring(32);
         let flat = ring(1024);
-        let s = 1e9;
+        let s = Bytes::new(1e9);
         let hier = time_hier(Collective::AllReduce, s, &[&d1, &d2]);
         let one = time(Collective::AllReduce, s, &flat);
         assert!(hier < one, "hier {hier} flat {one}");
@@ -335,17 +340,17 @@ mod tests {
     #[test]
     fn hier_allreduce_on_single_dim_equals_flat() {
         let d = ring(8);
-        let s = 1e9;
+        let s = Bytes::new(1e9);
         let a = time_hier(Collective::AllReduce, s, &[&d]);
         let b = time(Collective::ReduceScatter, s, &d) + time(Collective::AllGather, s, &d);
-        assert!((a - b).abs() < 1e-15);
+        assert!((a - b).abs() < Seconds::new(1e-15));
     }
 
     #[test]
     fn slower_links_cost_more() {
         let fast = Dim::new(DimKind::Ring, 8, &nvlink4());
         let slow = Dim::new(DimKind::Ring, 8, &pcie4());
-        let s = 1e9;
+        let s = Bytes::new(1e9);
         let r = time(Collective::AllReduce, s, &slow) / time(Collective::AllReduce, s, &fast);
         // 900/25 = 36× bandwidth ratio dominates
         assert!(r > 30.0, "ratio {r}");
@@ -355,8 +360,8 @@ mod tests {
     fn p2p_picks_slowest_hop() {
         let d1 = Dim::new(DimKind::Ring, 8, &nvlink4());
         let d2 = Dim::new(DimKind::Ring, 8, &pcie4());
-        let t = time_hier(Collective::P2P, 1e6, &[&d1, &d2]);
-        assert!((t - time(Collective::P2P, 1e6, &d2)).abs() < 1e-15);
+        let t = time_hier(Collective::P2P, Bytes::new(1e6), &[&d1, &d2]);
+        assert!((t - time(Collective::P2P, Bytes::new(1e6), &d2)).abs() < Seconds::new(1e-15));
     }
 
     #[test]
@@ -392,9 +397,12 @@ mod tests {
         assert!(c.ratio(Collective::AllGather, &key, 1e7).is_none());
 
         let model = CollectiveModel::Calibrated(c);
-        let s = 1e7;
+        let s = Bytes::new(1e7);
         let base = time_hier(Collective::AllReduce, s, &[&d]);
-        assert!((model.time_hier(Collective::AllReduce, s, &[&d]) - 3.0 * base).abs() < 1e-12);
+        assert!(
+            (model.time_hier(Collective::AllReduce, s, &[&d]) - 3.0 * base).abs()
+                < Seconds::new(1e-12)
+        );
         // uncalibrated collectives under a calibrated model stay analytical
         let ag = time_hier(Collective::AllGather, s, &[&d]);
         assert_eq!(model.time_hier(Collective::AllGather, s, &[&d]), ag);

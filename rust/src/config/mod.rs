@@ -119,8 +119,8 @@ impl Experiment {
                     ("network", Json::from(n)),
                 ]),
             ),
-            ("price_usd", Json::from(self.system.price_usd())),
-            ("power_w", Json::from(self.system.power_w())),
+            ("price_usd", Json::from(self.system.price_usd().raw())),
+            ("power_w", Json::from(self.system.power_w().raw())),
         ]))
     }
 }

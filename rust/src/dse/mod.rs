@@ -91,8 +91,8 @@ impl DesignPoint {
             link: sys.link.name.clone(),
             dataflow: sys.chip.execution == ExecutionModel::Dataflow,
             utilization: r.utilization,
-            cost_eff: r.achieved_flops / 1e9 / sys.price_usd(),
-            power_eff: r.achieved_flops / 1e9 / sys.power_w(),
+            cost_eff: r.achieved_flops / 1e9 / sys.price_usd().raw(),
+            power_eff: r.achieved_flops / 1e9 / sys.power_w().raw(),
             achieved_flops: r.achieved_flops,
             breakdown: r.breakdown_frac(),
         }

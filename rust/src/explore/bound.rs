@@ -97,7 +97,8 @@ impl BoundProfile {
         let mem = if kbk {
             let traffic = self.weight_bytes + self.activation_bytes;
             if traffic > 0.0 {
-                self.useful_flops / traffic * sys.memory.bandwidth / sys.chip.compute_flops()
+                self.useful_flops / traffic * sys.memory.bandwidth.raw()
+                    / sys.chip.compute_flops().raw()
                     * MEM_MARGIN
             } else {
                 f64::INFINITY
@@ -113,8 +114,8 @@ impl BoundProfile {
     /// utilization bound caps the whole objective vector.
     pub fn objective_bounds(&self, sys: &SystemSpec) -> [f64; 3] {
         let u = self.utilization_bound(sys);
-        let achieved = u * sys.peak_flops();
-        [u, achieved / 1e9 / sys.price_usd(), achieved / 1e9 / sys.power_w()]
+        let achieved = (u * sys.peak_flops()).raw();
+        [u, achieved / 1e9 / sys.price_usd().raw(), achieved / 1e9 / sys.power_w().raw()]
     }
 }
 
@@ -159,8 +160,8 @@ mod tests {
         let p = BoundProfile::for_workload(&spec());
         let s = sys(chip::h100(), memory::hbm3());
         let [u, c, w] = p.objective_bounds(&s);
-        assert!((c - u * s.peak_flops() / 1e9 / s.price_usd()).abs() < 1e-9);
-        assert!((w - u * s.peak_flops() / 1e9 / s.power_w()).abs() < 1e-9);
+        assert!((c - u * s.peak_flops().raw() / 1e9 / s.price_usd().raw()).abs() < 1e-9);
+        assert!((w - u * s.peak_flops().raw() / 1e9 / s.power_w().raw()).abs() < 1e-9);
     }
 
     #[test]

@@ -40,7 +40,7 @@ use crate::system::{chip, topology, ChipSpec, ExecutionModel, MemoryTech, System
 use crate::util::error::Result;
 use crate::util::json::Json;
 use crate::util::threadpool::{parallel_map, parallel_map_workers};
-use crate::util::units::{GB, MB, TFLOPS};
+use crate::util::units::{Bytes, BytesPerSec, Dollars, FlopPerSec, Watts, GB, MB, TFLOPS};
 use crate::{ensure, err};
 
 /// One chip-axis value: a catalog part by name, or a parameterized
@@ -91,15 +91,17 @@ impl ChipCfg {
                 Ok(ChipSpec {
                     name: name.clone(),
                     tiles,
-                    tflop_per_tile: flops / tiles as f64,
-                    sram_bytes: sram_mb * MB,
+                    tflop_per_tile: FlopPerSec::new(flops / tiles as f64),
+                    sram_bytes: Bytes::new(sram_mb * MB),
                     execution: if *dataflow {
                         ExecutionModel::Dataflow
                     } else {
                         ExecutionModel::KernelByKernel
                     },
-                    power_w: power_w.unwrap_or_else(|| chip::costpower_estimate_w(flops)),
-                    price_usd: price_usd.unwrap_or_else(|| chip::costpower_estimate_usd(flops)),
+                    power_w: Watts::new(power_w.unwrap_or_else(|| chip::costpower_estimate_w(flops))),
+                    price_usd: Dollars::new(
+                        price_usd.unwrap_or_else(|| chip::costpower_estimate_usd(flops)),
+                    ),
                 })
             }
         }
@@ -182,11 +184,11 @@ impl MemCfg {
         let mut m = memory_by_name(&self.name)?;
         if let Some(b) = self.bandwidth_gbs {
             ensure!(b > 0.0, "memory '{}': bandwidth_gbs must be positive", self.name);
-            m.bandwidth = b * GB;
+            m.bandwidth = BytesPerSec::new(b * GB);
         }
         if let Some(c) = self.capacity_gb {
             ensure!(c > 0.0, "memory '{}': capacity_gb must be positive", self.name);
-            m.capacity = c * GB;
+            m.capacity = Bytes::new(c * GB);
         }
         Ok(m)
     }
@@ -755,8 +757,8 @@ mod tests {
         let c = custom.build().unwrap();
         assert_eq!(c.tiles, 512);
         assert_eq!(c.execution, ExecutionModel::KernelByKernel);
-        assert_eq!(c.power_w, 111.0);
-        assert!(c.price_usd > 0.0, "price falls back to the Fig. 9 estimate");
+        assert_eq!(c.power_w, Watts::new(111.0));
+        assert!(c.price_usd > Dollars::ZERO, "price falls back to the Fig. 9 estimate");
         assert_eq!(ChipCfg::from_json(&custom.to_json()).unwrap(), custom);
 
         assert!(ChipCfg::named("z80").build().is_err());
@@ -768,7 +770,7 @@ mod tests {
         let m = MemCfg { name: "ddr4".into(), bandwidth_gbs: Some(300.0), capacity_gb: None };
         let built = m.build().unwrap();
         assert_eq!(built.name, "DDR4");
-        assert_eq!(built.bandwidth, 300.0 * GB);
+        assert_eq!(built.bandwidth.raw(), 300.0 * GB);
         assert_eq!(MemCfg::from_json(&m.to_json()).unwrap(), m);
         assert_eq!(MemCfg::from_json(&Json::from("hbm3")).unwrap(), MemCfg::named("hbm3"));
         assert!(MemCfg::named("sram9000").build().is_err());
@@ -795,7 +797,7 @@ mod tests {
         let f22 = SearchSpace::fig22_grid().candidates().unwrap();
         assert_eq!(f22.len(), 15);
         for c in &f22 {
-            assert_eq!(c.sys.memory.capacity, 1000.0 * GB);
+            assert_eq!(c.sys.memory.capacity.raw(), 1000.0 * GB);
         }
     }
 

@@ -153,7 +153,7 @@ impl FabricGraph {
 
     fn add_link(&mut self, src: usize, dst: usize, d: &Dim) {
         let id = self.links.len() as u32;
-        self.links.push(Link { src, dst, bw: d.link_bw, latency: d.latency });
+        self.links.push(Link { src, dst, bw: d.link_bw.raw(), latency: d.latency.raw() });
         self.adj[src].push(id);
         self.radj[dst].push(id);
         let prev = self.link_ix.insert((src, dst), id);

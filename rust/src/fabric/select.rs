@@ -137,7 +137,7 @@ pub fn calibrate(t: &Topology, opts: &CalibrateOpts) -> Calibration {
         for &coll in &opts.colls {
             let mut pts = Vec::with_capacity(opts.payloads.len());
             for &s in &opts.payloads {
-                let ana = collective::time_hier(coll, s, &dim_refs);
+                let ana = collective::time_hier(coll, crate::util::units::Bytes::new(s), &dim_refs).raw();
                 if ana <= 0.0 {
                     continue;
                 }

@@ -183,9 +183,9 @@ impl S<'_> {
             let s = &mut self.st[i];
             s.path = path;
             s.pkts_left = n_pkts;
-            s.pkt_bytes = bytes / n_pkts as f64;
+            s.pkt_bytes = bytes / f64::from(n_pkts);
         }
-        self.packets += n_pkts as u64;
+        self.packets += u64::from(n_pkts);
         for _ in 0..n_pkts {
             self.push(t, i as u32, src as u32, 0);
         }
@@ -358,7 +358,8 @@ mod tests {
             for bytes in [1e6, 64e6] {
                 let r = sim_ring_ar(k, bytes);
                 let d = topology::Dim::new(topology::DimKind::Ring, k, &nvlink4());
-                let ana = collective::time(Collective::AllReduce, bytes, &d);
+                let payload = crate::util::units::Bytes::new(bytes);
+                let ana = collective::time(Collective::AllReduce, payload, &d).raw();
                 assert!(
                     (r.time - ana).abs() / ana < 1e-9,
                     "k={k} bytes={bytes}: sim {} vs ana {ana}",
@@ -423,7 +424,7 @@ mod tests {
         let r = simulate(&g, &s, &SimConfig::default());
         // 0 → 7 is one wraparound hop on the ring
         let d = topology::Dim::new(topology::DimKind::Ring, 8, &nvlink4());
-        let ana = collective::time(Collective::P2P, 1e7, &d);
+        let ana = collective::time(Collective::P2P, crate::util::units::Bytes::new(1e7), &d).raw();
         assert!((r.time - ana).abs() / ana < 1e-9, "sim {} ana {ana}", r.time);
     }
 }

@@ -41,7 +41,7 @@ pub fn sn10_system(topo_name: &str) -> Result<SystemSpec> {
         other => bail!("unknown §VII topology '{other}' (expected ring8|torus4x2)"),
     };
     let mut mem = memory::ddr4();
-    mem.capacity = 3e12; // SN10 pairs with large DDR (§VII: "large-capacity")
+    mem.capacity = crate::util::units::Bytes::new(3e12); // SN10 pairs with large DDR (§VII: "large-capacity")
     Ok(SystemSpec::new(chip::sn10(), mem, link, topo))
 }
 
@@ -119,7 +119,7 @@ fn opts_net_total(
     sys: &SystemSpec,
 ) -> f64 {
     // network bytes equivalent: t_net × link bandwidth
-    intra.partitions.iter().map(|p| p.t_net).sum::<f64>() * sys.link.bandwidth
+    intra.partitions.iter().map(|p| p.t_net).sum::<f64>() * sys.link.bandwidth.raw()
 }
 
 /// All four §VII mappings in Table VI order. Errors (rather than panicking
@@ -161,14 +161,20 @@ pub fn fig18_table6() -> Result<String> {
         &["Mapping", "OI_mem (FLOP/B)", "OI_net (FLOP/B)", "achieved", "attainable", "bound"],
     );
     for m in &maps {
-        let p = rl.point(&m.name, m.flops, m.dram_bytes, m.net_bytes, m.time);
+        let p = rl.point(
+            &m.name,
+            crate::util::units::Flop::new(m.flops),
+            crate::util::units::Bytes::new(m.dram_bytes),
+            crate::util::units::Bytes::new(m.net_bytes),
+            crate::util::units::Seconds::new(m.time),
+        );
         let att = rl.attainable(p.oi_mem, p.oi_net);
         t18.row(&[
             m.name.clone(),
             format!("{:.1}", p.oi_mem),
             format!("{:.1}", p.oi_net),
             crate::util::units::fmt_flops(p.achieved),
-            crate::util::units::fmt_flops(att),
+            crate::util::units::fmt_flops(att.raw()),
             format!("{:?}", rl.bound(p.oi_mem, p.oi_net)),
         ]);
     }
@@ -271,7 +277,13 @@ mod tests {
         let sys = sn10_system("ring8").unwrap();
         let rl = crate::roofline::Roofline::of_system(&sys);
         let m = &maps[0];
-        let p = rl.point(&m.name, m.flops, m.dram_bytes, m.net_bytes, m.time);
+        let p = rl.point(
+            &m.name,
+            crate::util::units::Flop::new(m.flops),
+            crate::util::units::Bytes::new(m.dram_bytes),
+            crate::util::units::Bytes::new(m.net_bytes),
+            crate::util::units::Seconds::new(m.time),
+        );
         assert_eq!(rl.bound(p.oi_mem, p.oi_net), crate::roofline::Bound::Memory);
     }
 

@@ -37,7 +37,9 @@ pub fn fig_fabric() -> String {
         let g = fabric::FabricGraph::new(&topo);
         let group: Vec<usize> = (0..topo.n_chips()).collect();
         let dims: Vec<&Dim> = topo.dims.iter().collect();
-        let ana = collective::time_hier(Collective::AllReduce, bytes, &dims);
+        let ana =
+            collective::time_hier(Collective::AllReduce, crate::util::units::Bytes::new(bytes), &dims)
+                .raw();
         let b = fabric::best(&g, &group, Collective::AllReduce, bytes, &cfg)
             .expect("every topology runs at least one algorithm");
         t.row(&[
@@ -48,7 +50,7 @@ pub fn fig_fabric() -> String {
             format!("{:.2}x", b.time / ana),
             format!("{:.0}%", b.max_link_util * 100.0),
             format!("{}", b.msgs),
-            format!("{:.1} TB/s", topo.bisection_bytes_per_s() / 1e12),
+            format!("{:.1} TB/s", topo.bisection_bytes_per_s().raw() / 1e12),
         ]);
     }
     let mut out = t.render();
@@ -83,7 +85,9 @@ mod tests {
         let g = fabric::FabricGraph::new(&topo);
         let group: Vec<usize> = (0..64).collect();
         let dims: Vec<&topology::Dim> = topo.dims.iter().collect();
-        let ana = collective::time_hier(Collective::AllReduce, 64e6, &dims);
+        let ana =
+            collective::time_hier(Collective::AllReduce, crate::util::units::Bytes::new(64e6), &dims)
+                .raw();
         let b = fabric::best(&g, &group, Collective::AllReduce, 64e6, &SimConfig::default())
             .unwrap();
         assert!(b.time > 2.0 * ana, "cube-mesh gap vanished: sim {} vs ana {ana}", b.time);

@@ -22,8 +22,13 @@ pub(crate) use optimizer::optimize;
 use crate::graph::DataflowGraph;
 use crate::sharding::{self, ShardScheme};
 use crate::system::SystemSpec;
+use crate::util::units::{Bytes, Flop, Seconds};
 
 /// Per-kernel / per-tensor latency vectors of the §IV-B formulation.
+///
+/// These are raw `f64` seconds, not typed [`Seconds`]: the stage-DP and
+/// sharding solvers consume them as prefix-summable cost arrays (a solver
+/// boundary), so each entry is produced with `.raw()` from a typed time.
 #[derive(Debug, Clone)]
 pub struct LatencyVectors {
     /// h_c[i]: compute time of kernel i spread over the TP group (Eq. §IV-B.1).
@@ -39,14 +44,14 @@ pub struct LatencyVectors {
 /// Metrics of one pipeline stage under the performance model of Fig. 5.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct StageMetrics {
-    pub t_comp: f64,
-    pub t_net: f64,
-    pub t_p2p: f64,
+    pub t_comp: Seconds,
+    pub t_net: Seconds,
+    pub t_p2p: Seconds,
 }
 
 impl StageMetrics {
     /// Eq. 7: the critical time bottlenecking the stage.
-    pub fn t_cri(&self) -> f64 {
+    pub fn t_cri(&self) -> Seconds {
         self.t_comp.max(self.t_net).max(self.t_p2p)
     }
 }
@@ -60,8 +65,8 @@ pub struct InterChipMapping {
     /// Stage of each kernel (indices into topo order positions!).
     pub stage_of: Vec<usize>,
     pub stages: Vec<StageMetrics>,
-    /// max_i t_cri (the §IV objective; seconds per pipeline input).
-    pub t_cri: f64,
+    /// max_i t_cri (the §IV objective; time per pipeline input).
+    pub t_cri: Seconds,
     /// Latency vectors under the chosen schemes.
     pub vectors: LatencyVectors,
     /// Design-space size explored (for the paper's O(10^x) accounting).
@@ -138,9 +143,12 @@ pub fn latency_vectors(
         // §IV-B.1: FLOP / (n_tp · t_lim · t_flop); a replicated scheme does
         // not divide its compute (flops_factor = 1), a sharded one divides
         // by tp (flops_factor = 1/tp) — per-chip time either way.
-        h_c.push(k.flops * s.flops_factor / chip_flops);
+        // Flop / FlopPerSec = Seconds, flattened to raw for the solvers.
+        h_c.push((Flop::new(k.flops * s.flops_factor) / chip_flops).raw());
         let out_bytes = kernel_out_bytes(g, crate::graph::KernelId(i));
-        h_n.push(sharding::inherent_time_model(model, s, out_bytes, k.weight_bytes, &tp_dims));
+        h_n.push(
+            sharding::inherent_time_model(model, s, out_bytes, k.weight_bytes, &tp_dims).raw(),
+        );
     }
     let _ = tp; // degree itself is folded into flops_factor
 
@@ -149,17 +157,22 @@ pub fn latency_vectors(
     for t in &g.tensors {
         let from = scheme_of(g, scheme_idx, t.src.0, tp);
         let to = scheme_of(g, scheme_idx, t.dst.0, tp);
-        h_m.push(sharding::conversion_time_model(
-            model,
-            from.out_layout,
-            to.in_layout,
-            t.bytes,
-            &tp_dims,
-        ));
+        h_m.push(
+            sharding::conversion_time_model(
+                model,
+                from.out_layout,
+                to.in_layout,
+                t.bytes,
+                &tp_dims,
+            )
+            .raw(),
+        );
         // p2p across pipeline stages: the (sharded) tensor moves once
         let sharded = t.bytes * from.out_bytes_factor;
         h_p.push(if plan.pp > 1 {
-            model.time_hier(crate::collective::Collective::P2P, sharded, &pp_dims)
+            model
+                .time_hier(crate::collective::Collective::P2P, Bytes::new(sharded), &pp_dims)
+                .raw()
         } else {
             0.0
         });
@@ -244,8 +257,12 @@ mod tests {
 
     #[test]
     fn stage_metrics_critical_time() {
-        let m = StageMetrics { t_comp: 3.0, t_net: 5.0, t_p2p: 1.0 };
-        assert_eq!(m.t_cri(), 5.0);
+        let m = StageMetrics {
+            t_comp: Seconds::new(3.0),
+            t_net: Seconds::new(5.0),
+            t_p2p: Seconds::new(1.0),
+        };
+        assert_eq!(m.t_cri(), Seconds::new(5.0));
     }
 
     #[test]

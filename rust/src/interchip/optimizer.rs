@@ -6,6 +6,7 @@ use crate::graph::DataflowGraph;
 use crate::sharding;
 use crate::solver;
 use crate::system::SystemSpec;
+use crate::util::units::Seconds;
 
 /// Options for `optimize`.
 #[derive(Debug, Clone)]
@@ -134,7 +135,8 @@ pub fn select_sharding(
                 .iter()
                 .map(|s| {
                     sharding::inherent_time_model(model, s, out_bytes, k.weight_bytes, &tp_dims)
-                        + k.flops * s.flops_factor / chip_flops
+                        .raw()
+                        + k.flops * s.flops_factor / chip_flops.raw()
                         + k.weight_bytes * s.weight_factor * 1e-24
                 })
                 .collect()
@@ -158,6 +160,7 @@ pub fn select_sharding(
                                 t.bytes,
                                 &tp_dims,
                             )
+                            .raw()
                         })
                         .collect()
                 })
@@ -212,7 +215,7 @@ fn partition_stages(
     vectors: &super::LatencyVectors,
     order: &[crate::graph::KernelId],
     opts: &InterChipOptions,
-) -> Option<(f64, Vec<usize>, Vec<StageMetrics>)> {
+) -> Option<(Seconds, Vec<usize>, Vec<StageMetrics>)> {
     let n = g.n_kernels();
     let pp = plan.pp;
     // topo position of each kernel
@@ -247,7 +250,7 @@ fn partition_stages(
         })
         .collect();
 
-    let d_cap = sys.memory.capacity;
+    let d_cap = sys.memory.capacity.raw();
     let state_factor = opts.state_bytes_per_weight_byte;
     let cost_fn = |a: usize, b: usize| -> f64 {
         // per-chip training state of this stage must fit DRAM
@@ -289,19 +292,19 @@ fn partition_stages(
     let mut stages = vec![StageMetrics::default(); n_stages];
     for (si, &start) in bounds.iter().enumerate() {
         let end = bounds.get(si + 1).copied().unwrap_or(n);
-        stages[si].t_comp = pre_c[end] - pre_c[start];
-        stages[si].t_net = pre_n[end] - pre_n[start];
+        stages[si].t_comp = Seconds::new(pre_c[end] - pre_c[start]);
+        stages[si].t_net = Seconds::new(pre_n[end] - pre_n[start]);
         if pp > 1 {
             for &(s, d, h) in &spans {
                 let alive = s < end && d >= start;
                 let inside = s >= start && d < end;
                 if alive && !inside {
-                    stages[si].t_p2p += h;
+                    stages[si].t_p2p += Seconds::new(h);
                 }
             }
         }
     }
-    Some((t_cri, stage_of, stages))
+    Some((Seconds::new(t_cri), stage_of, stages))
 }
 
 #[cfg(test)]
@@ -309,6 +312,7 @@ mod tests {
     use super::*;
     use crate::graph::gpt::{gpt3_175b, gpt_coarse_graph, gpt_layer_graph};
     use crate::system::{chip, interconnect, memory, topology, SystemSpec};
+    use crate::util::units::Bytes;
 
     fn sn10_ring8() -> SystemSpec {
         SystemSpec::new(
@@ -364,7 +368,7 @@ mod tests {
             scheme_idx: hand.clone(),
             stage_of: vec![0; g.n_kernels()],
             stages: vec![],
-            t_cri: 0.0,
+            t_cri: Seconds::ZERO,
             vectors: crate::interchip::latency_vectors(&g, &sys, plan, &hand),
             space_log10: 0.0,
         };
@@ -399,7 +403,7 @@ mod tests {
         let m = optimize(&g, &sys, &opts).expect("mapping");
         assert_eq!(m.stages.len(), 12);
         // 96 layers over 12 stages: 8 per stage, balanced compute
-        let comps: Vec<f64> = m.stages.iter().map(|s| s.t_comp).collect();
+        let comps: Vec<f64> = m.stages.iter().map(|s| s.t_comp.raw()).collect();
         let (min, max) = comps
             .iter()
             .fold((f64::INFINITY, 0.0f64), |(lo, hi), &c| (lo.min(c), hi.max(c)));
@@ -417,7 +421,7 @@ mod tests {
             &InterChipOptions { force_degrees: Some((8, 1, 1)), ..Default::default() },
         )
         .unwrap();
-        assert!(free.t_cri <= forced.t_cri + 1e-12);
+        assert!(free.t_cri <= forced.t_cri + Seconds::new(1e-12));
     }
 
     #[test]
@@ -425,7 +429,7 @@ mod tests {
         // 1T model on 8 chips with tiny DRAM: nothing fits
         let g = gpt_coarse_graph(&crate::graph::gpt::gpt3_1t(), 1.0);
         let mut sys = sn10_ring8();
-        sys.memory.capacity = 1e9; // 1 GB
+        sys.memory.capacity = Bytes::new(1e9); // 1 GB
         let m = optimize(&g, &sys, &InterChipOptions::default());
         assert!(m.is_none());
     }

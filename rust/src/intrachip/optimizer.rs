@@ -217,7 +217,7 @@ fn segment_metrics(
     let f_eff = &pre_feff[a..=b];
     let fe: Vec<f64> = (0..len).map(|i| f_eff[i + 1] - f_eff[i]).collect();
     let (_alloc, crit) = allocate_tiles(&fe, chip.tiles)?;
-    let t_comp = crit / chip.tflop_per_tile / exec_eff;
+    let t_comp = crit / chip.tflop_per_tile.raw() / exec_eff;
 
     // SRAM: intra-partition tensors (matrix B) + resident weights.
     let mut sram_tensors = 0.0;
@@ -240,8 +240,8 @@ fn segment_metrics(
         }
     }
     let weights = pre_w[b] - pre_w[a];
-    let sram_free = (chip.sram_bytes - sram_tensors).max(0.0);
-    if sram_tensors > chip.sram_bytes {
+    let sram_free = (chip.sram_bytes.raw() - sram_tensors).max(0.0);
+    if sram_tensors > chip.sram_bytes.raw() {
         return None; // streaming tensors can't be spilled in a fused pipeline
     }
     // Fig. 2D semantics: kernel-by-kernel execution loads the kernel's
@@ -254,7 +254,7 @@ fn segment_metrics(
     };
     dram_traffic += weight_stream;
 
-    let t_mem = dram_traffic / memory.bandwidth;
+    let t_mem = dram_traffic / memory.bandwidth.raw();
     let t_net = pre_net[b] - pre_net[a];
     let _ = (g, order);
     Some(PartitionMetrics { t_comp, t_mem, t_net, sram_used, dram_traffic })
@@ -319,7 +319,7 @@ mod tests {
     fn sram_constraint_limits_fusion() {
         let g = sharded_layer();
         let mut tiny = chip::sn10();
-        tiny.sram_bytes = 10e6; // 10 MB: scores tile alone won't fit fused
+        tiny.sram_bytes = crate::util::units::Bytes::new(10e6); // 10 MB: scores tile alone won't fit fused
         let ddr = memory::ddr4();
         let small = optimize_intra(&g, &tiny, &ddr, &IntraChipOptions::default()).unwrap();
         let big = optimize_intra(&g, &chip::sn10(), &ddr, &IntraChipOptions::default()).unwrap();

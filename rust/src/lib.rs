@@ -33,6 +33,7 @@ pub mod figures;
 pub mod graph;
 pub mod interchip;
 pub mod intrachip;
+pub mod lint;
 pub mod pipeline;
 pub mod roofline;
 pub mod runtime;

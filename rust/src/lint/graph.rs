@@ -1,0 +1,290 @@
+//! Graph-level lint rules (`DF-G001`..`DF-G004`) over the dataflow-graph
+//! IR, plus the `{"graph": {...}}` side format `dfmodel lint` accepts for
+//! linting hand-written graphs without a scenario around them.
+//!
+//! Rule order is deliberate: reference checks (G001) run first and gate
+//! the cycle check (G002), because `topo_order` indexes kernel ids and
+//! would panic on a dangling reference.
+
+use super::LintReport;
+use crate::bail;
+use crate::graph::{DataflowGraph, Kernel, KernelId, KernelKind, Tensor};
+use crate::util::error::Result;
+use crate::util::json::Json;
+
+/// Structural and dimensional rules over one dataflow graph
+/// (`DF-G001`..`DF-G004`).
+pub fn lint_graph(g: &DataflowGraph) -> LintReport {
+    let mut r = LintReport::default();
+    lint_graph_into(g, &mut r);
+    r
+}
+
+/// [`lint_graph`], appending into an existing report (the scenario driver).
+pub(crate) fn lint_graph_into(g: &DataflowGraph, r: &mut LintReport) {
+    let gname = if g.name.is_empty() { "graph" } else { g.name.as_str() };
+    if g.kernels.is_empty() {
+        r.error("DF-G001", gname, "graph has no kernels");
+        return;
+    }
+    let mut refs_ok = true;
+    for t in &g.tensors {
+        for (end, id) in [("src", t.src), ("dst", t.dst)] {
+            if id.0 >= g.kernels.len() {
+                refs_ok = false;
+                r.error(
+                    "DF-G001",
+                    format!("tensor '{}'", t.name),
+                    format!(
+                        "{end} kernel id {} is out of range (the graph has {} kernel(s))",
+                        id.0,
+                        g.kernels.len()
+                    ),
+                );
+            }
+        }
+        if !(t.bytes.is_finite() && t.bytes > 0.0) {
+            r.error(
+                "DF-G003",
+                format!("tensor '{}'", t.name),
+                format!("tensor bytes must be positive and finite, got {}", t.bytes),
+            );
+        }
+    }
+    for k in &g.kernels {
+        lint_kernel(k, r);
+    }
+    if !refs_ok {
+        return; // topo_order would index out of range
+    }
+    let mut self_loop = false;
+    for t in &g.tensors {
+        if t.src == t.dst {
+            self_loop = true;
+            r.error(
+                "DF-G002",
+                format!("tensor '{}'", t.name),
+                format!("self-loop: src and dst are both kernel id {}", t.src.0),
+            );
+        }
+    }
+    if !self_loop {
+        if let Err(e) = g.topo_order() {
+            r.error("DF-G002", gname, e.to_string());
+        }
+    }
+}
+
+/// DF-G004 on one kernel: kind dimensions, flops, and weights must be
+/// finite; dimensions positive, flops/weights nonnegative.
+fn lint_kernel(k: &Kernel, r: &mut LintReport) {
+    let ctx = format!("kernel '{}'", k.name);
+    for (dim, v) in kind_dims(&k.kind) {
+        if !(v.is_finite() && v > 0.0) {
+            r.error(
+                "DF-G004",
+                ctx.as_str(),
+                format!("{dim} must be positive and finite, got {v}"),
+            );
+        }
+    }
+    if let KernelKind::Elementwise { flop_per_elem, .. } = k.kind {
+        if !(flop_per_elem.is_finite() && flop_per_elem >= 0.0) {
+            r.error(
+                "DF-G004",
+                ctx.as_str(),
+                format!("flop_per_elem must be nonnegative and finite, got {flop_per_elem}"),
+            );
+        }
+    }
+    for (field, v) in [("flops", k.flops), ("weight_bytes", k.weight_bytes)] {
+        if !(v.is_finite() && v >= 0.0) {
+            r.error(
+                "DF-G004",
+                ctx.as_str(),
+                format!("{field} must be nonnegative and finite, got {v}"),
+            );
+        }
+    }
+}
+
+/// The positive-dimension fields of a kernel kind, by name.
+fn kind_dims(kind: &KernelKind) -> Vec<(&'static str, f64)> {
+    match *kind {
+        KernelKind::Gemm { b, m, k, n } => vec![("b", b), ("m", m), ("k", k), ("n", n)],
+        KernelKind::Softmax { rows, cols } => vec![("rows", rows), ("cols", cols)],
+        KernelKind::Elementwise { elems, .. } => vec![("elems", elems)],
+        KernelKind::LayerNorm { rows, cols } => vec![("rows", rows), ("cols", cols)],
+        KernelKind::Embedding { lookups, dim } => vec![("lookups", lookups), ("dim", dim)],
+        KernelKind::Fft { points, batch } => vec![("points", points), ("batch", batch)],
+        KernelKind::Transpose { elems } => vec![("elems", elems)],
+        KernelKind::FusedLayer { tokens, width } => vec![("tokens", tokens), ("width", width)],
+    }
+}
+
+/// Parse the `{"graph": ...}` side format: `name`, a `kernels` array
+/// (`{name, kind, <dims>, flops?, weight_bytes?}` — dims default to 1,
+/// `flops` defaults to the kind's formula) and a `tensors` array
+/// (`{name, src, dst, bytes}` with kernel *indices*; out-of-range indices
+/// parse fine so DF-G001 can report them).
+pub fn graph_from_json(j: &Json) -> Result<DataflowGraph> {
+    let name = j.get("name").and_then(|v| v.as_str()).unwrap_or("graph").to_string();
+    let Some(kjs) = j.get("kernels").and_then(|v| v.as_array()) else {
+        bail!("graph needs a 'kernels' array");
+    };
+    let mut kernels = Vec::with_capacity(kjs.len());
+    for (i, kj) in kjs.iter().enumerate() {
+        kernels.push(kernel_from_json(kj, i)?);
+    }
+    let mut tensors = Vec::new();
+    if let Some(tjs) = j.get("tensors").and_then(|v| v.as_array()) {
+        for (i, tj) in tjs.iter().enumerate() {
+            let end = |key: &str| -> Result<KernelId> {
+                match tj.get(key).and_then(|v| v.as_usize()) {
+                    Some(id) => Ok(KernelId(id)),
+                    None => bail!("tensor {i}: '{key}' must be a kernel index"),
+                }
+            };
+            tensors.push(Tensor {
+                name: tj
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .map_or_else(|| format!("t{i}"), str::to_string),
+                src: end("src")?,
+                dst: end("dst")?,
+                bytes: tj.get("bytes").and_then(|v| v.as_f64()).unwrap_or(1.0),
+            });
+        }
+    }
+    Ok(DataflowGraph { name, kernels, tensors })
+}
+
+/// One kernel of the side format; `i` names anonymous kernels `k{i}`.
+fn kernel_from_json(kj: &Json, i: usize) -> Result<Kernel> {
+    let f = |key: &str, dft: f64| kj.get(key).and_then(|v| v.as_f64()).unwrap_or(dft);
+    let kind = match kj.get("kind").and_then(|v| v.as_str()).unwrap_or("gemm") {
+        "gemm" => {
+            KernelKind::Gemm { b: f("b", 1.0), m: f("m", 1.0), k: f("k", 1.0), n: f("n", 1.0) }
+        }
+        "softmax" => KernelKind::Softmax { rows: f("rows", 1.0), cols: f("cols", 1.0) },
+        "elementwise" => KernelKind::Elementwise {
+            elems: f("elems", 1.0),
+            flop_per_elem: f("flop_per_elem", 1.0),
+        },
+        "layernorm" => KernelKind::LayerNorm { rows: f("rows", 1.0), cols: f("cols", 1.0) },
+        "embedding" => KernelKind::Embedding { lookups: f("lookups", 1.0), dim: f("dim", 1.0) },
+        "fft" => KernelKind::Fft { points: f("points", 1.0), batch: f("batch", 1.0) },
+        "transpose" => KernelKind::Transpose { elems: f("elems", 1.0) },
+        "fused_layer" => {
+            KernelKind::FusedLayer { tokens: f("tokens", 1.0), width: f("width", 1.0) }
+        }
+        other => bail!(
+            "kernel {i}: unknown kind '{other}' (known: gemm softmax elementwise \
+             layernorm embedding fft transpose fused_layer)"
+        ),
+    };
+    Ok(Kernel {
+        name: kj
+            .get("name")
+            .and_then(|v| v.as_str())
+            .map_or_else(|| format!("k{i}"), str::to_string),
+        flops: kj.get("flops").and_then(|v| v.as_f64()).unwrap_or_else(|| kind.flops()),
+        weight_bytes: f("weight_bytes", 0.0),
+        kind,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn two_kernel_graph() -> DataflowGraph {
+        let mut b = GraphBuilder::new("t");
+        let a = b.kernel("a", KernelKind::Gemm { b: 1.0, m: 2.0, k: 2.0, n: 2.0 }, 0.0);
+        let c = b.kernel("c", KernelKind::Softmax { rows: 2.0, cols: 2.0 }, 0.0);
+        b.tensor("ac", a, c, 16.0);
+        b.build()
+    }
+
+    #[test]
+    fn valid_graph_is_clean() {
+        assert!(lint_graph(&two_kernel_graph()).is_clean());
+    }
+
+    #[test]
+    fn dangling_reference_is_g001_and_gates_the_cycle_check() {
+        let mut g = two_kernel_graph();
+        g.tensors.push(Tensor {
+            name: "bad".into(),
+            src: KernelId(0),
+            dst: KernelId(9),
+            bytes: 8.0,
+        });
+        let r = lint_graph(&g);
+        assert_eq!(r.codes(), vec!["DF-G001"], "{:?}", r.diags);
+    }
+
+    #[test]
+    fn self_loop_and_cycle_are_g002() {
+        let mut g = two_kernel_graph();
+        g.tensors.push(Tensor {
+            name: "loop".into(),
+            src: KernelId(1),
+            dst: KernelId(1),
+            bytes: 8.0,
+        });
+        assert_eq!(lint_graph(&g).codes(), vec!["DF-G002"]);
+        let mut g = two_kernel_graph();
+        g.tensors.push(Tensor {
+            name: "back".into(),
+            src: KernelId(1),
+            dst: KernelId(0),
+            bytes: 8.0,
+        });
+        assert_eq!(lint_graph(&g).codes(), vec!["DF-G002"]);
+    }
+
+    #[test]
+    fn zero_tensor_bytes_is_g003() {
+        let mut g = two_kernel_graph();
+        g.tensors[0].bytes = 0.0;
+        let r = lint_graph(&g);
+        assert_eq!(r.codes(), vec!["DF-G003"]);
+        assert!(r.diags[0].context.contains("ac"));
+    }
+
+    #[test]
+    fn bad_kernel_dims_are_g004() {
+        let mut g = two_kernel_graph();
+        g.kernels[0].kind = KernelKind::Gemm { b: 1.0, m: 0.0, k: 2.0, n: f64::NAN };
+        let r = lint_graph(&g);
+        assert_eq!(r.codes(), vec!["DF-G004"]);
+        assert_eq!(r.n_errors(), 2, "{:?}", r.diags);
+    }
+
+    #[test]
+    fn side_format_parses_and_defaults() {
+        let j = Json::parse(
+            r#"{"name": "mini",
+                "kernels": [{"name": "mm", "kind": "gemm", "m": 4, "k": 4, "n": 4},
+                            {"kind": "softmax", "rows": 4, "cols": 4}],
+                "tensors": [{"src": 0, "dst": 1, "bytes": 64}]}"#,
+        )
+        .unwrap();
+        let g = graph_from_json(&j).unwrap();
+        assert_eq!(g.name, "mini");
+        assert_eq!(g.kernels[0].flops, 2.0 * 4.0 * 4.0 * 4.0);
+        assert_eq!(g.kernels[1].name, "k1");
+        assert_eq!(g.tensors[0].name, "t0");
+        assert!(lint_graph(&g).is_clean());
+    }
+
+    #[test]
+    fn side_format_rejects_unknown_kind_and_missing_ends() {
+        let j = Json::parse(r#"{"kernels": [{"kind": "conv9d"}]}"#).unwrap();
+        assert!(graph_from_json(&j).is_err());
+        let j = Json::parse(r#"{"kernels": [{}], "tensors": [{"src": 0}]}"#).unwrap();
+        assert!(graph_from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,632 @@
+//! Static analysis for scenarios, graphs, and mappings — the engine behind
+//! `dfmodel lint` and the opt-out pre-flight gate in
+//! [`Scenario::evaluate`](crate::api::Scenario::evaluate).
+//!
+//! Every rule has a stable `DF-XNNN` code (`G` graph, `S` system, `M`
+//! mapping, `C` catch-all) and a severity: **errors** describe inputs that
+//! would fail or panic at evaluation time and block `evaluate`; **warnings**
+//! describe suspicious-but-evaluable inputs and ride along in the
+//! [`Report`](crate::api::Report)'s `lint` section. The catalog lives in
+//! `DESIGN.md` ("Static analysis"); every rule has a fixture under
+//! `examples/scenarios/bad/` that triggers exactly its code.
+//!
+//! ```text
+//!   DF-C001  error  scenario fails semantic validation (check() catch-all)
+//!   DF-G001  error  tensor references a kernel id out of range / empty graph
+//!   DF-G002  error  self-loop tensor or dependency cycle
+//!   DF-G003  error  tensor bytes not positive and finite
+//!   DF-G004  error  kernel dimensions/flops/weights not positive and finite
+//!   DF-S001  error  nonpositive size on a system axis (dims, overrides)
+//!   DF-S002  warn   memory-hierarchy inversion (link faster than DRAM, ...)
+//!   DF-S003  error  topology dims contradict the explicit chip count
+//!   DF-S004  warn   power/price override far off the Fig. 9 regression
+//!   DF-M001  error  forced TP*PP*DP degrees do not cover the chip count
+//!   DF-M002  error  serving TP*PP split does not cover the chip group
+//!   DF-M003  error  weights + KV cache exceed the group's device memory
+//!   DF-M004  warn   a kernel's weights oversubscribe dataflow-chip SRAM
+//! ```
+
+#![forbid(unsafe_code)]
+#![deny(missing_docs)]
+
+pub mod graph;
+
+pub use graph::{graph_from_json, lint_graph};
+
+use crate::api::scenario::BuiltWorkload;
+use crate::api::{ExploreOptions, Goal, Scenario, SystemCfg, TopologyCfg};
+use crate::explore::ChipCfg;
+use crate::system::{chip, ExecutionModel};
+use crate::util::json::Json;
+use crate::util::units::MB;
+
+/// How serious a diagnostic is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    /// Suspicious but evaluable; reported, never blocks evaluation.
+    Warning,
+    /// Would fail (or panic) at evaluation time; blocks `evaluate`.
+    Error,
+}
+
+impl Severity {
+    /// Lowercase name used in renderings and JSON (`warning` / `error`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// One lint finding: a stable code, a severity, the offending element, and
+/// a human-readable message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diag {
+    /// Stable diagnostic code (`DF-XNNN`); grep-able and CI-stable.
+    pub code: &'static str,
+    /// Error (blocks evaluation) or warning (reported only).
+    pub severity: Severity,
+    /// What the finding is about (kernel, field, or axis name).
+    pub context: String,
+    /// Human-readable explanation with the offending values.
+    pub message: String,
+}
+
+impl Diag {
+    /// One-line rendering: `error[DF-G001] tensor 't3': ...`.
+    pub fn render(&self) -> String {
+        format!("{}[{}] {}: {}", self.severity.name(), self.code, self.context, self.message)
+    }
+}
+
+/// The result of linting one scenario or graph: every finding, in rule
+/// order. `Default` is the clean (empty) report.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LintReport {
+    /// Every finding, errors and warnings interleaved in rule order.
+    pub diags: Vec<Diag>,
+}
+
+impl LintReport {
+    fn push(&mut self, severity: Severity, code: &'static str, context: String, message: String) {
+        self.diags.push(Diag { code, severity, context, message });
+    }
+
+    fn error(&mut self, code: &'static str, context: impl Into<String>, msg: impl Into<String>) {
+        self.push(Severity::Error, code, context.into(), msg.into());
+    }
+
+    fn warning(&mut self, code: &'static str, context: impl Into<String>, msg: impl Into<String>) {
+        self.push(Severity::Warning, code, context.into(), msg.into());
+    }
+
+    /// Number of error-severity findings.
+    pub fn n_errors(&self) -> usize {
+        self.diags.iter().filter(|d| d.severity == Severity::Error).count()
+    }
+
+    /// Number of warning-severity findings.
+    pub fn n_warnings(&self) -> usize {
+        self.diags.iter().filter(|d| d.severity == Severity::Warning).count()
+    }
+
+    /// True when at least one finding is an error (evaluation would be
+    /// blocked).
+    pub fn has_errors(&self) -> bool {
+        self.n_errors() > 0
+    }
+
+    /// True when there are no findings at all (not even warnings).
+    pub fn is_clean(&self) -> bool {
+        self.diags.is_empty()
+    }
+
+    /// The distinct codes present, in first-occurrence order.
+    pub fn codes(&self) -> Vec<&'static str> {
+        let mut seen = Vec::new();
+        for d in &self.diags {
+            if !seen.contains(&d.code) {
+                seen.push(d.code);
+            }
+        }
+        seen
+    }
+
+    /// `clean` / `2 error(s), 1 warning(s)` one-phrase summary.
+    pub fn summary(&self) -> String {
+        if self.is_clean() {
+            return "clean".into();
+        }
+        format!("{} error(s), {} warning(s)", self.n_errors(), self.n_warnings())
+    }
+
+    /// Multi-line rendering: one line per finding plus a summary line.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for d in &self.diags {
+            s.push_str(&d.render());
+            s.push('\n');
+        }
+        s.push_str(&self.summary());
+        s.push('\n');
+        s
+    }
+
+    /// Machine-readable form: `{errors, warnings, diagnostics: [...]}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("errors", Json::from(self.n_errors())),
+            ("warnings", Json::from(self.n_warnings())),
+            (
+                "diagnostics",
+                Json::arr(self.diags.iter().map(|d| {
+                    Json::obj(vec![
+                        ("code", Json::from(d.code)),
+                        ("severity", Json::from(d.severity.name())),
+                        ("context", Json::from(d.context.as_str())),
+                        ("message", Json::from(d.message.as_str())),
+                    ])
+                })),
+            ),
+        ])
+    }
+}
+
+/// Lint one parsed JSON document: either the `{"graph": {...}}` side format
+/// (graph rules only) or a scenario object (the full rule set). Semantic
+/// parse failures surface as a `DF-C001` error instead of aborting, so
+/// `dfmodel lint` can report on files that `Scenario::parse` rejects.
+pub fn lint_json(j: &Json) -> LintReport {
+    if let Some(gj) = j.get("graph") {
+        let mut r = LintReport::default();
+        match graph::graph_from_json(gj) {
+            Ok(g) => graph::lint_graph_into(&g, &mut r),
+            Err(e) => r.error("DF-G001", "graph", format!("unparseable graph: {e}")),
+        }
+        return r;
+    }
+    match Scenario::from_json_unchecked(j) {
+        Ok(s) => lint_scenario(&s),
+        Err(e) => {
+            let mut r = LintReport::default();
+            r.error("DF-C001", "scenario", e.to_string());
+            r
+        }
+    }
+}
+
+/// Run every lint rule that applies to the scenario's goal. Pure analysis:
+/// nothing is evaluated, and nothing here panics on degenerate inputs (the
+/// zero-size topology pre-checks run *before* any catalog build).
+pub fn lint_scenario(s: &Scenario) -> LintReport {
+    let mut r = LintReport::default();
+    lint_topology(&s.system.topology, &mut r);
+    match s.goal {
+        Goal::Map => {
+            lint_system_hierarchy(&s.system, &mut r);
+            lint_forced_degrees(s, &mut r);
+            lint_map_workload(s, &mut r);
+        }
+        Goal::Serve | Goal::Simulate => {
+            lint_system_hierarchy(&s.system, &mut r);
+            lint_serving_split(s, &mut r);
+            if s.goal == Goal::Serve {
+                lint_kv_capacity(s, &mut r);
+            }
+        }
+        Goal::Plan | Goal::Fabric => {}
+        Goal::Explore => lint_explore_axes(&s.explore, &mut r),
+    }
+    // DF-C001 catch-all: anything check() rejects that no specific rule
+    // claimed. Skipped once an error is recorded — both to keep one root
+    // cause per report and because check() builds the system, which would
+    // panic on the degenerate inputs the rules above just flagged.
+    if !r.has_errors() {
+        if let Err(e) = s.check() {
+            r.error("DF-C001", "scenario", e.to_string());
+        }
+    }
+    r
+}
+
+/// The chip count the topology description pins down, when it is
+/// well-formed: the explicit `chips` count, else the product of the dims.
+fn configured_chips(t: &TopologyCfg) -> Option<usize> {
+    match t.chips {
+        Some(n) if n >= 1 => Some(n),
+        Some(_) => None,
+        None if t.dims.is_empty() || t.dims.contains(&0) => None,
+        None => Some(t.dims.iter().product()),
+    }
+}
+
+/// DF-S001 (zero topology sizes) + DF-S003 (dims contradict `chips`).
+fn lint_topology(t: &TopologyCfg, r: &mut LintReport) {
+    for (i, &d) in t.dims.iter().enumerate() {
+        if d == 0 {
+            r.error(
+                "DF-S001",
+                format!("topology dim {i}"),
+                format!("'{}' dimension sizes must be >= 1 chip", t.kind),
+            );
+        }
+    }
+    if t.chips == Some(0) {
+        r.error("DF-S001", "topology chips", "the total chip count must be >= 1");
+    }
+    let Some(n) = t.chips.filter(|&n| n >= 1) else { return };
+    if t.dims.is_empty() || t.dims.contains(&0) {
+        return;
+    }
+    let prod: usize = t.dims.iter().product();
+    if prod != n {
+        r.error(
+            "DF-S003",
+            "topology",
+            format!(
+                "dims {:?} multiply to {prod} chip(s) but 'chips' says {n}; \
+                 drop one of the two",
+                t.dims
+            ),
+        );
+    }
+}
+
+/// DF-S002 (warning): the memory hierarchy is inverted — a link faster
+/// than the DRAM it drains, or SRAM at least as large as DRAM capacity.
+/// Evaluates fine, but the §IV/§V cost model assumes the usual ordering.
+fn lint_system_hierarchy(sys: &SystemCfg, r: &mut LintReport) {
+    use crate::api::scenario::{chip_by_name, link_by_name, memory_by_name};
+    let chip = chip_by_name(&sys.chip).ok();
+    let mem = memory_by_name(&sys.memory).ok();
+    let link = link_by_name(&sys.link).ok();
+    if let (Some(l), Some(m)) = (&link, &mem) {
+        if l.bandwidth > m.bandwidth {
+            r.warning(
+                "DF-S002",
+                "system",
+                format!(
+                    "link '{}' ({:.0} GB/s) is faster than memory '{}' ({:.0} GB/s); \
+                     the network would drain DRAM faster than it fills",
+                    sys.link,
+                    l.bandwidth.raw() / 1e9,
+                    sys.memory,
+                    m.bandwidth.raw() / 1e9
+                ),
+            );
+        }
+    }
+    if let (Some(c), Some(m)) = (&chip, &mem) {
+        if c.sram_bytes >= m.capacity {
+            r.warning(
+                "DF-S002",
+                "system",
+                format!(
+                    "chip '{}' SRAM ({:.0} MB) is at least memory '{}' capacity ({:.0} MB); \
+                     the on-chip tier should be the small one",
+                    sys.chip,
+                    c.sram_bytes.raw() / MB,
+                    sys.memory,
+                    m.capacity.raw() / MB
+                ),
+            );
+        }
+    }
+}
+
+/// DF-M001: forced (TP, PP, DP) degrees that are zero or do not multiply
+/// to the configured chip count can never match a feasible plan.
+fn lint_forced_degrees(s: &Scenario, r: &mut LintReport) {
+    let Some((tp, pp, dp)) = s.knobs.force_degrees else { return };
+    if tp == 0 || pp == 0 || dp == 0 {
+        r.error(
+            "DF-M001",
+            "options",
+            format!("forced degrees TP{tp} x PP{pp} x DP{dp} must all be >= 1"),
+        );
+        return;
+    }
+    let Some(n) = configured_chips(&s.system.topology) else { return };
+    if tp * pp * dp != n {
+        r.error(
+            "DF-M001",
+            "options",
+            format!(
+                "forced degrees TP{tp} x PP{pp} x DP{dp} use {} chip(s) but the \
+                 topology has {n}; no plan can match",
+                tp * pp * dp
+            ),
+        );
+    }
+}
+
+/// DF-M002: the serving TP×PP split must cover the chip group exactly.
+fn lint_serving_split(s: &Scenario, r: &mut LintReport) {
+    let Some(n) = configured_chips(&s.system.topology) else { return };
+    let (tp, pp) = (s.serving.tp, s.serving.pp);
+    if tp == 0 || pp == 0 || tp * pp != n {
+        r.error(
+            "DF-M002",
+            "serving",
+            format!(
+                "serving split TP{tp}xPP{pp} covers {} chip(s) but tp*pp must \
+                 equal the {n}-chip group",
+                tp * pp
+            ),
+        );
+    }
+}
+
+/// DF-M003: resident weights plus the KV cache at the requested batch and
+/// context must fit in the chip group's total device memory.
+fn lint_kv_capacity(s: &Scenario, r: &mut LintReport) {
+    use crate::api::scenario::memory_by_name;
+    let Ok(model) = s.workload.llama_config() else { return };
+    let Ok(mem) = memory_by_name(&s.system.memory) else { return };
+    let Some(n) = configured_chips(&s.system.topology) else { return };
+    let kv = s.serving.batch * s.serving.context * model.kv_bytes_per_token();
+    let need = model.weight_bytes() + kv;
+    let total = mem.capacity.raw() * n as f64;
+    if need > total {
+        r.error(
+            "DF-M003",
+            "serving",
+            format!(
+                "weights ({:.1} GB) + KV cache at batch {} x context {} ({:.1} GB) \
+                 exceed the {n}-chip group's {:.1} GB device memory",
+                model.weight_bytes() / 1e9,
+                s.serving.batch,
+                s.serving.context,
+                kv / 1e9,
+                total / 1e9
+            ),
+        );
+    }
+}
+
+/// `Map`-goal workload rules: the graph rules (DF-G001..G004) on the
+/// materialized dataflow graph, plus DF-M004 (SRAM oversubscription on
+/// dataflow chips). Name errors are left to the DF-C001 catch-all.
+fn lint_map_workload(s: &Scenario, r: &mut LintReport) {
+    use crate::api::scenario::chip_by_name;
+    let Ok(built) = s.workload.build(&s.knobs) else { return };
+    let g = match built {
+        BuiltWorkload::Gpt { cfg, batch } => crate::graph::gpt::gpt_layer_graph(&cfg, batch),
+        BuiltWorkload::Graph { graph, .. } => graph,
+    };
+    graph::lint_graph_into(&g, r);
+    let Ok(chip) = chip_by_name(&s.system.chip) else { return };
+    if !matches!(chip.execution, ExecutionModel::Dataflow) {
+        return;
+    }
+    let Some(n) = configured_chips(&s.system.topology) else { return };
+    // most optimistic bound: even fully TP-sharded across all n chips, the
+    // heaviest kernel's weight shard must fit in one chip's SRAM
+    let heaviest = g.kernels.iter().max_by(|a, b| a.weight_bytes.total_cmp(&b.weight_bytes));
+    let Some(k) = heaviest else { return };
+    let per_chip = k.weight_bytes / n as f64;
+    if per_chip > chip.sram_bytes.raw() {
+        r.warning(
+            "DF-M004",
+            format!("kernel '{}'", k.name),
+            format!(
+                "holds {:.0} MB of weights per chip even sharded across all {n} \
+                 chip(s), over the {:.0} MB SRAM of dataflow chip '{}'; the fused \
+                 mapping will spill",
+                per_chip / MB,
+                chip.sram_bytes.raw() / MB,
+                s.system.chip
+            ),
+        );
+    }
+}
+
+/// Explore-axis rules: DF-S001 (nonpositive custom-chip/memory overrides,
+/// zero chip counts) and DF-S004 (power/price overrides far off the Fig. 9
+/// regression the rest of the catalog follows).
+fn lint_explore_axes(e: &ExploreOptions, r: &mut LintReport) {
+    for c in &e.chips {
+        let ChipCfg::Custom { name, compute_tflops, sram_mb, tiles, power_w, price_usd, .. } = c
+        else {
+            continue;
+        };
+        let ctx = format!("explore chip '{name}'");
+        if !(compute_tflops.is_finite() && *compute_tflops > 0.0) {
+            r.error(
+                "DF-S001",
+                ctx.as_str(),
+                format!("compute_tflops must be positive, got {compute_tflops}"),
+            );
+        }
+        if !(sram_mb.is_finite() && *sram_mb > 0.0) {
+            r.error("DF-S001", ctx.as_str(), format!("sram_mb must be positive, got {sram_mb}"));
+        }
+        if *tiles == Some(0) {
+            r.error("DF-S001", ctx.as_str(), "tiles must be >= 1");
+        }
+        for (field, v) in [("power_w", power_w), ("price_usd", price_usd)] {
+            let Some(v) = v else { continue };
+            if !(v.is_finite() && *v > 0.0) {
+                r.error(
+                    "DF-S001",
+                    ctx.as_str(),
+                    format!("{field} override must be positive, got {v}"),
+                );
+            }
+        }
+        if compute_tflops.is_finite() && *compute_tflops > 0.0 {
+            let flops = compute_tflops * 1e12;
+            let checks = [
+                ("power_w", power_w, chip::costpower_estimate_w(flops), "W"),
+                ("price_usd", price_usd, chip::costpower_estimate_usd(flops), "$"),
+            ];
+            for (field, v, est, unit) in checks {
+                let Some(v) = v.filter(|v| v.is_finite() && *v > 0.0) else { continue };
+                let ratio = (v / est).max(est / v);
+                if ratio > OUTLIER_RATIO {
+                    r.warning(
+                        "DF-S004",
+                        ctx.as_str(),
+                        format!(
+                            "{field} override {v:.0} {unit} is {ratio:.0}x off the Fig. 9 \
+                             regression estimate ({est:.0} {unit}) for {compute_tflops:.0} \
+                             TFLOPS; cost/power efficiency axes will be skewed"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+    for m in &e.mems {
+        let overrides = [("bandwidth_gbs", m.bandwidth_gbs), ("capacity_gb", m.capacity_gb)];
+        for (field, v) in overrides {
+            let Some(v) = v else { continue };
+            if !(v.is_finite() && v > 0.0) {
+                r.error(
+                    "DF-S001",
+                    format!("explore memory '{}'", m.name),
+                    format!("{field} override must be positive, got {v}"),
+                );
+            }
+        }
+    }
+    for (i, &c) in e.chip_counts.iter().enumerate() {
+        if c == 0 {
+            r.error("DF-S001", format!("chip_counts[{i}]"), "chip counts must be >= 1");
+        }
+    }
+}
+
+/// Overrides more than this factor off the Fig. 9 estimate draw DF-S004.
+/// The catalog's own worst case (H100 at ~14x the regression) stays
+/// comfortably inside, so only genuinely implausible overrides warn.
+const OUTLIER_RATIO: f64 = 30.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_scenarios_are_clean() {
+        for s in [Scenario::llm("gpt3-175b"), Scenario::llama("8b"), Scenario::hpl()] {
+            let r = lint_scenario(&s);
+            assert!(r.is_clean(), "{:?}: {:?}", s.goal, r.diags);
+        }
+    }
+
+    #[test]
+    fn zero_topology_dim_is_s001_not_a_panic() {
+        let mut s = Scenario::llm("gpt3-175b");
+        s.system.topology.dims = vec![0];
+        let r = lint_scenario(&s);
+        assert_eq!(r.codes(), vec!["DF-S001"], "{:?}", r.diags);
+        assert!(r.has_errors());
+    }
+
+    #[test]
+    fn dims_vs_chips_contradiction_is_s003() {
+        let mut s = Scenario::llm("gpt3-175b");
+        s.system.topology.dims = vec![4, 4];
+        s.system.topology.chips = Some(32);
+        let r = lint_scenario(&s);
+        assert_eq!(r.codes(), vec!["DF-S003"], "{:?}", r.diags);
+    }
+
+    #[test]
+    fn inverted_hierarchy_is_a_warning_only() {
+        let s = Scenario::llm("gpt3-175b").on(SystemCfg::new("h100", "ddr4", "nvlink4").ring(8));
+        let r = lint_scenario(&s);
+        assert_eq!(r.codes(), vec!["DF-S002"], "{:?}", r.diags);
+        assert!(!r.has_errors());
+        assert_eq!(r.n_warnings(), 1);
+    }
+
+    #[test]
+    fn forced_degree_mismatch_is_m001() {
+        let s = Scenario::llm("gpt3-175b").forced(4, 1, 1);
+        let r = lint_scenario(&s);
+        assert_eq!(r.codes(), vec!["DF-M001"], "{:?}", r.diags);
+    }
+
+    #[test]
+    fn serving_split_message_names_the_split_and_group() {
+        let s = Scenario::llama("8b").serving_split(5, 2);
+        let r = lint_scenario(&s);
+        assert_eq!(r.codes(), vec!["DF-M002"]);
+        let msg = &r.diags[0].message;
+        assert!(msg.contains("TP5") && msg.contains("PP2") && msg.contains("16-chip"), "{msg}");
+    }
+
+    #[test]
+    fn kv_overflow_is_m003() {
+        let mut s = Scenario::llama("405b");
+        s.serving.batch = 512.0;
+        s.serving.context = 131_072.0;
+        let r = lint_scenario(&s);
+        assert_eq!(r.codes(), vec!["DF-M003"], "{:?}", r.diags);
+    }
+
+    #[test]
+    fn unknown_chip_falls_through_to_c001() {
+        let mut s = Scenario::llm("gpt3-175b");
+        s.system.chip = "h1000".into();
+        let r = lint_scenario(&s);
+        assert_eq!(r.codes(), vec!["DF-C001"], "{:?}", r.diags);
+        assert!(r.diags[0].message.contains("h1000"));
+    }
+
+    #[test]
+    fn report_counts_and_summary() {
+        let mut r = LintReport::default();
+        assert!(r.is_clean());
+        assert_eq!(r.summary(), "clean");
+        r.warning("DF-S002", "system", "w");
+        r.error("DF-S001", "topology", "e");
+        assert_eq!((r.n_errors(), r.n_warnings()), (1, 1));
+        assert!(r.has_errors() && !r.is_clean());
+        assert_eq!(r.summary(), "1 error(s), 1 warning(s)");
+        let j = r.to_json();
+        assert_eq!(j.get("errors").and_then(|v| v.as_usize()), Some(1));
+        assert!(r.render().contains("error[DF-S001] topology: e"));
+    }
+
+    #[test]
+    fn lint_json_dispatches_on_graph_key() {
+        let g = Json::parse(r#"{"graph": {"kernels": [], "tensors": []}}"#).unwrap();
+        let r = lint_json(&g);
+        assert_eq!(r.codes(), vec!["DF-G001"]);
+        let s = Json::parse(r#"{"system": {"chip": "zz80"}}"#).unwrap();
+        let r = lint_json(&s);
+        assert_eq!(r.codes(), vec!["DF-C001"]);
+    }
+
+    #[test]
+    fn explore_outlier_override_is_s004() {
+        let mut s = Scenario::llm("gpt3-175b").explore(ExploreOptions::default());
+        s.explore.chips.push(ChipCfg::Custom {
+            name: "hot".into(),
+            compute_tflops: 2000.0,
+            sram_mb: 256.0,
+            dataflow: false,
+            tiles: None,
+            power_w: Some(5.0),
+            price_usd: None,
+        });
+        let r = lint_scenario(&s);
+        assert_eq!(r.codes(), vec!["DF-S004"], "{:?}", r.diags);
+        assert!(!r.has_errors());
+    }
+
+    #[test]
+    fn catalog_chips_pass_the_outlier_threshold() {
+        // the regression floor puts H100 ~14x over the estimate; the 30x
+        // threshold must not flag any real Table V chip
+        for c in crate::system::chip::table_v() {
+            let est = chip::costpower_estimate_w(c.compute_flops().raw());
+            let p = c.power_w.raw();
+            let ratio = (p / est).max(est / p);
+            assert!(ratio <= OUTLIER_RATIO, "{}: {ratio:.1}x", c.name);
+        }
+    }
+}

@@ -12,6 +12,7 @@
 //!   simulate [--qps R ...]        request-level cluster serving simulation
 //!   plan --qps R --slo-ttft S --slo-tpot S   SLO-aware capacity planner
 //!   fabric [--topo F --chips N --coll C ...]  link-level collective simulation
+//!   lint <file.json ...> [--json]  static checks on scenario/graph files
 //!   topo [--topo F --chips N]     topology facts (links, bisection bandwidth)
 //!   bench-check [--current F --baseline F]  CI bench-regression gate
 //!   run --config exp.json         legacy declarative experiment launcher
@@ -33,6 +34,7 @@ const SUBCOMMANDS: &[&str] = &[
     "simulate",
     "plan",
     "fabric",
+    "lint",
     "topo",
     "bench-check",
     "run",
@@ -71,6 +73,7 @@ fn main() {
         Some("simulate") => cmd_simulate(&args),
         Some("plan") => cmd_plan(&args),
         Some("fabric") => cmd_fabric(&args),
+        Some("lint") => cmd_lint(&args),
         Some("topo") => cmd_topo(&args),
         Some("bench-check") => cmd_bench_check(&args),
         Some("run") => cmd_run(&args),
@@ -435,6 +438,55 @@ fn print_trace(s: &Scenario, r: &dfmodel::api::Report, limit: usize) -> Result<(
     Ok(())
 }
 
+/// `dfmodel lint <file.json ...>` — static checks on scenario or
+/// `{"graph": ...}` files without evaluating them. Exit 2 on unreadable or
+/// syntactically-broken input, 1 when any file has a lint error, 0 when
+/// everything is clean or warning-only. `--json` emits one object per file.
+fn cmd_lint(args: &Args) -> i32 {
+    use dfmodel::util::json::Json;
+    if args.positional.is_empty() {
+        eprintln!("lint: need one or more scenario/graph JSON files");
+        return 2;
+    }
+    let mut reports = Vec::new();
+    for path in &args.positional {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("read {path}: {e}");
+                return 2;
+            }
+        };
+        let j = match Json::parse(&text) {
+            Ok(j) => j,
+            Err(e) => {
+                eprintln!("{path}: {e}");
+                return 2;
+            }
+        };
+        reports.push((path, dfmodel::lint::lint_json(&j)));
+    }
+    if args.has_flag("json") {
+        let items = reports.iter().map(|(path, r)| {
+            Json::obj(vec![
+                ("file", Json::from(path.as_str())),
+                ("errors", Json::from(r.n_errors())),
+                ("warnings", Json::from(r.n_warnings())),
+                ("report", r.to_json()),
+            ])
+        });
+        println!("{}", Json::arr(items).pretty());
+    } else {
+        for (path, r) in &reports {
+            for d in &r.diags {
+                println!("{path}: {}", d.render());
+            }
+            println!("{path}: {}", r.summary());
+        }
+    }
+    i32::from(reports.iter().any(|(_, r)| r.has_errors()))
+}
+
 /// `dfmodel topo` — chip/link counts and bisection bandwidth of a topology.
 fn cmd_topo(args: &Args) -> i32 {
     use dfmodel::util::units::fmt_bw;
@@ -456,12 +508,12 @@ fn cmd_topo(args: &Args) -> i32 {
             d.kind,
             d.size,
             d.fabric,
-            fmt_bw(d.link_bw),
+            fmt_bw(d.link_bw.raw()),
             d.bisection_links()
         );
     }
     println!("links      : {:.0}", topo.total_links());
-    println!("bisection  : {} one-way", fmt_bw(topo.bisection_bytes_per_s()));
+    println!("bisection  : {} one-way", fmt_bw(topo.bisection_bytes_per_s().raw()));
     0
 }
 

@@ -9,6 +9,7 @@ use crate::interchip::{self, InterChipOptions};
 use crate::intrachip::{self, IntraChipOptions};
 use crate::sharding;
 use crate::system::SystemSpec;
+use crate::util::units::Bytes;
 
 /// Summary of the mapping decisions behind a [`StepResult`], surfaced by
 /// the `api` facade's `Mapping` type.
@@ -36,6 +37,10 @@ fn scheme_names(g: &DataflowGraph, scheme_idx: &[usize], tp: usize) -> Vec<(Stri
 }
 
 /// Result of evaluating one workload on one system design point.
+///
+/// This is a *reporting boundary*: every field is a raw `f64` (seconds,
+/// FLOP, FLOP/s) so it can flow straight into JSON reports and figure
+/// tables. Typed quantities are flattened with `.raw()` on the way in.
 #[derive(Debug, Clone)]
 pub struct StepResult {
     /// Wall-clock of one training iteration / one solve (seconds).
@@ -160,7 +165,7 @@ fn llm_training_with_mapping(
     // layers, bottlenecked by inter-chip p2p if present
     let per_layer = intra.total_time / m_fine;
     let stage_time = (per_layer * max_layers as f64)
-        .max(inter.stages.iter().map(|s| s.t_p2p).fold(0.0, f64::max));
+        .max(inter.stages.iter().map(|s| s.t_p2p.raw()).fold(0.0, f64::max));
 
     // pipeline fill: m microbatches per replica; fwd+bwd = 3x compute
     let micro_per_replica = (global_batch / dp as f64).max(1.0);
@@ -172,11 +177,10 @@ fn llm_training_with_mapping(
     if dp > 1 {
         let dp_dims = inter.plan.dp_dims_ref(&sys.topology);
         let grad_bytes = cfg.params() * cfg.dtype_bytes / (tp as f64 * pp as f64);
-        let t_dp = sys.collective_model.time_hier(
-            crate::collective::Collective::AllReduce,
-            grad_bytes,
-            &dp_dims,
-        );
+        let t_dp = sys
+            .collective_model
+            .time_hier(crate::collective::Collective::AllReduce, Bytes::new(grad_bytes), &dp_dims)
+            .raw();
         let bwd = 2.0 * fwd;
         step += (t_dp - bwd).max(0.0);
     }
@@ -184,7 +188,7 @@ fn llm_training_with_mapping(
     let tokens = global_batch * cfg.seq;
     let useful = cfg.train_flops_per_token() * tokens;
     let achieved = useful / step;
-    let peak = sys.peak_flops();
+    let peak = sys.peak_flops().raw();
 
     // breakdown scaled from the per-layer intra metrics (+ inter-chip p2p
     // as network)
@@ -247,7 +251,7 @@ pub fn workload_pass_opts(
 
     let stage_time = intra
         .total_time
-        .max(inter.stages.iter().map(|s| s.t_p2p).fold(0.0, f64::max));
+        .max(inter.stages.iter().map(|s| s.t_p2p.raw()).fold(0.0, f64::max));
     let step = passes * stage_time * pp as f64 / pp as f64 * (pp as f64); // fill + drain ≈ pp stages sequential for one pass
     let step = if pp > 1 { step } else { passes * stage_time };
 
@@ -258,7 +262,7 @@ pub fn workload_pass_opts(
     Some(StepResult {
         step_time: step,
         useful_flops: useful,
-        utilization: achieved / sys.peak_flops(),
+        utilization: achieved / sys.peak_flops().raw(),
         achieved_flops: achieved,
         breakdown: (step * c / tot, step * m / tot, step * n / tot),
         tp,

@@ -5,6 +5,7 @@
 //! OI_net × n_bw. Both OIs share one achieved-throughput point.
 
 use crate::system::SystemSpec;
+use crate::util::units::{Bytes, BytesPerSec, Flop, FlopPerSec, Seconds};
 
 /// One mapping's position on the hierarchical roofline.
 #[derive(Debug, Clone)]
@@ -29,9 +30,9 @@ pub enum Bound {
 /// Per-chip roofline model.
 #[derive(Debug, Clone)]
 pub struct Roofline {
-    pub peak_flops: f64,
-    pub mem_bw: f64,
-    pub net_bw: f64,
+    pub peak_flops: FlopPerSec,
+    pub mem_bw: BytesPerSec,
+    pub net_bw: BytesPerSec,
 }
 
 impl Roofline {
@@ -43,15 +44,19 @@ impl Roofline {
         }
     }
 
-    /// Attainable FLOP/s at the given operational intensities.
-    pub fn attainable(&self, oi_mem: f64, oi_net: f64) -> f64 {
-        self.peak_flops.min(oi_mem * self.mem_bw).min(oi_net * self.net_bw)
+    /// Attainable FLOP/s at the given operational intensities. The OIs are
+    /// dimensionless FLOP-per-byte ratios, so the roof products go through
+    /// the raw-`f64` escape hatch (OI × bandwidth = compute rate).
+    pub fn attainable(&self, oi_mem: f64, oi_net: f64) -> FlopPerSec {
+        self.peak_flops
+            .min(FlopPerSec::new(oi_mem * self.mem_bw.raw()))
+            .min(FlopPerSec::new(oi_net * self.net_bw.raw()))
     }
 
     /// Which roof binds at these intensities.
     pub fn bound(&self, oi_mem: f64, oi_net: f64) -> Bound {
-        let mem = oi_mem * self.mem_bw;
-        let net = oi_net * self.net_bw;
+        let mem = FlopPerSec::new(oi_mem * self.mem_bw.raw());
+        let net = FlopPerSec::new(oi_net * self.net_bw.raw());
         if self.peak_flops <= mem && self.peak_flops <= net {
             Bound::Compute
         } else if mem <= net {
@@ -61,22 +66,26 @@ impl Roofline {
         }
     }
 
-    /// Build a point from a mapping's totals (per chip, per input).
-    pub fn point(&self, name: &str, flops: f64, dram_bytes: f64, net_bytes: f64, time: f64)
+    /// Build a point from a mapping's totals (per chip, per input). The
+    /// resulting OIs and achieved rate are raw `f64`s (reporting boundary).
+    pub fn point(&self, name: &str, flops: Flop, dram_bytes: Bytes, net_bytes: Bytes, time: Seconds)
         -> RooflinePoint
     {
+        let flops = flops.raw();
+        let (dram_bytes, net_bytes) = (dram_bytes.raw(), net_bytes.raw());
         let oi_mem = if dram_bytes > 0.0 { flops / dram_bytes } else { f64::INFINITY };
         let oi_net = if net_bytes > 0.0 { flops / net_bytes } else { f64::INFINITY };
-        RooflinePoint { name: name.into(), oi_mem, oi_net, achieved: flops / time }
+        RooflinePoint { name: name.into(), oi_mem, oi_net, achieved: flops / time.raw() }
     }
 
-    /// Ridge OI (memory): where the memory roof meets peak.
+    /// Ridge OI (memory): where the memory roof meets peak (dimensionless
+    /// FLOP/byte).
     pub fn ridge_mem(&self) -> f64 {
-        self.peak_flops / self.mem_bw
+        self.peak_flops.raw() / self.mem_bw.raw()
     }
 
     pub fn ridge_net(&self) -> f64 {
-        self.peak_flops / self.net_bw
+        self.peak_flops.raw() / self.net_bw.raw()
     }
 }
 
@@ -85,18 +94,22 @@ mod tests {
     use super::*;
 
     fn rl() -> Roofline {
-        Roofline { peak_flops: 300e12, mem_bw: 200e9, net_bw: 25e9 }
+        Roofline {
+            peak_flops: FlopPerSec::new(300e12),
+            mem_bw: BytesPerSec::new(200e9),
+            net_bw: BytesPerSec::new(25e9),
+        }
     }
 
     #[test]
     fn attainable_min_of_roofs() {
         let r = rl();
         // low OI: memory-bound
-        assert_eq!(r.attainable(10.0, 1e9), 10.0 * 200e9);
+        assert_eq!(r.attainable(10.0, 1e9).raw(), 10.0 * 200e9);
         // low net OI: network-bound
-        assert_eq!(r.attainable(1e9, 100.0), 100.0 * 25e9);
+        assert_eq!(r.attainable(1e9, 100.0).raw(), 100.0 * 25e9);
         // both high: compute-bound
-        assert_eq!(r.attainable(1e9, 1e9), 300e12);
+        assert_eq!(r.attainable(1e9, 1e9).raw(), 300e12);
     }
 
     #[test]
@@ -117,11 +130,11 @@ mod tests {
     #[test]
     fn point_construction() {
         let r = rl();
-        let p = r.point("m", 1e12, 1e9, 1e8, 0.01);
+        let p = r.point("m", Flop::new(1e12), Bytes::new(1e9), Bytes::new(1e8), Seconds::new(0.01));
         assert_eq!(p.oi_mem, 1000.0);
         assert_eq!(p.oi_net, 10000.0);
         assert_eq!(p.achieved, 1e14);
         // achieved can never exceed attainable by construction of the model
-        assert!(p.achieved <= r.attainable(p.oi_mem, p.oi_net) * 1.67);
+        assert!(p.achieved <= r.attainable(p.oi_mem, p.oi_net).raw() * 1.67);
     }
 }

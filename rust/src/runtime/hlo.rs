@@ -302,7 +302,7 @@ impl<'a> Cursor<'a> {
     fn balanced(&mut self, open: u8, close: u8) -> Result<&'a str> {
         self.skip_ws();
         if self.peek() != open {
-            return Err(self.error(&format!("expected '{}'", open as char)));
+            return Err(self.error(&format!("expected '{}'", char::from(open))));
         }
         self.bump();
         let start = self.i;

@@ -617,7 +617,7 @@ fn dot(lhs: &Tensor, rhs: &Tensor, at: &Attrs) -> Result<Tensor> {
             let sl = ls[lc[0]];
             let sr = rs[rc[0]];
             for ci in 0..n_con {
-                acc += lf[lbase + ci * sl] as f64 * rf[rbase + ci * sr] as f64;
+                acc += f64::from(lf[lbase + ci * sl]) * f64::from(rf[rbase + ci * sr]);
             }
         } else {
             let mut ccoords = vec![0usize; contract.len()];
@@ -629,7 +629,7 @@ fn dot(lhs: &Tensor, rhs: &Tensor, at: &Attrs) -> Result<Tensor> {
                     loff += cc * ls[lc[j]];
                     roff += cc * rs[rc[j]];
                 }
-                acc += lf[lbase + loff] as f64 * rf[rbase + roff] as f64;
+                acc += f64::from(lf[lbase + loff]) * f64::from(rf[rbase + roff]);
             }
         }
         *slot = acc as f32;
@@ -695,14 +695,14 @@ fn reduce(
         if let Some(f) = fast {
             // f64 accumulation for the add-reduction hot path
             if root_op == "add" {
-                let mut acc = init_v as f64;
+                let mut acc = f64::from(init_v);
                 for ri in 0..n_red {
                     unravel(ri, &red_dims, &mut rcoords);
                     let mut off = 0usize;
                     for (j, &cc) in rcoords.iter().enumerate() {
                         off += cc * ist[rdims[j]];
                     }
-                    acc += src[base + off] as f64;
+                    acc += f64::from(src[base + off]);
                 }
                 *slot = acc as f32;
             } else {

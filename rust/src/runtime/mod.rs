@@ -187,7 +187,7 @@ impl Runtime {
         let max_err = got
             .iter()
             .zip(&want)
-            .map(|(a, b)| (a - b).abs() as f64)
+            .map(|(a, b)| f64::from((a - b).abs()))
             .fold(0.0f64, f64::max);
         Ok(max_err)
     }

@@ -41,8 +41,8 @@ pub fn sn40l_x16() -> ServingSystem {
     let hbm = crate::system::memory::sn40l_hbm();
     ServingSystem {
         chip: crate::system::chip::sn40l(),
-        mem_bw: hbm.bandwidth,
-        mem_cap: hbm.capacity,
+        mem_bw: hbm.bandwidth.raw(),
+        mem_cap: hbm.capacity.raw(),
         link: crate::system::interconnect::rdu_fabric(),
         n_chips: 16,
     }
@@ -101,7 +101,7 @@ pub fn evaluate(
     let tokens = pt.batch * pt.prompt_len;
     let flops_layer = 2.0 * model.params_per_layer() * tokens / tp
         + 4.0 * pt.prompt_len * model.d_model * tokens / tp;
-    let t_comp = flops_layer / (sys.chip.compute_flops() * PREFILL_EFF);
+    let t_comp = flops_layer / (sys.chip.compute_flops().raw() * PREFILL_EFF);
     // weights stream once per layer activation (they exceed SRAM at stack
     // scale); activations stay on-chip in the fused pipeline
     let w_layer_chip = model.params_per_layer() * model.dtype_bytes / tp;
@@ -109,15 +109,15 @@ pub fn evaluate(
     // 2 all-reduces per layer of the activation slice
     let ar_bytes = tokens * model.d_model * model.dtype_bytes;
     let t_net = if pt.tp > 1 {
-        2.0 * (2.0 * (tp - 1.0) / tp * ar_bytes / sys.link.bandwidth
-            + 2.0 * (tp - 1.0) * sys.link.latency)
+        2.0 * (2.0 * (tp - 1.0) / tp * ar_bytes / sys.link.bandwidth.raw()
+            + 2.0 * (tp - 1.0) * sys.link.latency.raw())
     } else {
         0.0
     };
     let t_layer_prefill = t_comp.max(t_mem).max(t_net);
     // serialization through the pipeline + inter-stage hops
-    let p2p = tokens * model.d_model * model.dtype_bytes / tp / sys.link.bandwidth
-        + sys.link.latency;
+    let p2p = tokens * model.d_model * model.dtype_bytes / tp / sys.link.bandwidth.raw()
+        + sys.link.latency.raw();
     let ttft = layers * t_layer_prefill + (pp - 1.0) * p2p;
     let stage_time = layers_per_stage * t_layer_prefill;
     let prefill_tps = tokens / stage_time;
@@ -129,13 +129,13 @@ pub fn evaluate(
     let t_mem_stage = (w_stage_chip + kv_stage_chip) / sys.mem_bw;
     let dec_flops_stage =
         2.0 * model.params_per_layer() * layers_per_stage * pt.batch / tp;
-    let t_comp_stage = dec_flops_stage / (sys.chip.compute_flops() * 0.3);
+    let t_comp_stage = dec_flops_stage / (sys.chip.compute_flops().raw() * 0.3);
     let ar_dec = pt.batch * model.d_model * model.dtype_bytes;
     let t_net_stage = if pt.tp > 1 {
         layers_per_stage
             * 2.0
-            * (2.0 * (tp - 1.0) / tp * ar_dec / sys.link.bandwidth
-                + 2.0 * (tp - 1.0) * sys.link.latency)
+            * (2.0 * (tp - 1.0) / tp * ar_dec / sys.link.bandwidth.raw()
+                + 2.0 * (tp - 1.0) * sys.link.latency.raw())
     } else {
         0.0
     };

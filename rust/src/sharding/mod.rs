@@ -10,6 +10,7 @@
 use crate::collective::{Collective, CollectiveModel};
 use crate::graph::{Kernel, KernelKind};
 use crate::system::topology::Dim;
+use crate::util::units::{Bytes, Seconds};
 
 /// Distribution of a tensor across the TP group.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -198,7 +199,7 @@ pub fn conversion_op(from: Layout, to: Layout) -> Option<Collective> {
 /// full tensor size*): all-reduce and reduce-scatter operate on full-size
 /// partial buffers; all-gather reconstructs the full size; only all-to-all
 /// re-shards per-chip shards of S/tp.
-pub fn conversion_time(from: Layout, to: Layout, bytes: f64, tp_dims: &[&Dim]) -> f64 {
+pub fn conversion_time(from: Layout, to: Layout, bytes: f64, tp_dims: &[&Dim]) -> Seconds {
     conversion_time_model(&CollectiveModel::Analytical, from, to, bytes, tp_dims)
 }
 
@@ -210,16 +211,18 @@ pub fn conversion_time_model(
     to: Layout,
     bytes: f64,
     tp_dims: &[&Dim],
-) -> f64 {
+) -> Seconds {
     let tp: usize = tp_dims.iter().map(|d| d.size).product();
     match conversion_op(from, to) {
-        None => 0.0,
+        None => Seconds::ZERO,
         Some(op) => {
+            // tensor sizes arrive as raw graph-domain `f64`s; they pick up
+            // a dimension here, at the entry to the collective model
             let payload = match op {
                 Collective::AllToAll => bytes / tp.max(1) as f64,
                 _ => bytes,
             };
-            model.time_hier(op, payload, tp_dims)
+            model.time_hier(op, Bytes::new(payload), tp_dims)
         }
     }
 }
@@ -233,7 +236,7 @@ pub fn inherent_time(
     out_bytes: f64,
     weight_bytes: f64,
     tp_dims: &[&Dim],
-) -> f64 {
+) -> Seconds {
     inherent_time_model(&CollectiveModel::Analytical, scheme, out_bytes, weight_bytes, tp_dims)
 }
 
@@ -244,14 +247,14 @@ pub fn inherent_time_model(
     out_bytes: f64,
     weight_bytes: f64,
     tp_dims: &[&Dim],
-) -> f64 {
+) -> Seconds {
     let t_out = match scheme.inherent {
-        None => 0.0,
-        Some((op, factor)) => model.time_hier(op, out_bytes * factor, tp_dims),
+        None => Seconds::ZERO,
+        Some((op, factor)) => model.time_hier(op, Bytes::new(out_bytes * factor), tp_dims),
     };
     let t_w = match scheme.weight_comm {
-        None => 0.0,
-        Some((op, factor)) => model.time_hier(op, weight_bytes * factor, tp_dims),
+        None => Seconds::ZERO,
+        Some((op, factor)) => model.time_hier(op, Bytes::new(weight_bytes * factor), tp_dims),
     };
     t_out + t_w
 }
@@ -338,7 +341,7 @@ mod tests {
         let t1 = conversion_time(Layout::Partial, Layout::Replicated, 1e9, &[&d]);
         let t2 = conversion_time(Layout::Partial, Layout::Replicated, 2e9, &[&d]);
         assert!(t2 > 1.9 * t1);
-        assert_eq!(conversion_time(Layout::Row, Layout::Row, 1e9, &[&d]), 0.0);
+        assert_eq!(conversion_time(Layout::Row, Layout::Row, 1e9, &[&d]), Seconds::ZERO);
     }
 
     #[test]
@@ -347,7 +350,7 @@ mod tests {
         let table = s.iter().find(|x| x.name == "table").unwrap();
         assert!(matches!(table.inherent, Some((Collective::AllToAll, _))));
         let d = ring8();
-        assert!(inherent_time(table, 1e9, 0.0, &[&d]) > 0.0);
+        assert!(inherent_time(table, 1e9, 0.0, &[&d]) > Seconds::ZERO);
     }
 
     #[test]

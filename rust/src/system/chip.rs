@@ -6,7 +6,7 @@
 //! not public we use a documented estimate consistent with the paper's
 //! efficiency ratios (Fig. 9's superlinear trend).
 
-use crate::util::units::{GB, MB, TFLOPS};
+use crate::util::units::{Bytes, Dollars, FlopPerSec, Watts, GB, MB, TFLOPS};
 
 /// Intra-chip execution style (§II-B): dataflow chips may fuse multiple
 /// kernels into a spatial pipeline; kernel-by-kernel chips may not.
@@ -23,17 +23,17 @@ pub struct ChipSpec {
     /// Compute tiles (`t_lim`): SMs / MXUs / PCUs / WSE cores.
     pub tiles: usize,
     /// Peak FLOP/s per tile (`t_flop`), half precision.
-    pub tflop_per_tile: f64,
-    /// On-chip SRAM capacity (`s_cap`), bytes.
-    pub sram_bytes: f64,
+    pub tflop_per_tile: FlopPerSec,
+    /// On-chip SRAM capacity (`s_cap`).
+    pub sram_bytes: Bytes,
     pub execution: ExecutionModel,
-    pub power_w: f64,
-    pub price_usd: f64,
+    pub power_w: Watts,
+    pub price_usd: Dollars,
 }
 
 impl ChipSpec {
     /// Peak chip compute (`t_lim` × `t_flop`).
-    pub fn compute_flops(&self) -> f64 {
+    pub fn compute_flops(&self) -> FlopPerSec {
         self.tiles as f64 * self.tflop_per_tile
     }
 }
@@ -43,11 +43,11 @@ pub fn h100() -> ChipSpec {
     ChipSpec {
         name: "H100".into(),
         tiles: 132,
-        tflop_per_tile: 993.0 * TFLOPS / 132.0,
-        sram_bytes: 113.0 * MB,
+        tflop_per_tile: FlopPerSec::new(993.0 * TFLOPS / 132.0),
+        sram_bytes: Bytes::new(113.0 * MB),
         execution: ExecutionModel::KernelByKernel,
-        power_w: 700.0,
-        price_usd: 30_000.0,
+        power_w: Watts::new(700.0),
+        price_usd: Dollars::new(30_000.0),
     }
 }
 
@@ -56,11 +56,11 @@ pub fn tpu_v4() -> ChipSpec {
     ChipSpec {
         name: "TPUv4".into(),
         tiles: 8,
-        tflop_per_tile: 275.0 * TFLOPS / 8.0,
-        sram_bytes: 160.0 * MB,
+        tflop_per_tile: FlopPerSec::new(275.0 * TFLOPS / 8.0),
+        sram_bytes: Bytes::new(160.0 * MB),
         execution: ExecutionModel::KernelByKernel,
-        power_w: 192.0,
-        price_usd: 9_000.0,
+        power_w: Watts::new(192.0),
+        price_usd: Dollars::new(9_000.0),
     }
 }
 
@@ -69,11 +69,11 @@ pub fn sn30() -> ChipSpec {
     ChipSpec {
         name: "SN30".into(),
         tiles: 1280,
-        tflop_per_tile: 614.0 * TFLOPS / 1280.0,
-        sram_bytes: 640.0 * MB,
+        tflop_per_tile: FlopPerSec::new(614.0 * TFLOPS / 1280.0),
+        sram_bytes: Bytes::new(640.0 * MB),
         execution: ExecutionModel::Dataflow,
-        power_w: 450.0,
-        price_usd: 25_000.0,
+        power_w: Watts::new(450.0),
+        price_usd: Dollars::new(25_000.0),
     }
 }
 
@@ -82,11 +82,11 @@ pub fn wse2() -> ChipSpec {
     ChipSpec {
         name: "WSE-2".into(),
         tiles: 850_000,
-        tflop_per_tile: 7500.0 * TFLOPS / 850_000.0,
-        sram_bytes: 40.0 * GB,
+        tflop_per_tile: FlopPerSec::new(7500.0 * TFLOPS / 850_000.0),
+        sram_bytes: Bytes::new(40.0 * GB),
         execution: ExecutionModel::Dataflow,
-        power_w: 15_000.0,
-        price_usd: 2_500_000.0,
+        power_w: Watts::new(15_000.0),
+        price_usd: Dollars::new(2_500_000.0),
     }
 }
 
@@ -95,11 +95,11 @@ pub fn sn10() -> ChipSpec {
     ChipSpec {
         name: "SN10".into(),
         tiles: 640,
-        tflop_per_tile: 307.2 * TFLOPS / 640.0,
-        sram_bytes: 320.0 * MB,
+        tflop_per_tile: FlopPerSec::new(307.2 * TFLOPS / 640.0),
+        sram_bytes: Bytes::new(320.0 * MB),
         execution: ExecutionModel::Dataflow,
-        power_w: 300.0,
-        price_usd: 18_000.0,
+        power_w: Watts::new(300.0),
+        price_usd: Dollars::new(18_000.0),
     }
 }
 
@@ -108,11 +108,11 @@ pub fn sn40l() -> ChipSpec {
     ChipSpec {
         name: "SN40L".into(),
         tiles: 1040,
-        tflop_per_tile: 640.0 * TFLOPS / 1040.0,
-        sram_bytes: 520.0 * MB,
+        tflop_per_tile: FlopPerSec::new(640.0 * TFLOPS / 1040.0),
+        sram_bytes: Bytes::new(520.0 * MB),
         execution: ExecutionModel::Dataflow,
-        power_w: 500.0,
-        price_usd: 28_000.0,
+        power_w: Watts::new(500.0),
+        price_usd: Dollars::new(28_000.0),
     }
 }
 
@@ -121,11 +121,11 @@ pub fn a100() -> ChipSpec {
     ChipSpec {
         name: "A100".into(),
         tiles: 108,
-        tflop_per_tile: 312.0 * TFLOPS / 108.0,
-        sram_bytes: 40.0 * MB,
+        tflop_per_tile: FlopPerSec::new(312.0 * TFLOPS / 108.0),
+        sram_bytes: Bytes::new(40.0 * MB),
         execution: ExecutionModel::KernelByKernel,
-        power_w: 400.0,
-        price_usd: 15_000.0,
+        power_w: Watts::new(400.0),
+        price_usd: Dollars::new(15_000.0),
     }
 }
 
@@ -146,11 +146,11 @@ pub fn custom(
     ChipSpec {
         name: name.into(),
         tiles,
-        tflop_per_tile: compute_flops / tiles as f64,
-        sram_bytes,
+        tflop_per_tile: FlopPerSec::new(compute_flops / tiles as f64),
+        sram_bytes: Bytes::new(sram_bytes),
         execution,
-        power_w: costpower_estimate_w(compute_flops),
-        price_usd: costpower_estimate_usd(compute_flops),
+        power_w: Watts::new(costpower_estimate_w(compute_flops)),
+        price_usd: Dollars::new(costpower_estimate_usd(compute_flops)),
     }
 }
 
@@ -176,7 +176,7 @@ mod tests {
     fn table_v_matches_paper() {
         let chips = table_v();
         let specs: Vec<(f64, f64)> =
-            chips.iter().map(|c| (c.compute_flops() / TFLOPS, c.sram_bytes)).collect();
+            chips.iter().map(|c| (c.compute_flops().raw() / TFLOPS, c.sram_bytes.raw())).collect();
         assert!((specs[0].0 - 993.0).abs() < 0.5);
         assert!((specs[0].1 - 113.0 * MB).abs() < 1.0);
         assert!((specs[1].0 - 275.0).abs() < 0.5);
@@ -198,8 +198,8 @@ mod tests {
     #[test]
     fn sn10_matches_section_vii() {
         let c = sn10();
-        assert!((c.compute_flops() - 307.2 * TFLOPS).abs() / TFLOPS < 0.1);
-        assert!((c.sram_bytes - 320.0 * MB).abs() < 1.0);
+        assert!((c.compute_flops().raw() - 307.2 * TFLOPS).abs() / TFLOPS < 0.1);
+        assert!((c.sram_bytes.raw() - 320.0 * MB).abs() < 1.0);
     }
 
     #[test]
@@ -216,7 +216,7 @@ mod tests {
     #[test]
     fn custom_chip() {
         let c = custom("X", 300.0 * TFLOPS, 300.0 * MB, ExecutionModel::Dataflow);
-        assert!((c.compute_flops() - 300.0 * TFLOPS).abs() < 1.0);
-        assert!(c.power_w >= 50.0);
+        assert!((c.compute_flops().raw() - 300.0 * TFLOPS).abs() < 1.0);
+        assert!(c.power_w >= Watts::new(50.0));
     }
 }

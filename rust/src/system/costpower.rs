@@ -68,17 +68,17 @@ pub fn polyfit2(points: &[(f64, f64)]) -> Quadratic {
 
 /// (TFLOPS, kW) points for the Table V chips.
 pub fn chip_power_points() -> Vec<(f64, f64)> {
-    table_v().iter().map(|c| (c.compute_flops() / TFLOPS, c.power_w / 1000.0)).collect()
+    table_v().iter().map(|c| (c.compute_flops().raw() / TFLOPS, c.power_w.raw() / 1000.0)).collect()
 }
 
 /// (TFLOPS, k$) points for the Table V chips.
 pub fn chip_price_points() -> Vec<(f64, f64)> {
-    table_v().iter().map(|c| (c.compute_flops() / TFLOPS, c.price_usd / 1000.0)).collect()
+    table_v().iter().map(|c| (c.compute_flops().raw() / TFLOPS, c.price_usd.raw() / 1000.0)).collect()
 }
 
 /// Convenience: evaluate a fitted curve for a chip.
 pub fn fitted_power_kw(chip: &ChipSpec, fit: &Quadratic) -> f64 {
-    fit.eval(chip.compute_flops() / TFLOPS)
+    fit.eval(chip.compute_flops().raw() / TFLOPS)
 }
 
 #[cfg(test)]

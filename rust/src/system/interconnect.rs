@@ -1,29 +1,29 @@
 //! Interconnect (link) technology catalog (§VI-C): PCIe Gen4 and NVLink4,
 //! with price/power per link from [11], [82].
 
-use crate::util::units::{GB, NS};
+use crate::util::units::{BytesPerSec, Dollars, Seconds, Watts, GB, NS};
 
 #[derive(Debug, Clone)]
 pub struct LinkTech {
     pub name: String,
-    /// Per-link, per-direction bandwidth, bytes/s (`n_bw` per dim link).
-    pub bandwidth: f64,
-    /// Per-hop latency, seconds.
-    pub latency: f64,
-    /// $ per link.
-    pub price_usd: f64,
-    /// W per link.
-    pub power_w: f64,
+    /// Per-link, per-direction bandwidth (`n_bw` per dim link).
+    pub bandwidth: BytesPerSec,
+    /// Per-hop latency.
+    pub latency: Seconds,
+    /// Price per link.
+    pub price_usd: Dollars,
+    /// Power per link.
+    pub power_w: Watts,
 }
 
 /// PCIe Gen 4 x16: 25 GB/s [1].
 pub fn pcie4() -> LinkTech {
     LinkTech {
         name: "PCIe4".into(),
-        bandwidth: 25.0 * GB,
-        latency: 500.0 * NS,
-        price_usd: 100.0,
-        power_w: 8.0,
+        bandwidth: BytesPerSec::new(25.0 * GB),
+        latency: Seconds::new(500.0 * NS),
+        price_usd: Dollars::new(100.0),
+        power_w: Watts::new(8.0),
     }
 }
 
@@ -31,10 +31,10 @@ pub fn pcie4() -> LinkTech {
 pub fn nvlink4() -> LinkTech {
     LinkTech {
         name: "NVLink4".into(),
-        bandwidth: 900.0 * GB,
-        latency: 150.0 * NS,
-        price_usd: 600.0,
-        power_w: 25.0,
+        bandwidth: BytesPerSec::new(900.0 * GB),
+        latency: Seconds::new(150.0 * NS),
+        price_usd: Dollars::new(600.0),
+        power_w: Watts::new(25.0),
     }
 }
 
@@ -42,10 +42,10 @@ pub fn nvlink4() -> LinkTech {
 pub fn rdu_fabric() -> LinkTech {
     LinkTech {
         name: "RDU-fabric".into(),
-        bandwidth: 25.0 * GB,
-        latency: 150.0 * NS,
-        price_usd: 120.0,
-        power_w: 8.0,
+        bandwidth: BytesPerSec::new(25.0 * GB),
+        latency: Seconds::new(150.0 * NS),
+        price_usd: Dollars::new(120.0),
+        power_w: Watts::new(8.0),
     }
 }
 
@@ -55,8 +55,8 @@ mod tests {
 
     #[test]
     fn catalog_values() {
-        assert_eq!(pcie4().bandwidth, 25.0 * GB);
-        assert_eq!(nvlink4().bandwidth, 900.0 * GB);
+        assert_eq!(pcie4().bandwidth.raw(), 25.0 * GB);
+        assert_eq!(nvlink4().bandwidth.raw(), 900.0 * GB);
         assert!(nvlink4().latency < pcie4().latency);
         assert!(nvlink4().price_usd > pcie4().price_usd);
     }

@@ -4,28 +4,29 @@
 //! (`d_cap`); price/power are per-GB figures from [39], [43] used for the
 //! efficiency heat maps.
 
-use crate::util::units::{GB, TB};
+use crate::util::units::{Bytes, BytesPerSec, Dollars, Watts, GB, TB};
 
 #[derive(Debug, Clone)]
 pub struct MemoryTech {
     pub name: String,
-    /// Per-chip bandwidth, bytes/s (`d_bw`).
-    pub bandwidth: f64,
-    /// Per-chip capacity, bytes (`d_cap`).
-    pub capacity: f64,
-    /// $/GB (from [39], [43]).
+    /// Per-chip bandwidth (`d_bw`).
+    pub bandwidth: BytesPerSec,
+    /// Per-chip capacity (`d_cap`).
+    pub capacity: Bytes,
+    /// $/GB (from [39], [43]) — a per-GB *rate*, not a plain dollar
+    /// quantity, so it stays a raw `f64`.
     pub price_per_gb: f64,
-    /// W/GB active power.
+    /// W/GB active power (per-GB rate; raw `f64` like `price_per_gb`).
     pub power_per_gb: f64,
 }
 
 impl MemoryTech {
-    pub fn price_usd(&self) -> f64 {
-        self.capacity / GB * self.price_per_gb
+    pub fn price_usd(&self) -> Dollars {
+        Dollars::new(self.capacity.raw() / GB * self.price_per_gb)
     }
 
-    pub fn power_w(&self) -> f64 {
-        self.capacity / GB * self.power_per_gb
+    pub fn power_w(&self) -> Watts {
+        Watts::new(self.capacity.raw() / GB * self.power_per_gb)
     }
 }
 
@@ -33,8 +34,8 @@ impl MemoryTech {
 pub fn ddr4() -> MemoryTech {
     MemoryTech {
         name: "DDR4".into(),
-        bandwidth: 200.0 * GB,
-        capacity: 1.0 * TB,
+        bandwidth: BytesPerSec::new(200.0 * GB),
+        capacity: Bytes::new(1.0 * TB),
         price_per_gb: 4.0,
         power_per_gb: 0.35,
     }
@@ -44,8 +45,8 @@ pub fn ddr4() -> MemoryTech {
 pub fn hbm3() -> MemoryTech {
     MemoryTech {
         name: "HBM3".into(),
-        bandwidth: 3000.0 * GB,
-        capacity: 96.0 * GB,
+        bandwidth: BytesPerSec::new(3000.0 * GB),
+        capacity: Bytes::new(96.0 * GB),
         price_per_gb: 15.0,
         power_per_gb: 3.5,
     }
@@ -57,8 +58,8 @@ pub fn hbm3() -> MemoryTech {
 pub fn sn40l_hbm() -> MemoryTech {
     MemoryTech {
         name: "HBM-SN40L".into(),
-        bandwidth: 1.6 * TB,
-        capacity: 64.0 * GB,
+        bandwidth: BytesPerSec::new(1.6 * TB),
+        capacity: Bytes::new(64.0 * GB),
         price_per_gb: 15.0,
         power_per_gb: 3.5,
     }
@@ -70,8 +71,8 @@ pub fn sn40l_hbm() -> MemoryTech {
 pub fn mem2d_ddr() -> MemoryTech {
     MemoryTech {
         name: "2D-DDR".into(),
-        bandwidth: 100.0 * GB,
-        capacity: 1.0 * TB,
+        bandwidth: BytesPerSec::new(100.0 * GB),
+        capacity: Bytes::new(1.0 * TB),
         price_per_gb: 4.0,
         power_per_gb: 0.35,
     }
@@ -81,8 +82,8 @@ pub fn mem2d_ddr() -> MemoryTech {
 pub fn mem25d_hbm() -> MemoryTech {
     MemoryTech {
         name: "2.5D-HBM".into(),
-        bandwidth: 1.0 * TB,
-        capacity: 96.0 * GB,
+        bandwidth: BytesPerSec::new(1.0 * TB),
+        capacity: Bytes::new(96.0 * GB),
         price_per_gb: 15.0,
         power_per_gb: 3.0,
     }
@@ -92,8 +93,8 @@ pub fn mem25d_hbm() -> MemoryTech {
 pub fn mem3d_stacked() -> MemoryTech {
     MemoryTech {
         name: "3D-stacked".into(),
-        bandwidth: 100.0 * TB,
-        capacity: 48.0 * GB,
+        bandwidth: BytesPerSec::new(100.0 * TB),
+        capacity: Bytes::new(48.0 * GB),
         price_per_gb: 40.0,
         power_per_gb: 6.0,
     }
@@ -108,14 +109,14 @@ mod tests {
         assert!(ddr4().bandwidth < hbm3().bandwidth);
         assert!(mem2d_ddr().bandwidth < mem25d_hbm().bandwidth);
         assert!(mem25d_hbm().bandwidth < mem3d_stacked().bandwidth);
-        assert_eq!(hbm3().bandwidth, 3000.0 * GB);
-        assert_eq!(mem3d_stacked().bandwidth, 100.0 * TB);
+        assert_eq!(hbm3().bandwidth.raw(), 3000.0 * GB);
+        assert_eq!(mem3d_stacked().bandwidth.raw(), 100.0 * TB);
     }
 
     #[test]
     fn price_power_aggregation() {
         let m = hbm3();
-        assert!((m.price_usd() - 96.0 * 15.0).abs() < 1e-6);
-        assert!((m.power_w() - 96.0 * 3.5).abs() < 1e-6);
+        assert!((m.price_usd().raw() - 96.0 * 15.0).abs() < 1e-6);
+        assert!((m.power_w().raw() - 96.0 * 3.5).abs() < 1e-6);
     }
 }

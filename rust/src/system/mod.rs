@@ -14,6 +14,7 @@ pub use memory::MemoryTech;
 pub use topology::{Dim, DimFabric, DimKind, Topology};
 
 use crate::collective::CollectiveModel;
+use crate::util::units::{BytesPerSec, Dollars, FlopPerSec, Watts};
 
 /// A complete system design point: `n_chips` accelerators of one kind, each
 /// with one memory technology, connected by one link technology arranged in
@@ -55,27 +56,27 @@ impl SystemSpec {
 
     fn validate(&self) {
         assert!(self.n_chips() >= 1, "empty topology");
-        assert!(self.chip.compute_flops() > 0.0);
-        assert!(self.memory.bandwidth > 0.0);
-        assert!(self.link.bandwidth > 0.0);
+        assert!(self.chip.compute_flops() > FlopPerSec::ZERO);
+        assert!(self.memory.bandwidth > BytesPerSec::ZERO);
+        assert!(self.link.bandwidth > BytesPerSec::ZERO);
     }
 
     /// Aggregate peak compute of the whole system.
-    pub fn peak_flops(&self) -> f64 {
+    pub fn peak_flops(&self) -> FlopPerSec {
         self.chip.compute_flops() * self.n_chips() as f64
     }
 
     /// Total system price (chips + memory + links), for cost-efficiency
     /// heat maps (Figs 10/12/14/16).
-    pub fn price_usd(&self) -> f64 {
+    pub fn price_usd(&self) -> Dollars {
         let chips = self.chip.price_usd * self.n_chips() as f64;
         let mem = self.memory.price_usd() * self.n_chips() as f64;
         let links = self.link.price_usd * self.topology.total_links() as f64;
         chips + mem + links
     }
 
-    /// Total system power in watts.
-    pub fn power_w(&self) -> f64 {
+    /// Total system power.
+    pub fn power_w(&self) -> Watts {
         let chips = self.chip.power_w * self.n_chips() as f64;
         let mem = self.memory.power_w() * self.n_chips() as f64;
         let links = self.link.power_w * self.topology.total_links() as f64;
@@ -111,7 +112,7 @@ mod tests {
     fn aggregates() {
         let s = spec();
         assert_eq!(s.n_chips(), 8);
-        assert!((s.peak_flops() - 8.0 * 993e12).abs() / s.peak_flops() < 1e-12);
+        assert!((s.peak_flops().raw() - 8.0 * 993e12).abs() / s.peak_flops().raw() < 1e-12);
         assert!(s.price_usd() > 8.0 * s.chip.price_usd * 0.99);
         assert!(s.power_w() > 8.0 * s.chip.power_w * 0.99);
     }

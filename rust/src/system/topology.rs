@@ -7,6 +7,7 @@
 //! [47], DGX-1 [2], DGX-2 [51].
 
 use super::interconnect::LinkTech;
+use crate::util::units::{BytesPerSec, Seconds};
 
 /// The 1-D building blocks.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -38,10 +39,10 @@ pub enum DimFabric {
 pub struct Dim {
     pub kind: DimKind,
     pub size: usize,
-    /// Per-link, per-direction bandwidth (bytes/s).
-    pub link_bw: f64,
-    /// Per-hop latency (s).
-    pub latency: f64,
+    /// Per-link, per-direction bandwidth.
+    pub link_bw: BytesPerSec,
+    /// Per-hop latency.
+    pub latency: Seconds,
     /// Link-level wiring used by the fabric simulator.
     pub fabric: DimFabric,
 }
@@ -134,21 +135,21 @@ impl Topology {
         self.dims.iter().map(|d| d.size).collect()
     }
 
-    /// One-way bisection bandwidth (bytes/s): the worst balanced cut runs
+    /// One-way bisection bandwidth: the worst balanced cut runs
     /// perpendicular to one dim, crossed by that dim's bisection links in
     /// each of the `n_chips / size` parallel lines. 0 for a single chip.
-    pub fn bisection_bytes_per_s(&self) -> f64 {
+    pub fn bisection_bytes_per_s(&self) -> BytesPerSec {
         let n = self.n_chips() as f64;
         let worst = self
             .dims
             .iter()
             .filter(|d| d.size > 1)
             .map(|d| d.bisection_links() * d.link_bw * n / d.size as f64)
-            .fold(f64::INFINITY, f64::min);
+            .fold(BytesPerSec::new(f64::INFINITY), BytesPerSec::min);
         if worst.is_finite() {
             worst
         } else {
-            0.0
+            BytesPerSec::ZERO
         }
     }
 }
@@ -344,14 +345,14 @@ mod tests {
         let bw = l.bandwidth;
         // 32×32 torus: 2 links × 32 parallel rows in the worst direction
         let t2 = torus2d(32, 32, &l);
-        assert!((t2.bisection_bytes_per_s() - 64.0 * bw).abs() < 1e-3);
+        assert!((t2.bisection_bytes_per_s() - 64.0 * bw).abs().raw() < 1e-3);
         // a single chip has no bisection
-        assert_eq!(ring(1, &l).bisection_bytes_per_s(), 0.0);
+        assert_eq!(ring(1, &l).bisection_bytes_per_s().raw(), 0.0);
         // dragonfly's all-pairs global dim dwarfs the torus cut
         assert!(dragonfly(32, 32, &l).bisection_bytes_per_s() > t2.bisection_bytes_per_s());
         // DGX-1: intra-node cube-mesh cut = 4·bw × (n/8) lines
         let d1 = dgx1(128, &l);
-        assert!((d1.bisection_bytes_per_s() - 4.0 * bw * 128.0).abs() < 1e-3);
+        assert!((d1.bisection_bytes_per_s() - 4.0 * bw * 128.0).abs().raw() < 1e-3);
     }
 
     #[test]

@@ -17,6 +17,13 @@ pub fn check<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(name: &str, cases: u64
         prop(&mut rng);
         return;
     }
+    // Probing runs expected failures under catch_unwind: silence the
+    // default panic hook while probing so they don't spray backtraces into
+    // test output, and restore it before reporting (so the harness's own
+    // failure panic still prints normally).
+    let hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let mut failure: Option<(u64, u64, String)> = None;
     for case in 0..cases {
         let seed = splitmix(name, case);
         let result = std::panic::catch_unwind(|| {
@@ -29,15 +36,20 @@ pub fn check<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(name: &str, cases: u64
                 .cloned()
                 .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
                 .unwrap_or_else(|| "<non-string panic>".into());
-            panic!("property '{name}' failed at case {case} (CHECK_SEED={seed}): {msg}");
+            failure = Some((case, seed, msg));
+            break;
         }
+    }
+    std::panic::set_hook(hook);
+    if let Some((case, seed, msg)) = failure {
+        panic!("property '{name}' failed at case {case} (CHECK_SEED={seed}): {msg}");
     }
 }
 
 fn splitmix(name: &str, case: u64) -> u64 {
     let mut h: u64 = 0xcbf29ce484222325;
     for b in name.bytes() {
-        h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+        h = (h ^ u64::from(b)).wrapping_mul(0x100000001b3);
     }
     h ^ case.wrapping_mul(0x9E3779B97F4A7C15)
 }

@@ -175,7 +175,7 @@ impl<'a> Parser<'a> {
             Ok(())
         } else {
             self.pos -= usize::from(self.pos > 0);
-            Err(self.err(&format!("expected '{}'", c as char)))
+            Err(self.err(&format!("expected '{}'", char::from(c))))
         }
     }
 
@@ -266,7 +266,7 @@ impl<'a> Parser<'a> {
                         for _ in 0..4 {
                             let c = self.bump().ok_or_else(|| self.err("bad \\u"))?;
                             code = code * 16
-                                + (c as char).to_digit(16).ok_or_else(|| self.err("bad hex"))?;
+                                + char::from(c).to_digit(16).ok_or_else(|| self.err("bad hex"))?;
                         }
                         // Surrogate pairs: \uD800-\uDBFF followed by \uDC00-\uDFFF.
                         if (0xD800..0xDC00).contains(&code) {
@@ -276,8 +276,10 @@ impl<'a> Parser<'a> {
                             let mut lo = 0u32;
                             for _ in 0..4 {
                                 let c = self.bump().ok_or_else(|| self.err("bad \\u"))?;
-                                lo = lo * 16
-                                    + (c as char).to_digit(16).ok_or_else(|| self.err("bad hex"))?;
+                                let d = char::from(c)
+                                    .to_digit(16)
+                                    .ok_or_else(|| self.err("bad hex"))?;
+                                lo = lo * 16 + d;
                             }
                             code = 0x10000 + ((code - 0xD800) << 10) + (lo - 0xDC00);
                         }
@@ -288,7 +290,7 @@ impl<'a> Parser<'a> {
                 Some(c) => {
                     // Re-assemble UTF-8 multibyte sequences.
                     if c < 0x80 {
-                        out.push(c as char);
+                        out.push(char::from(c));
                     } else {
                         let start = self.pos - 1;
                         let len = if c >= 0xF0 {
@@ -348,7 +350,7 @@ fn escape(s: &str, out: &mut String) {
             '\n' => out.push_str("\\n"),
             '\r' => out.push_str("\\r"),
             '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c if u32::from(c) < 0x20 => out.push_str(&format!("\\u{:04x}", u32::from(c))),
             c => out.push(c),
         }
     }

@@ -46,7 +46,7 @@ impl Rng {
         assert!(n > 0, "Rng::below(0)");
         // Rejection-free for our (small-n) uses; modulo bias is negligible
         // for n << 2^64 but we use multiply-shift to avoid it anyway.
-        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+        ((u128::from(self.next_u64()) * n as u128) >> 64) as usize
     }
 
     /// Uniform integer in [lo, hi] inclusive.

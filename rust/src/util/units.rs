@@ -1,7 +1,33 @@
-//! Unit constants and human-readable formatting for the performance model.
+//! Unit constants, typed dimensional quantities, and human-readable
+//! formatting for the performance model.
 //!
 //! Convention throughout the crate: bytes and FLOP are `f64` in base units,
 //! times in seconds, bandwidths in bytes/second, compute in FLOP/second.
+//! The core analytical path (`system/`, `roofline/`, `collective/`,
+//! `sharding/`, `interchip/`, `pipeline/`, `explore::bound`) carries these
+//! quantities in the zero-cost newtypes below so that dimension mixups
+//! (bytes vs bytes/s, $ vs W) are compile errors rather than silently wrong
+//! predictions. Peripheral layers (JSON serialization, figures, the graph
+//! IR) stay on raw `f64` and convert at the boundary via the documented
+//! escape hatches [`Bytes::new`]/[`Bytes::raw`] (and likewise for every
+//! other unit type).
+//!
+//! # Dimensional laws
+//!
+//! Only dimension-correct arithmetic compiles:
+//!
+//! - `Bytes / BytesPerSec = Seconds` and `Bytes / Seconds = BytesPerSec`
+//! - `Flop / FlopPerSec = Seconds` and `Flop / Seconds = FlopPerSec`
+//! - `Seconds * BytesPerSec = Bytes` (commutative)
+//! - `Seconds * FlopPerSec = Flop` (commutative)
+//! - same-type `+`, `-`, `+=`, `-=`, `sum()`, `max`/`min`, ordered
+//!   comparisons
+//! - scalar `* f64` / `/ f64` (commutative for `*`)
+//! - same-type `/` yields a dimensionless `f64` ratio
+//!
+//! Every wrapped operation is the identical IEEE-754 `f64` operation in the
+//! identical order, so the typed refactor is bit-for-bit invisible: the
+//! pinned parity tests (`tests/explore.rs`, figure pins) pass unchanged.
 
 pub const KB: f64 = 1e3;
 pub const MB: f64 = 1e6;
@@ -19,6 +45,259 @@ pub const PFLOPS: f64 = 1e15;
 pub const US: f64 = 1e-6;
 pub const MS: f64 = 1e-3;
 pub const NS: f64 = 1e-9;
+
+/// Generate a zero-cost unit newtype with same-dimension arithmetic,
+/// scalar scaling, ordered comparisons, and the serialization escape
+/// hatches (`new`/`raw`/`to_bits`).
+macro_rules! unit_type {
+    ($(#[$meta:meta])* $name:ident) => {
+        $(#[$meta])*
+        #[derive(Debug, Clone, Copy, PartialEq, PartialOrd, Default)]
+        pub struct $name(f64);
+
+        impl $name {
+            /// The zero quantity.
+            pub const ZERO: $name = $name(0.0);
+
+            /// Wrap a raw `f64` in base units (escape hatch for
+            /// deserialization and catalog literals).
+            #[inline]
+            pub const fn new(v: f64) -> Self {
+                Self(v)
+            }
+
+            /// Unwrap to the raw `f64` in base units (escape hatch for
+            /// serialization and cross-dimension formulas such as
+            /// operational intensity).
+            #[inline]
+            pub const fn raw(self) -> f64 {
+                self.0
+            }
+
+            /// Bit pattern of the underlying `f64` (for bitwise parity
+            /// pins and hash keys).
+            #[inline]
+            pub fn to_bits(self) -> u64 {
+                self.0.to_bits()
+            }
+
+            /// Larger of the two quantities (IEEE `f64::max` semantics).
+            #[inline]
+            pub fn max(self, other: Self) -> Self {
+                Self(self.0.max(other.0))
+            }
+
+            /// Smaller of the two quantities (IEEE `f64::min` semantics).
+            #[inline]
+            pub fn min(self, other: Self) -> Self {
+                Self(self.0.min(other.0))
+            }
+
+            /// Magnitude of the quantity.
+            #[inline]
+            pub fn abs(self) -> Self {
+                Self(self.0.abs())
+            }
+
+            /// True unless the quantity is NaN or infinite.
+            #[inline]
+            pub fn is_finite(self) -> bool {
+                self.0.is_finite()
+            }
+        }
+
+        impl std::ops::Add for $name {
+            type Output = Self;
+            #[inline]
+            fn add(self, o: Self) -> Self {
+                Self(self.0 + o.0)
+            }
+        }
+
+        impl std::ops::Sub for $name {
+            type Output = Self;
+            #[inline]
+            fn sub(self, o: Self) -> Self {
+                Self(self.0 - o.0)
+            }
+        }
+
+        impl std::ops::Neg for $name {
+            type Output = Self;
+            #[inline]
+            fn neg(self) -> Self {
+                Self(-self.0)
+            }
+        }
+
+        impl std::ops::AddAssign for $name {
+            #[inline]
+            fn add_assign(&mut self, o: Self) {
+                self.0 += o.0;
+            }
+        }
+
+        impl std::ops::SubAssign for $name {
+            #[inline]
+            fn sub_assign(&mut self, o: Self) {
+                self.0 -= o.0;
+            }
+        }
+
+        impl std::ops::Mul<f64> for $name {
+            type Output = Self;
+            #[inline]
+            fn mul(self, s: f64) -> Self {
+                Self(self.0 * s)
+            }
+        }
+
+        impl std::ops::Mul<$name> for f64 {
+            type Output = $name;
+            #[inline]
+            fn mul(self, u: $name) -> $name {
+                $name(self * u.0)
+            }
+        }
+
+        impl std::ops::Div<f64> for $name {
+            type Output = Self;
+            #[inline]
+            fn div(self, s: f64) -> Self {
+                Self(self.0 / s)
+            }
+        }
+
+        impl std::ops::MulAssign<f64> for $name {
+            #[inline]
+            fn mul_assign(&mut self, s: f64) {
+                self.0 *= s;
+            }
+        }
+
+        impl std::ops::DivAssign<f64> for $name {
+            #[inline]
+            fn div_assign(&mut self, s: f64) {
+                self.0 /= s;
+            }
+        }
+
+        /// Same-dimension ratio: dimensionless.
+        impl std::ops::Div for $name {
+            type Output = f64;
+            #[inline]
+            fn div(self, o: Self) -> f64 {
+                self.0 / o.0
+            }
+        }
+
+        impl std::iter::Sum for $name {
+            fn sum<I: Iterator<Item = Self>>(it: I) -> Self {
+                Self(it.map(|u| u.0).sum())
+            }
+        }
+
+        impl<'a> std::iter::Sum<&'a $name> for $name {
+            fn sum<I: Iterator<Item = &'a Self>>(it: I) -> Self {
+                Self(it.map(|u| u.0).sum())
+            }
+        }
+    };
+}
+
+/// `A / B = C` dimensional law.
+macro_rules! unit_law_div {
+    ($a:ident / $b:ident = $c:ident) => {
+        impl std::ops::Div<$b> for $a {
+            type Output = $c;
+            #[inline]
+            fn div(self, o: $b) -> $c {
+                $c(self.0 / o.0)
+            }
+        }
+    };
+}
+
+/// `A * B = C` dimensional law (both operand orders).
+macro_rules! unit_law_mul {
+    ($a:ident * $b:ident = $c:ident) => {
+        impl std::ops::Mul<$b> for $a {
+            type Output = $c;
+            #[inline]
+            fn mul(self, o: $b) -> $c {
+                $c(self.0 * o.0)
+            }
+        }
+
+        impl std::ops::Mul<$a> for $b {
+            type Output = $c;
+            #[inline]
+            fn mul(self, o: $a) -> $c {
+                $c(self.0 * o.0)
+            }
+        }
+    };
+}
+
+unit_type! {
+    /// A data size in bytes.
+    Bytes
+}
+unit_type! {
+    /// A bandwidth in bytes per second.
+    BytesPerSec
+}
+unit_type! {
+    /// A floating-point operation count.
+    Flop
+}
+unit_type! {
+    /// A compute rate in FLOP per second.
+    FlopPerSec
+}
+unit_type! {
+    /// A duration in seconds.
+    Seconds
+}
+unit_type! {
+    /// An electrical power in watts.
+    Watts
+}
+unit_type! {
+    /// A price in US dollars.
+    Dollars
+}
+
+unit_law_div!(Bytes / BytesPerSec = Seconds);
+unit_law_div!(Bytes / Seconds = BytesPerSec);
+unit_law_div!(Flop / FlopPerSec = Seconds);
+unit_law_div!(Flop / Seconds = FlopPerSec);
+unit_law_mul!(Seconds * BytesPerSec = Bytes);
+unit_law_mul!(Seconds * FlopPerSec = Flop);
+
+impl std::fmt::Display for Bytes {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&fmt_bytes(self.0))
+    }
+}
+
+impl std::fmt::Display for BytesPerSec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&fmt_bw(self.0))
+    }
+}
+
+impl std::fmt::Display for FlopPerSec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&fmt_flops(self.0))
+    }
+}
+
+impl std::fmt::Display for Seconds {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&fmt_time(self.0))
+    }
+}
 
 /// "12.3 GB/s", "1.50 TB/s" …
 pub fn fmt_bw(bytes_per_s: f64) -> String {
@@ -54,8 +333,12 @@ pub fn fmt_time(secs: f64) -> String {
 
 fn fmt_scaled(v: f64, scales: &[(f64, &str)], base: &str) -> String {
     for &(s, name) in scales {
-        if v.abs() >= s {
-            return format!("{:.3} {}", v / s, name);
+        // Select the scale by the magnitude as it will appear after the
+        // 3-decimal rounding, so 999.9995 GB/s promotes to "1.000 TB/s"
+        // instead of rendering as "1000.000 GB/s".
+        let scaled = v / s;
+        if (scaled.abs() * 1e3).round() >= 1e3 {
+            return format!("{scaled:.3} {name}");
         }
     }
     format!("{v:.1} {base}")
@@ -90,5 +373,82 @@ mod tests {
     fn formats_bytes() {
         assert_eq!(fmt_bytes(640.0 * MB), "640.000 MB");
         assert_eq!(fmt_bytes(40.0 * GB), "40.000 GB");
+    }
+
+    #[test]
+    fn boundary_rounding_promotes_to_next_scale() {
+        // 999.9995 GB/s rounds to 1000.000 at 3 decimals — must promote.
+        assert_eq!(fmt_bw(999.9995 * GB), "1.000 TB/s");
+        // just below the promotion point stays at the smaller scale
+        assert_eq!(fmt_bw(999.4 * GB), "999.400 GB/s");
+        // exact boundary
+        assert_eq!(fmt_bw(1000.0 * GB), "1.000 TB/s");
+        // the same promotion applies to the base unit -> first scale edge
+        assert_eq!(fmt_bytes(999.9995), "1.000 KB");
+        assert_eq!(fmt_flops(999.9995 * TFLOPS), "1.000 PFLOPS");
+        // negative values promote symmetrically
+        assert_eq!(fmt_bw(-999.9995 * GB), "-1.000 TB/s");
+    }
+
+    #[test]
+    fn typed_ratio_laws() {
+        let t: Seconds = Bytes::new(10.0 * GB) / BytesPerSec::new(1.0 * GB);
+        assert_eq!(t.raw(), 10.0);
+        let t2: Seconds = Flop::new(8.0 * TFLOPS) / FlopPerSec::new(2.0 * TFLOPS);
+        assert_eq!(t2.raw(), 4.0);
+        let b: Bytes = Seconds::new(2.0) * BytesPerSec::new(3.0);
+        assert_eq!(b.raw(), 6.0);
+        let b2: Bytes = BytesPerSec::new(3.0) * Seconds::new(2.0);
+        assert_eq!(b2.raw(), 6.0);
+        let f: Flop = Seconds::new(2.0) * FlopPerSec::new(5.0);
+        assert_eq!(f.raw(), 10.0);
+        let bw: BytesPerSec = Bytes::new(6.0) / Seconds::new(2.0);
+        assert_eq!(bw.raw(), 3.0);
+        let rate: FlopPerSec = Flop::new(6.0) / Seconds::new(3.0);
+        assert_eq!(rate.raw(), 2.0);
+    }
+
+    #[test]
+    fn typed_scalar_and_same_dimension_ops() {
+        let a = Bytes::new(4.0);
+        assert_eq!((a * 2.0).raw(), 8.0);
+        assert_eq!((2.0 * a).raw(), 8.0);
+        assert_eq!((a / 2.0).raw(), 2.0);
+        assert_eq!((a + a).raw(), 8.0);
+        assert_eq!((a - a).raw(), 0.0);
+        assert_eq!(a / a, 1.0);
+        assert_eq!((-a).raw(), -4.0);
+        let mut m = Seconds::new(1.0);
+        m += Seconds::new(0.5);
+        m -= Seconds::new(0.25);
+        assert_eq!(m.raw(), 1.25);
+        assert!(Watts::new(1.0) < Watts::new(2.0));
+        assert_eq!(Dollars::new(3.0).max(Dollars::new(5.0)).raw(), 5.0);
+        assert_eq!(Dollars::new(3.0).min(Dollars::new(5.0)).raw(), 3.0);
+        let total: Seconds = [Seconds::new(1.0), Seconds::new(2.0)].into_iter().sum();
+        assert_eq!(total.raw(), 3.0);
+        let total_ref: Seconds = [Seconds::new(1.0), Seconds::new(2.0)].iter().sum();
+        assert_eq!(total_ref.raw(), 3.0);
+    }
+
+    #[test]
+    fn typed_ops_are_bitwise_raw_f64_ops() {
+        // The newtype wrappers must be numerically invisible: the same
+        // f64 expression through the typed path yields the same bits.
+        let (x, y) = (1234.5678e9, 3.14159e9);
+        assert_eq!((Bytes::new(x) / BytesPerSec::new(y)).to_bits(), (x / y).to_bits());
+        assert_eq!((Seconds::new(x) * BytesPerSec::new(y)).to_bits(), (x * y).to_bits());
+        assert_eq!((Flop::new(x) / Seconds::new(y)).to_bits(), (x / y).to_bits());
+        assert_eq!((Watts::new(x) * 0.37).to_bits(), (x * 0.37).to_bits());
+        assert_eq!(Bytes::new(x).to_bits(), x.to_bits());
+        assert_eq!(Bytes::ZERO.raw(), 0.0);
+    }
+
+    #[test]
+    fn typed_display_delegates_to_formatters() {
+        assert_eq!(BytesPerSec::new(900.0 * GB).to_string(), fmt_bw(900.0 * GB));
+        assert_eq!(Bytes::new(40.0 * GB).to_string(), fmt_bytes(40.0 * GB));
+        assert_eq!(FlopPerSec::new(993.0 * TFLOPS).to_string(), fmt_flops(993.0 * TFLOPS));
+        assert_eq!(Seconds::new(0.0025).to_string(), fmt_time(0.0025));
     }
 }

@@ -11,6 +11,7 @@ use dfmodel::system::interconnect::nvlink4;
 use dfmodel::system::topology::{self, Dim, DimKind};
 use dfmodel::system::{chip, interconnect, memory, SystemSpec};
 use dfmodel::util::check::check;
+use dfmodel::util::units::Bytes;
 
 const FIVE: [Collective; 5] = [
     Collective::AllReduce,
@@ -30,7 +31,7 @@ fn ring_algorithm_matches_analytical_on_ring_dims() {
             let group: Vec<usize> = (0..k).collect();
             let s = build(&g, Algo::Ring, Collective::AllReduce, &group, bytes).unwrap();
             let sim = dfmodel::fabric::simulate(&g, &s, &SimConfig::default()).time;
-            let ana = collective::time(Collective::AllReduce, bytes, &t.dims[0]);
+            let ana = collective::time(Collective::AllReduce, Bytes::new(bytes), &t.dims[0]).raw();
             let rel = (sim - ana).abs() / ana;
             assert!(rel < 0.15, "k={k} bytes={bytes}: sim {sim} vs ana {ana} ({rel:.3})");
             // in fact the match is exact up to float noise
@@ -43,7 +44,7 @@ fn ring_algorithm_matches_analytical_on_ring_dims() {
     let col0: Vec<usize> = (0..4).collect(); // varies dim 0 only
     let s = build(&g, Algo::Ring, Collective::AllReduce, &col0, 16e6).unwrap();
     let sim = dfmodel::fabric::simulate(&g, &s, &SimConfig::default()).time;
-    let ana = collective::time(Collective::AllReduce, 16e6, &t.dims[0]);
+    let ana = collective::time(Collective::AllReduce, Bytes::new(16e6), &t.dims[0]).raw();
     assert!((sim - ana).abs() / ana < 1e-9);
 }
 
@@ -63,7 +64,7 @@ fn fabric_matches_analytical_on_fc_and_switch_dims() {
         let g = FabricGraph::new(&t);
         let group: Vec<usize> = (0..k).collect();
         let b = best(&g, &group, coll, bytes, &SimConfig::default()).expect("feasible");
-        let ana = collective::time(coll, bytes, &t.dims[0]);
+        let ana = collective::time(coll, Bytes::new(bytes), &t.dims[0]).raw();
         let rel = (b.time - ana).abs() / ana;
         assert!(
             rel < 0.15,
@@ -85,7 +86,7 @@ fn hier_schedule_matches_time_hier_on_torus() {
         for bytes in [1e6, 64e6] {
             let s = build(&g, Algo::Hier, coll, &group, bytes).unwrap();
             let sim = dfmodel::fabric::simulate(&g, &s, &SimConfig::default()).time;
-            let ana = collective::time_hier(coll, bytes, &dims);
+            let ana = collective::time_hier(coll, Bytes::new(bytes), &dims).raw();
             let rel = (sim - ana).abs() / ana;
             assert!(rel < 0.02, "{coll:?} S={bytes:.0e}: sim {sim} ana {ana} ({rel:.3})");
         }
@@ -118,7 +119,7 @@ fn dgx1_cube_mesh_gap_is_quantified() {
     let group: Vec<usize> = (0..8).collect();
     let b = best(&g, &group, Collective::AllReduce, 64e6, &SimConfig::default()).unwrap();
     let fc = Dim::new(DimKind::FullyConnected, 8, &nvlink4());
-    let ana = collective::time(Collective::AllReduce, 64e6, &fc);
+    let ana = collective::time(Collective::AllReduce, Bytes::new(64e6), &fc).raw();
     let gap = b.time / ana;
     assert!(gap > 2.0 && gap < 10.0, "cube-mesh/FC gap {gap}");
 }
@@ -144,7 +145,7 @@ fn calibrated_model_threads_through_interchip_optimize() {
     let opts = InterChipOptions { force_degrees: Some((8, 1, 1)), ..Default::default() };
     let ana = api::map_graph(&g, &sys, &opts).expect("analytical mapping");
     let cal = api::map_graph(&g, &cal_sys, &opts).expect("calibrated mapping");
-    assert!(cal.t_cri.is_finite() && cal.t_cri > 0.0);
+    assert!(cal.t_cri.is_finite() && cal.t_cri.raw() > 0.0);
     let ratio = cal.t_cri / ana.t_cri;
     assert!((0.2..5.0).contains(&ratio), "calibrated/analytical t_cri ratio {ratio}");
 }

@@ -1,0 +1,131 @@
+//! Golden coverage for the `dfmodel lint` static checker: every rule has a
+//! committed fixture in `examples/scenarios/bad/` that triggers exactly its
+//! code, every committed (good) scenario lints clean, the `evaluate`
+//! pre-flight gate blocks on errors (and only errors), and lint-clean
+//! scenarios never panic the optimizer.
+
+use dfmodel::api::{Scenario, SystemCfg};
+use dfmodel::lint::{lint_json, LintReport};
+use dfmodel::util::json::Json;
+use std::path::{Path, PathBuf};
+
+fn scenario_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/scenarios")
+}
+
+fn lint_file(path: &Path) -> LintReport {
+    let text = std::fs::read_to_string(path).unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+    let j = Json::parse(&text).unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+    lint_json(&j)
+}
+
+/// One fixture per rule, each triggering exactly its own code.
+#[test]
+fn every_rule_has_a_fixture_that_triggers_exactly_it() {
+    let golden: &[(&str, &str, bool)] = &[
+        ("c001_unknown_chip.json", "DF-C001", true),
+        ("g001_dangling.json", "DF-G001", true),
+        ("g002_cycle.json", "DF-G002", true),
+        ("g003_zero_tensor.json", "DF-G003", true),
+        ("g004_bad_dims.json", "DF-G004", true),
+        ("s001_negative_bandwidth.json", "DF-S001", true),
+        ("s002_inverted_hierarchy.json", "DF-S002", false),
+        ("s003_dims_vs_chips.json", "DF-S003", true),
+        ("s004_power_outlier.json", "DF-S004", false),
+        ("m001_forced_mismatch.json", "DF-M001", true),
+        ("m002_split_mismatch.json", "DF-M002", true),
+        ("m003_kv_overflow.json", "DF-M003", true),
+        ("m004_sram_oversub.json", "DF-M004", false),
+    ];
+    for (file, code, is_error) in golden {
+        let r = lint_file(&scenario_dir().join("bad").join(file));
+        assert_eq!(r.codes(), vec![*code], "{file}: {:?}", r.diags);
+        assert_eq!(r.has_errors(), *is_error, "{file}: {:?}", r.diags);
+        assert!(!r.is_clean(), "{file} should not be clean");
+    }
+}
+
+/// No rule fires on a bad fixture without a golden entry: the directory
+/// holds exactly the files the table above names.
+#[test]
+fn bad_fixture_directory_matches_the_golden_table() {
+    let mut files: Vec<String> = std::fs::read_dir(scenario_dir().join("bad"))
+        .expect("bad fixture dir")
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .collect();
+    files.sort();
+    assert_eq!(files.len(), 13, "{files:?}");
+}
+
+/// Every committed example scenario stays lint-clean (no errors, no
+/// warnings) — the same invariant CI enforces via `dfmodel lint`.
+#[test]
+fn committed_scenarios_lint_clean() {
+    let mut checked = 0;
+    for entry in std::fs::read_dir(scenario_dir()).expect("scenario dir") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        let r = lint_file(&path);
+        assert!(r.is_clean(), "{}: {}", path.display(), r.render());
+        checked += 1;
+    }
+    assert!(checked >= 3, "expected the committed example scenarios, found {checked}");
+}
+
+/// The evaluate pre-flight: errors abort with the diagnostics in the
+/// message; `no_lint` opts out and falls through to the optimizer's own
+/// (lint-free) error.
+#[test]
+fn evaluate_gate_blocks_on_errors_and_no_lint_opts_out() {
+    let s = Scenario::load(&scenario_dir().join("bad/m001_forced_mismatch.json")).expect("load");
+    let e = s.evaluate().expect_err("lint gate should block").to_string();
+    assert!(e.contains("DF-M001"), "{e}");
+    assert!(e.contains("scenario fails lint"), "{e}");
+    let e = s.no_lint().evaluate().expect_err("still infeasible").to_string();
+    assert!(!e.contains("lint"), "{e}");
+}
+
+/// Warning-only findings do not block; they ride along on the report
+/// (render + JSON) instead.
+#[test]
+fn warnings_ride_along_on_the_report() {
+    let s = Scenario::load(&scenario_dir().join("bad/s002_inverted_hierarchy.json")).expect("load");
+    let r = s.evaluate().expect("warnings must not block evaluation");
+    assert!(r.lint.n_warnings() >= 1 && r.lint.n_errors() == 0, "{}", r.lint.render());
+    assert!(r.render().contains("warning[DF-S002]"), "{}", r.render());
+    assert!(r.to_json().get("lint").is_some());
+}
+
+/// The `lint` field round-trips through JSON, and stays out of the JSON
+/// when it has its default value.
+#[test]
+fn no_lint_roundtrips_through_json() {
+    let s = Scenario::llm("gpt3-175b");
+    assert!(s.to_json().get("lint").is_none());
+    let s = s.no_lint();
+    let text = s.to_json().pretty();
+    assert_eq!(Scenario::parse(&text).expect("reparse"), s);
+}
+
+/// Property: over a small catalog grid, a scenario that lints with no
+/// errors never panics the optimizer — `evaluate` returns Ok or a clean
+/// Err, both acceptable.
+#[test]
+fn lint_clean_scenarios_never_panic_the_optimizer() {
+    for chip in ["sn10", "h100"] {
+        for mem in ["ddr4", "hbm3"] {
+            for link in ["pcie4", "nvlink4"] {
+                for chips in [4usize, 8] {
+                    let s = Scenario::llm("gpt3-175b")
+                        .batch(64.0)
+                        .on(SystemCfg::new(chip, mem, link).ring(chips));
+                    let lint = dfmodel::lint::lint_scenario(&s);
+                    assert!(!lint.has_errors(), "{chip}/{mem}/{link}: {}", lint.render());
+                    let _ = s.evaluate(); // must not panic
+                }
+            }
+        }
+    }
+}

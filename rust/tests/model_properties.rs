@@ -9,6 +9,7 @@ use dfmodel::system::interconnect::{nvlink4, pcie4};
 use dfmodel::system::topology::{Dim, DimKind};
 use dfmodel::util::check::check;
 use dfmodel::util::json::Json;
+use dfmodel::util::units::Bytes;
 
 const COLLS: [Collective; 6] = [
     Collective::AllReduce,
@@ -30,7 +31,8 @@ fn collective_time_monotone_in_bytes() {
         let coll = *rng.choice(&COLLS);
         let s1 = rng.uniform(1e3, 1e9);
         let s2 = s1 * rng.uniform(1.0, 10.0);
-        let (t1, t2) = (time(coll, s1, &dim), time(coll, s2, &dim));
+        let (t1, t2) =
+            (time(coll, Bytes::new(s1), &dim).raw(), time(coll, Bytes::new(s2), &dim).raw());
         assert!(t2 >= t1 - 1e-15, "{coll:?} {kind:?} k={k}: {t1} vs {t2}");
     });
 }
@@ -46,13 +48,13 @@ fn collective_time_nonnegative_free_singletons_and_ar_dominates_ag() {
         let coll = *rng.choice(&COLLS);
         let s = rng.uniform(1.0, 1e10);
         let single = Dim::new(kind, 1, &nvlink4());
-        assert_eq!(time(coll, s, &single), 0.0, "{coll:?} {kind:?} singleton not free");
+        assert_eq!(time(coll, Bytes::new(s), &single).raw(), 0.0, "{coll:?} {kind:?} singleton not free");
         let k = 2 + rng.below(127);
         let dim = Dim::new(kind, k, &nvlink4());
-        let t = time(coll, s, &dim);
+        let t = time(coll, Bytes::new(s), &dim).raw();
         assert!(t.is_finite() && t >= 0.0, "{coll:?} {kind:?} k={k}: t={t}");
-        let ar = time(Collective::AllReduce, s, &dim);
-        let ag = time(Collective::AllGather, s, &dim);
+        let ar = time(Collective::AllReduce, Bytes::new(s), &dim).raw();
+        let ag = time(Collective::AllGather, Bytes::new(s), &dim).raw();
         assert!(ar >= ag - 1e-15, "{kind:?} k={k}: all-reduce {ar} < all-gather {ag}");
     });
 }
@@ -66,7 +68,7 @@ fn collective_time_monotone_in_bandwidth() {
         let slow = Dim::new(kind, k, &pcie4());
         let coll = *rng.choice(&COLLS);
         let s = rng.uniform(1e3, 1e9);
-        assert!(time(coll, s, &fast) <= time(coll, s, &slow) + 1e-15);
+        assert!(time(coll, Bytes::new(s), &fast).raw() <= time(coll, Bytes::new(s), &slow).raw() + 1e-15);
     });
 }
 
@@ -78,9 +80,9 @@ fn allreduce_equals_rs_plus_ag_on_every_kind() {
         let k = 2 + rng.below(63);
         let dim = Dim::new(kind, k, &nvlink4());
         let s = rng.uniform(1e4, 1e9);
-        let ar = time(Collective::AllReduce, s, &dim);
-        let rs_ag =
-            time(Collective::ReduceScatter, s, &dim) + time(Collective::AllGather, s, &dim);
+        let ar = time(Collective::AllReduce, Bytes::new(s), &dim).raw();
+        let rs_ag = time(Collective::ReduceScatter, Bytes::new(s), &dim).raw()
+            + time(Collective::AllGather, Bytes::new(s), &dim).raw();
         assert!(
             (ar - rs_ag).abs() <= 1e-9 * ar.max(1e-12),
             "{kind:?} k={k}: ar {ar} vs rs+ag {rs_ag}"
@@ -95,10 +97,10 @@ fn hierarchical_collectives_nonnegative_and_finite() {
         let d2 = Dim::new(*rng.choice(&KINDS), 1 + rng.below(32), &pcie4());
         let coll = *rng.choice(&COLLS);
         let s = rng.uniform(0.0, 1e9);
-        let t = time_hier(coll, s, &[&d1, &d2]);
+        let t = time_hier(coll, Bytes::new(s), &[&d1, &d2]).raw();
         assert!(t.is_finite() && t >= 0.0);
         // zero payload is free
-        assert_eq!(time_hier(coll, 0.0, &[&d1, &d2]), 0.0);
+        assert_eq!(time_hier(coll, Bytes::new(0.0), &[&d1, &d2]).raw(), 0.0);
     });
 }
 
@@ -114,8 +116,8 @@ fn hierarchical_time_monotone_in_payload_across_all_dim_kinds() {
         let coll = *rng.choice(&COLLS);
         let s1 = rng.uniform(1e3, 1e9);
         let s2 = s1 * rng.uniform(1.0, 16.0);
-        let t1 = time_hier(coll, s1, &[&d1, &d2, &d3]);
-        let t2 = time_hier(coll, s2, &[&d1, &d2, &d3]);
+        let t1 = time_hier(coll, Bytes::new(s1), &[&d1, &d2, &d3]).raw();
+        let t2 = time_hier(coll, Bytes::new(s2), &[&d1, &d2, &d3]).raw();
         assert!(
             t2 >= t1 - 1e-15,
             "{coll:?} over ({:?},{:?},{:?}): S {s1:.3e}->{s2:.3e} but t {t1:.3e}->{t2:.3e}",
@@ -138,7 +140,7 @@ fn conversion_algebra_consistency() {
         assert_eq!(conversion_op(Layout::Replicated, to), None);
         // cost is zero iff the op is None
         let dim = Dim::new(DimKind::Ring, 8, &nvlink4());
-        let t = conversion_time(from, to, 1e8, &[&dim]);
+        let t = conversion_time(from, to, 1e8, &[&dim]).raw();
         match conversion_op(from, to) {
             None => assert_eq!(t, 0.0),
             Some(_) => assert!(t > 0.0),

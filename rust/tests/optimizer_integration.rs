@@ -81,8 +81,8 @@ fn interchip_mapping_invariants_on_random_instances() {
         let asg = Assignment::new(m.stage_of.clone(), m.stages.len());
         assert!(asg.respects_precedence(&g), "stage precedence violated");
         // objective equals the max stage critical time
-        let max_stage = m.stages.iter().map(|s| s.t_cri()).fold(0.0f64, f64::max);
-        assert!((m.t_cri - max_stage).abs() <= 1e-12 * max_stage.max(1.0));
+        let max_stage = m.stages.iter().map(|s| s.t_cri().raw()).fold(0.0f64, f64::max);
+        assert!((m.t_cri.raw() - max_stage).abs() <= 1e-12 * max_stage.max(1.0));
         // latency vectors are non-negative and finite
         assert!(m.vectors.h_c.iter().all(|v| v.is_finite() && *v >= 0.0));
         assert!(m.vectors.h_n.iter().all(|v| v.is_finite() && *v >= 0.0));
@@ -108,7 +108,7 @@ fn intrachip_mapping_invariants_on_random_instances() {
         assert!((m.total_time - sum).abs() <= 1e-12 * sum.max(1.0));
         // SRAM constraint holds in every partition
         for p in &m.partitions {
-            assert!(p.sram_used <= c.sram_bytes * (1.0 + 1e-9), "SRAM violated");
+            assert!(p.sram_used <= c.sram_bytes.raw() * (1.0 + 1e-9), "SRAM violated");
         }
         // fusing never increases DRAM traffic or total time vs kernel-by-kernel
         let kbk = api::map_chip(
@@ -174,7 +174,7 @@ fn pipeline_monotone_in_memory_bandwidth() {
     kbk_chip.execution = dfmodel::system::ExecutionModel::KernelByKernel;
     let mk = |bw: f64| {
         let mut mem = memory::ddr4();
-        mem.bandwidth = bw;
+        mem.bandwidth = dfmodel::util::units::BytesPerSec::new(bw);
         SystemSpec::new(kbk_chip.clone(), mem, link.clone(), topology::ring(8, &link))
     };
     let slow = dfmodel::pipeline::llm_training(&cfg, &mk(100e9), 64.0).unwrap();
@@ -187,7 +187,7 @@ fn failure_injection_zero_capacity_memory() {
     let cfg = gpt::gpt3_1t();
     let link = interconnect::pcie4();
     let mut mem = memory::ddr4();
-    mem.capacity = 1.0; // 1 byte
+    mem.capacity = dfmodel::util::units::Bytes::new(1.0); // 1 byte
     let sys = SystemSpec::new(chip::sn10(), mem, link.clone(), topology::ring(8, &link));
     assert!(dfmodel::pipeline::llm_training(&cfg, &sys, 64.0).is_none());
 }
