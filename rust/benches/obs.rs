@@ -1,0 +1,41 @@
+//! `cargo bench --bench obs`
+//!
+//! Instrumentation overhead: the same `Scenario` evaluated with tracing
+//! off (the default path — one relaxed atomic load per probe) and with a
+//! full span/metric capture armed, plus the raw disabled-probe rate. The
+//! disabled-path entry is the bench-regression gate's <5% contract
+//! (results/bench_obs.json → BENCH_7.json vs ci/bench_baseline.json).
+
+use dfmodel::api::Scenario;
+use dfmodel::util::bench::{quick_mode, Runner};
+
+fn main() {
+    let mut r = Runner::new();
+    let iters = if quick_mode() { 2 } else { 8 };
+    let s = Scenario::llm("gpt3-175b");
+
+    r.run("evaluate_gpt3_175b_tracing_disabled", 1, iters, || {
+        let rep = s.evaluate().expect("feasible");
+        assert!(rep.stats.is_none());
+    });
+
+    let traced = s.clone().traced();
+    r.run("evaluate_gpt3_175b_tracing_enabled", 1, iters, || {
+        let rep = traced.evaluate().expect("feasible");
+        assert!(rep.stats.is_some());
+    });
+
+    // raw disabled-probe throughput: spans + counters with no capture armed
+    // must stay in the tens-of-nanoseconds range
+    let probes = 1_000_000usize;
+    r.run_with_items("span_counter_probes_disabled", 1, iters, probes as f64, || {
+        for i in 0..probes {
+            let _g = dfmodel::obs::span("noop");
+            dfmodel::obs::counter("noop.count", i as u64);
+        }
+    });
+
+    let _ = dfmodel::util::table::write_result("obs.txt", &r.summary());
+    let _ = r.write_json("obs");
+    println!("\n{}", r.summary());
+}

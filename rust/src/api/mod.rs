@@ -32,7 +32,7 @@ pub use report::{
 };
 pub use scenario::{
     ClusterCfg, CollectiveCfg, ExploreOptions, FabricCfg, Goal, Knobs, Scenario, ServingCfg,
-    SystemCfg, TopologyCfg, WorkloadCfg,
+    SystemCfg, TopologyCfg, TraceOptions, WorkloadCfg,
 };
 
 use crate::dse::{DesignPoint, Workload};
@@ -133,22 +133,47 @@ impl Scenario {
     /// the reason (bad name, infeasible split, capacity violation) instead
     /// of a bare `None`.
     pub fn evaluate(&self) -> Result<Report> {
+        if !self.trace.enabled {
+            return self.evaluate_inner();
+        }
+        // arm a thread-scoped span/metric capture around the evaluation and
+        // attach it to the report — everything else is bit-identical to the
+        // untraced path (instrumentation never feeds back into the math)
+        let session = crate::obs::start_capture();
+        let mut out = self.evaluate_inner();
+        let capture = crate::obs::finish_capture(session);
+        if let Ok(rep) = &mut out {
+            rep.stats = Some(capture);
+        }
+        out
+    }
+
+    fn evaluate_inner(&self) -> Result<Report> {
+        let _root = crate::obs::span("scenario.evaluate");
         // lint pre-flight (opt out with `no_lint`): errors abort before any
         // optimizer runs; warnings ride along on the report. Beyond that,
         // no upfront check(): every eval path validates what it touches
         // with the same errors, so nothing is built twice.
-        let lint = if self.lint { crate::lint::lint_scenario(self) } else { Default::default() };
+        let lint = if self.lint {
+            let _s = crate::obs::span("lint");
+            crate::lint::lint_scenario(self)
+        } else {
+            Default::default()
+        };
         if lint.has_errors() {
             bail!("scenario fails lint:\n{}", lint.render());
         }
-        let mut rep = match self.goal {
-            Goal::Map => self.eval_map(),
-            Goal::Serve => self.eval_serve(),
-            Goal::Simulate => self.eval_simulate(),
-            Goal::Plan => self.eval_plan(),
-            Goal::Fabric => self.eval_fabric(),
-            Goal::Explore => self.eval_explore(),
-        }?;
+        let mut rep = {
+            let _goal = crate::obs::span(self.goal.name());
+            match self.goal {
+                Goal::Map => self.eval_map(),
+                Goal::Serve => self.eval_serve(),
+                Goal::Simulate => self.eval_simulate(),
+                Goal::Plan => self.eval_plan(),
+                Goal::Fabric => self.eval_fabric(),
+                Goal::Explore => self.eval_explore(),
+            }?
+        };
         rep.lint = lint;
         Ok(rep)
     }
@@ -166,6 +191,7 @@ impl Scenario {
             fabric: None,
             explore: None,
             lint: Default::default(),
+            stats: None,
         }
     }
 
@@ -604,6 +630,22 @@ mod tests {
         }
         assert_eq!(r.best_utilization(), Some(e.frontier[0].utilization));
         assert!(r.to_json().get("explore").unwrap().get("frontier").is_some());
+    }
+
+    /// Tracing captures the phase spans + counters and never perturbs the
+    /// numbers: stripping `stats` restores bit-parity with the untraced run.
+    #[test]
+    fn traced_evaluation_captures_phases_without_changing_the_report() {
+        let s = Scenario::llm("gpt3-175b");
+        let plain = s.evaluate().unwrap();
+        let mut traced = s.traced().evaluate().unwrap();
+        let cap = traced.stats.take().expect("traced run fills Report.stats");
+        assert_eq!(traced, plain, "tracing must not change any report bit");
+        let shape = cap.structure();
+        for phase in ["scenario.evaluate", "lint", "map", "interchip", "intrachip", "pipeline_dp"] {
+            assert!(shape.contains(phase), "missing span '{phase}' in:\n{shape}");
+        }
+        assert_eq!(cap.counter("pipeline.evaluations"), Some(1));
     }
 
     /// evaluate_design wrapper mirrors the internal point evaluation.

@@ -362,6 +362,10 @@ pub struct ExploreReport {
     /// Conservative under pruning: pruned candidates contribute their
     /// upper bounds to the non-dataflow side.
     pub ratios: Option<(f64, f64, f64)>,
+    /// Per-axis-value coverage: how each chip / memory / link / topology
+    /// value split across evaluated, cache-hit, pruned, and budget-skipped
+    /// candidates (deterministic order — see [`crate::explore::AxisStat`]).
+    pub axes: Vec<crate::explore::AxisStat>,
 }
 
 impl ExploreReport {
@@ -404,6 +408,7 @@ impl ExploreReport {
             frontier_size: out.frontier.len(),
             frontier,
             ratios: out.frontier_ratios().map(|r| (r[0], r[1], r[2])),
+            axes: out.axes.clone(),
         }
     }
 
@@ -419,6 +424,9 @@ impl ExploreReport {
             ("frontier_size", Json::from(self.frontier_size)),
             ("frontier", Json::arr(self.frontier.iter().map(ExplorePoint::to_json))),
         ];
+        if !self.axes.is_empty() {
+            kv.push(("axes", Json::arr(self.axes.iter().map(crate::explore::AxisStat::to_json))));
+        }
         if let Some((u, c, p)) = self.ratios {
             kv.push((
                 "ratios",
@@ -447,6 +455,14 @@ impl ExploreReport {
             "frontier : {} point(s) | {} dominated | {} infeasible",
             self.frontier_size, self.dominated, self.infeasible
         );
+        for a in &self.axes {
+            let _ = writeln!(
+                s,
+                "  axis {:<4} {:<14} : {} evaluated | {} cache hits | {} pruned | {} \
+                 budget-skipped",
+                a.axis, a.value, a.evaluated, a.cache_hits, a.pruned, a.skipped_budget
+            );
+        }
         s.push_str(&self.frontier_table().render());
         if let Some((u, c, p)) = self.ratios {
             let _ = writeln!(
@@ -502,6 +518,12 @@ pub struct Report {
     /// Pre-flight lint diagnostics (warnings only — errors abort
     /// `evaluate` before a report exists). Empty when linting is off.
     pub lint: crate::lint::LintReport,
+    /// Instrumentation capture (span tree + metrics) — `Some` only when
+    /// the scenario was evaluated with tracing on
+    /// ([`Scenario::traced`](crate::api::Scenario::traced) or the CLI's
+    /// `--trace`/`--stats`). `None` otherwise, so untraced reports are
+    /// bit-identical to pre-instrumentation ones.
+    pub stats: Option<crate::obs::Capture>,
 }
 
 impl Report {
@@ -565,6 +587,9 @@ impl Report {
         if !self.lint.is_clean() {
             kv.push(("lint", self.lint.to_json()));
         }
+        if let Some(c) = &self.stats {
+            kv.push(("stats", c.metrics_json()));
+        }
         Json::obj(kv)
     }
 
@@ -616,6 +641,10 @@ impl Report {
         }
         if let Some(e) = &self.explore {
             render_explore(e, &mut s);
+        }
+        if let Some(c) = &self.stats {
+            s.push_str(&c.span_tree());
+            s.push_str(&c.metrics_text());
         }
         s
     }

@@ -761,6 +761,17 @@ impl ExploreOptions {
     }
 }
 
+/// Observability options (the `"trace"` block in scenario JSON): when
+/// enabled, `evaluate` arms a [`crate::obs`] span/metric capture around the
+/// run and attaches it to the report (`Report.stats`, the span-tree render
+/// footer, and `obs::chrome_trace` export). Off by default — the untraced
+/// path costs one atomic flag check per probe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TraceOptions {
+    /// Capture spans and metrics during `evaluate`.
+    pub enabled: bool,
+}
+
 /// One declarative experiment: workload + system + knobs + per-goal
 /// options. Build with the constructors below, or parse from JSON; run
 /// with [`Scenario::evaluate`](crate::api::Scenario::evaluate).
@@ -777,6 +788,9 @@ pub struct Scenario {
     /// Run the [`crate::lint`] pre-flight in `evaluate` (default `true`);
     /// disable with [`Scenario::no_lint`] or `"lint": false` in JSON.
     pub lint: bool,
+    /// Span/metric capture options; enable with [`Scenario::traced`] or
+    /// `"trace": {"enabled": true}` in JSON (CLI: `--trace` / `--stats`).
+    pub trace: TraceOptions,
 }
 
 impl Scenario {
@@ -791,6 +805,7 @@ impl Scenario {
             fabric: FabricCfg::default(),
             explore: ExploreOptions::default(),
             lint: true,
+            trace: TraceOptions::default(),
         }
     }
 
@@ -855,6 +870,13 @@ impl Scenario {
     /// hatch for deliberately degenerate inputs).
     pub fn no_lint(mut self) -> Scenario {
         self.lint = false;
+        self
+    }
+
+    /// Capture spans + metrics during `evaluate` and attach them to the
+    /// report (`Report.stats`); see [`crate::obs`].
+    pub fn traced(mut self) -> Scenario {
+        self.trace.enabled = true;
         self
     }
 
@@ -974,6 +996,9 @@ impl Scenario {
         if !self.lint {
             kv.push(("lint", Json::Bool(false)));
         }
+        if self.trace != TraceOptions::default() {
+            kv.push(("trace", trace_json(&self.trace)));
+        }
         Json::obj(kv)
     }
 
@@ -1017,8 +1042,29 @@ impl Scenario {
         let fabric = parse_fabric(j.get("fabric").unwrap_or(&Json::Null));
         let explore = parse_explore(j.get("explore").unwrap_or(&Json::Null))?;
         let lint = j.get("lint").and_then(|v| v.as_bool()).unwrap_or(true);
-        Ok(Scenario { goal, workload, system, knobs, serving, cluster, fabric, explore, lint })
+        let trace = parse_trace(j.get("trace").unwrap_or(&Json::Null));
+        Ok(Scenario {
+            goal,
+            workload,
+            system,
+            knobs,
+            serving,
+            cluster,
+            fabric,
+            explore,
+            lint,
+            trace,
+        })
     }
+}
+
+fn parse_trace(j: &Json) -> TraceOptions {
+    let d = TraceOptions::default();
+    TraceOptions { enabled: j.get("enabled").and_then(|v| v.as_bool()).unwrap_or(d.enabled) }
+}
+
+fn trace_json(t: &TraceOptions) -> Json {
+    Json::obj(vec![("enabled", Json::Bool(t.enabled))])
 }
 
 fn parse_workload(j: &Json) -> Result<WorkloadCfg> {
@@ -1333,6 +1379,8 @@ mod tests {
             Scenario::llama("70b").plan_for(2.0).slo(2.0, 0.05),
             Scenario::llama("8b").simulate_traffic(8.0, 100),
             Scenario::llm("gpt3-175b").on(SystemCfg::default()).fabric_sweep("alltoall", 16e6),
+            Scenario::llm("gpt3-175b").traced(),
+            Scenario::llama("8b").traced().no_lint(),
             Scenario::hpl().explore(ExploreOptions {
                 chip_counts: vec![64, 256],
                 batches: vec![None, Some(128.0)],

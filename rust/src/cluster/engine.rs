@@ -287,6 +287,13 @@ impl Sim<'_> {
         } else {
             return; // replica idles until the next arrival
         };
+        if crate::obs::enabled() {
+            let occupancy = match &kind {
+                StepKind::Prefill(m) | StepKind::Decode(m) => m.len(),
+            };
+            crate::obs::observe("cluster.batch_occupancy", occupancy as f64);
+            crate::obs::observe("cluster.queue_depth", self.reps[ri].queue.len() as f64);
+        }
         self.reps[ri].current = Some(kind);
         self.steps += 1;
         self.push(t + dt, Event::StepDone(ri));
@@ -339,6 +346,7 @@ pub fn simulate(
     requests: &[Request],
     slo: &Slo,
 ) -> Result<SimReport> {
+    let _span = crate::obs::span("cluster.simulate");
     ensure!(replicas > 0, "cluster simulation needs at least one replica");
     // probe the oracle once so infeasibility surfaces here, not mid-run
     serving::evaluate(&cfg.model, &cfg.sys, &cfg.point(1.0, 1.0, 1.0))
@@ -433,6 +441,10 @@ pub fn simulate(
         });
     }
     let makespan = sim.now.max(1e-30);
+    crate::obs::counter("cluster.events", sim.events);
+    crate::obs::counter("cluster.steps", sim.steps);
+    crate::obs::counter("cluster.admission_rejects", rejected as u64);
+    crate::obs::gauge("cluster.kv_peak_frac", sim.kv_peak / budget);
     Ok(SimReport {
         n_offered: requests.len(),
         n_completed: per.len(),

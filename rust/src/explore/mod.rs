@@ -30,7 +30,7 @@ pub mod pareto;
 pub use bound::BoundProfile;
 pub use pareto::{dominates, pareto_frontier};
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeMap, HashMap, HashSet};
 use std::fmt::Write as _;
 
 use crate::api::scenario::{chip_by_name, link_by_name, memory_by_name};
@@ -467,6 +467,35 @@ impl ExploreSettings {
     }
 }
 
+/// Per-axis-value coverage counters: how the candidates sharing one axis
+/// value (one chip, one memory technology, ...) split across evaluated /
+/// cache-hit / pruned / budget-skipped. Sorted by axis (chip, mem, link,
+/// topo) then value, so the rows are deterministic for any worker count.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AxisStat {
+    /// Axis name: `chip`, `mem`, `link`, or `topo`.
+    pub axis: String,
+    /// The axis value (the built spec's canonical name).
+    pub value: String,
+    pub evaluated: usize,
+    pub cache_hits: usize,
+    pub pruned: usize,
+    pub skipped_budget: usize,
+}
+
+impl AxisStat {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("axis", Json::from(self.axis.as_str())),
+            ("value", Json::from(self.value.as_str())),
+            ("evaluated", Json::from(self.evaluated)),
+            ("cache_hits", Json::from(self.cache_hits)),
+            ("pruned", Json::from(self.pruned)),
+            ("skipped_budget", Json::from(self.skipped_budget)),
+        ])
+    }
+}
+
 /// Everything one explore run produced.
 #[derive(Debug, Clone)]
 pub struct ExploreOutcome {
@@ -496,6 +525,8 @@ pub struct ExploreOutcome {
     /// [`ExploreOutcome::frontier_ratios`] so pruning can only understate
     /// the reported dataflow advantage, never inflate it.
     pub pruned_bound_maxima: [Option<[f64; 3]>; 2],
+    /// Per-axis-value coverage rows (see [`AxisStat`]).
+    pub axes: Vec<AxisStat>,
 }
 
 impl ExploreOutcome {
@@ -627,6 +658,7 @@ fn cache_key(spec: &WorkloadSpec, c: &Candidate) -> String {
 /// count: scheduling order and chunk boundaries are functions of the space
 /// alone, and pruning only consults points from previous chunks.
 pub fn explore(space: &SearchSpace, settings: &ExploreSettings) -> Result<ExploreOutcome> {
+    let _span = crate::obs::span("explore");
     let cands = space.candidates()?;
     let n = cands.len();
     let profile = if settings.prune { Some(BoundProfile::for_space(space)) } else { None };
@@ -645,10 +677,20 @@ pub fn explore(space: &SearchSpace, settings: &ExploreSettings) -> Result<Explor
     let chunk =
         if settings.prune || settings.budget.is_some() { settings.chunk.max(1) } else { n };
 
+    /// What happened to one enumerated candidate — feeds the per-axis rows.
+    #[derive(Clone, Copy)]
+    enum Fate {
+        Evaluated,
+        CacheHit,
+        Pruned,
+        SkippedBudget,
+    }
+
     let mut cache: HashMap<String, Option<DesignPoint>> = HashMap::new();
     let mut results: Vec<Option<Option<DesignPoint>>> = vec![None; n];
     let mut archive: Vec<[f64; 3]> = Vec::new();
     let mut pruned_bound_maxima: [Option<[f64; 3]>; 2] = [None, None];
+    let mut fates: Vec<Option<Fate>> = vec![None; n];
     let (mut evaluated, mut cache_hits) = (0usize, 0usize);
     let (mut pruned, mut skipped_budget) = (0usize, 0usize);
     let mut visited = 0usize;
@@ -658,10 +700,12 @@ pub fn explore(space: &SearchSpace, settings: &ExploreSettings) -> Result<Explor
         for &i in sched {
             if matches!(settings.budget, Some(b) if visited >= b) {
                 skipped_budget += 1;
+                fates[i] = Some(Fate::SkippedBudget);
                 continue;
             }
             if profile.is_some() && archive.iter().any(|f| pareto::dominates(f, &bounds[i])) {
                 pruned += 1;
+                fates[i] = Some(Fate::Pruned);
                 let kbk = cands[i].sys.chip.execution == ExecutionModel::KernelByKernel;
                 let e = pruned_bound_maxima[usize::from(kbk)].get_or_insert([f64::MIN; 3]);
                 for (slot, b) in e.iter_mut().zip(bounds[i]) {
@@ -690,6 +734,12 @@ pub fn explore(space: &SearchSpace, settings: &ExploreSettings) -> Result<Explor
         };
         evaluated += fresh.len();
         cache_hits += todo.len() - fresh.len();
+        for &i in &todo {
+            fates[i] = Some(Fate::CacheHit);
+        }
+        for &(_, i) in &fresh {
+            fates[i] = Some(Fate::Evaluated);
+        }
         for ((key, _), out) in fresh.iter().zip(outs) {
             cache.insert(key.clone(), out);
         }
@@ -720,6 +770,52 @@ pub fn explore(space: &SearchSpace, settings: &ExploreSettings) -> Result<Explor
     let objs: Vec<[f64; 3]> =
         points.iter().map(|p| [p.utilization, p.cost_eff, p.power_eff]).collect();
     let frontier = pareto::pareto_frontier(&objs);
+
+    // Per-axis coverage rows, keyed (axis rank, value) so the order is a
+    // function of the space alone — worker count and scheduling never
+    // reorder them.
+    let mut by_axis: BTreeMap<(u8, String), AxisStat> = BTreeMap::new();
+    for (i, fate) in fates.iter().enumerate() {
+        let Some(f) = *fate else { continue };
+        let s = &cands[i].sys;
+        let labels = [
+            (0u8, "chip", s.chip.name.as_str()),
+            (1, "mem", s.memory.name.as_str()),
+            (2, "link", s.link.name.as_str()),
+            (3, "topo", s.topology.name.as_str()),
+        ];
+        for (rank, axis, value) in labels {
+            let e = by_axis.entry((rank, value.to_string())).or_insert_with(|| AxisStat {
+                axis: axis.to_string(),
+                value: value.to_string(),
+                evaluated: 0,
+                cache_hits: 0,
+                pruned: 0,
+                skipped_budget: 0,
+            });
+            match f {
+                Fate::Evaluated => e.evaluated += 1,
+                Fate::CacheHit => e.cache_hits += 1,
+                Fate::Pruned => e.pruned += 1,
+                Fate::SkippedBudget => e.skipped_budget += 1,
+            }
+        }
+    }
+    let axes: Vec<AxisStat> = by_axis.into_values().collect();
+
+    crate::obs::counter("explore.evaluated", evaluated as u64);
+    crate::obs::counter("explore.cache_hits", cache_hits as u64);
+    crate::obs::counter("explore.pruned", pruned as u64);
+    crate::obs::counter("explore.skipped_budget", skipped_budget as u64);
+    if crate::obs::enabled() {
+        for a in &axes {
+            crate::obs::counter(
+                &format!("explore.axis.{}.{}.evaluated", a.axis, a.value),
+                a.evaluated as u64,
+            );
+        }
+    }
+
     Ok(ExploreOutcome {
         workload: space.workload.kind,
         candidates: n,
@@ -732,6 +828,7 @@ pub fn explore(space: &SearchSpace, settings: &ExploreSettings) -> Result<Explor
         point_batches,
         frontier,
         pruned_bound_maxima,
+        axes,
     })
 }
 

@@ -271,6 +271,7 @@ impl S<'_> {
 /// Play `sched` over `g`. Panics on a dependency cycle (generator bug) —
 /// `algorithms::build` never emits one.
 pub fn simulate(g: &FabricGraph, sched: &Schedule, cfg: &SimConfig) -> SimResult {
+    let _span = crate::obs::span("fabric.simulate");
     let n = sched.msgs.len();
     let mut dependents: Vec<Vec<u32>> = vec![Vec::new(); n];
     let mut st: Vec<MsgState> = vec![MsgState::default(); n];
@@ -324,6 +325,16 @@ pub fn simulate(g: &FabricGraph, sched: &Schedule, cfg: &SimConfig) -> SimResult
     } else {
         link_util.iter().sum::<f64>() / link_util.len() as f64
     };
+    crate::obs::counter("fabric.events", s.events);
+    crate::obs::counter("fabric.packets", s.packets);
+    crate::obs::counter("fabric.msgs", n as u64);
+    crate::obs::gauge("fabric.max_link_util", max_link_util);
+    crate::obs::gauge("fabric.mean_link_util", mean_link_util);
+    if crate::obs::enabled() {
+        for &u in &link_util {
+            crate::obs::observe("fabric.link_util", u);
+        }
+    }
     SimResult {
         time: end,
         events: s.events,

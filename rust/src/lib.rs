@@ -34,6 +34,7 @@ pub mod graph;
 pub mod interchip;
 pub mod intrachip;
 pub mod lint;
+pub mod obs;
 pub mod pipeline;
 pub mod roofline;
 pub mod runtime;

@@ -6,6 +6,7 @@
 //!   catalog                       print the Table V chip catalog
 //!   figure <id>|--all             regenerate paper figures/tables (results/)
 //!   optimize [--chips N ...]      map a GPT workload and print the report
+//!   map                           alias of optimize (the scenario goal name)
 //!   dse --workload llm|dlrm|hpl|fft   run the 80-config sweep
 //!   explore [--workload W --budget N --no-prune]  Pareto-frontier explorer
 //!   serve [--tp N --pp N ...]     serving model (Fig. 20 style point)
@@ -19,6 +20,11 @@
 //!   run-pipeline <name>           execute an AOT pipeline via the runtime
 //!   verify                        verify every pipeline against the oracle
 //!   version | --version           print the version
+//!
+//! Every scenario-driven subcommand also accepts `--trace <file>` (write a
+//! Chrome trace-event JSON — open it in Perfetto / chrome://tracing) and
+//! `--stats` (append the span tree + metrics to the report output); either
+//! flag arms the in-tree `obs` instrumentation for that run.
 
 use dfmodel::api::{Goal, Scenario, SystemCfg};
 use dfmodel::figures;
@@ -28,6 +34,7 @@ const SUBCOMMANDS: &[&str] = &[
     "catalog",
     "figure",
     "optimize",
+    "map",
     "dse",
     "explore",
     "serve",
@@ -47,8 +54,8 @@ fn usage() {
     eprintln!(
         "usage: dfmodel <{}> [options]\n\
          figures: {}\n\
-         scenario subcommands (optimize dse explore serve simulate plan fabric) accept\n\
-         --scenario <file.json> and --json",
+         scenario subcommands (optimize/map dse explore serve simulate plan fabric) accept\n\
+         --scenario <file.json>, --json, --trace <out.json> (Perfetto), and --stats",
         SUBCOMMANDS.join("|"),
         figures::ALL.join(" ")
     );
@@ -66,7 +73,7 @@ fn main() {
             0
         }
         Some("figure") => cmd_figure(&args),
-        Some("optimize") => cmd_optimize(&args),
+        Some("optimize") | Some("map") => cmd_optimize(&args),
         Some("dse") => cmd_dse(&args),
         Some("explore") => cmd_explore(&args),
         Some("serve") => cmd_serve(&args),
@@ -165,10 +172,43 @@ fn print_report(args: &Args, r: &dfmodel::api::Report) -> i32 {
     0
 }
 
+/// Whether this invocation asked for instrumentation (`--trace <file>`
+/// and/or `--stats`).
+fn trace_requested(args: &Args) -> bool {
+    args.get("trace").is_some() || args.has_flag("stats")
+}
+
+/// Write a capture as Chrome trace-event JSON — open the file in Perfetto
+/// (ui.perfetto.dev) or chrome://tracing.
+fn write_trace_file(path: &str, cap: &dfmodel::obs::Capture) -> Result<(), String> {
+    std::fs::write(path, dfmodel::obs::chrome_trace(cap).pretty())
+        .map_err(|e| format!("write {path}: {e}"))
+}
+
+/// Honor `--trace <file>` against an evaluated report's capture.
+fn write_trace(args: &Args, r: &dfmodel::api::Report) -> Result<(), String> {
+    match (args.get("trace"), &r.stats) {
+        (Some(path), Some(cap)) => write_trace_file(path, cap),
+        _ => Ok(()),
+    }
+}
+
+/// Evaluate a scenario, arming the instrumentation capture when the
+/// invocation asked for it, and write the `--trace` file if any.
+fn evaluate_traced(args: &Args, s: &Scenario) -> Result<dfmodel::api::Report, String> {
+    let mut s = s.clone();
+    if trace_requested(args) {
+        s.trace.enabled = true;
+    }
+    let r = s.evaluate().map_err(|e| e.to_string())?;
+    write_trace(args, &r)?;
+    Ok(r)
+}
+
 /// Evaluate + print a scenario. Infeasibility exits 1; config errors were
 /// already caught at exit 2.
 fn run_scenario(args: &Args, s: &Scenario) -> i32 {
-    match s.evaluate() {
+    match evaluate_traced(args, s) {
         Ok(r) => print_report(args, &r),
         Err(e) => {
             eprintln!("{e}");
@@ -236,11 +276,27 @@ fn cmd_dse(args: &Args) -> i32 {
             }
         }
     };
+    // `--trace`/`--stats` capture the sweep's spans (the parallel map
+    // splices worker spans back deterministically) and its metrics
+    let session = trace_requested(args).then(dfmodel::obs::start_capture);
     if args.has_flag("json") {
         let points = dfmodel::api::sweep(w);
         println!("{}", dfmodel::api::design_points_json(w, &points).pretty());
     } else {
         println!("{}", figures::dse_figs::dse_figure(w));
+    }
+    if let Some(sess) = session {
+        let cap = dfmodel::obs::finish_capture(sess);
+        if let Some(path) = args.get("trace") {
+            if let Err(e) = write_trace_file(path, &cap) {
+                eprintln!("{e}");
+                return 1;
+            }
+        }
+        if args.has_flag("stats") {
+            print!("{}", cap.span_tree());
+            print!("{}", cap.metrics_text());
+        }
     }
     0
 }
@@ -394,7 +450,7 @@ fn cmd_fabric(args: &Args) -> i32 {
             return 2;
         }
     };
-    let r = match s.evaluate() {
+    let r = match evaluate_traced(args, &s) {
         Ok(r) => r,
         Err(e) => {
             eprintln!("{e}");
@@ -405,17 +461,18 @@ fn cmd_fabric(args: &Args) -> i32 {
     if code != 0 {
         return code;
     }
-    let trace_limit = args.get_usize("trace", 0);
+    let trace_limit = args.get_usize("trace-hops", 0);
     if trace_limit > 0 {
         if let Err(e) = print_trace(&s, &r, trace_limit) {
-            eprintln!("trace: {e}");
+            eprintln!("trace-hops: {e}");
             return 1;
         }
     }
     0
 }
 
-/// Replay the winning algorithm with event tracing enabled (`--trace N`).
+/// Replay the winning algorithm with packet-hop tracing (`--trace-hops N`
+/// — distinct from `--trace <file>`, the span/metric capture).
 fn print_trace(s: &Scenario, r: &dfmodel::api::Report, limit: usize) -> Result<(), String> {
     use dfmodel::api::scenario::collective_by_name;
     use dfmodel::fabric::{self, Algo, Routing, SimConfig};
@@ -518,14 +575,14 @@ fn cmd_topo(args: &Args) -> i32 {
 }
 
 /// `dfmodel bench-check` — the CI bench-regression gate: compare a merged
-/// bench JSON (BENCH_5.json) against the committed baseline and fail on
+/// bench JSON (BENCH_7.json) against the committed baseline and fail on
 /// >tolerance p50/throughput moves. Benches absent from the baseline are
 /// skipped (bootstrap: copy a CI BENCH artifact into the baseline to arm
 /// the gate).
 fn cmd_bench_check(args: &Args) -> i32 {
     use dfmodel::util::bench::compare_to_baseline;
     use dfmodel::util::json::Json;
-    let cur_path = args.get_or("current", "BENCH_5.json");
+    let cur_path = args.get_or("current", "BENCH_7.json");
     let base_path = args.get_or("baseline", "ci/bench_baseline.json");
     let tolerance = args.get_f64("tolerance", 0.3);
     let load = |path: &str| -> Result<Json, String> {

@@ -1,0 +1,121 @@
+//! Aggregated metric values: counters, gauges, and log-scale histograms
+//! with fixed power-of-two buckets.
+
+/// One aggregated metric. The first event recorded under a name decides its
+/// kind; later events of a different kind for the same name are ignored.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Metric {
+    /// Monotonic event count.
+    Counter(u64),
+    /// Last-write-wins instantaneous value.
+    Gauge(f64),
+    /// Log-scale sample distribution.
+    Histogram(Hist),
+}
+
+/// Number of histogram buckets.
+const N_BUCKETS: usize = 64;
+
+/// Upper bound of bucket `i`: `2^(i - 32)`, exact in f64. The 64 buckets
+/// cover ~2.3e-10 .. 2.1e9 — enough for byte counts, durations in seconds,
+/// queue depths, and utilization fractions alike.
+pub fn bucket_upper_bound(i: usize) -> f64 {
+    (i as f64 - 32.0).exp2()
+}
+
+/// First bucket whose upper bound is `>= v`; out-of-range samples clamp to
+/// the edge buckets. A short linear scan keeps the mapping bit-identical on
+/// every platform (no libm `log2` involved).
+fn bucket_index(v: f64) -> usize {
+    let mut i = 0;
+    while i < N_BUCKETS - 1 && bucket_upper_bound(i) < v {
+        i += 1;
+    }
+    i
+}
+
+/// Histogram over fixed log-scale buckets (see [`bucket_upper_bound`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Hist {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+    /// Occupied buckets only, ascending: `(upper_bound, count)`.
+    pub buckets: Vec<(f64, u64)>,
+}
+
+impl Hist {
+    pub(crate) fn new() -> Hist {
+        Hist {
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            buckets: Vec::new(),
+        }
+    }
+
+    pub(crate) fn add(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        let ub = bucket_upper_bound(bucket_index(v));
+        match self.buckets.binary_search_by(|b| b.0.total_cmp(&ub)) {
+            Ok(k) => self.buckets[k].1 += 1,
+            Err(k) => self.buckets.insert(k, (ub, 1)),
+        }
+    }
+
+    /// Arithmetic mean of the recorded samples (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_bounds_are_monotonic_powers_of_two() {
+        for i in 1..N_BUCKETS {
+            assert_eq!(bucket_upper_bound(i), 2.0 * bucket_upper_bound(i - 1));
+        }
+        assert_eq!(bucket_upper_bound(32), 1.0);
+    }
+
+    #[test]
+    fn samples_land_in_the_first_covering_bucket_and_clamp_at_edges() {
+        assert_eq!(bucket_index(1.0), 32);
+        assert_eq!(bucket_index(1.5), 33);
+        assert_eq!(bucket_index(0.5), 31);
+        assert_eq!(bucket_index(0.0), 0);
+        assert_eq!(bucket_index(-3.0), 0);
+        assert_eq!(bucket_index(f64::INFINITY), N_BUCKETS - 1);
+        assert_eq!(bucket_index(1e300), N_BUCKETS - 1);
+    }
+
+    #[test]
+    fn histogram_tracks_count_sum_extremes_and_occupied_buckets() {
+        let mut h = Hist::new();
+        for v in [0.25, 0.25, 1.0, 100.0] {
+            h.add(v);
+        }
+        assert_eq!(h.count, 4);
+        assert!((h.sum - 101.5).abs() < 1e-12);
+        assert_eq!(h.min, 0.25);
+        assert_eq!(h.max, 100.0);
+        assert!((h.mean() - 25.375).abs() < 1e-12);
+        // 0.25 twice -> one bucket with count 2; three occupied buckets total
+        assert_eq!(h.buckets.len(), 3);
+        assert_eq!(h.buckets[0], (0.25, 2));
+        // buckets stay sorted by upper bound
+        assert!(h.buckets.windows(2).all(|w| w[0].0 < w[1].0));
+    }
+}

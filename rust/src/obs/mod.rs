@@ -1,0 +1,254 @@
+//! In-tree, zero-dependency observability: hierarchical spans plus a
+//! metrics registry, captured per evaluation and exported as Chrome
+//! trace-event JSON (Perfetto / `chrome://tracing`), a human-readable span
+//! tree (the `Report::render` footer), and a metrics section on `Report`
+//! (`Report.stats`). See DESIGN.md §Observability for the naming scheme.
+//!
+//! Design:
+//! - Recording is **off by default**. Every instrumentation probe starts
+//!   with one relaxed atomic load and returns immediately when no capture
+//!   is armed anywhere in the process — the overhead contract benchmarked
+//!   by `benches/obs.rs` and gated by `dfmodel bench-check`.
+//! - A capture is **thread-scoped**: [`start_capture`] arms the calling
+//!   thread's log, and spans/metrics recorded on other threads are dropped
+//!   unless they run inside [`record_task`] — the hook `util::threadpool`
+//!   uses to buffer each work item's events and splice them back in
+//!   deterministic item order via [`splice_tasks`]. Two concurrent captures
+//!   on different threads therefore never contaminate each other (cargo's
+//!   parallel test runner relies on this).
+//! - Span ids and tree shape come from the merged event order, not from OS
+//!   scheduling: worker items are spliced in item-index order, so the same
+//!   scenario yields the same span tree regardless of worker count.
+
+mod metrics;
+mod trace;
+
+pub use metrics::{bucket_upper_bound, Hist, Metric};
+pub use trace::{chrome_trace, Capture, SpanNode};
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use crate::util::units::{Bytes, Seconds};
+
+/// Number of currently armed captures across all threads. Zero keeps every
+/// probe on the single-atomic-load fast path.
+static ACTIVE: AtomicUsize = AtomicUsize::new(0);
+
+/// Monotonic time base shared by every thread (first use wins).
+static CLOCK: OnceLock<Instant> = OnceLock::new();
+
+fn now_us() -> u64 {
+    CLOCK.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+/// True when at least one capture is armed anywhere in the process. Cheap
+/// enough for per-event call sites; hot loops may hoist it.
+#[inline]
+pub fn enabled() -> bool {
+    ACTIVE.load(Ordering::Relaxed) != 0
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Mode {
+    /// Not recording on this thread.
+    Off,
+    /// This thread owns an armed capture.
+    Capture,
+    /// Inside [`record_task`]: events go to a detached per-item buffer.
+    Task,
+}
+
+/// One raw recorded event; assembled into a [`Capture`] at finish time.
+pub(crate) enum Ev {
+    Begin { name: String, t_us: u64 },
+    End { t_us: u64 },
+    Count { name: String, delta: u64 },
+    Gauge { name: String, v: f64 },
+    Observe { name: String, v: f64 },
+    /// Markers bracketing one spliced worker item (each open assigns the
+    /// next logical track id).
+    TaskOpen,
+    TaskClose,
+}
+
+struct ThreadLog {
+    mode: Mode,
+    events: Vec<Ev>,
+}
+
+thread_local! {
+    static LOG: RefCell<ThreadLog> =
+        const { RefCell::new(ThreadLog { mode: Mode::Off, events: Vec::new() }) };
+}
+
+/// Push `ev` if this thread is recording; reports whether it was kept.
+fn try_record(ev: Ev) -> bool {
+    LOG.with(|l| {
+        let mut l = l.borrow_mut();
+        if l.mode == Mode::Off {
+            return false;
+        }
+        l.events.push(ev);
+        true
+    })
+}
+
+/// RAII span guard: records a Begin on creation and the matching End when
+/// dropped. Free when no capture is armed on this thread.
+#[must_use = "a span lasts until the guard drops; an unbound guard ends immediately"]
+pub struct SpanGuard {
+    armed: bool,
+}
+
+/// Open a hierarchical span named `name` on the current thread.
+pub fn span(name: &str) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { armed: false };
+    }
+    let armed = try_record(Ev::Begin { name: name.to_string(), t_us: now_us() });
+    SpanGuard { armed }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            // if the capture was disarmed mid-span the End lands in a dead
+            // buffer and is discarded with it
+            try_record(Ev::End { t_us: now_us() });
+        }
+    }
+}
+
+/// Add `delta` to the named counter.
+pub fn counter(name: &str, delta: u64) {
+    if enabled() {
+        try_record(Ev::Count { name: name.to_string(), delta });
+    }
+}
+
+/// Set the named gauge to its latest value.
+pub fn gauge(name: &str, v: f64) {
+    if enabled() {
+        try_record(Ev::Gauge { name: name.to_string(), v });
+    }
+}
+
+/// Record one sample into the named log-scale histogram.
+pub fn observe(name: &str, v: f64) {
+    if enabled() {
+        try_record(Ev::Observe { name: name.to_string(), v });
+    }
+}
+
+/// [`observe`] for [`Seconds`] quantities; name the metric `*_seconds`.
+pub fn observe_seconds(name: &str, s: Seconds) {
+    observe(name, s.raw());
+}
+
+/// [`observe`] for [`Bytes`] quantities; name the metric `*_bytes`.
+pub fn observe_bytes(name: &str, b: Bytes) {
+    observe(name, b.raw());
+}
+
+/// An armed capture on the current thread (from [`start_capture`]).
+/// Dropping it without [`finish_capture`] disarms and discards the events.
+/// `!Send` on purpose: a capture must finish on the thread that armed it.
+pub struct CaptureSession {
+    done: bool,
+    _pin: std::marker::PhantomData<*const ()>,
+}
+
+/// Arm a capture on the calling thread. Events recorded on this thread —
+/// and in worker items spliced back via [`record_task`]/[`splice_tasks`] —
+/// accumulate until [`finish_capture`]. One capture per thread at a time.
+pub fn start_capture() -> CaptureSession {
+    LOG.with(|l| {
+        let mut l = l.borrow_mut();
+        l.mode = Mode::Capture;
+        l.events.clear();
+    });
+    ACTIVE.fetch_add(1, Ordering::Relaxed);
+    CaptureSession { done: false, _pin: std::marker::PhantomData }
+}
+
+/// Disarm the capture and assemble its events into a [`Capture`].
+pub fn finish_capture(mut session: CaptureSession) -> Capture {
+    session.done = true;
+    trace::build(disarm())
+}
+
+fn disarm() -> Vec<Ev> {
+    let events = LOG.with(|l| {
+        let mut l = l.borrow_mut();
+        l.mode = Mode::Off;
+        std::mem::take(&mut l.events)
+    });
+    ACTIVE.fetch_sub(1, Ordering::Relaxed);
+    events
+}
+
+impl Drop for CaptureSession {
+    fn drop(&mut self) {
+        if !self.done {
+            drop(disarm());
+        }
+    }
+}
+
+/// Events recorded by one worker item, detached from any thread
+/// (see `util::threadpool::parallel_map_workers`).
+pub struct TaskLog {
+    events: Vec<Ev>,
+}
+
+impl TaskLog {
+    /// True when the item recorded nothing.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// Run `f` with this thread's recording redirected into a detached buffer,
+/// returning the result and the buffer. `util::threadpool` wraps each work
+/// item in this so spans recorded on worker threads can be re-attached to
+/// the capturing thread in item order, independent of which worker ran
+/// which item.
+pub fn record_task<R>(f: impl FnOnce() -> R) -> (R, TaskLog) {
+    let (prev_mode, prev_events) = LOG.with(|l| {
+        let mut l = l.borrow_mut();
+        let prev = (l.mode, std::mem::take(&mut l.events));
+        l.mode = Mode::Task;
+        prev
+    });
+    let r = f();
+    let events = LOG.with(|l| {
+        let mut l = l.borrow_mut();
+        let events = std::mem::replace(&mut l.events, prev_events);
+        l.mode = prev_mode;
+        events
+    });
+    (r, TaskLog { events })
+}
+
+/// Append buffered worker-item events to the current thread's log in the
+/// order given (callers pass item order, which makes the merged log
+/// independent of worker count). No-op when this thread is not recording.
+pub fn splice_tasks(logs: impl IntoIterator<Item = TaskLog>) {
+    LOG.with(|l| {
+        let mut l = l.borrow_mut();
+        if l.mode == Mode::Off {
+            return;
+        }
+        for t in logs {
+            if t.events.is_empty() {
+                continue;
+            }
+            l.events.push(Ev::TaskOpen);
+            l.events.extend(t.events);
+            l.events.push(Ev::TaskClose);
+        }
+    });
+}

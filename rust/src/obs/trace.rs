@@ -1,0 +1,366 @@
+//! Capture assembly and exporters: the span tree, the metrics JSON section,
+//! and Chrome trace-event JSON for Perfetto / `chrome://tracing`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use super::metrics::{Hist, Metric};
+use super::Ev;
+use crate::util::json::Json;
+use crate::util::units::fmt_time;
+
+/// One completed span: name, wall-clock interval, logical track, children.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanNode {
+    pub name: String,
+    /// Logical track: 0 = the capturing thread, 1.. = spliced worker items
+    /// numbered in splice order (deterministic; never an OS thread id).
+    pub track: u32,
+    pub start_us: u64,
+    pub end_us: u64,
+    pub children: Vec<SpanNode>,
+}
+
+impl SpanNode {
+    /// Span duration in seconds.
+    pub fn secs(&self) -> f64 {
+        (self.end_us.saturating_sub(self.start_us)) as f64 * 1e-6
+    }
+}
+
+/// Everything one capture recorded: root spans plus aggregated metrics.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Capture {
+    pub roots: Vec<SpanNode>,
+    /// Aggregated metrics, sorted by name.
+    pub metrics: Vec<(String, Metric)>,
+}
+
+/// Assemble raw events into a span tree + aggregated metrics. Unmatched
+/// Ends are dropped and still-open spans are closed at their start time, so
+/// a torn capture degrades instead of panicking.
+pub(crate) fn build(events: Vec<Ev>) -> Capture {
+    let mut roots: Vec<SpanNode> = Vec::new();
+    let mut stack: Vec<SpanNode> = Vec::new();
+    let mut metrics: BTreeMap<String, Metric> = BTreeMap::new();
+    let mut track = 0u32;
+    let mut next_track = 1u32;
+    let mut track_stack: Vec<u32> = Vec::new();
+    for ev in events {
+        match ev {
+            Ev::Begin { name, t_us } => stack.push(SpanNode {
+                name,
+                track,
+                start_us: t_us,
+                end_us: t_us,
+                children: Vec::new(),
+            }),
+            Ev::End { t_us } => {
+                if let Some(mut n) = stack.pop() {
+                    n.end_us = t_us;
+                    attach(&mut roots, &mut stack, n);
+                }
+            }
+            Ev::TaskOpen => {
+                track_stack.push(track);
+                track = next_track;
+                next_track += 1;
+            }
+            Ev::TaskClose => track = track_stack.pop().unwrap_or(0),
+            Ev::Count { name, delta } => {
+                if let Metric::Counter(c) = metrics.entry(name).or_insert(Metric::Counter(0)) {
+                    *c += delta;
+                }
+            }
+            Ev::Gauge { name, v } => {
+                if let Metric::Gauge(g) = metrics.entry(name).or_insert(Metric::Gauge(v)) {
+                    *g = v;
+                }
+            }
+            Ev::Observe { name, v } => {
+                if let Metric::Histogram(h) =
+                    metrics.entry(name).or_insert_with(|| Metric::Histogram(Hist::new()))
+                {
+                    h.add(v);
+                }
+            }
+        }
+    }
+    while let Some(n) = stack.pop() {
+        attach(&mut roots, &mut stack, n);
+    }
+    Capture { roots, metrics: metrics.into_iter().collect() }
+}
+
+fn attach(roots: &mut Vec<SpanNode>, stack: &mut [SpanNode], n: SpanNode) {
+    if let Some(parent) = stack.last_mut() {
+        parent.children.push(n);
+    } else {
+        roots.push(n);
+    }
+}
+
+/// Lines the human span tree prints before truncating (a traced explore can
+/// record one subtree per candidate).
+const TREE_LIMIT: usize = 48;
+
+impl Capture {
+    /// Counter value by name; `None` when absent or not a counter.
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.metrics.iter().find(|(n, _)| n == name).and_then(|(_, m)| match m {
+            Metric::Counter(c) => Some(*c),
+            _ => None,
+        })
+    }
+
+    /// Total number of spans in the tree.
+    pub fn n_spans(&self) -> usize {
+        fn count(n: &SpanNode) -> usize {
+            1 + n.children.iter().map(count).sum::<usize>()
+        }
+        self.roots.iter().map(count).sum()
+    }
+
+    /// Names-and-nesting-only rendering (no timings, no tracks): the
+    /// deterministic shape compared by worker-count-independence tests.
+    pub fn structure(&self) -> String {
+        fn walk(s: &mut String, n: &SpanNode, depth: usize) {
+            let _ = writeln!(s, "{}{}", "  ".repeat(depth), n.name);
+            for c in &n.children {
+                walk(s, c, depth + 1);
+            }
+        }
+        let mut s = String::new();
+        for r in &self.roots {
+            walk(&mut s, r, 0);
+        }
+        s
+    }
+
+    /// Human-readable span tree with durations (the `Report::render`
+    /// footer). Truncates after [`TREE_LIMIT`] lines.
+    pub fn span_tree(&self) -> String {
+        fn walk(s: &mut String, n: &SpanNode, depth: usize, left: &mut usize) {
+            if *left == 0 {
+                return;
+            }
+            *left -= 1;
+            let label = format!("{}{}", "  ".repeat(depth), n.name);
+            let _ = writeln!(s, "  {label:<42} {}", fmt_time(n.secs()));
+            for c in &n.children {
+                walk(s, c, depth + 1, left);
+            }
+        }
+        if self.roots.is_empty() {
+            return String::new();
+        }
+        let mut s = String::from("spans    :\n");
+        let mut left = TREE_LIMIT;
+        for r in &self.roots {
+            walk(&mut s, r, 0, &mut left);
+        }
+        let total = self.n_spans();
+        if total > TREE_LIMIT {
+            let _ = writeln!(s, "  ... ({} more spans)", total - TREE_LIMIT);
+        }
+        s
+    }
+
+    /// Metrics as text lines (appended to the report footer).
+    pub fn metrics_text(&self) -> String {
+        if self.metrics.is_empty() {
+            return String::new();
+        }
+        let mut s = String::new();
+        let _ = writeln!(s, "stats    : {} metric(s)", self.metrics.len());
+        for (name, m) in &self.metrics {
+            let _ = match m {
+                Metric::Counter(c) => writeln!(s, "  {name} = {c}"),
+                Metric::Gauge(v) => writeln!(s, "  {name} = {v:.6}"),
+                Metric::Histogram(h) => writeln!(
+                    s,
+                    "  {name}: n={} mean={:.4e} min={:.4e} max={:.4e}",
+                    h.count,
+                    h.mean(),
+                    h.min,
+                    h.max
+                ),
+            };
+        }
+        s
+    }
+
+    /// Metrics as a JSON object — the `Report.stats` section.
+    pub fn metrics_json(&self) -> Json {
+        Json::Obj(
+            self.metrics
+                .iter()
+                .map(|(name, m)| {
+                    let v = match m {
+                        Metric::Counter(c) => Json::obj(vec![
+                            ("kind", Json::from("counter")),
+                            ("value", Json::from(*c as f64)),
+                        ]),
+                        Metric::Gauge(g) => Json::obj(vec![
+                            ("kind", Json::from("gauge")),
+                            ("value", Json::from(*g)),
+                        ]),
+                        Metric::Histogram(h) => Json::obj(vec![
+                            ("kind", Json::from("histogram")),
+                            ("count", Json::from(h.count as f64)),
+                            ("sum", Json::from(h.sum)),
+                            ("min", Json::from(h.min)),
+                            ("max", Json::from(h.max)),
+                            (
+                                "buckets",
+                                Json::arr(h.buckets.iter().map(|&(ub, c)| {
+                                    Json::arr([Json::from(ub), Json::from(c as f64)])
+                                })),
+                            ),
+                        ]),
+                    };
+                    (name.clone(), v)
+                })
+                .collect(),
+        )
+    }
+}
+
+/// Chrome trace-event JSON: an array of matched `"B"`/`"E"` duration events
+/// (one process, one `tid` per logical track), loadable in Perfetto or
+/// `chrome://tracing`.
+pub fn chrome_trace(c: &Capture) -> Json {
+    fn emit(out: &mut Vec<Json>, n: &SpanNode) {
+        let tid = Json::from(f64::from(n.track) + 1.0);
+        out.push(Json::obj(vec![
+            ("name", Json::from(n.name.as_str())),
+            ("cat", Json::from("dfmodel")),
+            ("ph", Json::from("B")),
+            ("ts", Json::from(n.start_us as f64)),
+            ("pid", Json::from(1.0)),
+            ("tid", tid.clone()),
+        ]));
+        for ch in &n.children {
+            emit(out, ch);
+        }
+        out.push(Json::obj(vec![
+            ("name", Json::from(n.name.as_str())),
+            ("ph", Json::from("E")),
+            ("ts", Json::from(n.end_us as f64)),
+            ("pid", Json::from(1.0)),
+            ("tid", tid),
+        ]));
+    }
+    let mut out = Vec::new();
+    for r in &c.roots {
+        emit(&mut out, r);
+    }
+    Json::Arr(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::obs;
+    use crate::util::json::Json;
+
+    fn phase_count(trace: &Json, ph: &str) -> usize {
+        trace
+            .as_array()
+            .unwrap()
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some(ph))
+            .count()
+    }
+
+    #[test]
+    fn capture_builds_a_nested_tree_and_aggregates_metrics() {
+        let sess = obs::start_capture();
+        {
+            let _a = obs::span("outer");
+            {
+                let _b = obs::span("inner");
+            }
+            obs::counter("n", 2);
+            obs::counter("n", 3);
+            obs::gauge("g", 1.5);
+            obs::observe("h", 0.25);
+            obs::observe("h", 4.0);
+        }
+        let cap = obs::finish_capture(sess);
+        assert_eq!(cap.roots.len(), 1);
+        assert_eq!(cap.roots[0].name, "outer");
+        assert_eq!(cap.roots[0].children.len(), 1);
+        assert_eq!(cap.roots[0].children[0].name, "inner");
+        assert_eq!(cap.counter("n"), Some(5));
+        assert_eq!(cap.n_spans(), 2);
+        match cap.metrics.iter().find(|(n, _)| n == "h").map(|(_, m)| m) {
+            Some(obs::Metric::Histogram(h)) => assert_eq!(h.count, 2),
+            other => panic!("expected histogram, got {other:?}"),
+        }
+        let tr = obs::chrome_trace(&cap);
+        assert_eq!(phase_count(&tr, "B"), 2);
+        assert_eq!(phase_count(&tr, "E"), 2);
+    }
+
+    #[test]
+    fn chrome_trace_escapes_names_and_round_trips_as_json() {
+        let sess = obs::start_capture();
+        {
+            let _s = obs::span("kernel \"fused\"\nmatmul\t[0]");
+        }
+        let cap = obs::finish_capture(sess);
+        let text = obs::chrome_trace(&cap).pretty();
+        let parsed = Json::parse(&text).expect("exported trace must be valid JSON");
+        let name = parsed.as_array().unwrap()[0].get("name").unwrap().as_str().unwrap();
+        assert_eq!(name, "kernel \"fused\"\nmatmul\t[0]");
+    }
+
+    #[test]
+    fn probes_without_an_armed_capture_record_nothing() {
+        {
+            let _orphan = obs::span("dropped");
+            obs::counter("dropped", 1);
+        }
+        let sess = obs::start_capture();
+        let cap = obs::finish_capture(sess);
+        assert!(cap.roots.is_empty());
+        assert!(cap.metrics.is_empty());
+    }
+
+    #[test]
+    fn spliced_tasks_keep_item_order_and_get_distinct_tracks() {
+        let sess = obs::start_capture();
+        {
+            let _p = obs::span("parent");
+            let logs: Vec<obs::TaskLog> = (0..3)
+                .map(|i| {
+                    let ((), log) = obs::record_task(|| {
+                        let _s = obs::span(&format!("item{i}"));
+                        obs::counter("items", 1);
+                    });
+                    log
+                })
+                .collect();
+            obs::splice_tasks(logs);
+        }
+        let cap = obs::finish_capture(sess);
+        let kids: Vec<&str> = cap.roots[0].children.iter().map(|c| c.name.as_str()).collect();
+        assert_eq!(kids, ["item0", "item1", "item2"]);
+        assert_eq!(cap.roots[0].track, 0);
+        let tracks: Vec<u32> = cap.roots[0].children.iter().map(|c| c.track).collect();
+        assert_eq!(tracks, [1, 2, 3]);
+        assert_eq!(cap.counter("items"), Some(3));
+    }
+
+    #[test]
+    fn a_dropped_session_disarms_recording() {
+        let sess = obs::start_capture();
+        drop(sess);
+        {
+            let _s = obs::span("after-drop");
+        }
+        let sess = obs::start_capture();
+        let cap = obs::finish_capture(sess);
+        assert!(cap.roots.is_empty());
+    }
+}

@@ -9,7 +9,7 @@ use crate::interchip::{self, InterChipOptions};
 use crate::intrachip::{self, IntraChipOptions};
 use crate::sharding;
 use crate::system::SystemSpec;
-use crate::util::units::Bytes;
+use crate::util::units::{Bytes, Seconds};
 
 /// Summary of the mapping decisions behind a [`StepResult`], surfaced by
 /// the `api` facade's `Mapping` type.
@@ -100,7 +100,10 @@ pub fn llm_training_opts(
         max_dp: base_opts.max_dp.min(global_batch as usize),
         ..base_opts.clone()
     };
-    let inter = interchip::optimize(&coarse, sys, &inter_opts)?;
+    let inter = {
+        let _s = crate::obs::span("interchip");
+        interchip::optimize(&coarse, sys, &inter_opts)?
+    };
     llm_training_with_mapping(cfg, sys, global_batch, &coarse, &inter)
 }
 
@@ -119,7 +122,10 @@ pub fn llm_training_forced(
         force_degrees: Some(degrees),
         ..Default::default()
     };
-    let inter = interchip::optimize(&coarse, sys, &inter_opts)?;
+    let inter = {
+        let _s = crate::obs::span("interchip");
+        interchip::optimize(&coarse, sys, &inter_opts)?
+    };
     llm_training_with_mapping(cfg, sys, global_batch, &coarse, &inter)
 }
 
@@ -145,6 +151,7 @@ fn llm_training_with_mapping(
     // expressible at large TP (Megatron's heads-divisibility rule);
     // per-layer time is normalized back per microbatch.
     let m_fine = ((tp as f64 / cfg.n_heads).ceil()).max(1.0);
+    let span_intra = crate::obs::span("intrachip");
     let fine = gpt_layer_graph(cfg, m_fine);
     let fine_plan = inter.plan.clone();
     let (fine_schemes, _space) = interchip::optimizer::select_sharding(
@@ -160,6 +167,8 @@ fn llm_training_with_mapping(
         &sys.memory,
         &IntraChipOptions { net_time, ..Default::default() },
     )?;
+    drop(span_intra);
+    let _span_dp = crate::obs::span("pipeline_dp");
 
     // per-microbatch stage time: fused-partition pipeline over the stage's
     // layers, bottlenecked by inter-chip p2p if present
@@ -197,6 +206,9 @@ fn llm_training_with_mapping(
     let _ = scale;
     let tot = (c + m + n).max(1e-30);
     let breakdown = (step * c / tot, step * m / tot, step * n / tot);
+
+    crate::obs::counter("pipeline.evaluations", 1);
+    crate::obs::observe_seconds("pipeline.step_seconds", Seconds::new(step));
 
     Some(StepResult {
         step_time: step,
@@ -238,9 +250,13 @@ pub fn workload_pass_opts(
     passes: f64,
     inter_opts: &InterChipOptions,
 ) -> Option<StepResult> {
-    let inter = interchip::optimize(g, sys, inter_opts)?;
+    let inter = {
+        let _s = crate::obs::span("interchip");
+        interchip::optimize(g, sys, inter_opts)?
+    };
     let (tp, pp, dp) = (inter.plan.tp, inter.plan.pp, inter.plan.dp);
 
+    let span_intra = crate::obs::span("intrachip");
     let (sharded, net_time) = interchip::shard_graph(g, sys, &inter.plan, &inter.scheme_idx);
     let intra = intrachip::optimize_intra(
         &sharded,
@@ -248,6 +264,8 @@ pub fn workload_pass_opts(
         &sys.memory,
         &IntraChipOptions { net_time, ..Default::default() },
     )?;
+    drop(span_intra);
+    let _span_dp = crate::obs::span("pipeline_dp");
 
     let stage_time = intra
         .total_time
@@ -259,6 +277,8 @@ pub fn workload_pass_opts(
     let achieved = useful / step;
     let (c, m, n) = intra.breakdown();
     let tot = (c + m + n).max(1e-30);
+    crate::obs::counter("pipeline.evaluations", 1);
+    crate::obs::observe_seconds("pipeline.step_seconds", Seconds::new(step));
     Some(StepResult {
         step_time: step,
         useful_flops: useful,

@@ -45,6 +45,7 @@ pub struct InterpExecutable {
 
 impl Executable for InterpExecutable {
     fn execute(&self, args: &[&TensorBuf]) -> Result<Vec<TensorBuf>> {
+        let _span = crate::obs::span("runtime.execute");
         let entry = self.module.entry_comp();
         ensure!(
             args.len() == entry.params.len(),
@@ -101,6 +102,9 @@ fn eval_comp(m: &HloModule, ci: usize, args: &[Value]) -> Result<Value> {
         args.len()
     );
     let mut env: Vec<Option<Value>> = vec![None; c.instrs.len()];
+    if crate::obs::enabled() {
+        crate::obs::counter("runtime.instrs", c.instrs.len() as u64);
+    }
     for i in 0..c.instrs.len() {
         let v = eval_instr(m, c, i, args, &env)
             .map_err(|e| e.context(format!("{}.{}", c.name, c.instrs[i].name)))?;

@@ -10,13 +10,24 @@
 //! `BENCH_*.json` and checks with [`compare_to_baseline`]
 //! (`dfmodel bench-check`).
 
+use std::sync::OnceLock;
 use std::time::{Duration, Instant};
 
 use crate::util::json::Json;
 
 /// True when the quick CI mode is requested (`DFMODEL_BENCH_QUICK=1`).
+/// The env var is read once and cached — per-call `std::env::var` reads
+/// race against `set_var` in concurrently-running code (same hazard the
+/// PR-1 `threadpool::workers_from_override` fix addressed).
 pub fn quick_mode() -> bool {
-    matches!(std::env::var("DFMODEL_BENCH_QUICK").ok().as_deref(), Some("1") | Some("true"))
+    static QUICK: OnceLock<bool> = OnceLock::new();
+    *QUICK.get_or_init(|| quick_from_env(std::env::var("DFMODEL_BENCH_QUICK").ok().as_deref()))
+}
+
+/// Pure policy behind [`quick_mode`]; tests exercise this path instead of
+/// mutating process-global env vars.
+pub fn quick_from_env(v: Option<&str>) -> bool {
+    matches!(v, Some("1") | Some("true"))
 }
 
 #[derive(Debug, Clone)]
@@ -345,6 +356,20 @@ mod tests {
             vec![entry("a", 90.0, Some(60.0)), entry("b", 125.0, None)],
         );
         assert!(compare_to_baseline(&ok, &baseline, 0.3).regressions.is_empty());
+    }
+
+    #[test]
+    fn quick_mode_env_policy_is_pure() {
+        assert!(quick_from_env(Some("1")));
+        assert!(quick_from_env(Some("true")));
+        assert!(!quick_from_env(Some("0")));
+        assert!(!quick_from_env(Some("yes")));
+        assert!(!quick_from_env(None));
+        // the cached reader agrees with the policy for the ambient env
+        assert_eq!(
+            quick_mode(),
+            quick_from_env(std::env::var("DFMODEL_BENCH_QUICK").ok().as_deref())
+        );
     }
 
     #[test]

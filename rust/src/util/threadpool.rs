@@ -52,37 +52,57 @@ where
         return items.iter().map(|t| f(t)).collect();
     }
 
+    // When a tracing capture is armed, each item's spans/metrics are
+    // buffered per item (`obs::record_task`) and spliced back into the
+    // calling thread's capture in item order, so the recorded span tree is
+    // independent of worker count and scheduling. One atomic load when
+    // tracing is off.
+    let tracing = crate::obs::enabled();
     let next = AtomicUsize::new(0);
     let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
     let slots_ptr = SendPtr(slots.as_mut_ptr());
+    let mut logs: Vec<Option<crate::obs::TaskLog>> = (0..n).map(|_| None).collect();
+    let logs_ptr = SendPtr(logs.as_mut_ptr());
 
     std::thread::scope(|scope| {
         for _ in 0..workers {
             let next = &next;
             let f = &f;
             scope.spawn(move || {
-                // Bind the whole wrapper (not just its field) so the closure
-                // captures the Send-able SendPtr, not the raw pointer —
-                // edition-2021 disjoint capture would otherwise grab the
-                // non-Send `*mut`.
+                // Bind the whole wrappers (not just their fields) so the
+                // closure captures the Send-able SendPtr, not the raw
+                // pointer — edition-2021 disjoint capture would otherwise
+                // grab the non-Send `*mut`.
                 let ptr = slots_ptr;
+                let lptr = logs_ptr;
                 loop {
                     let i = next.fetch_add(1, Ordering::Relaxed);
                     if i >= n {
                         break;
                     }
-                    let r = f(&items[i]);
                     // SAFETY: each index i is claimed by exactly one worker
                     // via the atomic counter, so the writes are disjoint; the
-                    // scope guarantees the buffer outlives all workers.
-                    unsafe {
-                        *ptr.0.add(i) = Some(r);
+                    // scope guarantees both buffers outlive all workers.
+                    if tracing {
+                        let (r, log) = crate::obs::record_task(|| f(&items[i]));
+                        unsafe {
+                            *ptr.0.add(i) = Some(r);
+                            *lptr.0.add(i) = Some(log);
+                        }
+                    } else {
+                        let r = f(&items[i]);
+                        unsafe {
+                            *ptr.0.add(i) = Some(r);
+                        }
                     }
                 }
             });
         }
     });
 
+    if tracing {
+        crate::obs::splice_tasks(logs.into_iter().flatten());
+    }
     slots.into_iter().map(|s| s.expect("worker missed a slot")).collect()
 }
 
@@ -144,6 +164,25 @@ mod tests {
             (x, acc).0
         });
         assert_eq!(out, (0..40).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn worker_spans_splice_back_in_item_order() {
+        let sess = crate::obs::start_capture();
+        {
+            let _p = crate::obs::span("pmap");
+            let items: Vec<usize> = (0..16).collect();
+            let out = parallel_map_workers(&items, 4, |&x| {
+                let _s = crate::obs::span(&format!("item{x}"));
+                x
+            });
+            assert_eq!(out, items);
+        }
+        let cap = crate::obs::finish_capture(sess);
+        assert_eq!(cap.roots.len(), 1);
+        let names: Vec<String> = cap.roots[0].children.iter().map(|c| c.name.clone()).collect();
+        let want: Vec<String> = (0..16).map(|i| format!("item{i}")).collect();
+        assert_eq!(names, want, "splice order must follow item order, not scheduling");
     }
 
     #[test]

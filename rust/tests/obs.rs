@@ -1,0 +1,160 @@
+//! Observability integration tests: traced scenario evaluation end to end,
+//! worker-count-independent span capture across the explorer's parallel
+//! map, Chrome trace-event export invariants, per-axis explorer counters,
+//! and disabled-path bit-parity of reports.
+
+use dfmodel::api::{ExploreOptions, Scenario};
+use dfmodel::dse::Workload;
+use dfmodel::explore::{explore, ChipCfg, ExploreSettings, MemCfg, SearchSpace, WorkloadSpec};
+use dfmodel::graph::gpt::GptConfig;
+use dfmodel::util::json::Json;
+
+fn tiny_gpt() -> GptConfig {
+    GptConfig {
+        layers: 8,
+        d_model: 1024.0,
+        n_heads: 8.0,
+        seq: 512.0,
+        d_ff: 4096.0,
+        vocab: 32000.0,
+        dtype_bytes: 2.0,
+    }
+}
+
+/// 2 chips × 2 mems × 2 links × 2 topologies = 16 candidates at 8 chips.
+fn small_space() -> SearchSpace {
+    SearchSpace {
+        workload: WorkloadSpec {
+            kind: Workload::Llm,
+            gpt: Some(tiny_gpt()),
+            batch: Some(32.0),
+            state_bytes_per_weight_byte: None,
+        },
+        chips: vec![ChipCfg::named("sn30"), ChipCfg::named("h100")],
+        mems: vec![
+            MemCfg::named("hbm3"),
+            MemCfg { name: "ddr4".into(), bandwidth_gbs: Some(25.0), capacity_gb: None },
+        ],
+        links: vec!["nvlink4".into(), "pcie4".into()],
+        topologies: vec!["torus2d".into(), "ring".into()],
+        chip_counts: vec![8],
+        batches: vec![None],
+    }
+}
+
+/// The recorded span tree and counters must be a function of the work, not
+/// of how many workers the parallel map used.
+#[test]
+fn capture_structure_is_independent_of_worker_count() {
+    let space = small_space();
+    let run = |workers: usize| {
+        let sess = dfmodel::obs::start_capture();
+        let out = explore(
+            &space,
+            &ExploreSettings { prune: false, workers: Some(workers), ..Default::default() },
+        )
+        .unwrap();
+        let cap = dfmodel::obs::finish_capture(sess);
+        (out, cap)
+    };
+    let (out1, cap1) = run(1);
+    let (out4, cap4) = run(4);
+    assert_eq!(out1.frontier, out4.frontier);
+    assert_eq!(
+        cap1.structure(),
+        cap4.structure(),
+        "span tree shape must not depend on worker count"
+    );
+    assert_eq!(cap1.n_spans(), cap4.n_spans());
+    for c in ["explore.evaluated", "explore.cache_hits", "explore.pruned"] {
+        assert_eq!(cap1.counter(c), cap4.counter(c), "counter {c} diverged");
+    }
+    assert_eq!(cap1.counter("explore.evaluated"), Some(out1.evaluated as u64));
+}
+
+/// Per-axis rows partition the enumerated candidates on every axis.
+#[test]
+fn axis_stats_partition_the_candidates() {
+    let out = explore(&small_space(), &ExploreSettings::default()).unwrap();
+    assert!(!out.axes.is_empty());
+    for axis in ["chip", "mem", "link", "topo"] {
+        let total: usize = out
+            .axes
+            .iter()
+            .filter(|a| a.axis == axis)
+            .map(|a| a.evaluated + a.cache_hits + a.pruned + a.skipped_budget)
+            .sum();
+        assert_eq!(total, out.candidates, "axis '{axis}' rows must cover every candidate");
+    }
+    // deterministic ordering: axis rank (chip, mem, link, topo) then value
+    let ranks: Vec<usize> = out
+        .axes
+        .iter()
+        .map(|a| ["chip", "mem", "link", "topo"].iter().position(|&x| x == a.axis).unwrap())
+        .collect();
+    let mut sorted = ranks.clone();
+    sorted.sort_unstable();
+    assert_eq!(ranks, sorted);
+}
+
+/// A traced explore scenario reports the axis rows and the metrics JSON.
+#[test]
+fn traced_explore_scenario_reports_axes_and_stats() {
+    let opts = ExploreOptions {
+        chips: vec![ChipCfg::named("sn30"), ChipCfg::named("h100")],
+        mems: vec![MemCfg::named("hbm3")],
+        links: vec!["pcie4".into()],
+        topologies: vec!["ring".into(), "torus2d".into()],
+        chip_counts: vec![8],
+        batches: vec![None],
+        prune: true,
+        budget: None,
+        top: 4,
+    };
+    let s = Scenario::llm_custom(tiny_gpt()).batch(16.0).explore(opts).traced();
+    let r = s.evaluate().unwrap();
+    let e = r.explore.as_ref().expect("explore section");
+    assert!(!e.axes.is_empty());
+    let text = r.render();
+    assert!(text.contains("axis chip"), "per-axis rows missing from render:\n{text}");
+    let json = r.to_json();
+    assert!(json.get("explore").unwrap().get("axes").is_some());
+    let stats = json.get("stats").expect("traced report emits stats");
+    assert!(stats.get("explore.evaluated").is_some(), "{}", stats.pretty());
+    // the human rendering carries the span tree footer
+    assert!(text.contains("scenario.evaluate"), "span tree missing from render:\n{text}");
+}
+
+/// Chrome trace export: a JSON array of balanced B/E events that survives
+/// a parse round-trip.
+#[test]
+fn chrome_trace_events_are_balanced_and_parse_back() {
+    let s = Scenario::llm("gpt3-175b").traced();
+    let r = s.evaluate().unwrap();
+    let cap = r.stats.as_ref().expect("traced run fills stats");
+    let trace = dfmodel::obs::chrome_trace(cap);
+    let back = Json::parse(&trace.pretty()).expect("trace JSON parses");
+    let Json::Arr(events) = back else { panic!("trace must be a JSON array") };
+    assert!(!events.is_empty());
+    let ph = |e: &Json| e.get("ph").and_then(|v| v.as_str()).unwrap().to_string();
+    let begins = events.iter().filter(|e| ph(e) == "B").count();
+    let ends = events.iter().filter(|e| ph(e) == "E").count();
+    assert_eq!(begins, ends, "unbalanced B/E events");
+    assert!(begins > 0);
+    for e in &events {
+        assert!(e.get("name").is_some() && e.get("ts").is_some() && e.get("pid").is_some());
+    }
+}
+
+/// An untraced report must not carry (or emit) any instrumentation: the
+/// JSON has no `stats` key and equals a second untraced run's bit for bit.
+#[test]
+fn untraced_reports_carry_no_stats() {
+    let s = Scenario::llama("8b").serving_split(16, 1);
+    let a = s.evaluate().unwrap();
+    assert!(a.stats.is_none());
+    assert!(a.to_json().get("stats").is_none());
+    let b = s.evaluate().unwrap();
+    assert_eq!(a, b);
+    assert_eq!(a.to_json().pretty(), b.to_json().pretty());
+}
