@@ -31,8 +31,8 @@ pub use report::{
     PlanCandidate, PlanReport, Report, ServingReport,
 };
 pub use scenario::{
-    ClusterCfg, CollectiveCfg, ExploreOptions, FabricCfg, Goal, Knobs, Scenario, ServingCfg,
-    SystemCfg, TopologyCfg, TraceOptions, WorkloadCfg,
+    ClusterCfg, CollectiveCfg, ExplainOptions, ExploreOptions, FabricCfg, Goal, Knobs, Scenario,
+    ServingCfg, SystemCfg, TopologyCfg, TraceOptions, WorkloadCfg,
 };
 
 use crate::dse::{DesignPoint, Workload};
@@ -133,17 +133,35 @@ impl Scenario {
     /// the reason (bad name, infeasible split, capacity violation) instead
     /// of a bare `None`.
     pub fn evaluate(&self) -> Result<Report> {
-        if !self.trace.enabled {
+        if !self.trace.enabled && !self.explain.enabled {
             return self.evaluate_inner();
         }
-        // arm a thread-scoped span/metric capture around the evaluation and
-        // attach it to the report — everything else is bit-identical to the
-        // untraced path (instrumentation never feeds back into the math)
-        let session = crate::obs::start_capture();
+        if self.explain.enabled {
+            match self.goal {
+                Goal::Map | Goal::Serve | Goal::Explore => {}
+                g => bail!("explain supports the map/serve/explore goals, not '{}'", g.name()),
+            }
+            if self.explain.top == 0 {
+                bail!("explain top must be >= 1");
+            }
+        }
+        // arm thread-scoped captures around the evaluation and attach them
+        // to the report — everything else is bit-identical to the plain
+        // path (instrumentation never feeds back into the math)
+        let trace_session = self.trace.enabled.then(crate::obs::start_capture);
+        let explain_session = self.explain.enabled.then(crate::explain::start);
         let mut out = self.evaluate_inner();
-        let capture = crate::obs::finish_capture(session);
+        // disarm both collectors before the sensitivity sweep inside
+        // build_explain: its perturbed re-evaluations must not pollute
+        // this run's capture
+        let store = explain_session.map(crate::explain::finish);
+        let capture = trace_session.map(crate::obs::finish_capture);
         if let Ok(rep) = &mut out {
-            rep.stats = Some(capture);
+            if let Some(store) = store {
+                let section = self.build_explain(store, rep);
+                rep.explain = Some(section);
+            }
+            rep.stats = capture;
         }
         out
     }
@@ -190,21 +208,126 @@ impl Scenario {
             plan: None,
             fabric: None,
             explore: None,
+            explain: None,
             lint: Default::default(),
             stats: None,
         }
     }
 
-    fn eval_map(&self) -> Result<Report> {
-        let base_sys = self.system.build()?;
-        let (sys, calibrated) = match self.knobs.calibrate_opts()? {
-            None => (base_sys, false),
-            Some(opts) => (crate::fabric::calibrate_system(&base_sys, &opts), true),
+    /// Assemble the `Report.explain` section from the finished collector
+    /// store, running the sensitivity sweep when the options ask for it.
+    fn build_explain(
+        &self,
+        store: crate::explain::Store,
+        rep: &Report,
+    ) -> crate::explain::ExplainReport {
+        let audit = crate::explain::ledger::build(&store.phases, self.explain.top);
+        let mut sensitivity = Vec::new();
+        if self.explain.sensitivity {
+            sensitivity = match self.goal {
+                Goal::Map => rep
+                    .perf
+                    .as_ref()
+                    .map_or_else(Vec::new, |p| self.map_sensitivity(p.step_time)),
+                Goal::Serve => rep
+                    .serving
+                    .as_ref()
+                    .map_or_else(Vec::new, |v| self.serve_sensitivity(v.tpot)),
+                _ => Vec::new(),
+            };
+        }
+        crate::explain::ExplainReport {
+            attribution: store.attribution,
+            audit,
+            sensitivity,
+            frontier_tags: store.frontier_tags,
+        }
+    }
+
+    /// Elasticities of the step time w.r.t. the system knobs, from extra
+    /// (unexplained, untraced) evaluations at perturbed systems.
+    fn map_sensitivity(&self, base: f64) -> Vec<crate::explain::Elasticity> {
+        use crate::explain::sensitivity::{rank, scaled_system, Knob, REL_STEP};
+        use crate::explain::Elasticity;
+        let Ok(base_sys) = self.system.build() else { return Vec::new() };
+        let Ok(cal) = self.knobs.calibrate_opts() else { return Vec::new() };
+        let eval = |sys: &SystemSpec| -> Option<f64> {
+            let sys = match &cal {
+                None => sys.clone(),
+                Some(opts) => crate::fabric::calibrate_system(sys, opts),
+            };
+            self.run_map(&sys).ok().flatten().map(|r| r.step_time)
         };
+        let (xp, xm) = (1.0 + REL_STEP, 1.0 - REL_STEP);
+        let mut rows = Vec::new();
+        for knob in [Knob::Flops, Knob::MemBw, Knob::MemCap, Knob::LinkBw, Knob::Sram] {
+            let plus = eval(&scaled_system(&base_sys, knob, xp));
+            let minus = eval(&scaled_system(&base_sys, knob, xm));
+            rows.push(Elasticity::central(knob.name(), (1.0, xp, xm), base, plus, minus));
+        }
+        // the chip-count knob is discrete: rebuild the same topology family
+        // at 2n / n/2 chips (balanced construction; unrealizable counts —
+        // e.g. dgx1 off a multiple of 8 — leave that side infeasible)
+        let n = base_sys.n_chips();
+        let chips_eval = |m: usize| -> Option<f64> {
+            if m == n {
+                return None;
+            }
+            let sys = self.system_with_chips(m).build().ok()?;
+            eval(&sys)
+        };
+        let (np, nm) = (n * 2, (n / 2).max(1));
+        let plus = chips_eval(np);
+        let minus = chips_eval(nm);
+        let probes = (n as f64, np as f64, nm as f64);
+        rows.push(Elasticity::central("chips", probes, base, plus, minus));
+        rank(&mut rows);
+        rows
+    }
+
+    /// Elasticities of TPOT w.r.t. the serving-platform knobs.
+    fn serve_sensitivity(&self, base: f64) -> Vec<crate::explain::Elasticity> {
+        use crate::explain::sensitivity::{rank, scaled_serving, Knob, REL_STEP};
+        use crate::explain::Elasticity;
+        let (Ok(sys), Ok(model)) = (self.system.build_serving(), self.workload.llama_config())
+        else {
+            return Vec::new();
+        };
+        let pt = self.serving_point();
+        let eval = |s: &crate::serving::ServingSystem| {
+            crate::serving::evaluate(&model, s, &pt).ok().map(|m| m.tpot)
+        };
+        let (xp, xm) = (1.0 + REL_STEP, 1.0 - REL_STEP);
+        let mut rows = Vec::new();
+        for knob in [Knob::Flops, Knob::MemBw, Knob::MemCap, Knob::LinkBw, Knob::Sram] {
+            let plus = eval(&scaled_serving(&sys, knob, xp));
+            let minus = eval(&scaled_serving(&sys, knob, xm));
+            rows.push(Elasticity::central(knob.name(), (1.0, xp, xm), base, plus, minus));
+        }
+        rank(&mut rows);
+        rows
+    }
+
+    /// This scenario's system with the topology rebuilt for `chips` total
+    /// chips (balanced `topology::by_name` construction, same family).
+    fn system_with_chips(&self, chips: usize) -> SystemCfg {
+        let mut cfg = self.system.clone();
+        cfg.topology = TopologyCfg {
+            kind: cfg.topology.kind.clone(),
+            dims: Vec::new(),
+            chips: Some(chips),
+        };
+        cfg
+    }
+
+    /// The map-goal optimizer pass on an explicit system: `Ok(None)` when
+    /// no plan satisfies the capacity constraints. Shared by `eval_map` and
+    /// the sensitivity sweep's perturbed re-evaluations.
+    fn run_map(&self, sys: &SystemSpec) -> Result<Option<crate::pipeline::StepResult>> {
         let opts = self.knobs.interchip_options();
-        let r = match self.workload.build(&self.knobs)? {
+        Ok(match self.workload.build(&self.knobs)? {
             BuiltWorkload::Gpt { cfg, batch } => {
-                crate::pipeline::llm_training_opts(&cfg, &sys, batch, &opts)
+                crate::pipeline::llm_training_opts(&cfg, sys, batch, &opts)
             }
             BuiltWorkload::Graph { graph, passes, max_dp } => {
                 // graph workloads default to the legacy state factor (bf16
@@ -214,9 +337,18 @@ impl Scenario {
                 if self.knobs.state_bytes_per_weight_byte.is_none() {
                     gopts.state_bytes_per_weight_byte = 2.0;
                 }
-                crate::pipeline::workload_pass_opts(&graph, &sys, passes, &gopts)
+                crate::pipeline::workload_pass_opts(&graph, sys, passes, &gopts)
             }
+        })
+    }
+
+    fn eval_map(&self) -> Result<Report> {
+        let base_sys = self.system.build()?;
+        let (sys, calibrated) = match self.knobs.calibrate_opts()? {
+            None => (base_sys, false),
+            Some(opts) => (crate::fabric::calibrate_system(&base_sys, &opts), true),
         };
+        let r = self.run_map(&sys)?;
         let r = r.ok_or_else(|| {
             err!(
                 "no feasible mapping for {} on {} (capacity constraints)",
@@ -246,17 +378,27 @@ impl Scenario {
         Ok(rep)
     }
 
-    fn eval_serve(&self) -> Result<Report> {
-        let sys = self.system.build_serving()?;
-        let model = self.workload.llama_config()?;
-        let pt = crate::serving::ServingPoint {
+    /// The scenario's serving operating point.
+    fn serving_point(&self) -> crate::serving::ServingPoint {
+        crate::serving::ServingPoint {
             tp: self.serving.tp,
             pp: self.serving.pp,
             batch: self.serving.batch,
             prompt_len: self.serving.prompt,
             context: self.serving.context,
-        };
+        }
+    }
+
+    fn eval_serve(&self) -> Result<Report> {
+        let sys = self.system.build_serving()?;
+        let model = self.workload.llama_config()?;
+        let pt = self.serving_point();
         let m = crate::serving::evaluate(&model, &sys, &pt)?;
+        if crate::explain::enabled() {
+            let attr = crate::explain::attribution::from_serving(&m);
+            crate::explain::with_store(|s| s.attribution = Some(attr));
+            audit_serving_splits(&model, &sys, &pt, &m);
+        }
         let mut rep = self.report_base(format!("{} x{}", sys.chip.name, sys.n_chips));
         rep.mapping = Some(Mapping {
             tp: pt.tp,
@@ -384,6 +526,20 @@ impl Scenario {
         }
         let space = self.explore.space(&self.workload, &self.knobs)?;
         let outcome = crate::explore::explore(&space, &self.explore.settings())?;
+        if crate::explain::enabled() {
+            // When the evaluator's sequential fast path ran candidates on
+            // this (armed) thread, their per-candidate optimizer hooks
+            // landed in the store; an explore report explains the frontier,
+            // not one arbitrary candidate, so drop those captures.
+            crate::explain::with_store(|s| {
+                s.attribution = None;
+                s.phases.clear();
+            });
+            crate::explain::record_frontier_tags(crate::explore::frontier_tags(
+                &outcome,
+                self.explore.top,
+            ));
+        }
         let mut rep = self.report_base(format!(
             "{}-candidate search space ({} chips x {} mems x {} links x {} topologies x {} \
              counts x {} batches)",
@@ -447,6 +603,57 @@ impl Scenario {
                 .collect(),
         });
         Ok(rep)
+    }
+}
+
+/// Record the `serving.split` audit phase: every alternative TP×PP split
+/// that covers the chip group, scored by TPOT and dominated by the decode
+/// phase's binding resource (callers gate on `explain::enabled`).
+fn audit_serving_splits(
+    model: &crate::graph::llama::LlamaConfig,
+    sys: &crate::serving::ServingSystem,
+    chosen: &crate::serving::ServingPoint,
+    m: &crate::serving::ServingMetrics,
+) {
+    let dom = |b: (f64, f64, f64)| {
+        if b.0 >= b.1 && b.0 >= b.2 {
+            "compute"
+        } else if b.1 >= b.2 {
+            "dram"
+        } else {
+            "interchip"
+        }
+    };
+    crate::explain::ledger::record_winner(
+        "serving.split",
+        format!("TP{}xPP{}", chosen.tp, chosen.pp),
+        m.tpot,
+        dom(m.decode_breakdown),
+    );
+    let n = sys.n_chips;
+    for tp in 1..=n {
+        if n % tp != 0 {
+            continue;
+        }
+        let pp = n / tp;
+        if tp == chosen.tp && pp == chosen.pp {
+            continue;
+        }
+        let alt = crate::serving::ServingPoint { tp, pp, ..*chosen };
+        match crate::serving::evaluate(model, sys, &alt) {
+            Ok(am) => crate::explain::ledger::record_candidate(
+                "serving.split",
+                format!("TP{tp}xPP{pp}"),
+                Some(am.tpot),
+                dom(am.decode_breakdown),
+            ),
+            Err(_) => crate::explain::ledger::record_candidate(
+                "serving.split",
+                format!("TP{tp}xPP{pp}"),
+                None,
+                "infeasible-split",
+            ),
+        }
     }
 }
 
@@ -646,6 +853,62 @@ mod tests {
             assert!(shape.contains(phase), "missing span '{phase}' in:\n{shape}");
         }
         assert_eq!(cap.counter("pipeline.evaluations"), Some(1));
+    }
+
+    /// Explaining fills attribution + audit + sensitivity and never
+    /// perturbs the numbers: stripping `explain` restores bit-parity with
+    /// the plain run.
+    #[test]
+    fn explained_evaluation_fills_sections_without_changing_the_report() {
+        let s = Scenario::llm("gpt3-175b");
+        let plain = s.evaluate().unwrap();
+        let mut ex = s.explained().evaluate().unwrap();
+        let section = ex.explain.take().expect("explained run fills Report.explain");
+        assert_eq!(ex, plain, "explain must not change any report bit");
+        let a = section.attribution.expect("map goal records attribution");
+        assert!(
+            (a.levels.sum() - a.total).abs() <= 1e-9 * a.total.max(1.0),
+            "levels {} vs total {}",
+            a.levels.sum(),
+            a.total
+        );
+        assert_eq!(a.total, plain.step_time().unwrap());
+        let audit = section.audit.expect("audit ledger");
+        assert!(
+            audit.phases.iter().any(|p| !p.rejected.is_empty()),
+            "at least one phase must carry rejected candidates"
+        );
+        assert_eq!(section.sensitivity.len(), 6, "five continuous knobs + chips");
+        assert!(section.sensitivity.iter().any(|e| e.elasticity.is_some()));
+    }
+
+    /// Serve-goal explain: two-phase attribution, the TP×PP split audit,
+    /// and serving-knob elasticities.
+    #[test]
+    fn explained_serve_records_split_audit() {
+        let r = Scenario::llama("8b").explained().evaluate().unwrap();
+        let e = r.explain.as_ref().unwrap();
+        let a = e.attribution.as_ref().unwrap();
+        assert!((a.levels.sum() - a.total).abs() <= 1e-9 * a.total);
+        assert_eq!(a.kernels.len(), 2, "prefill + decode rows");
+        let audit = e.audit.as_ref().unwrap();
+        let split = audit.phases.iter().find(|p| p.phase == "serving.split").unwrap();
+        // divisor splits of the 16-chip group minus the chosen TP16xPP1
+        assert_eq!(split.considered, 4);
+        assert!(split.best.is_some());
+        assert!(split.rejected.iter().all(|c| !c.dominating.is_empty()));
+        assert!(!e.sensitivity.is_empty());
+    }
+
+    /// Explain on an unsupported goal is a descriptive error, not a panic.
+    #[test]
+    fn explained_unsupported_goal_errors() {
+        let e = Scenario::llama("8b")
+            .simulate_traffic(1.0, 10)
+            .explained()
+            .evaluate()
+            .unwrap_err();
+        assert!(e.to_string().contains("explain supports"), "{e}");
     }
 
     /// evaluate_design wrapper mirrors the internal point evaluation.

@@ -515,6 +515,12 @@ pub struct Report {
     pub plan: Option<PlanReport>,
     pub fabric: Option<FabricReport>,
     pub explore: Option<ExploreReport>,
+    /// Explain-layer section (attribution + decision audit + sensitivity)
+    /// — `Some` only when the scenario was evaluated with
+    /// [`Scenario::explained`](crate::api::Scenario::explained) (CLI:
+    /// `dfmodel explain`). `None` otherwise, so unexplained reports are
+    /// bit-identical to pre-explain ones.
+    pub explain: Option<crate::explain::ExplainReport>,
     /// Pre-flight lint diagnostics (warnings only — errors abort
     /// `evaluate` before a report exists). Empty when linting is off.
     pub lint: crate::lint::LintReport,
@@ -584,6 +590,9 @@ impl Report {
         if let Some(e) = &self.explore {
             kv.push(("explore", e.to_json()));
         }
+        if let Some(e) = &self.explain {
+            kv.push(("explain", e.to_json()));
+        }
         if !self.lint.is_clean() {
             kv.push(("lint", self.lint.to_json()));
         }
@@ -598,9 +607,6 @@ impl Report {
         let mut s = String::new();
         let _ = writeln!(s, "workload: {}", self.workload);
         let _ = writeln!(s, "system  : {}", self.system);
-        for d in &self.lint.diags {
-            let _ = writeln!(s, "{}", d.render());
-        }
         if let Some(m) = &self.mapping {
             let _ = writeln!(s, "degrees : TP={} PP={} DP={}", m.tp, m.pp, m.dp);
             if m.n_stages > 0 || m.n_partitions > 0 {
@@ -641,6 +647,14 @@ impl Report {
         }
         if let Some(e) = &self.explore {
             render_explore(e, &mut s);
+        }
+        if let Some(e) = &self.explain {
+            s.push_str(&e.render(e.audit.as_ref().map_or(5, |a| a.top)));
+        }
+        // stable machine-parsed tail: lint warnings, then the span-tree /
+        // metrics footer — nothing prints after the stats block
+        for d in &self.lint.diags {
+            let _ = writeln!(s, "{}", d.render());
         }
         if let Some(c) = &self.stats {
             s.push_str(&c.span_tree());

@@ -772,6 +772,30 @@ pub struct TraceOptions {
     pub enabled: bool,
 }
 
+/// Explain-layer options (the `"explain"` block in scenario JSON): when
+/// enabled, `evaluate` arms the [`crate::explain`] collector around the run
+/// and attaches roofline attribution, the optimizer decision audit, and
+/// knob elasticities to the report (`Report.explain`). Off by default —
+/// the unexplained path costs one atomic flag check per hook and produces
+/// bit-identical reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExplainOptions {
+    /// Build `Report.explain` during `evaluate`.
+    pub enabled: bool,
+    /// Rejected candidates kept per audited optimizer phase (and kernels
+    /// shown per attribution render).
+    pub top: usize,
+    /// Run the finite-difference sensitivity sweep (several extra
+    /// evaluations); disable for cheap attribution-only runs.
+    pub sensitivity: bool,
+}
+
+impl Default for ExplainOptions {
+    fn default() -> Self {
+        ExplainOptions { enabled: false, top: 5, sensitivity: true }
+    }
+}
+
 /// One declarative experiment: workload + system + knobs + per-goal
 /// options. Build with the constructors below, or parse from JSON; run
 /// with [`Scenario::evaluate`](crate::api::Scenario::evaluate).
@@ -791,6 +815,9 @@ pub struct Scenario {
     /// Span/metric capture options; enable with [`Scenario::traced`] or
     /// `"trace": {"enabled": true}` in JSON (CLI: `--trace` / `--stats`).
     pub trace: TraceOptions,
+    /// Explain-layer options; enable with [`Scenario::explained`] or
+    /// `"explain": {"enabled": true}` in JSON (CLI: `dfmodel explain`).
+    pub explain: ExplainOptions,
 }
 
 impl Scenario {
@@ -806,6 +833,7 @@ impl Scenario {
             explore: ExploreOptions::default(),
             lint: true,
             trace: TraceOptions::default(),
+            explain: ExplainOptions::default(),
         }
     }
 
@@ -877,6 +905,21 @@ impl Scenario {
     /// report (`Report.stats`); see [`crate::obs`].
     pub fn traced(mut self) -> Scenario {
         self.trace.enabled = true;
+        self
+    }
+
+    /// Attach the explain layer (attribution + optimizer audit +
+    /// sensitivity) to the report (`Report.explain`); see [`crate::explain`].
+    pub fn explained(mut self) -> Scenario {
+        self.explain.enabled = true;
+        self
+    }
+
+    /// Rejected candidates kept per audited phase (implies
+    /// [`Scenario::explained`]).
+    pub fn explain_top(mut self, top: usize) -> Scenario {
+        self.explain.enabled = true;
+        self.explain.top = top;
         self
     }
 
@@ -999,6 +1042,9 @@ impl Scenario {
         if self.trace != TraceOptions::default() {
             kv.push(("trace", trace_json(&self.trace)));
         }
+        if self.explain != ExplainOptions::default() {
+            kv.push(("explain", explain_opts_json(&self.explain)));
+        }
         Json::obj(kv)
     }
 
@@ -1043,6 +1089,7 @@ impl Scenario {
         let explore = parse_explore(j.get("explore").unwrap_or(&Json::Null))?;
         let lint = j.get("lint").and_then(|v| v.as_bool()).unwrap_or(true);
         let trace = parse_trace(j.get("trace").unwrap_or(&Json::Null));
+        let explain = parse_explain_opts(j.get("explain").unwrap_or(&Json::Null));
         Ok(Scenario {
             goal,
             workload,
@@ -1054,6 +1101,7 @@ impl Scenario {
             explore,
             lint,
             trace,
+            explain,
         })
     }
 }
@@ -1065,6 +1113,23 @@ fn parse_trace(j: &Json) -> TraceOptions {
 
 fn trace_json(t: &TraceOptions) -> Json {
     Json::obj(vec![("enabled", Json::Bool(t.enabled))])
+}
+
+fn parse_explain_opts(j: &Json) -> ExplainOptions {
+    let d = ExplainOptions::default();
+    ExplainOptions {
+        enabled: j.get("enabled").and_then(|v| v.as_bool()).unwrap_or(d.enabled),
+        top: j.get("top").and_then(|v| v.as_usize()).unwrap_or(d.top),
+        sensitivity: j.get("sensitivity").and_then(|v| v.as_bool()).unwrap_or(d.sensitivity),
+    }
+}
+
+fn explain_opts_json(e: &ExplainOptions) -> Json {
+    Json::obj(vec![
+        ("enabled", Json::Bool(e.enabled)),
+        ("top", Json::from(e.top)),
+        ("sensitivity", Json::Bool(e.sensitivity)),
+    ])
 }
 
 fn parse_workload(j: &Json) -> Result<WorkloadCfg> {

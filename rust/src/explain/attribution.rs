@@ -1,0 +1,319 @@
+//! Roofline attribution: slice the predicted step time into disjoint
+//! per-hierarchy-level shares (compute / SRAM / DRAM / inter-chip /
+//! pipeline bubble) and per-kernel shares, naming the binding resource.
+//!
+//! The decomposition is exact by construction: the pipeline composition is
+//! `step = work + bubble + dp_exposed`, the work slice splits into the
+//! intra-chip fraction and the p2p excess, and the intra-chip fraction is
+//! distributed over partitions proportionally to their critical times
+//! (which sum to the intra total). Every split conserves the total, so
+//! `levels.sum() == total` to floating-point rounding (≪ 1e-9 relative).
+//!
+//! SRAM has no *time* term in DFModel (§V treats SRAM as a capacity
+//! constraint: a fusion that exceeds SRAM is infeasible, it is never
+//! slowed down), so the SRAM share is structurally zero; the level is kept
+//! in the schema to make that explicit.
+
+use crate::graph::DataflowGraph;
+use crate::intrachip::IntraChipMapping;
+use crate::roofline::{Bound, Roofline};
+use crate::system::SystemSpec;
+use crate::util::json::Json;
+use crate::util::units::fmt_time;
+use std::fmt::Write as _;
+
+/// Seconds of the step attributed to each hierarchy level.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Levels {
+    /// Tile compute (partitions whose critical time is `t_comp`).
+    pub compute: f64,
+    /// Always 0: SRAM is a capacity constraint, not a time term (see the
+    /// module docs).
+    pub sram: f64,
+    /// DRAM streaming (partitions bound by `t_mem`).
+    pub dram: f64,
+    /// Inter-chip collectives + conversions + p2p excess + exposed DP
+    /// all-reduce.
+    pub interchip: f64,
+    /// Pipeline fill/drain bubble.
+    pub bubble: f64,
+}
+
+impl Levels {
+    /// Total attributed seconds — equals the step time within rounding.
+    pub fn sum(&self) -> f64 {
+        self.compute + self.sram + self.dram + self.interchip + self.bubble
+    }
+
+    /// The level with the largest share.
+    pub fn binding(&self) -> &'static str {
+        let pairs = [
+            ("compute", self.compute),
+            ("sram", self.sram),
+            ("dram", self.dram),
+            ("interchip", self.interchip),
+            ("bubble", self.bubble),
+        ];
+        pairs
+            .iter()
+            .fold(("compute", f64::MIN), |acc, &(n, v)| if v > acc.1 { (n, v) } else { acc })
+            .0
+    }
+
+    /// JSON object with one `*_s` key per level (sums to `total_s`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("compute_s", Json::from(self.compute)),
+            ("sram_s", Json::from(self.sram)),
+            ("dram_s", Json::from(self.dram)),
+            ("interchip_s", Json::from(self.interchip)),
+            ("bubble_s", Json::from(self.bubble)),
+        ])
+    }
+}
+
+/// One kernel's slice of the step time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelShare {
+    /// Kernel name on the optimized (sharded) graph.
+    pub name: String,
+    /// Intra-chip partition the kernel was fused into.
+    pub partition: usize,
+    /// Seconds of the step attributed to this kernel.
+    pub seconds: f64,
+    /// Binding resource of its partition (`compute` / `dram` /
+    /// `interchip`).
+    pub bound: &'static str,
+}
+
+impl KernelShare {
+    /// JSON row of the `kernels` array.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::from(self.name.as_str())),
+            ("partition", Json::from(self.partition)),
+            ("seconds", Json::from(self.seconds)),
+            ("bound", Json::from(self.bound)),
+        ])
+    }
+}
+
+/// Where the per-chip pass sits on the chip roofline (compute vs DRAM
+/// side; the network roof needs byte counts the mapping does not expose).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RooflineTag {
+    /// Operational intensity of the per-chip pass, FLOP per DRAM byte.
+    pub oi_mem: f64,
+    /// The chip's memory ridge point (peak FLOP/s ÷ DRAM bandwidth).
+    pub ridge_mem: f64,
+    /// Which side of the ridge the pass sits on (`compute` / `memory`).
+    pub bound: &'static str,
+}
+
+impl RooflineTag {
+    /// JSON form of the roofline tag.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("oi_mem_flop_per_byte", Json::from(self.oi_mem)),
+            ("ridge_mem_flop_per_byte", Json::from(self.ridge_mem)),
+            ("bound", Json::from(self.bound)),
+        ])
+    }
+}
+
+/// The full attribution of one evaluated design point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Attribution {
+    /// Total predicted step time (seconds) — the quantity the level and
+    /// kernel shares sum to.
+    pub total: f64,
+    /// Level with the largest share.
+    pub binding: &'static str,
+    /// Per-hierarchy-level seconds.
+    pub levels: Levels,
+    /// Per-kernel seconds, sorted by share descending.
+    pub kernels: Vec<KernelShare>,
+    /// Chip-roofline position of the per-chip pass, when derivable.
+    pub roofline: Option<RooflineTag>,
+}
+
+impl Attribution {
+    /// JSON form (`explain.attribution`).
+    pub fn to_json(&self) -> Json {
+        let mut kv = vec![
+            ("total_s", Json::from(self.total)),
+            ("binding", Json::from(self.binding)),
+            ("levels", self.levels.to_json()),
+            ("kernels", Json::arr(self.kernels.iter().map(KernelShare::to_json))),
+        ];
+        if let Some(r) = &self.roofline {
+            kv.push(("roofline", r.to_json()));
+        }
+        Json::obj(kv)
+    }
+
+    /// Human rendering (top `top` kernels).
+    pub fn render(&self, top: usize) -> String {
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "attribution : total {} | binding {}",
+            fmt_time(self.total),
+            self.binding
+        );
+        let pct = |v: f64| 100.0 * v / self.total.max(1e-30);
+        let _ = writeln!(
+            s,
+            "  levels    : compute {:.1}% | sram {:.1}% | dram {:.1}% | interchip {:.1}% | bubble {:.1}%",
+            pct(self.levels.compute),
+            pct(self.levels.sram),
+            pct(self.levels.dram),
+            pct(self.levels.interchip),
+            pct(self.levels.bubble),
+        );
+        if let Some(r) = &self.roofline {
+            let _ = writeln!(
+                s,
+                "  roofline  : OI {:.1} FLOP/B vs ridge {:.1} ({}-side)",
+                r.oi_mem, r.ridge_mem, r.bound
+            );
+        }
+        for k in self.kernels.iter().take(top) {
+            let _ = writeln!(
+                s,
+                "  kernel    : {:<24} {:>6.2}% ({})",
+                k.name,
+                pct(k.seconds),
+                k.bound
+            );
+        }
+        s
+    }
+}
+
+/// Binding resource of one intra-chip partition, with the same tie-break
+/// order as `IntraChipMapping::breakdown` so the level sums agree with the
+/// Fig. 11/13/15/17 splits.
+pub(crate) fn partition_bound(p: &crate::intrachip::PartitionMetrics) -> &'static str {
+    if p.t_comp >= p.t_mem && p.t_comp >= p.t_net {
+        "compute"
+    } else if p.t_mem >= p.t_net {
+        "dram"
+    } else {
+        "interchip"
+    }
+}
+
+/// How the pipeline composed the step time out of its slices. All fields
+/// in seconds except `intra_fraction`.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct StepComposition {
+    /// Total step time.
+    pub step: f64,
+    /// Pipeline fill/drain bubble seconds.
+    pub bubble: f64,
+    /// Exposed (non-overlapped) data-parallel all-reduce seconds.
+    pub dp_exposed: f64,
+    /// Fraction of the steady-state work slice governed by the intra-chip
+    /// pass (the rest is p2p-bound stage-time excess), in [0, 1].
+    pub intra_fraction: f64,
+}
+
+/// Record the attribution of a map-goal evaluation into the armed store.
+/// `g` is the sharded graph the intra-chip pass optimized.
+pub(crate) fn record_map(
+    g: &DataflowGraph,
+    intra: &IntraChipMapping,
+    sys: &SystemSpec,
+    comp: &StepComposition,
+) {
+    let work = (comp.step - comp.bubble - comp.dp_exposed).max(0.0);
+    let work_intra = work * comp.intra_fraction.clamp(0.0, 1.0);
+    let p2p_excess = work - work_intra;
+
+    let sum_t: f64 = intra.partitions.iter().map(|p| p.t_cri()).sum();
+    let sum_t = sum_t.max(1e-30);
+    let mut levels = Levels {
+        interchip: p2p_excess + comp.dp_exposed,
+        bubble: comp.bubble,
+        ..Levels::default()
+    };
+    let members = intra.assignment.members();
+    let mut kernels: Vec<KernelShare> = Vec::new();
+    for (pi, p) in intra.partitions.iter().enumerate() {
+        let share = work_intra * p.t_cri() / sum_t;
+        let bound = partition_bound(p);
+        match bound {
+            "compute" => levels.compute += share,
+            "dram" => levels.dram += share,
+            _ => levels.interchip += share,
+        }
+        // split the partition's share over its member kernels by FLOP
+        // (uniform when the partition has no FLOPs at all)
+        let ks = members.get(pi).cloned().unwrap_or_default();
+        if ks.is_empty() {
+            continue;
+        }
+        let flops: Vec<f64> = ks.iter().map(|&k| g.kernels[k].flops).collect();
+        let fsum: f64 = flops.iter().sum();
+        for (&k, &f) in ks.iter().zip(&flops) {
+            let w = if fsum > 0.0 { f / fsum } else { 1.0 / ks.len() as f64 };
+            kernels.push(KernelShare {
+                name: g.kernels[k].name.clone(),
+                partition: pi,
+                seconds: share * w,
+                bound,
+            });
+        }
+    }
+    kernels.sort_by(|a, b| {
+        b.seconds.partial_cmp(&a.seconds).unwrap_or(std::cmp::Ordering::Equal)
+    });
+
+    let roofline = {
+        let r = Roofline::of_system(sys);
+        let dram = intra.total_dram_traffic();
+        let flops = g.total_flops();
+        (dram > 0.0).then(|| RooflineTag {
+            oi_mem: flops / dram,
+            ridge_mem: r.ridge_mem(),
+            bound: match r.bound(flops / dram, f64::INFINITY) {
+                Bound::Compute => "compute",
+                _ => "memory",
+            },
+        })
+    };
+
+    let binding = levels.binding();
+    super::with_store(|s| {
+        s.attribution = Some(Attribution {
+            total: comp.step,
+            binding,
+            levels,
+            kernels: kernels.clone(),
+            roofline: roofline.clone(),
+        });
+    });
+}
+
+/// Attribution of a serving point: two rows (prefill / decode), their
+/// breakdown fractions scaled to TTFT / TPOT seconds.
+pub(crate) fn from_serving(m: &crate::serving::ServingMetrics) -> Attribution {
+    let mut levels = Levels::default();
+    let mut kernels = Vec::new();
+    for (name, total, (c, mem, net)) in m.phase_rows() {
+        levels.compute += total * c;
+        levels.dram += total * mem;
+        levels.interchip += total * net;
+        let bound = if c >= mem && c >= net {
+            "compute"
+        } else if mem >= net {
+            "dram"
+        } else {
+            "interchip"
+        };
+        kernels.push(KernelShare { name: name.into(), partition: 0, seconds: total, bound });
+    }
+    let binding = levels.binding();
+    Attribution { total: m.ttft + m.tpot, binding, levels, kernels, roofline: None }
+}

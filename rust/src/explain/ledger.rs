@@ -1,0 +1,266 @@
+//! The optimizer decision audit: each optimization phase records the
+//! candidates it weighed, and the ledger keeps the top-K rejected ones
+//! with the dominating term that killed each.
+//!
+//! Phases (in ledger order):
+//! - `interchip.plan` — every (TP, PP, DP) plan of the §IV loop; rejected
+//!   plans carry their critical time and the binding stage's dominating
+//!   term, infeasible ones the capacity constraint that excluded them.
+//! - `interchip.sharding` — per-kernel best single-swap alternatives to
+//!   the chosen sharding labeling, dominated by the inherent-collective or
+//!   conversion cost delta.
+//! - `intrachip.partition` — adjacent-partition merge candidates of the §V
+//!   fusion DP with the merged segment's binding resource.
+//! - `pipeline.dp` — the winning plan's pipeline stages; the binding stage
+//!   wins, the others are the slack the stage DP equalized against.
+//! - `serving.split` — alternative TP×PP splits of the serving chip group,
+//!   scored by TPOT and dominated by the decode phase's binding resource.
+
+use crate::util::json::Json;
+use std::fmt::Write as _;
+
+/// Canonical phase ordering for reports.
+const PHASE_ORDER: [&str; 5] = [
+    "interchip.plan",
+    "interchip.sharding",
+    "intrachip.partition",
+    "pipeline.dp",
+    "serving.split",
+];
+
+/// One candidate the optimizer weighed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AuditEntry {
+    /// Human-readable candidate description.
+    pub candidate: String,
+    /// Candidate score in seconds (lower is better); `None` = infeasible.
+    pub score: Option<f64>,
+    /// The term that dominated the decision (e.g. `compute`, `p2p`,
+    /// `dram-capacity`, `conversion`).
+    pub dominating: String,
+}
+
+impl AuditEntry {
+    /// JSON row; infeasible candidates carry `"score_s": null` plus
+    /// `"feasible": false` (never a raw `Infinity`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("candidate", Json::from(self.candidate.as_str())),
+            ("score_s", self.score.map_or(Json::Null, Json::from)),
+            ("feasible", Json::from(self.score.is_some())),
+            ("dominating", Json::from(self.dominating.as_str())),
+        ])
+    }
+}
+
+/// Accumulator for one phase inside the thread-local store.
+#[derive(Debug, Default)]
+pub(crate) struct PhaseAcc {
+    pub(crate) phase: &'static str,
+    /// Total candidates weighed (entries may be capped later, this never
+    /// is).
+    pub(crate) considered: usize,
+    pub(crate) best: Option<AuditEntry>,
+    pub(crate) entries: Vec<AuditEntry>,
+}
+
+fn acc<'a>(store: &'a mut super::Store, phase: &'static str) -> &'a mut PhaseAcc {
+    if let Some(i) = store.phases.iter().position(|p| p.phase == phase) {
+        &mut store.phases[i]
+    } else {
+        store.phases.push(PhaseAcc { phase, ..PhaseAcc::default() });
+        store.phases.last_mut().expect("just pushed")
+    }
+}
+
+/// Record one weighed candidate (hooks must gate on `explain::enabled`).
+pub(crate) fn record_candidate(
+    phase: &'static str,
+    candidate: String,
+    score: Option<f64>,
+    dominating: impl Into<String>,
+) {
+    let dominating = dominating.into();
+    super::with_store(|s| {
+        let a = acc(s, phase);
+        a.considered += 1;
+        a.entries.push(AuditEntry { candidate, score, dominating });
+    });
+}
+
+/// Record the winning candidate of a phase.
+pub(crate) fn record_winner(
+    phase: &'static str,
+    candidate: String,
+    score: f64,
+    dominating: impl Into<String>,
+) {
+    let dominating = dominating.into();
+    super::with_store(|s| {
+        acc(s, phase).best = Some(AuditEntry { candidate, score: Some(score), dominating });
+    });
+}
+
+/// Record the winning plan's pipeline stages as the `pipeline.dp` phase:
+/// the binding stage is the winner, every other stage a "rejected"
+/// candidate whose slack the stage DP equalized.
+pub(crate) fn record_pipeline_stages(
+    stages: &[crate::interchip::StageMetrics],
+    stage_of: &[usize],
+) {
+    let Some((bi, _)) = stages
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.t_cri().partial_cmp(&b.1.t_cri()).unwrap_or(std::cmp::Ordering::Equal))
+    else {
+        return;
+    };
+    let n_kernels = |si: usize| stage_of.iter().filter(|&&s| s == si).count();
+    for (si, st) in stages.iter().enumerate() {
+        let cand = format!("stage {si} ({} kernels)", n_kernels(si));
+        let dom = stage_dominator(st);
+        if si == bi {
+            record_winner("pipeline.dp", cand, st.t_cri().raw(), dom);
+        } else {
+            record_candidate("pipeline.dp", cand, Some(st.t_cri().raw()), dom);
+        }
+    }
+}
+
+/// Dominating term of one pipeline stage (`compute` / `collective` /
+/// `p2p`).
+pub(crate) fn stage_dominator(s: &crate::interchip::StageMetrics) -> &'static str {
+    let (c, n, p) = (s.t_comp.raw(), s.t_net.raw(), s.t_p2p.raw());
+    if c >= n && c >= p {
+        "compute"
+    } else if n >= p {
+        "collective"
+    } else {
+        "p2p"
+    }
+}
+
+/// Dominating term of the binding stage of a staged plan.
+pub(crate) fn stages_dominator(stages: &[crate::interchip::StageMetrics]) -> &'static str {
+    stages
+        .iter()
+        .max_by(|a, b| a.t_cri().partial_cmp(&b.t_cri()).unwrap_or(std::cmp::Ordering::Equal))
+        .map_or("compute", stage_dominator)
+}
+
+/// One phase of the assembled ledger.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AuditPhase {
+    /// Phase name (see the module docs).
+    pub phase: String,
+    /// Total candidates the phase weighed.
+    pub considered: usize,
+    /// The winning candidate.
+    pub best: Option<AuditEntry>,
+    /// Top-K rejected candidates, best (lowest score) first, infeasible
+    /// last.
+    pub rejected: Vec<AuditEntry>,
+}
+
+impl AuditPhase {
+    /// JSON form of one phase.
+    pub fn to_json(&self) -> Json {
+        let mut kv = vec![
+            ("phase", Json::from(self.phase.as_str())),
+            ("considered", Json::from(self.considered)),
+        ];
+        if let Some(b) = &self.best {
+            kv.push(("best", b.to_json()));
+        }
+        kv.push(("rejected", Json::arr(self.rejected.iter().map(AuditEntry::to_json))));
+        Json::obj(kv)
+    }
+}
+
+/// The assembled decision audit (`explain.audit`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AuditLedger {
+    /// The K in top-K rejected candidates per phase.
+    pub top: usize,
+    /// Phases in canonical order.
+    pub phases: Vec<AuditPhase>,
+}
+
+impl AuditLedger {
+    /// JSON form (`explain.audit`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("top", Json::from(self.top)),
+            ("phases", Json::arr(self.phases.iter().map(AuditPhase::to_json))),
+        ])
+    }
+
+    /// Human rendering: one line per phase.
+    pub fn render(&self) -> String {
+        let mut s = format!("audit (top {} per phase):\n", self.top);
+        for p in &self.phases {
+            let best = p.best.as_ref().map_or("-".to_string(), |b| {
+                format!(
+                    "{} {} ({})",
+                    b.candidate,
+                    b.score.map_or("-".into(), |v| format!("{v:.3e}s")),
+                    b.dominating
+                )
+            });
+            let _ = write!(s, "  {:<20} {} candidates | best {best}", p.phase, p.considered);
+            if !p.rejected.is_empty() {
+                let rej: Vec<String> = p
+                    .rejected
+                    .iter()
+                    .map(|e| match e.score {
+                        Some(v) => format!("{} {:.3e}s ({})", e.candidate, v, e.dominating),
+                        None => format!("{} infeasible ({})", e.candidate, e.dominating),
+                    })
+                    .collect();
+                let _ = write!(s, " | rejected: {}", rej.join(", "));
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// Assemble the ledger from the raw per-phase accumulators: canonical
+/// phase order, winner dropped from the rejected list, rejected sorted by
+/// score ascending (infeasible last) and capped at `top`.
+pub(crate) fn build(phases: &[PhaseAcc], top: usize) -> Option<AuditLedger> {
+    if phases.is_empty() {
+        return None;
+    }
+    let rank = |name: &str| PHASE_ORDER.iter().position(|&p| p == name).unwrap_or(usize::MAX);
+    let mut order: Vec<usize> = (0..phases.len()).collect();
+    order.sort_by_key(|&i| (rank(phases[i].phase), phases[i].phase));
+    let assembled = order
+        .into_iter()
+        .map(|i| {
+            let acc = &phases[i];
+            let mut rejected: Vec<AuditEntry> = acc
+                .entries
+                .iter()
+                .filter(|e| acc.best.as_ref().is_none_or(|b| b.candidate != e.candidate))
+                .cloned()
+                .collect();
+            rejected.sort_by(|a, b| match (a.score, b.score) {
+                (Some(x), Some(y)) => {
+                    x.partial_cmp(&y).unwrap_or(std::cmp::Ordering::Equal)
+                }
+                (Some(_), None) => std::cmp::Ordering::Less,
+                (None, Some(_)) => std::cmp::Ordering::Greater,
+                (None, None) => a.candidate.cmp(&b.candidate),
+            });
+            rejected.truncate(top);
+            AuditPhase {
+                phase: acc.phase.to_string(),
+                considered: acc.considered,
+                best: acc.best.clone(),
+                rejected,
+            }
+        })
+        .collect();
+    Some(AuditLedger { top, phases: assembled })
+}

@@ -1,0 +1,194 @@
+//! The explain layer: observability into the *model's* decisions, not just
+//! our code's phases (that is `obs`). Three views, all opt-in through
+//! `Scenario::explained()` / `dfmodel explain` and zero-cost when off:
+//!
+//! 1. **Roofline attribution** ([`Attribution`]): the predicted step time
+//!    decomposed per kernel and per hierarchy level — compute / SRAM /
+//!    DRAM / inter-chip collectives / pipeline bubble — with the binding
+//!    resource named. Shares sum to the total by construction (each level
+//!    is a disjoint slice of the step-time composition), within 1e-9.
+//! 2. **Optimizer decision audit** ([`AuditLedger`]): the top-K rejected
+//!    candidates of each optimization phase (inter-chip plan loop,
+//!    sharding selection, intra-chip fusion DP, pipeline stage DP) with
+//!    their scores and the dominating term that killed each.
+//! 3. **Sensitivity analysis** ([`Elasticity`]): central-finite-difference
+//!    elasticities of the objective w.r.t. each `SystemSpec` knob, ranked.
+//!
+//! The collector follows the `obs` pattern: a relaxed atomic guards the
+//! disabled path (one load, no allocation), recording goes to a
+//! thread-local store, and the `!Send` session token ties start/finish to
+//! one thread. Hooks in `pipeline`, `interchip`, and `intrachip` check
+//! [`enabled`] before building any strings.
+
+pub mod attribution;
+pub mod ledger;
+pub mod sensitivity;
+
+pub use attribution::{Attribution, KernelShare, Levels, RooflineTag};
+pub use ledger::{AuditEntry, AuditLedger, AuditPhase};
+pub use sensitivity::Elasticity;
+
+use crate::util::json::Json;
+use std::cell::RefCell;
+use std::fmt::Write as _;
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of live capture sessions across all threads. Zero = every hook
+/// is a single relaxed load.
+static ACTIVE: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static STORE: RefCell<Option<Store>> = const { RefCell::new(None) };
+}
+
+/// Everything the hooks record during one explained evaluation.
+#[derive(Debug, Default)]
+pub(crate) struct Store {
+    pub(crate) attribution: Option<Attribution>,
+    pub(crate) phases: Vec<ledger::PhaseAcc>,
+    pub(crate) frontier_tags: Vec<String>,
+}
+
+/// Whether the *current thread* is recording an explain capture. The fast
+/// path (no session anywhere) is one relaxed atomic load; hooks must check
+/// this before building candidate strings.
+pub fn enabled() -> bool {
+    ACTIVE.load(Ordering::Relaxed) != 0 && STORE.with(|s| s.borrow().is_some())
+}
+
+/// Run `f` against the thread's store if a session is armed.
+pub(crate) fn with_store<R>(f: impl FnOnce(&mut Store) -> R) -> Option<R> {
+    if ACTIVE.load(Ordering::Relaxed) == 0 {
+        return None;
+    }
+    STORE.with(|s| s.borrow_mut().as_mut().map(f))
+}
+
+/// Token for one explain capture; `!Send` so finish happens on the
+/// recording thread.
+pub(crate) struct ExplainSession {
+    _not_send: PhantomData<*const ()>,
+}
+
+/// Arm the collector on this thread. Panics on nested sessions (one
+/// explained evaluation at a time per thread).
+pub(crate) fn start() -> ExplainSession {
+    STORE.with(|s| {
+        let mut slot = s.borrow_mut();
+        assert!(slot.is_none(), "nested explain sessions are not supported");
+        *slot = Some(Store::default());
+    });
+    ACTIVE.fetch_add(1, Ordering::Relaxed);
+    ExplainSession { _not_send: PhantomData }
+}
+
+/// Disarm the collector and return what the hooks recorded.
+pub(crate) fn finish(session: ExplainSession) -> Store {
+    drop(session);
+    ACTIVE.fetch_sub(1, Ordering::Relaxed);
+    STORE.with(|s| s.borrow_mut().take()).expect("explain session store vanished")
+}
+
+/// Record the explorer's frontier attribution tags (explore goal only).
+pub(crate) fn record_frontier_tags(tags: Vec<String>) {
+    with_store(|s| s.frontier_tags = tags);
+}
+
+/// The `Report.explain` section: attribution + audit + sensitivity (map /
+/// serve goals) or frontier tags (explore goal).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ExplainReport {
+    /// Per-kernel / per-level step-time decomposition.
+    pub attribution: Option<Attribution>,
+    /// Rejected-candidate ledger of the optimizer phases.
+    pub audit: Option<AuditLedger>,
+    /// Ranked elasticities of the objective w.r.t. the system knobs.
+    pub sensitivity: Vec<Elasticity>,
+    /// One-line attribution tags for Pareto-frontier points.
+    pub frontier_tags: Vec<String>,
+}
+
+impl ExplainReport {
+    /// Stable JSON form: keys recursively sorted (`Json::sorted`) so
+    /// explain exports diff cleanly across runs.
+    pub fn to_json(&self) -> Json {
+        let mut kv: Vec<(&str, Json)> = Vec::new();
+        if let Some(a) = &self.attribution {
+            kv.push(("attribution", a.to_json()));
+        }
+        if let Some(l) = &self.audit {
+            kv.push(("audit", l.to_json()));
+        }
+        if !self.sensitivity.is_empty() {
+            kv.push(("sensitivity", Json::arr(self.sensitivity.iter().map(|e| e.to_json()))));
+        }
+        if !self.frontier_tags.is_empty() {
+            kv.push((
+                "frontier_tags",
+                Json::arr(self.frontier_tags.iter().map(|t| Json::from(t.as_str()))),
+            ));
+        }
+        Json::obj(kv).sorted()
+    }
+
+    /// Human rendering, appended to `Report::render` before the lint /
+    /// stats footer.
+    pub fn render(&self, top: usize) -> String {
+        let mut s = String::new();
+        if let Some(a) = &self.attribution {
+            s.push_str(&a.render(top));
+        }
+        if let Some(l) = &self.audit {
+            s.push_str(&l.render());
+        }
+        if !self.sensitivity.is_empty() {
+            let _ = writeln!(
+                s,
+                "sensitivity : {}",
+                self.sensitivity
+                    .iter()
+                    .map(Elasticity::render)
+                    .collect::<Vec<_>>()
+                    .join(" | ")
+            );
+        }
+        if !self.frontier_tags.is_empty() {
+            s.push_str("frontier attribution:\n");
+            for t in &self.frontier_tags {
+                let _ = writeln!(s, "  {t}");
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_path_is_off_by_default() {
+        assert!(!enabled());
+        assert!(with_store(|_| ()).is_none());
+    }
+
+    #[test]
+    fn session_arms_and_disarms_this_thread() {
+        let sess = start();
+        assert!(enabled());
+        ledger::record_candidate("interchip.plan", "TP2xPP1xDP1".into(), Some(1.0), "compute");
+        let store = finish(sess);
+        assert!(!enabled());
+        assert_eq!(store.phases.len(), 1);
+        assert_eq!(store.phases[0].considered, 1);
+    }
+
+    #[test]
+    fn other_threads_stay_unarmed_during_a_session() {
+        let sess = start();
+        let other = std::thread::spawn(enabled).join().unwrap();
+        assert!(!other, "worker threads must not record into the session");
+        finish(sess);
+    }
+}

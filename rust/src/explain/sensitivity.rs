@@ -1,0 +1,229 @@
+//! Sensitivity analysis: central-finite-difference elasticities of the
+//! objective (step time for map goals, TPOT for serve goals) with respect
+//! to each `SystemSpec` knob.
+//!
+//! The elasticity is the dimensionless local slope on log-log axes,
+//!
+//! ```text
+//! e = ((f(x₊) − f(x₋)) / f(x₀)) · (x₀ / (x₊ − x₋))
+//! ```
+//!
+//! generalized to asymmetric steps (the chip-count knob perturbs ×2 / ÷2
+//! because chip counts are discrete powers of two in the topology
+//! families; continuous knobs use ±5% relative steps). `e = −1` means
+//! "doubling this knob halves the objective" — the knob the design is
+//! bound on; `e ≈ 0` means the knob has slack. Knobs whose perturbed
+//! evaluation is infeasible (or impossible, e.g. halving a 1-chip axis)
+//! report `elasticity: null` and rank last.
+
+use crate::system::SystemSpec;
+use crate::util::json::Json;
+
+/// Relative step used for continuous knobs (±5%).
+pub const REL_STEP: f64 = 0.05;
+
+/// One knob's ranked elasticity row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Elasticity {
+    /// Knob name (`flops`, `mem_bw`, `mem_capacity`, `link_bw`, `sram`,
+    /// `chips`).
+    pub knob: &'static str,
+    /// The central-difference elasticity; `None` when a perturbed side was
+    /// infeasible.
+    pub elasticity: Option<f64>,
+    /// Objective at the base point (seconds).
+    pub base: f64,
+    /// Objective at the increased knob, when feasible.
+    pub plus: Option<f64>,
+    /// Objective at the decreased knob, when feasible.
+    pub minus: Option<f64>,
+    /// Relative step actually used on the + side (e.g. 0.05, or 1.0 for
+    /// the ×2 chip-count step).
+    pub rel_step: f64,
+}
+
+impl Elasticity {
+    /// Build a row from the three objective evaluations. `x0`, `xp`, `xm`
+    /// are the knob values (base / increased / decreased); a `None`
+    /// objective marks that side infeasible and yields a `None`
+    /// elasticity.
+    pub(crate) fn central(
+        knob: &'static str,
+        (x0, xp, xm): (f64, f64, f64),
+        base: f64,
+        plus: Option<f64>,
+        minus: Option<f64>,
+    ) -> Elasticity {
+        let elasticity = match (plus, minus) {
+            (Some(fp), Some(fm)) if base > 0.0 && xp > xm => {
+                Some(((fp - fm) / base) * (x0 / (xp - xm)))
+            }
+            _ => None,
+        };
+        Elasticity { knob, elasticity, base, plus, minus, rel_step: (xp - x0) / x0 }
+    }
+
+    /// JSON row; infeasible sides serialize as `null` (never `Infinity`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("knob", Json::from(self.knob)),
+            ("elasticity", self.elasticity.map_or(Json::Null, Json::from)),
+            ("base_s", Json::from(self.base)),
+            ("plus_s", self.plus.map_or(Json::Null, Json::from)),
+            ("minus_s", self.minus.map_or(Json::Null, Json::from)),
+            ("rel_step", Json::from(self.rel_step)),
+        ])
+    }
+
+    /// Compact `knob e=-0.82` cell for the one-line render.
+    pub fn render(&self) -> String {
+        match self.elasticity {
+            Some(e) => format!("{} e={e:+.2}", self.knob),
+            None => format!("{} e=n/a", self.knob),
+        }
+    }
+}
+
+/// Rank rows by |elasticity| descending; `None` rows last (stable within
+/// ties).
+pub(crate) fn rank(rows: &mut [Elasticity]) {
+    rows.sort_by(|a, b| {
+        match (a.elasticity, b.elasticity) {
+            (Some(x), Some(y)) => y
+                .abs()
+                .partial_cmp(&x.abs())
+                .unwrap_or(std::cmp::Ordering::Equal),
+            (Some(_), None) => std::cmp::Ordering::Less,
+            (None, Some(_)) => std::cmp::Ordering::Greater,
+            (None, None) => std::cmp::Ordering::Equal,
+        }
+        .then_with(|| a.knob.cmp(b.knob))
+    });
+}
+
+/// The continuous `SystemSpec` knobs the sensitivity pass perturbs (chip
+/// count is handled separately — it rebuilds the topology).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) enum Knob {
+    /// Peak chip FLOP/s (`chip.tflop_per_tile`).
+    Flops,
+    /// DRAM bandwidth (`memory.bandwidth`).
+    MemBw,
+    /// DRAM capacity (`memory.capacity`).
+    MemCap,
+    /// Inter-chip link bandwidth (`link.bandwidth` and every topology
+    /// dimension's `link_bw`).
+    LinkBw,
+    /// On-chip SRAM capacity (`chip.sram_bytes`).
+    Sram,
+}
+
+impl Knob {
+    /// Report name of the knob.
+    pub(crate) fn name(self) -> &'static str {
+        match self {
+            Knob::Flops => "flops",
+            Knob::MemBw => "mem_bw",
+            Knob::MemCap => "mem_capacity",
+            Knob::LinkBw => "link_bw",
+            Knob::Sram => "sram",
+        }
+    }
+}
+
+/// Clone `sys` with one knob scaled by `factor`. Calibrated collective
+/// tables are *not* re-simulated — for `Calibrated` systems the link-bw
+/// elasticity reflects only the analytical terms (documented in
+/// DESIGN.md).
+pub(crate) fn scaled_system(sys: &SystemSpec, knob: Knob, factor: f64) -> SystemSpec {
+    use crate::util::units::{Bytes, BytesPerSec, FlopPerSec};
+    let mut s = sys.clone();
+    match knob {
+        Knob::Flops => {
+            s.chip.tflop_per_tile = FlopPerSec::new(s.chip.tflop_per_tile.raw() * factor);
+        }
+        Knob::MemBw => {
+            s.memory.bandwidth = BytesPerSec::new(s.memory.bandwidth.raw() * factor);
+        }
+        Knob::MemCap => {
+            s.memory.capacity = Bytes::new(s.memory.capacity.raw() * factor);
+        }
+        Knob::LinkBw => {
+            s.link.bandwidth = BytesPerSec::new(s.link.bandwidth.raw() * factor);
+            for d in &mut s.topology.dims {
+                d.link_bw = BytesPerSec::new(d.link_bw.raw() * factor);
+            }
+        }
+        Knob::Sram => {
+            s.chip.sram_bytes = Bytes::new(s.chip.sram_bytes.raw() * factor);
+        }
+    }
+    s
+}
+
+/// Clone a serving platform with one knob scaled by `factor` (`MemCap`
+/// perturbs the per-chip device-memory capacity; chip count has no serving
+/// analogue because TP×PP must cover the group exactly).
+pub(crate) fn scaled_serving(
+    sys: &crate::serving::ServingSystem,
+    knob: Knob,
+    factor: f64,
+) -> crate::serving::ServingSystem {
+    use crate::util::units::{Bytes, BytesPerSec, FlopPerSec};
+    let mut s = sys.clone();
+    match knob {
+        Knob::Flops => {
+            s.chip.tflop_per_tile = FlopPerSec::new(s.chip.tflop_per_tile.raw() * factor);
+        }
+        Knob::MemBw => s.mem_bw *= factor,
+        Knob::MemCap => s.mem_cap *= factor,
+        Knob::LinkBw => {
+            s.link.bandwidth = BytesPerSec::new(s.link.bandwidth.raw() * factor);
+        }
+        Knob::Sram => {
+            s.chip.sram_bytes = Bytes::new(s.chip.sram_bytes.raw() * factor);
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn central_difference_recovers_power_law_exponent() {
+        // f(x) = x^-1 has elasticity −1 everywhere; ±5% central difference
+        // lands within O(step²).
+        let x0 = 10.0;
+        let (xp, xm) = (x0 * (1.0 + REL_STEP), x0 * (1.0 - REL_STEP));
+        let f = |x: f64| 1.0 / x;
+        let e = Elasticity::central("flops", (x0, xp, xm), f(x0), Some(f(xp)), Some(f(xm)));
+        let got = e.elasticity.expect("feasible both sides");
+        assert!((got - (-1.0)).abs() < 1e-2, "e = {got}");
+    }
+
+    #[test]
+    fn infeasible_sides_yield_null_and_rank_last() {
+        let mut rows = vec![
+            Elasticity::central("sram", (1.0, 1.05, 0.95), 2.0, None, Some(2.0)),
+            Elasticity::central("mem_bw", (1.0, 1.05, 0.95), 2.0, Some(1.9), Some(2.1)),
+        ];
+        assert_eq!(rows[0].elasticity, None);
+        rank(&mut rows);
+        assert_eq!(rows[0].knob, "mem_bw");
+        assert_eq!(rows[1].knob, "sram");
+        let j = rows[1].to_json();
+        assert_eq!(j.get("elasticity"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn scaled_system_scales_every_topology_dim() {
+        let sys = crate::dse::dse_systems_1024()[0].clone();
+        let up = scaled_system(&sys, Knob::LinkBw, 2.0);
+        assert!((up.link.bandwidth.raw() - sys.link.bandwidth.raw() * 2.0).abs() < 1.0);
+        for (a, b) in up.topology.dims.iter().zip(&sys.topology.dims) {
+            assert!((a.link_bw.raw() - b.link_bw.raw() * 2.0).abs() < 1.0);
+        }
+    }
+}

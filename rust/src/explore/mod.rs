@@ -577,6 +577,43 @@ impl ExploreOutcome {
     }
 }
 
+/// One-line attribution tags for the top frontier points (the explain
+/// layer's explore surface): system naming, utilization, and the binding
+/// resource from the latency breakdown. Ordered like
+/// `ExploreReport::from_outcome` (utilization descending, `top` rows).
+pub fn frontier_tags(out: &ExploreOutcome, top: usize) -> Vec<String> {
+    let mut idx = out.frontier.clone();
+    idx.sort_by(|&a, &b| {
+        let (pa, pb) = (&out.points[a], &out.points[b]);
+        pb.utilization
+            .total_cmp(&pa.utilization)
+            .then(pb.cost_eff.total_cmp(&pa.cost_eff))
+            .then(pa.chip.cmp(&pb.chip))
+    });
+    idx.iter()
+        .take(top)
+        .map(|&i| {
+            let p = &out.points[i];
+            let (c, m, n) = p.breakdown;
+            let bound = if c >= m && c >= n {
+                "compute"
+            } else if m >= n {
+                "memory"
+            } else {
+                "network"
+            };
+            format!(
+                "{}/{}/{}/{}: util {:.1}% ({bound}-bound)",
+                p.chip,
+                p.mem,
+                p.link,
+                p.topo,
+                100.0 * p.utilization
+            )
+        })
+        .collect()
+}
+
 /// The batch a candidate actually trains with — `None` for HPL/FFT, whose
 /// paper problem sizes are fixed (a batch axis then aliases in the cache
 /// instead of forcing duplicate evaluations).

@@ -72,8 +72,24 @@ pub(crate) fn optimize(
         let Some((t_cri, stage_of, stages)) =
             partition_stages(g, sys, plan, &scheme_idx, &vectors, &order, opts)
         else {
+            if crate::explain::enabled() {
+                crate::explain::ledger::record_candidate(
+                    "interchip.plan",
+                    plan.describe(),
+                    None,
+                    "dram-capacity",
+                );
+            }
             continue;
         };
+        if crate::explain::enabled() {
+            crate::explain::ledger::record_candidate(
+                "interchip.plan",
+                plan.describe(),
+                Some(t_cri.raw()),
+                crate::explain::ledger::stages_dominator(&stages),
+            );
+        }
 
         let cand = InterChipMapping {
             plan: plan.clone(),
@@ -90,6 +106,14 @@ pub(crate) fn optimize(
     }
     if let Some(b) = &mut best {
         b.space_log10 = space_log10;
+        if crate::explain::enabled() {
+            crate::explain::ledger::record_winner(
+                "interchip.plan",
+                b.plan.describe(),
+                b.t_cri.raw(),
+                crate::explain::ledger::stages_dominator(&b.stages),
+            );
+        }
     }
     best
 }
@@ -102,6 +126,93 @@ fn ln_choose(n: usize, k: usize) -> f64 {
     ln_fact(n) - ln_fact(k) - ln_fact(n - k)
 }
 
+/// Precomputed sharding cost tables, shared by `select_sharding` and the
+/// explain-layer's `audit_sharding` so the audit scores candidates with
+/// exactly the objective the optimizer minimized.
+struct ShardingCosts {
+    /// Per-kernel scheme tables.
+    scheme_tbl: Vec<Vec<sharding::ShardScheme>>,
+    /// Scheme count per kernel.
+    n_labels: Vec<usize>,
+    /// Inherent collective time (Eq. 5) + per-chip compute time under the
+    /// scheme (replicated schemes pay full compute — this is what makes the
+    /// optimizer shard the big GEMMs and replicate only the cheap LNs), plus
+    /// an infinitesimal weight-pressure tie-break so equal-communication
+    /// schemes prefer sharded weights (less DRAM).
+    inherent: Vec<Vec<f64>>,
+    /// Conversion cost per tensor per (src label, dst label) (Eq. 6).
+    conv: Vec<Vec<Vec<f64>>>,
+    /// Incident-tensor indices per kernel.
+    edges_of: Vec<Vec<usize>>,
+}
+
+impl ShardingCosts {
+    fn build(g: &DataflowGraph, sys: &SystemSpec, plan: &ParallelismPlan) -> ShardingCosts {
+        let tp = plan.tp;
+        let tp_dims = plan.tp_dims_ref(&sys.topology);
+        let n = g.n_kernels();
+        let chip_flops = sys.chip.compute_flops();
+        let model = &sys.collective_model;
+
+        let scheme_tbl: Vec<Vec<sharding::ShardScheme>> =
+            g.kernels.iter().map(|k| sharding::schemes_for(&k.kind, tp)).collect();
+        let n_labels: Vec<usize> = scheme_tbl.iter().map(|s| s.len()).collect();
+        let inherent: Vec<Vec<f64>> = (0..n)
+            .map(|i| {
+                let out_bytes = super::kernel_out_bytes(g, crate::graph::KernelId(i));
+                let k = &g.kernels[i];
+                scheme_tbl[i]
+                    .iter()
+                    .map(|s| {
+                        sharding::inherent_time_model(model, s, out_bytes, k.weight_bytes, &tp_dims)
+                            .raw()
+                            + k.flops * s.flops_factor / chip_flops.raw()
+                            + k.weight_bytes * s.weight_factor * 1e-24
+                    })
+                    .collect()
+            })
+            .collect();
+        let conv: Vec<Vec<Vec<f64>>> = g
+            .tensors
+            .iter()
+            .map(|t| {
+                scheme_tbl[t.src.0]
+                    .iter()
+                    .map(|from| {
+                        scheme_tbl[t.dst.0]
+                            .iter()
+                            .map(|to| {
+                                sharding::conversion_time_model(
+                                    model,
+                                    from.out_layout,
+                                    to.in_layout,
+                                    t.bytes,
+                                    &tp_dims,
+                                )
+                                .raw()
+                            })
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut edges_of: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (j, t) in g.tensors.iter().enumerate() {
+            edges_of[t.src.0].push(j);
+            edges_of[t.dst.0].push(j);
+        }
+        ShardingCosts { scheme_tbl, n_labels, inherent, conv, edges_of }
+    }
+
+    fn total(&self, g: &DataflowGraph, labels: &[usize]) -> f64 {
+        let mut c: f64 = labels.iter().enumerate().map(|(i, &l)| self.inherent[i][l]).sum();
+        for (j, t) in g.tensors.iter().enumerate() {
+            c += self.conv[j][labels[t.src.0]][labels[t.dst.0]];
+        }
+        c
+    }
+}
+
 /// Choose a sharding scheme per kernel minimizing total communication
 /// (inherent Eq. 5 + conversions Eq. 6). Exact (exhaustive) below the
 /// configured space size, coordinate descent with restarts otherwise.
@@ -112,95 +223,97 @@ pub fn select_sharding(
     plan: &ParallelismPlan,
     opts: &InterChipOptions,
 ) -> (Vec<usize>, f64) {
-    let tp = plan.tp;
-    let tp_dims = plan.tp_dims_ref(&sys.topology);
-    let n = g.n_kernels();
-    let chip_flops = sys.chip.compute_flops();
-    let model = &sys.collective_model;
+    let costs = ShardingCosts::build(g, sys, plan);
+    let total = |labels: &[usize]| costs.total(g, labels);
 
-    // Precompute per-kernel scheme tables and their unary costs: inherent
-    // collective time (Eq. 5) + per-chip compute time under the scheme
-    // (replicated schemes pay full compute — this is what makes the
-    // optimizer shard the big GEMMs and replicate only the cheap LNs), plus
-    // an infinitesimal weight-pressure tie-break so equal-communication
-    // schemes prefer sharded weights (less DRAM).
-    let scheme_tbl: Vec<Vec<sharding::ShardScheme>> =
-        g.kernels.iter().map(|k| sharding::schemes_for(&k.kind, tp)).collect();
-    let n_labels: Vec<usize> = scheme_tbl.iter().map(|s| s.len()).collect();
-    let inherent: Vec<Vec<f64>> = (0..n)
-        .map(|i| {
-            let out_bytes = super::kernel_out_bytes(g, crate::graph::KernelId(i));
-            let k = &g.kernels[i];
-            scheme_tbl[i]
-                .iter()
-                .map(|s| {
-                    sharding::inherent_time_model(model, s, out_bytes, k.weight_bytes, &tp_dims)
-                        .raw()
-                        + k.flops * s.flops_factor / chip_flops.raw()
-                        + k.weight_bytes * s.weight_factor * 1e-24
-                })
-                .collect()
-        })
-        .collect();
-    // Conversion cost per tensor per (src label, dst label).
-    let conv: Vec<Vec<Vec<f64>>> = g
-        .tensors
-        .iter()
-        .map(|t| {
-            scheme_tbl[t.src.0]
-                .iter()
-                .map(|from| {
-                    scheme_tbl[t.dst.0]
-                        .iter()
-                        .map(|to| {
-                            sharding::conversion_time_model(
-                                model,
-                                from.out_layout,
-                                to.in_layout,
-                                t.bytes,
-                                &tp_dims,
-                            )
-                            .raw()
-                        })
-                        .collect()
-                })
-                .collect()
-        })
-        .collect();
-    // Edge adjacency per kernel.
-    let mut edges_of: Vec<Vec<usize>> = vec![Vec::new(); n];
-    for (j, t) in g.tensors.iter().enumerate() {
-        edges_of[t.src.0].push(j);
-        edges_of[t.dst.0].push(j);
-    }
-
-    let total = |labels: &[usize]| -> f64 {
-        let mut c: f64 = labels.iter().enumerate().map(|(i, &l)| inherent[i][l]).sum();
-        for (j, t) in g.tensors.iter().enumerate() {
-            c += conv[j][labels[t.src.0]][labels[t.dst.0]];
-        }
-        c
-    };
-
-    let space = solver::label_space_size(&n_labels);
+    let space = solver::label_space_size(&costs.n_labels);
     let labels = if space <= opts.exhaustive_below {
-        solver::exhaustive_labels(&n_labels, |ls| total(ls)).1
+        solver::exhaustive_labels(&costs.n_labels, |ls| total(ls)).1
     } else {
-        let unary = |i: usize, l: usize| inherent[i][l];
+        let unary = |i: usize, l: usize| costs.inherent[i][l];
         let local = |i: usize, ls: &[usize]| {
-            edges_of[i]
+            costs.edges_of[i]
                 .iter()
                 .map(|&j| {
                     let t = &g.tensors[j];
-                    conv[j][ls[t.src.0]][ls[t.dst.0]]
+                    costs.conv[j][ls[t.src.0]][ls[t.dst.0]]
                 })
                 .sum()
         };
-        let ics =
-            solver::Ics { n_labels: &n_labels, unary: &unary, local: &local, total: &total };
+        let ics = solver::Ics {
+            n_labels: &costs.n_labels,
+            unary: &unary,
+            local: &local,
+            total: &total,
+        };
         solver::coordinate_descent(&ics, opts.restarts, opts.sweeps, 0x5eed).1
     };
     (labels, space.log10())
+}
+
+/// Explain-layer audit of a chosen sharding: records the winner and, per
+/// kernel, the best single-scheme swap as a rejected candidate — its score
+/// is the full objective under the swap and its dominating term names
+/// whether the inherent-collective or the conversion delta killed it.
+/// No-op unless an explain session is armed on this thread.
+pub(crate) fn audit_sharding(
+    g: &DataflowGraph,
+    sys: &SystemSpec,
+    plan: &ParallelismPlan,
+    labels: &[usize],
+) {
+    if !crate::explain::enabled() {
+        return;
+    }
+    use crate::explain::ledger::{record_candidate, record_winner};
+    let costs = ShardingCosts::build(g, sys, plan);
+    let base = costs.total(g, labels);
+
+    let inherent_sum: f64 = labels.iter().enumerate().map(|(i, &l)| costs.inherent[i][l]).sum();
+    let winner_dom = if inherent_sum >= base - inherent_sum { "inherent" } else { "conversion" };
+    record_winner(
+        "interchip.sharding",
+        format!("chosen labeling ({} kernels)", g.n_kernels()),
+        base,
+        winner_dom,
+    );
+
+    for (i, k) in g.kernels.iter().enumerate() {
+        let cur = labels[i];
+        // best alternative label for kernel i, holding all others fixed
+        let mut best: Option<(usize, f64, f64)> = None; // (label, d_inherent, d_conv)
+        for l in 0..costs.n_labels[i] {
+            if l == cur {
+                continue;
+            }
+            let d_inherent = costs.inherent[i][l] - costs.inherent[i][cur];
+            let mut d_conv = 0.0;
+            for &j in &costs.edges_of[i] {
+                let t = &g.tensors[j];
+                let (s_cur, d_cur) = (labels[t.src.0], labels[t.dst.0]);
+                let s_new = if t.src.0 == i { l } else { s_cur };
+                let d_new = if t.dst.0 == i { l } else { d_cur };
+                d_conv += costs.conv[j][s_new][d_new] - costs.conv[j][s_cur][d_cur];
+            }
+            let d = d_inherent + d_conv;
+            if best.is_none_or(|(_, bi, bc)| d < bi + bc) {
+                best = Some((l, d_inherent, d_conv));
+            }
+        }
+        let Some((alt, d_inherent, d_conv)) = best else {
+            continue; // single-scheme kernel: nothing was rejected
+        };
+        let dom = if d_inherent.abs() >= d_conv.abs() { "inherent" } else { "conversion" };
+        record_candidate(
+            "interchip.sharding",
+            format!(
+                "{}: {} -> {}",
+                k.name, costs.scheme_tbl[i][cur].name, costs.scheme_tbl[i][alt].name
+            ),
+            Some(base + d_inherent + d_conv),
+            dom,
+        );
+    }
 }
 
 /// Exact contiguous-DP stage partitioning over topological order,

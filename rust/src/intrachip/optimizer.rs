@@ -130,6 +130,9 @@ pub(crate) fn optimize_intra(
         for p in 0..n {
             ms.push(evaluate(p, p + 1)?);
         }
+        if crate::explain::enabled() {
+            record_partition_winner(&ms, "kernel-by-kernel");
+        }
         (asg, ms)
     } else {
         // dataflow: exact DP over contiguous topo ranges. The segment-cost
@@ -148,7 +151,7 @@ pub(crate) fn optimize_intra(
             })
             .collect();
         let cost = |a: usize, b: usize| table[a][b - a - 1];
-        let (_total, bounds) = solver::partition_min_sum(n, p_max, cost)?;
+        let (dp_total, bounds) = solver::partition_min_sum(n, p_max, cost)?;
         let part_of_pos = solver::bounds_to_assignment(n, &bounds);
         let mut part = vec![0usize; n];
         for (p, k) in order.iter().enumerate() {
@@ -159,6 +162,38 @@ pub(crate) fn optimize_intra(
         for (si, &start) in bounds.iter().enumerate() {
             let end = bounds.get(si + 1).copied().unwrap_or(n);
             ms.push(evaluate(start, end)?);
+        }
+        if crate::explain::enabled() {
+            record_partition_winner(&ms, "fused DP");
+            // rejected candidates: merging each adjacent partition pair —
+            // what the fusion DP weighed and turned down (or was forbidden
+            // from by the SRAM/tile capacity constraints)
+            for bi in 1..bounds.len() {
+                let (a, mid) = (bounds[bi - 1], bounds[bi]);
+                let end = bounds.get(bi + 1).copied().unwrap_or(n);
+                let merged = cost(a, end);
+                let cand = format!("merge P{}+P{}", bi - 1, bi);
+                if merged.is_finite() {
+                    let score = dp_total - cost(a, mid) - cost(mid, end) + merged;
+                    let dom = evaluate(a, end)
+                        .map_or("sram-capacity", |m| {
+                            crate::explain::attribution::partition_bound(&m)
+                        });
+                    crate::explain::ledger::record_candidate(
+                        "intrachip.partition",
+                        cand,
+                        Some(score),
+                        dom,
+                    );
+                } else {
+                    crate::explain::ledger::record_candidate(
+                        "intrachip.partition",
+                        cand,
+                        None,
+                        "sram-capacity",
+                    );
+                }
+            }
         }
         (asg, ms)
     };
@@ -188,6 +223,22 @@ pub(crate) fn optimize_intra(
 
     let total_time = metrics.iter().map(|m| m.t_cri()).sum();
     Some(IntraChipMapping { assignment, tiles, partitions: metrics, total_time })
+}
+
+/// Record the winning intra-chip partitioning into the explain ledger
+/// (callers gate on `explain::enabled`).
+fn record_partition_winner(ms: &[PartitionMetrics], kind: &str) {
+    let total: f64 = ms.iter().map(PartitionMetrics::t_cri).sum();
+    let dom = ms
+        .iter()
+        .max_by(|a, b| a.t_cri().partial_cmp(&b.t_cri()).unwrap_or(std::cmp::Ordering::Equal))
+        .map_or("compute", crate::explain::attribution::partition_bound);
+    crate::explain::ledger::record_winner(
+        "intrachip.partition",
+        format!("{kind} ({} partitions)", ms.len()),
+        total,
+        dom,
+    );
 }
 
 /// Metrics + feasibility of the topo segment [a, b) as one fused partition.

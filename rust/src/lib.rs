@@ -27,6 +27,7 @@ pub mod cluster;
 pub mod collective;
 pub mod config;
 pub mod dse;
+pub mod explain;
 pub mod explore;
 pub mod fabric;
 pub mod figures;

@@ -9,6 +9,8 @@
 //!   map                           alias of optimize (the scenario goal name)
 //!   dse --workload llm|dlrm|hpl|fft   run the 80-config sweep
 //!   explore [--workload W --budget N --no-prune]  Pareto-frontier explorer
+//!   explain [--scenario f.json|--workload W] [--top K] [--no-sensitivity]
+//!                                 bottleneck attribution + optimizer audit
 //!   serve [--tp N --pp N ...]     serving model (Fig. 20 style point)
 //!   simulate [--qps R ...]        request-level cluster serving simulation
 //!   plan --qps R --slo-ttft S --slo-tpot S   SLO-aware capacity planner
@@ -37,6 +39,7 @@ const SUBCOMMANDS: &[&str] = &[
     "map",
     "dse",
     "explore",
+    "explain",
     "serve",
     "simulate",
     "plan",
@@ -54,8 +57,8 @@ fn usage() {
     eprintln!(
         "usage: dfmodel <{}> [options]\n\
          figures: {}\n\
-         scenario subcommands (optimize/map dse explore serve simulate plan fabric) accept\n\
-         --scenario <file.json>, --json, --trace <out.json> (Perfetto), and --stats",
+         scenario subcommands (optimize/map dse explore explain serve simulate plan fabric)\n\
+         accept --scenario <file.json>, --json, --trace <out.json> (Perfetto), and --stats",
         SUBCOMMANDS.join("|"),
         figures::ALL.join(" ")
     );
@@ -76,6 +79,7 @@ fn main() {
         Some("optimize") | Some("map") => cmd_optimize(&args),
         Some("dse") => cmd_dse(&args),
         Some("explore") => cmd_explore(&args),
+        Some("explain") => cmd_explain(&args),
         Some("serve") => cmd_serve(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("plan") => cmd_plan(&args),
@@ -342,6 +346,52 @@ fn cmd_explore(args: &Args) -> i32 {
             2
         }
     }
+}
+
+/// `dfmodel explain` — bottleneck attribution, optimizer decision audit,
+/// and knob sensitivities for one scenario. `--scenario <file>` explains a
+/// committed scenario (map/serve/explore goals); `--workload llm|dlrm|hpl|fft`
+/// explains the §VI-C paper workload on its reference system. `--top K`
+/// sets the rejected-candidates / kernel depth, `--no-sensitivity` skips
+/// the finite-difference sweep (several extra evaluations).
+fn cmd_explain(args: &Args) -> i32 {
+    let mut s = match args.get("scenario") {
+        Some(path) => match Scenario::load(std::path::Path::new(path)) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        },
+        None => match figures::explain_figs::paper_scenario(args.get_or("workload", "llm")) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        },
+    };
+    match s.goal {
+        Goal::Map | Goal::Serve | Goal::Explore => {}
+        g => {
+            eprintln!("explain supports the map/serve/explore goals, not '{}'", g.name());
+            return 2;
+        }
+    }
+    s.explain.enabled = true;
+    if let Some(top) = args.get("top") {
+        match top.parse::<usize>() {
+            Ok(v) if v >= 1 => s.explain.top = v,
+            _ => {
+                eprintln!("--top must be a positive count, got '{top}'");
+                return 2;
+            }
+        }
+    }
+    if args.has_flag("no-sensitivity") {
+        s.explain.sensitivity = false;
+    }
+    run_scenario(args, &s)
 }
 
 fn scenario_serve(args: &Args) -> Result<Scenario, String> {

@@ -183,6 +183,7 @@ fn llm_training_with_mapping(
 
     // data-parallel gradient all-reduce over the DP dims (overlappable with
     // the backward pass; only the excess is exposed)
+    let mut dp_exposed = 0.0;
     if dp > 1 {
         let dp_dims = inter.plan.dp_dims_ref(&sys.topology);
         let grad_bytes = cfg.params() * cfg.dtype_bytes / (tp as f64 * pp as f64);
@@ -191,7 +192,20 @@ fn llm_training_with_mapping(
             .time_hier(crate::collective::Collective::AllReduce, Bytes::new(grad_bytes), &dp_dims)
             .raw();
         let bwd = 2.0 * fwd;
-        step += (t_dp - bwd).max(0.0);
+        dp_exposed = (t_dp - bwd).max(0.0);
+        step += dp_exposed;
+    }
+
+    if crate::explain::enabled() {
+        let comp = crate::explain::attribution::StepComposition {
+            step,
+            bubble: 3.0 * (pp as f64 - 1.0) * stage_time,
+            dp_exposed,
+            intra_fraction: (per_layer * max_layers as f64 / stage_time.max(1e-30)).min(1.0),
+        };
+        crate::explain::attribution::record_map(&sharded, &intra, sys, &comp);
+        interchip::optimizer::audit_sharding(&fine, sys, &fine_plan, &fine_schemes);
+        crate::explain::ledger::record_pipeline_stages(&inter.stages, &inter.stage_of);
     }
 
     let tokens = global_batch * cfg.seq;
@@ -272,6 +286,20 @@ pub fn workload_pass_opts(
         .max(inter.stages.iter().map(|s| s.t_p2p.raw()).fold(0.0, f64::max));
     let step = passes * stage_time * pp as f64 / pp as f64 * (pp as f64); // fill + drain ≈ pp stages sequential for one pass
     let step = if pp > 1 { step } else { passes * stage_time };
+
+    if crate::explain::enabled() {
+        // one pass works for `passes * stage_time`; the other (pp-1)
+        // sequential stages of the fill/drain approximation are bubble
+        let comp = crate::explain::attribution::StepComposition {
+            step,
+            bubble: if pp > 1 { passes * stage_time * (pp as f64 - 1.0) } else { 0.0 },
+            dp_exposed: 0.0,
+            intra_fraction: (intra.total_time / stage_time.max(1e-30)).min(1.0),
+        };
+        crate::explain::attribution::record_map(&sharded, &intra, sys, &comp);
+        interchip::optimizer::audit_sharding(g, sys, &inter.plan, &inter.scheme_idx);
+        crate::explain::ledger::record_pipeline_stages(&inter.stages, &inter.stage_of);
+    }
 
     let useful = passes * g.total_flops() / dp as f64 * dp as f64;
     let achieved = useful / step;

@@ -73,6 +73,18 @@ pub struct ServingMetrics {
     pub decode_breakdown: (f64, f64, f64),
 }
 
+impl ServingMetrics {
+    /// The two serving phases as attribution rows: (name, seconds,
+    /// (compute, memory, network) fractions). TTFT carries the prefill
+    /// breakdown, TPOT the decode breakdown.
+    pub fn phase_rows(&self) -> [(&'static str, f64, (f64, f64, f64)); 2] {
+        [
+            ("prefill", self.ttft, self.prefill_breakdown),
+            ("decode", self.tpot, self.decode_breakdown),
+        ]
+    }
+}
+
 /// Dataflow-chip achievable efficiency on the prefill GEMMs.
 const PREFILL_EFF: f64 = 0.8;
 

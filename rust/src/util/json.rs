@@ -114,6 +114,22 @@ impl Json {
     pub fn from_map(m: &BTreeMap<String, f64>) -> Json {
         Json::Obj(m.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect())
     }
+
+    /// Stable-serialization clone: every object's keys sorted, recursively
+    /// (arrays keep element order). `Capture`/`Explain` exports go through
+    /// this so repeated runs diff cleanly regardless of insertion order.
+    pub fn sorted(&self) -> Json {
+        match self {
+            Json::Arr(items) => Json::Arr(items.iter().map(Json::sorted).collect()),
+            Json::Obj(kv) => {
+                let mut kv: Vec<(String, Json)> =
+                    kv.iter().map(|(k, v)| (k.clone(), v.sorted())).collect();
+                kv.sort_by(|a, b| a.0.cmp(&b.0));
+                Json::Obj(kv)
+            }
+            other => other.clone(),
+        }
+    }
 }
 
 impl From<f64> for Json {
@@ -493,6 +509,27 @@ mod tests {
     fn integer_formatting() {
         assert_eq!(Json::Num(1024.0).to_string(), "1024");
         assert_eq!(Json::Num(1.25).to_string(), "1.25");
+    }
+
+    #[test]
+    fn sorted_orders_keys_recursively_and_roundtrips() {
+        let src = r#"{"z": {"b": 2, "a": 1}, "a": [{"y": 0, "x": [3, 1, 2]}], "m": true}"#;
+        let v = Json::parse(src).unwrap();
+        let s = v.sorted();
+        assert_eq!(s.keys(), vec!["a", "m", "z"]);
+        assert_eq!(s.get("z").unwrap().keys(), vec!["a", "b"]);
+        let inner = &s.get("a").unwrap().as_array().unwrap()[0];
+        assert_eq!(inner.keys(), vec!["x", "y"]);
+        // array element order is preserved
+        assert_eq!(
+            inner.get("x").unwrap().as_array().unwrap(),
+            &[Json::Num(3.0), Json::Num(1.0), Json::Num(2.0)]
+        );
+        // sorting never loses data: round-trip re-parses equal to itself
+        assert_eq!(Json::parse(&s.to_string()).unwrap(), s);
+        assert_eq!(Json::parse(&s.pretty()).unwrap(), s);
+        // idempotent
+        assert_eq!(s.sorted(), s);
     }
 
     #[test]

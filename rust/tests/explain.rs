@@ -1,0 +1,214 @@
+//! Explain-layer integration tests: the acceptance pin on the committed
+//! DGX-scale scenario, the paper-workload goldens, the exact-sum property
+//! over a scenario grid, bit-parity of unexplained runs, and the stable
+//! render-tail ordering (lint warnings before the span/metrics footer).
+
+use std::path::Path;
+
+use dfmodel::api::{Scenario, SystemCfg};
+
+fn scenario_dir() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/scenarios")
+}
+
+/// Relative exact-sum tolerance of the attribution decomposition.
+const SUM_TOL: f64 = 1e-9;
+
+fn assert_attribution_exact(a: &dfmodel::explain::Attribution) {
+    for (name, v) in [
+        ("compute", a.levels.compute),
+        ("sram", a.levels.sram),
+        ("dram", a.levels.dram),
+        ("interchip", a.levels.interchip),
+        ("bubble", a.levels.bubble),
+    ] {
+        assert!(v >= 0.0, "level {name} share must be non-negative, got {v}");
+    }
+    let sum = a.levels.sum();
+    assert!(
+        (sum - a.total).abs() <= SUM_TOL * a.total.max(1e-30),
+        "levels sum {sum} != total {}",
+        a.total
+    );
+    let ksum: f64 = a.kernels.iter().map(|k| k.seconds).sum();
+    assert!(a.kernels.iter().all(|k| k.seconds >= 0.0), "kernel shares must be non-negative");
+    assert!(
+        ksum <= a.total * (1.0 + SUM_TOL),
+        "kernel shares {ksum} exceed the step total {}",
+        a.total
+    );
+}
+
+#[test]
+fn llm_dgx_explain_pins_attribution_audit_and_sensitivity() {
+    let s = Scenario::load(&scenario_dir().join("llm_dgx.json")).expect("load scenario");
+    let r = s.explained().evaluate().expect("feasible");
+    let e = r.explain.as_ref().expect("explained run fills the section");
+
+    // 1. roofline attribution: exact sum, named binding resource
+    let a = e.attribution.as_ref().expect("map goal records attribution");
+    assert_attribution_exact(a);
+    assert_eq!(a.total, r.step_time().unwrap(), "attribution explains the reported step time");
+    assert!(["compute", "sram", "dram", "interchip", "bubble"].contains(&a.binding));
+    assert!(!a.kernels.is_empty(), "per-kernel shares present");
+
+    // 2. decision audit: non-empty rejected ledger with dominating terms
+    let audit = e.audit.as_ref().expect("optimizer phases recorded");
+    assert!(!audit.phases.is_empty());
+    assert!(
+        audit.phases.iter().any(|p| !p.rejected.is_empty()),
+        "at least one phase keeps rejected candidates"
+    );
+    for p in &audit.phases {
+        assert!(p.rejected.len() <= audit.top, "phase {} overflows top-K", p.phase);
+        for c in p.best.iter().chain(&p.rejected) {
+            assert!(!c.dominating.is_empty(), "{}: candidate without dominating term", p.phase);
+        }
+    }
+
+    // 3. sensitivity: one row per knob, ranked by |elasticity| descending
+    assert_eq!(e.sensitivity.len(), 6, "five continuous knobs + chip count");
+    assert!(e.sensitivity.iter().any(|x| x.elasticity.is_some()));
+    let mags: Vec<Option<f64>> =
+        e.sensitivity.iter().map(|x| x.elasticity.map(f64::abs)).collect();
+    for w in mags.windows(2) {
+        match (w[0], w[1]) {
+            (Some(x), Some(y)) => assert!(x >= y, "rows not ranked: {x} < {y}"),
+            (None, Some(_)) => panic!("infeasible rows must rank last"),
+            _ => {}
+        }
+    }
+
+    // the CI smoke run jq-asserts these stable keys
+    let j = r.to_json();
+    let attr = j.get("explain").unwrap().get("attribution").unwrap();
+    let levels = attr.get("levels").unwrap();
+    let jsum: f64 = ["compute_s", "sram_s", "dram_s", "interchip_s", "bubble_s"]
+        .iter()
+        .map(|k| levels.get(k).unwrap().as_f64().unwrap())
+        .sum();
+    let total = attr.get("total_s").unwrap().as_f64().unwrap();
+    assert!((jsum - total).abs() <= SUM_TOL * total, "JSON shares must sum to total_s");
+}
+
+#[test]
+fn unexplained_runs_stay_bit_identical() {
+    let s = Scenario::load(&scenario_dir().join("llm_dgx.json")).expect("load scenario");
+    let plain = s.evaluate().expect("feasible");
+    let mut explained = s.explained().evaluate().expect("feasible");
+    explained.explain = None;
+    assert_eq!(
+        plain.to_json().pretty(),
+        explained.to_json().pretty(),
+        "stripping the explain section must recover the unexplained report bytes"
+    );
+    assert!(!plain.to_json().pretty().contains("\"explain\""));
+}
+
+#[test]
+fn paper_workload_goldens_keep_the_exact_sum_invariant() {
+    // the same reference systems the "explain" figure renders; the LLM
+    // point is the committed DGX-scale scenario and must be feasible
+    let mut feasible = 0;
+    for w in ["llm", "dlrm", "hpl", "fft"] {
+        let mut s = dfmodel::figures::explain_figs::paper_scenario(w).expect("known workload");
+        s.explain.sensitivity = false;
+        let Ok(r) = s.evaluate() else {
+            assert_ne!(w, "llm", "the LLM reference point matches llm_dgx.json");
+            continue;
+        };
+        feasible += 1;
+        let e = r.explain.as_ref().expect("explained");
+        let a = e.attribution.as_ref().expect("map attribution");
+        assert_attribution_exact(a);
+        assert!(e.audit.as_ref().is_some_and(|l| !l.phases.is_empty()), "{w}: audit empty");
+        assert!(e.sensitivity.is_empty(), "{w}: sensitivity disabled for the figure");
+    }
+    assert!(feasible >= 1);
+}
+
+#[test]
+fn random_grid_property_shares_are_nonnegative_and_sum_to_total() {
+    let mut rng = dfmodel::util::prng::Rng::new(7);
+    let chips = ["h100", "sn30", "tpuv4", "sn10"];
+    let mems = ["ddr4", "hbm3"];
+    let links = ["pcie4", "nvlink4"];
+    let mut feasible = 0;
+    for _ in 0..10 {
+        let chip = rng.choice(&chips);
+        let mem = rng.choice(&mems);
+        let link = rng.choice(&links);
+        let ring = [4usize, 8, 16][rng.below(3)];
+        let batch = [16.0, 64.0, 256.0][rng.below(3)];
+        let mut s = Scenario::llm("gpt3-175b")
+            .batch(batch)
+            .on(SystemCfg::new(chip, mem, link).ring(ring))
+            .explained();
+        s.explain.sensitivity = false;
+        let Ok(r) = s.evaluate() else { continue };
+        feasible += 1;
+        let e = r.explain.expect("explained");
+        let a = e.attribution.expect("map attribution");
+        assert_attribution_exact(&a);
+        assert_eq!(a.total, r.perf.as_ref().unwrap().step_time);
+    }
+    assert!(feasible >= 3, "grid too infeasible to exercise the property ({feasible}/10)");
+}
+
+#[test]
+fn serve_explain_attributes_both_phases_and_audits_splits() {
+    let s = Scenario::load(&scenario_dir().join("serve_sn40l.json")).expect("load scenario");
+    let r = s.explained().evaluate().expect("feasible");
+    let e = r.explain.as_ref().expect("explained");
+    let a = e.attribution.as_ref().expect("serving attribution");
+    assert_attribution_exact(a);
+    assert_eq!(a.kernels.len(), 2, "prefill + decode rows");
+    let audit = e.audit.as_ref().expect("serving split audit");
+    let split = audit.phases.iter().find(|p| p.phase == "serving.split").expect("phase");
+    assert!(split.considered >= 1, "alternative TP x PP splits weighed");
+    assert!(split.best.is_some());
+}
+
+#[test]
+fn explore_explain_tags_the_frontier() {
+    let s = Scenario::load(&scenario_dir().join("explore_small.json")).expect("load scenario");
+    let r = s.explained().evaluate().expect("explore runs");
+    let e = r.explain.as_ref().expect("explained");
+    let frontier = r.explore.as_ref().map_or(0, |x| x.frontier.len());
+    assert_eq!(e.frontier_tags.len(), frontier.min(8), "one tag per reported frontier row");
+    for t in &e.frontier_tags {
+        assert!(t.contains("util") && t.contains("-bound"), "malformed tag '{t}'");
+    }
+    // an explore report explains the frontier, not one arbitrary candidate
+    assert!(e.attribution.is_none(), "no per-candidate attribution leaks into explore");
+    assert!(e.audit.is_none(), "no per-candidate audit leaks into explore");
+}
+
+#[test]
+fn explain_options_roundtrip_through_scenario_json() {
+    let mut s = Scenario::load(&scenario_dir().join("llm_dgx.json")).unwrap().explain_top(3);
+    s.explain.sensitivity = false;
+    let re = Scenario::parse(&s.to_json().pretty()).expect("parse back");
+    assert_eq!(s, re, "explain options must round-trip");
+    assert_eq!(re.explain.top, 3);
+    assert!(!re.explain.sensitivity);
+}
+
+#[test]
+fn render_tail_keeps_lint_before_the_stats_footer() {
+    // ddr4 drained by nvlink4 draws the DF-S002 hierarchy warning; tracing
+    // adds the span/metrics footer — the machine-parsed tail order is
+    // lint warnings first, stats last, nothing after
+    let mut s = Scenario::llm("gpt3-175b")
+        .on(SystemCfg::new("sn10", "ddr4", "nvlink4").ring(8))
+        .traced()
+        .explained();
+    s.explain.sensitivity = false;
+    let r = s.evaluate().expect("feasible");
+    let text = r.render();
+    let lint = text.find("warning[DF-S002]").expect("hierarchy warning rendered");
+    let attribution = text.find("attribution :").expect("explain section rendered");
+    let stats = text.find("spans").expect("stats footer rendered");
+    assert!(attribution < lint, "explain section stays above the machine-parsed tail");
+    assert!(lint < stats, "lint warnings print before the span-tree/metrics footer");
+}
