@@ -1,0 +1,81 @@
+//! `cargo bench --bench daemon`
+//!
+//! Daemon serving throughput through a real loopback socket: scenarios/s
+//! for `POST /v1/evaluate` with the result cache disabled (every request
+//! runs the full optimizer) vs enabled and warmed (every request is an LRU
+//! hit — HTTP parse + canonicalization + cache probe only). The cached
+//! path must stay >= 10× the uncached path; both entries are gated by
+//! `dfmodel bench-check` via ci/bench_baseline.json.
+
+use std::path::Path;
+
+use dfmodel::daemon::{http, Config, Server, ServiceConfig};
+use dfmodel::util::bench::{quick_mode, Runner};
+
+fn scenario_text() -> String {
+    let path =
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/scenarios/llm_dgx.json");
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("read {}: {e}", path.display()))
+}
+
+fn server(cache_entries: usize) -> dfmodel::daemon::Handle {
+    let cfg = Config {
+        addr: "127.0.0.1:0".parse().unwrap(),
+        service: ServiceConfig { workers: 2, cache_entries, ..ServiceConfig::default() },
+        ..Config::default()
+    };
+    Server::bind(&cfg).expect("bind").start().expect("start")
+}
+
+fn main() {
+    let mut r = Runner::new();
+    let iters = if quick_mode() { 2 } else { 5 };
+    let text = scenario_text();
+
+    let uncached = server(0);
+    let per_iter = if quick_mode() { 2usize } else { 5 };
+    r.run_with_items("evaluate_llm_dgx_uncached", 1, iters, per_iter as f64, || {
+        for _ in 0..per_iter {
+            let (status, _) =
+                http::roundtrip(uncached.addr(), "POST", "/v1/evaluate", Some(&text))
+                    .expect("roundtrip");
+            assert_eq!(status, 200);
+        }
+    });
+    uncached.stop().expect("clean stop");
+
+    let cached = server(256);
+    // warm the single entry so the measured loop is all hits
+    let (status, _) = http::roundtrip(cached.addr(), "POST", "/v1/evaluate", Some(&text))
+        .expect("warmup");
+    assert_eq!(status, 200);
+    let hits = if quick_mode() { 50usize } else { 200 };
+    r.run_with_items("evaluate_llm_dgx_cached", 1, iters, hits as f64, || {
+        for _ in 0..hits {
+            let (status, _) =
+                http::roundtrip(cached.addr(), "POST", "/v1/evaluate", Some(&text))
+                    .expect("roundtrip");
+            assert_eq!(status, 200);
+        }
+    });
+    cached.stop().expect("clean stop");
+
+    // acceptance contract: cached serving >= 10× uncached scenarios/s
+    let tp = |name: &str| {
+        r.results
+            .iter()
+            .find(|e| e.name == name)
+            .and_then(|e| e.throughput)
+            .expect("throughput recorded")
+    };
+    let (cold, warm) = (tp("evaluate_llm_dgx_uncached"), tp("evaluate_llm_dgx_cached"));
+    assert!(
+        warm >= 10.0 * cold,
+        "cached throughput must be >= 10x uncached: {warm:.2}/s vs {cold:.2}/s"
+    );
+
+    let _ = dfmodel::util::table::write_result("daemon.txt", &r.summary());
+    let _ = r.write_json("daemon");
+    println!("\n{}", r.summary());
+    println!("cached/uncached speedup: {:.1}x", warm / cold);
+}

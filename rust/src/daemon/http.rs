@@ -1,0 +1,303 @@
+//! Hand-rolled HTTP/1.1 request/response plumbing (hyper/axum are
+//! unavailable offline — DESIGN.md §Substitutions), in the same spirit as
+//! the in-tree HLO parser: just enough of the grammar for the daemon's
+//! three JSON endpoints. One request per connection (`Connection: close`),
+//! `Content-Length` bodies only (no chunked transfer), plus the tiny
+//! blocking client the tests and the daemon bench drive the server with.
+
+use std::io::{self, BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+/// Cap on request-line/header sizes: nothing legitimate the daemon serves
+/// comes close, and it bounds memory for garbage input.
+const MAX_HEAD_LINE: usize = 8 * 1024;
+const MAX_HEADERS: usize = 100;
+
+/// Parsed request head: method, target, and lowercased header names.
+pub struct Head {
+    pub method: String,
+    /// Raw request target, query string included (e.g. `/v1/metrics?format=json`).
+    pub target: String,
+    pub headers: Vec<(String, String)>,
+}
+
+impl Head {
+    /// Header value by lowercase name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Declared body length (0 when the header is absent).
+    pub fn content_length(&self) -> io::Result<usize> {
+        match self.header("content-length") {
+            None => Ok(0),
+            Some(v) => v
+                .trim()
+                .parse()
+                .map_err(|_| bad_request(format!("invalid Content-Length '{v}'"))),
+        }
+    }
+
+    /// True when the client asked for `100 Continue` before sending the
+    /// body (curl does this for larger POSTs).
+    pub fn expects_continue(&self) -> bool {
+        self.header("expect").is_some_and(|v| v.eq_ignore_ascii_case("100-continue"))
+    }
+
+    /// Path without the query string, and the query string (if any).
+    pub fn path_query(&self) -> (&str, Option<&str>) {
+        match self.target.split_once('?') {
+            Some((p, q)) => (p, Some(q)),
+            None => (&self.target, None),
+        }
+    }
+}
+
+fn bad_request(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+/// Read one CRLF- (or bare-LF-) terminated line, bounded by [`MAX_HEAD_LINE`].
+fn read_line<R: BufRead>(r: &mut R) -> io::Result<String> {
+    let mut buf = Vec::new();
+    loop {
+        let mut byte = [0u8; 1];
+        match r.read(&mut byte)? {
+            0 => break, // EOF mid-line: return what we have
+            _ => {
+                if byte[0] == b'\n' {
+                    break;
+                }
+                buf.push(byte[0]);
+                if buf.len() > MAX_HEAD_LINE {
+                    return Err(bad_request("header line too long".into()));
+                }
+            }
+        }
+    }
+    if buf.last() == Some(&b'\r') {
+        buf.pop();
+    }
+    String::from_utf8(buf).map_err(|_| bad_request("non-UTF-8 header line".into()))
+}
+
+/// Parse the request line and headers (the body stays on the reader).
+pub fn read_head<R: BufRead>(r: &mut R) -> io::Result<Head> {
+    let line = read_line(r)?;
+    if line.is_empty() {
+        return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "empty request"));
+    }
+    let mut parts = line.split_whitespace();
+    let (method, target) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(t), Some(v)) if v.starts_with("HTTP/1") => (m.to_string(), t.to_string()),
+        _ => return Err(bad_request(format!("malformed request line '{line}'"))),
+    };
+    let mut headers = Vec::new();
+    loop {
+        let line = read_line(r)?;
+        if line.is_empty() {
+            break; // blank line terminates the head
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Err(bad_request("too many headers".into()));
+        }
+        let Some((k, v)) = line.split_once(':') else {
+            return Err(bad_request(format!("malformed header '{line}'")));
+        };
+        headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+    }
+    Ok(Head { method, target, headers })
+}
+
+/// Body read outcomes the caller maps to HTTP statuses.
+pub enum BodyOutcome {
+    Ok(Vec<u8>),
+    /// Declared length exceeds the server's `--max-body` → 413.
+    TooLarge(usize),
+    /// `Transfer-Encoding: chunked` (unsupported) → 400.
+    Unsupported(&'static str),
+}
+
+/// Read the request body per the head's framing headers.
+pub fn read_body<R: BufRead>(r: &mut R, head: &Head, max_body: usize) -> io::Result<BodyOutcome> {
+    if head.header("transfer-encoding").is_some_and(|v| !v.eq_ignore_ascii_case("identity")) {
+        return Ok(BodyOutcome::Unsupported("chunked transfer encoding not supported"));
+    }
+    let len = head.content_length()?;
+    if len > max_body {
+        return Ok(BodyOutcome::TooLarge(len));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok(BodyOutcome::Ok(body))
+}
+
+/// One response, always `Connection: close`.
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: String,
+}
+
+impl Response {
+    pub fn json(status: u16, body: String) -> Response {
+        Response { status, content_type: "application/json", body }
+    }
+
+    pub fn text(status: u16, body: String) -> Response {
+        Response { status, content_type: "text/plain; charset=utf-8", body }
+    }
+
+    pub fn write_to<W: Write>(&self, w: &mut W) -> io::Result<()> {
+        write!(
+            w,
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            self.status,
+            reason(self.status),
+            self.content_type,
+            self.body.len()
+        )?;
+        w.write_all(self.body.as_bytes())?;
+        w.flush()
+    }
+}
+
+/// Reason phrase for the statuses the daemon emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        100 => "Continue",
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        422 => "Unprocessable Entity",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Minimal blocking HTTP client for one round trip — what `tests/daemon.rs`
+/// and `benches/daemon.rs` hit the loopback listener with. Returns
+/// `(status, body)`.
+pub fn roundtrip(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> io::Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(120)))?;
+    let body = body.unwrap_or("");
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: dfmodeld\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    stream.flush()?;
+    let mut r = BufReader::new(stream);
+    let status_line = read_line(&mut r)?;
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| bad_request(format!("malformed status line '{status_line}'")))?;
+    let mut content_length: Option<usize> = None;
+    loop {
+        let line = read_line(&mut r)?;
+        if line.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = line.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().ok();
+            }
+        }
+    }
+    let body = match content_length {
+        Some(n) => {
+            let mut buf = vec![0u8; n];
+            r.read_exact(&mut buf)?;
+            String::from_utf8_lossy(&buf).into_owned()
+        }
+        None => {
+            let mut buf = String::new();
+            r.read_to_string(&mut buf)?;
+            buf
+        }
+    };
+    Ok((status, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn head_of(raw: &str) -> io::Result<Head> {
+        read_head(&mut Cursor::new(raw.as_bytes()))
+    }
+
+    #[test]
+    fn parses_request_line_and_headers() {
+        let h = head_of(
+            "POST /v1/evaluate?x=1 HTTP/1.1\r\nHost: a\r\nContent-Length: 12\r\nExpect: 100-continue\r\n\r\n",
+        )
+        .unwrap();
+        assert_eq!(h.method, "POST");
+        assert_eq!(h.path_query(), ("/v1/evaluate", Some("x=1")));
+        assert_eq!(h.content_length().unwrap(), 12);
+        assert!(h.expects_continue());
+        assert_eq!(h.header("host"), Some("a"));
+        assert_eq!(h.header("missing"), None);
+    }
+
+    #[test]
+    fn tolerates_bare_lf_and_no_query() {
+        let h = head_of("GET /v1/health HTTP/1.1\nHost: b\n\n").unwrap();
+        assert_eq!(h.method, "GET");
+        assert_eq!(h.path_query(), ("/v1/health", None));
+        assert_eq!(h.content_length().unwrap(), 0);
+        assert!(!h.expects_continue());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(head_of("not http at all\r\n\r\n").is_err());
+        assert!(head_of("GET /x HTTP/1.1\r\nbroken header line\r\n\r\n").is_err());
+        let h = head_of("GET /x HTTP/1.1\r\nContent-Length: twelve\r\n\r\n").unwrap();
+        assert!(h.content_length().is_err());
+    }
+
+    #[test]
+    fn body_framing_and_limits() {
+        let raw = "POST /e HTTP/1.1\r\nContent-Length: 5\r\n\r\nhello";
+        let mut c = Cursor::new(raw.as_bytes());
+        let h = read_head(&mut c).unwrap();
+        match read_body(&mut c, &h, 1024).unwrap() {
+            BodyOutcome::Ok(b) => assert_eq!(b, b"hello"),
+            _ => panic!("expected body"),
+        }
+        let mut c = Cursor::new(raw.as_bytes());
+        let h = read_head(&mut c).unwrap();
+        assert!(matches!(read_body(&mut c, &h, 4).unwrap(), BodyOutcome::TooLarge(5)));
+        let raw = "POST /e HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n";
+        let mut c = Cursor::new(raw.as_bytes());
+        let h = read_head(&mut c).unwrap();
+        assert!(matches!(read_body(&mut c, &h, 1024).unwrap(), BodyOutcome::Unsupported(_)));
+    }
+
+    #[test]
+    fn response_wire_format() {
+        let mut out = Vec::new();
+        Response::json(422, "{\"error\":\"x\"}".into()).write_to(&mut out).unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 422 Unprocessable Entity\r\n"), "got: {s}");
+        assert!(s.contains("Content-Length: 13\r\n"));
+        assert!(s.contains("Connection: close\r\n"));
+        assert!(s.ends_with("{\"error\":\"x\"}"));
+    }
+}

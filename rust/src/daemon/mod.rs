@@ -1,0 +1,234 @@
+//! `dfmodeld`: the persistent optimization service behind `dfmodel daemon`
+//! (the ROADMAP "production-scale deployment" serving layer).
+//!
+//! Architecture (DESIGN.md §Daemon): a nonblocking `TcpListener` accept
+//! loop hands each connection to a short-lived connection thread, which
+//! parses the request ([`http`]) and calls into the shared [`Service`] —
+//! lint pre-flight, the canonical-JSON LRU result cache, and a bounded
+//! queue feeding the `util::threadpool` workers that run
+//! `Scenario::evaluate`. Endpoints:
+//!
+//! | route                | outcome                                        |
+//! |----------------------|------------------------------------------------|
+//! | `POST /v1/evaluate`  | Scenario JSON → Report JSON (the CLI's bytes)  |
+//! | `GET /v1/health`     | liveness probe                                 |
+//! | `GET /v1/metrics`    | daemon counters/histograms (text; `?format=json`) |
+//! | `POST /v1/shutdown`  | graceful stop (what CI uses; SIGINT is equivalent) |
+//!
+//! Error taxonomy: 400 malformed HTTP/JSON, 404/405 bad route, 413 body
+//! over `--max-body`, 422 lint or evaluation rejection, 429 queue full
+//! (backpressure), 500 worker panic, 503 per-request timeout or shutdown.
+//! Graceful shutdown (SIGINT/SIGTERM/`/v1/shutdown`) stops accepting,
+//! drains connection threads and queued work, then joins the pool.
+
+pub mod http;
+pub mod service;
+pub mod signal;
+
+pub use service::{Reply, Service, ServiceConfig};
+
+use std::io::{self, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Poll period of the nonblocking accept loop (also the shutdown-notice
+/// latency ceiling).
+const ACCEPT_POLL: Duration = Duration::from_millis(20);
+
+/// Per-connection socket read budget: a client that stalls mid-request
+/// cannot pin a connection thread past it.
+const READ_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Everything `dfmodel daemon` exposes as flags.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub addr: SocketAddr,
+    pub service: ServiceConfig,
+    /// Largest accepted request body; beyond it → 413.
+    pub max_body: usize,
+}
+
+impl Default for Config {
+    fn default() -> Config {
+        Config {
+            addr: SocketAddr::from(([127, 0, 0, 1], 8080)),
+            service: ServiceConfig::default(),
+            max_body: 8 * 1024 * 1024,
+        }
+    }
+}
+
+/// A bound (not yet serving) daemon.
+pub struct Server {
+    listener: TcpListener,
+    service: Arc<Service>,
+    stop: Arc<AtomicBool>,
+    max_body: usize,
+}
+
+impl Server {
+    /// Bind with the production `Scenario::evaluate` service.
+    pub fn bind(cfg: &Config) -> io::Result<Server> {
+        Server::bind_with(cfg, Service::new(&cfg.service))
+    }
+
+    /// Bind around an externally-built service (the tests inject gated
+    /// evaluators to pin 429/503/drain behavior deterministically).
+    pub fn bind_with(cfg: &Config, service: Service) -> io::Result<Server> {
+        let listener = TcpListener::bind(cfg.addr)?;
+        Ok(Server {
+            listener,
+            service: Arc::new(service),
+            stop: Arc::new(AtomicBool::new(false)),
+            max_body: cfg.max_body,
+        })
+    }
+
+    /// Actual bound address (resolves `--addr host:0` ephemeral ports).
+    pub fn local_addr(&self) -> io::Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// Serve until the stop flag or a SIGINT/SIGTERM latches, then drain:
+    /// stop accepting, join every connection thread (each finishes its
+    /// in-flight request), and join the worker pool.
+    pub fn run(self) -> io::Result<()> {
+        self.listener.set_nonblocking(true)?;
+        let mut conns: Vec<JoinHandle<()>> = Vec::new();
+        while !self.stop.load(Ordering::Relaxed) && !signal::interrupted() {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    let service = Arc::clone(&self.service);
+                    let stop = Arc::clone(&self.stop);
+                    let max_body = self.max_body;
+                    conns.push(std::thread::spawn(move || {
+                        handle_connection(stream, &service, &stop, max_body);
+                    }));
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    conns.retain(|h| !h.is_finished());
+                    std::thread::sleep(ACCEPT_POLL);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        // refuse new connections (listener closes on drop), drain in-flight
+        drop(self.listener);
+        for h in conns {
+            let _ = h.join();
+        }
+        // last Arc owner: dropping the service joins the worker pool
+        drop(self.service);
+        Ok(())
+    }
+
+    /// Spawn [`Server::run`] on a background thread (the test harness path;
+    /// the CLI calls `run` inline).
+    pub fn start(self) -> io::Result<Handle> {
+        let addr = self.local_addr()?;
+        let stop = Arc::clone(&self.stop);
+        let join = std::thread::spawn(move || self.run());
+        Ok(Handle { addr, stop, join })
+    }
+}
+
+/// Control handle for a backgrounded server.
+pub struct Handle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: JoinHandle<io::Result<()>>,
+}
+
+impl Handle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Request a graceful stop and block until the drain completes.
+    pub fn stop(self) -> io::Result<()> {
+        self.stop.store(true, Ordering::Relaxed);
+        self.join
+            .join()
+            .unwrap_or_else(|_| Err(io::Error::other("server thread panicked")))
+    }
+}
+
+/// JSON error body with proper string escaping.
+fn err_reply(status: u16, msg: &str) -> Reply {
+    Reply { status, body: Json::obj(vec![("error", Json::from(msg))]).pretty() }
+}
+
+/// One connection: parse, route, respond, close.
+fn handle_connection(
+    stream: TcpStream,
+    service: &Service,
+    stop: &AtomicBool,
+    max_body: usize,
+) {
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    let reply = route(&mut reader, &mut writer, service, stop, max_body);
+    // the metrics text surface is the one non-JSON body the daemon emits
+    let response = if reply.body.starts_with('{') || reply.body.starts_with('[') {
+        http::Response::json(reply.status, reply.body)
+    } else {
+        http::Response::text(reply.status, reply.body)
+    };
+    let _ = response.write_to(&mut writer);
+}
+
+/// Parse one request off the reader and produce the reply for it.
+fn route(
+    reader: &mut BufReader<TcpStream>,
+    writer: &mut TcpStream,
+    service: &Service,
+    stop: &AtomicBool,
+    max_body: usize,
+) -> Reply {
+    let head = match http::read_head(reader) {
+        Ok(h) => h,
+        Err(e) => return err_reply(400, &e.to_string()),
+    };
+    let (path, query) = head.path_query();
+    match (head.method.as_str(), path) {
+        ("GET", "/v1/health") => service.health(),
+        ("GET", "/v1/metrics") => {
+            let json = query.is_some_and(|q| q.split('&').any(|kv| kv == "format=json"));
+            service.metrics_reply(json)
+        }
+        ("POST", "/v1/evaluate") => {
+            if head.expects_continue() {
+                // curl sends Expect: 100-continue for larger scenario
+                // bodies and waits for this interim line before the payload
+                let _ = write!(writer, "HTTP/1.1 100 Continue\r\n\r\n");
+                let _ = writer.flush();
+            }
+            match http::read_body(reader, &head, max_body) {
+                Ok(http::BodyOutcome::Ok(body)) => service.evaluate(&body),
+                Ok(http::BodyOutcome::TooLarge(n)) => err_reply(
+                    413,
+                    &format!("body of {n} bytes exceeds the {max_body}-byte limit"),
+                ),
+                Ok(http::BodyOutcome::Unsupported(msg)) => err_reply(400, msg),
+                Err(e) => err_reply(400, &e.to_string()),
+            }
+        }
+        ("POST", "/v1/shutdown") => {
+            stop.store(true, Ordering::Relaxed);
+            Reply { status: 200, body: "{\"status\": \"stopping\"}".to_string() }
+        }
+        (_, "/v1/health" | "/v1/metrics" | "/v1/evaluate" | "/v1/shutdown") => {
+            err_reply(405, "method not allowed")
+        }
+        _ => err_reply(404, &format!("no route for {path}")),
+    }
+}

@@ -1,0 +1,429 @@
+//! Transport-independent daemon core: the bounded worker pool, the shared
+//! LRU result cache keyed by canonical Scenario JSON, lint pre-flight, and
+//! the metrics registry behind `GET /v1/metrics`. `tests/daemon.rs` also
+//! drives a [`Service`] in-process (no socket) to pin cache and tracing
+//! behavior deterministically.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::api::Scenario;
+use crate::lint;
+use crate::obs;
+use crate::obs::metrics::{Hist, Metric};
+use crate::util::json::Json;
+use crate::util::lru::Lru;
+use crate::util::threadpool::{SubmitError, ThreadPool};
+
+/// Pool/cache sizing (the `dfmodel daemon` flags minus the listen address).
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Worker threads evaluating scenarios.
+    pub workers: usize,
+    /// LRU result-cache entries; 0 disables caching (the uncached bench).
+    pub cache_entries: usize,
+    /// Accepted-but-not-started request bound; overflow → 429.
+    pub queue_cap: usize,
+    /// Per-request evaluation budget; overrun → 503 (the job itself keeps
+    /// running to completion on its worker).
+    pub timeout: Duration,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> ServiceConfig {
+        ServiceConfig {
+            workers: crate::util::threadpool::default_workers(),
+            cache_entries: 256,
+            queue_cap: 64,
+            timeout: Duration::from_secs(300),
+        }
+    }
+}
+
+/// One endpoint outcome: an HTTP status plus a JSON body.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Reply {
+    pub status: u16,
+    pub body: String,
+}
+
+fn error_body(status: u16, msg: &str) -> Reply {
+    Reply {
+        status,
+        body: Json::obj(vec![("error", Json::from(msg))]).pretty(),
+    }
+}
+
+/// Scenario JSON → pretty Report JSON (or a client-addressable error).
+/// Injectable so the backpressure/timeout/drain tests can substitute a
+/// gated evaluator with deterministic timing.
+pub type Evaluator = dyn Fn(&Json) -> Result<String, String> + Send + Sync;
+
+/// The production evaluator: exactly the CLI path
+/// (`Scenario::from_json` → `Scenario::evaluate` → pretty report JSON), so
+/// HTTP output is byte-identical to `dfmodel <goal> --scenario ... --json`.
+fn evaluate_scenario(j: &Json) -> Result<String, String> {
+    let s = Scenario::from_json(j).map_err(|e| e.to_string())?;
+    let report = s.evaluate().map_err(|e| e.to_string())?;
+    Ok(report.to_json().pretty())
+}
+
+/// Thread-safe metrics for the daemon itself. The per-request `obs` spans
+/// flow through the thread-local capture (when one is armed); this registry
+/// is process-wide and always on, since `/v1/metrics` must answer without
+/// any capture session. Rendering mirrors `obs::Capture::metrics_text` /
+/// `metrics_json` so both surfaces read the same.
+pub struct Registry {
+    inner: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl Registry {
+    fn new() -> Registry {
+        Registry { inner: Mutex::new(BTreeMap::new()) }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, BTreeMap<String, Metric>> {
+        self.inner.lock().expect("metrics registry poisoned")
+    }
+
+    /// Bump a counter by `delta` (created at 0 on first use). As in
+    /// `obs::Capture`, the first event under a name decides its kind;
+    /// mismatched later events are ignored.
+    pub fn add(&self, name: &str, delta: u64) {
+        let mut m = self.lock();
+        if let Metric::Counter(c) = m.entry(name.to_string()).or_insert(Metric::Counter(0)) {
+            *c += delta;
+        }
+    }
+
+    /// Record one histogram sample.
+    pub fn observe(&self, name: &str, v: f64) {
+        let mut m = self.lock();
+        if let Metric::Histogram(h) =
+            m.entry(name.to_string()).or_insert_with(|| Metric::Histogram(Hist::new()))
+        {
+            h.add(v);
+        }
+    }
+
+    /// Current counter value (0 when absent) — test/assertion helper.
+    pub fn counter_value(&self, name: &str) -> u64 {
+        match self.lock().get(name) {
+            Some(Metric::Counter(c)) => *c,
+            _ => 0,
+        }
+    }
+
+    /// Text rendering, same shape as `obs::Capture::metrics_text`.
+    pub fn to_text(&self) -> String {
+        use std::fmt::Write as _;
+        let m = self.lock();
+        let mut s = String::new();
+        let _ = writeln!(s, "stats    : {} metric(s)", m.len());
+        for (name, metric) in m.iter() {
+            let _ = match metric {
+                Metric::Counter(c) => writeln!(s, "  {name} = {c}"),
+                Metric::Gauge(v) => writeln!(s, "  {name} = {v:.6}"),
+                Metric::Histogram(h) => writeln!(
+                    s,
+                    "  {name}: n={} mean={:.4e} min={:.4e} max={:.4e}",
+                    h.count,
+                    h.mean(),
+                    h.min,
+                    h.max
+                ),
+            };
+        }
+        s
+    }
+
+    /// JSON rendering, same shape as `obs::Capture::metrics_json`
+    /// (`{"kind": "counter", "value": N}` etc. per metric name).
+    pub fn to_json(&self) -> Json {
+        let m = self.lock();
+        Json::Obj(
+            m.iter()
+                .map(|(name, metric)| {
+                    let v = match metric {
+                        Metric::Counter(c) => Json::obj(vec![
+                            ("kind", Json::from("counter")),
+                            ("value", Json::from(*c as f64)),
+                        ]),
+                        Metric::Gauge(g) => Json::obj(vec![
+                            ("kind", Json::from("gauge")),
+                            ("value", Json::from(*g)),
+                        ]),
+                        Metric::Histogram(h) => Json::obj(vec![
+                            ("kind", Json::from("histogram")),
+                            ("count", Json::from(h.count as f64)),
+                            ("sum", Json::from(h.sum)),
+                            ("min", Json::from(h.min)),
+                            ("max", Json::from(h.max)),
+                            (
+                                "buckets",
+                                Json::arr(h.buckets.iter().map(|&(ub, c)| {
+                                    Json::arr([Json::from(ub), Json::from(c as f64)])
+                                })),
+                            ),
+                        ]),
+                    };
+                    (name.clone(), v)
+                })
+                .collect(),
+        )
+    }
+}
+
+/// The daemon core: listener-independent request handling.
+pub struct Service {
+    pool: ThreadPool,
+    /// Canonical Scenario JSON (`Json::sorted()`, compact) → pretty Report
+    /// JSON. `None` when caching is disabled.
+    cache: Option<Mutex<Lru<String, String>>>,
+    eval: Arc<Evaluator>,
+    metrics: Registry,
+    timeout: Duration,
+}
+
+impl Service {
+    /// Production service: the real `Scenario::evaluate` path.
+    pub fn new(cfg: &ServiceConfig) -> Service {
+        Service::with_evaluator(cfg, Arc::new(evaluate_scenario))
+    }
+
+    /// Test seam: same queue/cache/timeout machinery around any evaluator.
+    pub fn with_evaluator(cfg: &ServiceConfig, eval: Arc<Evaluator>) -> Service {
+        Service {
+            pool: ThreadPool::new(cfg.workers, cfg.queue_cap),
+            cache: (cfg.cache_entries > 0)
+                .then(|| Mutex::new(Lru::new(cfg.cache_entries))),
+            eval,
+            metrics: Registry::new(),
+            timeout: cfg.timeout,
+        }
+    }
+
+    /// Daemon-side metrics (also the `/v1/metrics` payload source).
+    pub fn metrics(&self) -> &Registry {
+        &self.metrics
+    }
+
+    /// `GET /v1/health` body.
+    pub fn health(&self) -> Reply {
+        Reply {
+            status: 200,
+            body: Json::obj(vec![
+                ("status", Json::from("ok")),
+                ("service", Json::from("dfmodeld")),
+                ("version", Json::from(env!("CARGO_PKG_VERSION"))),
+            ])
+            .pretty(),
+        }
+    }
+
+    /// `GET /v1/metrics` body (text by default, JSON on `format=json`).
+    pub fn metrics_reply(&self, json: bool) -> Reply {
+        if json {
+            Reply { status: 200, body: self.metrics.to_json().pretty() }
+        } else {
+            Reply { status: 200, body: self.metrics.to_text() }
+        }
+    }
+
+    /// `POST /v1/evaluate`: Scenario JSON in, Report JSON out.
+    ///
+    /// Flow: parse → canonical-key cache probe → lint pre-flight (errors →
+    /// 422 with the DF-XNNN diagnostics) → bounded submit (full → 429) →
+    /// wait with timeout (→ 503) → cache fill. The evaluation itself runs
+    /// under `obs::record_task` and is spliced back onto *this* thread's
+    /// capture (when armed), so recorded traces are independent of which
+    /// worker ran the job.
+    pub fn evaluate(&self, body: &[u8]) -> Reply {
+        self.metrics.add("daemon.evaluate.requests", 1);
+        let text = match std::str::from_utf8(body) {
+            Ok(t) => t,
+            Err(_) => {
+                self.metrics.add("daemon.evaluate.errors", 1);
+                return error_body(400, "request body is not UTF-8");
+            }
+        };
+        let j = match Json::parse(text) {
+            Ok(j) => j,
+            Err(e) => {
+                self.metrics.add("daemon.evaluate.errors", 1);
+                return error_body(400, &e.to_string());
+            }
+        };
+        // key on the canonicalized document: key order and formatting
+        // differences between clients still hit the same entry
+        let canonical = j.sorted().to_string();
+        if let Some(cache) = &self.cache {
+            let mut cache = cache.lock().expect("result cache poisoned");
+            if let Some(hit) = cache.get(&canonical) {
+                self.metrics.add("daemon.cache.hits", 1);
+                return Reply { status: 200, body: hit.clone() };
+            }
+            self.metrics.add("daemon.cache.misses", 1);
+        }
+        // lint pre-flight on the connection thread: malformed scenarios
+        // never occupy a worker (`"lint": false` opts out, as in the CLI)
+        if j.get("lint").and_then(Json::as_bool) != Some(false) {
+            let report = lint::lint_json(&j);
+            if report.has_errors() {
+                self.metrics.add("daemon.evaluate.lint_rejected", 1);
+                return Reply {
+                    status: 422,
+                    body: Json::obj(vec![
+                        ("error", Json::from("scenario fails lint")),
+                        ("lint", report.to_json()),
+                    ])
+                    .pretty(),
+                };
+            }
+        }
+        self.metrics.observe("daemon.queue.depth", self.pool.queue_depth() as f64);
+        let eval = Arc::clone(&self.eval);
+        let tracing = obs::enabled();
+        let started = Instant::now();
+        let submitted = self.pool.try_submit(move || {
+            if tracing {
+                let (r, log) = obs::record_task(|| eval(&j));
+                (r, Some(log))
+            } else {
+                (eval(&j), None)
+            }
+        });
+        let handle = match submitted {
+            Ok(h) => h,
+            Err(SubmitError::Full) => {
+                self.metrics.add("daemon.rejected.queue_full", 1);
+                return error_body(429, "request queue full, retry later");
+            }
+            Err(SubmitError::Closed) => {
+                return error_body(503, "service shutting down");
+            }
+        };
+        self.metrics.add("daemon.evaluate.submitted", 1);
+        let (out, log) = match handle.wait_timeout(self.timeout) {
+            None => {
+                self.metrics.add("daemon.rejected.timeout", 1);
+                return error_body(503, "evaluation timed out");
+            }
+            Some(Err(e)) => {
+                // worker panic — surfaced, never a lost request
+                self.metrics.add("daemon.evaluate.errors", 1);
+                return error_body(500, &e.to_string());
+            }
+            Some(Ok(pair)) => pair,
+        };
+        obs::splice_tasks(log); // no-op unless this thread has a capture armed
+        self.metrics.observe("daemon.evaluate.latency_seconds", started.elapsed().as_secs_f64());
+        match out {
+            Ok(report) => {
+                if let Some(cache) = &self.cache {
+                    cache.lock().expect("result cache poisoned").insert(canonical, report.clone());
+                }
+                self.metrics.add("daemon.evaluate.ok", 1);
+                Reply { status: 200, body: report }
+            }
+            Err(msg) => {
+                self.metrics.add("daemon.evaluate.errors", 1);
+                error_body(422, &msg)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ServiceConfig {
+        ServiceConfig { workers: 2, cache_entries: 8, queue_cap: 8, ..ServiceConfig::default() }
+    }
+
+    /// Evaluator that echoes the canonicalized input (cheap, deterministic).
+    fn echo() -> Arc<Evaluator> {
+        Arc::new(|j: &Json| Ok(j.sorted().to_string()))
+    }
+
+    #[test]
+    fn registry_renders_like_capture_metrics() {
+        let r = Registry::new();
+        r.add("daemon.cache.hits", 2);
+        r.observe("daemon.queue.depth", 3.0);
+        let text = r.to_text();
+        assert!(text.starts_with("stats    : 2 metric(s)\n"), "got: {text}");
+        assert!(text.contains("  daemon.cache.hits = 2\n"));
+        assert!(text.contains("daemon.queue.depth: n=1"));
+        let j = r.to_json();
+        assert_eq!(
+            j.get("daemon.cache.hits").and_then(|m| m.get("value")).and_then(Json::as_f64),
+            Some(2.0)
+        );
+        assert_eq!(
+            j.get("daemon.queue.depth").and_then(|m| m.get("kind")).and_then(Json::as_str),
+            Some("histogram")
+        );
+        assert_eq!(r.counter_value("daemon.cache.hits"), 2);
+        assert_eq!(r.counter_value("absent"), 0);
+    }
+
+    #[test]
+    fn malformed_bodies_are_400() {
+        let svc = Service::with_evaluator(&tiny_cfg(), echo());
+        assert_eq!(svc.evaluate(&[0xff, 0xfe]).status, 400);
+        assert_eq!(svc.evaluate(b"{ not json").status, 400);
+        assert_eq!(svc.metrics().counter_value("daemon.evaluate.errors"), 2);
+    }
+
+    #[test]
+    fn cache_hits_on_canonically_equal_bodies() {
+        let svc = Service::with_evaluator(&tiny_cfg(), echo());
+        // lint:false so the echo evaluator sees arbitrary JSON
+        let a = br#"{"lint": false, "b": 1, "a": 2}"#;
+        let b = br#"{"a": 2,
+                     "lint": false, "b": 1}"#; // same document, other order
+        let first = svc.evaluate(a);
+        assert_eq!(first.status, 200);
+        assert_eq!(svc.metrics().counter_value("daemon.cache.misses"), 1);
+        let second = svc.evaluate(b);
+        assert_eq!(second, first, "cache hit must return the identical body");
+        assert_eq!(svc.metrics().counter_value("daemon.cache.hits"), 1);
+        assert_eq!(
+            svc.metrics().counter_value("daemon.evaluate.ok"),
+            1,
+            "second request must not re-evaluate"
+        );
+    }
+
+    #[test]
+    fn evaluator_error_is_422_and_panic_is_500() {
+        let failing: Arc<Evaluator> = Arc::new(|_| Err("no such goal".into()));
+        let svc = Service::with_evaluator(&tiny_cfg(), failing);
+        let r = svc.evaluate(br#"{"lint": false}"#);
+        assert_eq!(r.status, 422);
+        assert!(r.body.contains("no such goal"));
+
+        let panicking: Arc<Evaluator> = Arc::new(|_| panic!("worker bug"));
+        let svc = Service::with_evaluator(&tiny_cfg(), panicking);
+        let r = svc.evaluate(br#"{"lint": false}"#);
+        assert_eq!(r.status, 500);
+        assert!(r.body.contains("worker panicked"), "got: {}", r.body);
+        // the pool survives a panicking job
+        assert_eq!(svc.metrics().counter_value("daemon.evaluate.errors"), 1);
+    }
+
+    #[test]
+    fn cache_disabled_when_zero_entries() {
+        let cfg = ServiceConfig { cache_entries: 0, ..tiny_cfg() };
+        let svc = Service::with_evaluator(&cfg, echo());
+        let body = br#"{"lint": false, "x": 1}"#;
+        assert_eq!(svc.evaluate(body).status, 200);
+        assert_eq!(svc.evaluate(body).status, 200);
+        assert_eq!(svc.metrics().counter_value("daemon.cache.hits"), 0);
+        assert_eq!(svc.metrics().counter_value("daemon.cache.misses"), 0);
+        assert_eq!(svc.metrics().counter_value("daemon.evaluate.ok"), 2);
+    }
+}

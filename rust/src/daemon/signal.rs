@@ -1,0 +1,71 @@
+//! SIGINT/SIGTERM → a process-wide flag, without the `libc` crate: the
+//! C `signal(2)` entry point is declared by hand and the handler only
+//! stores to an `AtomicBool` (async-signal-safe). The daemon's accept loop
+//! polls the flag from a nonblocking listener, so the handler never needs
+//! to interrupt a blocking syscall reliably (`SA_RESTART` semantics don't
+//! matter here).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static INTERRUPTED: AtomicBool = AtomicBool::new(false);
+
+/// True once SIGINT/SIGTERM (or [`raise_interrupt`]) was seen.
+pub fn interrupted() -> bool {
+    INTERRUPTED.load(Ordering::Relaxed)
+}
+
+/// Set the flag programmatically (tests, and the `/v1/shutdown` endpoint
+/// path on non-unix builds).
+pub fn raise_interrupt() {
+    INTERRUPTED.store(true, Ordering::Relaxed);
+}
+
+#[cfg(unix)]
+mod imp {
+    use std::sync::atomic::Ordering;
+
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+
+    extern "C" {
+        // POSIX signal(2); usize stands in for the handler pointer.
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+
+    extern "C" fn on_signal(_signum: i32) {
+        // only an atomic store: async-signal-safe
+        super::INTERRUPTED.store(true, Ordering::Relaxed);
+    }
+
+    /// Route SIGINT and SIGTERM to the flag.
+    pub fn install() {
+        unsafe {
+            signal(SIGINT, on_signal as usize);
+            signal(SIGTERM, on_signal as usize);
+        }
+    }
+}
+
+#[cfg(not(unix))]
+mod imp {
+    /// No signal routing off unix; ctrl-c kills the process and the
+    /// `/v1/shutdown` endpoint remains the graceful path.
+    pub fn install() {}
+}
+
+/// Install the handlers (idempotent).
+pub fn install() {
+    imp::install();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flag_starts_clear_and_latches() {
+        install(); // must not crash or alter the flag
+        raise_interrupt();
+        assert!(interrupted());
+    }
+}

@@ -30,7 +30,7 @@ pub mod pareto;
 pub use bound::BoundProfile;
 pub use pareto::{dominates, pareto_frontier};
 
-use std::collections::{BTreeMap, HashMap, HashSet};
+use std::collections::{BTreeMap, HashSet};
 use std::fmt::Write as _;
 
 use crate::api::scenario::{chip_by_name, link_by_name, memory_by_name};
@@ -39,6 +39,7 @@ use crate::graph::gpt::{self, GptConfig};
 use crate::system::{chip, topology, ChipSpec, ExecutionModel, MemoryTech, SystemSpec};
 use crate::util::error::Result;
 use crate::util::json::Json;
+use crate::util::lru::Lru;
 use crate::util::threadpool::{parallel_map, parallel_map_workers};
 use crate::util::units::{Bytes, BytesPerSec, Dollars, FlopPerSec, Watts, GB, MB, TFLOPS};
 use crate::{ensure, err};
@@ -723,7 +724,9 @@ pub fn explore(space: &SearchSpace, settings: &ExploreSettings) -> Result<Explor
         SkippedBudget,
     }
 
-    let mut cache: HashMap<String, Option<DesignPoint>> = HashMap::new();
+    // unbounded: one run never revisits enough keys to need eviction, and
+    // eviction would break the "each distinct system evaluated once" pin
+    let mut cache: Lru<String, Option<DesignPoint>> = Lru::unbounded();
     let mut results: Vec<Option<Option<DesignPoint>>> = vec![None; n];
     let mut archive: Vec<[f64; 3]> = Vec::new();
     let mut pruned_bound_maxima: [Option<[f64; 3]>; 2] = [None, None];
@@ -759,7 +762,7 @@ pub fn explore(space: &SearchSpace, settings: &ExploreSettings) -> Result<Explor
         let mut key_of: Vec<(usize, String)> = Vec::with_capacity(todo.len());
         for &i in &todo {
             let key = cache_key(&space.workload, &cands[i]);
-            if !cache.contains_key(&key) && seen.insert(key.clone()) {
+            if !cache.contains(&key) && seen.insert(key.clone()) {
                 fresh.push((key.clone(), i));
             }
             key_of.push((i, key));

@@ -26,6 +26,7 @@ pub mod baselines;
 pub mod cluster;
 pub mod collective;
 pub mod config;
+pub mod daemon;
 pub mod dse;
 pub mod explain;
 pub mod explore;

@@ -15,6 +15,8 @@
 //!   simulate [--qps R ...]        request-level cluster serving simulation
 //!   plan --qps R --slo-ttft S --slo-tpot S   SLO-aware capacity planner
 //!   fabric [--topo F --chips N --coll C ...]  link-level collective simulation
+//!   daemon [--addr H:P --workers N --cache-entries N --queue-cap N --max-body B]
+//!                                 persistent HTTP evaluation service (dfmodeld)
 //!   lint <file.json ...> [--json]  static checks on scenario/graph files
 //!   topo [--topo F --chips N]     topology facts (links, bisection bandwidth)
 //!   bench-check [--current F --baseline F]  CI bench-regression gate
@@ -44,6 +46,7 @@ const SUBCOMMANDS: &[&str] = &[
     "simulate",
     "plan",
     "fabric",
+    "daemon",
     "lint",
     "topo",
     "bench-check",
@@ -84,6 +87,7 @@ fn main() {
         Some("simulate") => cmd_simulate(&args),
         Some("plan") => cmd_plan(&args),
         Some("fabric") => cmd_fabric(&args),
+        Some("daemon") => cmd_daemon(&args),
         Some("lint") => cmd_lint(&args),
         Some("topo") => cmd_topo(&args),
         Some("bench-check") => cmd_bench_check(&args),
@@ -543,6 +547,63 @@ fn print_trace(s: &Scenario, r: &dfmodel::api::Report, limit: usize) -> Result<(
         println!("  {line}");
     }
     Ok(())
+}
+
+/// `dfmodel daemon` — the persistent HTTP evaluation service (dfmodeld).
+/// Serves `POST /v1/evaluate`, `GET /v1/health`, and `GET /v1/metrics`
+/// until SIGINT/SIGTERM (or `POST /v1/shutdown`), then drains in-flight
+/// work and exits 0. Exit 2 on unusable flags or an unbindable address.
+fn cmd_daemon(args: &Args) -> i32 {
+    use dfmodel::daemon::{signal, Config, Server, ServiceConfig};
+    use dfmodel::util::cli::parse_addr;
+    let addr = match parse_addr(args.get_or("addr", "127.0.0.1:8080")) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("daemon: {e}");
+            return 2;
+        }
+    };
+    let service = ServiceConfig {
+        workers: args
+            .get_usize("workers", dfmodel::util::threadpool::default_workers())
+            .max(1),
+        cache_entries: args.get_usize("cache-entries", 256),
+        queue_cap: args.get_usize("queue-cap", 64).max(1),
+        timeout: std::time::Duration::from_secs_f64(args.get_f64("timeout", 300.0)),
+    };
+    let cfg = Config {
+        addr,
+        service,
+        max_body: args.get_usize("max-body", 8 * 1024 * 1024).max(1024),
+    };
+    let server = match Server::bind(&cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("daemon: cannot bind {}: {e}", cfg.addr);
+            return 2;
+        }
+    };
+    signal::install();
+    match server.local_addr() {
+        Ok(a) => eprintln!(
+            "dfmodeld listening on http://{a} ({} workers, {} cache entries, queue {})",
+            cfg.service.workers, cfg.service.cache_entries, cfg.service.queue_cap
+        ),
+        Err(e) => {
+            eprintln!("daemon: {e}");
+            return 2;
+        }
+    }
+    match server.run() {
+        Ok(()) => {
+            eprintln!("dfmodeld: drained and stopped");
+            0
+        }
+        Err(e) => {
+            eprintln!("daemon: {e}");
+            1
+        }
+    }
 }
 
 /// `dfmodel lint <file.json ...>` — static checks on scenario or

@@ -70,6 +70,31 @@ impl Args {
     }
 }
 
+/// Parse a `host:port` listen address with errors a user can act on
+/// (`SocketAddr::from_str` only says "invalid socket address syntax").
+/// Accepts IPv4 (`127.0.0.1:8080`), bracketed IPv6 (`[::1]:8080`), and
+/// resolvable hostnames (`localhost:8080`); port 0 asks the OS for an
+/// ephemeral port.
+pub fn parse_addr(s: &str) -> Result<std::net::SocketAddr, String> {
+    use std::net::ToSocketAddrs;
+    let s = s.trim();
+    let Some((host, port)) = s.rsplit_once(':') else {
+        return Err(format!("invalid address '{s}': expected host:port (e.g. 127.0.0.1:8080)"));
+    };
+    if host.is_empty() {
+        return Err(format!("invalid address '{s}': missing host before ':'"));
+    }
+    let port: u16 = port.parse().map_err(|_| {
+        format!("invalid address '{s}': port '{port}' is not an integer in 0..=65535")
+    })?;
+    // bracketed IPv6 literal: ToSocketAddrs wants the bare address
+    let host = host.strip_prefix('[').and_then(|h| h.strip_suffix(']')).unwrap_or(host);
+    let mut addrs = (host, port)
+        .to_socket_addrs()
+        .map_err(|e| format!("invalid address '{s}': cannot resolve host '{host}': {e}"))?;
+    addrs.next().ok_or_else(|| format!("invalid address '{s}': host '{host}' resolved to nothing"))
+}
+
 /// Levenshtein edit distance (for "did you mean" hints).
 fn edit_distance(a: &str, b: &str) -> usize {
     let a: Vec<char> = a.chars().collect();
@@ -159,6 +184,33 @@ mod tests {
         assert_eq!(suggest("pla", &cmds), Some("plan"));
         // way off: no suggestion rather than a misleading one
         assert_eq!(suggest("quantum-teleport", &cmds), None);
+    }
+
+    #[test]
+    fn parse_addr_accepts_common_forms() {
+        let a = parse_addr("127.0.0.1:8080").unwrap();
+        assert_eq!(a.port(), 8080);
+        assert!(a.ip().is_loopback());
+        // port 0 = ephemeral; whitespace tolerated
+        assert_eq!(parse_addr(" 127.0.0.1:0 ").unwrap().port(), 0);
+        let v6 = parse_addr("[::1]:9000").unwrap();
+        assert_eq!(v6.port(), 9000);
+        assert!(v6.is_ipv6());
+        assert_eq!(parse_addr("localhost:7777").unwrap().port(), 7777);
+    }
+
+    #[test]
+    fn parse_addr_rejects_malformed_inputs() {
+        let no_colon = parse_addr("8080").unwrap_err();
+        assert!(no_colon.contains("expected host:port"), "got: {no_colon}");
+        let no_host = parse_addr(":8080").unwrap_err();
+        assert!(no_host.contains("missing host"), "got: {no_host}");
+        let bad_port = parse_addr("127.0.0.1:http").unwrap_err();
+        assert!(bad_port.contains("'http'") && bad_port.contains("0..=65535"), "got: {bad_port}");
+        let big_port = parse_addr("127.0.0.1:70000").unwrap_err();
+        assert!(big_port.contains("70000"), "got: {big_port}");
+        let bad_host = parse_addr("999.999.999.999:80").unwrap_err();
+        assert!(bad_host.contains("cannot resolve"), "got: {bad_host}");
     }
 
     #[test]

@@ -1,0 +1,266 @@
+//! Capacity-bounded LRU map (an in-tree substitute for the `lru` crate).
+//!
+//! Generalizes the explorer's per-run memoization cache into a shared
+//! structure usable by both the explorer (`explore::explore`, unbounded —
+//! a run never revisits enough keys to need eviction) and the daemon's
+//! cross-request result cache (`daemon::Service`, bounded). The hit path is
+//! O(1): a `HashMap` from key to slot index plus an index-linked
+//! doubly-linked recency list over a slab of nodes — no allocation or
+//! shifting on `get`, and eviction pops the list tail.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+/// Sentinel index for "no node" (the list ends).
+const NIL: usize = usize::MAX;
+
+struct Node<K, V> {
+    key: K,
+    val: V,
+    prev: usize,
+    next: usize,
+}
+
+/// A least-recently-used map: `get` and `insert` promote the entry to
+/// most-recently-used; inserting into a full bounded map evicts the least
+/// recently used entry.
+pub struct Lru<K, V> {
+    /// `None` = unbounded (never evicts); `Some(n)` holds at most `n`.
+    cap: Option<usize>,
+    map: HashMap<K, usize>,
+    nodes: Vec<Node<K, V>>,
+    /// Most-recently-used slot (NIL when empty).
+    head: usize,
+    /// Least-recently-used slot (NIL when empty).
+    tail: usize,
+    /// Recycled slots from evictions.
+    free: Vec<usize>,
+}
+
+impl<K: Eq + Hash + Clone, V> Lru<K, V> {
+    /// A bounded map holding at most `capacity` entries (clamped to >= 1).
+    pub fn new(capacity: usize) -> Lru<K, V> {
+        Lru {
+            cap: Some(capacity.max(1)),
+            map: HashMap::new(),
+            nodes: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            free: Vec::new(),
+        }
+    }
+
+    /// An unbounded map (never evicts): plain memoization with the same
+    /// API, the explorer's per-run cache.
+    pub fn unbounded() -> Lru<K, V> {
+        Lru { cap: None, ..Lru::new(1) }
+    }
+
+    /// Number of live entries.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True when no entries are live.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// The bound, or `None` for an unbounded map.
+    pub fn capacity(&self) -> Option<usize> {
+        self.cap
+    }
+
+    /// True when `key` is present. Does **not** promote the entry (a pure
+    /// membership probe, like `HashMap::contains_key`).
+    pub fn contains(&self, key: &K) -> bool {
+        self.map.contains_key(key)
+    }
+
+    /// Borrow the value without promoting the entry.
+    pub fn peek(&self, key: &K) -> Option<&V> {
+        self.map.get(key).map(|&i| &self.nodes[i].val)
+    }
+
+    /// Borrow the value and promote the entry to most-recently-used.
+    pub fn get(&mut self, key: &K) -> Option<&V> {
+        let &i = self.map.get(key)?;
+        self.detach(i);
+        self.push_front(i);
+        Some(&self.nodes[i].val)
+    }
+
+    /// Insert or replace. Replacing returns the previous value; inserting
+    /// into a full bounded map silently evicts the least-recently-used
+    /// entry first. The written entry becomes most-recently-used.
+    pub fn insert(&mut self, key: K, val: V) -> Option<V> {
+        if let Some(&i) = self.map.get(&key) {
+            let old = std::mem::replace(&mut self.nodes[i].val, val);
+            self.detach(i);
+            self.push_front(i);
+            return Some(old);
+        }
+        if let Some(cap) = self.cap {
+            while self.map.len() >= cap {
+                self.evict_tail();
+            }
+        }
+        let node = Node { key: key.clone(), val, prev: NIL, next: NIL };
+        let i = match self.free.pop() {
+            Some(i) => {
+                self.nodes[i] = node;
+                i
+            }
+            None => {
+                self.nodes.push(node);
+                self.nodes.len() - 1
+            }
+        };
+        self.map.insert(key, i);
+        self.push_front(i);
+        None
+    }
+
+    /// Drop every entry (capacity is kept).
+    pub fn clear(&mut self) {
+        self.map.clear();
+        self.nodes.clear();
+        self.free.clear();
+        self.head = NIL;
+        self.tail = NIL;
+    }
+
+    /// Unlink slot `i` from the recency list.
+    fn detach(&mut self, i: usize) {
+        let (prev, next) = (self.nodes[i].prev, self.nodes[i].next);
+        if prev == NIL {
+            self.head = next;
+        } else {
+            self.nodes[prev].next = next;
+        }
+        if next == NIL {
+            self.tail = prev;
+        } else {
+            self.nodes[next].prev = prev;
+        }
+        self.nodes[i].prev = NIL;
+        self.nodes[i].next = NIL;
+    }
+
+    /// Link slot `i` as the most-recently-used entry.
+    fn push_front(&mut self, i: usize) {
+        self.nodes[i].prev = NIL;
+        self.nodes[i].next = self.head;
+        if self.head != NIL {
+            self.nodes[self.head].prev = i;
+        }
+        self.head = i;
+        if self.tail == NIL {
+            self.tail = i;
+        }
+    }
+
+    /// Remove the least-recently-used entry and recycle its slot.
+    fn evict_tail(&mut self) {
+        let t = self.tail;
+        if t == NIL {
+            return;
+        }
+        self.detach(t);
+        self.map.remove(&self.nodes[t].key);
+        self.free.push(t);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounded_evicts_least_recently_used() {
+        let mut l: Lru<&str, i32> = Lru::new(2);
+        assert_eq!(l.capacity(), Some(2));
+        l.insert("a", 1);
+        l.insert("b", 2);
+        assert_eq!(l.len(), 2);
+        // touch "a" so "b" is the LRU entry when "c" arrives
+        assert_eq!(l.get(&"a"), Some(&1));
+        l.insert("c", 3);
+        assert_eq!(l.len(), 2);
+        assert!(!l.contains(&"b"), "LRU entry must be the one evicted");
+        assert_eq!(l.get(&"a"), Some(&1));
+        assert_eq!(l.get(&"c"), Some(&3));
+    }
+
+    #[test]
+    fn insert_promotes_and_replaces() {
+        let mut l: Lru<&str, i32> = Lru::new(2);
+        l.insert("a", 1);
+        l.insert("b", 2);
+        // rewriting "a" promotes it; "b" becomes LRU and gets evicted
+        assert_eq!(l.insert("a", 10), Some(1));
+        l.insert("c", 3);
+        assert!(l.contains(&"a") && l.contains(&"c") && !l.contains(&"b"));
+        assert_eq!(l.peek(&"a"), Some(&10));
+    }
+
+    #[test]
+    fn peek_and_contains_do_not_promote() {
+        let mut l: Lru<&str, i32> = Lru::new(2);
+        l.insert("a", 1);
+        l.insert("b", 2);
+        // probes must not rescue "a" from eviction
+        assert_eq!(l.peek(&"a"), Some(&1));
+        assert!(l.contains(&"a"));
+        l.insert("c", 3);
+        assert!(!l.contains(&"a"), "peek/contains must not count as use");
+    }
+
+    #[test]
+    fn unbounded_never_evicts_and_recycles_slots() {
+        let mut l: Lru<usize, usize> = Lru::unbounded();
+        assert_eq!(l.capacity(), None);
+        for i in 0..1000 {
+            l.insert(i, i * 2);
+        }
+        assert_eq!(l.len(), 1000);
+        for i in 0..1000 {
+            assert_eq!(l.get(&i), Some(&(i * 2)));
+        }
+        // a bounded map reuses evicted slots instead of growing the slab
+        let mut b: Lru<usize, usize> = Lru::new(4);
+        for i in 0..100 {
+            b.insert(i, i);
+        }
+        assert_eq!(b.len(), 4);
+        assert!(b.nodes.len() <= 5, "evicted slots must be recycled");
+    }
+
+    #[test]
+    fn empty_clear_and_capacity_clamp() {
+        let mut l: Lru<String, ()> = Lru::new(0);
+        assert_eq!(l.capacity(), Some(1), "capacity clamps to >= 1");
+        assert!(l.is_empty());
+        assert_eq!(l.get(&"x".to_string()), None);
+        l.insert("x".into(), ());
+        l.insert("y".into(), ());
+        assert_eq!(l.len(), 1);
+        l.clear();
+        assert!(l.is_empty() && !l.contains(&"y".to_string()));
+        l.insert("z".into(), ());
+        assert_eq!(l.len(), 1);
+    }
+
+    #[test]
+    fn get_order_is_recency_not_insertion() {
+        let mut l: Lru<i32, i32> = Lru::new(3);
+        for i in [1, 2, 3] {
+            l.insert(i, i);
+        }
+        assert!(l.get(&1).is_some()); // recency now 2,3,1 oldest-first
+        l.insert(4, 4); // evicts 2
+        l.insert(5, 5); // evicts 3
+        assert!(l.contains(&1) && l.contains(&4) && l.contains(&5));
+        assert!(!l.contains(&2) && !l.contains(&3));
+    }
+}

@@ -1,12 +1,14 @@
 //! In-tree substrates replacing crates unavailable in the offline registry
 //! (see DESIGN.md §Substitutions): JSON, CLI parsing, ASCII tables/heatmaps,
-//! PRNG, thread pool, bench harness, unit formatting, property checking.
+//! PRNG, LRU cache, thread pool, bench harness, unit formatting, property
+//! checking.
 
 pub mod bench;
 pub mod check;
 pub mod cli;
 pub mod error;
 pub mod json;
+pub mod lru;
 pub mod prng;
 pub mod table;
 pub mod threadpool;

@@ -1,10 +1,19 @@
-//! Scoped parallel map over std threads (tokio/rayon unavailable offline).
+//! Scoped parallel map and a persistent worker pool over std threads
+//! (tokio/rayon unavailable offline).
 //!
 //! The DSE sweep evaluates hundreds of independent (workload, system)
 //! configurations; `parallel_map` fans them out across available cores with
-//! deterministic output ordering.
+//! deterministic output ordering. The daemon serves long-lived traffic;
+//! [`ThreadPool`] gives it a bounded submission queue (backpressure shows
+//! up as [`SubmitError::Full`], not unbounded memory growth), propagates
+//! worker panics back to the submitter as an `Err`, and joins its workers
+//! on [`ThreadPool::shutdown`] or drop.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 /// Number of worker threads to use (respects `DFMODEL_THREADS`).
 pub fn default_workers() -> usize {
@@ -120,6 +129,191 @@ impl<T> Copy for SendPtr<T> {}
 unsafe impl<T> Send for SendPtr<T> {}
 unsafe impl<T> Sync for SendPtr<T> {}
 
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Why a submission was not accepted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The bounded queue is at capacity — back off and retry (the daemon
+    /// maps this to HTTP 429).
+    Full,
+    /// The pool has shut down; no further work is accepted.
+    Closed,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Full => write!(f, "worker queue full"),
+            SubmitError::Closed => write!(f, "thread pool shut down"),
+        }
+    }
+}
+
+/// Handle to one submitted job; redeem it with [`JobHandle::wait`].
+pub struct JobHandle<R> {
+    rx: mpsc::Receiver<std::thread::Result<R>>,
+}
+
+impl<R> JobHandle<R> {
+    /// Block until the job finishes. A panic inside the job surfaces here
+    /// as an `Err` carrying the panic message — the worker itself survives.
+    pub fn wait(self) -> crate::util::error::Result<R> {
+        match self.rx.recv() {
+            Ok(out) => unpack(out),
+            Err(_) => Err(crate::util::error::Error::new("worker dropped job result")),
+        }
+    }
+
+    /// Like [`JobHandle::wait`] but gives up after `dur`, returning `None`
+    /// while the job keeps running (the daemon maps this to HTTP 503).
+    pub fn wait_timeout(&self, dur: Duration) -> Option<crate::util::error::Result<R>> {
+        match self.rx.recv_timeout(dur) {
+            Ok(out) => Some(unpack(out)),
+            Err(mpsc::RecvTimeoutError::Timeout) => None,
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Some(Err(crate::util::error::Error::new("worker dropped job result")))
+            }
+        }
+    }
+}
+
+fn unpack<R>(out: std::thread::Result<R>) -> crate::util::error::Result<R> {
+    match out {
+        Ok(r) => Ok(r),
+        Err(payload) => {
+            let msg = if let Some(s) = payload.downcast_ref::<&str>() {
+                (*s).to_string()
+            } else if let Some(s) = payload.downcast_ref::<String>() {
+                s.clone()
+            } else {
+                "non-string panic payload".to_string()
+            };
+            Err(crate::util::error::Error::new(format!("worker panicked: {msg}")))
+        }
+    }
+}
+
+/// Persistent worker pool with a bounded submission queue.
+///
+/// Workers pull jobs off a shared channel; each job runs under
+/// `catch_unwind` so a panic is delivered to the submitter through its
+/// [`JobHandle`] instead of killing the worker. Dropping the pool (or
+/// calling [`ThreadPool::shutdown`]) closes the queue, lets already-queued
+/// jobs drain, and joins every worker.
+pub struct ThreadPool {
+    tx: Option<mpsc::SyncSender<Job>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    queued: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    /// Spawn `workers` threads (clamped to >= 1) behind a queue holding at
+    /// most `queue_cap` not-yet-started jobs (clamped to >= 1).
+    pub fn new(workers: usize, queue_cap: usize) -> ThreadPool {
+        let workers = workers.max(1);
+        let (tx, rx) = mpsc::sync_channel::<Job>(queue_cap.max(1));
+        let rx = Arc::new(Mutex::new(rx));
+        let queued = Arc::new(AtomicUsize::new(0));
+        let handles = (0..workers)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let queued = Arc::clone(&queued);
+                std::thread::spawn(move || loop {
+                    // hold the lock only for the dequeue, never while the
+                    // job runs, so workers drain the queue concurrently
+                    let job = match rx.lock().expect("pool receiver poisoned").recv() {
+                        Ok(job) => job,
+                        Err(_) => break, // sender dropped: shutdown
+                    };
+                    queued.fetch_sub(1, Ordering::Relaxed);
+                    job();
+                })
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers: handles, queued }
+    }
+
+    /// Jobs accepted but not yet picked up by a worker.
+    pub fn queue_depth(&self) -> usize {
+        self.queued.load(Ordering::Relaxed)
+    }
+
+    /// Queue `f`, blocking while the queue is full.
+    pub fn submit<R, F>(&self, f: F) -> Result<JobHandle<R>, SubmitError>
+    where
+        R: Send + 'static,
+        F: FnOnce() -> R + Send + 'static,
+    {
+        let (job, handle) = package(f);
+        let tx = self.tx.as_ref().ok_or(SubmitError::Closed)?;
+        self.queued.fetch_add(1, Ordering::Relaxed);
+        match tx.send(job) {
+            Ok(()) => Ok(handle),
+            Err(_) => {
+                self.queued.fetch_sub(1, Ordering::Relaxed);
+                Err(SubmitError::Closed)
+            }
+        }
+    }
+
+    /// Queue `f` without blocking; a full queue is the caller's problem
+    /// ([`SubmitError::Full`] — the daemon's 429 path).
+    pub fn try_submit<R, F>(&self, f: F) -> Result<JobHandle<R>, SubmitError>
+    where
+        R: Send + 'static,
+        F: FnOnce() -> R + Send + 'static,
+    {
+        let (job, handle) = package(f);
+        let tx = self.tx.as_ref().ok_or(SubmitError::Closed)?;
+        self.queued.fetch_add(1, Ordering::Relaxed);
+        match tx.try_send(job) {
+            Ok(()) => Ok(handle),
+            Err(mpsc::TrySendError::Full(_)) => {
+                self.queued.fetch_sub(1, Ordering::Relaxed);
+                Err(SubmitError::Full)
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => {
+                self.queued.fetch_sub(1, Ordering::Relaxed);
+                Err(SubmitError::Closed)
+            }
+        }
+    }
+
+    /// Stop accepting work, let queued jobs drain, and join every worker.
+    /// Dropping the pool does the same; this form makes the join explicit.
+    pub fn shutdown(mut self) {
+        self.close_and_join();
+    }
+
+    fn close_and_join(&mut self) {
+        self.tx.take(); // closes the channel: workers exit after draining
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.close_and_join();
+    }
+}
+
+/// Wrap `f` in a panic-catching job plus the handle its result arrives on.
+fn package<R, F>(f: F) -> (Job, JobHandle<R>)
+where
+    R: Send + 'static,
+    F: FnOnce() -> R + Send + 'static,
+{
+    let (tx, rx) = mpsc::channel();
+    let job: Job = Box::new(move || {
+        let out = catch_unwind(AssertUnwindSafe(f));
+        let _ = tx.send(out); // submitter may have stopped waiting: fine
+    });
+    (job, JobHandle { rx })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -195,5 +389,77 @@ mod tests {
         assert!(fallback >= 1);
         assert_eq!(workers_from_override(Some("not-a-number")), fallback);
         assert!(default_workers() >= 1);
+    }
+
+    #[test]
+    fn pool_runs_jobs_and_returns_results() {
+        let pool = ThreadPool::new(4, 16);
+        let handles: Vec<_> =
+            (0..20).map(|i: usize| pool.submit(move || i * 3).unwrap()).collect();
+        let got: Vec<usize> = handles.into_iter().map(|h| h.wait().unwrap()).collect();
+        assert_eq!(got, (0..20).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pool_propagates_panic_and_survives() {
+        let pool = ThreadPool::new(1, 4);
+        let boom = pool.submit(|| -> usize { panic!("kaboom {}", 7) }).unwrap();
+        let err = boom.wait().unwrap_err();
+        assert!(
+            err.to_string().contains("worker panicked") && err.to_string().contains("kaboom 7"),
+            "got: {err}"
+        );
+        // the single worker must have survived the panic
+        let ok = pool.submit(|| 41 + 1).unwrap();
+        assert_eq!(ok.wait().unwrap(), 42);
+    }
+
+    #[test]
+    fn pool_shutdown_drains_queued_jobs() {
+        let done = Arc::new(AtomicUsize::new(0));
+        let pool = ThreadPool::new(2, 32);
+        for _ in 0..16 {
+            let done = Arc::clone(&done);
+            pool.submit(move || {
+                std::thread::sleep(Duration::from_millis(2));
+                done.fetch_add(1, Ordering::SeqCst);
+            })
+            .unwrap();
+        }
+        pool.shutdown(); // must block until every queued job ran
+        assert_eq!(done.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn try_submit_reports_full_queue() {
+        // 1 worker, queue of 1: occupy the worker, fill the queue, then a
+        // third submission must bounce with Full
+        let pool = ThreadPool::new(1, 1);
+        let (started_tx, started_rx) = mpsc::channel();
+        let (gate_tx, gate_rx) = mpsc::channel::<()>();
+        let running = pool
+            .try_submit(move || {
+                started_tx.send(()).unwrap();
+                gate_rx.recv().unwrap();
+            })
+            .unwrap();
+        started_rx.recv().unwrap(); // worker is now busy, queue empty
+        let queued = pool.try_submit(|| ()).unwrap(); // fills the queue
+        assert_eq!(pool.queue_depth(), 1);
+        assert_eq!(pool.try_submit(|| ()).unwrap_err(), SubmitError::Full);
+        gate_tx.send(()).unwrap();
+        running.wait().unwrap();
+        queued.wait().unwrap();
+        assert_eq!(pool.queue_depth(), 0);
+    }
+
+    #[test]
+    fn wait_timeout_none_while_running() {
+        let pool = ThreadPool::new(1, 4);
+        let (gate_tx, gate_rx) = mpsc::channel::<()>();
+        let h = pool.submit(move || gate_rx.recv().unwrap()).unwrap();
+        assert!(h.wait_timeout(Duration::from_millis(10)).is_none());
+        gate_tx.send(()).unwrap();
+        assert!(h.wait_timeout(Duration::from_secs(5)).unwrap().is_ok());
     }
 }

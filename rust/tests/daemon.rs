@@ -1,0 +1,313 @@
+//! Daemon end-to-end tests over a loopback socket on ephemeral ports:
+//! HTTP evaluate parity with direct `Scenario::evaluate` (byte-identical
+//! report JSON for every committed example scenario), LRU cache hits on
+//! repeated POSTs (counter + single optimizer span in the trace), lint
+//! rejection with DF-XNNN diagnostics, queue-full backpressure (429),
+//! per-request timeout (503), and graceful shutdown draining in-flight
+//! work. The backpressure/timeout/drain tests inject gated evaluators via
+//! `Server::bind_with` so their timing is deterministic.
+
+use std::net::SocketAddr;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use dfmodel::api::Scenario;
+use dfmodel::daemon::{http, Config, Server, Service, ServiceConfig};
+use dfmodel::obs;
+use dfmodel::util::json::Json;
+
+fn scenario_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples/scenarios")
+}
+
+fn read_scenario(name: &str) -> String {
+    let path = scenario_dir().join(name);
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("read {}: {e}", path.display()))
+}
+
+/// Ephemeral-port config with small pool/queue sizes for test determinism.
+fn test_config(service: ServiceConfig) -> Config {
+    Config { addr: "127.0.0.1:0".parse().unwrap(), service, ..Config::default() }
+}
+
+fn start_default_server() -> dfmodel::daemon::Handle {
+    let cfg = test_config(ServiceConfig { workers: 2, ..ServiceConfig::default() });
+    Server::bind(&cfg).expect("bind").start().expect("start")
+}
+
+fn post_evaluate(addr: SocketAddr, body: &str) -> (u16, String) {
+    http::roundtrip(addr, "POST", "/v1/evaluate", Some(body)).expect("evaluate roundtrip")
+}
+
+fn metrics_counter(addr: SocketAddr, name: &str) -> f64 {
+    let (status, body) =
+        http::roundtrip(addr, "GET", "/v1/metrics?format=json", None).expect("metrics");
+    assert_eq!(status, 200, "metrics body: {body}");
+    Json::parse(&body)
+        .expect("metrics json")
+        .get(name)
+        .and_then(|m| m.get("value"))
+        .and_then(|v| v.as_f64())
+        .unwrap_or(0.0)
+}
+
+#[test]
+fn health_endpoint_answers() {
+    let h = start_default_server();
+    let (status, body) = http::roundtrip(h.addr(), "GET", "/v1/health", None).unwrap();
+    assert_eq!(status, 200);
+    let j = Json::parse(&body).expect("health json");
+    assert_eq!(j.get("status").and_then(|v| v.as_str()), Some("ok"));
+    assert_eq!(j.get("service").and_then(|v| v.as_str()), Some("dfmodeld"));
+    h.stop().unwrap();
+}
+
+#[test]
+fn unknown_routes_and_methods_are_rejected() {
+    let h = start_default_server();
+    let (status, _) = http::roundtrip(h.addr(), "GET", "/v2/nope", None).unwrap();
+    assert_eq!(status, 404);
+    let (status, _) = http::roundtrip(h.addr(), "DELETE", "/v1/health", None).unwrap();
+    assert_eq!(status, 405);
+    let (status, body) = post_evaluate(h.addr(), "{ not json");
+    assert_eq!(status, 400, "body: {body}");
+    h.stop().unwrap();
+}
+
+/// Acceptance pin: HTTP evaluate output is byte-identical to the direct
+/// `Scenario::evaluate` report JSON for every committed example scenario.
+#[test]
+fn evaluate_parity_with_direct_facade_on_all_example_scenarios() {
+    let h = start_default_server();
+    for name in ["llm_dgx.json", "serve_sn40l.json", "explore_small.json"] {
+        let text = read_scenario(name);
+        let direct = Scenario::parse(&text)
+            .unwrap_or_else(|e| panic!("{name}: {e}"))
+            .evaluate()
+            .unwrap_or_else(|e| panic!("{name}: {e}"))
+            .to_json()
+            .pretty();
+        let (status, body) = post_evaluate(h.addr(), &text);
+        assert_eq!(status, 200, "{name}: {body}");
+        assert_eq!(body, direct, "{name}: HTTP report must be byte-identical to the facade");
+    }
+    h.stop().unwrap();
+}
+
+#[test]
+fn repeat_post_is_served_from_the_cache() {
+    let h = start_default_server();
+    let text = read_scenario("llm_dgx.json");
+    let (s1, first) = post_evaluate(h.addr(), &text);
+    assert_eq!(s1, 200, "{first}");
+    assert_eq!(metrics_counter(h.addr(), "daemon.cache.misses"), 1.0);
+    let (s2, second) = post_evaluate(h.addr(), &text);
+    assert_eq!(s2, 200);
+    assert_eq!(second, first, "cached reply must be the identical bytes");
+    assert_eq!(metrics_counter(h.addr(), "daemon.cache.hits"), 1.0);
+    // same document with reordered keys / different whitespace: the
+    // canonical (sorted) cache key still hits
+    let reordered = Json::parse(&text).unwrap().sorted().pretty();
+    let (s3, third) = post_evaluate(h.addr(), &reordered);
+    assert_eq!(s3, 200);
+    assert_eq!(third, first);
+    assert_eq!(metrics_counter(h.addr(), "daemon.cache.hits"), 2.0);
+    assert_eq!(
+        metrics_counter(h.addr(), "daemon.evaluate.ok"),
+        1.0,
+        "only the first request may reach the optimizer"
+    );
+    h.stop().unwrap();
+}
+
+/// The trace seen by a capture stays worker-count independent and a cache
+/// hit records no second optimizer span (in-process service, no socket:
+/// `obs` captures are thread-scoped).
+#[test]
+fn cache_hit_records_no_second_optimizer_span() {
+    let svc = Service::new(&ServiceConfig { workers: 2, ..ServiceConfig::default() });
+    let text = read_scenario("llm_dgx.json");
+    let sess = obs::start_capture();
+    let r1 = svc.evaluate(text.as_bytes());
+    let r2 = svc.evaluate(text.as_bytes());
+    let cap = obs::finish_capture(sess);
+    assert_eq!((r1.status, r2.status), (200, 200));
+    assert_eq!(r2.body, r1.body);
+    let tree = cap.structure();
+    let optimizer_spans = tree.matches("scenario.evaluate").count();
+    assert_eq!(optimizer_spans, 1, "cache hit must not re-run the optimizer:\n{tree}");
+    assert_eq!(svc.metrics().counter_value("daemon.cache.hits"), 1);
+}
+
+#[test]
+fn lint_failing_scenario_is_422_with_diagnostics() {
+    let h = start_default_server();
+    let bad = read_scenario("bad/s001_negative_bandwidth.json");
+    let (status, body) = post_evaluate(h.addr(), &bad);
+    assert_eq!(status, 422, "body: {body}");
+    let j = Json::parse(&body).expect("422 body is json");
+    assert_eq!(j.get("error").and_then(|v| v.as_str()), Some("scenario fails lint"));
+    assert!(body.contains("DF-S001"), "diagnostic code missing from: {body}");
+    assert_eq!(metrics_counter(h.addr(), "daemon.evaluate.lint_rejected"), 1.0);
+    h.stop().unwrap();
+}
+
+/// A gate the injected evaluators block on, plus a counter of evaluations
+/// that have started (so tests can sequence deterministically).
+struct Gate {
+    state: Mutex<(usize, bool)>, // (started, open)
+    cv: Condvar,
+}
+
+impl Gate {
+    fn new() -> Arc<Gate> {
+        Arc::new(Gate { state: Mutex::new((0, false)), cv: Condvar::new() })
+    }
+
+    /// Called by the evaluator: registers the start, then blocks until open.
+    fn enter(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.0 += 1;
+        self.cv.notify_all();
+        while !st.1 {
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    fn wait_started(&self, n: usize) {
+        let mut st = self.state.lock().unwrap();
+        while st.0 < n {
+            let (guard, timeout) =
+                self.cv.wait_timeout(st, Duration::from_secs(30)).unwrap();
+            st = guard;
+            assert!(!timeout.timed_out(), "evaluator never started");
+        }
+    }
+
+    fn open(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.1 = true;
+        self.cv.notify_all();
+    }
+}
+
+fn gated_server(workers: usize, queue_cap: usize) -> (dfmodel::daemon::Handle, Arc<Gate>) {
+    let gate = Gate::new();
+    let g = Arc::clone(&gate);
+    let svc = Service::with_evaluator(
+        &ServiceConfig {
+            workers,
+            queue_cap,
+            cache_entries: 0, // every request must reach the evaluator
+            timeout: Duration::from_secs(60),
+        },
+        Arc::new(move |_j: &Json| {
+            g.enter();
+            Ok("{\"done\": true}".to_string())
+        }),
+    );
+    let cfg = test_config(ServiceConfig::default());
+    let h = Server::bind_with(&cfg, svc).expect("bind").start().expect("start");
+    (h, gate)
+}
+
+#[test]
+fn full_queue_rejects_with_429() {
+    let (h, gate) = gated_server(1, 1);
+    let addr = h.addr();
+    // A occupies the single worker...
+    let a = std::thread::spawn(move || post_evaluate(addr, r#"{"lint": false, "req": "a"}"#));
+    gate.wait_started(1);
+    // ...B fills the queue (poll the submitted counter until it is in)...
+    let b = std::thread::spawn(move || post_evaluate(addr, r#"{"lint": false, "req": "b"}"#));
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while metrics_counter(addr, "daemon.evaluate.submitted") < 2.0 {
+        assert!(Instant::now() < deadline, "second request never queued");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // ...so C must bounce with 429
+    let (status, body) = post_evaluate(addr, r#"{"lint": false, "req": "c"}"#);
+    assert_eq!(status, 429, "body: {body}");
+    assert!(metrics_counter(addr, "daemon.rejected.queue_full") >= 1.0);
+    gate.open();
+    assert_eq!(a.join().unwrap().0, 200);
+    assert_eq!(b.join().unwrap().0, 200);
+    h.stop().unwrap();
+}
+
+#[test]
+fn slow_evaluation_times_out_with_503() {
+    let svc = Service::with_evaluator(
+        &ServiceConfig {
+            workers: 1,
+            queue_cap: 4,
+            cache_entries: 0,
+            timeout: Duration::from_millis(50),
+        },
+        // sleeps through the deadline but finishes on its own, so shutdown
+        // never hangs on the orphaned job
+        Arc::new(|_j: &Json| {
+            std::thread::sleep(Duration::from_millis(300));
+            Ok("{}".to_string())
+        }),
+    );
+    let h = Server::bind_with(&test_config(ServiceConfig::default()), svc)
+        .expect("bind")
+        .start()
+        .expect("start");
+    let (status, body) = post_evaluate(h.addr(), r#"{"lint": false}"#);
+    assert_eq!(status, 503, "body: {body}");
+    assert_eq!(metrics_counter(h.addr(), "daemon.rejected.timeout"), 1.0);
+    h.stop().unwrap();
+}
+
+/// Graceful shutdown: stop() refuses new connections but the in-flight
+/// request completes with 200 before the server exits.
+#[test]
+fn shutdown_drains_in_flight_requests() {
+    let (h, gate) = gated_server(1, 4);
+    let addr = h.addr();
+    let inflight =
+        std::thread::spawn(move || post_evaluate(addr, r#"{"lint": false, "req": "slow"}"#));
+    gate.wait_started(1);
+    // stop while the request is still running; stop() must block on the drain
+    let stopper = std::thread::spawn(move || h.stop());
+    std::thread::sleep(Duration::from_millis(100));
+    assert!(!stopper.is_finished(), "stop() must wait for the in-flight request");
+    gate.open();
+    let (status, body) = inflight.join().unwrap();
+    assert_eq!((status, body.as_str()), (200, "{\"done\": true}"));
+    stopper.join().unwrap().expect("clean shutdown");
+    // the listener is gone: new connections are refused
+    let refused = std::net::TcpStream::connect_timeout(&addr, Duration::from_millis(500));
+    assert!(refused.is_err(), "listener must be closed after stop()");
+}
+
+#[test]
+fn oversized_body_is_413() {
+    let cfg = Config {
+        max_body: 64,
+        ..test_config(ServiceConfig { workers: 1, ..ServiceConfig::default() })
+    };
+    let h = Server::bind(&cfg).expect("bind").start().expect("start");
+    let big = format!(r#"{{"lint": false, "pad": "{}"}}"#, "x".repeat(256));
+    let (status, body) = post_evaluate(h.addr(), &big);
+    assert_eq!(status, 413, "body: {body}");
+    h.stop().unwrap();
+}
+
+#[test]
+fn metrics_text_mirrors_the_obs_format() {
+    let h = start_default_server();
+    let (status, _) = http::roundtrip(h.addr(), "GET", "/v1/health", None).unwrap();
+    assert_eq!(status, 200);
+    let text = read_scenario("llm_dgx.json");
+    post_evaluate(h.addr(), &text);
+    let (status, body) = http::roundtrip(h.addr(), "GET", "/v1/metrics", None).unwrap();
+    assert_eq!(status, 200);
+    assert!(body.starts_with("stats    : "), "got: {body}");
+    assert!(body.contains("  daemon.evaluate.requests = 1"), "got: {body}");
+    assert!(body.contains("daemon.evaluate.latency_seconds: n=1"), "got: {body}");
+    h.stop().unwrap();
+}

@@ -287,6 +287,45 @@ fn fixed_size_workloads_alias_across_the_batch_axis() {
     assert_eq!(out.point_batches, vec![None, None]);
 }
 
+/// Pin for the memo-cache extraction into `util::lru`: a point served from
+/// the cache must be bitwise identical to the same system evaluated fresh
+/// in a run with no aliasing (no cache hits at all), and repeated runs of
+/// the memoized sweep must agree bit for bit.
+#[test]
+fn memo_cache_output_is_bitwise_identical_to_fresh_evaluation() {
+    let aliased = SearchSpace {
+        chips: vec![ChipCfg::named("sn30")],
+        mems: vec![MemCfg::named("hbm3")],
+        links: vec!["nvlink4".into()],
+        topologies: vec!["ring".into()],
+        // batch override equal to the workload batch → one eval + one hit
+        batches: vec![None, Some(32.0)],
+        ..small_space()
+    };
+    let fresh_space = SearchSpace { batches: vec![None], ..aliased.clone() };
+
+    let hit = explore(&aliased, &ExploreSettings::exhaustive()).unwrap();
+    assert_eq!((hit.evaluated, hit.cache_hits), (1, 2 - 1));
+    let fresh = explore(&fresh_space, &ExploreSettings::exhaustive()).unwrap();
+    assert_eq!((fresh.evaluated, fresh.cache_hits), (1, 0));
+
+    // both the evaluated and the cache-served point match the cache-free run
+    let p = &fresh.points[0];
+    for q in &hit.points {
+        assert_eq!(q.utilization.to_bits(), p.utilization.to_bits());
+        assert_eq!(q.cost_eff.to_bits(), p.cost_eff.to_bits());
+        assert_eq!(q.power_eff.to_bits(), p.power_eff.to_bits());
+        assert_eq!(q.achieved_flops.to_bits(), p.achieved_flops.to_bits());
+    }
+
+    // and the memoized sweep is reproducible bit for bit
+    let again = explore(&aliased, &ExploreSettings::exhaustive()).unwrap();
+    assert_eq!(again.frontier, hit.frontier);
+    for i in 0..hit.points.len() {
+        assert_eq!(point_key(&hit, i), point_key(&again, i));
+    }
+}
+
 #[test]
 fn scenario_explore_roundtrips_and_reports() {
     let opts = ExploreOptions {
