@@ -1,0 +1,909 @@
+#!/usr/bin/env python3
+"""Python mirror of rust/src/cluster/ at the PR-10 refactor — the validation
+harness the Rust rewrite's numerics were developed against (run directly:
+`python3 mirror_cluster.py`; it is not a pytest module).
+
+Mirrors the seeded PRNG (xoshiro256**), the workload generators, the
+analytical serving oracle, the PR-2 BinaryHeap engine, and the PR-10
+calendar-queue/arena/streaming engine, and validates:
+  1. calendar-queue pop order is bit-identical to the binary heap's
+     (time, seq) order on seeded random streams, including timestamp ties
+  2. the new lazy-arrival engine reproduces the old engine's per-request
+     metrics, event/step counts, KV peak, and makespan BITWISE on Poisson,
+     bursty, multi-replica, and oversized-reject traces
+  3. P2 streaming quantile estimates land within the documented tolerance
+     of exact percentiles on exponential / log-normal / bursty-sim samples
+     (5% relative at p50/p95, 10% at p99, exact for n <= 5)
+  4. the rustdoc-example constants (P2 median of 1..=1001) hold
+  5. fleet mode: R replicas at R*rate behave like 1 replica at rate
+     (mean TPOT within 10%), and arena peak occupancy stays O(in-flight),
+     independent of request count
+"""
+import heapq
+import math
+
+MASK = (1 << 64) - 1
+
+# ---------------------------------------------------------------- util::prng
+
+
+class Rng:
+    """xoshiro256** with SplitMix64 seeding (mirror of util::prng::Rng)."""
+
+    def __init__(self, seed):
+        x = (seed + 0x9E3779B97F4A7C15) & MASK
+        s = []
+        for _ in range(4):
+            x = (x + 0x9E3779B97F4A7C15) & MASK
+            z = x
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+            s.append(z ^ (z >> 31))
+        self.s = s
+
+    def next_u64(self):
+        s = self.s
+        r = (self._rotl((s[1] * 5) & MASK, 7) * 9) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = self._rotl(s[3], 45)
+        return r
+
+    @staticmethod
+    def _rotl(x, k):
+        return ((x << k) | (x >> (64 - k))) & MASK
+
+    def f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def normal(self):
+        u1 = max(self.f64(), 2.2250738585072014e-308)
+        u2 = self.f64()
+        return math.sqrt(-2.0 * math.log(u1)) * math.cos(2.0 * math.pi * u2)
+
+    def exp(self, lam):
+        return -math.log(1.0 - self.f64()) / lam
+
+    def lognormal_mean(self, mean, sigma):
+        mu = math.log(mean) - 0.5 * sigma * sigma
+        return math.exp(mu + sigma * self.normal())
+
+
+def round_half_away(v):
+    """Rust f64::round (half away from zero) for non-negative v."""
+    return math.floor(v + 0.5)
+
+
+# ---------------------------------------------------------- cluster::workload
+
+
+class Poisson:
+    def __init__(self, rate):
+        self.rate = rate
+
+    def rate_at(self, t):
+        return self.rate
+
+    def peak(self):
+        return self.rate
+
+
+class Bursty:
+    def __init__(self, base, peak, period):
+        self.base, self.pk, self.period = base, peak, period
+
+    def rate_at(self, t):
+        return self.base + (self.pk - self.base) * 0.5 * (
+            1.0 + math.sin(2.0 * math.pi * t / self.period)
+        )
+
+    def peak(self):
+        return self.pk
+
+
+def next_after(arr, t, rng):
+    lmax = arr.peak()
+    while True:
+        t += rng.exp(lmax)
+        if rng.f64() * lmax <= arr.rate_at(t):
+            return t
+
+
+class LengthDist:
+    def __init__(self, mean, sigma, lo, hi):
+        self.mean, self.sigma, self.lo, self.hi = mean, sigma, lo, hi
+
+    def sample(self, rng):
+        v = rng.lognormal_mean(self.mean, self.sigma)
+        return min(max(round_half_away(v), max(self.lo, 1)), self.hi)
+
+
+class TraceSpec:
+    def __init__(self, seed, n, arrivals, prompt, output):
+        self.seed, self.n, self.arrivals = seed, n, arrivals
+        self.prompt, self.output = prompt, output
+
+    @staticmethod
+    def poisson(seed, rate, n):
+        return TraceSpec(
+            seed, n, Poisson(rate),
+            LengthDist(1024.0, 0.4, 16, 8192), LengthDist(128.0, 0.6, 2, 2048),
+        )
+
+    def stream(self):
+        rng = Rng(self.seed)
+        t = 0.0
+        for i in range(self.n):
+            t = next_after(self.arrivals, t, rng)
+            yield (i, t, self.prompt.sample(rng), self.output.sample(rng))
+
+    def generate(self):
+        return list(self.stream())
+
+
+# ------------------------------------------------------------------- serving
+
+TFLOPS = 1e12
+GB = 1e9
+
+LLAMA8B = dict(layers=32, d_model=4096.0, n_heads=32.0, n_kv_heads=8.0,
+               d_ff=14336.0, vocab=128256.0, dtype=2.0)
+LLAMA70B = dict(layers=80, d_model=8192.0, n_heads=64.0, n_kv_heads=8.0,
+                d_ff=28672.0, vocab=128256.0, dtype=2.0)
+
+
+def params_per_layer(m):
+    kv_dim = m["n_kv_heads"] * m["d_model"] / m["n_heads"]
+    return (2.0 * m["d_model"] ** 2 + 2.0 * m["d_model"] * kv_dim
+            + 3.0 * m["d_model"] * m["d_ff"])
+
+
+def params(m):
+    return m["layers"] * params_per_layer(m) + 2.0 * m["vocab"] * m["d_model"]
+
+
+def weight_bytes(m):
+    return params(m) * m["dtype"]
+
+
+def kv_bytes_per_token(m):
+    head = m["d_model"] / m["n_heads"]
+    return 2.0 * m["layers"] * m["n_kv_heads"] * head * m["dtype"]
+
+
+SN40L_X16 = dict(flops=640.0 * TFLOPS, mem_bw=1.6e12, mem_cap=64.0 * GB,
+                 link_bw=25.0 * GB, link_lat=150e-9, n_chips=16)
+
+PREFILL_EFF = 0.8
+
+
+def evaluate(model, sys, tp, pp, batch, prompt_len, context):
+    """Mirror of serving::evaluate. Returns (ttft, tpot) or None."""
+    if tp <= 0 or pp <= 0 or tp * pp != sys["n_chips"]:
+        return None
+    layers = float(model["layers"])
+    lps = math.ceil(layers / pp)
+    tokens = batch * prompt_len
+    flops_layer = (2.0 * params_per_layer(model) * tokens / tp
+                   + 4.0 * prompt_len * model["d_model"] * tokens / tp)
+    t_comp = flops_layer / (sys["flops"] * PREFILL_EFF)
+    w_layer_chip = params_per_layer(model) * model["dtype"] / tp
+    t_mem = w_layer_chip / sys["mem_bw"]
+    ar_bytes = tokens * model["d_model"] * model["dtype"]
+    t_net = 0.0
+    if tp > 1:
+        t_net = 2.0 * (2.0 * (tp - 1.0) / tp * ar_bytes / sys["link_bw"]
+                       + 2.0 * (tp - 1.0) * sys["link_lat"])
+    t_layer = max(t_comp, t_mem, t_net)
+    p2p = (tokens * model["d_model"] * model["dtype"] / tp / sys["link_bw"]
+           + sys["link_lat"])
+    ttft = layers * t_layer + (pp - 1.0) * p2p
+
+    w_stage = params_per_layer(model) * lps * model["dtype"] / tp
+    kv_stage = batch * context * kv_bytes_per_token(model) * lps / layers / tp
+    t_mem_stage = (w_stage + kv_stage) / sys["mem_bw"]
+    dec_flops = 2.0 * params_per_layer(model) * lps * batch / tp
+    t_comp_stage = dec_flops / (sys["flops"] * 0.3)
+    ar_dec = batch * model["d_model"] * model["dtype"]
+    t_net_stage = 0.0
+    if tp > 1:
+        t_net_stage = lps * 2.0 * (
+            2.0 * (tp - 1.0) / tp * ar_dec / sys["link_bw"]
+            + 2.0 * (tp - 1.0) * sys["link_lat"])
+    t_stage = max(t_mem_stage, t_comp_stage) + t_net_stage + (p2p if pp > 1 else 0.0)
+    tpot = pp * t_stage
+    return ttft, tpot
+
+
+# --------------------------------------------------- engine shared plumbing
+
+
+class Cfg:
+    def __init__(self, model, sys, tp, pp, max_batch=32, kv_headroom=0.9):
+        self.model, self.sys = model, sys
+        self.tp, self.pp = tp, pp
+        self.max_batch, self.kv_headroom = max_batch, kv_headroom
+
+    def kv_budget(self):
+        free = self.sys["mem_cap"] * self.sys["n_chips"] - weight_bytes(self.model)
+        return free * self.kv_headroom if free > 0.0 else None
+
+    def point(self, batch, prompt_len, context):
+        return evaluate(self.model, self.sys, self.tp, self.pp, batch,
+                        prompt_len, context)
+
+
+def exact_percentiles(samples):
+    if not samples:
+        return (0.0, 0.0, 0.0, 0.0)
+    s = sorted(samples)
+    mean = math.fsum(s) / len(s)  # see note: Rust sums naively; fsum only
+    # changes the mean by ULPs, irrelevant at the tolerances checked here
+    at = lambda p: s[int(round_half_away(p * (len(s) - 1)))]
+    return (mean, at(0.50), at(0.95), at(0.99))
+
+
+# --------------------------------------------------------- OLD (PR-2) engine
+
+
+def simulate_old(cfg, replicas, requests, slo):
+    """Faithful mirror of the PR-2 BinaryHeap engine."""
+    budget = cfg.kv_budget()
+    kv_tok = kv_bytes_per_token(cfg.model)
+    heap = []  # (t, seq, kind, payload); heapq pops min (t, seq)
+    seq = 0
+    for i, r in enumerate(requests):
+        heapq.heappush(heap, (r[1], seq, "arr", i))
+        seq += 1
+    reps = [dict(queue=[], running=[], pending=[], kv=0.0, resident=0,
+                 current=None) for _ in range(replicas)]
+    st = [dict(gen=0, kv=0.0, adm=None, first=None, fin=None, rej=False)
+          for _ in requests]
+    events = steps = 0
+    kv_peak = now = 0.0
+    order = []  # processed event log, for the bitwise comparison
+
+    def start_step(ri, t):
+        nonlocal seq, steps, kv_peak
+        rep = reps[ri]
+        if rep["current"] is not None:
+            return
+        while True:
+            if len(rep["running"]) + len(rep["pending"]) >= cfg.max_batch:
+                break
+            if not rep["queue"]:
+                break
+            i = rep["queue"][0]
+            need = (requests[i][2] + requests[i][3]) * kv_tok
+            if rep["kv"] + need > budget:
+                break
+            rep["queue"].pop(0)
+            rep["kv"] += need
+            rep["pending"].append(i)
+            st[i]["kv"] = need
+            st[i]["adm"] = t
+        kv_peak = max(kv_peak, rep["kv"])
+        if rep["pending"]:
+            members = rep["pending"]
+            rep["pending"] = []
+            batch = float(len(members))
+            prompt = float(max(requests[i][2] for i in members))
+            dt = cfg.point(batch, prompt, prompt)[0]
+            rep["current"] = ("prefill", members)
+        elif rep["running"]:
+            members = list(rep["running"])
+            batch = float(len(members))
+            ctx = sum(requests[i][2] + st[i]["gen"] for i in members) / batch
+            dt = cfg.point(batch, 1.0, ctx)[1]
+            rep["current"] = ("decode", members)
+        else:
+            return
+        steps += 1
+        heapq.heappush(heap, (t + dt, seq, "done", ri))
+        seq += 1
+
+    def finish(ri, i, t):
+        st[i]["fin"] = t
+        reps[ri]["kv"] -= st[i]["kv"]
+        reps[ri]["resident"] -= 1
+
+    while heap:
+        t, _, kind, payload = heapq.heappop(heap)
+        events += 1
+        now = t
+        order.append((t, kind, payload))
+        if kind == "arr":
+            i = payload
+            need = (requests[i][2] + requests[i][3]) * kv_tok
+            if need > budget:
+                st[i]["rej"] = True
+                continue
+            ri = min(range(replicas), key=lambda r: (reps[r]["resident"], r))
+            reps[ri]["resident"] += 1
+            reps[ri]["queue"].append(i)
+            start_step(ri, t)
+        else:
+            ri = payload
+            k, members = reps[ri]["current"]
+            reps[ri]["current"] = None
+            if k == "prefill":
+                for i in members:
+                    st[i]["first"] = t
+                    st[i]["gen"] = 1
+                    if st[i]["gen"] >= requests[i][3]:
+                        finish(ri, i, t)
+                    else:
+                        reps[ri]["running"].append(i)
+            else:
+                still = []
+                for i in members:
+                    st[i]["gen"] += 1
+                    if st[i]["gen"] >= requests[i][3]:
+                        finish(ri, i, t)
+                    else:
+                        still.append(i)
+                reps[ri]["running"] = still
+            start_step(ri, t)
+
+    per, q, tt, tp = [], [], [], []
+    good = rejected = 0
+    tokens = 0.0
+    for i, r in enumerate(requests):
+        s = st[i]
+        if s["rej"]:
+            rejected += 1
+            continue
+        if s["first"] is None or s["fin"] is None or s["adm"] is None:
+            continue
+        ttft = s["first"] - r[1]
+        tpot = (s["fin"] - s["first"]) / (r[3] - 1) if r[3] > 1 else 0.0
+        q.append(s["adm"] - r[1])
+        tt.append(ttft)
+        if r[3] > 1:
+            tp.append(tpot)
+        tokens += r[3]
+        if ttft <= slo[0] and (r[3] <= 1 or tpot <= slo[1]):
+            good += 1
+        per.append((r[0], s["adm"] - r[1], ttft, tpot, s["fin"] - r[1], r[3]))
+    makespan = max(now, 1e-30)
+    return dict(per=per, q=q, tt=tt, tp=tp, good=good, tokens=tokens,
+                rejected=rejected, events=events, steps=steps,
+                kv_peak=kv_peak, makespan=makespan, order=order)
+
+
+# ------------------------------------------------- NEW (PR-10) calendar queue
+
+
+class CalendarQueue:
+    """Mirror of cluster::calendar::CalendarQueue — fixed-width circular
+    buckets, lazy per-day min scan, direct-search fallback on sparse gaps."""
+
+    def __init__(self, width, min_buckets):
+        nb = 8
+        while nb < min_buckets:
+            nb *= 2
+        self.buckets = [[] for _ in range(nb)]
+        self.mask = nb - 1
+        self.width = width
+        self.day = 0
+        self.n = 0
+        self.seq = 0
+
+    def day_of(self, t):
+        return int(t / self.width)  # t >= 0, floor
+
+    def push(self, t, v):
+        d = self.day_of(t)
+        if d < self.day:  # defensive rewind; unreachable from the engine
+            self.day = d
+        self.buckets[d & self.mask].append((t, self.seq, v))
+        self.seq += 1
+        self.n += 1
+
+    def _find(self):
+        """Advance `day` to the next non-empty day; return (bucket, idx) of
+        its earliest (t, seq) entry."""
+        if self.n == 0:
+            return None
+        scanned = 0
+        while True:
+            b = self.day & self.mask
+            best = None
+            for i, e in enumerate(self.buckets[b]):
+                if self.day_of(e[0]) == self.day:
+                    if best is None or (e[0], e[1]) < (
+                        self.buckets[b][best][0], self.buckets[b][best][1]
+                    ):
+                        best = i
+            if best is not None:
+                return b, best
+            self.day += 1
+            scanned += 1
+            if scanned > len(self.buckets):
+                # every remaining entry is beyond a full calendar year of
+                # empty days: jump straight to the earliest remaining day
+                self.day = min(
+                    self.day_of(e[0]) for bk in self.buckets for e in bk
+                )
+                scanned = 0
+
+    def peek_t(self):
+        pos = self._find()
+        if pos is None:
+            return None
+        b, i = pos
+        return self.buckets[b][i][0]
+
+    def pop(self):
+        pos = self._find()
+        if pos is None:
+            return None
+        b, i = pos
+        e = self.buckets[b][i]
+        last = self.buckets[b].pop()  # swap_remove
+        if i < len(self.buckets[b]):
+            self.buckets[b][i] = last
+        self.n -= 1
+        return e[0], e[2]
+
+
+# --------------------------------------------------------- NEW (PR-10) engine
+
+
+def simulate_new(cfg, replicas, source, slo, n_hint=None):
+    """Mirror of the PR-10 lazy-arrival calendar-queue engine.
+    `source` is an iterator of (id, arrival, prompt, output)."""
+    budget = cfg.kv_budget()
+    kv_tok = kv_bytes_per_token(cfg.model)
+    probe = cfg.point(1.0, 1.0, 1.0)
+    width = max(probe[1], 1e-9)  # batch-1 decode step = finest event grain
+    cq = CalendarQueue(width, 2 * replicas)
+    reps = [dict(queue=[], running=[], pending=[], stepping=[], kv=0.0,
+                 resident=0, in_step=None) for _ in range(replicas)]
+    pool = {}  # arena mirror: handle -> state
+    free = []
+    next_slot = 0
+    live = peak = 0
+    events = steps = 0
+    kv_peak = now = 0.0
+    offered = rejected = 0
+    order = []
+    per, q, tt, tp = [], [], [], []
+    good = 0
+    tokens = 0.0
+    completed = 0
+
+    def alloc(state):
+        nonlocal next_slot, live, peak
+        h = free.pop() if free else next_slot
+        if h == next_slot:
+            next_slot += 1
+        pool[h] = state
+        live += 1
+        peak = max(peak, live)
+        return h
+
+    def release(h):
+        nonlocal live
+        s = pool.pop(h)
+        free.append(h)
+        live -= 1
+        return s
+
+    def record(s, t):
+        nonlocal good, tokens, completed
+        queue_time = s["adm"] - s["arrival"]
+        ttft = s["first"] - s["arrival"]
+        tpot = (t - s["first"]) / (s["output"] - 1) if s["output"] > 1 else 0.0
+        completed += 1
+        tokens += s["output"]
+        if ttft <= slo[0] and (s["output"] <= 1 or tpot <= slo[1]):
+            good += 1
+        q.append(queue_time)
+        tt.append(ttft)
+        if s["output"] > 1:
+            tp.append(tpot)
+        per.append((s["id"], queue_time, ttft, tpot, t - s["arrival"],
+                    s["output"]))
+
+    def start_step(ri, t):
+        nonlocal steps, kv_peak
+        rep = reps[ri]
+        if rep["in_step"] is not None:
+            return
+        while True:
+            if len(rep["running"]) + len(rep["pending"]) >= cfg.max_batch:
+                break
+            if not rep["queue"]:
+                break
+            h = rep["queue"][0]
+            s = pool[h]
+            need = (s["prompt"] + s["output"]) * kv_tok
+            if rep["kv"] + need > budget:
+                break
+            rep["queue"].pop(0)
+            rep["kv"] += need
+            rep["pending"].append(h)
+            s["kv"] = need
+            s["adm"] = t
+        kv_peak = max(kv_peak, rep["kv"])
+        if rep["pending"]:
+            batch = float(len(rep["pending"]))
+            prompt = float(max(pool[h]["prompt"] for h in rep["pending"]))
+            dt = cfg.point(batch, prompt, prompt)[0]
+            rep["stepping"], rep["pending"] = rep["pending"], rep["stepping"]
+            rep["in_step"] = "prefill"
+        elif rep["running"]:
+            batch = float(len(rep["running"]))
+            ctx = sum(pool[h]["prompt"] + pool[h]["gen"]
+                      for h in rep["running"]) / batch
+            dt = cfg.point(batch, 1.0, ctx)[1]
+            rep["in_step"] = "decode"
+        else:
+            return
+        steps += 1
+        cq.push(t + dt, ri)
+
+    def step_done(ri, t):
+        rep = reps[ri]
+        kind = rep["in_step"]
+        rep["in_step"] = None
+        freed = 0.0
+        done = 0
+        if kind == "prefill":
+            for h in rep["stepping"]:
+                s = pool[h]
+                s["first"] = t
+                s["gen"] = 1
+                if s["gen"] >= s["output"]:
+                    s = release(h)
+                    freed += s["kv"]
+                    done += 1
+                    record(s, t)
+                else:
+                    rep["running"].append(h)
+            rep["stepping"].clear()
+        else:
+            still = []
+            for h in rep["running"]:
+                s = pool[h]
+                s["gen"] += 1
+                if s["gen"] >= s["output"]:
+                    s = release(h)
+                    freed += s["kv"]
+                    done += 1
+                    record(s, t)
+                else:
+                    still.append(h)
+            rep["running"][:] = still
+        rep["kv"] -= freed
+        rep["resident"] -= done
+        start_step(ri, t)
+
+    pending_arrival = next(source, None)
+    while True:
+        qt = cq.peek_t()
+        if pending_arrival is not None and (qt is None or pending_arrival[1] <= qt):
+            rid, t, prompt, output = pending_arrival
+            pending_arrival = next(source, None)
+            events += 1
+            now = t
+            offered += 1
+            order.append((t, "arr", rid))
+            need = (prompt + output) * kv_tok
+            if need > budget:
+                rejected += 1
+                continue
+            h = alloc(dict(id=rid, arrival=t, prompt=prompt, output=output,
+                           gen=0, kv=0.0, adm=None, first=None))
+            ri = min(range(replicas), key=lambda r: (reps[r]["resident"], r))
+            reps[ri]["resident"] += 1
+            reps[ri]["queue"].append(h)
+            start_step(ri, t)
+        elif qt is not None:
+            t, ri = cq.pop()
+            events += 1
+            now = t
+            order.append((t, "done", ri))
+            step_done(ri, t)
+        else:
+            break
+
+    per.sort(key=lambda m: m[0])
+    makespan = max(now, 1e-30)
+    return dict(per=per, q=q, tt=tt, tp=tp, good=good, tokens=tokens,
+                rejected=rejected, events=events, steps=steps,
+                kv_peak=kv_peak, makespan=makespan, order=order,
+                peak_in_flight=peak, completed=completed, offered=offered)
+
+
+# ------------------------------------------------------------- P2 estimator
+
+
+class P2Quantile:
+    """Jain & Chlamtac P2: single-quantile streaming estimator, 5 markers."""
+
+    def __init__(self, p):
+        self.p = p
+        self.q = []
+        self.n = [1.0, 2.0, 3.0, 4.0, 5.0]
+        self.np = [1.0, 1.0 + 2.0 * p, 1.0 + 4.0 * p, 3.0 + 2.0 * p, 5.0]
+        self.dn = [0.0, p / 2.0, p, (1.0 + p) / 2.0, 1.0]
+        self.count = 0
+
+    def observe(self, x):
+        self.count += 1
+        if self.count <= 5:
+            self.q.append(x)
+            self.q.sort()
+            return
+        q, n = self.q, self.n
+        if x < q[0]:
+            q[0] = x
+            k = 0
+        elif x >= q[4]:
+            if x > q[4]:
+                q[4] = x
+            k = 3
+        else:
+            k = 0
+            while x >= q[k + 1]:
+                k += 1
+        for i in range(k + 1, 5):
+            n[i] += 1.0
+        for i in range(5):
+            self.np[i] += self.dn[i]
+        for i in range(1, 4):
+            d = self.np[i] - n[i]
+            if (d >= 1.0 and n[i + 1] - n[i] > 1.0) or (
+                d <= -1.0 and n[i - 1] - n[i] < -1.0
+            ):
+                ds = 1.0 if d > 0.0 else -1.0
+                qp = q[i] + ds / (n[i + 1] - n[i - 1]) * (
+                    (n[i] - n[i - 1] + ds) * (q[i + 1] - q[i]) / (n[i + 1] - n[i])
+                    + (n[i + 1] - n[i] - ds) * (q[i] - q[i - 1]) / (n[i] - n[i - 1])
+                )
+                if q[i - 1] < qp < q[i + 1]:
+                    q[i] = qp
+                else:
+                    j = i + (1 if ds > 0.0 else -1)
+                    q[i] = q[i] + ds * (q[j] - q[i]) / (n[j] - n[i])
+                n[i] += ds
+
+    def estimate(self):
+        if self.count == 0:
+            return 0.0
+        if self.count <= 5:
+            s = sorted(self.q)
+            return s[int(round_half_away(self.p * (len(s) - 1)))]
+        return self.q[2]
+
+
+class StreamingPcts:
+    def __init__(self):
+        self.count = 0
+        self.total = 0.0
+        self.p50 = P2Quantile(0.50)
+        self.p95 = P2Quantile(0.95)
+        self.p99 = P2Quantile(0.99)
+
+    def observe(self, x):
+        self.count += 1
+        self.total += x
+        self.p50.observe(x)
+        self.p95.observe(x)
+        self.p99.observe(x)
+
+    def pcts(self):
+        if self.count == 0:
+            return (0.0, 0.0, 0.0, 0.0)
+        return (self.total / self.count, self.p50.estimate(),
+                self.p95.estimate(), self.p99.estimate())
+
+
+# ------------------------------------------------------------------- checks
+
+FAIL = []
+
+
+def check(name, ok, detail=""):
+    tag = "ok  " if ok else "FAIL"
+    print(f"  {tag} {name} {detail}")
+    if not ok:
+        FAIL.append(name)
+
+
+def check_calendar_vs_heap():
+    print("[1] calendar queue == binary heap order")
+    for seed in (1, 7, 42):
+        rng = Rng(seed)
+        cq = CalendarQueue(0.001, 8)
+        heap = []
+        hseq = 0
+        got, want = [], []
+        t = 0.0
+        last_t = 0.0
+        # interleaved pushes and pops, with deliberate duplicate timestamps
+        for _ in range(5000):
+            r = rng.f64()
+            if r < 0.6 or not heap:
+                if rng.f64() < 0.1 and hseq > 0:
+                    tt = last_t  # exact duplicate: FIFO tie-break exercised
+                else:
+                    t += rng.exp(3.0)
+                    tt = t + rng.exp(0.5)
+                last_t = tt
+                v = hseq
+                cq.push(tt, v)
+                heapq.heappush(heap, (tt, hseq, v))
+                hseq += 1
+            else:
+                got.append(cq.pop())
+                w = heapq.heappop(heap)
+                want.append((w[0], w[2]))
+        while heap:
+            got.append(cq.pop())
+            w = heapq.heappop(heap)
+            want.append((w[0], w[2]))
+        check(f"seed {seed}: {len(want)} pops identical", got == want)
+
+
+def results_equal(a, b):
+    # q/tt/tp accumulate in id order (old) vs completion order (new); the
+    # exact path sorts before summarizing, so compare them sorted — every
+    # other field, including per-request metrics, must match bitwise.
+    keys = ["per", "good", "tokens", "rejected", "events", "steps",
+            "kv_peak", "makespan"]
+    return all(a[k] == b[k] for k in keys) and all(
+        sorted(a[k]) == sorted(b[k]) for k in ("q", "tt", "tp")
+    )
+
+
+def check_old_vs_new():
+    print("[2] new engine == old engine (bitwise)")
+    cfg8 = Cfg(LLAMA8B, SN40L_X16, 16, 1)
+    slo = (1.0, 0.02)
+    cases = [
+        ("poisson r4 n120 1rep", TraceSpec.poisson(2, 4.0, 120), 1),
+        ("poisson r30 n200 4rep", TraceSpec.poisson(6, 30.0, 200), 4),
+        ("poisson r40 n500 1rep saturated", TraceSpec.poisson(7, 40.0, 500), 1),
+        ("bursty n300 2rep",
+         TraceSpec(5, 300, Bursty(2.0, 14.0, 30.0),
+                   LengthDist(1024.0, 0.4, 16, 8192),
+                   LengthDist(128.0, 0.6, 2, 2048)), 2),
+    ]
+    for name, spec, reps in cases:
+        reqs = spec.generate()
+        old = simulate_old(cfg8, reps, reqs, slo)
+        new = simulate_new(cfg8, reps, iter(reqs), slo)
+        check(name, results_equal(old, new) and old["order"] == new["order"],
+              f"(events {old['events']} vs {new['events']})")
+    # oversized reject
+    reqs = TraceSpec.poisson(4, 2.0, 20).generate()
+    reqs[5] = (reqs[5][0], reqs[5][1], 80_000_000, reqs[5][3])
+    old = simulate_old(cfg8, 1, reqs, slo)
+    new = simulate_new(cfg8, 1, iter(reqs), slo)
+    check("oversized reject", results_equal(old, new)
+          and new["rejected"] == 1 and new["completed"] == 19)
+
+
+def rel_errs(samples):
+    ex = exact_percentiles(samples)
+    sp = StreamingPcts()
+    for x in samples:
+        sp.observe(x)
+    est = sp.pcts()
+    return [abs(e - x) / abs(x) if x else abs(e - x)
+            for e, x in zip(est, ex)]
+
+
+def check_p2_tolerance():
+    print("[3] P2 vs exact percentiles (documented tolerance)")
+    # smooth unimodal streams: the documented 5% (p50/p95) / 10% (p99) band
+    worst = [0.0] * 4
+    for seed in range(10):
+        rng = Rng(100 + seed)
+        expo = [rng.exp(2.0) for _ in range(20000)]
+        logn = [rng.lognormal_mean(0.3, 0.6) for _ in range(20000)]
+        for s in (expo, logn):
+            e = rel_errs(s)
+            worst = [max(w, x) for w, x in zip(worst, e)]
+    print(f"       smooth worst rel err: mean {worst[0]:.4f} p50 "
+          f"{worst[1]:.4f} p95 {worst[2]:.4f} p99 {worst[3]:.4f}")
+    check("smooth mean exact-ish", worst[0] < 1e-9)
+    check("smooth p50 within 5%", worst[1] < 0.05)
+    check("smooth p95 within 5%", worst[2] < 0.05)
+    check("smooth p99 within 10%", worst[3] < 0.10)
+    # bursty saturated sim: queue delay is strongly bimodal (burst crests vs
+    # idle troughs) — the documented hard case where P2 degrades and
+    # exact_percentiles is the right knob. Pin the degraded band too.
+    cfg8 = Cfg(LLAMA8B, SN40L_X16, 16, 1)
+    spec = TraceSpec(11, 4000, Bursty(2.0, 16.0, 30.0),
+                     LengthDist(1024.0, 0.4, 16, 8192),
+                     LengthDist(128.0, 0.6, 2, 2048))
+    r = simulate_new(cfg8, 1, iter(spec.generate()), (1.0, 0.02))
+    ett = rel_errs(r["tt"])
+    etp = rel_errs(r["tp"])
+    eq = rel_errs(r["q"])
+    print(f"       bursty-sim rel err: ttft {[round(x, 4) for x in ett]} "
+          f"tpot {[round(x, 4) for x in etp]} queue {[round(x, 4) for x in eq]}")
+    check("bursty ttft p95/p99 within 15%", max(ett[2], ett[3]) < 0.15)
+    check("bursty tpot within 10%", max(etp[1:]) < 0.10)
+    check("bursty queue (bimodal, worst case) within 40%", max(eq[1:]) < 0.40)
+    # tiny-n path is exact
+    sp = StreamingPcts()
+    for x in (5.0, 1.0, 4.0, 2.0):
+        sp.observe(x)
+    check("n<=5 exact", sp.pcts() == exact_percentiles([5.0, 1.0, 4.0, 2.0]))
+    z = StreamingPcts()
+    check("empty all-zero", z.pcts() == (0.0, 0.0, 0.0, 0.0))
+
+
+def check_doc_examples():
+    print("[4] rustdoc example constants")
+    p2 = P2Quantile(0.5)
+    for i in range(1, 1002):
+        p2.observe(float(i))
+    check(f"P2 median of 1..=1001 = {p2.estimate():.2f} (|err| < 20)",
+          abs(p2.estimate() - 501.0) < 20.0)
+    sp = StreamingPcts()
+    for i in range(1, 101):
+        sp.observe(float(i))
+    m = sp.pcts()
+    check(f"StreamingPcts 1..=100 mean {m[0]} p50 {m[1]:.1f}",
+          abs(m[0] - 50.5) < 1e-9 and abs(m[1] - 50.0) < 5.0)
+
+
+def check_fleet_parity():
+    print("[5] fleet mode parity + O(1) arena peak")
+    cfg8 = Cfg(LLAMA8B, SN40L_X16, 16, 1)
+    slo = (1.0, 0.02)
+    one = simulate_new(cfg8, 1, iter(TraceSpec.poisson(3, 4.0, 400).generate()), slo)
+    fleet = simulate_new(cfg8, 4, iter(TraceSpec.poisson(3, 16.0, 1600).generate()), slo)
+    t1 = math.fsum(one["tp"]) / len(one["tp"])
+    t4 = math.fsum(fleet["tp"]) / len(fleet["tp"])
+    # least-loaded dispatch de-randomizes per-replica arrivals, so per-step
+    # batches are a bit smaller than true Poisson splitting: allow 25%
+    check(f"mean TPOT 1rep@4rps {t1*1e3:.2f}ms vs 4rep@16rps {t4*1e3:.2f}ms",
+          abs(t4 / t1 - 1.0) < 0.25)
+    a1 = one["good"] / one["completed"]
+    a4 = fleet["good"] / fleet["completed"]
+    check(f"attainment {a1:.3f} vs {a4:.3f}", abs(a4 - a1) < 0.05)
+    tput1 = one["completed"] / one["makespan"]
+    tput4 = fleet["completed"] / fleet["makespan"]
+    check(f"throughput scales ~4x ({tput1:.2f} -> {tput4:.2f} rps)",
+          abs(tput4 / tput1 - 4.0) < 0.4)
+    # arena peak is O(in-flight): grows with load, not with request count
+    small = simulate_new(cfg8, 4, iter(TraceSpec.poisson(9, 32.0, 2000).generate()), slo)
+    big = simulate_new(cfg8, 4, iter(TraceSpec.poisson(9, 32.0, 20000).generate()), slo)
+    check(f"peak_in_flight {small['peak_in_flight']} (2k) vs "
+          f"{big['peak_in_flight']} (20k): request-count independent",
+          big["peak_in_flight"] < 4 * small["peak_in_flight"] + 64)
+    print(f"       (CI smoke sizing: fleet-8 @64rps peak_in_flight ~ "
+          f"{big['peak_in_flight'] * 2})")
+
+
+def check_analytical_anchor():
+    print("[6] new engine reproduces analytical TPOT at batch 1")
+    cfg8 = Cfg(LLAMA8B, SN40L_X16, 16, 1)
+    reqs = [(i, 1000.0 * (i + 1), 1024, 64) for i in range(4)]
+    r = simulate_new(cfg8, 1, iter(reqs), (10.0, 1.0))
+    mean_tpot = math.fsum(r["tp"]) / len(r["tp"])
+    mid = evaluate(LLAMA8B, SN40L_X16, 16, 1, 1.0, 1.0, 1024.0 + 32.0)[1]
+    check(f"sim {mean_tpot*1e3:.3f}ms vs analytical {mid*1e3:.3f}ms",
+          abs(mean_tpot / mid - 1.0) < 0.10)
+
+
+if __name__ == "__main__":
+    check_calendar_vs_heap()
+    check_old_vs_new()
+    check_p2_tolerance()
+    check_doc_examples()
+    check_fleet_parity()
+    check_analytical_anchor()
+    print(f"\n{'ALL CHECKS PASSED' if not FAIL else 'FAILURES: ' + ', '.join(FAIL)}")
+    raise SystemExit(1 if FAIL else 0)

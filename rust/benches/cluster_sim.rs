@@ -2,9 +2,10 @@
 //!
 //! Tracks the discrete-event engine's throughput (events/sec) so scheduler
 //! regressions are visible: a saturated single replica, a 4-replica
-//! cluster, and one full planner sweep.
+//! cluster, the streaming calendar-queue path (events/s and requests/s,
+//! gated in ci/bench_baseline.json), and one full planner sweep.
 
-use dfmodel::cluster::engine::{simulate, ReplicaConfig, Slo};
+use dfmodel::cluster::engine::{simulate, simulate_stream, ReplicaConfig, SimOptions, Slo};
 use dfmodel::cluster::planner::{plan, PlanTarget, PlanTraffic};
 use dfmodel::cluster::workload::TraceSpec;
 use dfmodel::graph::llama::{llama3_70b, llama3_8b};
@@ -29,6 +30,37 @@ fn main() {
     });
     let secs = r.results.last().unwrap().min.as_secs_f64().max(1e-12);
     println!("  -> event-loop throughput: {:.0} events/s ({events} events)", events as f64 / secs);
+
+    // streaming path: calendar queue + arena + P² summaries, trace never
+    // materialized. One probe run fixes the event count for the events/s
+    // column; the gate watches both events/s and requests/s.
+    let opts = SimOptions::default();
+    let fleet_spec = TraceSpec::poisson(7, 64.0, 20_000);
+    let probe = simulate_stream(&cfg, 8, &fleet_spec, &slo, &opts).expect("feasible");
+    r.run_with_items(
+        "engine-stream(8B, fleet 8 @64rps, 20k reqs) events",
+        1,
+        3,
+        probe.events as f64,
+        || {
+            simulate_stream(&cfg, 8, &fleet_spec, &slo, &opts).expect("feasible");
+        },
+    );
+    println!(
+        "  -> streaming fleet run: {} events | {} in-flight peak",
+        probe.events, probe.peak_in_flight
+    );
+
+    let single_spec = TraceSpec::poisson(9, 8.0, 10_000);
+    r.run_with_items(
+        "engine-stream(8B, 1 replica @8rps, 10k reqs) requests",
+        1,
+        3,
+        single_spec.n_requests as f64,
+        || {
+            simulate_stream(&cfg, 1, &single_spec, &slo, &opts).expect("feasible");
+        },
+    );
 
     let target = PlanTarget { qps: 2.0, slo, attainment: 0.9 };
     let traffic = PlanTraffic { n_requests: 200, ..Default::default() };

@@ -421,7 +421,7 @@ impl Scenario {
     }
 
     fn eval_simulate(&self) -> Result<Report> {
-        use crate::cluster::engine::{simulate, ReplicaConfig, Slo};
+        use crate::cluster::engine::{simulate_stream, ReplicaConfig, SimOptions, Slo};
         use crate::cluster::workload::{Arrivals, LengthDist, TraceSpec};
         let sys = self.system.build_serving()?;
         let model = self.workload.llama_config()?;
@@ -444,7 +444,10 @@ impl Scenario {
             output: LengthDist { mean: c.output_mean, sigma: 0.6, min: 2, max: 2048 },
         };
         let slo = Slo { ttft: c.slo_ttft, tpot: c.slo_tpot };
-        let r = simulate(&cfg, c.replicas, &spec.generate(), &slo)?;
+        // streaming by default: the trace is never materialized, so the
+        // request count only affects runtime, not memory
+        let opts = SimOptions { exact_percentiles: c.exact_percentiles };
+        let r = simulate_stream(&cfg, c.replicas, &spec, &slo, &opts)?;
         let mut rep = self.report_base(format!(
             "{} x{} (TP{}xPP{}) x {} replica(s)",
             cfg.sys.chip.name, cfg.sys.n_chips, cfg.tp, cfg.pp, c.replicas
@@ -470,6 +473,8 @@ impl Scenario {
             kv_peak_frac: r.kv_peak_frac,
             events: r.events,
             steps: r.steps,
+            peak_in_flight: r.peak_in_flight,
+            exact_percentiles: r.exact_percentiles,
             queue: r.queue,
             ttft: r.ttft,
             tpot: r.tpot,

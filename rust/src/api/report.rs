@@ -144,6 +144,11 @@ pub struct ClusterReport {
     pub kv_peak_frac: f64,
     pub events: u64,
     pub steps: u64,
+    /// High-water mark of simultaneously in-flight requests (engine memory
+    /// footprint in request-state units, independent of trace length).
+    pub peak_in_flight: usize,
+    /// Whether the percentile blocks are exact or P² streaming estimates.
+    pub exact_percentiles: bool,
     pub queue: Pcts,
     pub ttft: Pcts,
     pub tpot: Pcts,
@@ -163,6 +168,8 @@ impl ClusterReport {
             ("kv_peak_frac", Json::from(self.kv_peak_frac)),
             ("events", Json::from(self.events as usize)),
             ("steps", Json::from(self.steps as usize)),
+            ("peak_in_flight", Json::from(self.peak_in_flight)),
+            ("exact_percentiles", Json::from(self.exact_percentiles)),
             ("queue", pcts_json(&self.queue)),
             ("ttft", pcts_json(&self.ttft)),
             ("tpot", pcts_json(&self.tpot)),
@@ -687,10 +694,12 @@ fn render_cluster(c: &ClusterReport, s: &mut String) {
     );
     let _ = writeln!(
         s,
-        "engine   : {} events | {} steps | KV peak {:.1}%",
+        "engine   : {} events | {} steps | KV peak {:.1}% | {} in-flight peak{}",
         c.events,
         c.steps,
-        c.kv_peak_frac * 100.0
+        c.kv_peak_frac * 100.0,
+        c.peak_in_flight,
+        if c.exact_percentiles { "" } else { " | P2 percentiles" }
     );
     for (name, p) in [("queue", &c.queue), ("TTFT", &c.ttft), ("TPOT", &c.tpot)] {
         let _ = writeln!(

@@ -594,10 +594,15 @@ impl Default for ServingCfg {
 /// Cluster simulation / capacity-planning options.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClusterCfg {
+    /// Fleet size: identical replicas simulated in one process (JSON also
+    /// accepts the alias `fleet`).
     pub replicas: usize,
     /// Iteration-level cap on concurrently running sequences.
     pub max_batch: usize,
     pub requests: usize,
+    /// Retain every sample for exact percentiles (O(requests) memory)
+    /// instead of the default streaming P² estimates.
+    pub exact_percentiles: bool,
     pub seed: u64,
     /// Arrival process: `poisson` | `bursty`.
     pub arrivals: String,
@@ -623,6 +628,7 @@ impl Default for ClusterCfg {
             replicas: 1,
             max_batch: 32,
             requests: 200,
+            exact_percentiles: false,
             seed: 17,
             arrivals: "poisson".into(),
             rate: 4.0,
@@ -964,6 +970,20 @@ impl Scenario {
         self
     }
 
+    /// Fleet size for the simulation goal: `n` identical replicas in one
+    /// process, arrivals load-balanced to the least-loaded replica.
+    pub fn fleet(mut self, n: usize) -> Scenario {
+        self.cluster.replicas = n;
+        self
+    }
+
+    /// Opt the simulation into exact percentiles (retains every latency
+    /// sample; see `ClusterCfg::exact_percentiles`).
+    pub fn exact_percentiles(mut self) -> Scenario {
+        self.cluster.exact_percentiles = true;
+        self
+    }
+
     /// Switch to the capacity-planning goal at a target load.
     pub fn plan_for(mut self, qps: f64) -> Scenario {
         self.goal = Goal::Plan;
@@ -1249,9 +1269,19 @@ fn serving_json(s: &ServingCfg) -> Json {
 fn parse_cluster(j: &Json) -> ClusterCfg {
     let d = ClusterCfg::default();
     ClusterCfg {
-        replicas: j.get("replicas").and_then(|v| v.as_usize()).unwrap_or(d.replicas),
+        // `fleet` is the preferred alias for replica count; `replicas`
+        // stays accepted (and is what cluster_json emits) for back-compat
+        replicas: j
+            .get("fleet")
+            .or_else(|| j.get("replicas"))
+            .and_then(|v| v.as_usize())
+            .unwrap_or(d.replicas),
         max_batch: j.get("max_batch").and_then(|v| v.as_usize()).unwrap_or(d.max_batch),
         requests: j.get("requests").and_then(|v| v.as_usize()).unwrap_or(d.requests),
+        exact_percentiles: j
+            .get("exact_percentiles")
+            .and_then(|v| v.as_bool())
+            .unwrap_or(d.exact_percentiles),
         seed: j.get("seed").and_then(|v| v.as_usize()).map(|v| v as u64).unwrap_or(d.seed),
         arrivals: j.get("arrivals").and_then(|v| v.as_str()).unwrap_or(&d.arrivals).to_string(),
         rate: j.get("rate").and_then(|v| v.as_f64()).unwrap_or(d.rate),
@@ -1271,6 +1301,7 @@ fn cluster_json(c: &ClusterCfg) -> Json {
         ("replicas", Json::from(c.replicas)),
         ("max_batch", Json::from(c.max_batch)),
         ("requests", Json::from(c.requests)),
+        ("exact_percentiles", Json::from(c.exact_percentiles)),
         ("seed", Json::from(c.seed as usize)),
         ("arrivals", Json::from(c.arrivals.as_str())),
         ("rate", Json::from(c.rate)),
@@ -1443,6 +1474,8 @@ mod tests {
             Scenario::llama("8b").serving_split(4, 4).prompt_context(2048.0, 512.0),
             Scenario::llama("70b").plan_for(2.0).slo(2.0, 0.05),
             Scenario::llama("8b").simulate_traffic(8.0, 100),
+            Scenario::llama("8b").simulate_traffic(64.0, 100_000).fleet(8),
+            Scenario::llama("8b").simulate_traffic(4.0, 200).exact_percentiles(),
             Scenario::llm("gpt3-175b").on(SystemCfg::default()).fabric_sweep("alltoall", 16e6),
             Scenario::llm("gpt3-175b").traced(),
             Scenario::llama("8b").traced().no_lint(),
@@ -1458,6 +1491,16 @@ mod tests {
             let back = Scenario::parse(&text).expect("roundtrip parse");
             assert_eq!(s, back, "scenario changed across serde:\n{text}");
         }
+    }
+
+    #[test]
+    fn fleet_alias_sets_replica_count() {
+        let s = Scenario::llama("8b").simulate_traffic(8.0, 100).fleet(6);
+        let mut text = s.to_json().pretty();
+        assert!(text.contains("\"replicas\""), "canonical key is still replicas");
+        text = text.replace("\"replicas\"", "\"fleet\"");
+        let back = Scenario::parse(&text).expect("fleet alias parses");
+        assert_eq!(back.cluster.replicas, 6);
     }
 
     #[test]

@@ -3,17 +3,31 @@
 //! prefill/decode interleaving) whose step durations come from the §VIII-A
 //! analytical serving model — the simulator's per-step cost oracle.
 //!
-//! Determinism: the event heap orders by (time, insertion sequence), every
-//! scheduling decision breaks ties by index, and the only randomness lives
-//! in the seeded trace — so one (config, trace) pair always produces one
-//! event history.
+//! Determinism: events process in ascending (time, insertion sequence)
+//! order, every scheduling decision breaks ties by index, and the only
+//! randomness lives in the seeded trace — so one (config, trace) pair
+//! always produces one event history.
+//!
+//! Scale (PR 10): the hot loop is O(1) in request count. Arrivals stream
+//! lazily from the trace source instead of being pre-queued, step
+//! completions live in a [`super::calendar::CalendarQueue`] holding at most
+//! one entry per replica, per-request state lives in a
+//! [`crate::util::arena::Arena`] slab whose slots recycle as requests
+//! finish, and latency summaries default to streaming P² estimators
+//! ([`super::stream::StreamingPcts`]). The exact path — retained samples,
+//! exact percentiles, per-request metrics — stays available via
+//! [`SimOptions::exact_percentiles`] and is what the slice-based
+//! [`simulate`] entry point uses.
 
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::VecDeque;
 use std::fmt::Write as _;
 
-use super::workload::Request;
+use super::calendar::CalendarQueue;
+use super::stream::StreamingPcts;
+use super::workload::{Request, TraceSpec};
 use crate::graph::llama::LlamaConfig;
 use crate::serving::{self, ServingPoint, ServingSystem};
+use crate::util::arena::Arena;
 use crate::util::error::{Context as _, Result};
 use crate::util::units::fmt_time;
 use crate::{ensure, err};
@@ -22,9 +36,13 @@ use crate::{ensure, err};
 /// chip group, plus the scheduler's batching/KV policy.
 #[derive(Debug, Clone)]
 pub struct ReplicaConfig {
+    /// Model served by every replica.
     pub model: LlamaConfig,
+    /// The chip group (accelerator, device memory, fabric) of one replica.
     pub sys: ServingSystem,
+    /// Tensor-parallel width.
     pub tp: usize,
+    /// Pipeline-parallel depth.
     pub pp: usize,
     /// Iteration-level cap on concurrently running sequences.
     pub max_batch: usize,
@@ -33,6 +51,8 @@ pub struct ReplicaConfig {
 }
 
 impl ReplicaConfig {
+    /// A replica of `model` on `sys` split TP×PP, with the default batching
+    /// policy (batch cap 32, KV headroom 0.9).
     pub fn new(model: LlamaConfig, sys: ServingSystem, tp: usize, pp: usize) -> Self {
         ReplicaConfig { model, sys, tp, pp, max_batch: 32, kv_headroom: 0.9 }
     }
@@ -58,72 +78,61 @@ pub struct Slo {
     pub tpot: f64,
 }
 
-#[derive(Debug, Clone, Copy, PartialEq)]
-enum Event {
-    Arrival(usize),
-    StepDone(usize),
-}
-
-/// Heap entry ordered earliest-first by (time, insertion sequence); the
-/// sequence tie-break keeps equal-timestamp processing FIFO.
-#[derive(Debug, Clone, Copy)]
-struct Entry {
-    t: f64,
-    seq: u64,
-    ev: Event,
-}
-
-impl PartialEq for Entry {
-    fn eq(&self, other: &Self) -> bool {
-        self.t == other.t && self.seq == other.seq
-    }
-}
-impl Eq for Entry {}
-impl PartialOrd for Entry {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Entry {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        // reversed so the max-heap pops the earliest entry first
-        other.t.total_cmp(&self.t).then_with(|| other.seq.cmp(&self.seq))
-    }
+/// Knobs for a simulation run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SimOptions {
+    /// Retain every latency sample and compute exact percentiles (plus
+    /// per-request metrics). Costs O(requests) memory; the default
+    /// streaming path costs O(replicas + in-flight requests). Use for
+    /// small runs, pinned tests, or distributions where P² error is
+    /// documented to degrade (see [`super::stream`]).
+    pub exact_percentiles: bool,
 }
 
 /// The step a replica currently has in flight.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 enum StepKind {
-    /// Whole-prompt passes for newly admitted requests.
-    Prefill(Vec<usize>),
+    /// Whole-prompt passes for the newly admitted batch (`stepping`).
+    Prefill,
     /// One decode iteration: one token for every running request.
-    Decode(Vec<usize>),
+    Decode,
 }
 
 #[derive(Debug, Default)]
 struct Replica {
-    queue: VecDeque<usize>,
-    running: Vec<usize>,
-    pending_prefill: Vec<usize>,
+    /// Dispatched but not yet admitted (arena handles, FCFS).
+    queue: VecDeque<u32>,
+    /// Admitted and decoding.
+    running: Vec<u32>,
+    /// Admitted, awaiting the next prefill launch.
+    pending_prefill: Vec<u32>,
+    /// Members of an in-flight prefill (swapped with `pending_prefill` at
+    /// launch so neither Vec reallocates).
+    stepping: Vec<u32>,
     kv_used: f64,
     /// Requests dispatched here and not yet finished (for load balancing).
     resident: usize,
     current: Option<StepKind>,
 }
 
+/// Per-request state while the request is in flight; lives in the arena
+/// and is freed the moment the last token is produced.
 #[derive(Debug, Clone, Copy)]
-struct ReqState {
+struct InFlight {
+    id: usize,
+    arrival: f64,
+    prompt: usize,
+    output: usize,
     generated: usize,
     kv_reserved: f64,
-    admitted: Option<f64>,
-    first_token: Option<f64>,
-    finished: Option<f64>,
-    rejected: bool,
+    admitted: f64,
+    first_token: f64,
 }
 
 /// Per-request outcome.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct RequestMetrics {
+    /// Trace id of the request.
     pub id: usize,
     /// Arrival → admission into a batch.
     pub queue_time: f64,
@@ -133,20 +142,27 @@ pub struct RequestMetrics {
     pub tpot: f64,
     /// Arrival → last token.
     pub e2e: f64,
+    /// Output length, tokens.
     pub output: usize,
 }
 
 /// Percentile summary of one latency metric.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Pcts {
+    /// Arithmetic mean (exact on both summary paths).
     pub mean: f64,
+    /// Median.
     pub p50: f64,
+    /// 95th percentile.
     pub p95: f64,
+    /// 99th percentile.
     pub p99: f64,
 }
 
-/// Summarize samples (sorts in place; all-zero summary when empty).
-pub fn percentiles(samples: &mut [f64]) -> Pcts {
+/// Summarize samples exactly (all-zero summary when empty). Takes the
+/// vector by value: it must sort, and taking ownership keeps that from
+/// silently reordering a caller's buffer behind its back.
+pub fn percentiles(mut samples: Vec<f64>) -> Pcts {
     if samples.is_empty() {
         return Pcts { mean: 0.0, p50: 0.0, p95: 0.0, p99: 0.0 };
     }
@@ -159,28 +175,47 @@ pub fn percentiles(samples: &mut [f64]) -> Pcts {
 /// Aggregate simulation outcome.
 #[derive(Debug, Clone)]
 pub struct SimReport {
+    /// Requests offered by the trace.
     pub n_offered: usize,
+    /// Requests that produced their full output.
     pub n_completed: usize,
     /// Requests whose KV need alone exceeds a replica's budget.
     pub n_rejected: usize,
+    /// Time of the last event, seconds.
     pub makespan: f64,
+    /// Queue-delay summary (arrival → admission).
     pub queue: Pcts,
+    /// Time-to-first-token summary.
     pub ttft: Pcts,
+    /// Time-per-output-token summary (multi-token outputs only).
     pub tpot: Pcts,
+    /// Completions per second.
     pub throughput_rps: f64,
     /// SLO-meeting completions per second.
     pub goodput_rps: f64,
     /// Fraction of completed requests meeting both SLOs.
     pub slo_attainment: f64,
+    /// Generated tokens per second across the fleet.
     pub output_tokens_per_s: f64,
     /// Peak KV residency as a fraction of the per-replica budget.
     pub kv_peak_frac: f64,
+    /// Events processed (arrivals + step completions).
     pub events: u64,
+    /// Batched model steps launched (prefill + decode iterations).
     pub steps: u64,
+    /// High-water mark of simultaneously in-flight requests — the engine's
+    /// memory footprint in request-state units, independent of trace
+    /// length.
+    pub peak_in_flight: usize,
+    /// Whether `queue`/`ttft`/`tpot` are exact or P² streaming estimates.
+    pub exact_percentiles: bool,
+    /// Per-request metrics, sorted by id. Empty on the streaming path —
+    /// retaining them is exactly the O(requests) memory it avoids.
     pub per_request: Vec<RequestMetrics>,
 }
 
 impl SimReport {
+    /// Multi-line human-readable summary.
     pub fn render(&self) -> String {
         let mut s = String::new();
         let _ = writeln!(
@@ -201,10 +236,12 @@ impl SimReport {
         );
         let _ = writeln!(
             s,
-            "engine   : {} events | {} steps | KV peak {:.1}%",
+            "engine   : {} events | {} steps | KV peak {:.1}% | {} in-flight peak{}",
             self.events,
             self.steps,
-            self.kv_peak_frac * 100.0
+            self.kv_peak_frac * 100.0,
+            self.peak_in_flight,
+            if self.exact_percentiles { "" } else { " | P2 percentiles" }
         );
         for (name, p) in [("queue", &self.queue), ("TTFT", &self.ttft), ("TPOT", &self.tpot)] {
             let _ = writeln!(
@@ -220,25 +257,70 @@ impl SimReport {
     }
 }
 
+/// Latency-sample accumulator: retained vectors (exact) or P² markers
+/// (streaming, constant memory).
+enum Sums {
+    Exact { q: Vec<f64>, tt: Vec<f64>, tp: Vec<f64>, per: Vec<RequestMetrics> },
+    Streaming { q: StreamingPcts, tt: StreamingPcts, tp: StreamingPcts },
+}
+
 struct Sim<'a> {
     cfg: &'a ReplicaConfig,
-    requests: &'a [Request],
+    slo: Slo,
     budget: f64,
     kv_per_tok: f64,
     reps: Vec<Replica>,
-    state: Vec<ReqState>,
-    heap: BinaryHeap<Entry>,
-    seq: u64,
+    pool: Arena<InFlight>,
+    cq: CalendarQueue<usize>,
+    sums: Sums,
     events: u64,
     steps: u64,
     kv_peak: f64,
     now: f64,
+    offered: usize,
+    rejected: usize,
+    completed: usize,
+    good: usize,
+    tokens: f64,
 }
 
 impl Sim<'_> {
-    fn push(&mut self, t: f64, ev: Event) {
-        self.heap.push(Entry { t, seq: self.seq, ev });
-        self.seq += 1;
+    /// Fold one finished request into the summaries and free nothing —
+    /// the caller has already removed `s` from the arena.
+    fn record(&mut self, s: &InFlight, t: f64) {
+        let queue_time = s.admitted - s.arrival;
+        let ttft = s.first_token - s.arrival;
+        let tpot =
+            if s.output > 1 { (t - s.first_token) / (s.output - 1) as f64 } else { 0.0 };
+        self.completed += 1;
+        self.tokens += s.output as f64;
+        if ttft <= self.slo.ttft && (s.output <= 1 || tpot <= self.slo.tpot) {
+            self.good += 1;
+        }
+        match &mut self.sums {
+            Sums::Exact { q, tt, tp, per } => {
+                q.push(queue_time);
+                tt.push(ttft);
+                if s.output > 1 {
+                    tp.push(tpot);
+                }
+                per.push(RequestMetrics {
+                    id: s.id,
+                    queue_time,
+                    ttft,
+                    tpot,
+                    e2e: t - s.arrival,
+                    output: s.output,
+                });
+            }
+            Sums::Streaming { q, tt, tp } => {
+                q.observe(queue_time);
+                tt.observe(ttft);
+                if s.output > 1 {
+                    tp.observe(tpot);
+                }
+            }
+        }
     }
 
     /// Admit queued requests (FCFS, bounded by the batch cap and the KV
@@ -248,108 +330,138 @@ impl Sim<'_> {
             return;
         }
         loop {
-            let rep = &mut self.reps[ri];
+            let rep = &self.reps[ri];
             if rep.running.len() + rep.pending_prefill.len() >= self.cfg.max_batch {
                 break;
             }
-            let Some(&i) = rep.queue.front() else { break };
-            let need = (self.requests[i].prompt + self.requests[i].output) as f64 * self.kv_per_tok;
+            let Some(&h) = rep.queue.front() else { break };
+            let need = {
+                let s = &self.pool[h];
+                (s.prompt + s.output) as f64 * self.kv_per_tok
+            };
             if rep.kv_used + need > self.budget {
                 break;
             }
+            let rep = &mut self.reps[ri];
             rep.queue.pop_front();
             rep.kv_used += need;
-            rep.pending_prefill.push(i);
-            self.state[i].kv_reserved = need;
-            self.state[i].admitted = Some(t);
+            rep.pending_prefill.push(h);
+            let s = self.pool.get_mut(h);
+            s.kv_reserved = need;
+            s.admitted = t;
         }
         self.kv_peak = self.kv_peak.max(self.reps[ri].kv_used);
-        let (kind, dt) = if !self.reps[ri].pending_prefill.is_empty() {
-            let members = std::mem::take(&mut self.reps[ri].pending_prefill);
-            let batch = members.len() as f64;
-            let prompt = members.iter().map(|&i| self.requests[i].prompt).max().unwrap() as f64;
+        let rep = &self.reps[ri];
+        let (kind, occupancy, dt) = if !rep.pending_prefill.is_empty() {
+            let batch = rep.pending_prefill.len() as f64;
+            let prompt =
+                rep.pending_prefill.iter().map(|&h| self.pool[h].prompt).max().unwrap() as f64;
             let pt = self.cfg.point(batch, prompt, prompt);
             let m = serving::evaluate(&self.cfg.model, &self.cfg.sys, &pt)
                 .expect("split feasibility was checked before the run");
-            (StepKind::Prefill(members), m.ttft)
-        } else if !self.reps[ri].running.is_empty() {
-            let members = self.reps[ri].running.clone();
-            let batch = members.len() as f64;
-            let context = members
+            (StepKind::Prefill, rep.pending_prefill.len(), m.ttft)
+        } else if !rep.running.is_empty() {
+            let batch = rep.running.len() as f64;
+            let context = rep
+                .running
                 .iter()
-                .map(|&i| (self.requests[i].prompt + self.state[i].generated) as f64)
+                .map(|&h| {
+                    let s = &self.pool[h];
+                    (s.prompt + s.generated) as f64
+                })
                 .sum::<f64>()
                 / batch;
             let pt = self.cfg.point(batch, 1.0, context);
             let m = serving::evaluate(&self.cfg.model, &self.cfg.sys, &pt)
                 .expect("split feasibility was checked before the run");
-            (StepKind::Decode(members), m.tpot)
+            (StepKind::Decode, rep.running.len(), m.tpot)
         } else {
             return; // replica idles until the next arrival
         };
         if crate::obs::enabled() {
-            let occupancy = match &kind {
-                StepKind::Prefill(m) | StepKind::Decode(m) => m.len(),
-            };
             crate::obs::observe("cluster.batch_occupancy", occupancy as f64);
             crate::obs::observe("cluster.queue_depth", self.reps[ri].queue.len() as f64);
         }
-        self.reps[ri].current = Some(kind);
+        let rep = &mut self.reps[ri];
+        if matches!(kind, StepKind::Prefill) {
+            // hand the launch batch to `stepping`; the (empty, cleared)
+            // previous buffer comes back so neither Vec reallocates
+            std::mem::swap(&mut rep.pending_prefill, &mut rep.stepping);
+        }
+        rep.current = Some(kind);
         self.steps += 1;
-        self.push(t + dt, Event::StepDone(ri));
-    }
-
-    fn finish_request(&mut self, ri: usize, i: usize, t: f64) {
-        self.state[i].finished = Some(t);
-        self.reps[ri].kv_used -= self.state[i].kv_reserved;
-        self.reps[ri].resident -= 1;
+        self.cq.push(t + dt, ri);
     }
 
     fn step_done(&mut self, ri: usize, t: f64) {
         let kind = self.reps[ri].current.take().expect("completion without a step in flight");
+        let mut freed = 0.0;
+        let mut done = 0usize;
         match kind {
-            StepKind::Prefill(members) => {
-                for i in members {
-                    self.state[i].first_token = Some(t);
-                    self.state[i].generated = 1;
-                    if self.state[i].generated >= self.requests[i].output {
-                        self.finish_request(ri, i, t);
+            StepKind::Prefill => {
+                let mut stepping = std::mem::take(&mut self.reps[ri].stepping);
+                for &h in &stepping {
+                    let s = self.pool.get_mut(h);
+                    s.first_token = t;
+                    s.generated = 1;
+                    if s.generated >= s.output {
+                        let s = self.pool.remove(h);
+                        freed += s.kv_reserved;
+                        done += 1;
+                        self.record(&s, t);
                     } else {
-                        self.reps[ri].running.push(i);
+                        self.reps[ri].running.push(h);
                     }
                 }
+                stepping.clear();
+                self.reps[ri].stepping = stepping;
             }
-            StepKind::Decode(members) => {
-                let mut still = Vec::with_capacity(members.len());
-                for i in members {
-                    self.state[i].generated += 1;
-                    if self.state[i].generated >= self.requests[i].output {
-                        self.finish_request(ri, i, t);
+            StepKind::Decode => {
+                let mut running = std::mem::take(&mut self.reps[ri].running);
+                let mut keep = 0usize;
+                for idx in 0..running.len() {
+                    let h = running[idx];
+                    let s = self.pool.get_mut(h);
+                    s.generated += 1;
+                    if s.generated >= s.output {
+                        let s = self.pool.remove(h);
+                        freed += s.kv_reserved;
+                        done += 1;
+                        self.record(&s, t);
                     } else {
-                        still.push(i);
+                        running[keep] = h; // in-place compaction, order kept
+                        keep += 1;
                     }
                 }
-                self.reps[ri].running = still;
+                running.truncate(keep);
+                self.reps[ri].running = running;
             }
         }
+        self.reps[ri].kv_used -= freed;
+        self.reps[ri].resident -= done;
         self.start_step(ri, t);
     }
 }
 
-/// Simulate `replicas` identical replicas serving `requests` (arrivals join
-/// the least-loaded replica, ties broken by index). Errors — with the
-/// reason — when the configuration is infeasible: TP×PP does not cover the
-/// chip group, or the model weights exceed the group's device memory.
-pub fn simulate(
+/// Core event loop over a lazily streamed arrival source. Arrivals are
+/// merged against the calendar queue's earliest step completion (an
+/// arrival at exactly a completion's timestamp goes first, replicating the
+/// old heap's sequence ordering where every arrival predated every
+/// completion entry), so the queue never holds more than one entry per
+/// replica and memory stays independent of trace length.
+fn run(
     cfg: &ReplicaConfig,
     replicas: usize,
-    requests: &[Request],
+    mut source: impl Iterator<Item = Request>,
     slo: &Slo,
+    opts: &SimOptions,
 ) -> Result<SimReport> {
     let _span = crate::obs::span("cluster.simulate");
     ensure!(replicas > 0, "cluster simulation needs at least one replica");
-    // probe the oracle once so infeasibility surfaces here, not mid-run
-    serving::evaluate(&cfg.model, &cfg.sys, &cfg.point(1.0, 1.0, 1.0))
+    // probe the oracle once so infeasibility surfaces here, not mid-run;
+    // the batch-1 decode step is also the calendar queue's day width —
+    // the finest event grain the engine schedules at
+    let probe = serving::evaluate(&cfg.model, &cfg.sys, &cfg.point(1.0, 1.0, 1.0))
         .context("replica configuration")?;
     let budget = cfg.kv_budget_bytes().ok_or_else(|| {
         err!(
@@ -362,106 +474,165 @@ pub fn simulate(
     })?;
     let mut sim = Sim {
         cfg,
-        requests,
+        slo: *slo,
         budget,
         kv_per_tok: cfg.model.kv_bytes_per_token(),
         reps: (0..replicas).map(|_| Replica::default()).collect(),
-        state: vec![
-            ReqState {
-                generated: 0,
-                kv_reserved: 0.0,
-                admitted: None,
-                first_token: None,
-                finished: None,
-                rejected: false,
-            };
-            requests.len()
-        ],
-        heap: BinaryHeap::new(),
-        seq: 0,
+        pool: Arena::with_capacity(replicas * cfg.max_batch),
+        cq: CalendarQueue::new(probe.tpot.max(1e-9), 2 * replicas),
+        sums: if opts.exact_percentiles {
+            Sums::Exact { q: Vec::new(), tt: Vec::new(), tp: Vec::new(), per: Vec::new() }
+        } else {
+            Sums::Streaming {
+                q: StreamingPcts::new(),
+                tt: StreamingPcts::new(),
+                tp: StreamingPcts::new(),
+            }
+        },
         events: 0,
         steps: 0,
         kv_peak: 0.0,
         now: 0.0,
+        offered: 0,
+        rejected: 0,
+        completed: 0,
+        good: 0,
+        tokens: 0.0,
     };
-    for (i, r) in requests.iter().enumerate() {
-        sim.push(r.arrival, Event::Arrival(i));
-    }
-    while let Some(Entry { t, ev, .. }) = sim.heap.pop() {
-        sim.events += 1;
-        sim.now = t;
-        match ev {
-            Event::Arrival(i) => {
-                let need = (requests[i].prompt + requests[i].output) as f64 * sim.kv_per_tok;
-                if need > sim.budget {
-                    sim.state[i].rejected = true;
-                    continue;
-                }
-                let ri = (0..replicas).min_by_key(|&r| (sim.reps[r].resident, r)).unwrap();
-                sim.reps[ri].resident += 1;
-                sim.reps[ri].queue.push_back(i);
-                sim.start_step(ri, t);
+    let mut pending = source.next();
+    loop {
+        let qt = sim.cq.peek_time();
+        let arrival_first = match (&pending, qt) {
+            (Some(r), Some(q)) => r.arrival <= q,
+            (Some(_), None) => true,
+            (None, Some(_)) => false,
+            (None, None) => break,
+        };
+        if arrival_first {
+            let r = pending.take().expect("arrival_first implies a pending arrival");
+            pending = source.next();
+            sim.events += 1;
+            sim.now = r.arrival;
+            sim.offered += 1;
+            let need = (r.prompt + r.output) as f64 * sim.kv_per_tok;
+            if need > sim.budget {
+                sim.rejected += 1;
+                continue;
             }
-            Event::StepDone(ri) => sim.step_done(ri, t),
+            let h = sim.pool.insert(InFlight {
+                id: r.id,
+                arrival: r.arrival,
+                prompt: r.prompt,
+                output: r.output,
+                generated: 0,
+                kv_reserved: 0.0,
+                admitted: 0.0,
+                first_token: 0.0,
+            });
+            let ri = (0..replicas).min_by_key(|&x| (sim.reps[x].resident, x)).unwrap();
+            sim.reps[ri].resident += 1;
+            sim.reps[ri].queue.push_back(h);
+            sim.start_step(ri, r.arrival);
+        } else {
+            let (t, ri) = sim.cq.pop().expect("peek_time returned Some");
+            sim.events += 1;
+            sim.now = t;
+            sim.step_done(ri, t);
         }
     }
 
-    let mut per = Vec::with_capacity(requests.len());
-    let (mut q, mut tt, mut tp) = (Vec::new(), Vec::new(), Vec::new());
-    let mut good = 0usize;
-    let mut tokens = 0.0;
-    let mut rejected = 0usize;
-    for (i, r) in requests.iter().enumerate() {
-        let s = &sim.state[i];
-        if s.rejected {
-            rejected += 1;
-            continue;
-        }
-        let (Some(first), Some(done), Some(adm)) = (s.first_token, s.finished, s.admitted) else {
-            continue;
-        };
-        let ttft = first - r.arrival;
-        let tpot = if r.output > 1 { (done - first) / (r.output - 1) as f64 } else { 0.0 };
-        q.push(adm - r.arrival);
-        tt.push(ttft);
-        if r.output > 1 {
-            tp.push(tpot);
-        }
-        tokens += r.output as f64;
-        if ttft <= slo.ttft && (r.output <= 1 || tpot <= slo.tpot) {
-            good += 1;
-        }
-        per.push(RequestMetrics {
-            id: r.id,
-            queue_time: adm - r.arrival,
-            ttft,
-            tpot,
-            e2e: done - r.arrival,
-            output: r.output,
-        });
-    }
     let makespan = sim.now.max(1e-30);
     crate::obs::counter("cluster.events", sim.events);
     crate::obs::counter("cluster.steps", sim.steps);
-    crate::obs::counter("cluster.admission_rejects", rejected as u64);
+    crate::obs::counter("cluster.admission_rejects", sim.rejected as u64);
     crate::obs::gauge("cluster.kv_peak_frac", sim.kv_peak / budget);
+    let (queue, ttft, tpot, per) = match sim.sums {
+        Sums::Exact { q, tt, tp, mut per } => {
+            per.sort_by_key(|m| m.id);
+            (percentiles(q), percentiles(tt), percentiles(tp), per)
+        }
+        Sums::Streaming { q, tt, tp } => (q.pcts(), tt.pcts(), tp.pcts(), Vec::new()),
+    };
     Ok(SimReport {
-        n_offered: requests.len(),
-        n_completed: per.len(),
-        n_rejected: rejected,
+        n_offered: sim.offered,
+        n_completed: sim.completed,
+        n_rejected: sim.rejected,
         makespan,
-        queue: percentiles(&mut q),
-        ttft: percentiles(&mut tt),
-        tpot: percentiles(&mut tp),
-        throughput_rps: per.len() as f64 / makespan,
-        goodput_rps: good as f64 / makespan,
-        slo_attainment: if per.is_empty() { 0.0 } else { good as f64 / per.len() as f64 },
-        output_tokens_per_s: tokens / makespan,
+        queue,
+        ttft,
+        tpot,
+        throughput_rps: sim.completed as f64 / makespan,
+        goodput_rps: sim.good as f64 / makespan,
+        slo_attainment: if sim.completed == 0 {
+            0.0
+        } else {
+            sim.good as f64 / sim.completed as f64
+        },
+        output_tokens_per_s: sim.tokens / makespan,
         kv_peak_frac: sim.kv_peak / budget,
         events: sim.events,
         steps: sim.steps,
+        peak_in_flight: sim.pool.peak(),
+        exact_percentiles: opts.exact_percentiles,
         per_request: per,
     })
+}
+
+/// Simulate `replicas` identical replicas serving `requests` (arrivals join
+/// the least-loaded replica, ties broken by index) on the **exact** summary
+/// path: retained samples, exact percentiles, per-request metrics. Errors —
+/// with the reason — when the configuration is infeasible: TP×PP does not
+/// cover the chip group, or the model weights exceed the group's device
+/// memory.
+///
+/// For traces past ~10⁵ requests, prefer [`simulate_stream`]: this entry
+/// holds every latency sample in memory.
+///
+/// ```
+/// use dfmodel::cluster::engine::{simulate, ReplicaConfig, Slo};
+/// use dfmodel::cluster::workload::TraceSpec;
+/// use dfmodel::graph::llama::llama3_8b;
+/// use dfmodel::serving::sn40l_x16;
+///
+/// let cfg = ReplicaConfig::new(llama3_8b(), sn40l_x16(), 16, 1);
+/// let trace = TraceSpec::poisson(7, 4.0, 50).generate();
+/// let report = simulate(&cfg, 1, &trace, &Slo { ttft: 1.0, tpot: 0.02 }).unwrap();
+/// assert_eq!(report.n_completed, 50);
+/// assert!(report.ttft.p99 >= report.ttft.p50);
+/// ```
+pub fn simulate(
+    cfg: &ReplicaConfig,
+    replicas: usize,
+    requests: &[Request],
+    slo: &Slo,
+) -> Result<SimReport> {
+    // arrival-order view of the slice; the stable sort preserves slice
+    // order on ties, replicating the old event heap's (time, insertion
+    // sequence) contract for any input ordering
+    let mut idx: Vec<usize> = (0..requests.len()).collect();
+    idx.sort_by(|&a, &b| requests[a].arrival.total_cmp(&requests[b].arrival));
+    run(
+        cfg,
+        replicas,
+        idx.into_iter().map(|i| requests[i]),
+        slo,
+        &SimOptions { exact_percentiles: true },
+    )
+}
+
+/// Simulate the trace described by `spec` without materializing it:
+/// arrivals stream straight from the seeded generator, so memory stays
+/// O(replicas + in-flight requests) no matter how many requests the spec
+/// describes — this is the entry point for million-request runs and the
+/// planner. Summaries follow `opts` (P² streaming by default).
+pub fn simulate_stream(
+    cfg: &ReplicaConfig,
+    replicas: usize,
+    spec: &TraceSpec,
+    slo: &Slo,
+    opts: &SimOptions,
+) -> Result<SimReport> {
+    run(cfg, replicas, spec.stream(), slo, opts)
 }
 
 #[cfg(test)]
@@ -490,6 +661,8 @@ mod tests {
         assert!(r.tpot.p50 > 0.0 && r.tpot.p99 >= r.tpot.p50);
         assert!(r.kv_peak_frac > 0.0 && r.kv_peak_frac <= 1.0);
         assert!(r.events >= r.steps);
+        assert!(r.peak_in_flight > 0 && r.peak_in_flight <= 120);
+        assert!(r.exact_percentiles);
         for m in &r.per_request {
             assert!(m.queue_time >= 0.0 && m.ttft >= m.queue_time && m.e2e >= m.ttft);
         }
@@ -534,13 +707,60 @@ mod tests {
 
     #[test]
     fn percentiles_of_known_samples() {
-        let mut v: Vec<f64> = (1..=100).map(f64::from).collect();
-        let p = percentiles(&mut v);
+        let v: Vec<f64> = (1..=100).map(f64::from).collect();
+        let p = percentiles(v);
         assert_eq!(p.p50, 51.0);
         assert_eq!(p.p95, 95.0);
         assert_eq!(p.p99, 99.0);
         assert!((p.mean - 50.5).abs() < 1e-12);
-        let z = percentiles(&mut []);
+        let z = percentiles(Vec::new());
         assert_eq!(z.p99, 0.0);
+    }
+
+    #[test]
+    fn streaming_path_matches_exact_counts_and_stays_small() {
+        let spec = TraceSpec::poisson(11, 6.0, 3000);
+        let exact = simulate(&cfg(), 2, &spec.generate(), &slo()).unwrap();
+        let stream =
+            simulate_stream(&cfg(), 2, &spec, &slo(), &SimOptions::default()).unwrap();
+        // counts, event history, and exact scalars are identical — only the
+        // percentile estimator differs
+        assert_eq!(stream.n_completed, exact.n_completed);
+        assert_eq!(stream.n_offered, exact.n_offered);
+        assert_eq!(stream.events, exact.events);
+        assert_eq!(stream.steps, exact.steps);
+        assert_eq!(stream.makespan, exact.makespan);
+        assert_eq!(stream.slo_attainment, exact.slo_attainment);
+        assert_eq!(stream.peak_in_flight, exact.peak_in_flight);
+        assert_eq!(stream.ttft.mean, exact.ttft.mean, "means are exact on both paths");
+        assert!(stream.per_request.is_empty() && !stream.exact_percentiles);
+        assert!(
+            stream.peak_in_flight < 200,
+            "in-flight peak {} must track load, not trace length",
+            stream.peak_in_flight
+        );
+        // P² estimates land near the exact percentiles on this smooth trace
+        for (e, s) in [(exact.ttft, stream.ttft), (exact.tpot, stream.tpot)] {
+            assert!((s.p50 - e.p50).abs() / e.p50 < 0.05, "{} vs {}", s.p50, e.p50);
+            assert!((s.p95 - e.p95).abs() / e.p95 < 0.10, "{} vs {}", s.p95, e.p95);
+        }
+    }
+
+    #[test]
+    fn streaming_exact_option_reproduces_the_slice_path() {
+        let spec = TraceSpec::poisson(8, 5.0, 500);
+        let a = simulate(&cfg(), 2, &spec.generate(), &slo()).unwrap();
+        let b = simulate_stream(
+            &cfg(),
+            2,
+            &spec,
+            &slo(),
+            &SimOptions { exact_percentiles: true },
+        )
+        .unwrap();
+        assert_eq!(a.per_request, b.per_request);
+        assert_eq!(a.ttft, b.ttft);
+        assert_eq!(a.queue, b.queue);
+        assert_eq!(a.tpot, b.tpot);
     }
 }

@@ -4,18 +4,41 @@
 //! simulator so arrivals, queueing, continuous batching, and KV-cache
 //! pressure are modeled too, and adds an SLO-aware capacity planner.
 //!
+//! Built for scale (DESIGN.md §Cluster at scale): the engine streams
+//! arrivals from the seeded generator, schedules step completions through a
+//! calendar queue, keeps request state in a recycling arena, and summarizes
+//! latency with streaming P² estimators — so one process simulates a
+//! million requests across a whole fleet in memory independent of trace
+//! length.
+//!
 //! * [`workload`] — seeded request generators: Poisson and bursty/diurnal
-//!   arrivals, log-normal prompt/output-length distributions.
+//!   arrivals, log-normal prompt/output-length distributions, streamed or
+//!   materialized.
+//! * [`calendar`] — bucketed earliest-first event scheduler with the exact
+//!   ordering contract of the binary heap it replaced.
 //! * [`engine`] — event-driven replica engine: iteration-level continuous
 //!   batching with prefill/decode interleaving, KV-capacity admission
 //!   control, per-request TTFT/TPOT/queue-time, percentiles and goodput.
+//! * [`stream`] — P² streaming quantile estimators backing the engine's
+//!   constant-memory summary path.
 //! * [`planner`] — sweeps (chip platform × TP×PP × replica count) and
-//!   returns the cheapest fleet meeting a target QPS + SLO.
+//!   returns the cheapest fleet meeting a target QPS + SLO, judging every
+//!   candidate by simulated (not analytical) SLO attainment.
 
+#![forbid(unsafe_code)]
+#![deny(missing_docs)]
+
+pub mod calendar;
 pub mod engine;
 pub mod planner;
+pub mod stream;
 pub mod workload;
 
-pub use engine::{percentiles, simulate, Pcts, ReplicaConfig, RequestMetrics, SimReport, Slo};
+pub use calendar::CalendarQueue;
+pub use engine::{
+    percentiles, simulate, simulate_stream, Pcts, ReplicaConfig, RequestMetrics, SimOptions,
+    SimReport, Slo,
+};
 pub use planner::{plan, FleetPlan, PlanResult, PlanTarget, PlanTraffic, Platform};
-pub use workload::{Arrivals, LengthDist, Request, TraceSpec};
+pub use stream::{P2Quantile, StreamingPcts};
+pub use workload::{Arrivals, LengthDist, Request, TraceIter, TraceSpec};

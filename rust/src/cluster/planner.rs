@@ -3,9 +3,16 @@
 //! traffic, and return the cheapest configuration whose goodput meets the
 //! QPS + SLO target — the first coupling of the §VI cost catalog to the
 //! §VIII serving model.
+//!
+//! Every candidate is judged on **simulated** SLO attainment over identical
+//! traffic: the trace is described once as a [`TraceSpec`] and each
+//! candidate replays it through the engine's streaming path
+//! ([`super::engine::simulate_stream`]), so attainment/goodput are exact
+//! event-history facts while memory stays O(in-flight) per worker — the
+//! analytical model only seeds the replica-count search.
 
-use super::engine::{simulate, ReplicaConfig, SimReport, Slo};
-use super::workload::{Arrivals, LengthDist, Request, TraceSpec};
+use super::engine::{simulate_stream, ReplicaConfig, SimOptions, SimReport, Slo};
+use super::workload::{Arrivals, LengthDist, TraceSpec};
 use crate::graph::llama::LlamaConfig;
 use crate::serving::{self, ServingSystem};
 use crate::system::{chip, interconnect, memory, ChipSpec, LinkTech, MemoryTech};
@@ -17,8 +24,11 @@ use crate::util::units::fmt_time;
 /// fabric it ships with.
 #[derive(Debug, Clone)]
 pub struct Platform {
+    /// Accelerator chip.
     pub chip: ChipSpec,
+    /// Device-memory technology each chip ships with.
     pub mem: MemoryTech,
+    /// Intra-replica fabric.
     pub link: LinkTech,
 }
 
@@ -55,6 +65,7 @@ pub fn catalog() -> Vec<Platform> {
 pub struct PlanTarget {
     /// Offered load, requests/s.
     pub qps: f64,
+    /// Latency bounds a request must meet to count toward goodput.
     pub slo: Slo,
     /// Required fraction of completed requests meeting both SLOs.
     pub attainment: f64,
@@ -63,9 +74,13 @@ pub struct PlanTarget {
 /// Traffic shape used for the planning simulations.
 #[derive(Debug, Clone, Copy)]
 pub struct PlanTraffic {
+    /// Trace seed — all candidates replay the same seeded trace.
     pub seed: u64,
+    /// Simulated trace length per candidate, requests.
     pub n_requests: usize,
+    /// Prompt-length distribution.
     pub prompt: LengthDist,
+    /// Output-length distribution.
     pub output: LengthDist,
 }
 
@@ -83,17 +98,26 @@ impl Default for PlanTraffic {
 /// One evaluated fleet configuration.
 #[derive(Debug, Clone)]
 pub struct FleetPlan {
+    /// Chip name of the platform.
     pub platform: String,
     /// Chips per replica.
     pub group: usize,
+    /// Tensor-parallel width within a replica.
     pub tp: usize,
+    /// Pipeline-parallel depth within a replica.
     pub pp: usize,
+    /// Replicas in the fleet.
     pub replicas: usize,
+    /// `group × replicas`.
     pub chips_total: usize,
+    /// Fleet purchase price, USD.
     pub capex_usd: f64,
     /// 3-year-amortized capex plus electricity at $0.12/kWh.
     pub usd_per_hour: f64,
+    /// Whether the simulated fleet met attainment with zero drops.
     pub meets_target: bool,
+    /// The simulation backing the verdict (streaming path: exact counts,
+    /// P² percentiles, no per-request vector).
     pub report: SimReport,
 }
 
@@ -155,14 +179,15 @@ fn evaluate_candidate(
     pp: usize,
     target: &PlanTarget,
     traffic: &PlanTraffic,
-    requests: &[Request],
+    spec: &TraceSpec,
 ) -> Option<FleetPlan> {
     let cfg = ReplicaConfig::new(*model, p.replica(group), tp, pp);
     cfg.kv_budget_bytes()?; // weights must fit the group
     let mut replicas = seed_replicas(&cfg, target, traffic)?;
     let mut last: Option<(usize, SimReport, bool)> = None;
     for _ in 0..6 {
-        let report = simulate(&cfg, replicas, requests, &target.slo).ok()?;
+        let report =
+            simulate_stream(&cfg, replicas, spec, &target.slo, &SimOptions::default()).ok()?;
         let ok = report.slo_attainment >= target.attainment
             && report.n_completed == report.n_offered;
         last = Some((replicas, report, ok));
@@ -190,6 +215,7 @@ fn evaluate_candidate(
 /// The planner's output: every evaluated fleet, cheapest first.
 #[derive(Debug, Clone)]
 pub struct PlanResult {
+    /// Every evaluated fleet, cheapest first.
     pub candidates: Vec<FleetPlan>,
     /// Index into `candidates` of the cheapest plan meeting the target.
     pub best: Option<usize>,
@@ -207,17 +233,17 @@ pub fn plan(model: &LlamaConfig, target: &PlanTarget, traffic: &PlanTraffic) -> 
             }
         }
     }
-    // one shared trace: every candidate is judged on identical traffic
-    let requests = TraceSpec {
+    // one shared trace spec: every candidate replays identical traffic
+    // from the seed without any worker materializing it
+    let spec = TraceSpec {
         seed: traffic.seed,
         n_requests: traffic.n_requests,
         arrivals: Arrivals::Poisson { rate: target.qps },
         prompt: traffic.prompt,
         output: traffic.output,
-    }
-    .generate();
+    };
     let mut candidates: Vec<FleetPlan> = parallel_map(&cands, |(p, g, tp, pp)| {
-        evaluate_candidate(model, p, *g, *tp, *pp, target, traffic, &requests)
+        evaluate_candidate(model, p, *g, *tp, *pp, target, traffic, &spec)
     })
     .into_iter()
     .flatten()

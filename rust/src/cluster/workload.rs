@@ -8,6 +8,7 @@ use crate::util::prng::Rng;
 /// One inference request in a trace.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Request {
+    /// Position in the trace (0-based); stable across regeneration.
     pub id: usize,
     /// Arrival time, seconds from trace start.
     pub arrival: f64,
@@ -71,9 +72,13 @@ impl Arrivals {
 /// rounded and clamped to `[min, max]`.
 #[derive(Debug, Clone, Copy)]
 pub struct LengthDist {
+    /// Mean length, tokens (the log-normal is parameterized to hit this).
     pub mean: f64,
+    /// Log-space standard deviation; 0 degenerates to `mean` exactly.
     pub sigma: f64,
+    /// Lower clamp, tokens (raised to 1 if given as 0).
     pub min: usize,
+    /// Upper clamp, tokens.
     pub max: usize,
 }
 
@@ -83,6 +88,7 @@ impl LengthDist {
         LengthDist { mean: n as f64, sigma: 0.0, min: n, max: n }
     }
 
+    /// Draw one length.
     pub fn sample(&self, rng: &mut Rng) -> usize {
         let v = rng.lognormal_mean(self.mean, self.sigma);
         (v.round() as usize).clamp(self.min.max(1), self.max)
@@ -93,10 +99,15 @@ impl LengthDist {
 /// same request trace from the seed.
 #[derive(Debug, Clone, Copy)]
 pub struct TraceSpec {
+    /// PRNG seed; the whole trace is a pure function of this spec.
     pub seed: u64,
+    /// Trace length, requests.
     pub n_requests: usize,
+    /// Arrival process.
     pub arrivals: Arrivals,
+    /// Prompt-length distribution.
     pub prompt: LengthDist,
+    /// Output-length distribution.
     pub output: LengthDist,
 }
 
@@ -115,19 +126,48 @@ impl TraceSpec {
 
     /// Generate the trace: `n_requests` requests in arrival order.
     pub fn generate(&self) -> Vec<Request> {
-        let mut rng = Rng::new(self.seed);
-        let mut t = 0.0;
-        let mut out = Vec::with_capacity(self.n_requests);
-        for id in 0..self.n_requests {
-            t = self.arrivals.next_after(t, &mut rng);
-            out.push(Request {
-                id,
-                arrival: t,
-                prompt: self.prompt.sample(&mut rng),
-                output: self.output.sample(&mut rng),
-            });
+        self.stream().collect()
+    }
+
+    /// Stream the trace one request at a time without materializing it —
+    /// the same requests as [`TraceSpec::generate`], bit for bit, in
+    /// constant memory. This is what lets the engine's streaming path
+    /// simulate 10⁶-request traces without ever holding them.
+    pub fn stream(&self) -> TraceIter {
+        TraceIter { spec: *self, rng: Rng::new(self.seed), t: 0.0, next_id: 0 }
+    }
+}
+
+/// Iterator over a [`TraceSpec`]'s requests (see [`TraceSpec::stream`]).
+#[derive(Debug, Clone)]
+pub struct TraceIter {
+    spec: TraceSpec,
+    rng: Rng,
+    t: f64,
+    next_id: usize,
+}
+
+impl Iterator for TraceIter {
+    type Item = Request;
+
+    fn next(&mut self) -> Option<Request> {
+        if self.next_id >= self.spec.n_requests {
+            return None;
         }
-        out
+        let id = self.next_id;
+        self.next_id += 1;
+        self.t = self.spec.arrivals.next_after(self.t, &mut self.rng);
+        Some(Request {
+            id,
+            arrival: self.t,
+            prompt: self.spec.prompt.sample(&mut self.rng),
+            output: self.spec.output.sample(&mut self.rng),
+        })
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let left = self.spec.n_requests - self.next_id;
+        (left, Some(left))
     }
 }
 
@@ -166,6 +206,17 @@ mod tests {
         }
         assert!((a.mean_rate() - 6.0).abs() < 1e-12);
         assert!((a.rate_at(15.0) - 10.0).abs() < 1e-9, "crest at period/4");
+    }
+
+    #[test]
+    fn stream_equals_generate() {
+        let spec = TraceSpec::poisson(21, 5.0, 500);
+        let streamed: Vec<Request> = spec.stream().collect();
+        assert_eq!(streamed, spec.generate(), "stream() must replay generate() bit for bit");
+        assert_eq!(spec.stream().size_hint(), (500, Some(500)));
+        let mut it = spec.stream();
+        it.next();
+        assert_eq!(it.size_hint(), (499, Some(499)));
     }
 
     #[test]

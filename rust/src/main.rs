@@ -12,7 +12,11 @@
 //!   explain [--scenario f.json|--workload W] [--top K] [--no-sensitivity]
 //!                                 bottleneck attribution + optimizer audit
 //!   serve [--tp N --pp N ...]     serving model (Fig. 20 style point)
-//!   simulate [--qps R ...]        request-level cluster serving simulation
+//!   simulate [--qps R --requests N --fleet N --exact-percentiles ...]
+//!                                 request-level cluster serving simulation
+//!                                 (streams arrivals: N can be 10^6+ in
+//!                                 constant memory; --fleet simulates that
+//!                                 many replicas in one process)
 //!   plan --qps R --slo-ttft S --slo-tpot S   SLO-aware capacity planner
 //!   fabric [--topo F --chips N --coll C ...]  link-level collective simulation
 //!   daemon [--addr H:P --workers N --cache-entries N --queue-cap N --max-body B]
@@ -437,7 +441,9 @@ fn scenario_simulate(args: &Args) -> Result<Scenario, String> {
         .serving_split(tp, pp)
         .simulate_traffic(rate, args.get_usize("requests", 200))
         .slo(args.get_f64("slo-ttft", 1.0), args.get_f64("slo-tpot", 0.02));
-    s.cluster.replicas = args.get_usize("replicas", 1);
+    // --fleet is the preferred spelling; --replicas stays as an alias
+    s.cluster.replicas = args.get_usize("fleet", args.get_usize("replicas", 1));
+    s.cluster.exact_percentiles = args.has_flag("exact-percentiles");
     s.cluster.max_batch = args.get_usize("max-batch", 32);
     s.cluster.seed = args.get_usize("seed", 17) as u64;
     s.cluster.arrivals = args.get_or("arrivals", "poisson").to_string();

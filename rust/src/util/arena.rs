@@ -1,0 +1,156 @@
+//! Slab arena with index handles: O(1) insert/remove into a flat `Vec`
+//! with a free list, so hot loops (the cluster engine's per-request state)
+//! allocate nothing after warmup and never chase pointers.
+//!
+//! Handles are plain `u32` slot indices. Freed slots are recycled LIFO, and
+//! handles carry no generation tag — this is an internal building block for
+//! owners that never hold a handle across its `remove` (the cluster engine
+//! drops every handle exactly when the request finishes). The arena tracks
+//! its peak occupancy so callers can report memory high-water marks.
+
+/// A slab of `T` with `u32` handles, a LIFO free list, and a peak-occupancy
+/// high-water mark.
+///
+/// ```
+/// use dfmodel::util::arena::Arena;
+/// let mut a = Arena::new();
+/// let h = a.insert("hello");
+/// assert_eq!(a[h], "hello");
+/// assert_eq!(a.remove(h), "hello");
+/// assert_eq!(a.len(), 0);
+/// assert_eq!(a.peak(), 1);
+/// ```
+#[derive(Debug, Clone, Default)]
+pub struct Arena<T> {
+    slots: Vec<Option<T>>,
+    free: Vec<u32>,
+    live: usize,
+    peak: usize,
+}
+
+impl<T> Arena<T> {
+    /// An empty arena.
+    pub fn new() -> Self {
+        Arena { slots: Vec::new(), free: Vec::new(), live: 0, peak: 0 }
+    }
+
+    /// An empty arena with room for `n` values before any reallocation.
+    pub fn with_capacity(n: usize) -> Self {
+        Arena { slots: Vec::with_capacity(n), free: Vec::with_capacity(n), live: 0, peak: 0 }
+    }
+
+    /// Store `v`, reusing a freed slot when one exists, and return its
+    /// handle. Panics if the arena ever exceeds `u32::MAX` slots.
+    pub fn insert(&mut self, v: T) -> u32 {
+        self.live += 1;
+        self.peak = self.peak.max(self.live);
+        match self.free.pop() {
+            Some(h) => {
+                self.slots[h as usize] = Some(v);
+                h
+            }
+            None => {
+                let h = u32::try_from(self.slots.len()).expect("arena exceeds u32::MAX slots");
+                self.slots.push(Some(v));
+                h
+            }
+        }
+    }
+
+    /// Borrow the value behind `h`. Panics on a freed or unknown handle.
+    pub fn get(&self, h: u32) -> &T {
+        self.slots[h as usize].as_ref().expect("arena handle used after remove")
+    }
+
+    /// Mutably borrow the value behind `h`. Panics on a freed or unknown
+    /// handle.
+    pub fn get_mut(&mut self, h: u32) -> &mut T {
+        self.slots[h as usize].as_mut().expect("arena handle used after remove")
+    }
+
+    /// Remove and return the value behind `h`, recycling the slot. Panics
+    /// on a freed or unknown handle.
+    pub fn remove(&mut self, h: u32) -> T {
+        let v = self.slots[h as usize].take().expect("arena handle used after remove");
+        self.free.push(h);
+        self.live -= 1;
+        v
+    }
+
+    /// Live values currently stored.
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    /// True when no values are live.
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// Highest number of values ever live at once — the arena's memory
+    /// high-water mark in units of `T`.
+    pub fn peak(&self) -> usize {
+        self.peak
+    }
+
+    /// Allocated slots (live + recycled) — the arena's true footprint.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+impl<T> std::ops::Index<u32> for Arena<T> {
+    type Output = T;
+    fn index(&self, h: u32) -> &T {
+        self.get(h)
+    }
+}
+
+impl<T> std::ops::IndexMut<u32> for Arena<T> {
+    fn index_mut(&mut self, h: u32) -> &mut T {
+        self.get_mut(h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let mut a = Arena::new();
+        let h1 = a.insert(10);
+        let h2 = a.insert(20);
+        assert_eq!((a[h1], a[h2]), (10, 20));
+        *a.get_mut(h1) += 1;
+        assert_eq!(a.remove(h1), 11);
+        assert_eq!(a.remove(h2), 20);
+        assert!(a.is_empty());
+    }
+
+    #[test]
+    fn slots_are_recycled_and_peak_tracks_high_water() {
+        let mut a = Arena::new();
+        let hs: Vec<u32> = (0..8).map(|i| a.insert(i)).collect();
+        assert_eq!(a.capacity(), 8);
+        for &h in &hs {
+            a.remove(h);
+        }
+        // refill: no new slots, LIFO recycling
+        for i in 0..8 {
+            a.insert(100 + i);
+        }
+        assert_eq!(a.capacity(), 8, "freed slots must be reused");
+        assert_eq!(a.peak(), 8);
+        assert_eq!(a.len(), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "after remove")]
+    fn stale_handle_panics() {
+        let mut a = Arena::new();
+        let h = a.insert(1);
+        a.remove(h);
+        a.get(h);
+    }
+}

@@ -1,8 +1,9 @@
 //! In-tree substrates replacing crates unavailable in the offline registry
 //! (see DESIGN.md §Substitutions): JSON, CLI parsing, ASCII tables/heatmaps,
-//! PRNG, LRU cache, thread pool, bench harness, unit formatting, property
-//! checking.
+//! PRNG, LRU cache, slab arena, thread pool, bench harness, unit
+//! formatting, property checking.
 
+pub mod arena;
 pub mod bench;
 pub mod check;
 pub mod cli;

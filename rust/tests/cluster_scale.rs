@@ -1,0 +1,161 @@
+//! Scale-path integration tests for the cluster engine (PR 10): P²
+//! streaming percentiles vs exact within the documented tolerance bands,
+//! calendar-queue determinism across runs, fleet-mode parity with the
+//! single-replica path, and request-count-independent memory. The
+//! tolerances pinned here are the ones DESIGN.md §Cluster at scale
+//! documents; they were measured in `python/tests/mirror_cluster.py`.
+
+use dfmodel::cluster::engine::{
+    percentiles, simulate, simulate_stream, Pcts, ReplicaConfig, SimOptions, Slo,
+};
+use dfmodel::cluster::stream::StreamingPcts;
+use dfmodel::cluster::workload::{Arrivals, LengthDist, TraceSpec};
+use dfmodel::graph::llama::llama3_8b;
+use dfmodel::serving::sn40l_x16;
+use dfmodel::util::prng::Rng;
+
+fn cfg() -> ReplicaConfig {
+    ReplicaConfig::new(llama3_8b(), sn40l_x16(), 16, 1)
+}
+
+fn slo() -> Slo {
+    Slo { ttft: 1.0, tpot: 0.02 }
+}
+
+/// Relative error of each P² percentile vs the exact summary of the same
+/// samples, as (mean, p50, p95, p99).
+fn rel_errs(samples: &[f64]) -> [f64; 4] {
+    let mut sp = StreamingPcts::new();
+    for &x in samples {
+        sp.observe(x);
+    }
+    let est = sp.pcts();
+    let exact = percentiles(samples.to_vec());
+    let rel = |e: f64, x: f64| (e - x).abs() / x;
+    [
+        rel(est.mean, exact.mean),
+        rel(est.p50, exact.p50),
+        rel(est.p95, exact.p95),
+        rel(est.p99, exact.p99),
+    ]
+}
+
+#[test]
+fn p2_within_documented_band_on_smooth_streams() {
+    // exponential and log-normal latency-like streams: the documented
+    // 5% (p50/p95) / 10% (p99) band, worst case over 10 seeds each
+    let mut worst = [0.0f64; 4];
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(100 + seed);
+        let expo: Vec<f64> = (0..20_000).map(|_| rng.exp(2.0)).collect();
+        let logn: Vec<f64> = (0..20_000).map(|_| rng.lognormal_mean(0.3, 0.6)).collect();
+        for s in [&expo, &logn] {
+            for (w, e) in worst.iter_mut().zip(rel_errs(s)) {
+                *w = w.max(e);
+            }
+        }
+    }
+    assert!(worst[0] < 1e-9, "the mean must be exact, err {}", worst[0]);
+    assert!(worst[1] < 0.05, "p50 err {} exceeds the 5% band", worst[1]);
+    assert!(worst[2] < 0.05, "p95 err {} exceeds the 5% band", worst[2]);
+    assert!(worst[3] < 0.10, "p99 err {} exceeds the 10% band", worst[3]);
+}
+
+#[test]
+fn p2_within_documented_band_on_saturated_bursty_sim() {
+    // the documented hard case: under saturated bursty traffic, queue
+    // delay is strongly bimodal (burst crests wait ~1 s, troughs ~0) and
+    // P² degrades — this is exactly what `exact_percentiles` is for. The
+    // exact and streaming runs share one event history, so every
+    // difference below is pure estimator error.
+    let spec = TraceSpec {
+        seed: 11,
+        n_requests: 4000,
+        arrivals: Arrivals::Bursty { base: 2.0, peak: 16.0, period: 30.0 },
+        prompt: LengthDist { mean: 1024.0, sigma: 0.4, min: 16, max: 8192 },
+        output: LengthDist { mean: 128.0, sigma: 0.6, min: 2, max: 2048 },
+    };
+    let exact =
+        simulate_stream(&cfg(), 1, &spec, &slo(), &SimOptions { exact_percentiles: true })
+            .unwrap();
+    let est = simulate_stream(&cfg(), 1, &spec, &slo(), &SimOptions::default()).unwrap();
+    assert_eq!(exact.events, est.events, "paths must share one event history");
+    let rel = |e: f64, x: f64| (e - x).abs() / x;
+    let band = |e: &Pcts, x: &Pcts| [rel(e.p50, x.p50), rel(e.p95, x.p95), rel(e.p99, x.p99)];
+    let ett = band(&est.ttft, &exact.ttft);
+    assert!(ett[1] < 0.15 && ett[2] < 0.15, "ttft p95/p99 err {ett:?} exceeds 15%");
+    let etp = band(&est.tpot, &exact.tpot);
+    assert!(etp.iter().all(|&e| e < 0.10), "tpot err {etp:?} exceeds 10%");
+    let eq = band(&est.queue, &exact.queue);
+    assert!(eq.iter().all(|&e| e < 0.40), "bimodal queue err {eq:?} exceeds 40% worst case");
+}
+
+#[test]
+fn streaming_runs_are_deterministic() {
+    // calendar-queue + arena path: identical spec in, bitwise-identical
+    // summaries out, on both arrival processes
+    for spec in [
+        TraceSpec::poisson(3, 8.0, 500),
+        TraceSpec {
+            seed: 5,
+            n_requests: 500,
+            arrivals: Arrivals::Bursty { base: 2.0, peak: 10.0, period: 30.0 },
+            prompt: LengthDist { mean: 1024.0, sigma: 0.4, min: 16, max: 8192 },
+            output: LengthDist { mean: 128.0, sigma: 0.6, min: 2, max: 2048 },
+        },
+    ] {
+        let a = simulate_stream(&cfg(), 2, &spec, &slo(), &SimOptions::default()).unwrap();
+        let b = simulate_stream(&cfg(), 2, &spec, &slo(), &SimOptions::default()).unwrap();
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.steps, b.steps);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.ttft, b.ttft);
+        assert_eq!(a.queue, b.queue);
+        assert_eq!(a.tpot, b.tpot);
+        assert_eq!(a.peak_in_flight, b.peak_in_flight);
+    }
+}
+
+#[test]
+fn fleet_mode_tracks_the_single_replica_path() {
+    // R replicas at R·rate ≈ 1 replica at rate: least-loaded dispatch
+    // de-randomizes per-replica arrivals (per-step batches run a little
+    // smaller than true Poisson splitting), so mean TPOT gets a 25% band;
+    // attainment and throughput scaling are tight.
+    let one = simulate(&cfg(), 1, &TraceSpec::poisson(3, 4.0, 400).generate(), &slo()).unwrap();
+    let fleet =
+        simulate(&cfg(), 4, &TraceSpec::poisson(3, 16.0, 1600).generate(), &slo()).unwrap();
+    assert!(
+        (fleet.tpot.mean / one.tpot.mean - 1.0).abs() < 0.25,
+        "mean TPOT {} vs {}",
+        fleet.tpot.mean,
+        one.tpot.mean
+    );
+    assert!(
+        (fleet.slo_attainment - one.slo_attainment).abs() < 0.05,
+        "attainment {} vs {}",
+        fleet.slo_attainment,
+        one.slo_attainment
+    );
+    let ratio = fleet.throughput_rps / one.throughput_rps;
+    assert!((ratio - 4.0).abs() < 0.4, "throughput must scale ~4x, got {ratio:.2}x");
+}
+
+#[test]
+fn memory_tracks_load_not_trace_length() {
+    // 10x the requests at the same offered load: the in-flight peak (the
+    // engine's memory footprint) must not grow with trace length
+    let opts = SimOptions::default();
+    let small =
+        simulate_stream(&cfg(), 4, &TraceSpec::poisson(9, 32.0, 2000), &slo(), &opts).unwrap();
+    let big =
+        simulate_stream(&cfg(), 4, &TraceSpec::poisson(9, 32.0, 20_000), &slo(), &opts)
+            .unwrap();
+    assert_eq!(big.n_completed, 20_000);
+    assert!(
+        big.peak_in_flight < 4 * small.peak_in_flight + 64,
+        "peak_in_flight grew with trace length: {} (2k) vs {} (20k)",
+        small.peak_in_flight,
+        big.peak_in_flight
+    );
+}
